@@ -1,0 +1,54 @@
+//! Collective primitives: in-process all-reduce/broadcast throughput
+//! (the L3 data plane) and the DES network engine's event throughput.
+
+use pier::coordinator::collective::{all_reduce_mean, broadcast, CommStats};
+use pier::netsim::{des_outer_sync, Flow, Network};
+use pier::perfmodel::gpu::PERLMUTTER;
+use pier::testing::bench::{bench_quick, header};
+use pier::util::rng::Pcg64;
+
+fn randvec(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg64::seed(seed);
+    (0..n).map(|_| rng.f32() - 0.5).collect()
+}
+
+fn main() {
+    println!("{}", header());
+
+    for (label, n) in [("1M", 1 << 20), ("16M", 16 << 20)] {
+        for k in [2usize, 8, 32] {
+            let groups: Vec<Vec<f32>> = (0..k as u64).map(|i| randvec(n, i)).collect();
+            let refs: Vec<&[f32]> = groups.iter().map(|g| g.as_slice()).collect();
+            let r = bench_quick(&format!("all_reduce_mean/{label}/{k}groups"), || {
+                std::hint::black_box(all_reduce_mean(&refs).len());
+            });
+            println!("{}", r.report_throughput((n * k) as f64, "elem"));
+        }
+    }
+
+    let src = randvec(4 << 20, 9);
+    let mut targets: Vec<Vec<f32>> = (0..8).map(|_| vec![0.0; 4 << 20]).collect();
+    let mut stats = CommStats::default();
+    let r = bench_quick("broadcast/4M/8targets", || {
+        let mut refs: Vec<&mut Vec<f32>> = targets.iter_mut().collect();
+        broadcast(&src, &mut refs, &mut stats);
+    });
+    println!("{}", r.report_throughput((4 << 20) as f64 * 8.0, "elem"));
+
+    // DES engine: many contending flows.
+    let r = bench_quick("des/256flows_shared_link", || {
+        let mut net = Network::new();
+        let l = net.add_link(1e9);
+        let flows = (0..256)
+            .map(|i| Flow { bytes: 1e6 + i as f64, latency: 1e-6, links: vec![l], tag: i })
+            .collect();
+        let (_, makespan) = net.run(flows);
+        std::hint::black_box(makespan);
+    });
+    println!("{}", r.report());
+
+    let r = bench_quick("des_outer_sync/dp32_tp4", || {
+        std::hint::black_box(des_outer_sync(32, 4, 6.2e9, &PERLMUTTER));
+    });
+    println!("{}", r.report());
+}

@@ -1,0 +1,50 @@
+//! Figure-regeneration cost: how long each paper table/figure takes to
+//! produce from the simulator (they are called from tests and the CLI, so
+//! they must stay cheap), plus single simulate_run points.
+
+use pier::config::{model_or_die, OptMode};
+use pier::figures::{fig5, fig6, fig7, fig8};
+use pier::perfmodel::gpu::PERLMUTTER;
+use pier::simulator::run::{simulate_run, Calib, SimSetup};
+use pier::testing::bench::{bench_quick, header};
+
+fn main() {
+    println!("{}", header());
+    let r = bench_quick("fig5/gpt2-xl", || {
+        std::hint::black_box(fig5("gpt2-xl").rows.len());
+    });
+    println!("{}", r.report());
+    let r = bench_quick("fig6", || {
+        std::hint::black_box(fig6().rows.len());
+    });
+    println!("{}", r.report());
+    let r = bench_quick("fig7/perlmutter", || {
+        std::hint::black_box(fig7("perlmutter", 50).rows.len());
+    });
+    println!("{}", r.report());
+    let r = bench_quick("fig8", || {
+        std::hint::black_box(fig8().rows.len());
+    });
+    println!("{}", r.report());
+
+    let s = SimSetup {
+        model: model_or_die("gpt2-xl"),
+        cluster: &PERLMUTTER,
+        world: 256,
+        tp: 1,
+        pp: 1,
+        sync_fraction: 1.0,
+        groups: 64,
+        global_batch: 512,
+        sync_interval: 50,
+        mode: OptMode::Pier,
+        warmup_pct: 0.10,
+        iterations: 100_000,
+        cpu_offload: false,
+        calib: Calib::default(),
+    };
+    let r = bench_quick("simulate_run/xl_256gpu", || {
+        std::hint::black_box(simulate_run(&s).total_secs);
+    });
+    println!("{}", r.report());
+}

@@ -1,0 +1,55 @@
+//! Outer-optimizer hot path (L3 perf deliverable): Nesterov step, momentum
+//! accumulation, and the full OuterController sync at the trainable model
+//! sizes plus a GPT-2-small-sized vector (124 M params ≈ what one GPU hosts
+//! in the paper's smallest real run).
+
+use pier::config::{NesterovKind, OptMode, TrainConfig};
+use pier::coordinator::collective::CommStats;
+use pier::coordinator::OuterController;
+use pier::optim::OuterOpt;
+use pier::testing::bench::{bench_quick, header};
+use pier::util::rng::Pcg64;
+
+fn randvec(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg64::seed(seed);
+    (0..n).map(|_| rng.f32() - 0.5).collect()
+}
+
+fn main() {
+    println!("{}", header());
+    for (label, n) in [("nano-137k", 136_960), ("micro-3.2M", 3_243_648),
+                       ("gpt2-small-124M", 124_475_904usize)] {
+        let base = randvec(n, 1);
+        let delta = randvec(n, 2);
+
+        let mut opt = OuterOpt::new(n, NesterovKind::PyTorch);
+        let r = bench_quick(&format!("nesterov_step/{label}"), || {
+            let s = opt.step(&base, &delta, 0.9, 1.0);
+            std::hint::black_box(s.committed.len());
+        });
+        println!("{}", r.report_throughput(n as f64, "param"));
+
+        let mut opt2 = OuterOpt::new(n, NesterovKind::PyTorch);
+        let r = bench_quick(&format!("momentum_accumulate/{label}"), || {
+            opt2.accumulate(0.9, &delta);
+        });
+        println!("{}", r.report_throughput(n as f64, "param"));
+    }
+
+    // Full outer sync (all-reduce over k groups + Nesterov + broadcast
+    // accounting) at micro size — the per-H-iterations L3 cost.
+    for k in [4usize, 8] {
+        let n = 3_243_648;
+        let groups: Vec<Vec<f32>> = (0..k as u64).map(|i| randvec(n, 10 + i)).collect();
+        let mut cfg = TrainConfig::default_for(1000);
+        cfg.mode = OptMode::Pier;
+        let mut ctl = OuterController::new(&cfg, &groups[0]);
+        let mut stats = CommStats::default();
+        let r = bench_quick(&format!("outer_sync/micro-3.2M/{k}groups"), || {
+            let refs: Vec<&[f32]> = groups.iter().map(|g| g.as_slice()).collect();
+            let res = ctl.sync(500, &refs, &mut stats);
+            std::hint::black_box(res.committed.len());
+        });
+        println!("{}", r.report_throughput((n * k) as f64, "param"));
+    }
+}

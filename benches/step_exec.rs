@@ -1,0 +1,62 @@
+//! PJRT step-execution latency (the L2/L1 hot path as seen from L3):
+//! fused train_step, grad-only, eval, and score executions per model
+//! config, plus the host↔literal marshalling cost in isolation.
+//!
+//! Requires artifacts (`make artifacts`); prints a notice and exits
+//! cleanly when they are absent so `cargo bench` works pre-build.
+
+use pier::config::OptMode;
+use pier::coordinator::{Trainer, WorkerGroup};
+use pier::figures::{figure_cfg, pipeline_for};
+use pier::runtime::{load_manifest, Runtime};
+use pier::testing::bench::{bench, header};
+
+fn main() {
+    let Ok(rt) = Runtime::cpu() else {
+        println!("no PJRT client available; skipping step_exec bench");
+        return;
+    };
+    println!("{}", header());
+    for model in ["nano", "micro"] {
+        let Ok(man) = load_manifest(model) else {
+            println!("({model}: artifacts missing — run `make artifacts`)");
+            continue;
+        };
+        let pipe = pipeline_for(&man, 11);
+        let mut cfg = figure_cfg(OptMode::AdamW, 10, 1);
+        cfg.global_batch = man.micro_batch;
+        let mut trainer = Trainer::new(&rt, man.clone(), cfg, &pipe).expect("trainer");
+        let tokens_per_step = man.micro_batch * man.seq_len;
+
+        // fused train_step through the public single-step path
+        let r = bench(&format!("train_step/{model}"), 2, 3.0, || {
+            trainer.step_once().expect("step");
+        });
+        println!("{}", r.report_throughput(tokens_per_step as f64, "tok"));
+
+        // eval_step (fwd only)
+        let params = trainer.global_params().expect("params");
+        let r = bench(&format!("eval_step/{model}"), 2, 2.0, || {
+            std::hint::black_box(trainer.eval_params(&params).expect("eval"));
+        });
+        println!("{}", r.report_throughput(tokens_per_step as f64, "tok"));
+
+        // score_step (fwd + gather)
+        let batch = {
+            let mut s = pier::data::Sampler::new(
+                pipe.train.clone(), 0, 1, man.seq_len, 1);
+            s.next_batch(man.micro_batch)
+        };
+        let r = bench(&format!("score_step/{model}"), 2, 2.0, || {
+            std::hint::black_box(trainer.score_batch(&params, &batch).expect("score").len());
+        });
+        println!("{}", r.report_throughput(tokens_per_step as f64, "tok"));
+
+        // literal marshalling alone (L3-side overhead per step)
+        let r = bench(&format!("literal_marshal/{model}"), 2, 2.0, || {
+            let lits = WorkerGroup::tensor_literals(&man, &params).expect("lits");
+            std::hint::black_box(lits.len());
+        });
+        println!("{}", r.report_throughput(man.n_params as f64, "param"));
+    }
+}

@@ -1,0 +1,58 @@
+//! Quickstart: the whole three-layer stack in ~60 seconds.
+//!
+//! Loads the `nano` AOT artifacts (built by `make artifacts`), builds the
+//! synthetic corpus + BPE pipeline, trains a few dozen Pier iterations
+//! through the PJRT runtime, and evaluates one downstream task.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use pier::config::OptMode;
+use pier::coordinator::Trainer;
+use pier::data::{CorpusGen, CorpusSpec};
+use pier::evalsuite::{aggregate, score_examples, TaskGen};
+use pier::figures::{figure_cfg, pipeline_for, TrainedScorer};
+use pier::runtime::{load_manifest, Runtime};
+
+fn main() -> Result<()> {
+    // 1. PJRT client + compiled step functions (L1/L2 were lowered once at
+    //    build time; python is not involved from here on).
+    let rt = Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    let man = load_manifest("nano")?;
+    println!("model: {} — {} params across {} tensors",
+             man.model_name, man.n_params, man.n_tensors());
+
+    // 2. Data pipeline: synthetic corpus → BPE → sharded token streams.
+    let pipe = pipeline_for(&man, 11);
+    println!("corpus: {} train tokens, vocab {}", pipe.train.len(),
+             pipe.tokenizer.vocab_size());
+
+    // 3. Train 60 Pier iterations: 10% AdamW lazy start with momentum
+    //    warmup, then 4 groups with an outer Nesterov sync every 5 steps.
+    let mut cfg = figure_cfg(OptMode::Pier, 60, 4);
+    cfg.global_batch = 16;
+    cfg.eval_interval = 15;
+    let mut trainer = Trainer::new(&rt, man.clone(), cfg, &pipe)?;
+    trainer.run()?;
+    let log = &trainer.log;
+    println!("\nloss: {:.3} → {:.3} (validation {:.3})",
+             log.iters.first().map(|r| r.loss).unwrap_or(f64::NAN),
+             log.tail_train_loss(5),
+             log.final_val_loss().unwrap_or(f64::NAN));
+    println!("outer syncs: {}, outer comm {:.1} MB",
+             log.comm.outer_steps, log.comm.outer_allreduce_bytes / 1e6);
+
+    // 4. Downstream scoring: one task from the 13-task suite.
+    let corpus = CorpusGen::new(CorpusSpec { n_docs: 2500, seed: 11, ..Default::default() });
+    let gen = TaskGen { corpus: &corpus, tok: &pipe.tokenizer, seed: 3 };
+    let examples = gen.generate("copa");
+    let params = trainer.global_params()?;
+    let scorer = TrainedScorer { trainer: &trainer, params: &params };
+    let picks = score_examples(&scorer, &examples, pier::data::bpe::EOD)?;
+    let acc = aggregate(pier::evalsuite::Metric::Accuracy, &examples, &picks);
+    println!("COPA-analog accuracy after 60 iters: {acc:.3}");
+    Ok(())
+}

@@ -1,0 +1,50 @@
+//! Scaling study: regenerate every simulator-backed figure (5, 6, 7, 8)
+//! plus the calibration report, writing the series to CSV for plotting.
+//!
+//! ```bash
+//! cargo run --release --example scaling_study [-- out_dir]
+//! ```
+
+use std::io::Write;
+
+use anyhow::Result;
+use pier::figures::{calibration_report, fig5, fig6, fig7, fig8, FigureData};
+
+fn write_csv(dir: &str, name: &str, f: &FigureData) -> Result<()> {
+    let path = format!("{dir}/{name}.csv");
+    let mut out = std::fs::File::create(&path)?;
+    writeln!(out, "# {}", f.title)?;
+    writeln!(out, "gpus,t_adamw_s,t_pier_s,speedup,eff_adamw,eff_pier")?;
+    for r in &f.rows {
+        writeln!(out, "{},{:.1},{:.1},{:.4},{:.4},{:.4}",
+                 r.world, r.t_adamw, r.t_pier, r.speedup, r.eff_adamw, r.eff_pier)?;
+    }
+    println!("wrote {path}");
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let dir = std::env::args().nth(1).unwrap_or_else(|| "/tmp".to_string());
+
+    println!("calibration anchors (model vs paper):");
+    for p in calibration_report() {
+        println!("  {:<46} paper {:>5.1}%  model {:>5.1}%",
+                 p.what, 100.0 * p.paper, 100.0 * p.model);
+    }
+    println!();
+
+    for (name, fig) in [
+        ("fig5_small", fig5("gpt2-small")),
+        ("fig5_medium", fig5("gpt2-medium")),
+        ("fig5_xl", fig5("gpt2-xl")),
+        ("fig6_xl_h500", fig6()),
+        ("fig7_perlmutter_h50", fig7("perlmutter", 50)),
+        ("fig7_vista_h50", fig7("vista", 50)),
+        ("fig7_vista_h500", fig7("vista", 500)),
+        ("fig8_7b_tp4", fig8()),
+    ] {
+        fig.print();
+        write_csv(&dir, name, &fig)?;
+    }
+    Ok(())
+}

@@ -1,0 +1,182 @@
+"""AOT compile path: lower every step function to HLO *text* + manifest.
+
+Run once by ``make artifacts``:
+
+    cd python && python -m compile.aot --out ../artifacts [--configs nano,micro]
+
+For each trainable config this emits ``artifacts/<cfg>/``:
+
+    init_params.hlo.txt   (seed:i32[])                          -> params…
+    train_step.hlo.txt    (params…, m…, v…, tokens:i32[B,T+1],
+                           lr:f32[], wd:f32[], t:f32[])          -> params…, m…, v…, loss, gnorm
+    grad_step.hlo.txt     (params…, tokens)                     -> grads…, loss
+    apply_step.hlo.txt    (params…, m…, v…, grads…, lr, wd, t)  -> params…, m…, v…, gnorm
+    eval_step.hlo.txt     (params…, tokens)                     -> loss
+    score_step.hlo.txt    (params…, tokens)                     -> logprobs:f32[B,T]
+    manifest.json         parameter layout + signatures + config echo
+
+plus a top-level ``artifacts/manifest.json`` indexing all configs (including
+the non-trainable paper configs that parameterize the Rust perf model).
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+≥ 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published ``xla`` 0.1.6 crate binds) rejects
+(``proto.id() <= INT_MAX``). The HLO text parser reassigns ids and
+round-trips cleanly. Lowering goes stablehlo → XlaComputation with
+``return_tuple=True``; the Rust side unwraps the tuple via ``to_tuple``.
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .configs import CONFIGS, DEFAULT_AOT, config_dict
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_config(cfg, out_dir):
+    os.makedirs(out_dir, exist_ok=True)
+    spec = M.param_spec(cfg)
+    p_sds = tuple(_sds(info.shape) for info in spec)
+    b, t = cfg.micro_batch, cfg.seq_len
+    tok_sds = _sds((b, t + 1), jnp.int32)
+    f32 = _sds((), jnp.float32)
+    i32 = _sds((), jnp.int32)
+
+    steps = {
+        "init_params": (
+            lambda seed: M.init_params(cfg, seed),
+            (i32,),
+        ),
+        "train_step": (
+            lambda p, m, v, tok, lr, wd, st: M.train_step(cfg, p, m, v, tok, lr, wd, st),
+            (p_sds, p_sds, p_sds, tok_sds, f32, f32, f32),
+        ),
+        "grad_step": (
+            lambda p, tok: M.grad_step(cfg, p, tok),
+            (p_sds, tok_sds),
+        ),
+        "apply_step": (
+            lambda p, m, v, g, lr, wd, st: M.apply_adamw(cfg, p, m, v, g, lr, wd, st),
+            (p_sds, p_sds, p_sds, p_sds, f32, f32, f32),
+        ),
+        "eval_step": (
+            lambda p, tok: M.eval_step(cfg, p, tok),
+            (p_sds, tok_sds),
+        ),
+        "score_step": (
+            lambda p, tok: M.score_step(cfg, p, tok),
+            (p_sds, tok_sds),
+        ),
+    }
+
+    files = {}
+    for name, (fn, args) in steps.items():
+        t0 = time.time()
+        text = to_hlo_text(jax.jit(fn).lower(*args))
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        files[name] = f"{name}.hlo.txt"
+        print(f"  {cfg.name}/{name}: {len(text)/1e6:.1f} MB in {time.time()-t0:.1f}s")
+
+    offset = 0
+    params = []
+    for info in spec:
+        params.append({
+            "name": info.name,
+            "shape": list(info.shape),
+            "size": info.size,
+            "decay": info.decay,
+            "offset": offset,
+        })
+        offset += info.size
+
+    manifest = {
+        "config": config_dict(cfg),
+        "n_param_tensors": len(spec),
+        "n_params": offset,
+        "micro_batch": b,
+        "seq_len": t,
+        "token_shape": [b, t + 1],
+        "adam": {
+            "beta1": M.ADAM_BETA1,
+            "beta2": M.ADAM_BETA2,
+            "eps": M.ADAM_EPS,
+            "clip_grad": M.CLIP_GRAD,
+        },
+        "params": params,
+        "steps": files,
+        # Input orderings (flattened): P = n_param_tensors
+        "signatures": {
+            "init_params": {"inputs": ["seed:i32[]"], "outputs": ["params*P"]},
+            "train_step": {
+                "inputs": ["params*P", "m*P", "v*P", "tokens:i32[B,T+1]",
+                           "lr:f32[]", "wd:f32[]", "t:f32[]"],
+                "outputs": ["params*P", "m*P", "v*P", "loss:f32[]", "gnorm:f32[]"],
+            },
+            "grad_step": {
+                "inputs": ["params*P", "tokens:i32[B,T+1]"],
+                "outputs": ["grads*P", "loss:f32[]"],
+            },
+            "apply_step": {
+                "inputs": ["params*P", "m*P", "v*P", "grads*P",
+                           "lr:f32[]", "wd:f32[]", "t:f32[]"],
+                "outputs": ["params*P", "m*P", "v*P", "gnorm:f32[]"],
+            },
+            "eval_step": {
+                "inputs": ["params*P", "tokens:i32[B,T+1]"],
+                "outputs": ["loss:f32[]"],
+            },
+            "score_step": {
+                "inputs": ["params*P", "tokens:i32[B,T+1]"],
+                "outputs": ["logprobs:f32[B,T]"],
+            },
+        },
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--configs", default=",".join(DEFAULT_AOT))
+    args = ap.parse_args()
+
+    names = [n for n in args.configs.split(",") if n]
+    top = {"configs": {}, "paper_configs": {}}
+    for name in names:
+        cfg = CONFIGS[name]
+        assert cfg.trainable, f"{name} is a paper (perf-model-only) config"
+        print(f"lowering {name} …")
+        lower_config(cfg, os.path.join(args.out, name))
+        top["configs"][name] = f"{name}/manifest.json"
+    for name, cfg in CONFIGS.items():
+        if not cfg.trainable:
+            top["paper_configs"][name] = config_dict(cfg)
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(top, f, indent=1)
+    print("artifacts complete.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Model configurations.
+
+Two families:
+
+* **Trainable configs** (``nano``/``micro``/``mini``) — lowered to HLO
+  artifacts and trained end-to-end on the CPU PJRT client. These are the
+  GPT-2 small/medium/XL *analogs* used for all convergence experiments
+  (Figures 1, 3, 4; Tables II–IV); see DESIGN.md §3 for the substitution
+  rationale.
+* **Paper configs** (``gpt2-small``/``-medium``/``-xl``/``-7b``) — the real
+  GPT-2 family dimensions. These are never lowered here (a 1.5 B-parameter
+  fwd/bwd does not fit a single-core CPU budget); they parameterize the
+  FLOPs/memory model and the cluster simulator that regenerate the paper's
+  runtime figures (Figures 5–8). The Rust side carries an identical table
+  (rust/src/config/model.rs); ``aot.py`` emits both in the manifest so the
+  two never drift.
+"""
+
+from dataclasses import dataclass, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab_size: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    seq_len: int
+    # micro-batch the artifact is compiled for (trainable configs only)
+    micro_batch: int = 0
+    trainable: bool = True
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def d_ff(self) -> int:
+        return 4 * self.d_model
+
+
+CONFIGS = {
+    c.name: c
+    for c in [
+        # -- trainable analogs (lowered to artifacts) --
+        ModelConfig("nano", vocab_size=512, d_model=64, n_layers=2,
+                    n_heads=2, seq_len=64, micro_batch=4),
+        ModelConfig("micro", vocab_size=2048, d_model=128, n_layers=4,
+                    n_heads=4, seq_len=128, micro_batch=8),
+        ModelConfig("mini", vocab_size=4096, d_model=256, n_layers=6,
+                    n_heads=8, seq_len=256, micro_batch=8),
+        # -- paper configs (perf model / simulator only) --
+        ModelConfig("gpt2-small", vocab_size=50257, d_model=768, n_layers=12,
+                    n_heads=12, seq_len=1024, trainable=False),
+        ModelConfig("gpt2-medium", vocab_size=50257, d_model=1024, n_layers=24,
+                    n_heads=16, seq_len=1024, trainable=False),
+        ModelConfig("gpt2-xl", vocab_size=50257, d_model=1600, n_layers=48,
+                    n_heads=25, seq_len=1024, trainable=False),
+        ModelConfig("gpt2-7b", vocab_size=50257, d_model=4096, n_layers=32,
+                    n_heads=32, seq_len=2048, trainable=False),
+    ]
+}
+
+# Configs lowered by default by `make artifacts`. `mini` is opt-in
+# (--configs nano,micro,mini) because its lowering takes noticeably longer.
+DEFAULT_AOT = ["nano", "micro"]
+
+
+def n_params(cfg: ModelConfig) -> int:
+    """Exact trainable-parameter count (tied LM head)."""
+    d, v, t, l = cfg.d_model, cfg.vocab_size, cfg.seq_len, cfg.n_layers
+    per_layer = (
+        2 * (2 * d)              # ln1, ln2 (g, b)
+        + d * 3 * d + 3 * d      # qkv
+        + d * d + d              # attn proj
+        + d * cfg.d_ff + cfg.d_ff  # fc
+        + cfg.d_ff * d + d       # mlp proj
+    )
+    return v * d + t * d + l * per_layer + 2 * d  # wte, wpe, blocks, ln_f
+
+
+def config_dict(cfg: ModelConfig) -> dict:
+    d = asdict(cfg)
+    d["d_head"] = cfg.d_head
+    d["d_ff"] = cfg.d_ff
+    d["n_params"] = n_params(cfg)
+    return d

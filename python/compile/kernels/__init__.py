@@ -1,0 +1,20 @@
+"""L1: Pallas kernels for the model's compute hot-spots.
+
+All kernels lower with ``interpret=True`` so the resulting HLO runs on the
+CPU PJRT plugin (real-TPU lowering emits Mosaic custom-calls the CPU client
+cannot execute); see DESIGN.md §Hardware-Adaptation.
+"""
+
+from .attention import flash_attention, attention_fwd
+from .cross_entropy import softmax_xent, xent_fwd
+from .fused_adamw import adamw_update
+from . import ref
+
+__all__ = [
+    "flash_attention",
+    "attention_fwd",
+    "softmax_xent",
+    "xent_fwd",
+    "adamw_update",
+    "ref",
+]

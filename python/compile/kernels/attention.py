@@ -1,0 +1,118 @@
+"""Blocked causal attention as a Pallas kernel (the paper's compute hot-spot).
+
+Pier's implementation uses FlashAttention-2 on A100/GH200 (§V of the paper).
+This is the TPU-style rethink of the same insight (see DESIGN.md
+§Hardware-Adaptation): instead of CUDA threadblocks + shared memory, the
+HBM↔VMEM schedule is expressed with a Pallas ``BlockSpec`` grid over
+(batch·heads, query blocks); inside a program, key/value blocks are streamed
+through an online-softmax loop keeping a running (max, sum, accumulator) —
+one pass, no T×T score materialization, and the MXU-friendly inner matmuls
+are (block_q × d_head) · (d_head × block_k).
+
+The kernel is lowered with ``interpret=True`` so it becomes plain HLO that
+the CPU PJRT plugin can execute (real TPU lowering would emit a Mosaic
+custom-call). Correctness is pinned to ``ref.attention_ref`` by pytest.
+
+The public entry point ``flash_attention`` carries a ``jax.custom_vjp``: the
+forward kernel also emits the per-row log-sum-exp, and the backward pass
+recomputes attention probabilities from it (FlashAttention-2's recompute
+strategy) via the jnp reference VJP, so the whole model remains
+differentiable when lowered to a single HLO module.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+NEG_INF = -1e30
+
+
+def _attn_fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, block_k, seq_len):
+    """One (bh, q-block) program: stream K/V blocks with online softmax."""
+    block_q = q_ref.shape[1]
+    dh = q_ref.shape[2]
+    scale = 1.0 / (dh**0.5)
+
+    qi = pl.program_id(1)
+    q = q_ref[0, :, :] * scale  # (bq, dh)
+
+    q_pos = qi * block_q + jax.lax.iota(jnp.int32, block_q)
+
+    # Causal: only key blocks overlapping [0, (qi+1)*bq) matter.
+    num_kb = (qi * block_q + block_q + block_k - 1) // block_k
+
+    def body(j, carry):
+        m_prev, l_prev, acc = carry
+        k_blk = k_ref[0, pl.dslice(j * block_k, block_k), :]  # (bk, dh)
+        v_blk = v_ref[0, pl.dslice(j * block_k, block_k), :]
+        s = q @ k_blk.T  # (bq, bk)
+        k_pos = j * block_k + jax.lax.iota(jnp.int32, block_k)
+        mask = q_pos[:, None] >= k_pos[None, :]
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + p @ v_blk
+        return m_new, l_new, acc
+
+    m0 = jnp.full((block_q,), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((block_q,), dtype=jnp.float32)
+    acc0 = jnp.zeros((block_q, dh), dtype=jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, num_kb, body, (m0, l0, acc0))
+
+    o_ref[0, :, :] = acc / l[:, None]
+    lse_ref[0, :] = m + jnp.log(l)
+
+
+def attention_fwd(q, k, v, *, block_q=64, block_k=64):
+    """Run the forward kernel. q,k,v: f32[BH, T, Dh] → (out, lse)."""
+    bh, t, dh = q.shape
+    block_q = min(block_q, t)
+    block_k = min(block_k, t)
+    assert t % block_q == 0 and t % block_k == 0, (t, block_q, block_k)
+
+    kernel = functools.partial(_attn_fwd_kernel, block_k=block_k, seq_len=t)
+    out, lse = pl.pallas_call(
+        kernel,
+        grid=(bh, t // block_q),
+        in_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, t, dh), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, t, dh), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, block_q), lambda b, i: (b, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, t, dh), jnp.float32),
+            jax.ShapeDtypeStruct((bh, t), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, v)
+    return out, lse
+
+
+@jax.custom_vjp
+def flash_attention(q, k, v):
+    """Causal attention, differentiable. f32[BH, T, Dh] × 3 → f32[BH, T, Dh]."""
+    out, _ = attention_fwd(q, k, v)
+    return out
+
+
+def _fa_fwd(q, k, v):
+    out, lse = attention_fwd(q, k, v)
+    return out, (q, k, v, lse)
+
+
+def _fa_bwd(res, dout):
+    q, k, v, lse = res
+    return ref.attention_bwd_ref(q, k, v, lse, dout)
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)

@@ -1,0 +1,80 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness signal).
+
+Every Pallas kernel in this package has a reference implementation here that
+is used (a) by pytest/hypothesis to validate the kernel numerics and (b) as
+the backward-pass recompute in the kernels' custom_vjp rules (the standard
+FlashAttention-2 structure: blocked forward kernel saves the log-sum-exp,
+backward recomputes attention probabilities from it).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, causal=True):
+    """Naive causal attention.
+
+    Args:
+      q, k, v: f32[BH, T, Dh] (batch*heads flattened into the leading dim).
+      causal: apply a lower-triangular mask.
+
+    Returns:
+      (out, lse): f32[BH, T, Dh] attention output and f32[BH, T]
+      log-sum-exp of the (scaled, masked) scores — the same auxiliary value
+      the Pallas kernel produces for its backward pass.
+    """
+    dh = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, q.dtype))
+    scores = jnp.einsum("bqd,bkd->bqk", q, k) * scale
+    if causal:
+        t = q.shape[1]
+        mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+        scores = jnp.where(mask[None, :, :], scores, -jnp.inf)
+    lse = jax.scipy.special.logsumexp(scores, axis=-1)
+    probs = jnp.exp(scores - lse[..., None])
+    out = jnp.einsum("bqk,bkd->bqd", probs, v)
+    return out, lse
+
+
+def attention_bwd_ref(q, k, v, lse, dout, causal=True):
+    """Reference VJP for attention given the saved lse (recompute-style)."""
+    dh = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, q.dtype))
+    scores = jnp.einsum("bqd,bkd->bqk", q, k) * scale
+    if causal:
+        t = q.shape[1]
+        mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+        scores = jnp.where(mask[None, :, :], scores, -jnp.inf)
+    probs = jnp.exp(scores - lse[..., None])
+    dv = jnp.einsum("bqk,bqd->bkd", probs, dout)
+    dprobs = jnp.einsum("bqd,bkd->bqk", dout, v)
+    # d softmax: p * (dp - sum(p * dp))
+    delta = jnp.sum(probs * dprobs, axis=-1, keepdims=True)
+    dscores = probs * (dprobs - delta)
+    dq = jnp.einsum("bqk,bkd->bqd", dscores, k) * scale
+    dk = jnp.einsum("bqk,bqd->bkd", dscores, q) * scale
+    return dq, dk, dv
+
+
+def softmax_xent_ref(logits, targets):
+    """Per-row cross entropy.
+
+    Args:
+      logits: f32[N, V]; targets: i32[N].
+    Returns:
+      (loss, lse): f32[N] per-row negative log-likelihood and f32[N] lse.
+    """
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[:, None], axis=1)[:, 0]
+    return lse - tgt, lse
+
+
+def adamw_ref(p, g, m, v, *, lr, beta1, beta2, eps, weight_decay, step):
+    """One AdamW step (decoupled weight decay, bias-corrected — PyTorch/optax
+    semantics, matching Megatron's fp32 optimizer math)."""
+    m_new = beta1 * m + (1.0 - beta1) * g
+    v_new = beta2 * v + (1.0 - beta2) * g * g
+    mhat = m_new / (1.0 - beta1**step)
+    vhat = v_new / (1.0 - beta2**step)
+    p_new = p - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p)
+    return p_new, m_new, v_new

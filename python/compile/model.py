@@ -1,0 +1,218 @@
+"""L2: GPT-2-family decoder in JAX, calling the Pallas kernels.
+
+The model is a standard pre-LN GPT-2: learned token + position embeddings,
+``n_layers`` transformer blocks (causal attention via the Pallas
+flash-attention kernel, GELU MLP), final LayerNorm, LM head tied to the
+token embedding. Loss is mean next-token cross entropy via the Pallas fused
+xent kernel. The inner optimizer (AdamW with global-norm clipping, decoupled
+selective weight decay) is fused into the same HLO module via the Pallas
+AdamW kernel, so one ``train_step`` execution performs fwd + bwd + clip +
+update entirely on device — Python is never on the training path.
+
+Parameters are handled as a *flat ordered list* of f32 tensors. The order is
+fixed by ``param_spec`` and exported in the artifact manifest; the Rust
+coordinator addresses parameters exclusively through that manifest.
+
+Step functions lowered by aot.py (see that module for signatures):
+  init_params, train_step, grad_step, apply_step, eval_step, score_step.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels import flash_attention, softmax_xent, xent_fwd, adamw_update
+
+ADAM_BETA1 = 0.9
+ADAM_BETA2 = 0.999
+ADAM_EPS = 1e-8
+CLIP_GRAD = 1.0
+
+
+@dataclass(frozen=True)
+class ParamInfo:
+    name: str
+    shape: tuple
+    std: float        # init stddev; 0 → zeros, -1 → ones (LN gain)
+    decay: bool       # apply weight decay?
+
+    @property
+    def size(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+def param_spec(cfg: ModelConfig):
+    """Canonical flat parameter ordering. Matches rust/src/runtime/manifest.rs."""
+    d, v, t = cfg.d_model, cfg.vocab_size, cfg.seq_len
+    ff = cfg.d_ff
+    std = 0.02
+    # GPT-2 scales residual-projection inits by 1/sqrt(2L)
+    proj_std = std / (2.0 * cfg.n_layers) ** 0.5
+    spec = [
+        ParamInfo("wte", (v, d), std, True),
+        ParamInfo("wpe", (t, d), std, True),
+    ]
+    for i in range(cfg.n_layers):
+        p = f"h{i}."
+        spec += [
+            ParamInfo(p + "ln1.g", (d,), -1.0, False),
+            ParamInfo(p + "ln1.b", (d,), 0.0, False),
+            ParamInfo(p + "attn.qkv.w", (d, 3 * d), std, True),
+            ParamInfo(p + "attn.qkv.b", (3 * d,), 0.0, False),
+            ParamInfo(p + "attn.proj.w", (d, d), proj_std, True),
+            ParamInfo(p + "attn.proj.b", (d,), 0.0, False),
+            ParamInfo(p + "ln2.g", (d,), -1.0, False),
+            ParamInfo(p + "ln2.b", (d,), 0.0, False),
+            ParamInfo(p + "mlp.fc.w", (d, ff), std, True),
+            ParamInfo(p + "mlp.fc.b", (ff,), 0.0, False),
+            ParamInfo(p + "mlp.proj.w", (ff, d), proj_std, True),
+            ParamInfo(p + "mlp.proj.b", (d,), 0.0, False),
+        ]
+    spec += [
+        ParamInfo("ln_f.g", (d,), -1.0, False),
+        ParamInfo("ln_f.b", (d,), 0.0, False),
+    ]
+    return spec
+
+
+def init_params(cfg: ModelConfig, seed):
+    """Initialize the flat parameter list from an (optionally traced) seed."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for i, info in enumerate(param_spec(cfg)):
+        if info.std == -1.0:
+            params.append(jnp.ones(info.shape, jnp.float32))
+        elif info.std == 0.0:
+            params.append(jnp.zeros(info.shape, jnp.float32))
+        else:
+            sub = jax.random.fold_in(key, i)
+            params.append(
+                info.std * jax.random.normal(sub, info.shape, jnp.float32))
+    return tuple(params)
+
+
+def _layernorm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def forward(cfg: ModelConfig, params, tokens_in):
+    """Logits for a batch. tokens_in: i32[B, T] → f32[B, T, V]."""
+    b, t = tokens_in.shape
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.d_head
+    it = iter(params)
+    wte = next(it)
+    wpe = next(it)
+    x = wte[tokens_in] + wpe[None, :t, :]
+    for _ in range(cfg.n_layers):
+        ln1g, ln1b = next(it), next(it)
+        qkv_w, qkv_b = next(it), next(it)
+        prj_w, prj_b = next(it), next(it)
+        ln2g, ln2b = next(it), next(it)
+        fc_w, fc_b = next(it), next(it)
+        mp_w, mp_b = next(it), next(it)
+
+        # Attention (Pallas flash kernel over (B·H, T, dh))
+        a = _layernorm(x, ln1g, ln1b)
+        qkv = a @ qkv_w + qkv_b                      # (B, T, 3D)
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+
+        def heads(z):
+            return (z.reshape(b, t, h, dh)
+                     .transpose(0, 2, 1, 3)
+                     .reshape(b * h, t, dh))
+
+        o = flash_attention(heads(q), heads(k), heads(v))  # (B·H, T, dh)
+        o = (o.reshape(b, h, t, dh)
+              .transpose(0, 2, 1, 3)
+              .reshape(b, t, d))
+        x = x + o @ prj_w + prj_b
+
+        # MLP
+        m = _layernorm(x, ln2g, ln2b)
+        x = x + _gelu(m @ fc_w + fc_b) @ mp_w + mp_b
+
+    lnfg, lnfb = next(it), next(it)
+    x = _layernorm(x, lnfg, lnfb)
+    return x @ wte.T  # tied LM head: (B, T, V)
+
+
+def loss_fn(cfg: ModelConfig, params, tokens):
+    """Mean next-token NLL. tokens: i32[B, T+1]."""
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(cfg, params, inp)
+    b, t, v = logits.shape
+    nll = softmax_xent(logits.reshape(b * t, v), tgt.reshape(b * t))
+    return jnp.mean(nll)
+
+
+def grads_and_loss(cfg: ModelConfig, params, tokens):
+    loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, tokens))(params)
+    return grads, loss
+
+
+def _global_norm(grads):
+    return jnp.sqrt(sum(jnp.sum(g * g) for g in grads))
+
+
+def apply_adamw(cfg: ModelConfig, params, m, v, grads, lr, wd, t):
+    """Clip-by-global-norm then fused AdamW on every tensor.
+
+    lr, wd are runtime f32 scalars; t is the (1-based) AdamW step counter
+    used for bias correction. Weight decay is applied selectively per
+    ``param_spec`` (no decay on biases/LayerNorm), matching Megatron.
+    """
+    spec = param_spec(cfg)
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, CLIP_GRAD / (gnorm + 1e-6))
+    new_p, new_m, new_v = [], [], []
+    for info, p_i, m_i, v_i, g_i in zip(spec, params, m, v, grads):
+        g_flat = (g_i * scale).reshape(-1)
+        wd_i = wd if info.decay else 0.0
+        p2, m2, v2 = adamw_update(
+            p_i.reshape(-1), g_flat, m_i.reshape(-1), v_i.reshape(-1),
+            lr=lr, beta1=ADAM_BETA1, beta2=ADAM_BETA2, eps=ADAM_EPS,
+            weight_decay=wd_i, step=t)
+        new_p.append(p2.reshape(info.shape))
+        new_m.append(m2.reshape(info.shape))
+        new_v.append(v2.reshape(info.shape))
+    return tuple(new_p), tuple(new_m), tuple(new_v), gnorm
+
+
+def train_step(cfg: ModelConfig, params, m, v, tokens, lr, wd, t):
+    """Fused fwd+bwd+clip+AdamW. Returns (params', m', v', loss, gnorm)."""
+    grads, loss = grads_and_loss(cfg, params, tokens)
+    new_p, new_m, new_v, gnorm = apply_adamw(cfg, params, m, v, grads, lr, wd, t)
+    return new_p, new_m, new_v, loss, gnorm
+
+
+def grad_step(cfg: ModelConfig, params, tokens):
+    """Gradients only (for L3-side gradient accumulation). → (grads, loss)."""
+    return grads_and_loss(cfg, params, tokens)
+
+
+def eval_step(cfg: ModelConfig, params, tokens):
+    return loss_fn(cfg, params, tokens)
+
+
+def score_step(cfg: ModelConfig, params, tokens):
+    """Per-position target log-probs for the downstream-task harness.
+
+    tokens: i32[B, T+1] → f32[B, T] where out[b, i] = log p(tokens[b, i+1] |
+    tokens[b, :i+1]). Masking/aggregation happens rust-side per task.
+    """
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(cfg, params, inp)
+    b, t, v = logits.shape
+    nll, _ = xent_fwd(logits.reshape(b * t, v), tgt.reshape(b * t))
+    return -nll.reshape(b, t)

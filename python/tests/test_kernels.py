@@ -1,0 +1,163 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (hypothesis-swept)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (adamw_update, attention_fwd, flash_attention,
+                             ref, softmax_xent, xent_fwd)
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = dict(max_examples=10, deadline=None)
+
+
+def rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------- attention
+@settings(**SETTINGS)
+@given(
+    bh=st.sampled_from([1, 2, 6]),
+    t=st.sampled_from([16, 32, 64, 128]),
+    dh=st.sampled_from([8, 16, 32, 64]),
+    seed=st.integers(0, 2**16),
+)
+def test_attention_fwd_matches_ref(bh, t, dh, seed):
+    q = rand(seed, (bh, t, dh))
+    k = rand(seed + 1, (bh, t, dh))
+    v = rand(seed + 2, (bh, t, dh))
+    out, lse = attention_fwd(q, k, v)
+    out_ref, lse_ref = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(out, out_ref, atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(lse, lse_ref, atol=2e-5, rtol=2e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    block_q=st.sampled_from([16, 32, 64]),
+    block_k=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 2**16),
+)
+def test_attention_block_shape_invariance(block_q, block_k, seed):
+    """Kernel result must not depend on the VMEM tiling choice."""
+    q = rand(seed, (2, 64, 16))
+    k = rand(seed + 1, (2, 64, 16))
+    v = rand(seed + 2, (2, 64, 16))
+    out, lse = attention_fwd(q, k, v, block_q=block_q, block_k=block_k)
+    out_ref, lse_ref = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(out, out_ref, atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(lse, lse_ref, atol=2e-5, rtol=2e-5)
+
+
+def test_attention_is_causal():
+    """Perturbing future keys/values must not change past outputs."""
+    q = rand(0, (1, 32, 8))
+    k = rand(1, (1, 32, 8))
+    v = rand(2, (1, 32, 8))
+    out1, _ = attention_fwd(q, k, v)
+    k2 = k.at[:, 16:, :].set(99.0)
+    v2 = v.at[:, 16:, :].set(-99.0)
+    out2, _ = attention_fwd(q, k2, v2)
+    np.testing.assert_allclose(out1[:, :16], out2[:, :16], atol=1e-6)
+    assert not np.allclose(out1[:, 16:], out2[:, 16:])
+
+
+def test_attention_grad_matches_ref():
+    q, k, v = rand(0, (2, 32, 16)), rand(1, (2, 32, 16)), rand(2, (2, 32, 16))
+
+    def f(q, k, v):
+        return jnp.sum(flash_attention(q, k, v) ** 2)
+
+    def f_ref(q, k, v):
+        return jnp.sum(ref.attention_ref(q, k, v)[0] ** 2)
+
+    g = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    g_ref = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g, g_ref):
+        np.testing.assert_allclose(a, b, atol=5e-5, rtol=5e-5)
+
+
+# ------------------------------------------------------------ cross entropy
+@settings(**SETTINGS)
+@given(
+    n=st.sampled_from([32, 128, 256]),
+    v=st.sampled_from([64, 512, 2048]),
+    scale=st.sampled_from([0.1, 1.0, 10.0]),
+    seed=st.integers(0, 2**16),
+)
+def test_xent_matches_ref(n, v, scale, seed):
+    logits = rand(seed, (n, v), scale)
+    tgt = jax.random.randint(jax.random.PRNGKey(seed + 7), (n,), 0, v)
+    loss, lse = xent_fwd(logits, tgt)
+    loss_ref, lse_ref = ref.softmax_xent_ref(logits, tgt)
+    np.testing.assert_allclose(loss, loss_ref, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(lse, lse_ref, atol=1e-5, rtol=1e-5)
+
+
+def test_xent_grad_matches_ref():
+    logits = rand(3, (64, 128))
+    tgt = jax.random.randint(jax.random.PRNGKey(11), (64,), 0, 128)
+    g = jax.grad(lambda x: jnp.mean(softmax_xent(x, tgt)))(logits)
+    g_ref = jax.grad(lambda x: jnp.mean(ref.softmax_xent_ref(x, tgt)[0]))(logits)
+    np.testing.assert_allclose(g, g_ref, atol=1e-6, rtol=1e-5)
+
+
+def test_xent_uniform_logits_is_log_v():
+    v = 512
+    logits = jnp.zeros((8, v))
+    tgt = jnp.arange(8, dtype=jnp.int32)
+    loss, _ = xent_fwd(logits, tgt)
+    np.testing.assert_allclose(loss, np.log(v) * np.ones(8), rtol=1e-6)
+
+
+# -------------------------------------------------------------------- adamw
+@settings(**SETTINGS)
+@given(
+    n=st.sampled_from([64, 4096, 16384, 49152]),
+    step=st.integers(1, 5000),
+    lr=st.sampled_from([1e-4, 3e-3, 1.0]),
+    wd=st.sampled_from([0.0, 0.1]),
+    seed=st.integers(0, 2**16),
+)
+def test_adamw_matches_ref(n, step, lr, wd, seed):
+    p = rand(seed, (n,))
+    g = rand(seed + 1, (n,))
+    m = rand(seed + 2, (n,), 0.1)
+    v = jnp.abs(rand(seed + 3, (n,), 0.1))
+    kw = dict(lr=lr, beta1=0.9, beta2=0.999, eps=1e-8,
+              weight_decay=wd, step=step)
+    p1, m1, v1 = adamw_update(p, g, m, v, **kw)
+    p2, m2, v2 = ref.adamw_ref(p, g, m, v, **kw)
+    np.testing.assert_allclose(p1, p2, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(m1, m2, atol=1e-6, rtol=1e-6)
+    np.testing.assert_allclose(v1, v2, atol=1e-6, rtol=1e-6)
+
+
+def test_adamw_block_invariance():
+    """Tiling must not change the update."""
+    p, g = rand(0, (32768,)), rand(1, (32768,))
+    m = jnp.zeros_like(p)
+    v = jnp.zeros_like(p)
+    kw = dict(lr=1e-3, beta1=0.9, beta2=0.999, eps=1e-8,
+              weight_decay=0.1, step=3)
+    outs = [adamw_update(p, g, m, v, block=blk, **kw)
+            for blk in (1024, 8192, 32768)]
+    for a, b in zip(outs[0], outs[1]):
+        np.testing.assert_allclose(a, b, atol=0)
+    for a, b in zip(outs[0], outs[2]):
+        np.testing.assert_allclose(a, b, atol=0)
+
+
+def test_adamw_zero_grad_pure_decay():
+    """g=0, m=0, v=0 → pure weight-decay shrinkage."""
+    p = jnp.ones((256,))
+    z = jnp.zeros((256,))
+    p1, m1, v1 = adamw_update(p, z, z, z, lr=0.1, beta1=0.9, beta2=0.999,
+                              eps=1e-8, weight_decay=0.5, step=1)
+    np.testing.assert_allclose(p1, p * (1 - 0.1 * 0.5), rtol=1e-6)
+    np.testing.assert_allclose(m1, z, atol=0)
+    np.testing.assert_allclose(v1, z, atol=0)

@@ -1,0 +1,138 @@
+"""L2 correctness: model shapes, training dynamics, step-function algebra."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.configs import CONFIGS, n_params
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = CONFIGS["nano"]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, 42)
+
+
+def _batch(seed=0, b=None):
+    b = b or CFG.micro_batch
+    key = jax.random.PRNGKey(seed)
+    return jax.random.randint(key, (b, CFG.seq_len + 1), 0, CFG.vocab_size)
+
+
+def test_param_spec_matches_counter():
+    for name in ("nano", "micro", "mini", "gpt2-small", "gpt2-xl"):
+        cfg = CONFIGS[name]
+        total = sum(i.size for i in M.param_spec(cfg))
+        assert total == n_params(cfg), name
+
+
+def test_param_count_paper_sizes():
+    """The paper configs must land at their advertised sizes."""
+    assert abs(n_params(CONFIGS["gpt2-small"]) / 124e6 - 1) < 0.03
+    assert abs(n_params(CONFIGS["gpt2-medium"]) / 354e6 - 1) < 0.03
+    assert abs(n_params(CONFIGS["gpt2-xl"]) / 1.55e9 - 1) < 0.03
+    assert abs(n_params(CONFIGS["gpt2-7b"]) / 6.7e9 - 1) < 0.1
+
+
+def test_init_deterministic(params):
+    p2 = M.init_params(CFG, 42)
+    for a, b in zip(params, p2):
+        np.testing.assert_array_equal(a, b)
+    p3 = M.init_params(CFG, 43)
+    assert any(not np.array_equal(a, b) for a, b in zip(params, p3))
+
+
+def test_forward_shape(params):
+    tok = _batch()[:, :-1]
+    logits = M.forward(CFG, params, tok)
+    assert logits.shape == (CFG.micro_batch, CFG.seq_len, CFG.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_initial_loss_near_uniform(params):
+    loss = M.loss_fn(CFG, params, _batch())
+    assert abs(float(loss) - np.log(CFG.vocab_size)) < 0.5
+
+
+def test_train_step_decreases_loss(params):
+    """A few fused steps on a repeated batch must overfit it."""
+    p = params
+    m = tuple(jnp.zeros_like(x) for x in p)
+    v = tuple(jnp.zeros_like(x) for x in p)
+    tok = _batch(1)
+    step = jax.jit(lambda p, m, v, t: M.train_step(
+        CFG, p, m, v, tok, jnp.float32(1e-3), jnp.float32(0.1), t))
+    losses = []
+    for i in range(8):
+        p, m, v, loss, gnorm = step(p, m, v, jnp.float32(i + 1))
+        losses.append(float(loss))
+        assert float(gnorm) > 0
+    assert losses[-1] < losses[0] - 0.5, losses
+
+
+def test_grad_plus_apply_equals_train_step(params):
+    """grad_step ∘ apply_step must equal the fused train_step exactly."""
+    p = params
+    m = tuple(jnp.zeros_like(x) for x in p)
+    v = tuple(jnp.zeros_like(x) for x in p)
+    tok = _batch(2)
+    lr, wd, t = jnp.float32(1e-3), jnp.float32(0.1), jnp.float32(1)
+
+    p1, m1, v1, loss1, g1 = M.train_step(CFG, p, m, v, tok, lr, wd, t)
+    grads, loss2 = M.grad_step(CFG, p, tok)
+    p2, m2, v2, g2 = M.apply_adamw(CFG, p, m, v, grads, lr, wd, t)
+
+    np.testing.assert_allclose(float(loss1), float(loss2), rtol=1e-6)
+    np.testing.assert_allclose(float(g1), float(g2), rtol=1e-6)
+    for a, b in zip(p1, p2):
+        np.testing.assert_allclose(a, b, atol=1e-7)
+
+
+def test_eval_step_matches_loss(params):
+    tok = _batch(3)
+    l1 = M.eval_step(CFG, params, tok)
+    l2 = M.loss_fn(CFG, params, tok)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-7)
+
+
+def test_score_step_consistent_with_loss(params):
+    """mean(-score) == eval loss (score is per-position target logprob)."""
+    tok = _batch(4)
+    lp = M.score_step(CFG, params, tok)
+    assert lp.shape == (CFG.micro_batch, CFG.seq_len)
+    loss = M.eval_step(CFG, params, tok)
+    np.testing.assert_allclose(float(jnp.mean(-lp)), float(loss), rtol=1e-6)
+
+
+def test_gradient_clipping_engages():
+    """With a tiny clip threshold, the applied update norm must shrink."""
+    p = M.init_params(CFG, 0)
+    m = tuple(jnp.zeros_like(x) for x in p)
+    v = tuple(jnp.zeros_like(x) for x in p)
+    tok = _batch(5)
+    grads, _ = M.grad_step(CFG, p, tok)
+    gnorm = float(jnp.sqrt(sum(jnp.sum(g * g) for g in grads)))
+    assert gnorm > M.CLIP_GRAD  # fresh init on random data clips
+    _, m1, _, reported = M.apply_adamw(
+        CFG, p, m, v, grads, jnp.float32(1e-3), jnp.float32(0.0), jnp.float32(1))
+    np.testing.assert_allclose(reported, gnorm, rtol=1e-5)
+    # first-step m = (1-beta1)*g_clipped → ||m|| = 0.1*||g_clipped|| = 0.1*clip
+    mnorm = float(jnp.sqrt(sum(jnp.sum(x * x) for x in m1)))
+    np.testing.assert_allclose(mnorm, 0.1 * M.CLIP_GRAD, rtol=1e-3)
+
+
+def test_weight_decay_selective():
+    """LayerNorm/bias tensors must not be decayed."""
+    spec = M.param_spec(CFG)
+    decayed = {i.name for i in spec if i.decay}
+    assert "wte" in decayed and "wpe" in decayed
+    for i in spec:
+        if i.name.endswith((".b", "ln1.g", "ln2.g", "ln_f.g")):
+            assert not i.decay, i.name
+        if i.name.endswith(".w"):
+            assert i.decay, i.name

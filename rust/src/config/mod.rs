@@ -1,0 +1,74 @@
+//! Configuration system: model table, training hyperparameters (paper
+//! Table I), parallelism layout (§IV-C), and per-model paper presets.
+
+pub mod model;
+pub mod parallel;
+pub mod train;
+
+pub use model::{model, model_or_die, ModelConfig, MODELS};
+pub use parallel::{ParallelConfig, Rank};
+pub use train::{NesterovKind, OptMode, TrainConfig};
+
+/// Paper Table I inner learning rates per GPT-2 size.
+pub fn paper_inner_lr(model_name: &str) -> Option<(f64, f64)> {
+    match model_name {
+        "gpt2-small" => Some((4e-4, 4e-5)),
+        "gpt2-medium" => Some((3e-4, 3e-5)),
+        "gpt2-xl" => Some((1.5e-4, 1.5e-5)),
+        _ => None,
+    }
+}
+
+/// The paper's full-pretraining recipe (Table I): 100k iterations, global
+/// batch 512, cosine decay over the full run, 2 % LR warmup, AdamW β=(0.9,
+/// 0.999), weight decay 0.1, clip 1.0, Nesterov outer optimizer.
+pub fn paper_recipe(model_name: &str, mode: OptMode, groups: usize) -> TrainConfig {
+    let mut c = TrainConfig::default_for(100_000);
+    c.mode = mode;
+    c.global_batch = 512;
+    c.groups = groups;
+    c.sync_interval = 50;
+    if let Some((lr, min_lr)) = paper_inner_lr(model_name) {
+        c.inner_lr = lr;
+        c.inner_min_lr = min_lr;
+    }
+    c
+}
+
+/// Scaled-down analog recipe for the trainable configs: same *structure*
+/// (10 % lazy start, 2 % LR warmup, cosine to 10 % of peak, H·groups
+/// proportions), budget shrunk to a CPU-feasible run.
+pub fn analog_recipe(iterations: usize, mode: OptMode, groups: usize) -> TrainConfig {
+    let mut c = TrainConfig::default_for(iterations);
+    c.mode = mode;
+    c.groups = groups;
+    c.global_batch = 8 * groups.max(4);
+    // Keep the paper's H/T ratio (50/100k) meaningful at small T: default to
+    // H = max(5, T/200) so a 1 000-iteration analog syncs every 5 steps.
+    c.sync_interval = (iterations / 200).max(5);
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_recipe_matches_table1() {
+        let c = paper_recipe("gpt2-xl", OptMode::Pier, 64);
+        assert_eq!(c.iterations, 100_000);
+        assert_eq!(c.global_batch, 512);
+        assert_eq!(c.sync_interval, 50);
+        assert!((c.inner_lr - 1.5e-4).abs() < 1e-12);
+        assert!((c.weight_decay - 0.1).abs() < 1e-12);
+        assert_eq!(c.switch_step(), 10_000);
+    }
+
+    #[test]
+    fn analog_recipe_scales() {
+        let c = analog_recipe(1000, OptMode::Pier, 8);
+        assert_eq!(c.sync_interval, 5);
+        assert_eq!(c.switch_step(), 100);
+        assert_eq!(c.group_batch(), 8);
+    }
+}

@@ -1,0 +1,116 @@
+//! Model configurations — mirrors `python/compile/configs.py` exactly.
+//!
+//! Trainable analogs (`nano`/`micro`/`mini`) have AOT artifacts; the paper
+//! configs (`gpt2-small`…`gpt2-7b`) parameterize the FLOPs model and the
+//! cluster simulator. `test_manifest_matches_table` in the integration suite
+//! cross-checks this table against the artifact manifests so the two sides
+//! cannot drift.
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: &'static str,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub seq_len: usize,
+    /// Micro-batch the artifact is compiled for (0 for paper configs).
+    pub micro_batch: usize,
+    /// Has AOT artifacts (vs. perf-model-only paper config).
+    pub trainable: bool,
+}
+
+impl ModelConfig {
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    pub fn d_ff(&self) -> usize {
+        4 * self.d_model
+    }
+
+    /// Exact trainable-parameter count (tied LM head) — must equal
+    /// `configs.n_params` on the python side.
+    pub fn n_params(&self) -> usize {
+        let (d, v, t, ff) = (self.d_model, self.vocab_size, self.seq_len, self.d_ff());
+        let per_layer = 2 * (2 * d)        // ln1, ln2
+            + d * 3 * d + 3 * d            // qkv
+            + d * d + d                    // attn proj
+            + d * ff + ff                  // fc
+            + ff * d + d;                  // mlp proj
+        v * d + t * d + self.n_layers * per_layer + 2 * d
+    }
+
+    /// Gradient bytes exchanged per data-parallel all-reduce (paper trains
+    /// in BF16 → 2 bytes/param on the wire).
+    pub fn grad_bytes_bf16(&self) -> f64 {
+        2.0 * self.n_params() as f64
+    }
+
+    /// Outer-optimizer delta volume (fp32 model deltas, §V).
+    pub fn delta_bytes_f32(&self) -> f64 {
+        4.0 * self.n_params() as f64
+    }
+}
+
+pub const MODELS: &[ModelConfig] = &[
+    ModelConfig { name: "nano", vocab_size: 512, d_model: 64, n_layers: 2, n_heads: 2, seq_len: 64, micro_batch: 4, trainable: true },
+    ModelConfig { name: "micro", vocab_size: 2048, d_model: 128, n_layers: 4, n_heads: 4, seq_len: 128, micro_batch: 8, trainable: true },
+    ModelConfig { name: "mini", vocab_size: 4096, d_model: 256, n_layers: 6, n_heads: 8, seq_len: 256, micro_batch: 8, trainable: true },
+    ModelConfig { name: "gpt2-small", vocab_size: 50257, d_model: 768, n_layers: 12, n_heads: 12, seq_len: 1024, micro_batch: 0, trainable: false },
+    ModelConfig { name: "gpt2-medium", vocab_size: 50257, d_model: 1024, n_layers: 24, n_heads: 16, seq_len: 1024, micro_batch: 0, trainable: false },
+    ModelConfig { name: "gpt2-xl", vocab_size: 50257, d_model: 1600, n_layers: 48, n_heads: 25, seq_len: 1024, micro_batch: 0, trainable: false },
+    ModelConfig { name: "gpt2-7b", vocab_size: 50257, d_model: 4096, n_layers: 32, n_heads: 32, seq_len: 2048, micro_batch: 0, trainable: false },
+];
+
+pub fn model(name: &str) -> Option<&'static ModelConfig> {
+    MODELS.iter().find(|m| m.name == name)
+}
+
+/// Panic-with-list variant for CLI paths.
+pub fn model_or_die(name: &str) -> &'static ModelConfig {
+    model(name).unwrap_or_else(|| {
+        panic!(
+            "unknown model {name:?}; available: {}",
+            MODELS.iter().map(|m| m.name).collect::<Vec<_>>().join(", ")
+        )
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_sizes() {
+        // The GPT-2 family must land at its advertised parameter counts.
+        let close = |name: &str, expect: f64, tol: f64| {
+            let n = model(name).unwrap().n_params() as f64;
+            assert!((n / expect - 1.0).abs() < tol, "{name}: {n}");
+        };
+        close("gpt2-small", 124e6, 0.03);
+        close("gpt2-medium", 354e6, 0.03);
+        close("gpt2-xl", 1.55e9, 0.03);
+        close("gpt2-7b", 6.7e9, 0.10);
+    }
+
+    #[test]
+    fn head_divisibility() {
+        for m in MODELS {
+            assert_eq!(m.d_model % m.n_heads, 0, "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn lookup() {
+        assert!(model("nano").is_some());
+        assert!(model("gpt3").is_none());
+    }
+
+    #[test]
+    fn volumes() {
+        let m = model("gpt2-xl").unwrap();
+        assert!((m.grad_bytes_bf16() / (2.0 * m.n_params() as f64) - 1.0).abs() < 1e-12);
+        assert!(m.delta_bytes_f32() > m.grad_bytes_bf16());
+    }
+}

@@ -1,0 +1,158 @@
+//! Parallelism configuration: the DP×TP layout of §IV-C.
+//!
+//! GPUs form a 2-D grid: `dp` data-parallel ranks × `tp` tensor-parallel
+//! ranks. Following Megatron (and the paper), TP ranks are packed within a
+//! node whenever possible, so TP traffic rides NVLink while DP/outer traffic
+//! crosses the fabric. DP ranks are further partitioned into `groups`
+//! local-communication groups for the DiLoCo/Pier inner loop.
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ParallelConfig {
+    /// Data-parallel size (number of model replicas).
+    pub dp: usize,
+    /// Tensor-parallel size (ways each replica is split).
+    pub tp: usize,
+    /// DiLoCo/Pier local-communication groups (divides `dp`).
+    pub groups: usize,
+    /// GPUs per compute node (Perlmutter: 4, Vista: 1).
+    pub gpus_per_node: usize,
+}
+
+impl ParallelConfig {
+    pub fn data_parallel(dp: usize, groups: usize, gpus_per_node: usize) -> Self {
+        ParallelConfig { dp, tp: 1, groups, gpus_per_node }
+    }
+
+    pub fn world_size(&self) -> usize {
+        self.dp * self.tp
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.world_size().div_ceil(self.gpus_per_node)
+    }
+
+    /// GPUs (DP ranks × TP ranks) per group.
+    pub fn group_size(&self) -> usize {
+        assert_eq!(self.dp % self.groups, 0, "dp {} % groups {}", self.dp, self.groups);
+        (self.dp / self.groups) * self.tp
+    }
+
+    /// DP ranks per group (inner all-reduce width).
+    pub fn dp_per_group(&self) -> usize {
+        self.dp / self.groups
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.dp == 0 || self.tp == 0 || self.groups == 0 {
+            return Err("dp/tp/groups must be positive".into());
+        }
+        if self.dp % self.groups != 0 {
+            return Err(format!("groups {} must divide dp {}", self.groups, self.dp));
+        }
+        if self.gpus_per_node == 0 {
+            return Err("gpus_per_node must be positive".into());
+        }
+        if self.tp > self.gpus_per_node && self.tp % self.gpus_per_node != 0 {
+            return Err(format!(
+                "tp {} spanning nodes must be a multiple of gpus_per_node {}",
+                self.tp, self.gpus_per_node
+            ));
+        }
+        Ok(())
+    }
+
+    /// Whether the inner (intra-group) all-reduce stays within one node —
+    /// the regime in which Pier's speedup argument holds (§II-B).
+    pub fn inner_comm_intra_node(&self) -> bool {
+        self.group_size() <= self.gpus_per_node
+    }
+}
+
+/// Global rank layout. Megatron order: TP is the fastest-varying dimension,
+/// so ranks `[r·tp, (r+1)·tp)` form DP rank `r`'s TP group and land on the
+/// same node when `tp ≤ gpus_per_node`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Rank {
+    pub dp: usize,
+    pub tp: usize,
+}
+
+impl ParallelConfig {
+    pub fn rank_of(&self, global: usize) -> Rank {
+        assert!(global < self.world_size());
+        Rank { dp: global / self.tp, tp: global % self.tp }
+    }
+
+    pub fn global_of(&self, r: Rank) -> usize {
+        assert!(r.dp < self.dp && r.tp < self.tp);
+        r.dp * self.tp + r.tp
+    }
+
+    pub fn node_of(&self, global: usize) -> usize {
+        global / self.gpus_per_node
+    }
+
+    /// Which group a DP rank belongs to (contiguous blocks).
+    pub fn group_of_dp(&self, dp: usize) -> usize {
+        dp / self.dp_per_group()
+    }
+
+    /// All global ranks sharing tensor-parallel rank `tp` — the participants
+    /// of the outer all-gather/all-reduce in Fig. 2.
+    pub fn tp_peer_ranks(&self, tp: usize) -> Vec<usize> {
+        (0..self.dp).map(|d| self.global_of(Rank { dp: d, tp })).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_bijection() {
+        let p = ParallelConfig { dp: 4, tp: 2, groups: 2, gpus_per_node: 4 };
+        for g in 0..p.world_size() {
+            assert_eq!(p.global_of(p.rank_of(g)), g);
+        }
+    }
+
+    #[test]
+    fn fig2_layout() {
+        // Fig. 2: DP=4, TP=2, two nodes of 4 GPUs; DP0/DP1 on node 0.
+        let p = ParallelConfig { dp: 4, tp: 2, groups: 2, gpus_per_node: 4 };
+        assert_eq!(p.nodes(), 2);
+        assert_eq!(p.node_of(p.global_of(Rank { dp: 0, tp: 0 })), 0);
+        assert_eq!(p.node_of(p.global_of(Rank { dp: 1, tp: 1 })), 0);
+        assert_eq!(p.node_of(p.global_of(Rank { dp: 2, tp: 0 })), 1);
+        // Outer all-gather participants: one rank per DP replica, same TP.
+        assert_eq!(p.tp_peer_ranks(0), vec![0, 2, 4, 6]);
+        assert_eq!(p.tp_peer_ranks(1), vec![1, 3, 5, 7]);
+    }
+
+    #[test]
+    fn groups_partition_dp() {
+        let p = ParallelConfig { dp: 8, tp: 1, groups: 4, gpus_per_node: 4 };
+        assert_eq!(p.dp_per_group(), 2);
+        assert_eq!(p.group_of_dp(0), 0);
+        assert_eq!(p.group_of_dp(7), 3);
+        assert!(p.inner_comm_intra_node());
+    }
+
+    #[test]
+    fn validation() {
+        let bad = ParallelConfig { dp: 8, tp: 1, groups: 3, gpus_per_node: 4 };
+        assert!(bad.validate().is_err());
+        let ok = ParallelConfig { dp: 8, tp: 4, groups: 8, gpus_per_node: 4 };
+        assert!(ok.validate().is_ok());
+        assert!(ok.inner_comm_intra_node()); // 1 DP rank × TP4 = one node
+        let spanning = ParallelConfig { dp: 8, tp: 1, groups: 1, gpus_per_node: 4 };
+        assert!(!spanning.inner_comm_intra_node()); // 8-GPU group over 2 nodes
+    }
+
+    #[test]
+    fn group_size_counts_tp() {
+        let p = ParallelConfig { dp: 4, tp: 4, groups: 4, gpus_per_node: 4 };
+        assert_eq!(p.group_size(), 4); // 1 DP rank × TP4
+        assert!(p.inner_comm_intra_node());
+    }
+}

@@ -1,0 +1,241 @@
+//! Training configuration (paper Table I + Pier's §IV/§V hyperparameters).
+
+use crate::util::json::Json;
+
+/// Which optimizer drives the run — the three arms of every convergence
+/// experiment in the paper.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OptMode {
+    /// Fully-synchronous AdamW data parallelism (baseline).
+    AdamW,
+    /// Vanilla DiLoCo with lazy start (inner AdamW + outer Nesterov),
+    /// *without* momentum warmup/decay — the degraded baseline of Fig. 1.
+    DiLoCo,
+    /// DiLoCo + momentum warmup + momentum decay + outer-LR schedule.
+    Pier,
+}
+
+impl OptMode {
+    pub fn parse(s: &str) -> Option<OptMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "adamw" => Some(OptMode::AdamW),
+            "diloco" => Some(OptMode::DiLoCo),
+            "pier" => Some(OptMode::Pier),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OptMode::AdamW => "adamw",
+            OptMode::DiLoCo => "diloco",
+            OptMode::Pier => "pier",
+        }
+    }
+}
+
+/// Formulation of the outer Nesterov step (§V compares both).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NesterovKind {
+    /// PyTorch SGD(nesterov=True): `θ ← θ − lr·(μ·M' + Δ)` with
+    /// `M' = μ·M + Δ` — the variant Pier selects.
+    PyTorch,
+    /// Original look-ahead formulation (Nesterov 1983).
+    Theoretical,
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub mode: OptMode,
+    /// Total optimizer iterations T.
+    pub iterations: usize,
+    /// Sequences per global batch (Table I: 512).
+    pub global_batch: usize,
+    /// Number of local-communication groups k (paper verifies 8/32/64).
+    pub groups: usize,
+    /// Outer synchronization interval H in iterations (Table I: 50..500).
+    pub sync_interval: usize,
+    /// Lazy-start fraction p (paper: 0.10).
+    pub warmup_pct: f64,
+
+    // ---- inner optimizer (AdamW, Table I) ----
+    pub inner_lr: f64,
+    pub inner_min_lr: f64,
+    /// Linear LR warmup proportion (Table I: 2%).
+    pub lr_warmup_pct: f64,
+    pub weight_decay: f64,
+    /// Cosine decay horizon (Table I: equals `iterations`).
+    pub lr_decay_iters: usize,
+
+    // ---- outer optimizer (Nesterov, §IV-B / §V) ----
+    pub outer_momentum: f64,
+    pub nesterov: NesterovKind,
+    /// Ablation switch: Alg. 1 momentum warmup during the lazy start
+    /// (Pier default true; setting false isolates the decay technique).
+    pub momentum_warmup: bool,
+    /// Ablation switch: Alg. 2 momentum-decay schedule 0.99→0.95→0.9
+    /// (Pier default true; false pins μ at `outer_momentum`).
+    pub momentum_decay: bool,
+    /// Offload outer state (old params + momentum) to host between outer
+    /// steps (§V; here: drop device mirrors and keep host copies).
+    pub cpu_offload: bool,
+    /// Streaming-DiLoCo-style partial synchronization (extension; §III-B
+    /// related work): fraction of the parameter vector synchronized per
+    /// outer step (1.0 = full Pier). Fragments rotate so the whole model
+    /// is covered every ⌈1/fraction⌉ outer steps; peak outer communication
+    /// drops proportionally.
+    pub sync_fraction: f64,
+
+    /// Evaluate validation loss every this many iterations (0 = never).
+    pub eval_interval: usize,
+    pub seed: u64,
+}
+
+impl TrainConfig {
+    /// Paper defaults scaled to a trainable analog run.
+    pub fn default_for(iterations: usize) -> TrainConfig {
+        TrainConfig {
+            mode: OptMode::Pier,
+            iterations,
+            global_batch: 32,
+            groups: 8,
+            sync_interval: 50,
+            warmup_pct: 0.10,
+            inner_lr: 3e-4,
+            inner_min_lr: 3e-5,
+            lr_warmup_pct: 0.02,
+            weight_decay: 0.1,
+            lr_decay_iters: iterations,
+            outer_momentum: 0.9,
+            nesterov: NesterovKind::PyTorch,
+            momentum_warmup: true,
+            momentum_decay: true,
+            cpu_offload: false,
+            sync_fraction: 1.0,
+            eval_interval: 0,
+            seed: 1234,
+        }
+    }
+
+    /// Iteration index at which the lazy-start phase ends (`p·T`).
+    pub fn switch_step(&self) -> usize {
+        (self.warmup_pct * self.iterations as f64).round() as usize
+    }
+
+    /// Per-group batch (DiLoCo/Pier inner loop).
+    pub fn group_batch(&self) -> usize {
+        assert_eq!(
+            self.global_batch % self.groups,
+            0,
+            "global batch {} must divide into {} groups",
+            self.global_batch,
+            self.groups
+        );
+        self.global_batch / self.groups
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("mode", Json::str(self.mode.name())),
+            ("iterations", Json::num(self.iterations as f64)),
+            ("global_batch", Json::num(self.global_batch as f64)),
+            ("groups", Json::num(self.groups as f64)),
+            ("sync_interval", Json::num(self.sync_interval as f64)),
+            ("warmup_pct", Json::num(self.warmup_pct)),
+            ("inner_lr", Json::num(self.inner_lr)),
+            ("inner_min_lr", Json::num(self.inner_min_lr)),
+            ("lr_warmup_pct", Json::num(self.lr_warmup_pct)),
+            ("weight_decay", Json::num(self.weight_decay)),
+            ("lr_decay_iters", Json::num(self.lr_decay_iters as f64)),
+            ("outer_momentum", Json::num(self.outer_momentum)),
+            ("momentum_warmup", Json::Bool(self.momentum_warmup)),
+            ("momentum_decay", Json::Bool(self.momentum_decay)),
+            (
+                "nesterov",
+                Json::str(match self.nesterov {
+                    NesterovKind::PyTorch => "pytorch",
+                    NesterovKind::Theoretical => "theoretical",
+                }),
+            ),
+            ("cpu_offload", Json::Bool(self.cpu_offload)),
+            ("sync_fraction", Json::num(self.sync_fraction)),
+            ("eval_interval", Json::num(self.eval_interval as f64)),
+            ("seed", Json::num(self.seed as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<TrainConfig> {
+        let mut c = TrainConfig::default_for(j.get("iterations")?.as_usize()?);
+        c.mode = OptMode::parse(j.get("mode")?.as_str()?)?;
+        c.global_batch = j.get("global_batch")?.as_usize()?;
+        c.groups = j.get("groups")?.as_usize()?;
+        c.sync_interval = j.get("sync_interval")?.as_usize()?;
+        c.warmup_pct = j.get("warmup_pct")?.as_f64()?;
+        c.inner_lr = j.get("inner_lr")?.as_f64()?;
+        c.inner_min_lr = j.get("inner_min_lr")?.as_f64()?;
+        c.lr_warmup_pct = j.get("lr_warmup_pct")?.as_f64()?;
+        c.weight_decay = j.get("weight_decay")?.as_f64()?;
+        c.lr_decay_iters = j.get("lr_decay_iters")?.as_usize()?;
+        c.outer_momentum = j.get("outer_momentum")?.as_f64()?;
+        c.momentum_warmup = j.get("momentum_warmup").and_then(Json::as_bool).unwrap_or(true);
+        c.momentum_decay = j.get("momentum_decay").and_then(Json::as_bool).unwrap_or(true);
+        c.nesterov = match j.get("nesterov")?.as_str()? {
+            "pytorch" => NesterovKind::PyTorch,
+            "theoretical" => NesterovKind::Theoretical,
+            _ => return None,
+        };
+        c.cpu_offload = j.get("cpu_offload")?.as_bool()?;
+        c.sync_fraction = j.get("sync_fraction").and_then(Json::as_f64).unwrap_or(1.0);
+        c.eval_interval = j.get("eval_interval")?.as_usize()?;
+        c.seed = j.get("seed")?.as_f64()? as u64;
+        Some(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn switch_step_is_10_pct() {
+        let c = TrainConfig::default_for(1000);
+        assert_eq!(c.switch_step(), 100);
+    }
+
+    #[test]
+    fn group_batch_divides() {
+        let mut c = TrainConfig::default_for(100);
+        c.global_batch = 32;
+        c.groups = 8;
+        assert_eq!(c.group_batch(), 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn group_batch_must_divide() {
+        let mut c = TrainConfig::default_for(100);
+        c.global_batch = 30;
+        c.groups = 8;
+        c.group_batch();
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut c = TrainConfig::default_for(500);
+        c.mode = OptMode::DiLoCo;
+        c.cpu_offload = true;
+        c.nesterov = NesterovKind::Theoretical;
+        let j = c.to_json();
+        let c2 = TrainConfig::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(c2.mode, OptMode::DiLoCo);
+        assert!(c2.cpu_offload);
+        assert_eq!(c2.nesterov, NesterovKind::Theoretical);
+        assert_eq!(c2.iterations, 500);
+    }
+
+    #[test]
+    fn mode_parse() {
+        assert_eq!(OptMode::parse("PIER"), Some(OptMode::Pier));
+        assert_eq!(OptMode::parse("sgd"), None);
+    }
+}

@@ -1,0 +1,167 @@
+//! In-process collectives over worker groups.
+//!
+//! Numerically these are *real* collectives: deterministic, fixed-order
+//! reductions over the groups' host vectors (the single-host stand-in for
+//! NCCL, DESIGN.md §3). Every call also records its logical communication
+//! volume into [`CommStats`] so the cluster simulator can cost the same
+//! schedule the trainer actually executed.
+
+/// Logical communication accounting, split by scope the way the paper's
+/// analysis is (§II-B): intra-group (fast links) vs global (fabric).
+#[derive(Clone, Debug, Default)]
+pub struct CommStats {
+    pub inner_allreduce_calls: u64,
+    pub inner_allreduce_bytes: f64,
+    pub outer_allreduce_calls: u64,
+    pub outer_allreduce_bytes: f64,
+    pub broadcast_calls: u64,
+    pub broadcast_bytes: f64,
+}
+
+impl CommStats {
+    pub fn total_bytes(&self) -> f64 {
+        self.inner_allreduce_bytes + self.outer_allreduce_bytes + self.broadcast_bytes
+    }
+}
+
+/// Sum-reduce `vectors` element-wise into a fresh mean vector.
+/// Deterministic: accumulation order is the natural group order, in f64
+/// (pairwise error stays below f32 resolution for any realistic K).
+pub fn all_reduce_mean(vectors: &[&[f32]]) -> Vec<f32> {
+    assert!(!vectors.is_empty());
+    let n = vectors[0].len();
+    for v in vectors {
+        assert_eq!(v.len(), n, "ragged all-reduce");
+    }
+    let k = vectors.len() as f64;
+    let mut out = vec![0.0f32; n];
+    // Chunked for cache friendliness; accumulate in f64 per element.
+    const CHUNK: usize = 4096;
+    let mut acc = vec![0.0f64; CHUNK.min(n)];
+    let mut start = 0;
+    while start < n {
+        let len = CHUNK.min(n - start);
+        acc[..len].iter_mut().for_each(|a| *a = 0.0);
+        for v in vectors {
+            let src = &v[start..start + len];
+            for (a, &x) in acc[..len].iter_mut().zip(src) {
+                *a += x as f64;
+            }
+        }
+        for (o, a) in out[start..start + len].iter_mut().zip(&acc[..len]) {
+            *o = (*a / k) as f32;
+        }
+        start += len;
+    }
+    out
+}
+
+/// Element-wise mean of per-group deltas (the outer all-reduce of Alg. 2
+/// line 11). Identical math to [`all_reduce_mean`]; separate entry point so
+/// stats distinguish inner vs outer scope.
+pub fn outer_all_reduce(vectors: &[&[f32]], stats: &mut CommStats) -> Vec<f32> {
+    let out = all_reduce_mean(vectors);
+    stats.outer_allreduce_calls += 1;
+    // Ring all-reduce moves 2·(k−1)/k·V per rank; we record the logical
+    // payload V (fp32) and let the netsim apply the algorithm factor.
+    stats.outer_allreduce_bytes += 4.0 * out.len() as f64;
+    out
+}
+
+/// Inner (intra-group) gradient all-reduce accounting. The actual gradient
+/// averaging happens on-device via batched execution; this records the
+/// volume an explicit DP all-reduce would have moved (bf16 gradients).
+pub fn note_inner_allreduce(n_params: usize, stats: &mut CommStats) {
+    stats.inner_allreduce_calls += 1;
+    stats.inner_allreduce_bytes += 2.0 * n_params as f64;
+}
+
+/// Broadcast: copy `src` into every target (outer-step model distribution).
+pub fn broadcast(src: &[f32], targets: &mut [&mut Vec<f32>], stats: &mut CommStats) {
+    for t in targets.iter_mut() {
+        t.clear();
+        t.extend_from_slice(src);
+    }
+    stats.broadcast_calls += 1;
+    stats.broadcast_bytes += 4.0 * src.len() as f64 * targets.len() as f64;
+}
+
+/// All-gather: concatenate per-rank shards in rank order (used by the
+/// TP-sharded outer step of §IV-C: each TP rank gathers its model
+/// partition across DP ranks).
+pub fn all_gather(shards: &[&[f32]]) -> Vec<f32> {
+    let total: usize = shards.iter().map(|s| s.len()).sum();
+    let mut out = Vec::with_capacity(total);
+    for s in shards {
+        out.extend_from_slice(s);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_exact() {
+        let a = vec![1.0f32, 2.0, 3.0];
+        let b = vec![3.0f32, 2.0, 1.0];
+        let m = all_reduce_mean(&[&a, &b]);
+        assert_eq!(m, vec![2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn mean_single_group_is_identity() {
+        let a: Vec<f32> = (0..100).map(|i| i as f32 * 0.5).collect();
+        assert_eq!(all_reduce_mean(&[&a]), a);
+    }
+
+    #[test]
+    fn mean_crosses_chunk_boundaries() {
+        let n = 10_000; // > CHUNK
+        let a = vec![1.0f32; n];
+        let b = vec![3.0f32; n];
+        let m = all_reduce_mean(&[&a, &b]);
+        assert!(m.iter().all(|&x| x == 2.0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn ragged_rejected() {
+        let a = vec![1.0f32; 3];
+        let b = vec![1.0f32; 4];
+        all_reduce_mean(&[&a, &b]);
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut stats = CommStats::default();
+        let a = vec![0.0f32; 10];
+        let b = vec![2.0f32; 10];
+        outer_all_reduce(&[&a, &b], &mut stats);
+        assert_eq!(stats.outer_allreduce_calls, 1);
+        assert_eq!(stats.outer_allreduce_bytes, 40.0);
+        note_inner_allreduce(10, &mut stats);
+        assert_eq!(stats.inner_allreduce_bytes, 20.0);
+        assert_eq!(stats.total_bytes(), 60.0);
+    }
+
+    #[test]
+    fn broadcast_copies() {
+        let src = vec![5.0f32; 8];
+        let mut a = vec![0.0f32; 8];
+        let mut b = vec![1.0f32; 8];
+        let mut stats = CommStats::default();
+        broadcast(&src, &mut [&mut a, &mut b], &mut stats);
+        assert_eq!(a, src);
+        assert_eq!(b, src);
+        assert_eq!(stats.broadcast_bytes, 8.0 * 4.0 * 2.0);
+    }
+
+    #[test]
+    fn all_gather_order() {
+        let a = [1.0f32, 2.0];
+        let b = [3.0f32];
+        assert_eq!(all_gather(&[&a, &b]), vec![1.0, 2.0, 3.0]);
+    }
+}

@@ -1,0 +1,191 @@
+//! Worker groups: the unit of local (intra-group) training.
+//!
+//! Each group owns a full model replica plus AdamW moments, held as **PJRT
+//! literals in the step-function's native per-tensor layout** — the fused
+//! `train_step` consumes and produces exactly these, so the per-iteration
+//! L3 cost is the execution itself, with zero flat↔tensor marshalling.
+//! Flat `Vec<f32>` views are materialized only at the outer-optimizer
+//! boundary (every `H` steps) and for eval/checkpointing — mirroring the
+//! paper's design, where the outer optimizer is the only consumer of whole
+//! model states (§V).
+
+use anyhow::{bail, Result};
+use xla::Literal;
+
+use crate::data::Sampler;
+use crate::runtime::{lit_f32, lit_i32, Manifest};
+
+pub struct WorkerGroup {
+    pub id: usize,
+    /// Per-tensor parameter literals (manifest order).
+    pub params: Vec<Literal>,
+    /// AdamW first/second moments (same layout).
+    pub m: Vec<Literal>,
+    pub v: Vec<Literal>,
+    /// Inner AdamW step counter (1-based at first update; bias correction).
+    pub adam_t: u64,
+    pub sampler: Sampler,
+}
+
+impl WorkerGroup {
+    pub fn new(id: usize, man: &Manifest, init: Vec<Literal>, sampler: Sampler) -> Result<WorkerGroup> {
+        if init.len() != man.params.len() {
+            bail!("init has {} tensors, manifest {}", init.len(), man.params.len());
+        }
+        Ok(WorkerGroup {
+            id,
+            params: init,
+            m: Self::zero_literals(man)?,
+            v: Self::zero_literals(man)?,
+            adam_t: 0,
+            sampler,
+        })
+    }
+
+    /// Zero-valued per-tensor literals in the manifest layout.
+    pub fn zero_literals(man: &Manifest) -> Result<Vec<Literal>> {
+        let zeros = vec![0.0f32; man.n_params];
+        Self::tensor_literals(man, &zeros)
+    }
+
+    /// Per-tensor literals for a flat state vector (manifest order).
+    pub fn tensor_literals(man: &Manifest, flat: &[f32]) -> Result<Vec<Literal>> {
+        if flat.len() != man.n_params {
+            bail!("flat has {} params, manifest {}", flat.len(), man.n_params);
+        }
+        let mut out = Vec::with_capacity(man.params.len());
+        for p in &man.params {
+            let dims: Vec<i64> = p.shape.iter().map(|&d| d as i64).collect();
+            out.push(lit_f32(&flat[p.offset..p.offset + p.size], &dims)?);
+        }
+        Ok(out)
+    }
+
+    /// Copy per-tensor literals (starting at `lits[start]`) into a flat
+    /// vector, validating sizes against the manifest.
+    pub fn write_back(man: &Manifest, lits: &[Literal], start: usize, flat: &mut [f32]) -> Result<()> {
+        if lits.len() < start + man.params.len() {
+            bail!("write_back: {} outputs, need {}", lits.len(), start + man.params.len());
+        }
+        for (p, lit) in man.params.iter().zip(&lits[start..start + man.params.len()]) {
+            let v = lit.to_vec::<f32>()?;
+            if v.len() != p.size {
+                bail!("write_back {}: got {} elements, expected {}", p.name, v.len(), p.size);
+            }
+            flat[p.offset..p.offset + p.size].copy_from_slice(&v);
+        }
+        Ok(())
+    }
+
+    /// Flat f32 view of the current parameters.
+    pub fn params_flat(&self, man: &Manifest) -> Result<Vec<f32>> {
+        let mut flat = vec![0.0f32; man.n_params];
+        Self::write_back(man, &self.params, 0, &mut flat)?;
+        Ok(flat)
+    }
+
+    pub fn m_flat(&self, man: &Manifest) -> Result<Vec<f32>> {
+        let mut flat = vec![0.0f32; man.n_params];
+        Self::write_back(man, &self.m, 0, &mut flat)?;
+        Ok(flat)
+    }
+
+    pub fn v_flat(&self, man: &Manifest) -> Result<Vec<f32>> {
+        let mut flat = vec![0.0f32; man.n_params];
+        Self::write_back(man, &self.v, 0, &mut flat)?;
+        Ok(flat)
+    }
+
+    /// Replace parameters from a flat vector (outer-sync broadcast).
+    pub fn set_params_flat(&mut self, man: &Manifest, flat: &[f32]) -> Result<()> {
+        self.params = Self::tensor_literals(man, flat)?;
+        Ok(())
+    }
+
+    pub fn set_m_flat(&mut self, man: &Manifest, flat: &[f32]) -> Result<()> {
+        self.m = Self::tensor_literals(man, flat)?;
+        Ok(())
+    }
+
+    pub fn set_v_flat(&mut self, man: &Manifest, flat: &[f32]) -> Result<()> {
+        self.v = Self::tensor_literals(man, flat)?;
+        Ok(())
+    }
+
+    /// Token batch literal `[b, T+1]`.
+    pub fn token_literal(man: &Manifest, tokens: &[i32]) -> Result<Literal> {
+        let (b, t1) = man.token_shape();
+        if tokens.len() != b * t1 {
+            bail!("token batch: {} tokens, expected {}×{}", tokens.len(), b, t1);
+        }
+        lit_i32(tokens, &[b as i64, t1 as i64])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::TokenDataset;
+    use crate::util::json::Json;
+    use std::path::Path;
+    use std::sync::Arc;
+
+    fn manifest() -> Manifest {
+        let j = Json::parse(
+            r#"{
+              "config": {"name": "t", "vocab_size": 16, "d_model": 4,
+                          "n_layers": 1, "n_heads": 1, "seq_len": 8},
+              "n_param_tensors": 2, "n_params": 96,
+              "micro_batch": 2, "seq_len": 8,
+              "adam": {"beta1": 0.9, "beta2": 0.999, "eps": 1e-8, "clip_grad": 1.0},
+              "params": [
+                {"name": "wte", "shape": [16, 4], "size": 64, "offset": 0, "decay": true},
+                {"name": "wpe", "shape": [8, 4], "size": 32, "offset": 64, "decay": true}
+              ],
+              "steps": {"init_params": "i.txt", "train_step": "t.txt",
+                         "grad_step": "g.txt", "apply_step": "a.txt",
+                         "eval_step": "e.txt", "score_step": "s.txt"}
+            }"#,
+        )
+        .unwrap();
+        Manifest::from_json(Path::new("/tmp/x"), &j).unwrap()
+    }
+
+    fn sampler() -> Sampler {
+        Sampler::new(Arc::new(TokenDataset::new((0..1000).collect())), 0, 1, 8, 1)
+    }
+
+    #[test]
+    fn flat_literal_roundtrip() {
+        let man = manifest();
+        let flat: Vec<f32> = (0..96).map(|i| i as f32 * 0.5).collect();
+        let lits = WorkerGroup::tensor_literals(&man, &flat).unwrap();
+        assert_eq!(lits.len(), 2);
+        let mut back = vec![0.0f32; 96];
+        WorkerGroup::write_back(&man, &lits, 0, &mut back).unwrap();
+        assert_eq!(flat, back);
+    }
+
+    #[test]
+    fn group_state_accessors_roundtrip() {
+        let man = manifest();
+        let init: Vec<f32> = (0..96).map(|i| (i as f32).sin()).collect();
+        let lits = WorkerGroup::tensor_literals(&man, &init).unwrap();
+        let mut g = WorkerGroup::new(3, &man, lits, sampler()).unwrap();
+        assert_eq!(g.id, 3);
+        assert_eq!(g.adam_t, 0);
+        assert_eq!(g.params_flat(&man).unwrap(), init);
+        assert_eq!(g.m_flat(&man).unwrap(), vec![0.0; 96]);
+        let new_p: Vec<f32> = (0..96).map(|i| i as f32).collect();
+        g.set_params_flat(&man, &new_p).unwrap();
+        assert_eq!(g.params_flat(&man).unwrap(), new_p);
+    }
+
+    #[test]
+    fn wrong_sizes_rejected() {
+        let man = manifest();
+        assert!(WorkerGroup::tensor_literals(&man, &[0.0; 95]).is_err());
+        assert!(WorkerGroup::token_literal(&man, &[0; 17]).is_err());
+        assert!(WorkerGroup::token_literal(&man, &[0; 18]).is_ok());
+    }
+}

@@ -1,0 +1,26 @@
+//! Layer-3 coordinator — the paper's system contribution.
+//!
+//! * [`trainer`] — the training event loop (lazy start → switch → inner
+//!   phases + outer syncs), Algorithm 2 end to end.
+//! * [`outer`] — the Pier outer-optimizer controller (momentum warmup,
+//!   momentum decay, outer-LR schedule; DiLoCo baseline behaviour).
+//! * [`group`] — worker groups: model replica + data shard + inner state.
+//! * [`collective`] — deterministic in-process collectives with logical
+//!   volume accounting (inner vs outer scope).
+//! * [`offload`] — §V's CPU offload of outer state, with byte/time
+//!   accounting.
+//! * [`state`] — binary checkpoints.
+
+pub mod collective;
+pub mod group;
+pub mod offload;
+pub mod outer;
+pub mod state;
+pub mod trainer;
+
+pub use collective::{all_gather, all_reduce_mean, broadcast, CommStats};
+pub use group::WorkerGroup;
+pub use offload::{OffloadStats, OffloadStore};
+pub use outer::{OuterController, OuterResult};
+pub use state::Checkpoint;
+pub use trainer::Trainer;

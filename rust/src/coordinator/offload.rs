@@ -1,0 +1,139 @@
+//! CPU offload of outer-optimizer state (§V).
+//!
+//! The paper's outer optimizer needs an extra model copy (θ_{t−H}) and the
+//! momentum buffer. On GPU clusters Pier offloads both to host memory
+//! between outer steps and reloads them at sync points, trading PCIe I/O
+//! for GPU memory. This module is that mechanism's home: an explicit
+//! store/load API with byte-level accounting on both "device" and "host"
+//! sides, plus a simulated-transfer clock so the memory/IO trade-off shows
+//! up in reports even on a host-only runtime.
+
+use std::collections::BTreeMap;
+
+/// Host-memory store for offloaded tensors.
+#[derive(Default)]
+pub struct OffloadStore {
+    slots: BTreeMap<String, Vec<f32>>,
+    /// Whether offload is enabled (§V's switch). When disabled, tensors are
+    /// kept "device-resident": stores still succeed but count as device
+    /// memory and move zero bytes.
+    pub enabled: bool,
+    pub stats: OffloadStats,
+    /// Modeled host↔device bandwidth (bytes/s) for the simulated clock —
+    /// PCIe 4.0 ×16 ≈ 25 GB/s, the paper's A100 nodes.
+    pub bandwidth: f64,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct OffloadStats {
+    pub bytes_to_host: f64,
+    pub bytes_to_device: f64,
+    pub stores: u64,
+    pub loads: u64,
+    /// Simulated transfer seconds (volume / bandwidth).
+    pub sim_seconds: f64,
+    /// Peak bytes resident in the "device" (non-offloaded) pool.
+    pub peak_device_bytes: f64,
+    device_bytes: f64,
+}
+
+impl OffloadStore {
+    pub fn new(enabled: bool) -> OffloadStore {
+        OffloadStore { enabled, bandwidth: 25e9, ..Default::default() }
+    }
+
+    /// Store a tensor under `key`. With offload enabled this models a
+    /// device→host DMA and releases device memory; disabled it models a
+    /// device-resident copy.
+    pub fn store(&mut self, key: &str, data: Vec<f32>) {
+        let bytes = 4.0 * data.len() as f64;
+        self.stats.stores += 1;
+        if self.enabled {
+            self.stats.bytes_to_host += bytes;
+            self.stats.sim_seconds += bytes / self.bandwidth;
+        } else {
+            self.stats.device_bytes += bytes;
+            self.stats.peak_device_bytes =
+                self.stats.peak_device_bytes.max(self.stats.device_bytes);
+        }
+        self.slots.insert(key.to_string(), data);
+    }
+
+    /// Load a tensor back (host→device DMA when offloaded). The slot stays
+    /// valid until overwritten — matching Pier's reload-then-overwrite
+    /// cycle at outer steps.
+    pub fn load(&mut self, key: &str) -> Option<Vec<f32>> {
+        let data = self.slots.get(key)?.clone();
+        let bytes = 4.0 * data.len() as f64;
+        self.stats.loads += 1;
+        if self.enabled {
+            self.stats.bytes_to_device += bytes;
+            self.stats.sim_seconds += bytes / self.bandwidth;
+        }
+        Some(data)
+    }
+
+    /// Drop a slot (frees the device pool when offload is disabled).
+    pub fn release(&mut self, key: &str) {
+        if let Some(data) = self.slots.remove(key) {
+            if !self.enabled {
+                self.stats.device_bytes -= 4.0 * data.len() as f64;
+            }
+        }
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.slots.contains_key(key)
+    }
+
+    /// Bytes currently held (either pool).
+    pub fn resident_bytes(&self) -> f64 {
+        4.0 * self.slots.values().map(|v| v.len()).sum::<usize>() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut s = OffloadStore::new(true);
+        s.store("anchor", vec![1.0, 2.0, 3.0]);
+        assert_eq!(s.load("anchor").unwrap(), vec![1.0, 2.0, 3.0]);
+        assert!(s.contains("anchor"));
+        assert_eq!(s.stats.stores, 1);
+        assert_eq!(s.stats.loads, 1);
+        assert_eq!(s.stats.bytes_to_host, 12.0);
+        assert_eq!(s.stats.bytes_to_device, 12.0);
+        assert!(s.stats.sim_seconds > 0.0);
+    }
+
+    #[test]
+    fn disabled_counts_device_memory() {
+        let mut s = OffloadStore::new(false);
+        s.store("anchor", vec![0.0; 1000]);
+        s.store("momentum", vec![0.0; 1000]);
+        assert_eq!(s.stats.bytes_to_host, 0.0);
+        assert_eq!(s.stats.peak_device_bytes, 8000.0);
+        s.release("anchor");
+        s.store("anchor2", vec![0.0; 500]);
+        // peak stays at the high-water mark
+        assert_eq!(s.stats.peak_device_bytes, 8000.0);
+    }
+
+    #[test]
+    fn missing_key_is_none() {
+        let mut s = OffloadStore::new(true);
+        assert!(s.load("nope").is_none());
+    }
+
+    #[test]
+    fn overwrite_replaces() {
+        let mut s = OffloadStore::new(true);
+        s.store("k", vec![1.0]);
+        s.store("k", vec![2.0]);
+        assert_eq!(s.load("k").unwrap(), vec![2.0]);
+        assert_eq!(s.resident_bytes(), 4.0);
+    }
+}

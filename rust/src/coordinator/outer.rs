@@ -1,0 +1,303 @@
+//! Pier's outer-optimizer controller — Algorithms 1 and 2 of the paper.
+//!
+//! Owns the momentum buffer, the anchor parameters θ_{t−H} the groups
+//! started the current inner phase from, and the schedules. Three modes:
+//!
+//! * **AdamW** — never constructed (no outer optimizer).
+//! * **DiLoCo** — lazy start *without* momentum accumulation, fixed outer
+//!   LR (0.7, the DiLoCo-recommended value §V quotes) and fixed μ = 0.9.
+//! * **Pier** — Alg. 1 momentum warmup during the lazy start, Alg. 2
+//!   momentum decay (0.99 → 0.95 → 0.9) and the §V outer-LR schedule after
+//!   the switch.
+//!
+//! The anchor and momentum can live in the [`OffloadStore`] between outer
+//! steps (§V's CPU offload switch) — `sync` reloads them, steps, and
+//! offloads again.
+
+use crate::config::{OptMode, TrainConfig};
+use crate::coordinator::collective::{outer_all_reduce, CommStats};
+use crate::coordinator::offload::OffloadStore;
+use crate::optim::nesterov::OuterOpt;
+use crate::optim::schedule;
+
+pub struct OuterController {
+    cfg: TrainConfig,
+    opt: OuterOpt,
+    /// θ the groups started the current inner phase from (Alg. 2's θ_{t−r}).
+    anchor: Vec<f32>,
+    pub store: OffloadStore,
+    /// Rotating fragment cursor for streaming partial sync (extension).
+    frag_cursor: usize,
+    /// Telemetry for the run log.
+    pub last_mu: f64,
+    pub last_lr: f64,
+    pub outer_steps: u64,
+    pub warmup_accums: u64,
+}
+
+/// Result of a streaming partial outer step: only `[lo, hi)` of the flat
+/// parameter vector was synchronized; every group must overwrite exactly
+/// that range with `fragment` (the rest of the replicas stay diverged
+/// until their fragment's turn — Streaming DiLoCo's contract).
+pub struct PartialSync {
+    pub lo: usize,
+    pub hi: usize,
+    pub fragment: Vec<f32>,
+}
+
+impl OuterController {
+    pub fn new(cfg: &TrainConfig, init_params: &[f32]) -> OuterController {
+        assert_ne!(cfg.mode, OptMode::AdamW, "AdamW mode has no outer optimizer");
+        let mut store = OffloadStore::new(cfg.cpu_offload);
+        store.store("anchor", init_params.to_vec());
+        store.store("momentum", vec![0.0; init_params.len()]);
+        OuterController {
+            cfg: cfg.clone(),
+            opt: OuterOpt::new(init_params.len(), cfg.nesterov),
+            anchor: init_params.to_vec(),
+            store,
+            frag_cursor: 0,
+            last_mu: 0.0,
+            last_lr: 0.0,
+            outer_steps: 0,
+            warmup_accums: 0,
+        }
+    }
+
+    /// Alg. 1 (lazy-start phase, Pier only): track model changes as outer
+    /// gradients every `H` steps, accumulating — but not applying — the
+    /// momentum. `global_params` is the current fully-synchronized model.
+    pub fn warmup_accumulate(&mut self, t: usize, global_params: &[f32]) {
+        if self.cfg.mode != OptMode::Pier || !self.cfg.momentum_warmup {
+            // DiLoCo's lazy start tracks nothing; just move the anchor so
+            // the first post-switch delta is measured from the switch point.
+            self.anchor.clear();
+            self.anchor.extend_from_slice(global_params);
+            self.refresh_offload();
+            return;
+        }
+        let mu = schedule::outer_momentum(&self.cfg, t);
+        // reload momentum/anchor if offloaded (accounting)
+        let _ = self.store.load("momentum");
+        let delta: Vec<f32> = global_params
+            .iter()
+            .zip(&self.anchor)
+            .map(|(&new, &old)| new - old)
+            .collect();
+        self.opt.accumulate(mu, &delta);
+        self.anchor.clear();
+        self.anchor.extend_from_slice(global_params);
+        self.warmup_accums += 1;
+        self.last_mu = mu;
+        self.refresh_offload();
+    }
+
+    /// Alg. 2 outer step at iteration `t`: all-reduce the per-group deltas,
+    /// apply Nesterov with the scheduled (μ, lr), return the parameters
+    /// every group must restart from.
+    pub fn sync(
+        &mut self,
+        t: usize,
+        group_params: &[&[f32]],
+        stats: &mut CommStats,
+    ) -> OuterResult {
+        // reload offloaded state (accounting; values are authoritative in
+        // `self` — the store models the device/host movement)
+        let _ = self.store.load("anchor");
+        let _ = self.store.load("momentum");
+
+        let mean = outer_all_reduce(group_params, stats);
+        let delta: Vec<f32> =
+            mean.iter().zip(&self.anchor).map(|(&new, &old)| new - old).collect();
+
+        let (mu, lr) = self.schedule_at(t);
+        let step = self.opt.step(&self.anchor, &delta, mu, lr);
+
+        self.anchor.clear();
+        self.anchor.extend_from_slice(&step.next_start);
+        self.last_mu = mu;
+        self.last_lr = lr;
+        self.outer_steps += 1;
+        self.refresh_offload();
+
+        OuterResult { committed: step.committed, next_start: step.next_start }
+    }
+
+    /// Streaming partial outer step (extension, DESIGN.md §6): synchronize
+    /// only the current rotating fragment `[lo, hi)` — `sync_fraction` of
+    /// the model — with the same Nesterov/schedule math restricted to the
+    /// range. Peak communication drops to `fraction · 4N`.
+    pub fn sync_partial(
+        &mut self,
+        t: usize,
+        group_params: &[&[f32]],
+        stats: &mut CommStats,
+    ) -> PartialSync {
+        let n = self.anchor.len();
+        let frac = self.cfg.sync_fraction.clamp(0.0, 1.0);
+        let frag_len = ((frac * n as f64).ceil() as usize).clamp(1, n);
+        let lo = self.frag_cursor.min(n.saturating_sub(1));
+        let hi = (lo + frag_len).min(n);
+        self.frag_cursor = if hi >= n { 0 } else { hi };
+
+        let _ = self.store.load("anchor");
+        let _ = self.store.load("momentum");
+
+        let slices: Vec<&[f32]> = group_params.iter().map(|g| &g[lo..hi]).collect();
+        let mean = outer_all_reduce(&slices, stats);
+        let delta: Vec<f32> =
+            mean.iter().zip(&self.anchor[lo..hi]).map(|(&m, &a)| m - a).collect();
+        let (mu, lr) = self.schedule_at(t);
+        let base: Vec<f32> = self.anchor[lo..hi].to_vec();
+        let step = self.opt.step_range(lo, &base, &delta, mu, lr);
+        self.anchor[lo..hi].copy_from_slice(&step.next_start);
+        self.last_mu = mu;
+        self.last_lr = lr;
+        self.outer_steps += 1;
+        self.refresh_offload();
+        PartialSync { lo, hi, fragment: step.next_start }
+    }
+
+    fn schedule_at(&self, t: usize) -> (f64, f64) {
+        match self.cfg.mode {
+            OptMode::Pier => (
+                schedule::outer_momentum(&self.cfg, t),
+                schedule::outer_lr(&self.cfg, t),
+            ),
+            OptMode::DiLoCo => (self.cfg.outer_momentum, schedule::DILOCO_OUTER_LR),
+            OptMode::AdamW => unreachable!(),
+        }
+    }
+
+    /// Called once at the lazy-start → DiLoCo switch: the groups fork from
+    /// `global_params`; deltas are measured from here on.
+    pub fn on_switch(&mut self, global_params: &[f32]) {
+        self.anchor.clear();
+        self.anchor.extend_from_slice(global_params);
+        self.refresh_offload();
+    }
+
+    fn refresh_offload(&mut self) {
+        self.store.store("anchor", self.anchor.clone());
+        self.store.store("momentum", self.opt.momentum.clone());
+    }
+
+    pub fn momentum_norm(&self) -> f64 {
+        self.opt.momentum_norm()
+    }
+}
+
+pub struct OuterResult {
+    /// Parameters for checkpoints/evaluation.
+    pub committed: Vec<f32>,
+    /// Parameters each group restarts the inner loop from.
+    pub next_start: Vec<f32>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{OptMode, TrainConfig};
+
+    fn cfg(mode: OptMode) -> TrainConfig {
+        let mut c = TrainConfig::default_for(1000);
+        c.mode = mode;
+        c.sync_interval = 10;
+        c
+    }
+
+    #[test]
+    fn warmup_accumulates_momentum_for_pier_only() {
+        let init = vec![0.0f32; 4];
+        let mut pier = OuterController::new(&cfg(OptMode::Pier), &init);
+        let mut diloco = OuterController::new(&cfg(OptMode::DiLoCo), &init);
+        let moved = vec![1.0f32; 4];
+        pier.warmup_accumulate(10, &moved);
+        diloco.warmup_accumulate(10, &moved);
+        assert!(pier.momentum_norm() > 0.0);
+        assert_eq!(diloco.momentum_norm(), 0.0);
+        assert_eq!(pier.warmup_accums, 1);
+    }
+
+    #[test]
+    fn warmup_momentum_matches_alg1() {
+        // Two accumulations with μ=0.9: M = μ(μ·0 + Δ1) + Δ2
+        let mut c = cfg(OptMode::Pier);
+        c.outer_momentum = 0.9;
+        let mut ctl = OuterController::new(&c, &[0.0]);
+        ctl.warmup_accumulate(10, &[1.0]); // Δ1 = 1 → M = 1
+        ctl.warmup_accumulate(20, &[3.0]); // Δ2 = 2 → M = 0.9 + 2 = 2.9
+        assert!((ctl.momentum_norm() - 2.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sync_averages_groups_and_moves_anchor() {
+        // μ=0 would need schedule override; instead verify the averaging +
+        // anchor movement algebra with the scheduled values.
+        let c = cfg(OptMode::DiLoCo); // fixed μ=0.9, lr=0.7
+        let mut ctl = OuterController::new(&c, &[0.0f32; 2]);
+        ctl.on_switch(&[0.0, 0.0]);
+        let g1 = vec![1.0f32, 3.0];
+        let g2 = vec![3.0f32, 1.0];
+        let mut stats = CommStats::default();
+        let r = ctl.sync(200, &[&g1, &g2], &mut stats);
+        // mean = [2,2], Δ = [2,2], M = Δ, update = lr·(μM + Δ) = 0.7·1.9·2
+        let expect = 0.7 * (0.9 * 2.0 + 2.0);
+        assert!((r.committed[0] - expect).abs() < 1e-5, "{}", r.committed[0]);
+        assert_eq!(stats.outer_allreduce_calls, 1);
+        assert_eq!(ctl.outer_steps, 1);
+    }
+
+    #[test]
+    fn offload_accounting_tracks_outer_steps() {
+        let mut c = cfg(OptMode::Pier);
+        c.cpu_offload = true;
+        let mut ctl = OuterController::new(&c, &[0.0f32; 100]);
+        let g = vec![0.5f32; 100];
+        let mut stats = CommStats::default();
+        ctl.sync(200, &[&g], &mut stats);
+        assert!(ctl.store.stats.bytes_to_host > 0.0);
+        assert!(ctl.store.stats.bytes_to_device > 0.0);
+        assert!(ctl.store.stats.sim_seconds > 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn adamw_mode_rejected() {
+        OuterController::new(&cfg(OptMode::AdamW), &[0.0]);
+    }
+
+    #[test]
+    fn partial_sync_full_fraction_matches_sync() {
+        let init = vec![0.0f32; 8];
+        let g1: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let g2: Vec<f32> = (0..8).map(|i| (i * 2) as f32).collect();
+        let mut a = OuterController::new(&cfg(OptMode::DiLoCo), &init);
+        let mut b = OuterController::new(&cfg(OptMode::DiLoCo), &init);
+        let mut s1 = CommStats::default();
+        let mut s2 = CommStats::default();
+        let full = a.sync(200, &[&g1, &g2], &mut s1);
+        let part = b.sync_partial(200, &[&g1, &g2], &mut s2); // fraction = 1.0
+        assert_eq!(part.lo, 0);
+        assert_eq!(part.hi, 8);
+        assert_eq!(full.next_start, part.fragment);
+        assert_eq!(s1.outer_allreduce_bytes, s2.outer_allreduce_bytes);
+    }
+
+    #[test]
+    fn partial_sync_rotates_and_halves_volume() {
+        let mut c = cfg(OptMode::Pier);
+        c.sync_fraction = 0.5;
+        let init = vec![0.0f32; 8];
+        let g = vec![1.0f32; 8];
+        let mut ctl = OuterController::new(&c, &init);
+        let mut stats = CommStats::default();
+        let p1 = ctl.sync_partial(300, &[&g], &mut stats);
+        assert_eq!((p1.lo, p1.hi), (0, 4));
+        assert_eq!(stats.outer_allreduce_bytes, 16.0); // 4 f32 = half of 8
+        let p2 = ctl.sync_partial(310, &[&g], &mut stats);
+        assert_eq!((p2.lo, p2.hi), (4, 8)); // rotation covers the rest
+        let p3 = ctl.sync_partial(320, &[&g], &mut stats);
+        assert_eq!(p3.lo, 0); // wrapped
+    }
+}

@@ -1,0 +1,180 @@
+//! Checkpointing: binary save/load of training state.
+//!
+//! Format: a JSON header line (magic, model, counts) followed by raw
+//! little-endian f32 blobs in a fixed order (params, m, v, outer momentum,
+//! outer anchor). Self-describing enough to be validated on load and small
+//! enough to keep the writer dependency-free.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+const MAGIC: &str = "pier-ckpt-v1";
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub model: String,
+    pub mode: String,
+    pub iteration: usize,
+    pub adam_t: u64,
+    pub params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    /// Outer-optimizer state (empty vectors for AdamW runs).
+    pub outer_momentum: Vec<f32>,
+    pub outer_anchor: Vec<f32>,
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let header = Json::obj(vec![
+            ("magic", Json::str(MAGIC)),
+            ("model", Json::str(&self.model)),
+            ("mode", Json::str(&self.mode)),
+            ("iteration", Json::num(self.iteration as f64)),
+            ("adam_t", Json::num(self.adam_t as f64)),
+            ("n_params", Json::num(self.params.len() as f64)),
+            ("n_outer", Json::num(self.outer_momentum.len() as f64)),
+        ]);
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating checkpoint {path:?}"))?;
+        writeln!(f, "{header}")?;
+        for blob in [&self.params, &self.m, &self.v, &self.outer_momentum, &self.outer_anchor] {
+            write_f32s(&mut f, blob)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening checkpoint {path:?}"))?;
+        let mut all = Vec::new();
+        f.read_to_end(&mut all)?;
+        let nl = all
+            .iter()
+            .position(|&b| b == b'\n')
+            .context("checkpoint missing header line")?;
+        let header = Json::parse(std::str::from_utf8(&all[..nl])?)
+            .map_err(|e| anyhow::anyhow!("checkpoint header: {e}"))?;
+        if header.get("magic").and_then(Json::as_str) != Some(MAGIC) {
+            bail!("not a pier checkpoint: {path:?}");
+        }
+        let n_params = header.get("n_params").and_then(Json::as_usize).unwrap_or(0);
+        let n_outer = header.get("n_outer").and_then(Json::as_usize).unwrap_or(0);
+        let mut rest = &all[nl + 1..];
+        let mut take = |n: usize| -> Result<Vec<f32>> {
+            let bytes = n * 4;
+            if rest.len() < bytes {
+                bail!("checkpoint truncated: wanted {bytes} bytes, have {}", rest.len());
+            }
+            let (head, tail) = rest.split_at(bytes);
+            rest = tail;
+            Ok(head
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect())
+        };
+        let params = take(n_params)?;
+        let m = take(n_params)?;
+        let v = take(n_params)?;
+        let outer_momentum = take(n_outer)?;
+        let outer_anchor = take(n_outer)?;
+        if !rest.is_empty() {
+            bail!("checkpoint has {} trailing bytes", rest.len());
+        }
+        Ok(Checkpoint {
+            model: header.get("model").and_then(Json::as_str).unwrap_or("").into(),
+            mode: header.get("mode").and_then(Json::as_str).unwrap_or("").into(),
+            iteration: header.get("iteration").and_then(Json::as_usize).unwrap_or(0),
+            adam_t: header.get("adam_t").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+            params,
+            m,
+            v,
+            outer_momentum,
+            outer_anchor,
+        })
+    }
+}
+
+fn write_f32s<W: Write>(w: &mut W, xs: &[f32]) -> std::io::Result<()> {
+    // chunked to avoid per-element syscalls
+    let mut buf = Vec::with_capacity(xs.len().min(1 << 16) * 4);
+    for chunk in xs.chunks(1 << 14) {
+        buf.clear();
+        for &x in chunk {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        w.write_all(&buf)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            model: "nano".into(),
+            mode: "pier".into(),
+            iteration: 123,
+            adam_t: 456,
+            params: vec![1.0, -2.5, 3.25],
+            m: vec![0.1, 0.2, 0.3],
+            v: vec![0.01, 0.02, 0.03],
+            outer_momentum: vec![9.0, 8.0, 7.0],
+            outer_anchor: vec![0.5, 0.5, 0.5],
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join(format!("pier-ckpt-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("a.ckpt");
+        let c = sample();
+        c.save(&path).unwrap();
+        let c2 = Checkpoint::load(&path).unwrap();
+        assert_eq!(c, c2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let dir = std::env::temp_dir().join(format!("pier-ckpt-tr-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("b.ckpt");
+        sample().save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 4]).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_wrong_magic() {
+        let dir = std::env::temp_dir().join(format!("pier-ckpt-mg-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.ckpt");
+        std::fs::write(&path, "{\"magic\":\"nope\"}\n").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn empty_outer_state_ok() {
+        let dir = std::env::temp_dir().join(format!("pier-ckpt-eo-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("d.ckpt");
+        let mut c = sample();
+        c.outer_momentum.clear();
+        c.outer_anchor.clear();
+        c.save(&path).unwrap();
+        let c2 = Checkpoint::load(&path).unwrap();
+        assert!(c2.outer_momentum.is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

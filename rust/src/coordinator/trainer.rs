@@ -1,0 +1,393 @@
+//! The training loop — Layer 3's event loop, Algorithm 2 end to end.
+//!
+//! One `Trainer` drives one optimizer arm (AdamW | DiLoCo | Pier) of one
+//! model config:
+//!
+//! * **Lazy-start phase** (`t < p·T`, DiLoCo/Pier): a single fully-
+//!   synchronized AdamW trajectory over the *global* batch (micro-batches
+//!   drawn round-robin from every group's shard, i.e. standard DP). Pier
+//!   additionally accumulates outer momentum every `H` steps (Alg. 1).
+//! * **Switch**: the trajectory is broadcast to all groups (params and
+//!   AdamW moments), the outer anchor is pinned.
+//! * **Inner phases** (`t ≥ p·T`): every group advances independently on
+//!   its own shard; every `H` steps the outer controller all-reduces the
+//!   deltas, applies Nesterov with the scheduled (μ, lr), and broadcasts
+//!   the restart point.
+//!
+//! On a GPU cluster the groups run concurrently; on this single-core host
+//! they are time-sliced, which changes wall-clock but not one bit of the
+//! math — runtime figures come from the cluster simulator instead.
+//!
+//! Perf note (EXPERIMENTS.md §Perf): group state lives as per-tensor PJRT
+//! literals in the step functions' native layout, so the inner loop passes
+//! borrows straight back into `execute` — flat f32 views are materialized
+//! only at outer syncs, evals, and checkpoints.
+
+use anyhow::{ensure, Context, Result};
+use xla::Literal;
+
+use crate::config::{OptMode, TrainConfig};
+use crate::coordinator::collective::{note_inner_allreduce, CommStats};
+use crate::coordinator::group::WorkerGroup;
+use crate::coordinator::outer::OuterController;
+use crate::data::{validation_batches, Pipeline};
+use crate::metrics::{CommStatsSnapshot, IterRecord, RunLog};
+use crate::optim::schedule;
+use crate::runtime::{scalar_f32, scalar_i32, to_scalar_f32, Manifest, ModelExes, Runtime};
+use crate::util::Timer;
+
+/// How many fixed validation batches each eval uses.
+const VAL_BATCHES: usize = 4;
+
+pub struct Trainer {
+    pub man: Manifest,
+    exes: ModelExes,
+    pub cfg: TrainConfig,
+    pub groups: Vec<WorkerGroup>,
+    pub outer: Option<OuterController>,
+    pub stats: CommStats,
+    val_batches: Vec<Vec<i32>>,
+    pub log: RunLog,
+}
+
+impl Trainer {
+    pub fn new(rt: &Runtime, man: Manifest, cfg: TrainConfig, pipe: &Pipeline) -> Result<Trainer> {
+        cfg_validate(&cfg, &man)?;
+        let exes = rt.load_model(&man).context("loading model executables")?;
+
+        // Device-side deterministic init — identical across arms per seed.
+        let n_groups = if cfg.mode == OptMode::AdamW { 1 } else { cfg.groups };
+        let mut groups = Vec::with_capacity(n_groups);
+        for g in 0..n_groups {
+            let init = exes.init_params.run(&[scalar_i32(cfg.seed as i32)])?;
+            let sampler = crate::data::Sampler::new(
+                pipe.train.clone(), g, n_groups, man.seq_len, cfg.seed);
+            groups.push(WorkerGroup::new(g, &man, init, sampler)?);
+        }
+
+        let outer = if cfg.mode == OptMode::AdamW {
+            None
+        } else {
+            let init_flat = groups[0].params_flat(&man)?;
+            Some(OuterController::new(&cfg, &init_flat))
+        };
+
+        let val_batches =
+            validation_batches(&pipe.val, man.micro_batch, man.seq_len, VAL_BATCHES);
+        ensure!(!val_batches.is_empty(), "validation set too small for a single batch");
+
+        let log = RunLog {
+            mode: cfg.mode.name().to_string(),
+            model: man.model_name.clone(),
+            switch_step: if cfg.mode == OptMode::AdamW { 0 } else { cfg.switch_step() },
+            ..Default::default()
+        };
+
+        Ok(Trainer { man, exes, cfg, groups, outer, stats: CommStats::default(), val_batches, log })
+    }
+
+    /// The committed global parameters right now (eval/checkpoint view).
+    pub fn global_params(&self) -> Result<Vec<f32>> {
+        self.groups[0].params_flat(&self.man)
+    }
+
+    /// Validation loss of an arbitrary flat parameter vector.
+    pub fn eval_params(&self, params: &[f32]) -> Result<f64> {
+        let p_lits = WorkerGroup::tensor_literals(&self.man, params)?;
+        let mut total = 0.0;
+        for batch in &self.val_batches {
+            let tok = WorkerGroup::token_literal(&self.man, batch)?;
+            let mut inputs: Vec<&Literal> = p_lits.iter().collect();
+            inputs.push(&tok);
+            let outs = self.exes.eval_step.run(&inputs)?;
+            total += to_scalar_f32(&outs[0])? as f64;
+        }
+        Ok(total / self.val_batches.len() as f64)
+    }
+
+    /// Per-position target log-probs for a token batch (downstream tasks).
+    pub fn score_batch(&self, params: &[f32], tokens: &[i32]) -> Result<Vec<f32>> {
+        let p_lits = WorkerGroup::tensor_literals(&self.man, params)?;
+        let tok = WorkerGroup::token_literal(&self.man, tokens)?;
+        let mut inputs: Vec<&Literal> = p_lits.iter().collect();
+        inputs.push(&tok);
+        let outs = self.exes.score_step.run(&inputs)?;
+        Ok(outs[0].to_vec::<f32>()?)
+    }
+
+    /// Split a step-function output tuple into (params, m, v) literal sets
+    /// and install them on group `gi`.
+    fn install_state(&mut self, gi: usize, mut outs: Vec<Literal>) {
+        let p = self.man.n_tensors();
+        outs.truncate(3 * p);
+        let v = outs.split_off(2 * p);
+        let m = outs.split_off(p);
+        let g = &mut self.groups[gi];
+        g.params = outs;
+        g.m = m;
+        g.v = v;
+    }
+
+    /// One fused inner step for group `gi` with a single micro-batch.
+    fn fused_step(&mut self, gi: usize, tokens: &[i32], lr: f64) -> Result<(f64, f64)> {
+        let p = self.man.n_tensors();
+        self.groups[gi].adam_t += 1;
+        let outs = {
+            let g = &self.groups[gi];
+            let tok = WorkerGroup::token_literal(&self.man, tokens)?;
+            let lr_l = scalar_f32(lr as f32);
+            let wd_l = scalar_f32(self.cfg.weight_decay as f32);
+            let t_l = scalar_f32(g.adam_t as f32);
+            let mut inputs: Vec<&Literal> = Vec::with_capacity(3 * p + 4);
+            inputs.extend(g.params.iter());
+            inputs.extend(g.m.iter());
+            inputs.extend(g.v.iter());
+            inputs.push(&tok);
+            inputs.push(&lr_l);
+            inputs.push(&wd_l);
+            inputs.push(&t_l);
+            self.exes.train_step.run(&inputs)?
+        };
+        let loss = to_scalar_f32(&outs[3 * p])? as f64;
+        let gnorm = to_scalar_f32(&outs[3 * p + 1])? as f64;
+        self.install_state(gi, outs);
+        Ok((loss, gnorm))
+    }
+
+    /// One inner step for group `gi` with gradient accumulation over the
+    /// provided micro-batches (Megatron-style: mean of micro-grads, single
+    /// fused clip+AdamW update).
+    fn accumulated_step(&mut self, gi: usize, micro: &[Vec<i32>], lr: f64) -> Result<(f64, f64)> {
+        let p = self.man.n_tensors();
+        if micro.len() == 1 {
+            return self.fused_step(gi, &micro[0], lr);
+        }
+        // 1. gradient accumulation (fwd/bwd per micro-batch)
+        let mut gsum = vec![0.0f32; self.man.n_params];
+        let mut gflat = vec![0.0f32; self.man.n_params];
+        let mut loss_sum = 0.0;
+        for tokens in micro {
+            let outs = {
+                let g = &self.groups[gi];
+                let tok = WorkerGroup::token_literal(&self.man, tokens)?;
+                let mut inputs: Vec<&Literal> = g.params.iter().collect();
+                inputs.push(&tok);
+                self.exes.grad_step.run(&inputs)?
+            };
+            WorkerGroup::write_back(&self.man, &outs, 0, &mut gflat)?;
+            for (a, b) in gsum.iter_mut().zip(&gflat) {
+                *a += b;
+            }
+            loss_sum += to_scalar_f32(&outs[p])? as f64;
+        }
+        let inv = 1.0 / micro.len() as f32;
+        for x in gsum.iter_mut() {
+            *x *= inv;
+        }
+        // 2. single fused clip+AdamW update
+        self.groups[gi].adam_t += 1;
+        let outs = {
+            let g = &self.groups[gi];
+            let grad_lits = WorkerGroup::tensor_literals(&self.man, &gsum)?;
+            let lr_l = scalar_f32(lr as f32);
+            let wd_l = scalar_f32(self.cfg.weight_decay as f32);
+            let t_l = scalar_f32(g.adam_t as f32);
+            let mut inputs: Vec<&Literal> = Vec::with_capacity(4 * p + 3);
+            inputs.extend(g.params.iter());
+            inputs.extend(g.m.iter());
+            inputs.extend(g.v.iter());
+            inputs.extend(grad_lits.iter());
+            inputs.push(&lr_l);
+            inputs.push(&wd_l);
+            inputs.push(&t_l);
+            self.exes.apply_step.run(&inputs)?
+        };
+        let gnorm = to_scalar_f32(&outs[3 * p])? as f64;
+        self.install_state(gi, outs);
+        Ok((loss_sum / micro.len() as f64, gnorm))
+    }
+
+    /// Advance group 0 by one fused inner step on a fresh micro-batch —
+    /// the bench/diagnostic entry point (returns (loss, gnorm)).
+    pub fn step_once(&mut self) -> Result<(f64, f64)> {
+        let lr = schedule::inner_lr(&self.cfg, self.groups[0].adam_t as usize);
+        let tokens = self.groups[0].sampler.next_batch(self.man.micro_batch);
+        self.fused_step(0, &tokens, lr)
+    }
+
+    /// Micro-batches for a fully-synchronized global step, drawn
+    /// round-robin across group shards (standard DP over all shards).
+    fn global_micro_batches(&mut self) -> Vec<Vec<i32>> {
+        let mb = self.man.micro_batch;
+        let n_micro = self.cfg.global_batch / mb;
+        let k = self.groups.len();
+        (0..n_micro).map(|j| self.groups[j % k].sampler.next_batch(mb)).collect()
+    }
+
+    /// Run the configured number of iterations. Returns the final run log.
+    pub fn run(&mut self) -> Result<&RunLog> {
+        let timer = Timer::start();
+        let t_total = self.cfg.iterations;
+        let switch = if self.cfg.mode == OptMode::AdamW { t_total } else { self.cfg.switch_step() };
+        let h = self.cfg.sync_interval;
+
+        // ---------------- Phase A: fully-synchronized AdamW ----------------
+        for t in 0..switch.min(t_total) {
+            let lr = schedule::inner_lr(&self.cfg, t);
+            let micro = self.global_micro_batches();
+            let (loss, gnorm) = self.accumulated_step(0, &micro, lr)?;
+            // DP all-reduce accounting: one gradient exchange over all ranks
+            note_inner_allreduce(self.man.n_params, &mut self.stats);
+            self.record(t, loss, lr, gnorm);
+
+            // Alg. 1: momentum warmup every H steps (Pier), anchor tracking
+            // (DiLoCo) — operates on the synchronized trajectory.
+            if (t + 1) % h == 0 && self.outer.is_some() {
+                let params = self.groups[0].params_flat(&self.man)?;
+                if let Some(outer) = self.outer.as_mut() {
+                    outer.warmup_accumulate(t, &params);
+                }
+            }
+            self.maybe_eval(t)?;
+        }
+
+        if switch < t_total && self.cfg.mode != OptMode::AdamW {
+            // ---------------- Switch: fork the groups ----------------
+            let src_p = self.groups[0].params_flat(&self.man)?;
+            let src_m = self.groups[0].m_flat(&self.man)?;
+            let src_v = self.groups[0].v_flat(&self.man)?;
+            let adam_t = self.groups[0].adam_t;
+            let k = self.groups.len();
+            for gi in 1..k {
+                let man = self.man.clone();
+                let g = &mut self.groups[gi];
+                g.set_params_flat(&man, &src_p)?;
+                g.set_m_flat(&man, &src_m)?;
+                g.set_v_flat(&man, &src_v)?;
+                g.adam_t = adam_t;
+            }
+            self.stats.broadcast_calls += 1;
+            self.stats.broadcast_bytes += 4.0 * (3 * src_p.len() * (k - 1)) as f64;
+            if let Some(outer) = self.outer.as_mut() {
+                outer.on_switch(&src_p);
+            }
+
+            // ---------------- Phase B: inner loops + outer steps ----------
+            let group_batch = self.cfg.group_batch();
+            let mb = self.man.micro_batch;
+            let n_micro = group_batch / mb;
+            for t in switch..t_total {
+                let lr = schedule::inner_lr(&self.cfg, t);
+                let mut loss_acc = 0.0;
+                let mut gnorm_acc = 0.0;
+                for gi in 0..self.groups.len() {
+                    let micro: Vec<Vec<i32>> =
+                        (0..n_micro).map(|_| self.groups[gi].sampler.next_batch(mb)).collect();
+                    let (loss, gnorm) = self.accumulated_step(gi, &micro, lr)?;
+                    loss_acc += loss;
+                    gnorm_acc += gnorm;
+                    // intra-group DP all-reduce (within fast links)
+                    note_inner_allreduce(self.man.n_params, &mut self.stats);
+                }
+                let kf = self.groups.len() as f64;
+                self.record(t, loss_acc / kf, lr, gnorm_acc / kf);
+
+                if (t + 1 - switch) % h == 0 || t + 1 == t_total {
+                    self.outer_sync(t)?;
+                }
+                self.maybe_eval(t)?;
+            }
+        }
+
+        // final eval
+        let final_params = self.global_params()?;
+        let final_loss = self.eval_params(&final_params)?;
+        self.log.val.push((t_total, final_loss));
+        self.log.comm = CommStatsSnapshot::from(&self.stats);
+        self.log.wall_secs = timer.secs();
+        Ok(&self.log)
+    }
+
+    /// Outer synchronization at iteration `t` (Alg. 2 lines 10–21; or the
+    /// streaming partial variant when `sync_fraction < 1`).
+    fn outer_sync(&mut self, t: usize) -> Result<()> {
+        let mut flats: Vec<Vec<f32>> = self
+            .groups
+            .iter()
+            .map(|g| g.params_flat(&self.man))
+            .collect::<Result<_>>()?;
+        let refs: Vec<&[f32]> = flats.iter().map(|f| f.as_slice()).collect();
+        let outer = self.outer.as_mut().expect("outer sync without outer optimizer");
+        let man = self.man.clone();
+        let k = self.groups.len();
+        if self.cfg.sync_fraction < 1.0 {
+            let part = outer.sync_partial(t, &refs, &mut self.stats);
+            for (g, flat) in self.groups.iter_mut().zip(flats.iter_mut()) {
+                flat[part.lo..part.hi].copy_from_slice(&part.fragment);
+                g.set_params_flat(&man, flat)?;
+            }
+            self.stats.broadcast_calls += 1;
+            self.stats.broadcast_bytes += 4.0 * (part.fragment.len() * k) as f64;
+        } else {
+            let result = outer.sync(t, &refs, &mut self.stats);
+            for g in self.groups.iter_mut() {
+                g.set_params_flat(&man, &result.next_start)?;
+            }
+            self.stats.broadcast_calls += 1;
+            self.stats.broadcast_bytes += 4.0 * (result.next_start.len() * k) as f64;
+        }
+        Ok(())
+    }
+
+    fn record(&mut self, t: usize, loss: f64, lr: f64, gnorm: f64) {
+        let (mu, olr) = match self.outer.as_ref() {
+            Some(o) => (o.last_mu, o.last_lr),
+            None => (0.0, 0.0),
+        };
+        if t % 25 == 0 || t + 1 == self.cfg.iterations {
+            crate::info!(
+                "[{}/{}] iter {t}/{} loss {loss:.4} lr {lr:.2e} gnorm {gnorm:.2}",
+                self.log.mode, self.log.model, self.cfg.iterations
+            );
+        }
+        self.log.iters.push(IterRecord { t, loss, lr, gnorm, mu, outer_lr: olr });
+    }
+
+    fn maybe_eval(&mut self, t: usize) -> Result<()> {
+        let every = self.cfg.eval_interval;
+        let at_switch = self.log.switch_step > 0 && (t + 1 == self.log.switch_step);
+        if (every > 0 && (t + 1) % every == 0) || at_switch {
+            let params = self.global_params()?;
+            let loss = self.eval_params(&params)?;
+            self.log.val.push((t + 1, loss));
+        }
+        Ok(())
+    }
+}
+
+fn cfg_validate(cfg: &TrainConfig, man: &Manifest) -> Result<()> {
+    ensure!(cfg.iterations > 0, "iterations must be positive");
+    ensure!(cfg.sync_interval > 0, "sync_interval must be positive");
+    ensure!(
+        cfg.global_batch % man.micro_batch == 0,
+        "global batch {} must be a multiple of the artifact micro-batch {}",
+        cfg.global_batch,
+        man.micro_batch
+    );
+    if cfg.mode != OptMode::AdamW {
+        ensure!(cfg.groups > 0, "groups must be positive");
+        ensure!(
+            cfg.global_batch % cfg.groups == 0,
+            "global batch {} must divide into {} groups",
+            cfg.global_batch,
+            cfg.groups
+        );
+        ensure!(
+            (cfg.global_batch / cfg.groups) % man.micro_batch == 0,
+            "group batch {} must be a multiple of micro-batch {}",
+            cfg.global_batch / cfg.groups,
+            man.micro_batch
+        );
+    }
+    Ok(())
+}

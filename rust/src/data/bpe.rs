@@ -1,0 +1,257 @@
+//! Byte-pair-encoding tokenizer substrate (trained from scratch, no files).
+//!
+//! Classic BPE over the word-type table (the GPT-2 training procedure):
+//! words are split into characters plus an end-of-word marker, and the most
+//! frequent adjacent symbol pair is merged repeatedly until the target
+//! vocabulary is reached. Training runs over *distinct* words weighted by
+//! frequency, so it is fast even for large corpora.
+//!
+//! Token id layout: `0 = <unk>`, `1 = <eod>` (document separator), then the
+//! base character symbols, then one id per merge, capped at `vocab_size`.
+
+use std::collections::HashMap;
+
+pub const UNK: i32 = 0;
+pub const EOD: i32 = 1;
+pub const N_SPECIAL: usize = 2;
+const EOW: char = '\u{17}'; // end-of-word sentinel (never in corpus text)
+
+#[derive(Clone, Debug)]
+pub struct Tokenizer {
+    /// Symbol table: id → string (specials included).
+    pub symbols: Vec<String>,
+    /// Merge ranks: (left, right) symbol ids → merged id, in training order.
+    merges: HashMap<(i32, i32), i32>,
+    /// Base character → id.
+    char_ids: HashMap<char, i32>,
+    /// Word-level encode cache (encode is called over a word stream).
+    cache: std::cell::RefCell<HashMap<String, Vec<i32>>>,
+}
+
+impl Tokenizer {
+    /// Train on `text` (whitespace/period-delimited words) to `vocab_size`.
+    pub fn train(text: &str, vocab_size: usize) -> Tokenizer {
+        assert!(vocab_size >= 64, "vocab too small");
+        // 1. word frequency table (punctuation becomes its own word)
+        let mut word_freq: HashMap<Vec<char>, usize> = HashMap::new();
+        for word in words_of(text) {
+            let mut chars: Vec<char> = word.chars().collect();
+            chars.push(EOW);
+            *word_freq.entry(chars).or_insert(0) += 1;
+        }
+
+        // 2. base symbols: every character seen (stable order: sorted)
+        let mut chars: Vec<char> = {
+            let mut set = std::collections::BTreeSet::new();
+            for w in word_freq.keys() {
+                set.extend(w.iter().copied());
+            }
+            set.into_iter().collect()
+        };
+        chars.sort_unstable();
+        let mut symbols: Vec<String> = vec!["<unk>".into(), "<eod>".into()];
+        let mut char_ids = HashMap::new();
+        for c in &chars {
+            char_ids.insert(*c, symbols.len() as i32);
+            symbols.push(c.to_string());
+        }
+
+        // 3. words as id sequences, weighted
+        let mut words: Vec<(Vec<i32>, usize)> = word_freq
+            .into_iter()
+            .map(|(cs, f)| (cs.iter().map(|c| char_ids[c]).collect(), f))
+            .collect();
+        words.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0))); // determinism
+
+        // 4. merge loop
+        let mut merges = HashMap::new();
+        while symbols.len() < vocab_size {
+            let mut pair_counts: HashMap<(i32, i32), usize> = HashMap::new();
+            for (w, f) in &words {
+                for pair in w.windows(2) {
+                    *pair_counts.entry((pair[0], pair[1])).or_insert(0) += f;
+                }
+            }
+            // deterministic argmax: highest count, then lowest ids
+            let Some((&best, &count)) = pair_counts
+                .iter()
+                .max_by(|a, b| a.1.cmp(b.1).then_with(|| b.0.cmp(a.0)))
+            else {
+                break;
+            };
+            if count < 2 {
+                break; // nothing worth merging
+            }
+            let new_id = symbols.len() as i32;
+            let merged = format!(
+                "{}{}",
+                symbols[best.0 as usize], symbols[best.1 as usize]
+            );
+            symbols.push(merged);
+            merges.insert(best, new_id);
+            for (w, _) in words.iter_mut() {
+                apply_merge(w, best, new_id);
+            }
+        }
+
+        Tokenizer { symbols, merges, char_ids, cache: Default::default() }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.symbols.len()
+    }
+
+    fn encode_word(&self, word: &str) -> Vec<i32> {
+        if let Some(hit) = self.cache.borrow().get(word) {
+            return hit.clone();
+        }
+        let mut ids: Vec<i32> = word
+            .chars()
+            .chain(std::iter::once(EOW))
+            .map(|c| self.char_ids.get(&c).copied().unwrap_or(UNK))
+            .collect();
+        // apply merges greedily by rank (lowest merged id first = training order)
+        loop {
+            let mut best: Option<(usize, i32)> = None; // (pos, merged_id)
+            for i in 0..ids.len().saturating_sub(1) {
+                if let Some(&m) = self.merges.get(&(ids[i], ids[i + 1])) {
+                    if best.map(|(_, b)| m < b).unwrap_or(true) {
+                        best = Some((i, m));
+                    }
+                }
+            }
+            match best {
+                Some((i, m)) => {
+                    ids[i] = m;
+                    ids.remove(i + 1);
+                }
+                None => break,
+            }
+        }
+        self.cache.borrow_mut().insert(word.to_string(), ids.clone());
+        ids
+    }
+
+    /// Encode text; `\n` document boundaries become `EOD` tokens.
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        let mut out = Vec::with_capacity(text.len() / 3);
+        for line in text.split('\n') {
+            for word in words_of(line) {
+                out.extend(self.encode_word(word));
+            }
+            out.push(EOD);
+        }
+        out.pop(); // no trailing EOD after the last line
+        out
+    }
+
+    /// Decode (lossy across unknowns; exact otherwise).
+    pub fn decode(&self, tokens: &[i32]) -> String {
+        let mut s = String::new();
+        for &t in tokens {
+            match t {
+                EOD => s.push('\n'),
+                UNK => s.push('\u{fffd}'),
+                t if (t as usize) < self.symbols.len() => {
+                    s.push_str(&self.symbols[t as usize]);
+                }
+                _ => s.push('\u{fffd}'),
+            }
+        }
+        // end-of-word sentinels become spaces (trim word-final ones at
+        // punctuation and line ends)
+        let mut out = String::with_capacity(s.len());
+        let mut chars = s.chars().peekable();
+        while let Some(c) = chars.next() {
+            if c == EOW {
+                match chars.peek() {
+                    Some('.') | Some('\n') | None => {}
+                    _ => out.push(' '),
+                }
+            } else {
+                out.push(c);
+            }
+        }
+        out
+    }
+}
+
+/// Word iterator: alphanumeric runs and single punctuation marks.
+fn words_of(text: &str) -> impl Iterator<Item = &str> {
+    text.split_inclusive(['.', ' '])
+        .flat_map(|chunk| {
+            let chunk = chunk.trim_end_matches(' ');
+            if let Some(stripped) = chunk.strip_suffix('.') {
+                vec![stripped, "."].into_iter()
+            } else {
+                vec![chunk].into_iter()
+            }
+        })
+        .filter(|w| !w.is_empty())
+}
+
+fn apply_merge(w: &mut Vec<i32>, pair: (i32, i32), new_id: i32) {
+    let mut i = 0;
+    while i + 1 < w.len() {
+        if w[i] == pair.0 && w[i + 1] == pair.1 {
+            w[i] = new_id;
+            w.remove(i + 1);
+        } else {
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TEXT: &str = "kato rina kato suve. rina kato duna.\nkato kato rina suve.";
+
+    #[test]
+    fn train_and_roundtrip() {
+        let tok = Tokenizer::train(TEXT, 96);
+        let ids = tok.encode(TEXT);
+        assert!(!ids.is_empty());
+        assert!(ids.contains(&EOD));
+        let decoded = tok.decode(&ids);
+        assert_eq!(decoded, TEXT);
+    }
+
+    #[test]
+    fn frequent_words_become_single_tokens() {
+        let tok = Tokenizer::train(TEXT, 128);
+        let ids = tok.encode("kato");
+        assert_eq!(ids.len(), 1, "most frequent word should merge fully: {ids:?}");
+    }
+
+    #[test]
+    fn vocab_bounded() {
+        let tok = Tokenizer::train(TEXT, 64);
+        assert!(tok.vocab_size() <= 64);
+        assert!(tok.vocab_size() > N_SPECIAL);
+    }
+
+    #[test]
+    fn unknown_chars_map_to_unk() {
+        let tok = Tokenizer::train(TEXT, 96);
+        let ids = tok.encode("XYZ");
+        assert!(ids.iter().any(|&t| t == UNK));
+    }
+
+    #[test]
+    fn deterministic_training() {
+        let a = Tokenizer::train(TEXT, 96);
+        let b = Tokenizer::train(TEXT, 96);
+        assert_eq!(a.symbols, b.symbols);
+        assert_eq!(a.encode(TEXT), b.encode(TEXT));
+    }
+
+    #[test]
+    fn all_ids_in_range() {
+        let tok = Tokenizer::train(TEXT, 96);
+        for &t in &tok.encode(TEXT) {
+            assert!((t as usize) < tok.vocab_size());
+        }
+    }
+}

@@ -1,0 +1,302 @@
+//! Synthetic pretraining corpus — the OpenWebText substitution (DESIGN.md §3).
+//!
+//! A deterministic generative "language" with the statistical properties the
+//! convergence experiments need:
+//!
+//! * **Zipf unigram law** — word frequencies follow Zipf(1.0) within each
+//!   part-of-speech class, like natural text.
+//! * **Local syntax** — sentences instantiate templates over six
+//!   part-of-speech classes, so the next token is genuinely predictable and
+//!   a trained LM's loss drops well below `log V`.
+//! * **Topic structure** — each document draws a topic that re-weights the
+//!   noun/verb distributions, giving document-level long-range signal (what
+//!   makes larger models/batches matter).
+//! * **Compositional orthography** — words are built from a shared syllable
+//!   inventory, so the BPE tokenizer has real subword structure to learn.
+//!
+//! Everything is a pure function of the seed: every rank regenerates an
+//! identical corpus without any data files (the broadcast-at-start of DP
+//! training is replaced by seed agreement).
+
+use crate::util::rng::{Pcg64, Zipf};
+
+const SYLLABLES: &[&str] = &[
+    "ka", "to", "ri", "na", "su", "mo", "ve", "la", "chi", "pe", "ra", "du",
+    "en", "go", "sha", "li", "tu", "ba", "ne", "ko", "mi", "za", "fe", "or",
+];
+
+/// Part-of-speech classes (index into `Vocab::pos`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pos {
+    Det = 0,
+    Noun = 1,
+    Verb = 2,
+    Adj = 3,
+    Adv = 4,
+    Conj = 5,
+}
+
+/// Sentence templates (sequence of POS slots). Weighted toward simple
+/// SVO-like shapes.
+const TEMPLATES: &[&[Pos]] = &[
+    &[Pos::Det, Pos::Noun, Pos::Verb, Pos::Det, Pos::Adj, Pos::Noun],
+    &[Pos::Det, Pos::Adj, Pos::Noun, Pos::Verb, Pos::Adv],
+    &[Pos::Noun, Pos::Verb, Pos::Det, Pos::Noun],
+    &[Pos::Det, Pos::Noun, Pos::Adv, Pos::Verb, Pos::Det, Pos::Noun, Pos::Conj,
+      Pos::Det, Pos::Noun, Pos::Verb],
+    &[Pos::Adv, Pos::Det, Pos::Noun, Pos::Verb, Pos::Adj, Pos::Noun],
+];
+
+pub struct CorpusSpec {
+    pub seed: u64,
+    /// Distinct word types per POS class: (det, noun, verb, adj, adv, conj).
+    pub class_sizes: [usize; 6],
+    pub n_topics: usize,
+    /// Sentences per document (uniform in range).
+    pub doc_sentences: (usize, usize),
+    pub n_docs: usize,
+}
+
+impl Default for CorpusSpec {
+    fn default() -> Self {
+        CorpusSpec {
+            seed: 20250710,
+            class_sizes: [8, 600, 300, 200, 80, 12],
+            n_topics: 16,
+            doc_sentences: (4, 12),
+            n_docs: 2000,
+        }
+    }
+}
+
+pub struct CorpusGen {
+    words: [Vec<String>; 6],
+    zipfs: [Zipf; 6],
+    /// topic → multiplicative boost per noun index (sparse: boosted subset).
+    topic_noun_boost: Vec<Vec<f64>>,
+    topic_verb_boost: Vec<Vec<f64>>,
+    spec: CorpusSpec,
+}
+
+fn make_word(rng: &mut Pcg64, min_syl: usize, max_syl: usize) -> String {
+    let n = min_syl + rng.below((max_syl - min_syl + 1) as u64) as usize;
+    let mut w = String::new();
+    for _ in 0..n {
+        w.push_str(SYLLABLES[rng.below(SYLLABLES.len() as u64) as usize]);
+    }
+    w
+}
+
+impl CorpusGen {
+    pub fn new(spec: CorpusSpec) -> CorpusGen {
+        let mut rng = Pcg64::new(spec.seed, 0xC0);
+        let mut words: [Vec<String>; 6] = Default::default();
+        for (class, size) in spec.class_sizes.iter().enumerate() {
+            let (lo, hi) = match class {
+                0 | 5 => (1, 1), // determiners/conjunctions are short
+                4 => (1, 2),
+                _ => (2, 4),
+            };
+            let mut seen = std::collections::HashSet::new();
+            while words[class].len() < *size {
+                let w = make_word(&mut rng, lo, hi);
+                if seen.insert(w.clone()) {
+                    words[class].push(w);
+                }
+            }
+        }
+        let zipfs = [
+            Zipf::new(spec.class_sizes[0], 1.0),
+            Zipf::new(spec.class_sizes[1], 1.0),
+            Zipf::new(spec.class_sizes[2], 1.0),
+            Zipf::new(spec.class_sizes[3], 1.0),
+            Zipf::new(spec.class_sizes[4], 1.0),
+            Zipf::new(spec.class_sizes[5], 1.0),
+        ];
+        // Each topic boosts a random 1/8 of nouns and verbs 8×.
+        let mut topic_noun_boost = Vec::new();
+        let mut topic_verb_boost = Vec::new();
+        for _ in 0..spec.n_topics {
+            let mut nb = vec![1.0; spec.class_sizes[1]];
+            for b in nb.iter_mut() {
+                if rng.f64() < 0.125 {
+                    *b = 8.0;
+                }
+            }
+            let mut vb = vec![1.0; spec.class_sizes[2]];
+            for b in vb.iter_mut() {
+                if rng.f64() < 0.125 {
+                    *b = 8.0;
+                }
+            }
+            topic_noun_boost.push(nb);
+            topic_verb_boost.push(vb);
+        }
+        CorpusGen { words, zipfs, topic_noun_boost, topic_verb_boost, spec }
+    }
+
+    fn sample_word(&self, rng: &mut Pcg64, pos: Pos, topic: usize) -> &str {
+        let class = pos as usize;
+        // Zipf base draw with topic-boost rejection resampling for
+        // nouns/verbs: accept boosted words always, unboosted with p=1/8.
+        let idx = loop {
+            let i = self.zipfs[class].sample(rng);
+            let boost = match pos {
+                Pos::Noun => self.topic_noun_boost[topic][i],
+                Pos::Verb => self.topic_verb_boost[topic][i],
+                _ => break i,
+            };
+            if boost > 1.0 || rng.f64() < 0.125 {
+                break i;
+            }
+        };
+        &self.words[class][idx]
+    }
+
+    fn sentence(&self, rng: &mut Pcg64, topic: usize, out: &mut String) {
+        let tmpl = TEMPLATES[rng.weighted(&[3.0, 3.0, 4.0, 1.0, 2.0])];
+        for (i, &pos) in tmpl.iter().enumerate() {
+            if i > 0 {
+                out.push(' ');
+            }
+            out.push_str(self.sample_word(rng, pos, topic));
+        }
+        out.push('.');
+    }
+
+    /// Generate document `doc_id` (independent of all other documents —
+    /// this is what makes sharding trivially deterministic).
+    pub fn document(&self, doc_id: usize) -> String {
+        let mut rng = Pcg64::new(self.spec.seed ^ 0xD0C5, doc_id as u64 + 1);
+        let topic = rng.below(self.spec.n_topics as u64) as usize;
+        let (lo, hi) = self.spec.doc_sentences;
+        let n = lo + rng.below((hi - lo + 1) as u64) as usize;
+        let mut doc = String::new();
+        for s in 0..n {
+            if s > 0 {
+                doc.push(' ');
+            }
+            self.sentence(&mut rng, topic, &mut doc);
+        }
+        doc
+    }
+
+    /// The full corpus as one string with `\n` document separators.
+    pub fn corpus(&self) -> String {
+        let mut text = String::new();
+        for d in 0..self.spec.n_docs {
+            if d > 0 {
+                text.push('\n');
+            }
+            text.push_str(&self.document(d));
+        }
+        text
+    }
+
+    pub fn n_docs(&self) -> usize {
+        self.spec.n_docs
+    }
+
+    // ---- accessors for the downstream-task generators (evalsuite) ----
+
+    /// Word string by POS class and index.
+    pub fn word(&self, pos: Pos, idx: usize) -> &str {
+        &self.words[pos as usize][idx]
+    }
+
+    pub fn n_words(&self, pos: Pos) -> usize {
+        self.words[pos as usize].len()
+    }
+
+    pub fn n_topics(&self) -> usize {
+        self.spec.n_topics
+    }
+
+    /// Indices of the nouns a topic boosts (its "domain vocabulary").
+    pub fn topic_nouns(&self, topic: usize) -> Vec<usize> {
+        self.topic_noun_boost[topic]
+            .iter()
+            .enumerate()
+            .filter(|(_, &b)| b > 1.0)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Public sentence generation for the eval-suite generators: one
+    /// template-grammatical sentence on `topic`, appended to `out`.
+    pub fn gen_sentence(&self, rng: &mut Pcg64, topic: usize, out: &mut String) {
+        self.sentence(rng, topic, out)
+    }
+
+    /// A grammatical word for a POS slot under a topic (Zipf+boost draw).
+    pub fn gen_word(&self, rng: &mut Pcg64, pos: Pos, topic: usize) -> String {
+        self.sample_word(rng, pos, topic).to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> CorpusGen {
+        CorpusGen::new(CorpusSpec { n_docs: 50, ..Default::default() })
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = small().corpus();
+        let b = small().corpus();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn documents_independent_of_count() {
+        let g1 = CorpusGen::new(CorpusSpec { n_docs: 10, ..Default::default() });
+        let g2 = CorpusGen::new(CorpusSpec { n_docs: 500, ..Default::default() });
+        assert_eq!(g1.document(3), g2.document(3));
+    }
+
+    #[test]
+    fn sentences_end_with_period() {
+        let doc = small().document(0);
+        assert!(doc.ends_with('.'));
+        assert!(doc.split('.').count() >= 4);
+    }
+
+    #[test]
+    fn zipf_head_dominates() {
+        let g = small();
+        let text = g.corpus();
+        let mut counts = std::collections::HashMap::new();
+        for w in text.split([' ', '.', '\n']).filter(|w| !w.is_empty()) {
+            *counts.entry(w).or_insert(0usize) += 1;
+        }
+        let mut freqs: Vec<usize> = counts.values().copied().collect();
+        freqs.sort_unstable_by(|a, b| b.cmp(a));
+        // top word much more frequent than the 50th
+        assert!(freqs[0] > freqs.get(49).copied().unwrap_or(0) * 5);
+    }
+
+    #[test]
+    fn topics_shift_vocabulary() {
+        // Documents with different topics should overlap less than documents
+        // with the same topic structure (statistical smoke test).
+        let g = small();
+        let words = |d: usize| -> std::collections::HashSet<String> {
+            g.document(d).split([' ', '.']).filter(|w| !w.is_empty())
+                .map(str::to_string).collect()
+        };
+        let a = words(0);
+        let mut min_j = f64::MAX;
+        let mut max_j: f64 = 0.0;
+        for d in 1..20 {
+            let b = words(d);
+            let inter = a.intersection(&b).count() as f64;
+            let union = a.union(&b).count() as f64;
+            let j = inter / union;
+            min_j = min_j.min(j);
+            max_j = max_j.max(j);
+        }
+        assert!(max_j > min_j, "topic structure should vary overlap");
+    }
+}

@@ -1,0 +1,195 @@
+//! Token datasets: packing, train/val split, per-group sharding, batching.
+//!
+//! The token stream (corpus → BPE) is packed densely; training batches are
+//! random windows of `seq_len + 1` tokens drawn from the sampler's shard
+//! (the +1 supplies next-token targets, matching the artifact's
+//! `tokens:i32[B,T+1]` signature). Each DiLoCo/Pier group samples from its
+//! own *disjoint contiguous shard* with its own PRNG stream, so runs are
+//! reproducible for any group count and no two groups ever see the same
+//! window — the Megatron data-sharding contract.
+
+use crate::util::rng::Pcg64;
+
+#[derive(Clone)]
+pub struct TokenDataset {
+    pub tokens: Vec<i32>,
+}
+
+impl TokenDataset {
+    pub fn new(tokens: Vec<i32>) -> TokenDataset {
+        TokenDataset { tokens }
+    }
+
+    /// Split off the last `val_frac` as a validation set.
+    pub fn split(self, val_frac: f64) -> (TokenDataset, TokenDataset) {
+        let n = self.tokens.len();
+        let cut = ((1.0 - val_frac) * n as f64) as usize;
+        let (train, val) = self.tokens.split_at(cut);
+        (TokenDataset::new(train.to_vec()), TokenDataset::new(val.to_vec()))
+    }
+
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    /// Contiguous shard bounds for `shard` of `n_shards`.
+    pub fn shard_bounds(&self, shard: usize, n_shards: usize) -> (usize, usize) {
+        assert!(shard < n_shards);
+        let n = self.tokens.len();
+        (shard * n / n_shards, (shard + 1) * n / n_shards)
+    }
+
+    /// Sequential non-overlapping windows (validation/eval path).
+    pub fn sequential_windows(&self, seq_len: usize) -> Vec<&[i32]> {
+        self.tokens.chunks_exact(seq_len + 1).collect()
+    }
+}
+
+/// Random-window batch sampler over one shard of a dataset.
+pub struct Sampler {
+    data: std::sync::Arc<TokenDataset>,
+    lo: usize,
+    hi: usize,
+    rng: Pcg64,
+    pub seq_len: usize,
+}
+
+impl Sampler {
+    /// `stream` disambiguates groups: `(seed, group_id)` → independent,
+    /// reproducible streams.
+    pub fn new(
+        data: std::sync::Arc<TokenDataset>,
+        shard: usize,
+        n_shards: usize,
+        seq_len: usize,
+        seed: u64,
+    ) -> Sampler {
+        let (lo, hi) = data.shard_bounds(shard, n_shards);
+        assert!(
+            hi - lo > seq_len + 1,
+            "shard {shard}/{n_shards} too small: {} tokens for seq_len {seq_len}",
+            hi - lo
+        );
+        Sampler { data, lo, hi, rng: Pcg64::new(seed, shard as u64 + 1), seq_len }
+    }
+
+    /// One batch of `b` windows, flattened row-major to `b × (seq_len+1)`.
+    pub fn next_batch(&mut self, b: usize) -> Vec<i32> {
+        let t1 = self.seq_len + 1;
+        let span = self.hi - self.lo - t1;
+        let mut out = Vec::with_capacity(b * t1);
+        for _ in 0..b {
+            let start = self.lo + self.rng.below(span as u64 + 1) as usize;
+            out.extend_from_slice(&self.data.tokens[start..start + t1]);
+        }
+        out
+    }
+}
+
+/// Fixed validation batches: deterministic, sequential, truncated to full
+/// batches (identical across optimizer arms so losses are comparable).
+pub fn validation_batches(val: &TokenDataset, b: usize, seq_len: usize, max_batches: usize)
+    -> Vec<Vec<i32>>
+{
+    let windows = val.sequential_windows(seq_len);
+    let mut out = Vec::new();
+    for chunk in windows.chunks_exact(b).take(max_batches) {
+        let mut batch = Vec::with_capacity(b * (seq_len + 1));
+        for w in chunk {
+            batch.extend_from_slice(w);
+        }
+        out.push(batch);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn ds(n: usize) -> TokenDataset {
+        TokenDataset::new((0..n as i32).collect())
+    }
+
+    #[test]
+    fn split_preserves_tokens() {
+        let (train, val) = ds(1000).split(0.1);
+        assert_eq!(train.len(), 900);
+        assert_eq!(val.len(), 100);
+        assert_eq!(train.tokens[899], 899);
+        assert_eq!(val.tokens[0], 900);
+    }
+
+    #[test]
+    fn shards_partition_exactly() {
+        let d = ds(1003);
+        let k = 7;
+        let mut covered = 0;
+        let mut prev_hi = 0;
+        for s in 0..k {
+            let (lo, hi) = d.shard_bounds(s, k);
+            assert_eq!(lo, prev_hi, "shards must be contiguous");
+            covered += hi - lo;
+            prev_hi = hi;
+        }
+        assert_eq!(covered, 1003);
+        assert_eq!(prev_hi, 1003);
+    }
+
+    #[test]
+    fn sampler_stays_in_shard() {
+        let d = Arc::new(ds(10_000));
+        let mut s = Sampler::new(d.clone(), 2, 4, 16, 42);
+        let (lo, hi) = d.shard_bounds(2, 4);
+        for _ in 0..50 {
+            let batch = s.next_batch(4);
+            assert_eq!(batch.len(), 4 * 17);
+            for &t in &batch {
+                assert!((t as usize) >= lo && (t as usize) < hi);
+            }
+            // windows are contiguous runs
+            for row in batch.chunks(17) {
+                for i in 1..row.len() {
+                    assert_eq!(row[i], row[i - 1] + 1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sampler_deterministic_per_seed_and_shard() {
+        let d = Arc::new(ds(10_000));
+        let b1 = Sampler::new(d.clone(), 0, 2, 16, 7).next_batch(8);
+        let b2 = Sampler::new(d.clone(), 0, 2, 16, 7).next_batch(8);
+        let b3 = Sampler::new(d.clone(), 1, 2, 16, 7).next_batch(8);
+        let b4 = Sampler::new(d.clone(), 0, 2, 16, 8).next_batch(8);
+        assert_eq!(b1, b2);
+        assert_ne!(b1, b3);
+        assert_ne!(b1, b4);
+    }
+
+    #[test]
+    fn validation_batches_deterministic_and_full() {
+        let d = ds(1000);
+        let batches = validation_batches(&d, 4, 16, 100);
+        assert!(!batches.is_empty());
+        for b in &batches {
+            assert_eq!(b.len(), 4 * 17);
+        }
+        // non-overlapping sequential coverage
+        assert_eq!(batches[0][0], 0);
+        assert_eq!(batches[0][17], 17);
+    }
+
+    #[test]
+    #[should_panic]
+    fn tiny_shard_rejected() {
+        let d = Arc::new(ds(64));
+        Sampler::new(d, 0, 8, 32, 1);
+    }
+}

@@ -1,0 +1,53 @@
+//! Data pipeline: synthetic corpus → BPE tokenizer → packed, sharded
+//! token datasets (the OpenWebText + Megatron-dataloader substitution).
+
+pub mod bpe;
+pub mod corpus;
+pub mod dataset;
+
+pub use bpe::Tokenizer;
+pub use corpus::{CorpusGen, CorpusSpec};
+pub use dataset::{validation_batches, Sampler, TokenDataset};
+
+use std::sync::Arc;
+
+/// Everything the trainer needs: tokenizer + train/val token streams.
+pub struct Pipeline {
+    pub tokenizer: Tokenizer,
+    pub train: Arc<TokenDataset>,
+    pub val: TokenDataset,
+}
+
+/// Build the full pipeline for a model vocabulary size. `n_docs` scales the
+/// corpus; the trainable analogs use a few thousand documents (~1 M tokens).
+pub fn build_pipeline(vocab_size: usize, n_docs: usize, seed: u64) -> Pipeline {
+    let gen = CorpusGen::new(CorpusSpec { n_docs, seed, ..Default::default() });
+    let text = gen.corpus();
+    let tokenizer = Tokenizer::train(&text, vocab_size);
+    let tokens = tokenizer.encode(&text);
+    let (train, val) = TokenDataset::new(tokens).split(0.05);
+    Pipeline { tokenizer, train: Arc::new(train), val }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pipeline_end_to_end() {
+        let p = build_pipeline(512, 100, 7);
+        assert!(p.tokenizer.vocab_size() <= 512);
+        assert!(p.train.len() > 10 * p.val.len() / 2);
+        assert!(!p.val.is_empty());
+        for &t in p.train.tokens.iter().take(5000) {
+            assert!((t as usize) < p.tokenizer.vocab_size());
+        }
+    }
+
+    #[test]
+    fn pipeline_deterministic() {
+        let a = build_pipeline(512, 50, 7);
+        let b = build_pipeline(512, 50, 7);
+        assert_eq!(a.train.tokens, b.train.tokens);
+    }
+}

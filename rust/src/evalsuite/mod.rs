@@ -1,0 +1,82 @@
+//! Downstream-task evaluation: the paper's thirteen-task suite (Table II)
+//! as synthetic analogs + the multiple-choice scoring harness.
+
+pub mod scoring;
+pub mod tasks;
+
+pub use scoring::{aggregate, score_examples, Scorer};
+pub use tasks::{Example, Metric, TaskGen, TaskSpec, TASKS};
+
+use anyhow::Result;
+
+use crate::data::bpe::EOD;
+use crate::data::{CorpusGen, Tokenizer};
+
+/// One task's result.
+#[derive(Clone, Debug)]
+pub struct TaskResult {
+    pub name: &'static str,
+    pub metric: Metric,
+    pub value: f64,
+}
+
+/// Run the full thirteen-task suite against a scorer.
+pub fn run_suite<S: Scorer>(
+    scorer: &S,
+    corpus: &CorpusGen,
+    tok: &Tokenizer,
+    seed: u64,
+) -> Result<Vec<TaskResult>> {
+    let gen = TaskGen { corpus, tok, seed };
+    let mut out = Vec::with_capacity(TASKS.len());
+    for spec in TASKS {
+        let examples = gen.generate(spec.name);
+        let picks = score_examples(scorer, &examples, EOD)?;
+        let value = aggregate(spec.metric, &examples, &picks);
+        out.push(TaskResult { name: spec.name, metric: spec.metric, value });
+    }
+    Ok(out)
+}
+
+/// Mean score across the suite (the "N tasks ≥ baseline" comparisons in
+/// Tables II–IV use per-task values; the mean is a convenient scalar).
+pub fn suite_mean(results: &[TaskResult]) -> f64 {
+    results.iter().map(|r| r.value).sum::<f64>() / results.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{CorpusGen, CorpusSpec, Tokenizer};
+
+    /// Uniform scorer → all tasks land at chance level.
+    struct Uniform;
+
+    impl Scorer for Uniform {
+        fn batch(&self) -> usize {
+            4
+        }
+        fn seq_len(&self) -> usize {
+            64
+        }
+        fn score(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+            Ok(vec![-1.0; (tokens.len() / 65) * 64])
+        }
+    }
+
+    #[test]
+    fn suite_runs_and_uniform_is_chancey() {
+        let corpus = CorpusGen::new(CorpusSpec { n_docs: 60, ..Default::default() });
+        let tok = Tokenizer::train(&corpus.corpus(), 512);
+        let results = run_suite(&Uniform, &corpus, &tok, 3).unwrap();
+        assert_eq!(results.len(), 13);
+        for r in &results {
+            assert!((0.0..=1.0).contains(&r.value), "{}: {}", r.name, r.value);
+        }
+        // Uniform scorer always picks choice 0 (ties) → accuracy ≈ P(gold=0).
+        let acc_tasks: Vec<_> =
+            results.iter().filter(|r| r.metric == Metric::Accuracy).collect();
+        let mean = acc_tasks.iter().map(|r| r.value).sum::<f64>() / acc_tasks.len() as f64;
+        assert!(mean > 0.1 && mean < 0.75, "chance-level mean: {mean}");
+    }
+}

@@ -1,0 +1,215 @@
+//! Multiple-choice scoring harness.
+//!
+//! Standard LM-eval methodology (what lm-evaluation-harness does for the
+//! paper's thirteen tasks): append each choice to the context, score the
+//! choice tokens' summed log-probability under the model, length-normalize,
+//! and pick the argmax. Sequences are packed into the artifact's fixed
+//! `B×(T+1)` token shape; positions outside the real sequence are padded
+//! and masked out of the sum.
+
+use anyhow::Result;
+
+use super::tasks::{Example, Metric};
+
+/// Batched scorer: `tokens` is a flat `B×(T+1)` buffer; returns `B×T`
+/// per-position target log-probs (`out[b,i] = log p(tok[b,i+1] | tok[b,:i+1])`).
+pub trait Scorer {
+    fn batch(&self) -> usize;
+    fn seq_len(&self) -> usize;
+    fn score(&self, tokens: &[i32]) -> Result<Vec<f32>>;
+}
+
+/// One scoring request: a packed sequence plus the half-open target range
+/// (in score-output coordinates) to sum.
+struct Request {
+    tokens: Vec<i32>,
+    lo: usize,
+    hi: usize,
+    norm: f64,
+    example: usize,
+    choice: usize,
+}
+
+/// Score every (example, choice) pair; returns per-example chosen index.
+pub fn score_examples<S: Scorer>(scorer: &S, examples: &[Example], pad: i32)
+    -> Result<Vec<usize>>
+{
+    let b = scorer.batch();
+    let t1 = scorer.seq_len() + 1;
+
+    let mut requests = Vec::new();
+    for (ei, ex) in examples.iter().enumerate() {
+        for (ci, choice) in ex.choices.iter().enumerate() {
+            // Keep the choice fully inside the window: truncate the context
+            // from the left if needed.
+            let max_ctx = t1.saturating_sub(choice.len() + 1).max(1);
+            let ctx = if ex.context.len() > max_ctx {
+                &ex.context[ex.context.len() - max_ctx..]
+            } else {
+                &ex.context[..]
+            };
+            let mut tokens = Vec::with_capacity(t1);
+            tokens.extend_from_slice(ctx);
+            let lo = tokens.len() - 1; // score[i] predicts tokens[i+1]
+            tokens.extend_from_slice(choice);
+            let hi = (tokens.len() - 1).min(t1 - 1);
+            tokens.resize(t1, pad);
+            requests.push(Request {
+                tokens,
+                lo,
+                hi,
+                norm: choice.len().max(1) as f64,
+                example: ei,
+                choice: ci,
+            });
+        }
+    }
+
+    // score matrix: per example, per choice
+    let mut scores: Vec<Vec<f64>> =
+        examples.iter().map(|e| vec![f64::NEG_INFINITY; e.choices.len()]).collect();
+
+    for chunk in requests.chunks(b) {
+        let mut flat = Vec::with_capacity(b * t1);
+        for r in chunk {
+            flat.extend_from_slice(&r.tokens);
+        }
+        // pad the batch with copies of the first request
+        for _ in chunk.len()..b {
+            flat.extend_from_slice(&chunk[0].tokens);
+        }
+        let lp = scorer.score(&flat)?;
+        let t = t1 - 1;
+        for (j, r) in chunk.iter().enumerate() {
+            let row = &lp[j * t..(j + 1) * t];
+            let sum: f64 = row[r.lo..r.hi].iter().map(|&x| x as f64).sum();
+            scores[r.example][r.choice] = sum / r.norm;
+        }
+    }
+
+    // first-wins argmax (deterministic tie-breaking toward lower indices)
+    Ok(scores
+        .iter()
+        .map(|s| {
+            let mut best = 0;
+            for (i, &x) in s.iter().enumerate().skip(1) {
+                if x > s[best] {
+                    best = i;
+                }
+            }
+            best
+        })
+        .collect())
+}
+
+/// Aggregate predictions into the task metric.
+pub fn aggregate(metric: Metric, examples: &[Example], picks: &[usize]) -> f64 {
+    match metric {
+        Metric::Accuracy => {
+            let correct = examples.iter().zip(picks).filter(|(e, &p)| e.gold == p).count();
+            correct as f64 / examples.len() as f64
+        }
+        Metric::F1 => {
+            // Binary F1 over "choice 0 is the answer" decisions — the shape
+            // ReCoRD/MultiRC report (positive class = gold index 0).
+            let (mut tp, mut fp, mut fneg) = (0.0, 0.0, 0.0);
+            for (e, &p) in examples.iter().zip(picks) {
+                let pos_pred = p == 0;
+                let pos_gold = e.gold == 0;
+                match (pos_pred, pos_gold) {
+                    (true, true) => tp += 1.0,
+                    (true, false) => fp += 1.0,
+                    (false, true) => fneg += 1.0,
+                    _ => {}
+                }
+            }
+            if tp == 0.0 {
+                return 0.0;
+            }
+            let prec = tp / (tp + fp);
+            let rec = tp / (tp + fneg);
+            2.0 * prec * rec / (prec + rec)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Oracle scorer: log-prob 0 for token id 7, −10 otherwise.
+    struct Oracle {
+        b: usize,
+        t: usize,
+    }
+
+    impl Scorer for Oracle {
+        fn batch(&self) -> usize {
+            self.b
+        }
+        fn seq_len(&self) -> usize {
+            self.t
+        }
+        fn score(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+            let t1 = self.t + 1;
+            let mut out = Vec::with_capacity(self.b * self.t);
+            for row in tokens.chunks(t1) {
+                for i in 0..self.t {
+                    out.push(if row[i + 1] == 7 { 0.0 } else { -10.0 });
+                }
+            }
+            Ok(out)
+        }
+    }
+
+    fn ex(context: Vec<i32>, choices: Vec<Vec<i32>>, gold: usize) -> Example {
+        Example { context, choices, gold }
+    }
+
+    #[test]
+    fn picks_high_logprob_choice() {
+        let scorer = Oracle { b: 2, t: 15 };
+        let examples = vec![
+            ex(vec![1, 2, 3], vec![vec![7, 7], vec![4, 5]], 0),
+            ex(vec![1, 2], vec![vec![4], vec![7]], 1),
+            ex(vec![9], vec![vec![5, 5, 5], vec![7]], 1),
+        ];
+        let picks = score_examples(&scorer, &examples, 0).unwrap();
+        assert_eq!(picks, vec![0, 1, 1]);
+        assert_eq!(aggregate(Metric::Accuracy, &examples, &picks), 1.0);
+    }
+
+    #[test]
+    fn length_normalization_no_long_bias() {
+        // choice 0: two "good" tokens (mean 0), choice 1: one good token
+        // (mean 0) — equal means; tie goes to the first, which is gold.
+        let scorer = Oracle { b: 1, t: 15 };
+        let examples = vec![ex(vec![1], vec![vec![7, 7], vec![7]], 0)];
+        let picks = score_examples(&scorer, &examples, 0).unwrap();
+        assert_eq!(picks[0], 0);
+    }
+
+    #[test]
+    fn long_context_truncated_from_left() {
+        let scorer = Oracle { b: 1, t: 15 };
+        let ctx: Vec<i32> = (0..40).collect();
+        let examples = vec![ex(ctx, vec![vec![7], vec![4]], 0)];
+        let picks = score_examples(&scorer, &examples, 0).unwrap();
+        assert_eq!(picks[0], 0);
+    }
+
+    #[test]
+    fn f1_aggregation() {
+        let examples = vec![
+            ex(vec![1], vec![vec![2], vec![3]], 0),
+            ex(vec![1], vec![vec![2], vec![3]], 0),
+            ex(vec![1], vec![vec![2], vec![3]], 1),
+            ex(vec![1], vec![vec![2], vec![3]], 1),
+        ];
+        // picks: TP, FN, FP, TN
+        let picks = vec![0, 1, 0, 1];
+        let f1 = aggregate(Metric::F1, &examples, &picks);
+        // prec = 1/2, rec = 1/2 → F1 = 1/2
+        assert!((f1 - 0.5).abs() < 1e-12);
+    }
+}

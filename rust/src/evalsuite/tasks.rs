@@ -1,0 +1,366 @@
+//! The thirteen downstream-task analogs (paper Table II's suite).
+//!
+//! Each paper task is mapped to a synthetic analog with the same *harness
+//! semantics* (DESIGN.md §3): binary classification scored as option
+//! log-prob, multiple choice with length normalization, span-style F1, or
+//! final-word cloze. The discriminative signal comes from five families the
+//! corpus grammar actually contains, so a better-trained LM scores higher:
+//!
+//! | family | signal | tasks |
+//! |---|---|---|
+//! | grammaticality | template POS order vs corrupted order | COPA, CB, RTE |
+//! | topic coherence | boosted topic nouns vs off-topic nouns | BoolQ, PIQA, RACE |
+//! | coreference | repeated entity vs novel entity | WSC, Winograd, WiC |
+//! | cloze | true final word vs same-POS distractors | LAMBADA, ReCoRD |
+//! | structure | conjunction/counting patterns | MultiRC, MathQA |
+//!
+//! ReCoRD and MultiRC report F1 (binary-decision F1 over choices), the rest
+//! accuracy — mirroring Table II's RCD-F1 column.
+
+use crate::data::corpus::{CorpusGen, Pos};
+use crate::data::Tokenizer;
+use crate::util::rng::Pcg64;
+
+/// One multiple-choice example: token-encoded context and choices.
+pub struct Example {
+    pub context: Vec<i32>,
+    pub choices: Vec<Vec<i32>>,
+    pub gold: usize,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Metric {
+    Accuracy,
+    F1,
+}
+
+pub struct TaskSpec {
+    pub name: &'static str,
+    pub metric: Metric,
+    pub n_examples: usize,
+}
+
+pub const TASKS: &[TaskSpec] = &[
+    TaskSpec { name: "boolq", metric: Metric::Accuracy, n_examples: 96 },
+    TaskSpec { name: "cb", metric: Metric::Accuracy, n_examples: 64 },
+    TaskSpec { name: "copa", metric: Metric::Accuracy, n_examples: 96 },
+    TaskSpec { name: "multirc", metric: Metric::F1, n_examples: 96 },
+    TaskSpec { name: "record", metric: Metric::F1, n_examples: 96 },
+    TaskSpec { name: "rte", metric: Metric::Accuracy, n_examples: 96 },
+    TaskSpec { name: "wic", metric: Metric::Accuracy, n_examples: 96 },
+    TaskSpec { name: "wsc", metric: Metric::Accuracy, n_examples: 64 },
+    TaskSpec { name: "lambada", metric: Metric::Accuracy, n_examples: 128 },
+    TaskSpec { name: "race", metric: Metric::Accuracy, n_examples: 96 },
+    TaskSpec { name: "mathqa", metric: Metric::Accuracy, n_examples: 96 },
+    TaskSpec { name: "piqa", metric: Metric::Accuracy, n_examples: 128 },
+    TaskSpec { name: "winograd", metric: Metric::Accuracy, n_examples: 96 },
+];
+
+pub struct TaskGen<'a> {
+    pub corpus: &'a CorpusGen,
+    pub tok: &'a Tokenizer,
+    pub seed: u64,
+}
+
+impl<'a> TaskGen<'a> {
+    pub fn generate(&self, name: &str) -> Vec<Example> {
+        let spec = TASKS.iter().find(|t| t.name == name).expect("unknown task");
+        let mut rng = Pcg64::new(self.seed ^ hash_name(name), 7);
+        (0..spec.n_examples)
+            .map(|i| match name {
+                "copa" => self.grammatical_continuation(&mut rng, 2, i),
+                "cb" => self.grammatical_continuation(&mut rng, 3, i),
+                "rte" => self.grammatical_sentence_pair(&mut rng, i),
+                "boolq" => self.topic_coherence(&mut rng, 2, i),
+                "piqa" => self.topic_coherence(&mut rng, 2, i),
+                "race" => self.topic_coherence(&mut rng, 4, i),
+                "wsc" => self.coreference(&mut rng, 2, 1, i),
+                "winograd" => self.coreference(&mut rng, 2, 2, i),
+                "wic" => self.coreference(&mut rng, 2, 3, i),
+                "lambada" => self.cloze(&mut rng, 4, i),
+                "record" => self.cloze(&mut rng, 4, i),
+                "multirc" => self.structure(&mut rng, i),
+                "mathqa" => self.counting(&mut rng, i),
+                _ => unreachable!(),
+            })
+            .collect()
+    }
+
+    fn enc(&self, s: &str) -> Vec<i32> {
+        self.tok.encode(s)
+    }
+
+    fn ctx_sentences(&self, rng: &mut Pcg64, topic: usize, n: usize) -> String {
+        let mut s = String::new();
+        for i in 0..n {
+            if i > 0 {
+                s.push(' ');
+            }
+            self.corpus.gen_sentence(rng, topic, &mut s);
+        }
+        s
+    }
+
+    /// COPA/CB analog: pick the grammatical continuation. Context is a
+    /// determiner+adjective prefix; correct choice is a noun, distractors
+    /// are determiners/conjunctions (wrong POS for the slot).
+    fn grammatical_continuation(&self, rng: &mut Pcg64, n_choices: usize, _i: usize) -> Example {
+        let topic = rng.below(self.corpus.n_topics() as u64) as usize;
+        let ctx_text = format!(
+            "{} {} {}",
+            self.ctx_sentences(rng, topic, 2),
+            self.corpus.gen_word(rng, Pos::Det, topic),
+            self.corpus.gen_word(rng, Pos::Adj, topic),
+        );
+        let gold = rng.below(n_choices as u64) as usize;
+        let choices = (0..n_choices)
+            .map(|c| {
+                let w = if c == gold {
+                    self.corpus.gen_word(rng, Pos::Noun, topic)
+                } else {
+                    // wrong POS after "det adj" — ungrammatical in corpus
+                    self.corpus.gen_word(rng, Pos::Det, topic)
+                };
+                self.enc(&format!(" {w}"))
+            })
+            .collect();
+        Example { context: self.enc(&ctx_text), choices, gold }
+    }
+
+    /// RTE analog: which full sentence is grammatical? The distractor has
+    /// its word order shuffled.
+    fn grammatical_sentence_pair(&self, rng: &mut Pcg64, _i: usize) -> Example {
+        let topic = rng.below(self.corpus.n_topics() as u64) as usize;
+        let ctx = self.ctx_sentences(rng, topic, 1);
+        let mut good = String::new();
+        self.corpus.gen_sentence(rng, topic, &mut good);
+        let mut words: Vec<&str> =
+            good.trim_end_matches('.').split(' ').collect();
+        rng.shuffle(&mut words);
+        let bad = format!("{}.", words.join(" "));
+        let gold = rng.below(2) as usize;
+        let mk = |s: &str| self.enc(&format!(" {s}"));
+        let choices = if gold == 0 { vec![mk(&good), mk(&bad)] } else { vec![mk(&bad), mk(&good)] };
+        Example { context: self.enc(&ctx), choices, gold }
+    }
+
+    /// BoolQ/PIQA/RACE analog: context is on-topic; correct continuation
+    /// uses that topic's boosted nouns, distractors use other topics'.
+    fn topic_coherence(&self, rng: &mut Pcg64, n_choices: usize, _i: usize) -> Example {
+        let n_topics = self.corpus.n_topics();
+        let topic = rng.below(n_topics as u64) as usize;
+        let ctx = self.ctx_sentences(rng, topic, 3);
+        let gold = rng.below(n_choices as u64) as usize;
+        let choices = (0..n_choices)
+            .map(|c| {
+                let t = if c == gold {
+                    topic
+                } else {
+                    (topic + 1 + rng.below(n_topics as u64 - 1) as usize) % n_topics
+                };
+                let nouns = self.corpus.topic_nouns(t);
+                let idx = nouns[rng.below(nouns.len() as u64) as usize];
+                let noun = self.corpus.word(Pos::Noun, idx);
+                let det = self.corpus.gen_word(rng, Pos::Det, t);
+                let verb = self.corpus.gen_word(rng, Pos::Verb, t);
+                self.enc(&format!(" {det} {noun} {verb}"))
+            })
+            .collect();
+        Example { context: self.enc(&ctx), choices, gold }
+    }
+
+    /// WSC/Winograd/WiC analog: the context mentions an entity repeatedly;
+    /// the correct continuation repeats it, distractors introduce novel
+    /// same-POS entities. `mentions` controls difficulty.
+    fn coreference(&self, rng: &mut Pcg64, n_choices: usize, mentions: usize, _i: usize) -> Example {
+        let topic = rng.below(self.corpus.n_topics() as u64) as usize;
+        let entity = self.corpus.gen_word(rng, Pos::Noun, topic);
+        let mut ctx = String::new();
+        for m in 0..mentions.max(1) {
+            if m > 0 {
+                ctx.push(' ');
+            }
+            ctx.push_str(&format!(
+                "{} {} {} {}.",
+                self.corpus.gen_word(rng, Pos::Det, topic),
+                entity,
+                self.corpus.gen_word(rng, Pos::Verb, topic),
+                self.corpus.gen_word(rng, Pos::Adv, topic),
+            ));
+        }
+        ctx.push_str(&format!(" {}", self.corpus.gen_word(rng, Pos::Det, topic)));
+        let gold = rng.below(n_choices as u64) as usize;
+        let choices = (0..n_choices)
+            .map(|c| {
+                let w = if c == gold {
+                    entity.clone()
+                } else {
+                    loop {
+                        let cand = self.corpus.gen_word(rng, Pos::Noun, topic);
+                        if cand != entity {
+                            break cand;
+                        }
+                    }
+                };
+                self.enc(&format!(" {w}"))
+            })
+            .collect();
+        Example { context: self.enc(&ctx), choices, gold }
+    }
+
+    /// LAMBADA/ReCoRD analog: cloze over the final noun of a sentence whose
+    /// subject noun is repeated (recoverable from context), distractors are
+    /// same-POS.
+    fn cloze(&self, rng: &mut Pcg64, n_choices: usize, _i: usize) -> Example {
+        let topic = rng.below(self.corpus.n_topics() as u64) as usize;
+        let noun = self.corpus.gen_word(rng, Pos::Noun, topic);
+        let ctx = format!(
+            "{} {} {} {} {}. {} {}",
+            self.corpus.gen_word(rng, Pos::Det, topic),
+            noun,
+            self.corpus.gen_word(rng, Pos::Verb, topic),
+            self.corpus.gen_word(rng, Pos::Det, topic),
+            self.corpus.gen_word(rng, Pos::Noun, topic),
+            self.corpus.gen_word(rng, Pos::Det, topic),
+            self.corpus.gen_word(rng, Pos::Adj, topic),
+        );
+        let gold = rng.below(n_choices as u64) as usize;
+        let choices = (0..n_choices)
+            .map(|c| {
+                let w = if c == gold {
+                    noun.clone()
+                } else {
+                    loop {
+                        let cand = self.corpus.gen_word(rng, Pos::Noun, topic);
+                        if cand != noun {
+                            break cand;
+                        }
+                    }
+                };
+                self.enc(&format!(" {w}"))
+            })
+            .collect();
+        Example { context: self.enc(&ctx), choices, gold }
+    }
+
+    /// MultiRC analog: after "X verb Y conj", the continuation must be
+    /// another determiner+noun clause (the conjunction template), not a
+    /// sentence end.
+    fn structure(&self, rng: &mut Pcg64, _i: usize) -> Example {
+        let topic = rng.below(self.corpus.n_topics() as u64) as usize;
+        let conj = self.corpus.gen_word(rng, Pos::Conj, topic);
+        let ctx = format!(
+            "{} {} {} {} {} {conj}",
+            self.ctx_sentences(rng, topic, 1),
+            self.corpus.gen_word(rng, Pos::Det, topic),
+            self.corpus.gen_word(rng, Pos::Noun, topic),
+            self.corpus.gen_word(rng, Pos::Adv, topic),
+            self.corpus.gen_word(rng, Pos::Verb, topic),
+        );
+        let gold = rng.below(2) as usize;
+        let good = format!(
+            " {} {}",
+            self.corpus.gen_word(rng, Pos::Det, topic),
+            self.corpus.gen_word(rng, Pos::Noun, topic)
+        );
+        let bad = format!(" {}", self.corpus.gen_word(rng, Pos::Conj, topic));
+        let choices = if gold == 0 {
+            vec![self.enc(&good), self.enc(&bad)]
+        } else {
+            vec![self.enc(&bad), self.enc(&good)]
+        };
+        Example { context: self.enc(&ctx), choices, gold }
+    }
+
+    /// MathQA analog: counting pattern — a word repeated k times must be
+    /// continued with the same word (k ≥ 2) vs a different one.
+    fn counting(&self, rng: &mut Pcg64, _i: usize) -> Example {
+        let topic = rng.below(self.corpus.n_topics() as u64) as usize;
+        let w = self.corpus.gen_word(rng, Pos::Noun, topic);
+        let k = 2 + rng.below(3) as usize;
+        let mut ctx = self.ctx_sentences(rng, topic, 1);
+        for _ in 0..k {
+            ctx.push_str(&format!(" {w}"));
+        }
+        let gold = rng.below(2) as usize;
+        let other = loop {
+            let cand = self.corpus.gen_word(rng, Pos::Noun, topic);
+            if cand != w {
+                break cand;
+            }
+        };
+        let mk = |s: &str| self.enc(&format!(" {s}"));
+        let choices = if gold == 0 { vec![mk(&w), mk(&other)] } else { vec![mk(&other), mk(&w)] };
+        Example { context: self.enc(&ctx), choices, gold }
+    }
+}
+
+fn hash_name(name: &str) -> u64 {
+    name.bytes().fold(0xcbf29ce484222325u64, |h, b| {
+        (h ^ b as u64).wrapping_mul(0x100000001b3)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{CorpusGen, CorpusSpec, Tokenizer};
+
+    fn gen_ctx() -> (CorpusGen, Tokenizer) {
+        let corpus = CorpusGen::new(CorpusSpec { n_docs: 60, ..Default::default() });
+        let tok = Tokenizer::train(&corpus.corpus(), 512);
+        (corpus, tok)
+    }
+
+    #[test]
+    fn all_thirteen_tasks_generate() {
+        let (corpus, tok) = gen_ctx();
+        let gen = TaskGen { corpus: &corpus, tok: &tok, seed: 1 };
+        assert_eq!(TASKS.len(), 13);
+        for spec in TASKS {
+            let ex = gen.generate(spec.name);
+            assert_eq!(ex.len(), spec.n_examples, "{}", spec.name);
+            for e in &ex {
+                assert!(e.gold < e.choices.len(), "{}", spec.name);
+                assert!(!e.context.is_empty());
+                assert!(e.choices.iter().all(|c| !c.is_empty()));
+            }
+        }
+    }
+
+    #[test]
+    fn generation_deterministic() {
+        let (corpus, tok) = gen_ctx();
+        let g1 = TaskGen { corpus: &corpus, tok: &tok, seed: 5 };
+        let g2 = TaskGen { corpus: &corpus, tok: &tok, seed: 5 };
+        let a = g1.generate("copa");
+        let b = g2.generate("copa");
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.context, y.context);
+            assert_eq!(x.gold, y.gold);
+        }
+    }
+
+    #[test]
+    fn golds_are_balanced() {
+        let (corpus, tok) = gen_ctx();
+        let gen = TaskGen { corpus: &corpus, tok: &tok, seed: 5 };
+        let ex = gen.generate("piqa");
+        let ones = ex.iter().filter(|e| e.gold == 1).count();
+        assert!(ones > ex.len() / 5 && ones < 4 * ex.len() / 5);
+    }
+
+    #[test]
+    fn coreference_distractors_differ_from_entity() {
+        let (corpus, tok) = gen_ctx();
+        let gen = TaskGen { corpus: &corpus, tok: &tok, seed: 5 };
+        for e in gen.generate("wsc") {
+            let gold_choice = &e.choices[e.gold];
+            for (i, c) in e.choices.iter().enumerate() {
+                if i != e.gold {
+                    assert_ne!(c, gold_choice);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! One generator per paper table/figure (experiment index in DESIGN.md §6).
+//!
+//! * [`sim`] — runtime/scaling studies (Figures 5–8) via the cluster
+//!   simulator.
+//! * [`train`] — convergence studies (Figures 1, 3, 4; Tables II–IV) via
+//!   real training on the analog configs.
+
+pub mod sim;
+pub mod train;
+
+pub use sim::{calibration_report, fig5, fig6, fig7, fig8, FigureData, ScaleRow};
+pub use train::{ablation, eval_checkpoint, fig1, fig3_panel, fig4, figure_cfg,
+                pipeline_for, print_task_table, run_arm, table4, TrainedScorer};

@@ -1,0 +1,279 @@
+//! Simulator-backed figures: the runtime/scaling studies (Figures 5–8).
+//!
+//! Each generator returns structured rows and can print the paper-style
+//! table. Absolute seconds depend on the calibration (fit to the AdamW
+//! baseline only); the comparisons — who wins, by what factor, where the
+//! efficiency knees fall — are model predictions.
+
+use crate::config::{model_or_die, OptMode};
+use crate::metrics::scaling_efficiency;
+use crate::perfmodel::gpu::{ClusterSpec, PERLMUTTER, VISTA};
+use crate::simulator::run::{simulate_run, Calib, SimSetup};
+
+/// One scale point of a runtime figure.
+#[derive(Clone, Debug)]
+pub struct ScaleRow {
+    pub world: usize,
+    pub t_adamw: f64,
+    pub t_pier: f64,
+    pub speedup: f64,
+    pub eff_adamw: f64,
+    pub eff_pier: f64,
+}
+
+pub struct FigureData {
+    pub title: String,
+    pub rows: Vec<ScaleRow>,
+}
+
+impl FigureData {
+    pub fn print(&self) {
+        println!("\n== {} ==", self.title);
+        println!(
+            "{:>6} {:>14} {:>14} {:>9} {:>10} {:>10}",
+            "GPUs", "AdamW (s)", "Pier (s)", "speedup", "eff(AdamW)", "eff(Pier)"
+        );
+        for r in &self.rows {
+            println!(
+                "{:>6} {:>14.0} {:>14.0} {:>8.2}x {:>9.1}% {:>9.1}%",
+                r.world, r.t_adamw, r.t_pier, r.speedup,
+                100.0 * r.eff_adamw, 100.0 * r.eff_pier
+            );
+        }
+    }
+}
+
+fn base_setup(
+    model: &str,
+    cluster: &'static ClusterSpec,
+    world: usize,
+    groups: usize,
+    h: usize,
+    tp: usize,
+) -> SimSetup {
+    SimSetup {
+        model: model_or_die(model),
+        cluster,
+        world,
+        tp,
+        pp: 1,
+        sync_fraction: 1.0,
+        groups,
+        global_batch: 512,
+        sync_interval: h,
+        mode: OptMode::Pier,
+        warmup_pct: 0.10,
+        iterations: 100_000,
+        cpu_offload: false,
+        calib: Calib::default(),
+    }
+}
+
+fn row_at(s: &SimSetup, base_world: usize, t_adamw_base: f64, t_pier_base: f64) -> ScaleRow {
+    let mut sa = s.clone();
+    sa.mode = OptMode::AdamW;
+    let ta = simulate_run(&sa).total_secs;
+    let tp_ = simulate_run(s).total_secs;
+    ScaleRow {
+        world: s.world,
+        t_adamw: ta,
+        t_pier: tp_,
+        speedup: ta / tp_,
+        eff_adamw: scaling_efficiency(t_adamw_base, ta, base_world, s.world),
+        eff_pier: scaling_efficiency(t_pier_base, tp_, base_world, s.world),
+    }
+}
+
+fn sweep(mut setup: SimSetup, worlds: &[usize], base_world: usize, groups_eq_world: bool)
+    -> Vec<ScaleRow>
+{
+    // baselines at M = base_world
+    setup.world = base_world;
+    if groups_eq_world {
+        setup.groups = base_world.max(1);
+    }
+    let mut sa = setup.clone();
+    sa.mode = OptMode::AdamW;
+    let ta_base = simulate_run(&sa).total_secs;
+    // Pier needs ≥2 groups to be meaningful at the base scale; at 1 GPU the
+    // inner loop is communication-free and Pier ≡ AdamW + amortized no-op.
+    let tp_base = if setup.groups <= 1 { ta_base } else { simulate_run(&setup).total_secs };
+
+    worlds
+        .iter()
+        .map(|&w| {
+            let mut s = setup.clone();
+            s.world = w;
+            if groups_eq_world {
+                s.groups = w;
+            }
+            row_at(&s, base_world, ta_base, tp_base)
+        })
+        .collect()
+}
+
+/// Figure 5: strong scaling, Perlmutter, H=50, groups {8, 32, 64} for
+/// GPT-2 {small, medium, XL}. Efficiency reference M = groups (paper).
+pub fn fig5(model: &str) -> FigureData {
+    let (groups, worlds): (usize, &[usize]) = match model {
+        "gpt2-small" => (8, &[8, 16, 32, 64]),
+        "gpt2-medium" => (32, &[32, 64, 128]),
+        "gpt2-xl" => (64, &[64, 128, 256]),
+        other => panic!("fig5 models are the GPT-2 family, got {other}"),
+    };
+    let setup = base_setup(model, &PERLMUTTER, groups, groups, 50, 1);
+    FigureData {
+        title: format!("Fig 5 — strong scaling, {model}, Perlmutter, H=50, {groups} groups"),
+        rows: sweep(setup, worlds, groups, false),
+    }
+}
+
+/// Figure 6: as Fig 5(c) but H = 500 (XL, 64 groups).
+pub fn fig6() -> FigureData {
+    let setup = base_setup("gpt2-xl", &PERLMUTTER, 64, 64, 500, 1);
+    FigureData {
+        title: "Fig 6 — strong scaling, gpt2-xl, Perlmutter, H=500, 64 groups".into(),
+        rows: sweep(setup, &[64, 128, 256], 64, false),
+    }
+}
+
+/// Figure 7: groups = GPUs (no inner communication), GPT-2 XL, both
+/// clusters. Efficiency reference M = 1.
+pub fn fig7(cluster_name: &str, h: usize) -> FigureData {
+    let (cluster, worlds): (&'static ClusterSpec, &[usize]) = match cluster_name {
+        "perlmutter" => (&PERLMUTTER, &[1, 4, 8, 16, 32, 64, 128, 256]),
+        "vista" => (&VISTA, &[1, 2, 4, 8, 16, 32, 64, 128]),
+        other => panic!("unknown cluster {other}"),
+    };
+    let setup = base_setup("gpt2-xl", cluster, 1, 1, h, 1);
+    FigureData {
+        title: format!("Fig 7 — gpt2-xl, groups = GPUs, {cluster_name}, H={h}"),
+        rows: sweep(setup, worlds, 1, true),
+    }
+}
+
+/// Figure 8: DP×TP for GPT-2 7B, TP=4 (one Perlmutter node per replica),
+/// scaling 1 → 32 nodes. Efficiency reference M = 4 GPUs (one node).
+pub fn fig8() -> FigureData {
+    let mut setup = base_setup("gpt2-7b", &PERLMUTTER, 4, 1, 50, 4);
+    setup.cpu_offload = true; // 7B outer state does not fit 40 GB otherwise
+    let worlds = [4usize, 8, 16, 32, 64, 128];
+    let mut rows = Vec::new();
+    // baselines at one node (dp = 1: no DP comm for either arm)
+    let mut s0 = setup.clone();
+    s0.groups = 1;
+    let mut sa0 = s0.clone();
+    sa0.mode = OptMode::AdamW;
+    let ta_base = simulate_run(&sa0).total_secs;
+    let tp_base = ta_base; // dp=1 → Pier ≡ AdamW at base scale
+    for w in worlds {
+        let mut s = setup.clone();
+        s.world = w;
+        s.groups = w / 4; // one group per node (per DP replica)
+        rows.push(row_at(&s, 4, ta_base, tp_base));
+    }
+    FigureData { title: "Fig 8 — gpt2-7b, TP=4, Perlmutter, H=50".into(), rows }
+}
+
+/// Calibration report: modeled AdamW scaling efficiencies at the paper's
+/// quoted anchor points (§I, §VI-B). The constants in
+/// [`crate::simulator::run::Calib`] are tuned until these land near the
+/// paper's measurements; `figures_smoke` tests pin them.
+pub struct CalibrationPoint {
+    pub what: &'static str,
+    pub paper: f64,
+    pub model: f64,
+}
+
+pub fn calibration_report() -> Vec<CalibrationPoint> {
+    // e(N; M) with the reference scale the paper uses for each quote:
+    // intro/§VI-B2 quotes use M = 1 (Fig 7); §VI-B1's 256-GPU quotes use
+    // M = 64 (Fig 5/6 set M to the group count).
+    let eff = |cluster: &'static ClusterSpec, m: usize, n: usize, mode: OptMode, h: usize| {
+        let mut s = base_setup("gpt2-xl", cluster, m, 64.min(m), h, 1);
+        s.mode = mode;
+        if mode == OptMode::Pier {
+            s.groups = 64.min(m);
+        }
+        let tm = simulate_run(&s).total_secs;
+        s.world = n;
+        if mode == OptMode::Pier {
+            s.groups = 64;
+        }
+        let tn = simulate_run(&s).total_secs;
+        scaling_efficiency(tm, tn, m, n)
+    };
+    vec![
+        CalibrationPoint {
+            what: "AdamW XL eff @32 A100, M=1 (paper 42.7%)",
+            paper: 0.427,
+            model: eff(&PERLMUTTER, 1, 32, OptMode::AdamW, 50),
+        },
+        CalibrationPoint {
+            what: "AdamW XL eff @256 A100, M=64 (paper 34.7%)",
+            paper: 0.347,
+            model: eff(&PERLMUTTER, 64, 256, OptMode::AdamW, 50),
+        },
+        CalibrationPoint {
+            what: "AdamW XL eff @64 GH200, M=1 (paper 34.6%)",
+            paper: 0.346,
+            model: eff(&VISTA, 1, 64, OptMode::AdamW, 50),
+        },
+        CalibrationPoint {
+            what: "Pier XL eff @256 A100, M=64, H=500 (paper 57.9%)",
+            paper: 0.579,
+            model: eff(&PERLMUTTER, 64, 256, OptMode::Pier, 500),
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig5_shapes() {
+        for m in ["gpt2-small", "gpt2-medium", "gpt2-xl"] {
+            let f = fig5(m);
+            assert!(!f.rows.is_empty());
+            let last = f.rows.last().unwrap();
+            assert!(last.speedup > 1.2, "{m}: {}", last.speedup);
+        }
+        // Pier sustains higher efficiency at the paper's headline scales
+        // (small/medium panels; the XL H=50 panel converges at 256 where
+        // the outer burst bites — the H=500 variant, Fig 6, restores it).
+        for m in ["gpt2-small", "gpt2-medium"] {
+            let f = fig5(m);
+            let last = f.rows.last().unwrap();
+            assert!(last.eff_pier > last.eff_adamw, "{m}");
+        }
+    }
+
+    #[test]
+    fn fig6_beats_fig5_at_256() {
+        let f5 = fig5("gpt2-xl");
+        let f6 = fig6();
+        let s5 = f5.rows.last().unwrap().speedup;
+        let s6 = f6.rows.last().unwrap().speedup;
+        assert!(s6 > s5, "H=500 ({s6}) must beat H=50 ({s5})");
+    }
+
+    #[test]
+    fn fig7_speedup_kicks_in_beyond_node() {
+        let f = fig7("perlmutter", 50);
+        let r4 = f.rows.iter().find(|r| r.world == 4).unwrap();
+        let r64 = f.rows.iter().find(|r| r.world == 64).unwrap();
+        // within one node Pier gains little; beyond, a lot (paper Fig 7)
+        assert!(r4.speedup < 1.2, "{}", r4.speedup);
+        assert!(r64.speedup > 1.5, "{}", r64.speedup);
+    }
+
+    #[test]
+    fn fig8_runs() {
+        let f = fig8();
+        let last = f.rows.last().unwrap();
+        assert_eq!(last.world, 128);
+        assert!(last.speedup > 1.5, "{}", last.speedup);
+        assert!(last.eff_pier > last.eff_adamw);
+    }
+}

@@ -1,0 +1,248 @@
+//! Training-backed figures: the convergence studies (Figures 1, 3, 4;
+//! Tables II–IV), run for real on the trainable analog configs through the
+//! full three-layer stack.
+//!
+//! Budgets are caller-chosen (CLI `--iters`); the defaults in `main.rs`
+//! keep a full figure under a CPU-feasible wall-clock. The *structure*
+//! matches the paper exactly: 10 % lazy start, the same H/T and batch/group
+//! proportions, identical seeds and validation batches across arms.
+
+use anyhow::Result;
+
+use crate::config::{analog_recipe, OptMode, TrainConfig};
+use crate::coordinator::Trainer;
+use crate::data::{build_pipeline, CorpusGen, CorpusSpec, Pipeline};
+use crate::evalsuite::{run_suite, Scorer, TaskResult, TASKS};
+use crate::metrics::RunLog;
+use crate::runtime::{load_manifest, Manifest, Runtime};
+
+/// Corpus documents per vocab size (≈1–2 M chars — enough for the analog
+/// budgets without dwarfing the CPU budget).
+fn corpus_docs(vocab: usize) -> usize {
+    match vocab {
+        v if v <= 512 => 1200,
+        v if v <= 2048 => 2500,
+        _ => 4000,
+    }
+}
+
+/// Build the shared pipeline for a model config.
+pub fn pipeline_for(man: &Manifest, seed: u64) -> Pipeline {
+    build_pipeline(man.vocab_size, corpus_docs(man.vocab_size), seed)
+}
+
+/// Train one arm; returns the run log and the final committed parameters.
+pub fn run_arm(
+    rt: &Runtime,
+    man: &Manifest,
+    pipe: &Pipeline,
+    cfg: TrainConfig,
+) -> Result<(RunLog, Vec<f32>)> {
+    let mut trainer = Trainer::new(rt, man.clone(), cfg, pipe)?;
+    trainer.run()?;
+    let params = trainer.global_params()?;
+    Ok((trainer.log.clone(), params))
+}
+
+/// Standard analog recipe for a figure run.
+pub fn figure_cfg(mode: OptMode, iters: usize, groups: usize) -> TrainConfig {
+    let mut c = analog_recipe(iters, mode, groups);
+    c.eval_interval = (iters / 20).max(5);
+    c
+}
+
+// ---------------------------------------------------------------- Figure 1
+
+/// Fig 1: AdamW (fully synchronized) vs vanilla DiLoCo — the motivating
+/// degradation. Returns (adamw, diloco) run logs.
+pub fn fig1(rt: &Runtime, model: &str, iters: usize, groups: usize)
+    -> Result<(RunLog, RunLog)>
+{
+    let man = load_manifest(model)?;
+    let pipe = pipeline_for(&man, 11);
+    let (a, _) = run_arm(rt, &man, &pipe, figure_cfg(OptMode::AdamW, iters, groups))?;
+    let (d, _) = run_arm(rt, &man, &pipe, figure_cfg(OptMode::DiLoCo, iters, groups))?;
+    Ok((a, d))
+}
+
+// ---------------------------------------------------------------- Figure 3
+
+pub struct Fig3Arm {
+    pub log: RunLog,
+    pub params: Vec<f32>,
+}
+
+/// Fig 3 (one model panel): AdamW vs DiLoCo vs Pier validation curves.
+/// Returns the three arms in that order (params kept for Table II).
+pub fn fig3_panel(rt: &Runtime, model: &str, iters: usize, groups: usize)
+    -> Result<Vec<Fig3Arm>>
+{
+    let man = load_manifest(model)?;
+    let pipe = pipeline_for(&man, 11);
+    let mut arms = Vec::new();
+    for mode in [OptMode::AdamW, OptMode::DiLoCo, OptMode::Pier] {
+        let (log, params) = run_arm(rt, &man, &pipe, figure_cfg(mode, iters, groups))?;
+        arms.push(Fig3Arm { log, params });
+    }
+    Ok(arms)
+}
+
+// ---------------------------------------------------------------- Figure 4
+
+pub struct Fig4Row {
+    pub gpus: usize,
+    pub global_batch: usize,
+    pub iterations: usize,
+    pub final_val: f64,
+    pub params: Vec<f32>,
+}
+
+/// Fig 4: weak scaling at fixed token budget — batch doubles, iterations
+/// halve. `base_iters` is the iteration count at the base batch.
+pub fn fig4(rt: &Runtime, model: &str, base_iters: usize) -> Result<Vec<Fig4Row>> {
+    let man = load_manifest(model)?;
+    let pipe = pipeline_for(&man, 11);
+    // analog of the paper's {4, 8, 16, 32} GPUs ↦ batch {256, 512, 1024, 2048}
+    let scales: &[(usize, usize)] = &[(4, 16), (8, 32), (16, 64), (32, 128)];
+    let base_tokens = 32 * base_iters; // reference batch × iters
+    let mut rows = Vec::new();
+    for &(gpus, batch) in scales {
+        let iters = (base_tokens / batch).max(20);
+        let mut cfg = figure_cfg(OptMode::Pier, iters, 8.min(gpus));
+        cfg.global_batch = batch;
+        let (log, params) = run_arm(rt, &man, &pipe, cfg)?;
+        rows.push(Fig4Row {
+            gpus,
+            global_batch: batch,
+            iterations: iters,
+            final_val: log.final_val_loss().unwrap_or(f64::NAN),
+            params,
+        });
+    }
+    Ok(rows)
+}
+
+// ------------------------------------------------------------- Table IV
+
+pub struct Table4Row {
+    pub interval: usize,
+    pub final_val: f64,
+    pub params: Vec<f32>,
+}
+
+/// Table IV: synchronization-interval sweep (Pier). Intervals are the
+/// paper's {50,100,200,500} scaled by `iters/100k` proportions.
+pub fn table4(rt: &Runtime, model: &str, iters: usize, intervals: &[usize])
+    -> Result<Vec<Table4Row>>
+{
+    let man = load_manifest(model)?;
+    let pipe = pipeline_for(&man, 11);
+    let mut rows = Vec::new();
+    for &h in intervals {
+        let mut cfg = figure_cfg(OptMode::Pier, iters, 8);
+        cfg.sync_interval = h;
+        let (log, params) = run_arm(rt, &man, &pipe, cfg)?;
+        rows.push(Table4Row {
+            interval: h,
+            final_val: log.final_val_loss().unwrap_or(f64::NAN),
+            params,
+        });
+    }
+    Ok(rows)
+}
+
+// ------------------------------------------------------------- Ablations
+
+pub struct AblationArm {
+    pub name: &'static str,
+    pub log: RunLog,
+}
+
+/// Dissect Pier's two techniques (§IV-A/B) plus the §V Nesterov-variant
+/// comparison: full Pier, warmup-only, decay-only, neither (≈ DiLoCo with
+/// Pier's outer-LR schedule), theoretical Nesterov, and plain DiLoCo.
+pub fn ablation(rt: &Runtime, model: &str, iters: usize, groups: usize)
+    -> Result<Vec<AblationArm>>
+{
+    use crate::config::NesterovKind;
+    let man = load_manifest(model)?;
+    let pipe = pipeline_for(&man, 11);
+    let mut arms: Vec<AblationArm> = Vec::new();
+    let variants: Vec<(&'static str, Box<dyn Fn(&mut TrainConfig)>)> = vec![
+        ("pier", Box::new(|_c: &mut TrainConfig| {})),
+        ("pier-no-warmup", Box::new(|c: &mut TrainConfig| c.momentum_warmup = false)),
+        ("pier-no-decay", Box::new(|c: &mut TrainConfig| c.momentum_decay = false)),
+        ("pier-neither", Box::new(|c: &mut TrainConfig| {
+            c.momentum_warmup = false;
+            c.momentum_decay = false;
+        })),
+        ("pier-theoretical", Box::new(|c: &mut TrainConfig| {
+            c.nesterov = NesterovKind::Theoretical;
+        })),
+    ];
+    for (name, tweak) in variants {
+        let mut cfg = figure_cfg(OptMode::Pier, iters, groups);
+        tweak(&mut cfg);
+        let (log, _) = run_arm(rt, &man, &pipe, cfg)?;
+        arms.push(AblationArm { name, log });
+    }
+    let (log, _) = run_arm(rt, &man, &pipe, figure_cfg(OptMode::DiLoCo, iters, groups))?;
+    arms.push(AblationArm { name: "diloco", log });
+    Ok(arms)
+}
+
+// --------------------------------------------------------- Table II suite
+
+/// Scorer adapter over a trained parameter vector.
+pub struct TrainedScorer<'a> {
+    pub trainer: &'a Trainer,
+    pub params: &'a [f32],
+}
+
+impl Scorer for TrainedScorer<'_> {
+    fn batch(&self) -> usize {
+        self.trainer.man.micro_batch
+    }
+    fn seq_len(&self) -> usize {
+        self.trainer.man.seq_len
+    }
+    fn score(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        self.trainer.score_batch(self.params, tokens)
+    }
+}
+
+/// Evaluate the 13-task suite for a trained parameter vector.
+pub fn eval_checkpoint(
+    rt: &Runtime,
+    man: &Manifest,
+    pipe: &Pipeline,
+    params: &[f32],
+    seed: u64,
+) -> Result<Vec<TaskResult>> {
+    // a throwaway trainer gives us the compiled score_step + manifest plumbing
+    let cfg = figure_cfg(OptMode::AdamW, 10, 1);
+    let trainer = Trainer::new(rt, man.clone(), cfg, pipe)?;
+    let corpus = CorpusGen::new(CorpusSpec {
+        n_docs: corpus_docs(man.vocab_size),
+        seed: 11,
+        ..Default::default()
+    });
+    let scorer = TrainedScorer { trainer: &trainer, params };
+    run_suite(&scorer, &corpus, &pipe.tokenizer, seed)
+}
+
+/// Print a Table II-style row set.
+pub fn print_task_table(rows: &[(String, Vec<TaskResult>)]) {
+    print!("{:<12}", "method");
+    for t in TASKS {
+        print!(" {:>8}", t.name);
+    }
+    println!();
+    for (name, results) in rows {
+        print!("{name:<12}");
+        for r in results {
+            print!(" {:>8.4}", r.value);
+        }
+        println!();
+    }
+}

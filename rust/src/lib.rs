@@ -1,0 +1,47 @@
+//! # Pier — efficient LLM pretraining with relaxed global communication
+//!
+//! Reproduction of *“Pier: Efficient Large Language Model pretraining with
+//! Relaxed Global Communication”* (Fan & Zhang, CS.DC 2025) as a three-layer
+//! Rust + JAX + Pallas stack.
+//!
+//! This crate is Layer 3: the coordinator that owns the training event loop,
+//! worker-group topology, the paper's outer optimizer (Nesterov with momentum
+//! warmup + momentum decay), the collectives, CPU offload, the cluster
+//! performance simulator that regenerates the paper's runtime figures, the
+//! synthetic data pipeline, and the downstream-task evaluation harness.
+//!
+//! Layers 1–2 (the Pallas kernels and the JAX model) run **only** at build
+//! time (`make artifacts`): they are lowered once to HLO text which this
+//! crate loads and executes through the PJRT C API (`runtime` module).
+//! Python is never on the training path.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//!
+//! * [`util`] — zero-dependency substrates: PCG RNG, JSON, CLI args, logging.
+//! * [`config`] — model/training/parallelism/cluster configuration + presets.
+//! * [`data`] — synthetic corpus, BPE tokenizer, packed & sharded datasets.
+//! * [`optim`] — LR/momentum schedules and pure-Rust optimizer oracles.
+//! * [`runtime`] — PJRT client: load `artifacts/*.hlo.txt`, compile, execute.
+//! * [`coordinator`] — the paper's contribution: Pier trainer, outer
+//!   optimizer, worker groups, collectives, offload, DP×TP topology.
+//! * [`netsim`] — α–β link model, ring/hierarchical collectives, DES engine.
+//! * [`perfmodel`] — GPU specs + transformer FLOPs/bytes/MFU model.
+//! * [`simulator`] — cluster runtime simulation (Figures 5–8).
+//! * [`evalsuite`] — the 13 downstream-task analogs + scoring harness.
+//! * [`figures`] — one generator per paper table/figure.
+//! * [`metrics`] — speedup/efficiency math, CSV/report emission.
+//! * [`testing`] — in-repo property-testing + benchmarking harnesses.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod evalsuite;
+pub mod figures;
+pub mod metrics;
+pub mod netsim;
+pub mod optim;
+pub mod perfmodel;
+pub mod runtime;
+pub mod simulator;
+pub mod testing;
+pub mod util;

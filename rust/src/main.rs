@@ -1,0 +1,370 @@
+//! `pier` — launcher CLI for the Pier reproduction.
+//!
+//! Subcommands:
+//!
+//! * `train`    — train one optimizer arm end-to-end (L3→L2→L1 stack).
+//! * `eval`     — run the 13-task downstream suite on a checkpoint.
+//! * `simulate` — one cluster-simulation point with cost breakdown.
+//! * `repro`    — regenerate a paper figure/table (fig1…fig8, table2…table4,
+//!                calibration, sim-all).
+//! * `config`   — show model/recipe tables.
+//! * `data`     — corpus/tokenizer statistics.
+//!
+//! Run `pier <cmd>` with no options for defaults sized to a CPU budget.
+
+use anyhow::{anyhow, bail, Result};
+
+use pier::config::{model_or_die, OptMode, MODELS};
+use pier::coordinator::{Checkpoint, Trainer};
+use pier::figures;
+use pier::metrics::RunLog;
+use pier::runtime::{load_manifest, Runtime};
+use pier::util::args::Args;
+
+fn main() {
+    pier::util::logging::init_from_env();
+    let args = Args::from_env();
+    if let Some(level) = args.get("log-level") {
+        pier::util::logging::set_level_from_str(level);
+    }
+    let result = match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("repro") => cmd_repro(&args),
+        Some("config") => cmd_config(&args),
+        Some("data") => cmd_data(&args),
+        _ => {
+            print_usage();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_usage() {
+    println!(
+        "pier — efficient LLM pretraining with relaxed global communication\n\n\
+         usage: pier <command> [options]\n\n\
+         commands:\n\
+           train     --model nano --mode pier|diloco|adamw --iters N --groups K\n\
+                     --batch B --interval H [--offload] [--csv out.csv] [--ckpt out.ckpt]\n\
+           eval      --model nano --ckpt file.ckpt\n\
+           simulate  --model gpt2-xl --cluster perlmutter|vista --world N\n\
+                     [--tp T] [--groups K] [--interval H] [--mode pier|adamw]\n\
+           repro     fig1|fig3|fig4|fig5|fig6|fig7|fig8|table2|table3|table4|\n\
+                     ablation|calibration|sim-all [--iters N] [--model nano|micro|mini]\n\
+           config    [--model name]\n\
+           data      [--vocab V] [--docs N]"
+    );
+}
+
+fn summarize(log: &RunLog) {
+    println!(
+        "[{}] {} iters, final val loss {:.4}, tail train loss {:.4}, wall {:.1}s",
+        log.mode,
+        log.iters.len(),
+        log.final_val_loss().unwrap_or(f64::NAN),
+        log.tail_train_loss(20),
+        log.wall_secs
+    );
+    if let Some(spike) = log.switch_spike(log.iters.len() / 5) {
+        println!("  switch spike: {spike:+.4}");
+    }
+    println!(
+        "  comm: inner {:.1} MB, outer {:.1} MB ({} outer steps), broadcast {:.1} MB",
+        log.comm.inner_allreduce_bytes / 1e6,
+        log.comm.outer_allreduce_bytes / 1e6,
+        log.comm.outer_steps,
+        log.comm.broadcast_bytes / 1e6
+    );
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let model = args.str_or("model", "nano");
+    let mode = OptMode::parse(&args.str_or("mode", "pier"))
+        .ok_or_else(|| anyhow!("--mode must be adamw|diloco|pier"))?;
+    let iters = args.usize_or("iters", 200);
+    let groups = args.usize_or("groups", 4);
+
+    let mut cfg = figures::figure_cfg(mode, iters, groups);
+    cfg.global_batch = args.usize_or("batch", cfg.global_batch);
+    cfg.sync_interval = args.usize_or("interval", cfg.sync_interval);
+    cfg.cpu_offload = args.flag("offload");
+    cfg.seed = args.u64_or("seed", cfg.seed);
+    cfg.eval_interval = args.usize_or("eval-interval", cfg.eval_interval);
+
+    let rt = Runtime::cpu()?;
+    println!("platform: {}", rt.platform());
+    let man = load_manifest(&model)?;
+    let pipe = figures::pipeline_for(&man, 11);
+    println!(
+        "model {} ({} params), corpus {} tokens, mode {}, {} iters, batch {}, groups {}, H {}",
+        man.model_name, man.n_params, pipe.train.len(), mode.name(),
+        cfg.iterations, cfg.global_batch, cfg.groups, cfg.sync_interval
+    );
+
+    let mut trainer = Trainer::new(&rt, man, cfg.clone(), &pipe)?;
+    trainer.run()?;
+    summarize(&trainer.log);
+
+    if let Some(csv) = args.get("csv") {
+        trainer.log.write_csv(std::path::Path::new(csv))?;
+        println!("wrote {csv} (+ .val.csv)");
+    }
+    if let Some(ckpt) = args.get("ckpt") {
+        let g0 = &trainer.groups[0];
+        Checkpoint {
+            model: trainer.man.model_name.clone(),
+            mode: cfg.mode.name().into(),
+            iteration: cfg.iterations,
+            adam_t: g0.adam_t,
+            params: g0.params_flat(&trainer.man)?,
+            m: g0.m_flat(&trainer.man)?,
+            v: g0.v_flat(&trainer.man)?,
+            outer_momentum: Vec::new(),
+            outer_anchor: Vec::new(),
+        }
+        .save(std::path::Path::new(ckpt))?;
+        println!("wrote {ckpt}");
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let model = args.str_or("model", "nano");
+    let ckpt_path = args.get("ckpt").ok_or_else(|| anyhow!("--ckpt required"))?;
+    let ckpt = Checkpoint::load(std::path::Path::new(ckpt_path))?;
+    let rt = Runtime::cpu()?;
+    let man = load_manifest(&model)?;
+    if ckpt.params.len() != man.n_params {
+        bail!("checkpoint has {} params, model {} needs {}", ckpt.params.len(), model, man.n_params);
+    }
+    let pipe = figures::pipeline_for(&man, 11);
+    let results = figures::eval_checkpoint(&rt, &man, &pipe, &ckpt.params, 3)?;
+    figures::print_task_table(&[(ckpt.mode.clone(), results)]);
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    use pier::perfmodel::gpu::cluster;
+    use pier::simulator::run::{simulate_run, Calib, SimSetup};
+    let cluster_name = args.str_or("cluster", "perlmutter");
+    let world = args.usize_or("world", 64);
+    let s = SimSetup {
+        model: model_or_die(&args.str_or("model", "gpt2-xl")),
+        cluster: cluster(&cluster_name).ok_or_else(|| anyhow!("unknown cluster"))?,
+        world,
+        tp: args.usize_or("tp", 1),
+        pp: args.usize_or("pp", 1),
+        sync_fraction: args.f64_or("sync-fraction", 1.0),
+        groups: args.usize_or("groups", world),
+        global_batch: args.usize_or("batch", 512),
+        sync_interval: args.usize_or("interval", 50),
+        mode: OptMode::parse(&args.str_or("mode", "pier")).unwrap(),
+        warmup_pct: 0.10,
+        iterations: args.usize_or("iters", 100_000),
+        cpu_offload: args.flag("offload"),
+        calib: Calib::default(),
+    };
+    let r = simulate_run(&s);
+    println!("{} on {} × {} GPUs (tp={}, groups={}, H={}, mode={})",
+             s.model.name, cluster_name, s.world, s.tp, s.groups,
+             s.sync_interval, s.mode.name());
+    println!("  sync iter:  compute {:.3}s  tp {:.3}s  dp {:.3}s  → {:.3}s",
+             r.sync_iter.compute, r.sync_iter.tp_comm, r.sync_iter.dp_comm,
+             r.sync_iter.total());
+    println!("  inner iter: compute {:.3}s  tp {:.3}s  dp {:.3}s  outer/iter {:.3}s → {:.3}s",
+             r.inner_iter.compute, r.inner_iter.tp_comm, r.inner_iter.dp_comm,
+             r.inner_iter.outer_amortized, r.inner_iter.total());
+    println!("  outer event: {:.3}s", r.outer_event_secs);
+    println!("  total ({} iters): {:.0}s = {:.2}h", s.iterations, r.total_secs,
+             r.total_secs / 3600.0);
+    Ok(())
+}
+
+fn cmd_repro(args: &Args) -> Result<()> {
+    let what = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .ok_or_else(|| anyhow!("repro requires a figure/table id"))?;
+    match what {
+        "fig5" => {
+            for m in ["gpt2-small", "gpt2-medium", "gpt2-xl"] {
+                figures::fig5(m).print();
+            }
+        }
+        "fig6" => figures::fig6().print(),
+        "fig7" => {
+            figures::fig7("perlmutter", 50).print();
+            figures::fig7("vista", 50).print();
+            figures::fig7("vista", 500).print();
+        }
+        "fig8" => figures::fig8().print(),
+        "calibration" => {
+            println!("{:<44} {:>8} {:>8}", "anchor", "paper", "model");
+            for p in figures::calibration_report() {
+                println!("{:<44} {:>7.1}% {:>7.1}%", p.what, 100.0 * p.paper, 100.0 * p.model);
+            }
+        }
+        "sim-all" => {
+            for m in ["gpt2-small", "gpt2-medium", "gpt2-xl"] {
+                figures::fig5(m).print();
+            }
+            figures::fig6().print();
+            figures::fig7("perlmutter", 50).print();
+            figures::fig7("vista", 50).print();
+            figures::fig7("vista", 500).print();
+            figures::fig8().print();
+        }
+        "fig1" => {
+            let rt = Runtime::cpu()?;
+            let model = args.str_or("model", "nano");
+            let iters = args.usize_or("iters", 200);
+            let groups = args.usize_or("groups", 4);
+            let (a, d) = figures::fig1(&rt, &model, iters, groups)?;
+            println!("\n== Fig 1 — AdamW vs DiLoCo, {model}, {iters} iters ==");
+            summarize(&a);
+            summarize(&d);
+        }
+        "fig3" => {
+            let rt = Runtime::cpu()?;
+            let model = args.str_or("model", "nano");
+            let iters = args.usize_or("iters", 200);
+            let groups = args.usize_or("groups", 4);
+            let arms = figures::fig3_panel(&rt, &model, iters, groups)?;
+            println!("\n== Fig 3 — {model}, {iters} iters, {groups} groups ==");
+            for arm in &arms {
+                summarize(&arm.log);
+            }
+        }
+        "fig4" => {
+            let rt = Runtime::cpu()?;
+            let model = args.str_or("model", "nano");
+            let iters = args.usize_or("iters", 200);
+            let rows = figures::fig4(&rt, &model, iters)?;
+            println!("\n== Fig 4 — weak scaling, {model} ==");
+            println!("{:>6} {:>8} {:>8} {:>10}", "GPUs", "batch", "iters", "val loss");
+            for r in &rows {
+                println!("{:>6} {:>8} {:>8} {:>10.4}", r.gpus, r.global_batch,
+                         r.iterations, r.final_val);
+            }
+        }
+        "table2" => {
+            let rt = Runtime::cpu()?;
+            let model = args.str_or("model", "nano");
+            let iters = args.usize_or("iters", 200);
+            let groups = args.usize_or("groups", 4);
+            let man = load_manifest(&model)?;
+            let pipe = figures::pipeline_for(&man, 11);
+            let arms = figures::fig3_panel(&rt, &model, iters, groups)?;
+            let mut rows = Vec::new();
+            for arm in &arms {
+                summarize(&arm.log);
+                let csv = format!("/tmp/pier_table2_{}_{}.csv", model, arm.log.mode);
+                arm.log.write_csv(std::path::Path::new(&csv))?;
+                let res = figures::eval_checkpoint(&rt, &man, &pipe, &arm.params, 3)?;
+                rows.push((arm.log.mode.clone(), res));
+            }
+            println!("\n== Table II — downstream tasks, {model}, {iters} iters ==");
+            figures::print_task_table(&rows);
+        }
+        "table3" => {
+            let rt = Runtime::cpu()?;
+            let model = args.str_or("model", "nano");
+            let iters = args.usize_or("iters", 200);
+            let man = load_manifest(&model)?;
+            let pipe = figures::pipeline_for(&man, 11);
+            let rows4 = figures::fig4(&rt, &model, iters)?;
+            let mut rows = Vec::new();
+            for r in &rows4 {
+                let res = figures::eval_checkpoint(&rt, &man, &pipe, &r.params, 3)?;
+                rows.push((format!("{}gpu/b{}", r.gpus, r.global_batch), res));
+            }
+            println!("\n== Table III — weak-scaling downstream tasks, {model} ==");
+            figures::print_task_table(&rows);
+            for r in &rows4 {
+                println!("{:>6} GPUs  batch {:>4}  val loss {:.4}",
+                         r.gpus, r.global_batch, r.final_val);
+            }
+        }
+        "ablation" => {
+            let rt = Runtime::cpu()?;
+            let model = args.str_or("model", "nano");
+            let iters = args.usize_or("iters", 300);
+            let groups = args.usize_or("groups", 4);
+            let arms = figures::ablation(&rt, &model, iters, groups)?;
+            println!("\n== Ablation — Pier technique dissection, {model}, {iters} iters ==");
+            println!("{:<18} {:>10} {:>12} {:>10}", "variant", "val loss", "tail train", "spike");
+            for a in &arms {
+                println!(
+                    "{:<18} {:>10.4} {:>12.4} {:>10}",
+                    a.name,
+                    a.log.final_val_loss().unwrap_or(f64::NAN),
+                    a.log.tail_train_loss(20),
+                    a.log
+                        .switch_spike(iters / 5)
+                        .map(|s| format!("{s:+.4}"))
+                        .unwrap_or_else(|| "n/a".into()),
+                );
+            }
+        }
+        "table4" => {
+            let rt = Runtime::cpu()?;
+            let model = args.str_or("model", "nano");
+            let iters = args.usize_or("iters", 200);
+            let intervals: Vec<usize> = args
+                .list_or("intervals", &["5", "10", "20", "50"])
+                .iter()
+                .map(|s| s.parse().unwrap())
+                .collect();
+            let rows = figures::table4(&rt, &model, iters, &intervals)?;
+            println!("\n== Table IV — sync-interval sweep, {model} ==");
+            println!("{:>10} {:>10}", "interval", "val loss");
+            for r in &rows {
+                println!("{:>10} {:>10.4}", r.interval, r.final_val);
+            }
+        }
+        other => bail!("unknown repro target {other}; see `pier` usage"),
+    }
+    Ok(())
+}
+
+fn cmd_config(args: &Args) -> Result<()> {
+    match args.get("model") {
+        Some(name) => {
+            let m = model_or_die(name);
+            println!("{m:#?}\nn_params = {}", m.n_params());
+        }
+        None => {
+            println!(
+                "{:<12} {:>8} {:>6} {:>7} {:>6} {:>6} {:>13} {:>9}",
+                "model", "vocab", "d", "layers", "heads", "seq", "params", "trainable"
+            );
+            for m in MODELS {
+                println!(
+                    "{:<12} {:>8} {:>6} {:>7} {:>6} {:>6} {:>13} {:>9}",
+                    m.name, m.vocab_size, m.d_model, m.n_layers, m.n_heads, m.seq_len,
+                    m.n_params(), m.trainable
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_data(args: &Args) -> Result<()> {
+    use pier::data::build_pipeline;
+    let vocab = args.usize_or("vocab", 512);
+    let docs = args.usize_or("docs", 500);
+    let pipe = build_pipeline(vocab, docs, 11);
+    println!("vocab {} (target {vocab}), train {} tokens, val {} tokens",
+             pipe.tokenizer.vocab_size(), pipe.train.len(), pipe.val.len());
+    let sample = &pipe.train.tokens[..64.min(pipe.train.len())];
+    println!("sample decode: {:?}", pipe.tokenizer.decode(sample));
+    Ok(())
+}

@@ -1,0 +1,170 @@
+//! Run metrics: loss curves, communication stats, speedup/efficiency math
+//! (§VI-B definitions), CSV emission.
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::coordinator::collective::CommStats;
+
+/// One training iteration's record.
+#[derive(Clone, Debug)]
+pub struct IterRecord {
+    pub t: usize,
+    /// Mean training loss across groups at this iteration.
+    pub loss: f64,
+    pub lr: f64,
+    pub gnorm: f64,
+    /// Outer μ in effect (0 when not applicable).
+    pub mu: f64,
+    /// Outer LR in effect (0 when not applicable).
+    pub outer_lr: f64,
+}
+
+/// Full run log for one optimizer arm.
+#[derive(Clone, Debug, Default)]
+pub struct RunLog {
+    pub mode: String,
+    pub model: String,
+    pub iters: Vec<IterRecord>,
+    /// (iteration, validation loss) — evaluated on the shared fixed batches.
+    pub val: Vec<(usize, f64)>,
+    pub comm: CommStatsSnapshot,
+    pub wall_secs: f64,
+    pub switch_step: usize,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct CommStatsSnapshot {
+    pub inner_allreduce_bytes: f64,
+    pub outer_allreduce_bytes: f64,
+    pub broadcast_bytes: f64,
+    pub outer_steps: u64,
+}
+
+impl From<&CommStats> for CommStatsSnapshot {
+    fn from(s: &CommStats) -> Self {
+        CommStatsSnapshot {
+            inner_allreduce_bytes: s.inner_allreduce_bytes,
+            outer_allreduce_bytes: s.outer_allreduce_bytes,
+            broadcast_bytes: s.broadcast_bytes,
+            outer_steps: s.outer_allreduce_calls,
+        }
+    }
+}
+
+impl RunLog {
+    pub fn final_val_loss(&self) -> Option<f64> {
+        self.val.last().map(|&(_, l)| l)
+    }
+
+    /// Largest validation-loss increase over the previous eval point in the
+    /// window right after the switch — Fig. 1/3's "loss spike" metric.
+    pub fn switch_spike(&self, window: usize) -> Option<f64> {
+        if self.switch_step == 0 {
+            return None;
+        }
+        let before = self
+            .val
+            .iter()
+            .rev()
+            .find(|&&(t, _)| t <= self.switch_step)
+            .map(|&(_, l)| l)?;
+        let peak_after = self
+            .val
+            .iter()
+            .filter(|&&(t, _)| t > self.switch_step && t <= self.switch_step + window)
+            .map(|&(_, l)| l)
+            .fold(f64::NEG_INFINITY, f64::max);
+        if peak_after.is_finite() {
+            Some(peak_after - before)
+        } else {
+            None
+        }
+    }
+
+    /// Smoothed training loss at the end of the run (mean of last k).
+    pub fn tail_train_loss(&self, k: usize) -> f64 {
+        let n = self.iters.len();
+        if n == 0 {
+            return f64::NAN;
+        }
+        let tail = &self.iters[n.saturating_sub(k)..];
+        tail.iter().map(|r| r.loss).sum::<f64>() / tail.len() as f64
+    }
+
+    /// Write `t,loss,lr,gnorm,mu,outer_lr` CSV plus a `.val.csv` companion.
+    pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "t,loss,lr,gnorm,mu,outer_lr")?;
+        for r in &self.iters {
+            writeln!(f, "{},{:.6},{:.6e},{:.4},{:.3},{:.3}",
+                     r.t, r.loss, r.lr, r.gnorm, r.mu, r.outer_lr)?;
+        }
+        let val_path = path.with_extension("val.csv");
+        let mut f = std::fs::File::create(val_path)?;
+        writeln!(f, "t,val_loss")?;
+        for &(t, l) in &self.val {
+            writeln!(f, "{},{:.6}", t, l)?;
+        }
+        Ok(())
+    }
+}
+
+// ---- §VI-B runtime metrics -------------------------------------------------
+
+/// Speedup S = T_baseline / T_pier.
+pub fn speedup(t_baseline: f64, t_pier: f64) -> f64 {
+    t_baseline / t_pier
+}
+
+/// Performance improvement Δp = (T_baseline − T_pier)/T_baseline × 100 %.
+pub fn improvement_pct(t_baseline: f64, t_pier: f64) -> f64 {
+    (t_baseline - t_pier) / t_baseline * 100.0
+}
+
+/// Scaling efficiency e = (T_M / T_N) · (M / N) for a fixed problem size.
+pub fn scaling_efficiency(t_m: f64, t_n: f64, m: usize, n: usize) -> f64 {
+    (t_m / t_n) * (m as f64 / n as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn speedup_and_improvement() {
+        assert!((speedup(10.0, 4.0) - 2.5).abs() < 1e-12);
+        assert!((improvement_pct(10.0, 4.0) - 60.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn efficiency_perfect_scaling_is_one() {
+        // doubling GPUs halves time → e = 1
+        assert!((scaling_efficiency(10.0, 5.0, 8, 16) - 1.0).abs() < 1e-12);
+        // no improvement → e = M/N
+        assert!((scaling_efficiency(10.0, 10.0, 8, 16) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn switch_spike_detects_bump() {
+        let mut log = RunLog { switch_step: 100, ..Default::default() };
+        log.val = vec![(50, 3.0), (100, 2.8), (110, 3.4), (150, 2.9), (600, 2.5)];
+        let spike = log.switch_spike(200).unwrap();
+        assert!((spike - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn switch_spike_none_for_adamw() {
+        let log = RunLog { switch_step: 0, ..Default::default() };
+        assert!(log.switch_spike(100).is_none());
+    }
+
+    #[test]
+    fn tail_loss() {
+        let mut log = RunLog::default();
+        for (i, l) in [5.0, 4.0, 3.0, 2.0].iter().enumerate() {
+            log.iters.push(IterRecord { t: i, loss: *l, lr: 0.0, gnorm: 0.0, mu: 0.0, outer_lr: 0.0 });
+        }
+        assert!((log.tail_train_loss(2) - 2.5).abs() < 1e-12);
+    }
+}

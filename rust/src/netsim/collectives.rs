@@ -1,0 +1,147 @@
+//! Closed-form collective cost models (α–β) over the bandwidth hierarchy.
+//!
+//! Conventions: `v` is the payload per rank (bytes of the tensor being
+//! reduced/gathered), ring algorithms, full-duplex links. These formulas
+//! are the analytic counterpart of the DES fluid model in [`super::event`];
+//! `netsim::tests` and the property suite check the two agree.
+
+use crate::perfmodel::gpu::{ClusterSpec, LinkSpec};
+
+/// Ring all-reduce over `n` ranks on one link class:
+/// `2·(n−1)/n · v/β + 2·(n−1)·α`.
+pub fn ring_allreduce(n: usize, v: f64, link: &LinkSpec) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let nf = n as f64;
+    2.0 * (nf - 1.0) / nf * v / link.effective_bw() + 2.0 * (nf - 1.0) * link.latency
+}
+
+/// Ring all-gather where each rank contributes `v_shard` bytes:
+/// `(n−1)·v_shard/β + (n−1)·α`.
+pub fn ring_allgather(n: usize, v_shard: f64, link: &LinkSpec) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let nf = n as f64;
+    (nf - 1.0) * v_shard / link.effective_bw() + (nf - 1.0) * link.latency
+}
+
+/// Tree broadcast of `v` bytes to `n` ranks.
+pub fn broadcast(n: usize, v: f64, link: &LinkSpec) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let depth = (n as f64).log2().ceil();
+    depth * (v / link.effective_bw() + link.latency)
+}
+
+/// Hierarchical all-reduce of `v` bytes across `world` GPUs on `cluster`:
+/// intra-node ring reduce-scatter + inter-node ring all-reduce (the
+/// `gpus_per_node` concurrent inter-node rings share the node's injection
+/// bandwidth, so node-level time is `2·(N−1)/N · v / β_node`) + intra-node
+/// all-gather. Degenerates to a single ring when the span fits one level.
+pub fn hierarchical_allreduce(world: usize, v: f64, cluster: &ClusterSpec) -> f64 {
+    if world <= 1 {
+        return 0.0;
+    }
+    let gpn = cluster.gpus_per_node.min(world);
+    let nodes = world.div_ceil(cluster.gpus_per_node).max(1);
+    if nodes == 1 {
+        return ring_allreduce(world, v, &cluster.intra);
+    }
+    if gpn == 1 {
+        return ring_allreduce(nodes, v, &cluster.inter);
+    }
+    let nf = nodes as f64;
+    let gf = gpn as f64;
+    // intra reduce-scatter + all-gather: 2·(g−1)/g·v/β_intra
+    let intra = 2.0 * (gf - 1.0) / gf * v / cluster.intra.effective_bw()
+        + 2.0 * (gf - 1.0) * cluster.intra.latency;
+    // inter: g concurrent rings, each v/g bytes, sharing node bandwidth β_node
+    let inter = 2.0 * (nf - 1.0) / nf * v / cluster.inter.effective_bw()
+        + 2.0 * (nf - 1.0) * cluster.inter.latency;
+    intra + inter
+}
+
+/// The outer synchronization of §IV-C: per-TP-rank all-reduce of the fp32
+/// model-delta shard across all DP replicas. The `tp` concurrent
+/// collectives each carry `v_total/tp` bytes and (when TP ranks sit on the
+/// same node, the Megatron placement) share the node's injection link — so
+/// node-level bytes equal `v_total` but the rings run in parallel,
+/// overlapping their latency terms.
+pub fn outer_sync_time(dp: usize, tp: usize, v_total: f64, cluster: &ClusterSpec) -> f64 {
+    if dp <= 1 {
+        return 0.0;
+    }
+    let nf = dp as f64;
+    let shard = v_total / tp as f64;
+    // Each of the tp rings: 2·(dp−1)/dp·shard over its share of node bw.
+    let per_ring_bw = cluster.inter.effective_bw() / tp as f64;
+    2.0 * (nf - 1.0) / nf * shard / per_ring_bw + 2.0 * (nf - 1.0) * cluster.inter.latency
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::gpu::{LinkSpec, PERLMUTTER, VISTA};
+
+    const L: LinkSpec = LinkSpec { latency: 1e-6, bandwidth: 100e9, contention: 1.0 };
+
+    #[test]
+    fn single_rank_free() {
+        assert_eq!(ring_allreduce(1, 1e9, &L), 0.0);
+        assert_eq!(ring_allgather(1, 1e9, &L), 0.0);
+        assert_eq!(broadcast(1, 1e9, &L), 0.0);
+    }
+
+    #[test]
+    fn allreduce_approaches_2v_over_beta() {
+        let t8 = ring_allreduce(8, 1e9, &L);
+        let t64 = ring_allreduce(64, 1e9, &L);
+        // bandwidth term grows toward 2·v/β = 20 ms
+        assert!(t8 < t64);
+        assert!(t64 < 0.0205 + 64.0 * 2.0 * 1e-6);
+        assert!(t64 > 0.0196);
+    }
+
+    #[test]
+    fn monotone_in_volume_and_ranks() {
+        assert!(ring_allreduce(8, 2e9, &L) > ring_allreduce(8, 1e9, &L));
+        assert!(ring_allreduce(16, 1e9, &L) > ring_allreduce(8, 1e9, &L));
+    }
+
+    #[test]
+    fn hierarchical_uses_fast_links_intra() {
+        // one node → NVLink-only; crossing nodes adds fabric time
+        let v = 3e9; // XL bf16 grads
+        let one_node = hierarchical_allreduce(4, v, &PERLMUTTER);
+        let two_nodes = hierarchical_allreduce(8, v, &PERLMUTTER);
+        assert!(two_nodes > 2.0 * one_node, "{one_node} vs {two_nodes}");
+    }
+
+    #[test]
+    fn achieved_bandwidth_semantics() {
+        // Link bandwidths encode *achieved* ring-allreduce busbw fit to the
+        // paper's AdamW baselines: Perlmutter's Slingshot runs sustained
+        // far less than Vista's dedicated NDR in those measurements, so the
+        // steady allreduce is slower on Perlmutter …
+        let v = 3e9;
+        assert!(
+            hierarchical_allreduce(64, v, &PERLMUTTER) > hierarchical_allreduce(64, v, &VISTA)
+        );
+        // … while Vista's *burst* factor (shared fabric) is the larger one.
+        assert!(VISTA.burst_factor > PERLMUTTER.burst_factor);
+    }
+
+    #[test]
+    fn outer_sync_tp_splits_latency_not_bandwidth() {
+        // With TP rings sharing the NIC, the bandwidth term is ≈ constant in
+        // tp but never worse; latency terms overlap.
+        let v = 6e9; // fp32 deltas
+        let t1 = outer_sync_time(32, 1, v, &PERLMUTTER);
+        let t4 = outer_sync_time(32, 4, v, &PERLMUTTER);
+        assert!((t1 - t4).abs() / t1 < 0.05, "{t1} vs {t4}");
+        assert_eq!(outer_sync_time(1, 4, v, &PERLMUTTER), 0.0);
+    }
+}

@@ -1,0 +1,210 @@
+//! Discrete-event network simulator (fluid-flow fair sharing).
+//!
+//! Cross-validates the closed-form collective models and resolves what they
+//! cannot: *contention* between concurrent transfers sharing a link (the
+//! per-TP-rank outer all-reduces of Fig. 2, Vista's single NIC per node).
+//!
+//! Model: links are resources with fixed capacity; a flow consumes one unit
+//! on every link it traverses; each link divides its capacity equally among
+//! its active flows and a flow's rate is its bottleneck share (processor-
+//! sharing approximation of TCP/RDMA fairness). Events occur when a flow
+//! finishes; rates are recomputed on every event — exact for piecewise-
+//! constant rate systems like this one.
+
+/// Link handle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LinkId(pub usize);
+
+#[derive(Clone, Debug)]
+pub struct Flow {
+    /// Remaining payload bytes.
+    pub bytes: f64,
+    /// Startup latency before transfer begins (α terms aggregated).
+    pub latency: f64,
+    /// Links traversed (each contends).
+    pub links: Vec<LinkId>,
+    /// Caller tag for result correlation.
+    pub tag: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct FlowResult {
+    pub tag: usize,
+    pub finish: f64,
+}
+
+pub struct Network {
+    capacities: Vec<f64>,
+}
+
+impl Network {
+    pub fn new() -> Network {
+        Network { capacities: Vec::new() }
+    }
+
+    pub fn add_link(&mut self, capacity: f64) -> LinkId {
+        self.capacities.push(capacity);
+        LinkId(self.capacities.len() - 1)
+    }
+
+    /// Run a batch of flows that all start at t=0; returns per-flow finish
+    /// times and the makespan.
+    pub fn run(&self, flows: Vec<Flow>) -> (Vec<FlowResult>, f64) {
+        #[derive(Clone)]
+        struct Active {
+            bytes: f64,
+            gate: f64, // time at which transfer may start (latency)
+            links: Vec<usize>,
+            tag: usize,
+        }
+        let mut active: Vec<Active> = flows
+            .into_iter()
+            .map(|f| Active {
+                bytes: f.bytes,
+                gate: f.latency,
+                links: f.links.iter().map(|l| l.0).collect(),
+                tag: f.tag,
+            })
+            .collect();
+        let mut results = Vec::new();
+        let mut now = 0.0f64;
+
+        while !active.is_empty() {
+            // 1. per-link active counts (only flows past their gate transfer)
+            let mut counts = vec![0usize; self.capacities.len()];
+            for f in &active {
+                if f.gate <= now {
+                    for &l in &f.links {
+                        counts[l] += 1;
+                    }
+                }
+            }
+            // 2. rates
+            let rates: Vec<f64> = active
+                .iter()
+                .map(|f| {
+                    if f.gate > now {
+                        0.0
+                    } else {
+                        f.links
+                            .iter()
+                            .map(|&l| self.capacities[l] / counts[l] as f64)
+                            .fold(f64::INFINITY, f64::min)
+                    }
+                })
+                .collect();
+            // 3. next event: a flow finishing or a gate opening
+            let mut dt = f64::INFINITY;
+            for (f, &r) in active.iter().zip(&rates) {
+                if f.gate > now {
+                    dt = dt.min(f.gate - now);
+                } else if r > 0.0 {
+                    dt = dt.min(f.bytes / r);
+                } else if f.bytes <= 0.0 {
+                    dt = 0.0;
+                }
+            }
+            assert!(dt.is_finite(), "deadlocked flows");
+            let dt = dt.max(0.0);
+            let old_now = now;
+            now += dt;
+            // 4. advance every transferring flow over the whole interval …
+            for (f, &r) in active.iter_mut().zip(&rates) {
+                if f.gate <= old_now {
+                    f.bytes -= r * dt;
+                }
+            }
+            // … then retire everything that finished at this event.
+            let mut i = 0;
+            while i < active.len() {
+                if active[i].bytes <= 1e-9 && active[i].gate <= now {
+                    results.push(FlowResult { tag: active[i].tag, finish: now });
+                    active.remove(i);
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        let makespan = results.iter().map(|r| r.finish).fold(0.0, f64::max);
+        (results, makespan)
+    }
+}
+
+impl Default for Network {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_flow_bandwidth_bound() {
+        let mut net = Network::new();
+        let l = net.add_link(100.0);
+        let (res, makespan) = net.run(vec![Flow { bytes: 500.0, latency: 0.0, links: vec![l], tag: 0 }]);
+        assert!((makespan - 5.0).abs() < 1e-9);
+        assert_eq!(res.len(), 1);
+    }
+
+    #[test]
+    fn latency_gates_start() {
+        let mut net = Network::new();
+        let l = net.add_link(100.0);
+        let (_, makespan) =
+            net.run(vec![Flow { bytes: 500.0, latency: 2.0, links: vec![l], tag: 0 }]);
+        assert!((makespan - 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fair_sharing_halves_rate() {
+        let mut net = Network::new();
+        let l = net.add_link(100.0);
+        let flows = vec![
+            Flow { bytes: 500.0, latency: 0.0, links: vec![l], tag: 0 },
+            Flow { bytes: 500.0, latency: 0.0, links: vec![l], tag: 1 },
+        ];
+        let (_, makespan) = net.run(flows);
+        assert!((makespan - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn short_flow_releases_capacity() {
+        let mut net = Network::new();
+        let l = net.add_link(100.0);
+        let flows = vec![
+            Flow { bytes: 100.0, latency: 0.0, links: vec![l], tag: 0 },
+            Flow { bytes: 500.0, latency: 0.0, links: vec![l], tag: 1 },
+        ];
+        let (res, makespan) = net.run(flows);
+        // flow0 finishes at 2s (50 B/s each); flow1 has 400 left, full rate
+        let f0 = res.iter().find(|r| r.tag == 0).unwrap().finish;
+        assert!((f0 - 2.0).abs() < 1e-9);
+        assert!((makespan - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bottleneck_is_min_across_links() {
+        let mut net = Network::new();
+        let fast = net.add_link(1000.0);
+        let slow = net.add_link(10.0);
+        let (_, makespan) =
+            net.run(vec![Flow { bytes: 100.0, latency: 0.0, links: vec![fast, slow], tag: 0 }]);
+        assert!((makespan - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn disjoint_links_run_in_parallel() {
+        let mut net = Network::new();
+        let a = net.add_link(100.0);
+        let b = net.add_link(100.0);
+        let flows = vec![
+            Flow { bytes: 500.0, latency: 0.0, links: vec![a], tag: 0 },
+            Flow { bytes: 500.0, latency: 0.0, links: vec![b], tag: 1 },
+        ];
+        let (_, makespan) = net.run(flows);
+        assert!((makespan - 5.0).abs() < 1e-9);
+    }
+}

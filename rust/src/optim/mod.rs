@@ -1,0 +1,10 @@
+//! Optimizer math: schedules (inner cosine LR, Pier's outer LR + momentum
+//! decay), the pure-Rust AdamW oracle, and the outer Nesterov optimizer.
+
+pub mod adamw;
+pub mod nesterov;
+pub mod schedule;
+
+pub use adamw::{clip_global_norm, AdamW};
+pub use nesterov::{OuterOpt, OuterStep};
+pub use schedule::{inner_lr, outer_lr, outer_momentum, DILOCO_OUTER_LR};

@@ -1,0 +1,198 @@
+//! The outer optimizer: Nesterov momentum over model deltas (§IV, §V).
+//!
+//! The outer "gradient" is the all-reduced model delta `Δθ = θ_{t} − θ_{t−H}`
+//! (sign convention: Δθ points in the *descent* direction already, so the
+//! update *adds* it — Alg. 2 line 21).
+//!
+//! Two formulations, both shipped because §V measures both and picks
+//! PyTorch's:
+//!
+//! * [`NesterovKind::PyTorch`]: `M ← μM + Δ; θ ← θ_{t−H} + lr·(μM + Δ)`
+//!   — the single-step approximation `torch.optim.SGD(nesterov=True)` uses.
+//! * [`NesterovKind::Theoretical`]: classical look-ahead (Nesterov 1983):
+//!   velocity `M ← μM + Δ`, position `θ ← θ_{t−H} + lr·M`, and the *next*
+//!   inner phase starts from the look-ahead point `θ + μ·lr·M` so the next
+//!   delta is evaluated at the anticipated position. [`OuterOpt::step`]
+//!   returns both positions; the trainer decides which one seeds the groups.
+
+use crate::config::NesterovKind;
+
+/// Outer-optimizer state: the momentum buffer M (Alg. 1/2).
+#[derive(Clone, Debug)]
+pub struct OuterOpt {
+    pub momentum: Vec<f32>,
+    pub kind: NesterovKind,
+}
+
+/// Result of one outer step.
+pub struct OuterStep {
+    /// Committed parameters θ (what checkpoints/eval see).
+    pub committed: Vec<f32>,
+    /// Where the next inner phase should start (= `committed` for PyTorch;
+    /// the look-ahead point for the theoretical variant).
+    pub next_start: Vec<f32>,
+}
+
+impl OuterOpt {
+    pub fn new(n: usize, kind: NesterovKind) -> OuterOpt {
+        OuterOpt { momentum: vec![0.0; n], kind }
+    }
+
+    /// Alg. 1 line 6: accumulate-only during the lazy-start phase.
+    /// `M ← μM + Δ` without touching parameters.
+    pub fn accumulate(&mut self, mu: f64, delta: &[f32]) {
+        assert_eq!(delta.len(), self.momentum.len());
+        let mu = mu as f32;
+        for (m, &d) in self.momentum.iter_mut().zip(delta) {
+            *m = mu * *m + d;
+        }
+    }
+
+    /// Alg. 2 lines 20–21 (plus the theoretical variant's look-ahead).
+    ///
+    /// `base` is θ_{t−H} (the pre-inner-phase parameters), `delta` the
+    /// all-reduced Δθ, `mu` the scheduled momentum coefficient, `lr` the
+    /// scheduled outer learning rate.
+    pub fn step(&mut self, base: &[f32], delta: &[f32], mu: f64, lr: f64) -> OuterStep {
+        assert_eq!(base.len(), delta.len());
+        assert_eq!(base.len(), self.momentum.len());
+        let n = base.len();
+        let (muf, lrf) = (mu as f32, lr as f32);
+        let mut committed = vec![0.0f32; n];
+        match self.kind {
+            NesterovKind::PyTorch => {
+                for i in 0..n {
+                    let m = muf * self.momentum[i] + delta[i];
+                    self.momentum[i] = m;
+                    committed[i] = base[i] + lrf * (muf * m + delta[i]);
+                }
+                OuterStep { next_start: committed.clone(), committed }
+            }
+            NesterovKind::Theoretical => {
+                let mut next = vec![0.0f32; n];
+                for i in 0..n {
+                    let m = muf * self.momentum[i] + delta[i];
+                    self.momentum[i] = m;
+                    let pos = base[i] + lrf * m;
+                    committed[i] = pos;
+                    next[i] = pos + muf * lrf * m; // look-ahead
+                }
+                OuterStep { committed, next_start: next }
+            }
+        }
+    }
+
+    pub fn momentum_norm(&self) -> f64 {
+        self.momentum.iter().map(|&m| (m as f64) * (m as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Fragment variant of [`OuterOpt::step`] for streaming partial
+    /// synchronization: operates on momentum[lo..lo+len) with `base`/`delta`
+    /// being the corresponding parameter fragment. Identical math to `step`
+    /// restricted to the range.
+    pub fn step_range(
+        &mut self,
+        lo: usize,
+        base: &[f32],
+        delta: &[f32],
+        mu: f64,
+        lr: f64,
+    ) -> OuterStep {
+        assert_eq!(base.len(), delta.len());
+        assert!(lo + base.len() <= self.momentum.len());
+        let n = base.len();
+        let (muf, lrf) = (mu as f32, lr as f32);
+        let mut committed = vec![0.0f32; n];
+        match self.kind {
+            NesterovKind::PyTorch => {
+                for i in 0..n {
+                    let m = muf * self.momentum[lo + i] + delta[i];
+                    self.momentum[lo + i] = m;
+                    committed[i] = base[i] + lrf * (muf * m + delta[i]);
+                }
+                OuterStep { next_start: committed.clone(), committed }
+            }
+            NesterovKind::Theoretical => {
+                let mut next = vec![0.0f32; n];
+                for i in 0..n {
+                    let m = muf * self.momentum[lo + i] + delta[i];
+                    self.momentum[lo + i] = m;
+                    let pos = base[i] + lrf * m;
+                    committed[i] = pos;
+                    next[i] = pos + muf * lrf * m;
+                }
+                OuterStep { committed, next_start: next }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulate_matches_alg1() {
+        let mut o = OuterOpt::new(2, NesterovKind::PyTorch);
+        o.accumulate(0.9, &[1.0, 2.0]); // M = [1, 2]
+        o.accumulate(0.9, &[1.0, 0.0]); // M = [1.9, 1.8]
+        assert!((o.momentum[0] - 1.9).abs() < 1e-6);
+        assert!((o.momentum[1] - 1.8).abs() < 1e-6);
+    }
+
+    #[test]
+    fn pytorch_step_matches_alg2_line21() {
+        // θ ← θ_{t−r} + lr·(M'·μ + Δ) with M' = μM + Δ
+        let mut o = OuterOpt::new(1, NesterovKind::PyTorch);
+        o.momentum[0] = 2.0;
+        let s = o.step(&[10.0], &[1.0], 0.5, 0.7);
+        let m_new = 0.5 * 2.0 + 1.0; // 2.0
+        assert!((o.momentum[0] - m_new).abs() < 1e-6);
+        let expect = 10.0 + 0.7 * (0.5 * m_new + 1.0);
+        assert!((s.committed[0] - expect).abs() < 1e-6);
+        assert_eq!(s.committed, s.next_start);
+    }
+
+    #[test]
+    fn theoretical_lookahead_differs() {
+        let mut o = OuterOpt::new(1, NesterovKind::Theoretical);
+        let s = o.step(&[0.0], &[1.0], 0.9, 1.0);
+        assert!((s.committed[0] - 1.0).abs() < 1e-6); // θ + lr·M, M=1
+        assert!((s.next_start[0] - 1.9).abs() < 1e-6); // + μ·lr·M
+    }
+
+    #[test]
+    fn zero_mu_zero_momentum_is_plain_average_apply() {
+        // μ=0, lr=1 → θ ← θ_{t−H} + Δ, i.e. plain parameter averaging.
+        let mut o = OuterOpt::new(3, NesterovKind::PyTorch);
+        let s = o.step(&[1.0, 2.0, 3.0], &[0.5, -0.5, 0.0], 0.0, 1.0);
+        assert_eq!(s.committed, vec![1.5, 1.5, 3.0]);
+    }
+
+    #[test]
+    fn step_range_matches_full_step_on_slice() {
+        let base = [1.0f32, 2.0, 3.0, 4.0];
+        let delta = [0.5f32, -0.5, 0.25, -0.25];
+        let mut full = OuterOpt::new(4, NesterovKind::PyTorch);
+        full.momentum.copy_from_slice(&[0.1, 0.2, 0.3, 0.4]);
+        let mut frag = full.clone();
+        let s_full = full.step(&base, &delta, 0.9, 0.7);
+        let s_frag = frag.step_range(1, &base[1..3], &delta[1..3], 0.9, 0.7);
+        assert_eq!(&s_full.committed[1..3], s_frag.committed.as_slice());
+        assert_eq!(&full.momentum[1..3], &frag.momentum[1..3]);
+        // untouched regions keep their old momentum
+        assert_eq!(frag.momentum[0], 0.1);
+        assert_eq!(frag.momentum[3], 0.4);
+    }
+
+    #[test]
+    fn momentum_norm_bounded_by_geometric_series() {
+        // With ||Δ|| ≤ 1 and μ = 0.9, ||M|| ≤ 1/(1−μ) = 10.
+        let mut o = OuterOpt::new(1, NesterovKind::PyTorch);
+        for _ in 0..500 {
+            o.accumulate(0.9, &[1.0]);
+        }
+        assert!(o.momentum_norm() <= 10.0 + 1e-3);
+        assert!(o.momentum_norm() > 9.9);
+    }
+}

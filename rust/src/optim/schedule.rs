@@ -1,0 +1,140 @@
+//! Learning-rate and momentum schedules.
+//!
+//! * Inner LR: 2 % linear warmup then cosine decay to `min_lr` (Table I).
+//! * Outer LR (§V): Pier's empirical schedule — linear 0→1 across the
+//!   10–20 % window (starting when the outer optimizer activates), 1.1 in
+//!   the 20–80 % window, 0.9 for the final 20 %.
+//! * Outer momentum μ (§IV-B, Alg. 2): 0.99 in [10 %, 15 %), 0.95 in
+//!   [15 %, 20 %), then the DiLoCo-recommended 0.9.
+
+use crate::config::TrainConfig;
+
+/// Inner AdamW learning rate at (0-based) iteration `t`.
+pub fn inner_lr(cfg: &TrainConfig, t: usize) -> f64 {
+    let warmup = (cfg.lr_warmup_pct * cfg.lr_decay_iters as f64).round() as usize;
+    if warmup > 0 && t < warmup {
+        return cfg.inner_lr * (t as f64 + 1.0) / warmup as f64;
+    }
+    let total = cfg.lr_decay_iters.max(warmup + 1);
+    if t >= total {
+        return cfg.inner_min_lr;
+    }
+    let progress = (t - warmup) as f64 / (total - warmup) as f64;
+    let cosine = 0.5 * (1.0 + (std::f64::consts::PI * progress).cos());
+    cfg.inner_min_lr + (cfg.inner_lr - cfg.inner_min_lr) * cosine
+}
+
+/// Pier's outer learning rate at iteration `t` (only queried at outer
+/// steps, i.e. `t ≥ switch_step`).
+pub fn outer_lr(cfg: &TrainConfig, t: usize) -> f64 {
+    let total = cfg.iterations as f64;
+    let frac = t as f64 / total;
+    let ramp_end = 2.0 * cfg.warmup_pct; // 0.20
+    if frac < ramp_end {
+        // §V: "linearly increases from 0 to 1" across the first 10–20 % of
+        // training. The ramp is anchored at t = 0, so when the outer
+        // optimizer activates at the 10 % switch the lr is already 0.5 —
+        // an lr near 0 *at* the switch would discard the groups' first
+        // inner phases entirely (θ ← θ_anchor), destabilizing exactly the
+        // transition the warmup is meant to protect.
+        frac / ramp_end
+    } else if frac < 0.8 {
+        1.1
+    } else {
+        0.9
+    }
+}
+
+/// DiLoCo's fixed outer learning rate (the paper quotes the recommended
+/// 0.7) — used by the vanilla-DiLoCo baseline arm.
+pub const DILOCO_OUTER_LR: f64 = 0.7;
+
+/// Pier's outer momentum coefficient at iteration `t` (Alg. 2 lines 12–18).
+/// With the `momentum_decay` ablation switch off, μ stays at the base
+/// coefficient throughout.
+pub fn outer_momentum(cfg: &TrainConfig, t: usize) -> f64 {
+    if !cfg.momentum_decay {
+        return cfg.outer_momentum;
+    }
+    let total = cfg.iterations as f64;
+    let frac = t as f64 / total;
+    if frac < 0.10 {
+        // lazy-start accumulation phase (Alg. 1) uses the base μ
+        cfg.outer_momentum
+    } else if frac < 0.15 {
+        0.99
+    } else if frac < 0.20 {
+        0.95
+    } else {
+        cfg.outer_momentum // 0.9 default
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TrainConfig;
+
+    fn cfg() -> TrainConfig {
+        let mut c = TrainConfig::default_for(100_000);
+        c.inner_lr = 3e-4;
+        c.inner_min_lr = 3e-5;
+        c
+    }
+
+    #[test]
+    fn inner_warmup_then_peak() {
+        let c = cfg();
+        assert!(inner_lr(&c, 0) < 1e-6);
+        let peak_t = 2000; // 2% of 100k
+        assert!((inner_lr(&c, peak_t) - 3e-4).abs() / 3e-4 < 1e-2);
+    }
+
+    #[test]
+    fn inner_cosine_hits_min() {
+        let c = cfg();
+        assert!((inner_lr(&c, 100_000) - 3e-5).abs() < 1e-12);
+        assert!((inner_lr(&c, 99_999) - 3e-5).abs() / 3e-5 < 0.01);
+        // midpoint ≈ mean of peak and min
+        let mid = inner_lr(&c, 51_000);
+        assert!((mid - 1.65e-4).abs() / 1.65e-4 < 0.02, "{mid}");
+    }
+
+    #[test]
+    fn inner_monotone_after_warmup() {
+        let c = cfg();
+        let mut prev = inner_lr(&c, 2000);
+        for t in (3000..100_000).step_by(1000) {
+            let lr = inner_lr(&c, t);
+            assert!(lr <= prev + 1e-15);
+            prev = lr;
+        }
+    }
+
+    #[test]
+    fn outer_lr_paper_schedule() {
+        let c = cfg();
+        assert_eq!(outer_lr(&c, 0), 0.0);
+        assert!((outer_lr(&c, 10_000) - 0.5).abs() < 1e-9); // 0.5 at switch
+        assert!((outer_lr(&c, 15_000) - 0.75).abs() < 1e-9);
+        assert!((outer_lr(&c, 19_999) - 1.0).abs() < 1e-3);
+        assert_eq!(outer_lr(&c, 20_000), 1.1);
+        assert_eq!(outer_lr(&c, 79_999), 1.1);
+        assert_eq!(outer_lr(&c, 80_000), 0.9);
+        assert_eq!(outer_lr(&c, 99_999), 0.9);
+    }
+
+    #[test]
+    fn momentum_decay_boundaries() {
+        let c = cfg();
+        // Alg. 2: [10%,15%) → 0.99, [15%,20%) → 0.95, ≥20% → 0.9
+        assert_eq!(outer_momentum(&c, 10_000), 0.99);
+        assert_eq!(outer_momentum(&c, 14_999), 0.99);
+        assert_eq!(outer_momentum(&c, 15_000), 0.95);
+        assert_eq!(outer_momentum(&c, 19_999), 0.95);
+        assert_eq!(outer_momentum(&c, 20_000), 0.9);
+        assert_eq!(outer_momentum(&c, 99_999), 0.9);
+        // lazy start accumulates with the base coefficient
+        assert_eq!(outer_momentum(&c, 5_000), 0.9);
+    }
+}

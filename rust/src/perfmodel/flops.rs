@@ -1,0 +1,94 @@
+//! Transformer FLOPs / memory accounting and the compute-time model.
+
+use crate::config::ModelConfig;
+use crate::perfmodel::gpu::GpuSpec;
+
+/// Training FLOPs per token: the standard 6·N (fwd+bwd for all matmul
+//  params) plus the attention score/value term 12·L·s·d per token.
+pub fn flops_per_token(m: &ModelConfig) -> f64 {
+    let n = m.n_params() as f64;
+    let attn = 12.0 * m.n_layers as f64 * m.seq_len as f64 * m.d_model as f64;
+    6.0 * n + attn
+}
+
+/// FLOPs for one optimizer iteration at `seqs` sequences.
+pub fn flops_per_iter(m: &ModelConfig, seqs: usize) -> f64 {
+    flops_per_token(m) * (seqs * m.seq_len) as f64
+}
+
+/// MFU at a given local batch (sequences per GPU): a saturating curve —
+/// small local batches under-fill the GPU (the paper lowers local batch to
+/// 4 at 128 GPUs and flags the utilization drop, §VI-B1).
+pub fn mfu(gpu: &GpuSpec, local_batch: f64) -> f64 {
+    gpu.mfu_max * local_batch / (local_batch + gpu.mfu_half_batch)
+}
+
+/// Compute seconds for one iteration on one GPU at `local_seqs` sequences
+/// (with `tp` ways tensor parallelism splitting the math).
+pub fn compute_time(m: &ModelConfig, gpu: &GpuSpec, local_seqs: f64, tp: usize) -> f64 {
+    let fl = flops_per_token(m) * local_seqs * m.seq_len as f64 / tp as f64;
+    fl / (gpu.peak_flops_bf16 * mfu(gpu, local_seqs))
+}
+
+/// Training-state memory per GPU (bytes): bf16 params+grads, fp32 master +
+/// two Adam moments (Megatron mixed precision), split `tp` ways.
+pub fn state_bytes(m: &ModelConfig, tp: usize) -> f64 {
+    let n = m.n_params() as f64 / tp as f64;
+    // 2 (bf16 p) + 2 (bf16 g) + 4 (fp32 master) + 4 (m) + 4 (v)
+    16.0 * n
+}
+
+/// Extra bytes the outer optimizer needs when *not* offloaded (fp32 old
+/// params + fp32 momentum) — what §V's CPU offload saves.
+pub fn outer_state_bytes(m: &ModelConfig, tp: usize) -> f64 {
+    8.0 * m.n_params() as f64 / tp as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model;
+    use crate::perfmodel::gpu::A100_40G;
+
+    #[test]
+    fn six_n_dominates() {
+        let m = model("gpt2-xl").unwrap();
+        let f = flops_per_token(m);
+        let six_n = 6.0 * m.n_params() as f64;
+        assert!(f > six_n && f < 1.2 * six_n);
+    }
+
+    #[test]
+    fn mfu_saturates() {
+        assert!(mfu(&A100_40G, 0.5) < mfu(&A100_40G, 8.0));
+        assert!(mfu(&A100_40G, 64.0) <= A100_40G.mfu_max);
+        // paper regime: batch 8/GPU runs near peak; batch 4 visibly lower
+        assert!(mfu(&A100_40G, 4.0) / mfu(&A100_40G, 8.0) < 0.95);
+    }
+
+    #[test]
+    fn xl_iteration_time_plausible() {
+        // GPT-2 XL, batch 8 local, A100: ≈ 6·1.5e9·8·1024 / (312e12·0.42)
+        // ≈ 0.5 s — sanity-band check.
+        let m = model("gpt2-xl").unwrap();
+        let t = compute_time(m, &A100_40G, 8.0, 1);
+        assert!(t > 0.2 && t < 2.0, "{t}");
+    }
+
+    #[test]
+    fn memory_model_gates_7b() {
+        // 7B states don't fit one 40 GB A100, but do fit across TP=4 —
+        // exactly the paper's §VI-B3 setup.
+        let m = model("gpt2-7b").unwrap();
+        assert!(state_bytes(m, 1) > 40e9);
+        assert!(state_bytes(m, 4) < 40e9);
+    }
+
+    #[test]
+    fn tp_divides_compute() {
+        let m = model("gpt2-xl").unwrap();
+        let t1 = compute_time(m, &A100_40G, 8.0, 1);
+        let t4 = compute_time(m, &A100_40G, 8.0, 4);
+        assert!((t1 / t4 - 4.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,10 @@
+//! Performance model: GPU/cluster hardware specs and transformer
+//! FLOPs/memory/MFU accounting. Combined with [`crate::netsim`] by
+//! [`crate::simulator`] to regenerate the paper's runtime figures.
+
+pub mod flops;
+pub mod gpu;
+
+pub use flops::{compute_time, flops_per_iter, flops_per_token, mfu, outer_state_bytes,
+                state_bytes};
+pub use gpu::{cluster, ClusterSpec, GpuSpec, LinkSpec, A100_40G, GH200, PERLMUTTER, VISTA};

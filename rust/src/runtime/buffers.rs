@@ -1,0 +1,40 @@
+//! Literal construction/extraction helpers for the PJRT boundary.
+
+use anyhow::{anyhow, Result};
+use xla::Literal;
+
+/// f32 literal of arbitrary shape from a flat slice.
+pub fn lit_f32(data: &[f32], dims: &[i64]) -> Result<Literal> {
+    let n: i64 = dims.iter().product();
+    if n as usize != data.len() {
+        return Err(anyhow!("lit_f32: {} elements vs dims {:?}", data.len(), dims));
+    }
+    Ok(Literal::vec1(data).reshape(dims)?)
+}
+
+/// i32 literal of arbitrary shape from a flat slice.
+pub fn lit_i32(data: &[i32], dims: &[i64]) -> Result<Literal> {
+    let n: i64 = dims.iter().product();
+    if n as usize != data.len() {
+        return Err(anyhow!("lit_i32: {} elements vs dims {:?}", data.len(), dims));
+    }
+    Ok(Literal::vec1(data).reshape(dims)?)
+}
+
+pub fn scalar_f32(x: f32) -> Literal {
+    Literal::scalar(x)
+}
+
+pub fn scalar_i32(x: i32) -> Literal {
+    Literal::scalar(x)
+}
+
+/// Extract a flat f32 vector.
+pub fn to_vec_f32(lit: &Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Extract a scalar f32.
+pub fn to_scalar_f32(lit: &Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}

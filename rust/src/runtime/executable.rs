@@ -1,0 +1,127 @@
+//! PJRT executables: load HLO text, compile once, execute many.
+//!
+//! The pattern (from /opt/xla-example/load_hlo): `HloModuleProto::
+//! from_text_file` → `XlaComputation::from_proto` → `client.compile` →
+//! `execute`. Artifacts are lowered with `return_tuple=True`, so every
+//! execution returns one tuple literal which [`StepExe::run`] decomposes
+//! into the flat output list the manifest signature describes.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+use super::manifest::Manifest;
+
+/// Shared PJRT client (CPU plugin).
+pub struct Runtime {
+    pub client: PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        Ok(Runtime { client: PjRtClient::cpu()? })
+    }
+
+    pub fn platform(&self) -> String {
+        format!("{} ({} devices)", self.client.platform_name(), self.client.device_count())
+    }
+
+    /// Compile one step function from its HLO text file.
+    pub fn load_hlo(&self, path: &Path, name: &str) -> Result<StepExe> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name} from {path:?}"))?;
+        Ok(StepExe { name: name.to_string(), exe })
+    }
+
+    pub fn load_step(&self, man: &Manifest, step: &str) -> Result<StepExe> {
+        self.load_hlo(&man.step_path(step)?, step)
+    }
+
+    /// Load the full step set for a model.
+    pub fn load_model(&self, man: &Manifest) -> Result<ModelExes> {
+        Ok(ModelExes {
+            init_params: self.load_step(man, "init_params")?,
+            train_step: self.load_step(man, "train_step")?,
+            grad_step: self.load_step(man, "grad_step")?,
+            apply_step: self.load_step(man, "apply_step")?,
+            eval_step: self.load_step(man, "eval_step")?,
+            score_step: self.load_step(man, "score_step")?,
+        })
+    }
+}
+
+/// One compiled step function.
+pub struct StepExe {
+    pub name: String,
+    exe: PjRtLoadedExecutable,
+}
+
+impl StepExe {
+    /// Execute with host literals (owned or borrowed); returns the
+    /// decomposed output tuple as host literals. The trainer keeps model
+    /// state as literals between steps and passes borrows here, so the
+    /// per-step cost is the execution itself, not marshalling.
+    ///
+    /// NOTE: this deliberately avoids `PjRtLoadedExecutable::execute`
+    /// (literal inputs): the crate's C wrapper `release()`s every
+    /// literal-derived input buffer without freeing it after the run —
+    /// ~input-size bytes leaked per call, an OOM after a few hundred
+    /// training steps. Uploading through `buffer_from_host_literal` gives
+    /// Rust-owned `PjRtBuffer`s whose `Drop` frees them.
+    pub fn run<L: std::borrow::Borrow<Literal>>(&self, inputs: &[L]) -> Result<Vec<Literal>> {
+        let client = self.exe.client();
+        let bufs: Vec<PjRtBuffer> = inputs
+            .iter()
+            .map(|l| client.buffer_from_host_literal(None, l.borrow()))
+            .collect::<Result<_, _>>()
+            .with_context(|| format!("uploading inputs for {}", self.name))?;
+        let result = self
+            .exe
+            .execute_b(&bufs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let mut tuple = result[0][0].to_literal_sync()?;
+        Ok(tuple.decompose_tuple()?)
+    }
+
+    /// Execute with device buffers, keeping the outputs on device.
+    /// The single tuple output buffer is returned; use
+    /// [`StepExe::run_buffers_decomposed`] when per-element buffers are
+    /// needed.
+    pub fn run_buffers(&self, inputs: &[&PjRtBuffer]) -> Result<Vec<PjRtBuffer>> {
+        let mut result = self
+            .exe
+            .execute_b(inputs)
+            .with_context(|| format!("executing {} (buffers)", self.name))?;
+        Ok(result.swap_remove(0))
+    }
+
+    /// Execute with device buffers and fetch the decomposed tuple to host.
+    pub fn run_buffers_to_host(&self, inputs: &[&PjRtBuffer]) -> Result<Vec<Literal>> {
+        let outs = self.run_buffers(inputs)?;
+        let mut tuple = outs[0].to_literal_sync()?;
+        Ok(tuple.decompose_tuple()?)
+    }
+
+    /// Upload a literal to the executable's device.
+    pub fn to_device(&self, client: &PjRtClient, lit: &Literal) -> Result<PjRtBuffer> {
+        Ok(client.buffer_from_host_literal(None, lit)?)
+    }
+}
+
+/// The six step functions of one lowered model config.
+pub struct ModelExes {
+    pub init_params: StepExe,
+    pub train_step: StepExe,
+    pub grad_step: StepExe,
+    pub apply_step: StepExe,
+    pub eval_step: StepExe,
+    pub score_step: StepExe,
+}

@@ -1,0 +1,235 @@
+//! Artifact manifest: the contract between the AOT compile path (python)
+//! and the Rust runtime.
+//!
+//! `python/compile/aot.py` writes one `manifest.json` per lowered model
+//! config recording the canonical flat parameter ordering (name / shape /
+//! size / offset / decay-flag), the step-function HLO files and their
+//! signatures, and an echo of the model dimensions. Rust never hard-codes a
+//! parameter layout: everything is addressed through this manifest.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct ParamInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub size: usize,
+    /// Offset into the flat f32 parameter vector.
+    pub offset: usize,
+    pub decay: bool,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model_name: String,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub seq_len: usize,
+    pub micro_batch: usize,
+    pub n_params: usize,
+    pub params: Vec<ParamInfo>,
+    /// step name → HLO file (relative to `dir`).
+    pub steps: BTreeMap<String, String>,
+    pub adam_beta1: f64,
+    pub adam_beta2: f64,
+    pub adam_eps: f64,
+    pub clip_grad: f64,
+}
+
+impl Manifest {
+    /// Load `artifacts/<model>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+        Self::from_json(dir, &j)
+    }
+
+    pub fn from_json(dir: &Path, j: &Json) -> Result<Manifest> {
+        let gu = |p: &str| -> Result<usize> {
+            j.path(p).and_then(Json::as_usize).ok_or_else(|| anyhow!("manifest missing {p}"))
+        };
+        let gf = |p: &str| -> Result<f64> {
+            j.path(p).and_then(Json::as_f64).ok_or_else(|| anyhow!("manifest missing {p}"))
+        };
+        let mut params = Vec::new();
+        for (i, entry) in j
+            .get("params")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing params"))?
+            .iter()
+            .enumerate()
+        {
+            let name = entry
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("param {i} missing name"))?
+                .to_string();
+            let shape: Vec<usize> = entry
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("param {name} missing shape"))?
+                .iter()
+                .map(|v| v.as_usize().unwrap_or(0))
+                .collect();
+            let size = entry.get("size").and_then(Json::as_usize).unwrap_or(0);
+            if size != shape.iter().product::<usize>() {
+                bail!("param {name}: size {size} ≠ ∏shape {shape:?}");
+            }
+            params.push(ParamInfo {
+                name,
+                shape,
+                size,
+                offset: entry.get("offset").and_then(Json::as_usize).unwrap_or(0),
+                decay: entry.get("decay").and_then(Json::as_bool).unwrap_or(false),
+            });
+        }
+        // validate offsets are a exact prefix sum
+        let mut offset = 0;
+        for p in &params {
+            if p.offset != offset {
+                bail!("param {}: offset {} ≠ running total {}", p.name, p.offset, offset);
+            }
+            offset += p.size;
+        }
+        let n_params = gu("n_params")?;
+        if offset != n_params {
+            bail!("param sizes sum {} ≠ n_params {}", offset, n_params);
+        }
+
+        let mut steps = BTreeMap::new();
+        if let Some(obj) = j.get("steps").and_then(Json::as_obj) {
+            for (k, v) in obj {
+                steps.insert(
+                    k.clone(),
+                    v.as_str().ok_or_else(|| anyhow!("step {k} not a string"))?.to_string(),
+                );
+            }
+        }
+        for required in ["init_params", "train_step", "grad_step", "apply_step", "eval_step",
+                         "score_step"] {
+            if !steps.contains_key(required) {
+                bail!("manifest missing step {required}");
+            }
+        }
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            model_name: j
+                .path("config.name")
+                .and_then(Json::as_str)
+                .unwrap_or("unknown")
+                .to_string(),
+            vocab_size: gu("config.vocab_size")?,
+            d_model: gu("config.d_model")?,
+            n_layers: gu("config.n_layers")?,
+            n_heads: gu("config.n_heads")?,
+            seq_len: gu("seq_len")?,
+            micro_batch: gu("micro_batch")?,
+            n_params,
+            params,
+            steps,
+            adam_beta1: gf("adam.beta1")?,
+            adam_beta2: gf("adam.beta2")?,
+            adam_eps: gf("adam.eps")?,
+            clip_grad: gf("adam.clip_grad")?,
+        })
+    }
+
+    pub fn step_path(&self, step: &str) -> Result<PathBuf> {
+        self.steps
+            .get(step)
+            .map(|f| self.dir.join(f))
+            .ok_or_else(|| anyhow!("no step {step} in manifest"))
+    }
+
+    pub fn n_tensors(&self) -> usize {
+        self.params.len()
+    }
+
+    /// Token buffer shape `[micro_batch, seq_len + 1]`.
+    pub fn token_shape(&self) -> (usize, usize) {
+        (self.micro_batch, self.seq_len + 1)
+    }
+
+    /// Split a flat f32 vector into per-tensor slices (manifest order).
+    pub fn split_flat<'a>(&self, flat: &'a [f32]) -> Vec<&'a [f32]> {
+        assert_eq!(flat.len(), self.n_params);
+        self.params.iter().map(|p| &flat[p.offset..p.offset + p.size]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_json() -> String {
+        r#"{
+          "config": {"name": "t", "vocab_size": 16, "d_model": 4,
+                      "n_layers": 1, "n_heads": 1, "seq_len": 8},
+          "n_param_tensors": 2, "n_params": 96,
+          "micro_batch": 2, "seq_len": 8,
+          "adam": {"beta1": 0.9, "beta2": 0.999, "eps": 1e-8, "clip_grad": 1.0},
+          "params": [
+            {"name": "wte", "shape": [16, 4], "size": 64, "offset": 0, "decay": true},
+            {"name": "wpe", "shape": [8, 4], "size": 32, "offset": 64, "decay": true}
+          ],
+          "steps": {"init_params": "i.txt", "train_step": "t.txt",
+                     "grad_step": "g.txt", "apply_step": "a.txt",
+                     "eval_step": "e.txt", "score_step": "s.txt"}
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parse_ok() {
+        let j = Json::parse(&sample_json()).unwrap();
+        let m = Manifest::from_json(Path::new("/tmp/x"), &j).unwrap();
+        assert_eq!(m.n_params, 96);
+        assert_eq!(m.params[1].offset, 64);
+        assert_eq!(m.token_shape(), (2, 9));
+        assert_eq!(m.step_path("train_step").unwrap(), Path::new("/tmp/x/t.txt"));
+    }
+
+    #[test]
+    fn rejects_bad_offsets() {
+        let bad = sample_json().replace("\"offset\": 64", "\"offset\": 60");
+        let j = Json::parse(&bad).unwrap();
+        assert!(Manifest::from_json(Path::new("/tmp/x"), &j).is_err());
+    }
+
+    #[test]
+    fn rejects_size_shape_mismatch() {
+        let bad = sample_json().replace("\"size\": 64", "\"size\": 63");
+        let j = Json::parse(&bad).unwrap();
+        assert!(Manifest::from_json(Path::new("/tmp/x"), &j).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_step() {
+        let bad = sample_json().replace("\"score_step\": \"s.txt\"", "\"x\": \"s.txt\"");
+        let j = Json::parse(&bad).unwrap();
+        assert!(Manifest::from_json(Path::new("/tmp/x"), &j).is_err());
+    }
+
+    #[test]
+    fn split_flat_respects_offsets() {
+        let j = Json::parse(&sample_json()).unwrap();
+        let m = Manifest::from_json(Path::new("/tmp/x"), &j).unwrap();
+        let flat: Vec<f32> = (0..96).map(|i| i as f32).collect();
+        let parts = m.split_flat(&flat);
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0][0], 0.0);
+        assert_eq!(parts[1][0], 64.0);
+        assert_eq!(parts[1].len(), 32);
+    }
+}

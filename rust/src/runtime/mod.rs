@@ -1,0 +1,38 @@
+//! Runtime layer: load AOT artifacts and execute them through PJRT.
+//!
+//! Adapted from /opt/xla-example/load_hlo: the interchange format is HLO
+//! *text* (xla_extension 0.5.1 rejects jax≥0.5 serialized protos — 64-bit
+//! instruction ids), compiled once per step function, executed many times.
+//! Python never appears on this path.
+
+pub mod buffers;
+pub mod executable;
+pub mod manifest;
+
+pub use buffers::{lit_f32, lit_i32, scalar_f32, scalar_i32, to_scalar_f32, to_vec_f32};
+pub use executable::{ModelExes, Runtime, StepExe};
+pub use manifest::{Manifest, ParamInfo};
+
+use std::path::PathBuf;
+
+/// Default artifacts root (overridable with `PIER_ARTIFACTS`).
+pub fn artifacts_root() -> PathBuf {
+    std::env::var("PIER_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| {
+        // Walk up from cwd so tests/examples work from any directory.
+        let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+        loop {
+            let cand = dir.join("artifacts");
+            if cand.join("manifest.json").exists() {
+                return cand;
+            }
+            if !dir.pop() {
+                return PathBuf::from("artifacts");
+            }
+        }
+    })
+}
+
+/// Load the manifest for a model config by name.
+pub fn load_manifest(model: &str) -> anyhow::Result<Manifest> {
+    Manifest::load(&artifacts_root().join(model))
+}

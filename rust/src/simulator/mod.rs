@@ -1,0 +1,14 @@
+//! Cluster runtime simulator — regenerates the paper's runtime figures
+//! (Figures 5–8) from the compute/communication structure of each
+//! optimizer (DESIGN.md §3, §5).
+//!
+//! Calibration policy: the free constants (achieved collective bus
+//! bandwidth, gradient exchange width) are fit against the *AdamW baseline
+//! only* — the paper quotes its scaling efficiency (42.7 % @32 A100,
+//! 34.7 % @256 A100, 34.6 % @64 GH200). Pier's curves are then produced by
+//! the same model with no further tuning, so who-wins/by-how-much is a
+//! prediction of the model, not a fit.
+
+pub mod run;
+
+pub use run::{simulate_run, IterBreakdown, SimResult, SimSetup};

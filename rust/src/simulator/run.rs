@@ -1,0 +1,390 @@
+//! Per-iteration time models and full-run simulation.
+
+use crate::config::{ModelConfig, OptMode};
+use crate::netsim::{hierarchical_allreduce, outer_sync_time, ring_allreduce};
+use crate::perfmodel::flops::compute_time;
+use crate::perfmodel::gpu::ClusterSpec;
+
+/// Modeled collective efficiency: achieved fraction of nominal link
+/// bandwidth for large-message ring collectives (NCCL/RCCL bus-bandwidth
+/// measurements on these fabrics land well below the wire rate; fit to the
+/// paper's AdamW baselines, see `figures::calibration` tests).
+#[derive(Clone, Copy, Debug)]
+pub struct Calib {
+    /// Inter-node fabric achieved-bandwidth fraction.
+    pub fabric_eff: f64,
+    /// Intra-node (NVLink) achieved-bandwidth fraction.
+    pub nvlink_eff: f64,
+    /// Bytes/param on the DP gradient exchange (Megatron DDP reduces the
+    /// fp32 main-grad buffer → 4.0).
+    pub grad_bytes: f64,
+    /// Fraction of the DP all-reduce hidden under backward compute (the
+    /// paper's baseline shows essentially no overlap at these scales).
+    pub overlap: f64,
+}
+
+impl Default for Calib {
+    fn default() -> Calib {
+        // Achieved-bandwidth fractions are folded into the cluster presets
+        // (perfmodel::gpu); the multipliers here are 1.0 by default and
+        // exist for ablation sweeps.
+        Calib { fabric_eff: 1.0, nvlink_eff: 1.0, grad_bytes: 4.0, overlap: 0.0 }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct SimSetup {
+    pub model: &'static ModelConfig,
+    pub cluster: &'static ClusterSpec,
+    /// Total GPUs.
+    pub world: usize,
+    pub tp: usize,
+    /// Pipeline-parallel stages (extension; §IV-C sketches how Pier
+    /// composes with PP — the outer all-gather streams per stage). 1 = off.
+    pub pp: usize,
+    /// Streaming partial synchronization fraction (1.0 = full Pier).
+    pub sync_fraction: f64,
+    /// Local-communication groups (ignored for AdamW).
+    pub groups: usize,
+    pub global_batch: usize,
+    pub sync_interval: usize,
+    pub mode: OptMode,
+    pub warmup_pct: f64,
+    pub iterations: usize,
+    pub cpu_offload: bool,
+    pub calib: Calib,
+}
+
+impl SimSetup {
+    pub fn dp(&self) -> usize {
+        assert_eq!(self.world % (self.tp * self.pp), 0);
+        self.world / (self.tp * self.pp)
+    }
+
+    /// Sequences per DP replica per iteration (gradient accumulation folds
+    /// any multiple of the per-GPU micro-batch).
+    pub fn local_seqs(&self) -> f64 {
+        self.global_batch as f64 / self.dp() as f64
+    }
+
+    /// Pipeline bubble factor ≥ 1 (GPipe schedule: (m + pp − 1)/m with
+    /// m = micro-batches in flight, taken as the per-replica sequence count).
+    pub fn pp_bubble(&self) -> f64 {
+        if self.pp <= 1 {
+            return 1.0;
+        }
+        let m = self.local_seqs().max(1.0);
+        (m + self.pp as f64 - 1.0) / m
+    }
+
+    fn scaled_cluster(&self) -> ClusterSpec {
+        let mut c = *self.cluster;
+        c.intra.bandwidth *= self.calib.nvlink_eff;
+        c.inter.bandwidth *= self.calib.fabric_eff;
+        c
+    }
+}
+
+/// One iteration's cost breakdown (seconds).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IterBreakdown {
+    pub compute: f64,
+    /// TP activation all-reduces (intra-node).
+    pub tp_comm: f64,
+    /// Exposed DP gradient all-reduce (AdamW / lazy-start) or intra-group
+    /// all-reduce (Pier inner).
+    pub dp_comm: f64,
+    /// Amortized per-iteration share of the outer sync (Pier/DiLoCo only).
+    pub outer_amortized: f64,
+}
+
+impl IterBreakdown {
+    pub fn total(&self) -> f64 {
+        self.compute + self.tp_comm + self.dp_comm + self.outer_amortized
+    }
+}
+
+/// Full-run simulation result.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    pub total_secs: f64,
+    /// Fully-synchronized (AdamW-style) iteration.
+    pub sync_iter: IterBreakdown,
+    /// Inner-loop iteration (equals `sync_iter` for AdamW mode).
+    pub inner_iter: IterBreakdown,
+    /// One outer synchronization event (un-amortized).
+    pub outer_event_secs: f64,
+}
+
+fn tp_comm_time(s: &SimSetup, cluster: &ClusterSpec) -> f64 {
+    if s.tp <= 1 {
+        return 0.0;
+    }
+    // 4 all-reduces per layer (2 fwd + 2 bwd) of the activation tensor
+    // (local_seqs × seq_len × d_model, bf16), ring over the TP span.
+    let act_bytes = 2.0 * s.local_seqs() * s.model.seq_len as f64 * s.model.d_model as f64;
+    4.0 * s.model.n_layers as f64 / s.pp as f64
+        * ring_allreduce(s.tp, act_bytes, &cluster.intra)
+}
+
+/// Pipeline point-to-point activation traffic per iteration: each of the
+/// `pp − 1` stage boundaries forwards (and back-props) every micro-batch's
+/// activation slab; boundaries usually cross nodes → inter link.
+fn pp_comm_time(s: &SimSetup, cluster: &ClusterSpec) -> f64 {
+    if s.pp <= 1 {
+        return 0.0;
+    }
+    let act_bytes = 2.0 * s.local_seqs() * s.model.seq_len as f64 * s.model.d_model as f64;
+    // fwd + bwd per boundary; boundaries run concurrently across stages, so
+    // charge one boundary's serialized traffic.
+    2.0 * act_bytes / cluster.inter.effective_bw()
+        + 2.0 * (s.pp as f64 - 1.0) * cluster.inter.latency
+}
+
+/// Exposed DP gradient all-reduce across `dp_span` replicas.
+fn dp_allreduce_time(s: &SimSetup, dp_span: usize, cluster: &ClusterSpec) -> f64 {
+    if dp_span <= 1 {
+        return 0.0;
+    }
+    let total_bytes = s.calib.grad_bytes * s.model.n_params() as f64;
+    let t = if s.tp == 1 {
+        // replicas are plain GPU spans → hierarchical ring
+        hierarchical_allreduce(dp_span, total_bytes, cluster)
+    } else {
+        // per-TP-rank concurrent rings sharing node injection (§IV-C)
+        outer_sync_time(dp_span, s.tp, total_bytes, cluster)
+    };
+    t * (1.0 - s.calib.overlap)
+}
+
+/// Fully-synchronized iteration (AdamW, and the lazy-start phase).
+pub fn sync_iter(s: &SimSetup) -> IterBreakdown {
+    let cluster = s.scaled_cluster();
+    IterBreakdown {
+        compute: compute_time(s.model, &cluster.gpu, s.local_seqs(), s.tp * s.pp)
+            * s.pp_bubble(),
+        tp_comm: tp_comm_time(s, &cluster) + pp_comm_time(s, &cluster),
+        dp_comm: dp_allreduce_time(s, s.dp(), &cluster),
+        outer_amortized: 0.0,
+    }
+}
+
+/// Pier/DiLoCo inner iteration: DP all-reduce only within the group.
+pub fn inner_iter(s: &SimSetup) -> IterBreakdown {
+    let cluster = s.scaled_cluster();
+    let dp_per_group = s.dp() / s.groups.max(1);
+    IterBreakdown {
+        compute: compute_time(s.model, &cluster.gpu, s.local_seqs(), s.tp * s.pp)
+            * s.pp_bubble(),
+        tp_comm: tp_comm_time(s, &cluster) + pp_comm_time(s, &cluster),
+        dp_comm: dp_allreduce_time(s, dp_per_group, &cluster),
+        outer_amortized: 0.0,
+    }
+}
+
+/// One outer synchronization: global fp32-delta all-reduce across groups
+/// (per-TP-rank concurrent, §IV-C), the Nesterov update sweep, and the
+/// host↔device offload transfers when enabled (§V).
+pub fn outer_event(s: &SimSetup) -> f64 {
+    let mut cluster = s.scaled_cluster();
+    // Bursty, unoverlapped model-state collective → burst contention that
+    // worsens with the number of nodes hitting the fabric simultaneously
+    // (straggler/incast growth on a shared fabric; §VI-B2). The ~n^0.75
+    // growth reproduces the paper's speedup peak at 128 GPUs followed by
+    // the decline at 256 (Fig 7) while keeping small-scale syncs cheap.
+    let nodes = (s.world.div_ceil(cluster.gpus_per_node)).max(1) as f64;
+    cluster.inter.contention *= cluster.burst_factor * nodes.powf(0.75);
+    // Streaming partial sync scales the per-event volume (fragments rotate,
+    // so the time-averaged volume is unchanged only if H is also scaled —
+    // the peak demand, which is what congests the fabric, drops).
+    let delta_bytes = 4.0 * s.model.n_params() as f64 * s.sync_fraction.clamp(0.0, 1.0);
+    // NCCL-style global all-reduce of the fp32 delta: hierarchical when the
+    // replicas are whole-node spans, per-TP/PP-shard concurrent rings under
+    // 2-D/3-D parallelism (§IV-C; PP streams the gather per stage).
+    let shards = s.tp * s.pp;
+    let comm = if shards == 1 {
+        hierarchical_allreduce(s.world, delta_bytes, &cluster)
+    } else {
+        outer_sync_time(s.dp(), shards, delta_bytes, &cluster)
+    };
+    // Elementwise Nesterov over the shard: ~4 reads + 2 writes of fp32
+    let shard = s.model.n_params() as f64 * s.sync_fraction / shards as f64;
+    let update = 6.0 * 4.0 * shard / cluster.gpu.mem_bw;
+    let offload = if s.cpu_offload {
+        // reload anchor+momentum, store back: 4 transfers of 4·N/tp over PCIe
+        4.0 * 4.0 * shard / 25e9
+    } else {
+        0.0
+    };
+    comm + update + offload
+}
+
+/// Simulate the full run (§VI-B1's weighted average: `p·T` lazy-start
+/// iterations at the synchronized cost, the rest at the inner cost plus the
+/// amortized outer events).
+pub fn simulate_run(s: &SimSetup) -> SimResult {
+    let sync = sync_iter(s);
+    match s.mode {
+        OptMode::AdamW => SimResult {
+            total_secs: s.iterations as f64 * sync.total(),
+            sync_iter: sync,
+            inner_iter: sync,
+            outer_event_secs: 0.0,
+        },
+        OptMode::DiLoCo | OptMode::Pier => {
+            let inner = inner_iter(s);
+            let outer = outer_event(s);
+            let warm_iters = s.warmup_pct * s.iterations as f64;
+            let inner_iters = s.iterations as f64 - warm_iters;
+            let n_outer = inner_iters / s.sync_interval as f64;
+            let total =
+                warm_iters * sync.total() + inner_iters * inner.total() + n_outer * outer;
+            let mut inner_with_amort = inner;
+            inner_with_amort.outer_amortized = outer / s.sync_interval as f64;
+            SimResult {
+                total_secs: total,
+                sync_iter: sync,
+                inner_iter: inner_with_amort,
+                outer_event_secs: outer,
+            }
+        }
+    }
+}
+
+/// Convenience: AdamW-vs-Pier pair at the same scale.
+pub fn speedup_at(s_pier: &SimSetup) -> (f64, f64, f64) {
+    let mut s_adamw = s_pier.clone();
+    s_adamw.mode = OptMode::AdamW;
+    let t_a = simulate_run(&s_adamw).total_secs;
+    let t_p = simulate_run(s_pier).total_secs;
+    (t_a, t_p, t_a / t_p)
+}
+
+/// Can the model's training state fit GPU memory at this TP degree?
+pub fn fits_memory(s: &SimSetup) -> bool {
+    let mut need = crate::perfmodel::state_bytes(s.model, s.tp);
+    if matches!(s.mode, OptMode::Pier | OptMode::DiLoCo) && !s.cpu_offload {
+        need += crate::perfmodel::outer_state_bytes(s.model, s.tp);
+    }
+    // leave room for activations (~25 %)
+    need < 0.75 * s.cluster.gpu.mem_bytes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model;
+    use crate::perfmodel::gpu::{PERLMUTTER, VISTA};
+
+    fn setup(world: usize, mode: OptMode) -> SimSetup {
+        SimSetup {
+            model: model("gpt2-xl").unwrap(),
+            cluster: &PERLMUTTER,
+            world,
+            tp: 1,
+            pp: 1,
+            sync_fraction: 1.0,
+            groups: world, // one GPU per group (Fig 7 regime)
+            global_batch: 512,
+            sync_interval: 50,
+            mode,
+            warmup_pct: 0.10,
+            iterations: 1000,
+            cpu_offload: false,
+            calib: Calib::default(),
+        }
+    }
+
+    #[test]
+    fn pier_beats_adamw_beyond_one_node() {
+        let (_, _, s) = speedup_at(&setup(32, OptMode::Pier));
+        assert!(s > 1.2, "speedup {s}");
+    }
+
+    #[test]
+    fn single_gpu_no_comm() {
+        let b = sync_iter(&setup(1, OptMode::AdamW));
+        assert_eq!(b.dp_comm, 0.0);
+        assert_eq!(b.tp_comm, 0.0);
+        assert!(b.compute > 0.0);
+    }
+
+    #[test]
+    fn speedup_grows_with_scale_then_interval_dominates() {
+        let (_, _, s32) = speedup_at(&setup(32, OptMode::Pier));
+        let (_, _, s128) = speedup_at(&setup(128, OptMode::Pier));
+        assert!(s128 > s32, "s32={s32} s128={s128}");
+    }
+
+    #[test]
+    fn larger_interval_faster() {
+        let mut a = setup(64, OptMode::Pier);
+        let mut b = setup(64, OptMode::Pier);
+        a.sync_interval = 50;
+        b.sync_interval = 500;
+        assert!(simulate_run(&b).total_secs < simulate_run(&a).total_secs);
+    }
+
+    #[test]
+    fn vista_speedup_lower_than_perlmutter() {
+        let mut p = setup(64, OptMode::Pier);
+        let mut v = setup(64, OptMode::Pier);
+        v.cluster = &VISTA;
+        p.groups = 64;
+        v.groups = 64;
+        let (_, _, sp) = speedup_at(&p);
+        let (_, _, sv) = speedup_at(&v);
+        assert!(sv < sp, "perlmutter {sp} vs vista {sv}");
+        assert!(sv > 1.0, "vista should still win: {sv}");
+    }
+
+    #[test]
+    fn offload_adds_outer_cost_but_saves_memory() {
+        let mut with = setup(64, OptMode::Pier);
+        with.cpu_offload = true;
+        let without = setup(64, OptMode::Pier);
+        assert!(outer_event(&with) > outer_event(&without));
+        assert!(fits_memory(&with));
+    }
+
+    #[test]
+    fn pp_bubble_and_comm() {
+        // 8 GPUs as 1×TP, 2×PP, dp=4: bubble >1, pp traffic >0, and the
+        // per-stage compute is half the single-stage compute.
+        let mut s = setup(8, OptMode::AdamW);
+        s.pp = 2;
+        s.groups = 4;
+        let with_pp = sync_iter(&s);
+        let mut s1 = s.clone();
+        s1.pp = 1;
+        s1.world = 4; // same dp
+        let without = sync_iter(&s1);
+        assert!(s.pp_bubble() > 1.0);
+        assert!(with_pp.tp_comm > 0.0, "pp p2p traffic accounted");
+        // same per-replica batch → pp splits compute but adds bubble
+        assert!(with_pp.compute < without.compute * 1.1);
+    }
+
+    #[test]
+    fn streaming_fraction_scales_outer_volume() {
+        let mut full = setup(64, OptMode::Pier);
+        let mut half = setup(64, OptMode::Pier);
+        full.sync_fraction = 1.0;
+        half.sync_fraction = 0.5;
+        let of = outer_event(&full);
+        let oh = outer_event(&half);
+        assert!(oh < 0.6 * of, "half fragment must ~halve the event: {oh} vs {of}");
+        assert!(simulate_run(&half).total_secs < simulate_run(&full).total_secs);
+    }
+
+    #[test]
+    fn memory_gate_7b() {
+        let mut s = setup(128, OptMode::AdamW);
+        s.model = model("gpt2-7b").unwrap();
+        s.tp = 1;
+        assert!(!fits_memory(&s));
+        s.tp = 4;
+        s.cpu_offload = true;
+        assert!(fits_memory(&s));
+    }
+}

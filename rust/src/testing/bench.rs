@@ -1,0 +1,113 @@
+//! Mini benchmark harness (criterion is unavailable offline).
+//!
+//! Criterion-style ergonomics: warmup, timed iterations until a minimum
+//! measurement window, mean/σ/percentiles, throughput reporting, and a
+//! stable one-line output format the bench binaries (`harness = false`)
+//! print for EXPERIMENTS.md.
+
+use std::time::Instant;
+
+use crate::util::{mean, percentile, stddev};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub stddev_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10} {:>12} {:>12} {:>12}",
+            self.name,
+            self.iters,
+            fmt_time(self.mean_s),
+            fmt_time(self.p50_s),
+            fmt_time(self.p95_s),
+        )
+    }
+
+    /// Report with an items/second throughput column.
+    pub fn report_throughput(&self, items: f64, unit: &str) -> String {
+        format!("{}  {:>14.3e} {unit}/s", self.report(), items / self.mean_s)
+    }
+}
+
+pub fn header() -> String {
+    format!(
+        "{:<44} {:>10} {:>12} {:>12} {:>12}",
+        "benchmark", "iters", "mean", "p50", "p95"
+    )
+}
+
+fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+/// Benchmark a closure: `warmup_iters` unmeasured runs, then timed runs
+/// until ≥ `min_secs` of measurement or `max_iters`.
+pub fn bench<F: FnMut()>(name: &str, warmup_iters: usize, min_secs: f64, mut f: F) -> BenchResult {
+    for _ in 0..warmup_iters {
+        f();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    let max_iters = 10_000;
+    while (start.elapsed().as_secs_f64() < min_secs && samples.len() < max_iters)
+        || samples.len() < 5
+    {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_s: mean(&samples),
+        stddev_s: stddev(&samples),
+        p50_s: percentile(&samples, 50.0),
+        p95_s: percentile(&samples, 95.0),
+    }
+}
+
+/// Quick variant with sensible defaults (3 warmups, 2 s window).
+pub fn bench_quick<F: FnMut()>(name: &str, f: F) -> BenchResult {
+    bench(name, 3, 2.0, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let r = bench("noop-ish", 1, 0.01, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.iters >= 5);
+        assert!(r.mean_s > 0.0);
+        assert!(r.p95_s >= r.p50_s);
+    }
+
+    #[test]
+    fn formats() {
+        let r = BenchResult {
+            name: "x".into(), iters: 10, mean_s: 1.5e-3, stddev_s: 0.0,
+            p50_s: 1.4e-3, p95_s: 2.0e-3,
+        };
+        let line = r.report();
+        assert!(line.contains("ms"));
+        assert!(r.report_throughput(1000.0, "items").contains("items/s"));
+    }
+}

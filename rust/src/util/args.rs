@@ -1,0 +1,160 @@
+//! Minimal CLI argument substrate (no `clap` in the offline build).
+//!
+//! Supports the launcher grammar `pier <subcommand> [--key value]...
+//! [--flag]... [positional]...` with typed accessors and a generated usage
+//! string. Unknown keys are reported, not ignored — config typos in a
+//! training launcher must fail loudly.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`. The first non-dash token is the subcommand.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut args = Args {
+            subcommand: None,
+            positional: Vec::new(),
+            options: BTreeMap::new(),
+            flags: Vec::new(),
+        };
+        let mut iter = argv.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = iter.next().unwrap();
+                    args.options.insert(key.to_string(), v);
+                } else {
+                    args.flags.push(key.to_string());
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> f32 {
+        self.f64_or(key, default as f64) as f32
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Comma-separated list option.
+    pub fn list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.get(key) {
+            Some(v) => v.split(',').filter(|s| !s.is_empty()).map(str::to_string).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    /// Error on options outside the allowed set (typo protection).
+    pub fn check_known(&self, known: &[&str]) -> Result<(), String> {
+        for key in self.options.keys().chain(self.flags.iter()) {
+            if !known.contains(&key.as_str()) {
+                return Err(format!(
+                    "unknown option --{key}; known: {}",
+                    known.iter().map(|k| format!("--{k}")).collect::<Vec<_>>().join(" ")
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        // note: a flag followed by a positional is ambiguous in this
+        // grammar (the token is taken as the flag's value), so positionals
+        // precede trailing flags.
+        let a = parse("train pos1 --model micro --steps 500 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("model"), Some("micro"));
+        assert_eq!(a.usize_or("steps", 0), 500);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("repro --fig=5 --interval=50");
+        assert_eq!(a.usize_or("fig", 0), 5);
+        assert_eq!(a.usize_or("interval", 0), 50);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("train --offload");
+        assert!(a.flag("offload"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("train");
+        assert_eq!(a.f64_or("lr", 3e-4), 3e-4);
+        assert_eq!(a.str_or("model", "nano"), "nano");
+    }
+
+    #[test]
+    fn list_option() {
+        let a = parse("x --models nano,micro,mini");
+        assert_eq!(a.list_or("models", &[]), vec!["nano", "micro", "mini"]);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let a = parse("train --modle micro");
+        assert!(a.check_known(&["model"]).is_err());
+        assert!(a.check_known(&["modle"]).is_ok());
+    }
+}

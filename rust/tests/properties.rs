@@ -1,0 +1,349 @@
+//! Property-based tests (mini-proptest harness, `pier::testing::prop`)
+//! over coordinator invariants, data-pipeline bijections, optimizer
+//! algebra, and the network/simulator models.
+
+use pier::config::{NesterovKind, OptMode, TrainConfig};
+use pier::coordinator::collective::all_reduce_mean;
+use pier::data::{CorpusGen, CorpusSpec, Sampler, TokenDataset, Tokenizer};
+use pier::netsim::{des_outer_sync, outer_sync_time, ring_allreduce};
+use pier::optim::{clip_global_norm, inner_lr, outer_momentum, AdamW, OuterOpt};
+use pier::perfmodel::gpu::{LinkSpec, PERLMUTTER, VISTA};
+use pier::simulator::run::{simulate_run, Calib, SimSetup};
+use pier::testing::prop::{check, close, ensure, Gen};
+
+// ------------------------------------------------------------ collectives
+
+#[test]
+fn prop_allreduce_mean_invariant_under_group_permutation() {
+    check("allreduce-permutation", |g: &mut Gen| {
+        let k = g.usize(2, 8);
+        let n = g.usize(1, 2000);
+        let groups: Vec<Vec<f32>> = (0..k).map(|_| g.vec_signed(n, 2.0)).collect();
+        let refs: Vec<&[f32]> = groups.iter().map(|v| v.as_slice()).collect();
+        let mean1 = all_reduce_mean(&refs);
+        let mut perm: Vec<usize> = (0..k).collect();
+        // deterministic rotation permutation
+        let rot = g.usize(1, k - 1);
+        perm.rotate_left(rot);
+        let refs2: Vec<&[f32]> = perm.iter().map(|&i| groups[i].as_slice()).collect();
+        let mean2 = all_reduce_mean(&refs2);
+        for (a, b) in mean1.iter().zip(&mean2) {
+            close(*a as f64, *b as f64, 1e-6, "permuted mean")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_allreduce_mean_bounded_by_extremes() {
+    check("allreduce-bounds", |g: &mut Gen| {
+        let k = g.usize(1, 6);
+        let n = g.usize(1, 500);
+        let groups: Vec<Vec<f32>> = (0..k).map(|_| g.vec_signed(n, 5.0)).collect();
+        let refs: Vec<&[f32]> = groups.iter().map(|v| v.as_slice()).collect();
+        let mean = all_reduce_mean(&refs);
+        for i in 0..n {
+            let lo = refs.iter().map(|r| r[i]).fold(f32::INFINITY, f32::min);
+            let hi = refs.iter().map(|r| r[i]).fold(f32::NEG_INFINITY, f32::max);
+            ensure(
+                mean[i] >= lo - 1e-4 && mean[i] <= hi + 1e-4,
+                format!("mean[{i}]={} outside [{lo},{hi}]", mean[i]),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------- dataset
+
+#[test]
+fn prop_shards_partition_exactly() {
+    check("shard-partition", |g: &mut Gen| {
+        let n = g.usize(100, 50_000);
+        let k = g.usize(1, 16);
+        let ds = TokenDataset::new((0..n as i32).collect());
+        let mut total = 0;
+        let mut prev = 0;
+        for s in 0..k {
+            let (lo, hi) = ds.shard_bounds(s, k);
+            ensure(lo == prev, "contiguous")?;
+            total += hi - lo;
+            prev = hi;
+        }
+        ensure(total == n && prev == n, "covers all")
+    });
+}
+
+#[test]
+fn prop_sampler_windows_always_in_shard_and_contiguous() {
+    check("sampler-windows", |g: &mut Gen| {
+        let n = g.usize(5_000, 20_000);
+        let k = g.usize(1, 4);
+        let shard = g.usize(0, k - 1);
+        let t = *g.choose(&[16usize, 32, 64]);
+        let ds = std::sync::Arc::new(TokenDataset::new((0..n as i32).collect()));
+        let (lo, hi) = ds.shard_bounds(shard, k);
+        let mut s = Sampler::new(ds, shard, k, t, g.u64(0, 1000));
+        let batch = s.next_batch(g.usize(1, 8));
+        for row in batch.chunks(t + 1) {
+            ensure(
+                (row[0] as usize) >= lo && (row[t] as usize) < hi,
+                "window in shard",
+            )?;
+            for i in 1..row.len() {
+                ensure(row[i] == row[i - 1] + 1, "contiguous window")?;
+            }
+        }
+        Ok(())
+    });
+}
+
+// -------------------------------------------------------------- tokenizer
+
+#[test]
+fn prop_bpe_roundtrip_on_corpus_slices() {
+    let gen = CorpusGen::new(CorpusSpec { n_docs: 120, ..Default::default() });
+    let text = gen.corpus();
+    let tok = Tokenizer::train(&text, 512);
+    let docs: Vec<String> = (0..120).map(|d| gen.document(d)).collect();
+    check("bpe-roundtrip", |g: &mut Gen| {
+        let d = g.usize(0, docs.len() - 1);
+        let doc = &docs[d];
+        let ids = tok.encode(doc);
+        ensure(tok.decode(&ids) == *doc, format!("roundtrip doc {d}"))
+    });
+}
+
+// ---------------------------------------------------------------- optim
+
+#[test]
+fn prop_pier_outer_with_identity_settings_is_averaging() {
+    // μ = 0, lr = 1 → the outer step reduces to plain parameter averaging.
+    check("outer-identity", |g: &mut Gen| {
+        let n = g.usize(1, 300);
+        let k = g.usize(1, 6);
+        let base = g.vec_signed(n, 1.0);
+        let groups: Vec<Vec<f32>> = (0..k).map(|_| g.vec_signed(n, 1.0)).collect();
+        let refs: Vec<&[f32]> = groups.iter().map(|v| v.as_slice()).collect();
+        let mean = all_reduce_mean(&refs);
+        let delta: Vec<f32> = mean.iter().zip(&base).map(|(&m, &b)| m - b).collect();
+        let mut opt = OuterOpt::new(n, NesterovKind::PyTorch);
+        let s = opt.step(&base, &delta, 0.0, 1.0);
+        for (a, b) in s.committed.iter().zip(&mean) {
+            close(*a as f64, *b as f64, 1e-5, "averaging")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_outer_momentum_norm_bounded() {
+    // ‖M‖∞ ≤ max‖Δ‖∞ / (1 − μ) for any accumulation sequence.
+    check("momentum-bound", |g: &mut Gen| {
+        let n = g.usize(1, 100);
+        let mu = g.f64(0.5, 0.99);
+        let steps = g.usize(1, 80);
+        let mut opt = OuterOpt::new(n, NesterovKind::PyTorch);
+        let mut max_delta = 0.0f32;
+        for _ in 0..steps {
+            let d = g.vec_signed(n, 1.0);
+            max_delta = max_delta.max(d.iter().fold(0.0f32, |a, &x| a.max(x.abs())));
+            opt.accumulate(mu, &d);
+        }
+        let bound = max_delta as f64 / (1.0 - mu) + 1e-4;
+        let max_m = opt.momentum.iter().fold(0.0f32, |a, &x| a.max(x.abs())) as f64;
+        ensure(max_m <= bound, format!("‖M‖∞ {max_m} > bound {bound}"))
+    });
+}
+
+#[test]
+fn prop_clip_never_increases_norm_and_preserves_direction() {
+    check("clip", |g: &mut Gen| {
+        let n = g.usize(1, 500);
+        let max_norm = g.f64(0.1, 10.0);
+        let orig = g.vec_signed(n, 3.0);
+        let mut v = orig.clone();
+        let pre = clip_global_norm(&mut v, max_norm);
+        let post = (v.iter().map(|&x| (x as f64).powi(2)).sum::<f64>()).sqrt();
+        ensure(post <= pre + 1e-6, "no increase")?;
+        ensure(post <= max_norm * (1.0 + 1e-4) + 1e-9, "clipped to bound")?;
+        // direction preserved: sign pattern unchanged
+        for (a, b) in orig.iter().zip(&v) {
+            ensure(a.signum() == b.signum() || *b == 0.0, "direction")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_adamw_decreases_quadratic_loss() {
+    check("adamw-descent", |g: &mut Gen| {
+        let n = g.usize(1, 64);
+        let target = g.vec_signed(n, 2.0);
+        let mut p = g.vec_signed(n, 2.0);
+        let mut opt = AdamW::new(n);
+        let loss = |p: &[f32]| -> f64 {
+            p.iter().zip(&target).map(|(&a, &b)| ((a - b) as f64).powi(2)).sum()
+        };
+        let before = loss(&p);
+        for _ in 0..200 {
+            let grad: Vec<f32> =
+                p.iter().zip(&target).map(|(&a, &b)| 2.0 * (a - b)).collect();
+            opt.update(&mut p, &grad, 0.05, 0.0);
+        }
+        ensure(loss(&p) < before * 0.5 + 1e-6, format!("{} → {}", before, loss(&p)))
+    });
+}
+
+#[test]
+fn prop_schedules_bounded() {
+    check("schedules", |g: &mut Gen| {
+        let iters = g.usize(100, 1_000_000);
+        let mut cfg = TrainConfig::default_for(iters);
+        cfg.inner_lr = g.f64(1e-5, 1e-2);
+        cfg.inner_min_lr = cfg.inner_lr / 10.0;
+        let t = g.usize(0, iters);
+        let lr = inner_lr(&cfg, t);
+        ensure(
+            lr >= cfg.inner_min_lr * 0.999 - 1e-12 && lr <= cfg.inner_lr * 1.001,
+            format!("lr {lr} outside [{}, {}]", cfg.inner_min_lr, cfg.inner_lr),
+        )?;
+        let mu = outer_momentum(&cfg, t);
+        ensure((0.9..=0.99).contains(&mu), format!("mu {mu}"))
+    });
+}
+
+// --------------------------------------------------------------- netsim
+
+#[test]
+fn prop_ring_allreduce_monotone() {
+    check("ring-monotone", |g: &mut Gen| {
+        let link = LinkSpec {
+            latency: g.f64(1e-7, 1e-4),
+            bandwidth: g.f64(1e9, 1e12),
+            contention: g.f64(1.0, 4.0),
+        };
+        let n = g.usize(2, 256);
+        let v = g.f64(1e3, 1e10);
+        let t = ring_allreduce(n, v, &link);
+        ensure(t > 0.0, "positive")?;
+        ensure(ring_allreduce(n, v * 2.0, &link) > t, "monotone in volume")?;
+        ensure(ring_allreduce(n + 1, v, &link) > t, "monotone in ranks")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_des_matches_closed_form_outer_sync() {
+    check("des-vs-closed-form", |g: &mut Gen| {
+        let dp = g.usize(2, 64);
+        let tp = *g.choose(&[1usize, 2, 4]);
+        let v = g.f64(1e6, 1e10);
+        let cluster = *g.choose(&[&PERLMUTTER, &VISTA]);
+        let des = des_outer_sync(dp, tp, v, cluster);
+        let cf = outer_sync_time(dp, tp, v, cluster);
+        close(des, cf, 0.02, "des vs closed form")
+    });
+}
+
+// -------------------------------------------------------------- simulator
+
+#[test]
+fn prop_simulator_total_monotone_in_iterations_and_interval() {
+    check("sim-monotone", |g: &mut Gen| {
+        let world = *g.choose(&[8usize, 32, 128]);
+        let mut s = SimSetup {
+            model: pier::config::model_or_die("gpt2-xl"),
+            cluster: &PERLMUTTER,
+            world,
+            tp: 1,
+            pp: 1,
+            sync_fraction: 1.0,
+            groups: world,
+            global_batch: 512,
+            sync_interval: g.usize(10, 400),
+            mode: OptMode::Pier,
+            warmup_pct: 0.10,
+            iterations: g.usize(1000, 50_000),
+            cpu_offload: g.bool(),
+            calib: Calib::default(),
+        };
+        let t1 = simulate_run(&s).total_secs;
+        s.iterations *= 2;
+        let t2 = simulate_run(&s).total_secs;
+        ensure(t2 > t1, "monotone in iterations")?;
+        s.sync_interval *= 2;
+        let t3 = simulate_run(&s).total_secs;
+        ensure(t3 <= t2 * (1.0 + 1e-9), "larger interval never slower")
+    });
+}
+
+#[test]
+fn prop_pier_never_slower_than_adamw_beyond_a_node_at_h500() {
+    check("pier-wins-at-scale", |g: &mut Gen| {
+        let world = *g.choose(&[8usize, 16, 32, 64, 128, 256]);
+        let s = SimSetup {
+            model: pier::config::model_or_die(if g.bool() {
+                "gpt2-medium"
+            } else {
+                "gpt2-xl"
+            }),
+            cluster: &PERLMUTTER,
+            world,
+            tp: 1,
+            pp: 1,
+            sync_fraction: 1.0,
+            groups: world,
+            global_batch: 512,
+            sync_interval: 500,
+            mode: OptMode::Pier,
+            warmup_pct: 0.10,
+            iterations: 10_000,
+            cpu_offload: false,
+            calib: Calib::default(),
+        };
+        let tp_ = simulate_run(&s).total_secs;
+        let mut sa = s.clone();
+        sa.mode = OptMode::AdamW;
+        let ta = simulate_run(&sa).total_secs;
+        ensure(tp_ <= ta * 1.001, format!("pier {tp_} vs adamw {ta} @{world}"))
+    });
+}
+
+// ------------------------------------------------------------- json/util
+
+#[test]
+fn prop_json_number_roundtrip() {
+    use pier::util::json::Json;
+    check("json-roundtrip", |g: &mut Gen| {
+        let x = g.f64(-1e12, 1e12);
+        let j = Json::Num(x);
+        let back = Json::parse(&j.to_string()).map_err(|e| e.to_string())?;
+        close(back.as_f64().unwrap(), x, 1e-12, "number")
+    });
+}
+
+#[test]
+fn prop_topology_rank_bijection() {
+    use pier::config::ParallelConfig;
+    check("topology-bijection", |g: &mut Gen| {
+        let tp = *g.choose(&[1usize, 2, 4]);
+        let dp = g.usize(1, 32);
+        let groups_div: Vec<usize> = (1..=dp).filter(|k| dp % k == 0).collect();
+        let groups = *g.choose(&groups_div);
+        let p = ParallelConfig { dp, tp, groups, gpus_per_node: 4 };
+        for global in 0..p.world_size() {
+            let r = p.rank_of(global);
+            ensure(p.global_of(r) == global, "bijection")?;
+        }
+        // TP peers partition the world
+        let mut seen = vec![false; p.world_size()];
+        for t in 0..tp {
+            for r in p.tp_peer_ranks(t) {
+                ensure(!seen[r], "disjoint peers")?;
+                seen[r] = true;
+            }
+        }
+        ensure(seen.iter().all(|&s| s), "peers cover world")
+    });
+}
