@@ -1,7 +1,7 @@
 //! Collective primitives: in-process all-reduce/broadcast throughput
 //! (the L3 data plane) and the DES network engine's event throughput.
 
-use pier::coordinator::collective::{all_reduce_mean, broadcast, CommStats};
+use pier::coordinator::collective::{all_reduce_mean, all_reduce_mean_into, broadcast, CommStats};
 use pier::netsim::{des_outer_sync, Flow, Network};
 use pier::perfmodel::gpu::PERLMUTTER;
 use pier::testing::bench::{bench_quick, header};
@@ -21,6 +21,14 @@ fn main() {
             let refs: Vec<&[f32]> = groups.iter().map(|g| g.as_slice()).collect();
             let r = bench_quick(&format!("all_reduce_mean/{label}/{k}groups"), || {
                 std::hint::black_box(all_reduce_mean(&refs).len());
+            });
+            println!("{}", r.report_throughput((n * k) as f64, "elem"));
+
+            // in-place chunk-parallel variant (the outer-sync hot path)
+            let mut out = vec![0.0f32; n];
+            let r = bench_quick(&format!("all_reduce_mean_into/{label}/{k}groups"), || {
+                all_reduce_mean_into(&refs, &mut out);
+                std::hint::black_box(out.len());
             });
             println!("{}", r.report_throughput((n * k) as f64, "elem"));
         }

@@ -2,12 +2,21 @@
 //! accumulation, and the full OuterController sync at the trainable model
 //! sizes plus a GPT-2-small-sized vector (124 M params ≈ what one GPU hosts
 //! in the paper's smallest real run).
+//!
+//! Two variants per sync size: the allocating legacy path (`sync`, three
+//! full-model vectors per call at the controller layer alone) and the
+//! in-place path the trainer now uses (`sync_in_place`, zero full-model
+//! allocations; reductions and the Nesterov update are span-parallel).
+//!
+//! Emits `BENCH_outer_step.json` — a machine-readable perf snapshot
+//! (mean seconds + throughput per benchmark) for tracking across PRs.
 
 use pier::config::{NesterovKind, OptMode, TrainConfig};
 use pier::coordinator::collective::CommStats;
 use pier::coordinator::OuterController;
 use pier::optim::OuterOpt;
-use pier::testing::bench::{bench_quick, header};
+use pier::testing::bench::{bench_quick, header, BenchResult};
+use pier::util::json::Json;
 use pier::util::rng::Pcg64;
 
 fn randvec(n: usize, seed: u64) -> Vec<f32> {
@@ -15,8 +24,23 @@ fn randvec(n: usize, seed: u64) -> Vec<f32> {
     (0..n).map(|_| rng.f32() - 0.5).collect()
 }
 
+/// Collect one benchmark row for the JSON snapshot.
+fn snap(rows: &mut Vec<Json>, r: &BenchResult, items: f64, unit: &str) {
+    rows.push(Json::obj(vec![
+        ("name", Json::str(&r.name)),
+        ("iters", Json::num(r.iters as f64)),
+        ("mean_s", Json::num(r.mean_s)),
+        ("p50_s", Json::num(r.p50_s)),
+        ("p95_s", Json::num(r.p95_s)),
+        ("throughput", Json::num(items / r.mean_s)),
+        ("unit", Json::str(unit)),
+    ]));
+}
+
 fn main() {
     println!("{}", header());
+    let mut rows: Vec<Json> = Vec::new();
+
     for (label, n) in [("nano-137k", 136_960), ("micro-3.2M", 3_243_648),
                        ("gpt2-small-124M", 124_475_904usize)] {
         let base = randvec(n, 1);
@@ -28,28 +52,66 @@ fn main() {
             std::hint::black_box(s.committed.len());
         });
         println!("{}", r.report_throughput(n as f64, "param"));
+        snap(&mut rows, &r, n as f64, "param/s");
+
+        // In-place variant: reusable output buffers, zero allocations.
+        let mut opt_ip = OuterOpt::new(n, NesterovKind::PyTorch);
+        let mut committed = vec![0.0f32; n];
+        let mut restart = vec![0.0f32; n];
+        let r = bench_quick(&format!("nesterov_step_into/{label}"), || {
+            opt_ip.step_into(&base, &delta, 0.9, 1.0, &mut committed, &mut restart);
+            std::hint::black_box(committed.len());
+        });
+        println!("{}", r.report_throughput(n as f64, "param"));
+        snap(&mut rows, &r, n as f64, "param/s");
 
         let mut opt2 = OuterOpt::new(n, NesterovKind::PyTorch);
         let r = bench_quick(&format!("momentum_accumulate/{label}"), || {
             opt2.accumulate(0.9, &delta);
         });
         println!("{}", r.report_throughput(n as f64, "param"));
+        snap(&mut rows, &r, n as f64, "param/s");
     }
 
     // Full outer sync (all-reduce over k groups + Nesterov + broadcast
-    // accounting) at micro size — the per-H-iterations L3 cost.
+    // accounting) at micro size — the per-H-iterations L3 cost. The
+    // allocating `sync` is the seed path; `sync_in_place` is what the
+    // trainer runs.
     for k in [4usize, 8] {
         let n = 3_243_648;
         let groups: Vec<Vec<f32>> = (0..k as u64).map(|i| randvec(n, 10 + i)).collect();
         let mut cfg = TrainConfig::default_for(1000);
         cfg.mode = OptMode::Pier;
+
         let mut ctl = OuterController::new(&cfg, &groups[0]);
         let mut stats = CommStats::default();
-        let r = bench_quick(&format!("outer_sync/micro-3.2M/{k}groups"), || {
+        let r = bench_quick(&format!("outer_sync_alloc/micro-3.2M/{k}groups"), || {
             let refs: Vec<&[f32]> = groups.iter().map(|g| g.as_slice()).collect();
             let res = ctl.sync(500, &refs, &mut stats);
             std::hint::black_box(res.committed.len());
         });
         println!("{}", r.report_throughput((n * k) as f64, "param"));
+        snap(&mut rows, &r, (n * k) as f64, "param/s");
+
+        let mut ctl_ip = OuterController::new(&cfg, &groups[0]);
+        let mut stats_ip = CommStats::default();
+        let r = bench_quick(&format!("outer_sync_in_place/micro-3.2M/{k}groups"), || {
+            let refs: Vec<&[f32]> = groups.iter().map(|g| g.as_slice()).collect();
+            let next = ctl_ip.sync_in_place(500, &refs, &mut stats_ip);
+            std::hint::black_box(next.len());
+        });
+        println!("{}", r.report_throughput((n * k) as f64, "param"));
+        snap(&mut rows, &r, (n * k) as f64, "param/s");
+    }
+
+    let out = Json::obj(vec![
+        ("bench", Json::str("outer_step")),
+        ("threads", Json::num(pier::util::par::max_threads() as f64)),
+        ("results", Json::Arr(rows)),
+    ]);
+    let path = "BENCH_outer_step.json";
+    match std::fs::write(path, format!("{out}")) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
     }
 }

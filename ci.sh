@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# CI gate for the Pier reproduction.
+#
+#   ./ci.sh           # fmt + clippy + tier-1 (build + tests)
+#   RUN_BENCH=1 ./ci.sh   # additionally run the outer-step bench and
+#                         # refresh the BENCH_outer_step.json perf snapshot
+#
+# Tier-1 is the ROADMAP contract: `cargo build --release && cargo test -q`.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "==> cargo fmt --check"
+cargo fmt --check
+
+echo "==> cargo clippy (all targets, warnings are errors)"
+cargo clippy --all-targets -- -D warnings
+
+echo "==> tier-1: cargo build --release"
+cargo build --release
+
+echo "==> tier-1: cargo test -q"
+cargo test -q
+
+if [[ "${RUN_BENCH:-0}" == "1" ]]; then
+  echo "==> perf snapshot: cargo bench --bench outer_step (writes BENCH_outer_step.json)"
+  cargo bench --bench outer_step
+fi
+
+echo "CI OK"

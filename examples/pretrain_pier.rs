@@ -26,9 +26,15 @@ fn main() -> Result<()> {
     let rt = Runtime::cpu()?;
     let man = load_manifest(&model)?;
     let pipe = pipeline_for(&man, 11);
+    let workers = pier::coordinator::ParallelExecutor::new(0).threads();
     println!(
-        "pretraining {} ({} params) for {iters} iters, {groups} groups, corpus {} tokens\n",
+        "pretraining {} ({} params) for {iters} iters, {groups} groups, corpus {} tokens",
         man.model_name, man.n_params, pipe.train.len()
+    );
+    println!(
+        "group execution: {} worker thread(s) — inner phases run all {groups} groups \
+         concurrently; set PIER_THREADS=1 for the serial schedule (identical math)\n",
+        workers.min(groups)
     );
 
     let mut rows = Vec::new();

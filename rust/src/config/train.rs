@@ -86,6 +86,12 @@ pub struct TrainConfig {
     /// drops proportionally.
     pub sync_fraction: f64,
 
+    /// Step the K groups concurrently on the scoped thread pool during the
+    /// inner phase (default). `false` forces the legacy serial schedule —
+    /// bit-identical results either way (see `coordinator::parallel`);
+    /// the switch exists for parity testing and single-core profiling.
+    pub parallel_groups: bool,
+
     /// Evaluate validation loss every this many iterations (0 = never).
     pub eval_interval: usize,
     pub seed: u64,
@@ -112,6 +118,7 @@ impl TrainConfig {
             momentum_decay: true,
             cpu_offload: false,
             sync_fraction: 1.0,
+            parallel_groups: true,
             eval_interval: 0,
             seed: 1234,
         }
@@ -159,6 +166,7 @@ impl TrainConfig {
             ),
             ("cpu_offload", Json::Bool(self.cpu_offload)),
             ("sync_fraction", Json::num(self.sync_fraction)),
+            ("parallel_groups", Json::Bool(self.parallel_groups)),
             ("eval_interval", Json::num(self.eval_interval as f64)),
             ("seed", Json::num(self.seed as f64)),
         ])
@@ -186,6 +194,7 @@ impl TrainConfig {
         };
         c.cpu_offload = j.get("cpu_offload")?.as_bool()?;
         c.sync_fraction = j.get("sync_fraction").and_then(Json::as_f64).unwrap_or(1.0);
+        c.parallel_groups = j.get("parallel_groups").and_then(Json::as_bool).unwrap_or(true);
         c.eval_interval = j.get("eval_interval")?.as_usize()?;
         c.seed = j.get("seed")?.as_f64()? as u64;
         Some(c)

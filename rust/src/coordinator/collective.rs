@@ -5,10 +5,22 @@
 //! NCCL, DESIGN.md §3). Every call also records its logical communication
 //! volume into [`CommStats`] so the cluster simulator can cost the same
 //! schedule the trainer actually executed.
+//!
+//! # Chunk parallelism
+//!
+//! The reduction is element-wise: `out[i]` is the f64 sum of `vectors[0..k]`
+//! at index `i`, accumulated in fixed group order, then divided by `k`.
+//! Because no accumulation crosses elements, splitting the index space into
+//! contiguous spans and reducing the spans on separate threads produces
+//! **bit-identical** results to the serial loop — the ZeRO++-style blocked
+//! layout buys wall-clock without touching numerics. `PIER_THREADS=1`
+//! forces the serial schedule.
+
+use crate::util::par::{join_spans, span, MIN_SPAN};
 
 /// Logical communication accounting, split by scope the way the paper's
 /// analysis is (§II-B): intra-group (fast links) vs global (fabric).
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct CommStats {
     pub inner_allreduce_calls: u64,
     pub inner_allreduce_bytes: f64,
@@ -24,47 +36,77 @@ impl CommStats {
     }
 }
 
-/// Sum-reduce `vectors` element-wise into a fresh mean vector.
-/// Deterministic: accumulation order is the natural group order, in f64
-/// (pairwise error stays below f32 resolution for any realistic K).
-pub fn all_reduce_mean(vectors: &[&[f32]]) -> Vec<f32> {
+/// f64-accumulation chunk: bounds the accumulator's working set so it
+/// lives in L1/L2 while `k` group slices stream through.
+const CHUNK: usize = 4096;
+
+/// Reduce `vectors` element-wise into `out` (the mean), reusing the
+/// caller's buffer — the zero-allocation entry point for the outer-sync
+/// hot path. Deterministic: per-element accumulation in f64, in the
+/// natural group order, identical for any thread count.
+pub fn all_reduce_mean_into(vectors: &[&[f32]], out: &mut [f32]) {
     assert!(!vectors.is_empty());
-    let n = vectors[0].len();
+    let n = out.len();
     for v in vectors {
         assert_eq!(v.len(), n, "ragged all-reduce");
     }
+    let sp = span(n, MIN_SPAN);
+    if sp >= n {
+        reduce_span(vectors, 0, out);
+        return;
+    }
+    join_spans(out.chunks_mut(sp).enumerate().map(|(i, chunk)| {
+        let start = i * sp;
+        move || reduce_span(vectors, start, chunk)
+    }));
+}
+
+/// Serial reduction of `out_span` = mean of `vectors[start..start+len]`.
+fn reduce_span(vectors: &[&[f32]], start: usize, out_span: &mut [f32]) {
     let k = vectors.len() as f64;
-    let mut out = vec![0.0f32; n];
-    // Chunked for cache friendliness; accumulate in f64 per element.
-    const CHUNK: usize = 4096;
-    let mut acc = vec![0.0f64; CHUNK.min(n)];
-    let mut start = 0;
-    while start < n {
-        let len = CHUNK.min(n - start);
+    let mut acc = vec![0.0f64; CHUNK.min(out_span.len().max(1))];
+    let mut lo = 0;
+    while lo < out_span.len() {
+        let len = CHUNK.min(out_span.len() - lo);
         acc[..len].iter_mut().for_each(|a| *a = 0.0);
         for v in vectors {
-            let src = &v[start..start + len];
+            let src = &v[start + lo..start + lo + len];
             for (a, &x) in acc[..len].iter_mut().zip(src) {
                 *a += x as f64;
             }
         }
-        for (o, a) in out[start..start + len].iter_mut().zip(&acc[..len]) {
+        for (o, a) in out_span[lo..lo + len].iter_mut().zip(&acc[..len]) {
             *o = (*a / k) as f32;
         }
-        start += len;
+        lo += len;
     }
+}
+
+/// Sum-reduce `vectors` element-wise into a fresh mean vector (allocating
+/// convenience wrapper over [`all_reduce_mean_into`]).
+pub fn all_reduce_mean(vectors: &[&[f32]]) -> Vec<f32> {
+    assert!(!vectors.is_empty());
+    let mut out = vec![0.0f32; vectors[0].len()];
+    all_reduce_mean_into(vectors, &mut out);
     out
 }
 
-/// Element-wise mean of per-group deltas (the outer all-reduce of Alg. 2
-/// line 11). Identical math to [`all_reduce_mean`]; separate entry point so
-/// stats distinguish inner vs outer scope.
-pub fn outer_all_reduce(vectors: &[&[f32]], stats: &mut CommStats) -> Vec<f32> {
-    let out = all_reduce_mean(vectors);
+/// Element-wise mean of per-group deltas into a reusable buffer (the outer
+/// all-reduce of Alg. 2 line 11) with stats accounting.
+pub fn outer_all_reduce_into(vectors: &[&[f32]], out: &mut [f32], stats: &mut CommStats) {
+    all_reduce_mean_into(vectors, out);
     stats.outer_allreduce_calls += 1;
     // Ring all-reduce moves 2·(k−1)/k·V per rank; we record the logical
     // payload V (fp32) and let the netsim apply the algorithm factor.
     stats.outer_allreduce_bytes += 4.0 * out.len() as f64;
+}
+
+/// Allocating variant of [`outer_all_reduce_into`] (partial-sync fragments
+/// and tests; the full-model path uses the in-place version).
+pub fn outer_all_reduce(vectors: &[&[f32]], stats: &mut CommStats) -> Vec<f32> {
+    assert!(!vectors.is_empty());
+    let mut out = vec![0.0f32; vectors[0].len()];
+    outer_all_reduce_into(vectors, &mut out, stats);
     out
 }
 
@@ -123,6 +165,41 @@ mod tests {
         let b = vec![3.0f32; n];
         let m = all_reduce_mean(&[&a, &b]);
         assert!(m.iter().all(|&x| x == 2.0));
+    }
+
+    #[test]
+    fn parallel_spans_bit_identical_to_serial_reference() {
+        // Large enough to cross MIN_SPAN so the threaded path engages
+        // (on multi-core hosts; on 1 core both paths are the same loop).
+        let n = (MIN_SPAN * 3) + 1234;
+        let mut state = 0x9e3779b97f4a7c15u64;
+        let mut next = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((state >> 33) as f32 / (1u64 << 31) as f32) - 0.5
+        };
+        let groups: Vec<Vec<f32>> = (0..5).map(|_| (0..n).map(|_| next()).collect()).collect();
+        let refs: Vec<&[f32]> = groups.iter().map(|g| g.as_slice()).collect();
+
+        let par = all_reduce_mean(&refs);
+
+        // Independent serial reference: per-element f64 sum in group order.
+        let k = refs.len() as f64;
+        for i in (0..n).step_by(997) {
+            let mut acc = 0.0f64;
+            for r in &refs {
+                acc += r[i] as f64;
+            }
+            assert_eq!(par[i].to_bits(), ((acc / k) as f32).to_bits(), "element {i}");
+        }
+    }
+
+    #[test]
+    fn into_variant_reuses_buffer() {
+        let a = vec![2.0f32; 64];
+        let b = vec![4.0f32; 64];
+        let mut out = vec![-1.0f32; 64];
+        all_reduce_mean_into(&[&a, &b], &mut out);
+        assert!(out.iter().all(|&x| x == 3.0));
     }
 
     #[test]

@@ -77,7 +77,17 @@ impl WorkerGroup {
         Ok(())
     }
 
-    /// Flat f32 view of the current parameters.
+    /// Flatten the current parameters into a caller-owned buffer — the
+    /// zero-allocation outer-sync path (the trainer keeps one reusable
+    /// buffer per group in a [`crate::runtime::FlatPool`]).
+    pub fn params_flat_into(&self, man: &Manifest, flat: &mut [f32]) -> Result<()> {
+        if flat.len() != man.n_params {
+            bail!("params_flat_into: buffer has {} slots, manifest {}", flat.len(), man.n_params);
+        }
+        Self::write_back(man, &self.params, 0, flat)
+    }
+
+    /// Flat f32 view of the current parameters (allocating convenience).
     pub fn params_flat(&self, man: &Manifest) -> Result<Vec<f32>> {
         let mut flat = vec![0.0f32; man.n_params];
         Self::write_back(man, &self.params, 0, &mut flat)?;
@@ -187,5 +197,18 @@ mod tests {
         assert!(WorkerGroup::tensor_literals(&man, &[0.0; 95]).is_err());
         assert!(WorkerGroup::token_literal(&man, &[0; 17]).is_err());
         assert!(WorkerGroup::token_literal(&man, &[0; 18]).is_ok());
+    }
+
+    #[test]
+    fn params_flat_into_reuses_buffer_and_checks_size() {
+        let man = manifest();
+        let init: Vec<f32> = (0..96).map(|i| (i as f32) * 0.25).collect();
+        let lits = WorkerGroup::tensor_literals(&man, &init).unwrap();
+        let g = WorkerGroup::new(0, &man, lits, sampler()).unwrap();
+        let mut buf = vec![-1.0f32; 96];
+        g.params_flat_into(&man, &mut buf).unwrap();
+        assert_eq!(buf, init);
+        let mut short = vec![0.0f32; 95];
+        assert!(g.params_flat_into(&man, &mut short).is_err());
     }
 }

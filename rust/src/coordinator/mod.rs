@@ -6,7 +6,9 @@
 //!   momentum decay, outer-LR schedule; DiLoCo baseline behaviour).
 //! * [`group`] — worker groups: model replica + data shard + inner state.
 //! * [`collective`] — deterministic in-process collectives with logical
-//!   volume accounting (inner vs outer scope).
+//!   volume accounting (inner vs outer scope), chunk-parallel reductions.
+//! * [`parallel`] — the scoped thread pool that steps all K groups
+//!   concurrently between outer syncs (deterministic by construction).
 //! * [`offload`] — §V's CPU offload of outer state, with byte/time
 //!   accounting.
 //! * [`state`] — binary checkpoints.
@@ -15,12 +17,14 @@ pub mod collective;
 pub mod group;
 pub mod offload;
 pub mod outer;
+pub mod parallel;
 pub mod state;
 pub mod trainer;
 
-pub use collective::{all_gather, all_reduce_mean, broadcast, CommStats};
+pub use collective::{all_gather, all_reduce_mean, all_reduce_mean_into, broadcast, CommStats};
 pub use group::WorkerGroup;
 pub use offload::{OffloadStats, OffloadStore};
 pub use outer::{OuterController, OuterResult};
+pub use parallel::ParallelExecutor;
 pub use state::Checkpoint;
 pub use trainer::Trainer;

@@ -10,12 +10,31 @@
 //!   momentum decay (0.99 → 0.95 → 0.9) and the §V outer-LR schedule after
 //!   the switch.
 //!
+//! # Step indexing
+//!
+//! Every schedule query takes the number of **completed** inner steps: the
+//! trainer performs step `t` (0-based) and then calls
+//! `warmup_accumulate(t + 1, ..)` / `sync(t + 1, ..)`. This makes the
+//! momentum-decay boundaries land exactly where Alg. 2 puts them — at the
+//! 10 % switch the accumulated trajectory has run `0.10·T` steps, so the
+//! boundary query `outer_momentum(cfg, 0.10·T)` already returns 0.99.
+//!
+//! # Allocation discipline
+//!
+//! The full-model sync path ([`OuterController::sync_in_place`]) reuses
+//! four controller-owned scratch buffers (mean, delta, committed, restart)
+//! allocated once at construction — an outer step performs **zero**
+//! full-model allocations or clones. The allocating [`OuterController::sync`]
+//! wrapper remains for tests and benches that want owned results.
+//!
 //! The anchor and momentum can live in the [`OffloadStore`] between outer
 //! steps (§V's CPU offload switch) — `sync` reloads them, steps, and
-//! offloads again.
+//! offloads again. Offload transfers (and their host-side copies) happen
+//! only when the switch is on; with offload disabled the state is
+//! device-resident and no copies are modeled.
 
 use crate::config::{OptMode, TrainConfig};
-use crate::coordinator::collective::{outer_all_reduce, CommStats};
+use crate::coordinator::collective::{outer_all_reduce, outer_all_reduce_into, CommStats};
 use crate::coordinator::offload::OffloadStore;
 use crate::optim::nesterov::OuterOpt;
 use crate::optim::schedule;
@@ -26,8 +45,14 @@ pub struct OuterController {
     /// θ the groups started the current inner phase from (Alg. 2's θ_{t−r}).
     anchor: Vec<f32>,
     pub store: OffloadStore,
-    /// Rotating fragment cursor for streaming partial sync (extension).
+    /// Rotating fragment index for streaming partial sync (extension):
+    /// counts fragments of the current cycle, in `[0, cycle_len)`.
     frag_cursor: usize,
+    // ---- reusable full-model scratch (allocated once) ----
+    mean: Vec<f32>,
+    delta: Vec<f32>,
+    committed: Vec<f32>,
+    restart: Vec<f32>,
     /// Telemetry for the run log.
     pub last_mu: f64,
     pub last_lr: f64,
@@ -48,15 +73,22 @@ pub struct PartialSync {
 impl OuterController {
     pub fn new(cfg: &TrainConfig, init_params: &[f32]) -> OuterController {
         assert_ne!(cfg.mode, OptMode::AdamW, "AdamW mode has no outer optimizer");
+        let n = init_params.len();
         let mut store = OffloadStore::new(cfg.cpu_offload);
         store.store("anchor", init_params.to_vec());
-        store.store("momentum", vec![0.0; init_params.len()]);
+        store.store("momentum", vec![0.0; n]);
         OuterController {
             cfg: cfg.clone(),
-            opt: OuterOpt::new(init_params.len(), cfg.nesterov),
+            opt: OuterOpt::new(n, cfg.nesterov),
             anchor: init_params.to_vec(),
             store,
             frag_cursor: 0,
+            mean: vec![0.0; n],
+            delta: vec![0.0; n],
+            // The committed/restart views start at the init point so they
+            // are never a stale all-zeros buffer before the first sync.
+            committed: init_params.to_vec(),
+            restart: init_params.to_vec(),
             last_mu: 0.0,
             last_lr: 0.0,
             outer_steps: 0,
@@ -66,103 +98,146 @@ impl OuterController {
 
     /// Alg. 1 (lazy-start phase, Pier only): track model changes as outer
     /// gradients every `H` steps, accumulating — but not applying — the
-    /// momentum. `global_params` is the current fully-synchronized model.
-    pub fn warmup_accumulate(&mut self, t: usize, global_params: &[f32]) {
+    /// momentum. `step` is the number of completed inner steps;
+    /// `global_params` is the current fully-synchronized model.
+    pub fn warmup_accumulate(&mut self, step: usize, global_params: &[f32]) {
+        assert_eq!(global_params.len(), self.anchor.len());
         if self.cfg.mode != OptMode::Pier || !self.cfg.momentum_warmup {
             // DiLoCo's lazy start tracks nothing; just move the anchor so
             // the first post-switch delta is measured from the switch point.
-            self.anchor.clear();
-            self.anchor.extend_from_slice(global_params);
+            self.anchor.copy_from_slice(global_params);
+            self.committed.copy_from_slice(global_params);
             self.refresh_offload();
             return;
         }
-        let mu = schedule::outer_momentum(&self.cfg, t);
-        // reload momentum/anchor if offloaded (accounting)
-        let _ = self.store.load("momentum");
-        let delta: Vec<f32> = global_params
-            .iter()
-            .zip(&self.anchor)
-            .map(|(&new, &old)| new - old)
-            .collect();
-        self.opt.accumulate(mu, &delta);
-        self.anchor.clear();
-        self.anchor.extend_from_slice(global_params);
+        let mu = schedule::outer_momentum(&self.cfg, step);
+        self.load_offloaded();
+        for ((d, &new), &old) in self.delta.iter_mut().zip(global_params).zip(&self.anchor) {
+            *d = new - old;
+        }
+        self.opt.accumulate(mu, &self.delta);
+        self.anchor.copy_from_slice(global_params);
+        self.committed.copy_from_slice(global_params);
         self.warmup_accums += 1;
         self.last_mu = mu;
         self.refresh_offload();
     }
 
-    /// Alg. 2 outer step at iteration `t`: all-reduce the per-group deltas,
-    /// apply Nesterov with the scheduled (μ, lr), return the parameters
-    /// every group must restart from.
-    pub fn sync(
+    /// Alg. 2 outer step after `step` completed inner iterations:
+    /// all-reduce the per-group deltas, apply Nesterov with the scheduled
+    /// (μ, lr), and return the restart parameters as a borrow of the
+    /// controller's reusable buffer — the zero-clone trainer path.
+    pub fn sync_in_place(
         &mut self,
-        t: usize,
+        step: usize,
         group_params: &[&[f32]],
         stats: &mut CommStats,
-    ) -> OuterResult {
-        // reload offloaded state (accounting; values are authoritative in
-        // `self` — the store models the device/host movement)
-        let _ = self.store.load("anchor");
-        let _ = self.store.load("momentum");
+    ) -> &[f32] {
+        self.load_offloaded();
 
-        let mean = outer_all_reduce(group_params, stats);
-        let delta: Vec<f32> =
-            mean.iter().zip(&self.anchor).map(|(&new, &old)| new - old).collect();
+        outer_all_reduce_into(group_params, &mut self.mean, stats);
+        for ((d, &m), &a) in self.delta.iter_mut().zip(&self.mean).zip(&self.anchor) {
+            *d = m - a;
+        }
 
-        let (mu, lr) = self.schedule_at(t);
-        let step = self.opt.step(&self.anchor, &delta, mu, lr);
+        let (mu, lr) = self.schedule_at(step);
+        self.opt.step_into(
+            &self.anchor,
+            &self.delta,
+            mu,
+            lr,
+            &mut self.committed,
+            &mut self.restart,
+        );
 
-        self.anchor.clear();
-        self.anchor.extend_from_slice(&step.next_start);
+        self.anchor.copy_from_slice(&self.restart);
         self.last_mu = mu;
         self.last_lr = lr;
         self.outer_steps += 1;
         self.refresh_offload();
+        &self.restart
+    }
 
-        OuterResult { committed: step.committed, next_start: step.next_start }
+    /// Allocating wrapper over [`OuterController::sync_in_place`] returning
+    /// owned committed/restart vectors (tests, benches, checkpoints).
+    pub fn sync(
+        &mut self,
+        step: usize,
+        group_params: &[&[f32]],
+        stats: &mut CommStats,
+    ) -> OuterResult {
+        self.sync_in_place(step, group_params, stats);
+        OuterResult { committed: self.committed.clone(), next_start: self.restart.clone() }
+    }
+
+    /// The controller's committed-parameter view (checkpoint/eval):
+    /// the init point before any tracking, the synchronized trajectory
+    /// during warmup/switch, the full Alg. 2 result after a full sync, and
+    /// a fragment-wise view under streaming partial sync (each fragment
+    /// reflects its most recent rotation — Streaming DiLoCo's contract).
+    pub fn last_committed(&self) -> &[f32] {
+        &self.committed
+    }
+
+    /// Number of fragments in one partial-sync rotation cycle:
+    /// ⌈1 / sync_fraction⌉, clamped to the parameter count.
+    pub fn partial_cycle_len(&self) -> usize {
+        let n = self.anchor.len().max(1);
+        let frac = self.cfg.sync_fraction;
+        if frac >= 1.0 {
+            return 1;
+        }
+        if frac <= 0.0 || frac.is_nan() {
+            return n;
+        }
+        ((1.0 / frac).ceil() as usize).clamp(1, n)
     }
 
     /// Streaming partial outer step (extension, DESIGN.md §6): synchronize
-    /// only the current rotating fragment `[lo, hi)` — `sync_fraction` of
-    /// the model — with the same Nesterov/schedule math restricted to the
-    /// range. Peak communication drops to `fraction · 4N`.
+    /// only the current rotating fragment `[lo, hi)` with the same
+    /// Nesterov/schedule math restricted to the range.
+    ///
+    /// Fragments are a *balanced partition* of the parameter vector into
+    /// `partial_cycle_len()` pieces (sizes differ by at most one), so one
+    /// full rotation covers every parameter **exactly once** — also when
+    /// `sync_fraction · n` does not divide `n`. Peak communication per
+    /// outer step drops to ≈ `fraction · 4N` bytes.
     pub fn sync_partial(
         &mut self,
-        t: usize,
+        step: usize,
         group_params: &[&[f32]],
         stats: &mut CommStats,
     ) -> PartialSync {
         let n = self.anchor.len();
-        let frac = self.cfg.sync_fraction.clamp(0.0, 1.0);
-        let frag_len = ((frac * n as f64).ceil() as usize).clamp(1, n);
-        let lo = self.frag_cursor.min(n.saturating_sub(1));
-        let hi = (lo + frag_len).min(n);
-        self.frag_cursor = if hi >= n { 0 } else { hi };
+        let cycle = self.partial_cycle_len();
+        let idx = self.frag_cursor % cycle;
+        let lo = idx * n / cycle;
+        let hi = (idx + 1) * n / cycle;
+        self.frag_cursor = (idx + 1) % cycle;
 
-        let _ = self.store.load("anchor");
-        let _ = self.store.load("momentum");
+        self.load_offloaded();
 
         let slices: Vec<&[f32]> = group_params.iter().map(|g| &g[lo..hi]).collect();
         let mean = outer_all_reduce(&slices, stats);
         let delta: Vec<f32> =
             mean.iter().zip(&self.anchor[lo..hi]).map(|(&m, &a)| m - a).collect();
-        let (mu, lr) = self.schedule_at(t);
+        let (mu, lr) = self.schedule_at(step);
         let base: Vec<f32> = self.anchor[lo..hi].to_vec();
-        let step = self.opt.step_range(lo, &base, &delta, mu, lr);
-        self.anchor[lo..hi].copy_from_slice(&step.next_start);
+        let frag_step = self.opt.step_range(lo, &base, &delta, mu, lr);
+        self.anchor[lo..hi].copy_from_slice(&frag_step.next_start);
+        self.committed[lo..hi].copy_from_slice(&frag_step.committed);
         self.last_mu = mu;
         self.last_lr = lr;
         self.outer_steps += 1;
         self.refresh_offload();
-        PartialSync { lo, hi, fragment: step.next_start }
+        PartialSync { lo, hi, fragment: frag_step.next_start }
     }
 
-    fn schedule_at(&self, t: usize) -> (f64, f64) {
+    fn schedule_at(&self, step: usize) -> (f64, f64) {
         match self.cfg.mode {
             OptMode::Pier => (
-                schedule::outer_momentum(&self.cfg, t),
-                schedule::outer_lr(&self.cfg, t),
+                schedule::outer_momentum(&self.cfg, step),
+                schedule::outer_lr(&self.cfg, step),
             ),
             OptMode::DiLoCo => (self.cfg.outer_momentum, schedule::DILOCO_OUTER_LR),
             OptMode::AdamW => unreachable!(),
@@ -172,14 +247,28 @@ impl OuterController {
     /// Called once at the lazy-start → DiLoCo switch: the groups fork from
     /// `global_params`; deltas are measured from here on.
     pub fn on_switch(&mut self, global_params: &[f32]) {
-        self.anchor.clear();
-        self.anchor.extend_from_slice(global_params);
+        assert_eq!(global_params.len(), self.anchor.len());
+        self.anchor.copy_from_slice(global_params);
+        self.committed.copy_from_slice(global_params);
         self.refresh_offload();
     }
 
+    /// Reload offloaded state (accounting; values are authoritative in
+    /// `self` — the store models the device↔host movement). A no-op when
+    /// offload is disabled: device-resident state moves nothing and needs
+    /// no host copy.
+    fn load_offloaded(&mut self) {
+        if self.store.enabled {
+            let _ = self.store.load("anchor");
+            let _ = self.store.load("momentum");
+        }
+    }
+
     fn refresh_offload(&mut self) {
-        self.store.store("anchor", self.anchor.clone());
-        self.store.store("momentum", self.opt.momentum.clone());
+        if self.store.enabled {
+            self.store.store("anchor", self.anchor.clone());
+            self.store.store("momentum", self.opt.momentum.clone());
+        }
     }
 
     pub fn momentum_norm(&self) -> f64 {
@@ -231,6 +320,26 @@ mod tests {
     }
 
     #[test]
+    fn warmup_schedule_uses_completed_step_index() {
+        // Trainer convention: after performing 0-based step t, schedules
+        // are queried at t+1 (completed steps). At the last lazy-start
+        // accumulation of a 100k run (t = 9 999 → step index 10 000) the
+        // momentum-decay schedule is exactly at its 10 % boundary, so the
+        // Alg. 2 warm value 0.99 must already be in effect — the old
+        // convention (query at t) read the base μ = 0.9 one accumulation
+        // too long.
+        let mut c = TrainConfig::default_for(100_000);
+        c.mode = OptMode::Pier;
+        let mut ctl = OuterController::new(&c, &[0.0f32; 4]);
+        ctl.warmup_accumulate(10_000, &[1.0f32; 4]);
+        assert_eq!(ctl.last_mu, 0.99);
+        // …and one interval earlier it is still the base coefficient.
+        let mut ctl2 = OuterController::new(&c, &[0.0f32; 4]);
+        ctl2.warmup_accumulate(9_000, &[1.0f32; 4]);
+        assert_eq!(ctl2.last_mu, 0.9);
+    }
+
+    #[test]
     fn sync_averages_groups_and_moves_anchor() {
         // μ=0 would need schedule override; instead verify the averaging +
         // anchor movement algebra with the scheduled values.
@@ -249,6 +358,37 @@ mod tests {
     }
 
     #[test]
+    fn sync_in_place_matches_allocating_sync_bitwise() {
+        let c = cfg(OptMode::DiLoCo);
+        let init: Vec<f32> = (0..64).map(|i| (i as f32 * 0.37).sin()).collect();
+        let g1: Vec<f32> = (0..64).map(|i| (i as f32 * 0.11).cos()).collect();
+        let g2: Vec<f32> = (0..64).map(|i| (i as f32 * 0.23).sin() * 2.0).collect();
+        let mut a = OuterController::new(&c, &init);
+        let mut b = OuterController::new(&c, &init);
+        let mut s1 = CommStats::default();
+        let mut s2 = CommStats::default();
+        let owned = a.sync(200, &[&g1, &g2], &mut s1);
+        let borrowed: Vec<f32> = b.sync_in_place(200, &[&g1, &g2], &mut s2).to_vec();
+        assert_eq!(owned.next_start, borrowed);
+        assert_eq!(owned.committed, b.last_committed());
+        assert_eq!(s1, s2);
+    }
+
+    #[test]
+    fn sync_in_place_is_reusable_across_steps() {
+        let c = cfg(OptMode::DiLoCo);
+        let mut ctl = OuterController::new(&c, &[0.0f32; 8]);
+        let mut stats = CommStats::default();
+        let g = vec![1.0f32; 8];
+        let first: Vec<f32> = ctl.sync_in_place(10, &[&g], &mut stats).to_vec();
+        let second: Vec<f32> = ctl.sync_in_place(20, &[&g], &mut stats).to_vec();
+        // second step measures a smaller delta from the moved anchor, so
+        // the restart point keeps evolving — and the buffers were reused.
+        assert_ne!(first, second);
+        assert_eq!(ctl.outer_steps, 2);
+    }
+
+    #[test]
     fn offload_accounting_tracks_outer_steps() {
         let mut c = cfg(OptMode::Pier);
         c.cpu_offload = true;
@@ -259,6 +399,46 @@ mod tests {
         assert!(ctl.store.stats.bytes_to_host > 0.0);
         assert!(ctl.store.stats.bytes_to_device > 0.0);
         assert!(ctl.store.stats.sim_seconds > 0.0);
+    }
+
+    #[test]
+    fn disabled_offload_moves_no_bytes_after_construction() {
+        let c = cfg(OptMode::Pier);
+        let mut ctl = OuterController::new(&c, &[0.0f32; 100]);
+        let stores_at_init = ctl.store.stats.stores;
+        let g = vec![0.5f32; 100];
+        let mut stats = CommStats::default();
+        ctl.sync(200, &[&g], &mut stats);
+        ctl.sync(210, &[&g], &mut stats);
+        assert_eq!(ctl.store.stats.bytes_to_host, 0.0);
+        assert_eq!(ctl.store.stats.loads, 0);
+        // device-resident state is not re-stored per step
+        assert_eq!(ctl.store.stats.stores, stores_at_init);
+        assert!(ctl.store.stats.peak_device_bytes > 0.0);
+    }
+
+    #[test]
+    fn committed_view_is_never_stale() {
+        let mut c = cfg(OptMode::Pier);
+        c.sync_fraction = 0.5;
+        let init: Vec<f32> = (0..8).map(|i| i as f32 * 0.1).collect();
+        let mut ctl = OuterController::new(&c, &init);
+        // before any tracking: the init point, not zeros
+        assert_eq!(ctl.last_committed(), init.as_slice());
+        // warmup/switch track the synchronized trajectory
+        let moved = vec![1.0f32; 8];
+        ctl.warmup_accumulate(100, &moved);
+        assert_eq!(ctl.last_committed(), moved.as_slice());
+        ctl.on_switch(&init);
+        assert_eq!(ctl.last_committed(), init.as_slice());
+        // partial syncs update the committed view fragment-wise
+        let g = vec![2.0f32; 8];
+        let mut stats = CommStats::default();
+        let p = ctl.sync_partial(300, &[&g], &mut stats);
+        assert!(ctl.last_committed()[p.lo..p.hi].iter().zip(&init[p.lo..p.hi])
+            .any(|(&a, &b)| a != b), "synced fragment must move");
+        assert_eq!(&ctl.last_committed()[p.hi..], &init[p.hi..],
+            "unsynced fragment keeps the previous committed view");
     }
 
     #[test]
@@ -299,5 +479,61 @@ mod tests {
         assert_eq!((p2.lo, p2.hi), (4, 8)); // rotation covers the rest
         let p3 = ctl.sync_partial(320, &[&g], &mut stats);
         assert_eq!(p3.lo, 0); // wrapped
+    }
+
+    #[test]
+    fn partial_rotation_exact_coverage_when_fraction_does_not_divide() {
+        // n = 10, fraction = 0.3 → cycle of ⌈1/0.3⌉ = 4 balanced fragments
+        // (sizes 2/3/2/3). One rotation must touch every parameter exactly
+        // once — the old ceil+clamp cursor could skew coverage.
+        let mut c = cfg(OptMode::Pier);
+        c.sync_fraction = 0.3;
+        let n = 10;
+        let init = [0.0f32; 10];
+        let mut ctl = OuterController::new(&c, &init);
+        assert_eq!(ctl.partial_cycle_len(), 4);
+        let g = vec![1.0f32; n];
+        let mut stats = CommStats::default();
+        let mut touched = vec![0u32; n];
+        for _ in 0..ctl.partial_cycle_len() {
+            let p = ctl.sync_partial(300, &[&g], &mut stats);
+            assert!(p.hi > p.lo && p.hi <= n);
+            assert!(p.hi - p.lo <= (0.3f64 * n as f64).ceil() as usize);
+            for slot in &mut touched[p.lo..p.hi] {
+                *slot += 1;
+            }
+        }
+        assert!(touched.iter().all(|&hits| hits == 1), "coverage {touched:?}");
+        // next cycle starts over at the front
+        assert_eq!(ctl.sync_partial(300, &[&g], &mut stats).lo, 0);
+    }
+
+    #[test]
+    fn partial_full_rotation_matches_one_full_sync() {
+        // With a fixed schedule (DiLoCo) and frozen group params, a full
+        // rotation of partial syncs must land on exactly the same restart
+        // point as one full sync — per-element the math is identical, only
+        // the order of fragments differs.
+        let n = 10;
+        let init: Vec<f32> = (0..n).map(|i| (i as f32 * 0.7).sin()).collect();
+        let g1: Vec<f32> = (0..n).map(|i| (i as f32 * 0.3).cos()).collect();
+        let g2: Vec<f32> = (0..n).map(|i| (i as f32 * 0.5).sin() + 0.25).collect();
+
+        let mut full_ctl = OuterController::new(&cfg(OptMode::DiLoCo), &init);
+        let mut s1 = CommStats::default();
+        let full = full_ctl.sync(100, &[&g1, &g2], &mut s1);
+
+        let mut c = cfg(OptMode::DiLoCo);
+        c.sync_fraction = 0.3;
+        let mut part_ctl = OuterController::new(&c, &init);
+        let mut s2 = CommStats::default();
+        let mut assembled = vec![0.0f32; n];
+        for _ in 0..part_ctl.partial_cycle_len() {
+            let p = part_ctl.sync_partial(100, &[&g1, &g2], &mut s2);
+            assembled[p.lo..p.hi].copy_from_slice(&p.fragment);
+        }
+        assert_eq!(assembled, full.next_start);
+        // a full rotation moves exactly the full-model volume in total
+        assert_eq!(s1.outer_allreduce_bytes, s2.outer_allreduce_bytes);
     }
 }

@@ -1,0 +1,215 @@
+//! Parallel group-execution engine for the inner phase.
+//!
+//! Pier's premise is that worker groups are *independent* between outer
+//! syncs — each group owns its model replica, AdamW moments, data shard,
+//! and step counter, and touches nothing shared. That makes group
+//! execution embarrassingly parallel: this module schedules one closure
+//! per group onto a scoped thread pool, with the outer sync as the only
+//! barrier.
+//!
+//! # Determinism contract
+//!
+//! Scheduling must never change the math. The engine guarantees it
+//! structurally:
+//!
+//! * each closure receives `&mut` to exactly one group's state — there is
+//!   no shared mutable state, so there is no interleaving to observe;
+//! * results are returned **in item order**, so any subsequent reduction
+//!   (loss averaging, comm-stats accounting, the outer all-reduce) runs in
+//!   the same fixed order as the serial schedule;
+//! * errors are reported deterministically: every item's closure runs to
+//!   completion (on either schedule), and the lowest-indexed failure wins,
+//!   regardless of which worker hit it first in wall-clock time.
+//!
+//! `rust/tests/parallel_parity.rs` pins this: a seeded multi-group run is
+//! bit-identical (loss bits and comm stats) between the serial loop and
+//! the thread-pool schedule for `groups ∈ {1, 2, 4}`.
+
+use anyhow::Result;
+
+use crate::util::par::max_threads;
+
+/// A fixed-width scoped thread pool for per-group work.
+///
+/// Workers are spawned per call with `std::thread::scope` — group steps are
+/// milliseconds-to-seconds of compute, so spawn cost is noise, and scoped
+/// threads let closures borrow the trainer's state without `Arc`/`'static`
+/// gymnastics.
+#[derive(Clone, Copy, Debug)]
+pub struct ParallelExecutor {
+    threads: usize,
+}
+
+impl ParallelExecutor {
+    /// `max_threads = 0` means "one worker per available core"
+    /// (respecting the `PIER_THREADS` override).
+    pub fn new(cap: usize) -> ParallelExecutor {
+        let hw = max_threads();
+        let threads = if cap == 0 { hw } else { cap.min(hw).max(1) };
+        ParallelExecutor { threads }
+    }
+
+    /// A single-threaded executor: identical semantics (including the
+    /// run-everything error path), serial schedule.
+    pub fn serial() -> ParallelExecutor {
+        ParallelExecutor { threads: 1 }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(i, &mut items[i])` for every item, concurrently when more
+    /// than one worker is available. Results come back in item order.
+    ///
+    /// Error semantics are schedule-independent: **every** item's closure
+    /// runs to completion regardless of other items' failures (concurrent
+    /// workers cannot be un-run, so the serial path matches them), and the
+    /// error of the lowest-indexed failing item is returned.
+    pub fn run<T, R, F>(&self, items: &mut [T], f: F) -> Result<Vec<R>>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(usize, &mut T) -> Result<R> + Sync,
+    {
+        let n = items.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let workers = self.threads.min(n);
+        if workers <= 1 {
+            let results: Vec<Result<R>> =
+                items.iter_mut().enumerate().map(|(i, item)| f(i, item)).collect();
+            let mut out = Vec::with_capacity(n);
+            for r in results {
+                out.push(r?);
+            }
+            return Ok(out);
+        }
+
+        // Static block partition: worker w owns items [w·chunk, (w+1)·chunk).
+        // With n ≤ workers (the common trainer case: one group per core)
+        // every item gets its own thread.
+        let chunk = n.div_ceil(workers);
+        let mut slots: Vec<Option<Result<R>>> = Vec::with_capacity(n);
+        slots.resize_with(n, || None);
+        let f = &f;
+        std::thread::scope(|scope| {
+            for (w, (item_chunk, slot_chunk)) in
+                items.chunks_mut(chunk).zip(slots.chunks_mut(chunk)).enumerate()
+            {
+                let base = w * chunk;
+                scope.spawn(move || {
+                    for (j, (item, slot)) in
+                        item_chunk.iter_mut().zip(slot_chunk.iter_mut()).enumerate()
+                    {
+                        *slot = Some(f(base + j, item));
+                    }
+                });
+            }
+        });
+        let mut out = Vec::with_capacity(n);
+        for slot in slots {
+            out.push(slot.expect("parallel worker left a result slot empty")?);
+        }
+        Ok(out)
+    }
+}
+
+impl Default for ParallelExecutor {
+    fn default() -> ParallelExecutor {
+        ParallelExecutor::new(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use anyhow::bail;
+
+    #[test]
+    fn results_in_item_order() {
+        let pool = ParallelExecutor::new(0);
+        let mut items: Vec<u64> = (0..16).collect();
+        let out = pool.run(&mut items, |i, x| Ok(*x * 10 + i as u64)).unwrap();
+        let expect: Vec<u64> = (0..16).map(|i| i * 10 + i).collect();
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn mutates_each_item_exactly_once() {
+        let pool = ParallelExecutor::new(4);
+        let mut items = vec![0u32; 37];
+        pool.run(&mut items, |_, x| {
+            *x += 1;
+            Ok(())
+        })
+        .unwrap();
+        assert!(items.iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn lowest_index_error_wins() {
+        let pool = ParallelExecutor::new(8);
+        let mut items: Vec<usize> = (0..8).collect();
+        let err = pool
+            .run(&mut items, |i, _| -> Result<()> {
+                if i >= 3 {
+                    bail!("item {i} failed");
+                }
+                Ok(())
+            })
+            .unwrap_err();
+        assert_eq!(err.to_string(), "item 3 failed");
+    }
+
+    #[test]
+    fn error_path_runs_every_item_on_both_schedules() {
+        for pool in [ParallelExecutor::serial(), ParallelExecutor::new(8)] {
+            let mut items = vec![0u32; 6];
+            let err = pool
+                .run(&mut items, |i, x| -> Result<()> {
+                    *x += 1;
+                    if i == 2 {
+                        bail!("boom {i}");
+                    }
+                    Ok(())
+                })
+                .unwrap_err();
+            assert_eq!(err.to_string(), "boom 2");
+            assert!(items.iter().all(|&x| x == 1), "every item must still run");
+        }
+    }
+
+    #[test]
+    fn serial_and_parallel_agree() {
+        let step = |i: usize, x: &mut f64| -> Result<f64> {
+            // A few dozen dependent float ops — enough to catch any
+            // reordering if the scheduler were broken.
+            let mut acc = *x;
+            for k in 0..64 {
+                acc = acc * 1.000_1 + (i as f64) * 1e-3 + (k as f64) * 1e-6;
+            }
+            *x = acc;
+            Ok(acc)
+        };
+        let mut a: Vec<f64> = (0..7).map(|i| i as f64 * 0.1).collect();
+        let mut b = a.clone();
+        let ra = ParallelExecutor::serial().run(&mut a, step).unwrap();
+        let rb = ParallelExecutor::new(0).run(&mut b, step).unwrap();
+        assert_eq!(
+            ra.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            rb.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let pool = ParallelExecutor::new(0);
+        let mut none: Vec<u8> = Vec::new();
+        assert!(pool.run(&mut none, |_, _| Ok(1)).unwrap().is_empty());
+        let mut one = vec![5u8];
+        assert_eq!(pool.run(&mut one, |_, x| Ok(*x)).unwrap(), vec![5]);
+    }
+}

@@ -14,14 +14,35 @@
 //!   deltas, applies Nesterov with the scheduled (μ, lr), and broadcasts
 //!   the restart point.
 //!
-//! On a GPU cluster the groups run concurrently; on this single-core host
-//! they are time-sliced, which changes wall-clock but not one bit of the
-//! math — runtime figures come from the cluster simulator instead.
+//! # Parallel execution model
+//!
+//! Between outer syncs the groups share **nothing**: each [`WorkerGroup`]
+//! owns its parameter/moment literals, its data-shard sampler, and its
+//! AdamW step counter, and the compiled step functions are immutable once
+//! loaded. The inner phase therefore steps all K groups concurrently on a
+//! scoped thread pool ([`crate::coordinator::parallel`]), with the `H`-step
+//! outer sync as the only barrier — the same shape as the paper's cluster
+//! schedule, where groups run on disjoint accelerator islands and only the
+//! outer all-reduce crosses the slow fabric. Scheduling is math-free by
+//! construction: per-group state is exclusively owned by its closure, all
+//! cross-group reductions (loss averaging, comm accounting, the outer
+//! all-reduce) run in fixed group order after the join, and
+//! `rust/tests/parallel_parity.rs` pins bit-identical losses and comm
+//! stats against the serial schedule (`cfg.parallel_groups = false`
+//! forces it; `PIER_THREADS` caps the worker count).
+//!
+//! Schedule indexing: all outer-schedule queries (Alg. 1 warmup, Alg. 2
+//! μ/lr) use the number of **completed** inner steps, i.e. `t + 1` after
+//! performing 0-based step `t` — see the `coordinator::outer` module docs
+//! for the boundary semantics this pins.
 //!
 //! Perf note (EXPERIMENTS.md §Perf): group state lives as per-tensor PJRT
 //! literals in the step functions' native layout, so the inner loop passes
 //! borrows straight back into `execute` — flat f32 views are materialized
-//! only at outer syncs, evals, and checkpoints.
+//! only at outer syncs, evals, and checkpoints, and the outer-sync path
+//! reuses one [`FlatPool`] buffer per group plus the controller's scratch:
+//! zero full-model allocations or clones per sync beyond the single
+//! reduction output.
 
 use anyhow::{ensure, Context, Result};
 use xla::Literal;
@@ -30,10 +51,11 @@ use crate::config::{OptMode, TrainConfig};
 use crate::coordinator::collective::{note_inner_allreduce, CommStats};
 use crate::coordinator::group::WorkerGroup;
 use crate::coordinator::outer::OuterController;
+use crate::coordinator::parallel::ParallelExecutor;
 use crate::data::{validation_batches, Pipeline};
 use crate::metrics::{CommStatsSnapshot, IterRecord, RunLog};
 use crate::optim::schedule;
-use crate::runtime::{scalar_f32, scalar_i32, to_scalar_f32, Manifest, ModelExes, Runtime};
+use crate::runtime::{scalar_f32, scalar_i32, to_scalar_f32, FlatPool, Manifest, ModelExes, Runtime};
 use crate::util::Timer;
 
 /// How many fixed validation batches each eval uses.
@@ -48,6 +70,19 @@ pub struct Trainer {
     pub stats: CommStats,
     val_batches: Vec<Vec<i32>>,
     pub log: RunLog,
+    /// Thread pool for concurrent group execution (Phase B).
+    pool: ParallelExecutor,
+    /// Reusable per-group flat buffers for the outer-sync boundary.
+    flats: FlatPool,
+}
+
+/// Everything a single group step needs besides the group itself. Shared
+/// immutably across the worker threads — the step functions are compiled
+/// once and the manifest is read-only.
+struct StepCtx<'a> {
+    man: &'a Manifest,
+    exes: &'a ModelExes,
+    weight_decay: f64,
 }
 
 impl Trainer {
@@ -83,7 +118,28 @@ impl Trainer {
             ..Default::default()
         };
 
-        Ok(Trainer { man, exes, cfg, groups, outer, stats: CommStats::default(), val_batches, log })
+        Ok(Trainer {
+            man,
+            exes,
+            cfg,
+            groups,
+            outer,
+            stats: CommStats::default(),
+            val_batches,
+            log,
+            pool: ParallelExecutor::new(0),
+            flats: FlatPool::new(),
+        })
+    }
+
+    /// The executor Phase B uses: the shared pool, or a serial schedule
+    /// when `cfg.parallel_groups` is off (parity runs, profiling).
+    fn engine(&self) -> ParallelExecutor {
+        if self.cfg.parallel_groups {
+            self.pool
+        } else {
+            ParallelExecutor::serial()
+        }
     }
 
     /// The committed global parameters right now (eval/checkpoint view).
@@ -115,104 +171,17 @@ impl Trainer {
         Ok(outs[0].to_vec::<f32>()?)
     }
 
-    /// Split a step-function output tuple into (params, m, v) literal sets
-    /// and install them on group `gi`.
-    fn install_state(&mut self, gi: usize, mut outs: Vec<Literal>) {
-        let p = self.man.n_tensors();
-        outs.truncate(3 * p);
-        let v = outs.split_off(2 * p);
-        let m = outs.split_off(p);
-        let g = &mut self.groups[gi];
-        g.params = outs;
-        g.m = m;
-        g.v = v;
-    }
-
-    /// One fused inner step for group `gi` with a single micro-batch.
-    fn fused_step(&mut self, gi: usize, tokens: &[i32], lr: f64) -> Result<(f64, f64)> {
-        let p = self.man.n_tensors();
-        self.groups[gi].adam_t += 1;
-        let outs = {
-            let g = &self.groups[gi];
-            let tok = WorkerGroup::token_literal(&self.man, tokens)?;
-            let lr_l = scalar_f32(lr as f32);
-            let wd_l = scalar_f32(self.cfg.weight_decay as f32);
-            let t_l = scalar_f32(g.adam_t as f32);
-            let mut inputs: Vec<&Literal> = Vec::with_capacity(3 * p + 4);
-            inputs.extend(g.params.iter());
-            inputs.extend(g.m.iter());
-            inputs.extend(g.v.iter());
-            inputs.push(&tok);
-            inputs.push(&lr_l);
-            inputs.push(&wd_l);
-            inputs.push(&t_l);
-            self.exes.train_step.run(&inputs)?
-        };
-        let loss = to_scalar_f32(&outs[3 * p])? as f64;
-        let gnorm = to_scalar_f32(&outs[3 * p + 1])? as f64;
-        self.install_state(gi, outs);
-        Ok((loss, gnorm))
-    }
-
-    /// One inner step for group `gi` with gradient accumulation over the
-    /// provided micro-batches (Megatron-style: mean of micro-grads, single
-    /// fused clip+AdamW update).
-    fn accumulated_step(&mut self, gi: usize, micro: &[Vec<i32>], lr: f64) -> Result<(f64, f64)> {
-        let p = self.man.n_tensors();
-        if micro.len() == 1 {
-            return self.fused_step(gi, &micro[0], lr);
-        }
-        // 1. gradient accumulation (fwd/bwd per micro-batch)
-        let mut gsum = vec![0.0f32; self.man.n_params];
-        let mut gflat = vec![0.0f32; self.man.n_params];
-        let mut loss_sum = 0.0;
-        for tokens in micro {
-            let outs = {
-                let g = &self.groups[gi];
-                let tok = WorkerGroup::token_literal(&self.man, tokens)?;
-                let mut inputs: Vec<&Literal> = g.params.iter().collect();
-                inputs.push(&tok);
-                self.exes.grad_step.run(&inputs)?
-            };
-            WorkerGroup::write_back(&self.man, &outs, 0, &mut gflat)?;
-            for (a, b) in gsum.iter_mut().zip(&gflat) {
-                *a += b;
-            }
-            loss_sum += to_scalar_f32(&outs[p])? as f64;
-        }
-        let inv = 1.0 / micro.len() as f32;
-        for x in gsum.iter_mut() {
-            *x *= inv;
-        }
-        // 2. single fused clip+AdamW update
-        self.groups[gi].adam_t += 1;
-        let outs = {
-            let g = &self.groups[gi];
-            let grad_lits = WorkerGroup::tensor_literals(&self.man, &gsum)?;
-            let lr_l = scalar_f32(lr as f32);
-            let wd_l = scalar_f32(self.cfg.weight_decay as f32);
-            let t_l = scalar_f32(g.adam_t as f32);
-            let mut inputs: Vec<&Literal> = Vec::with_capacity(4 * p + 3);
-            inputs.extend(g.params.iter());
-            inputs.extend(g.m.iter());
-            inputs.extend(g.v.iter());
-            inputs.extend(grad_lits.iter());
-            inputs.push(&lr_l);
-            inputs.push(&wd_l);
-            inputs.push(&t_l);
-            self.exes.apply_step.run(&inputs)?
-        };
-        let gnorm = to_scalar_f32(&outs[3 * p])? as f64;
-        self.install_state(gi, outs);
-        Ok((loss_sum / micro.len() as f64, gnorm))
-    }
-
     /// Advance group 0 by one fused inner step on a fresh micro-batch —
     /// the bench/diagnostic entry point (returns (loss, gnorm)).
     pub fn step_once(&mut self) -> Result<(f64, f64)> {
         let lr = schedule::inner_lr(&self.cfg, self.groups[0].adam_t as usize);
         let tokens = self.groups[0].sampler.next_batch(self.man.micro_batch);
-        self.fused_step(0, &tokens, lr)
+        let ctx = StepCtx {
+            man: &self.man,
+            exes: &self.exes,
+            weight_decay: self.cfg.weight_decay,
+        };
+        fused_step(&ctx, &mut self.groups[0], &tokens, lr)
     }
 
     /// Micro-batches for a fully-synchronized global step, drawn
@@ -235,17 +204,25 @@ impl Trainer {
         for t in 0..switch.min(t_total) {
             let lr = schedule::inner_lr(&self.cfg, t);
             let micro = self.global_micro_batches();
-            let (loss, gnorm) = self.accumulated_step(0, &micro, lr)?;
+            let (loss, gnorm) = {
+                let ctx = StepCtx {
+                    man: &self.man,
+                    exes: &self.exes,
+                    weight_decay: self.cfg.weight_decay,
+                };
+                accumulated_step(&ctx, &mut self.groups[0], &micro, lr)?
+            };
             // DP all-reduce accounting: one gradient exchange over all ranks
             note_inner_allreduce(self.man.n_params, &mut self.stats);
             self.record(t, loss, lr, gnorm);
 
             // Alg. 1: momentum warmup every H steps (Pier), anchor tracking
-            // (DiLoCo) — operates on the synchronized trajectory.
+            // (DiLoCo) — operates on the synchronized trajectory. Schedules
+            // see t+1 completed steps.
             if (t + 1) % h == 0 && self.outer.is_some() {
                 let params = self.groups[0].params_flat(&self.man)?;
                 if let Some(outer) = self.outer.as_mut() {
-                    outer.warmup_accumulate(t, &params);
+                    outer.warmup_accumulate(t + 1, &params);
                 }
             }
             self.maybe_eval(t)?;
@@ -258,13 +235,15 @@ impl Trainer {
             let src_v = self.groups[0].v_flat(&self.man)?;
             let adam_t = self.groups[0].adam_t;
             let k = self.groups.len();
-            for gi in 1..k {
-                let man = self.man.clone();
-                let g = &mut self.groups[gi];
-                g.set_params_flat(&man, &src_p)?;
-                g.set_m_flat(&man, &src_m)?;
-                g.set_v_flat(&man, &src_v)?;
-                g.adam_t = adam_t;
+            {
+                let man = &self.man;
+                for gi in 1..k {
+                    let g = &mut self.groups[gi];
+                    g.set_params_flat(man, &src_p)?;
+                    g.set_m_flat(man, &src_m)?;
+                    g.set_v_flat(man, &src_v)?;
+                    g.adam_t = adam_t;
+                }
             }
             self.stats.broadcast_calls += 1;
             self.stats.broadcast_bytes += 4.0 * (3 * src_p.len() * (k - 1)) as f64;
@@ -272,24 +251,39 @@ impl Trainer {
                 outer.on_switch(&src_p);
             }
 
-            // ---------------- Phase B: inner loops + outer steps ----------
+            // -------- Phase B: concurrent inner loops + outer steps --------
             let group_batch = self.cfg.group_batch();
             let mb = self.man.micro_batch;
             let n_micro = group_batch / mb;
+            let engine = self.engine();
             for t in switch..t_total {
                 let lr = schedule::inner_lr(&self.cfg, t);
+                // All K groups step concurrently; each closure owns exactly
+                // one group's state (sampler, literals, adam_t), so the
+                // schedule cannot change the math.
+                let outcomes = {
+                    let ctx = StepCtx {
+                        man: &self.man,
+                        exes: &self.exes,
+                        weight_decay: self.cfg.weight_decay,
+                    };
+                    engine.run(&mut self.groups, |_, g| {
+                        let micro: Vec<Vec<i32>> =
+                            (0..n_micro).map(|_| g.sampler.next_batch(mb)).collect();
+                        accumulated_step(&ctx, g, &micro, lr)
+                    })?
+                };
+                // Fixed-order reduction after the join: identical to the
+                // serial schedule's running sums and accounting.
                 let mut loss_acc = 0.0;
                 let mut gnorm_acc = 0.0;
-                for gi in 0..self.groups.len() {
-                    let micro: Vec<Vec<i32>> =
-                        (0..n_micro).map(|_| self.groups[gi].sampler.next_batch(mb)).collect();
-                    let (loss, gnorm) = self.accumulated_step(gi, &micro, lr)?;
+                for &(loss, gnorm) in &outcomes {
                     loss_acc += loss;
                     gnorm_acc += gnorm;
                     // intra-group DP all-reduce (within fast links)
                     note_inner_allreduce(self.man.n_params, &mut self.stats);
                 }
-                let kf = self.groups.len() as f64;
+                let kf = outcomes.len() as f64;
                 self.record(t, loss_acc / kf, lr, gnorm_acc / kf);
 
                 if (t + 1 - switch) % h == 0 || t + 1 == t_total {
@@ -308,33 +302,49 @@ impl Trainer {
         Ok(&self.log)
     }
 
-    /// Outer synchronization at iteration `t` (Alg. 2 lines 10–21; or the
-    /// streaming partial variant when `sync_fraction < 1`).
+    /// Outer synchronization after iteration `t` (Alg. 2 lines 10–21; or
+    /// the streaming partial variant when `sync_fraction < 1`).
+    ///
+    /// Zero-clone path: group parameters are flattened into the reusable
+    /// [`FlatPool`] buffers (concurrently), reduced in place by the
+    /// controller's scratch, and the restart point is installed straight
+    /// from the controller's buffer.
     fn outer_sync(&mut self, t: usize) -> Result<()> {
-        let mut flats: Vec<Vec<f32>> = self
-            .groups
-            .iter()
-            .map(|g| g.params_flat(&self.man))
-            .collect::<Result<_>>()?;
-        let refs: Vec<&[f32]> = flats.iter().map(|f| f.as_slice()).collect();
-        let outer = self.outer.as_mut().expect("outer sync without outer optimizer");
-        let man = self.man.clone();
+        let step = t + 1; // schedules see completed steps
         let k = self.groups.len();
+        let n = self.man.n_params;
+        self.flats.ensure(k, n);
+        let engine = self.engine();
+
+        // 1. flatten every group into its pooled buffer (parallel, no alloc)
+        {
+            let man = &self.man;
+            let groups = &self.groups;
+            engine.run(self.flats.bufs_mut(), |gi, buf| {
+                groups[gi].params_flat_into(man, buf)
+            })?;
+        }
+
+        let refs: Vec<&[f32]> = self.flats.bufs().iter().map(|b| b.as_slice()).collect();
+        let outer = self.outer.as_mut().expect("outer sync without outer optimizer");
         if self.cfg.sync_fraction < 1.0 {
-            let part = outer.sync_partial(t, &refs, &mut self.stats);
-            for (g, flat) in self.groups.iter_mut().zip(flats.iter_mut()) {
+            // 2a. streaming partial sync: overwrite only [lo, hi) per group
+            let part = outer.sync_partial(step, &refs, &mut self.stats);
+            let man = &self.man;
+            for (g, flat) in self.groups.iter_mut().zip(self.flats.bufs_mut()) {
                 flat[part.lo..part.hi].copy_from_slice(&part.fragment);
-                g.set_params_flat(&man, flat)?;
+                g.set_params_flat(man, flat)?;
             }
             self.stats.broadcast_calls += 1;
             self.stats.broadcast_bytes += 4.0 * (part.fragment.len() * k) as f64;
         } else {
-            let result = outer.sync(t, &refs, &mut self.stats);
-            for g in self.groups.iter_mut() {
-                g.set_params_flat(&man, &result.next_start)?;
-            }
+            // 2b. full sync: Nesterov in place, restart point broadcast to
+            // every group straight from the controller's buffer
+            let next = outer.sync_in_place(step, &refs, &mut self.stats);
+            let man = &self.man;
+            engine.run(&mut self.groups, |_, g| g.set_params_flat(man, next))?;
             self.stats.broadcast_calls += 1;
-            self.stats.broadcast_bytes += 4.0 * (result.next_start.len() * k) as f64;
+            self.stats.broadcast_bytes += 4.0 * (n * k) as f64;
         }
         Ok(())
     }
@@ -363,6 +373,101 @@ impl Trainer {
         }
         Ok(())
     }
+}
+
+/// Split a step-function output tuple into (params, m, v) literal sets
+/// and install them on the group.
+fn install_state(man: &Manifest, g: &mut WorkerGroup, mut outs: Vec<Literal>) {
+    let p = man.n_tensors();
+    outs.truncate(3 * p);
+    let v = outs.split_off(2 * p);
+    let m = outs.split_off(p);
+    g.params = outs;
+    g.m = m;
+    g.v = v;
+}
+
+/// One fused inner step for a group with a single micro-batch. Free
+/// function over exclusively-owned group state so the thread pool can run
+/// groups concurrently without touching the trainer.
+fn fused_step(ctx: &StepCtx, g: &mut WorkerGroup, tokens: &[i32], lr: f64) -> Result<(f64, f64)> {
+    let p = ctx.man.n_tensors();
+    g.adam_t += 1;
+    let outs = {
+        let tok = WorkerGroup::token_literal(ctx.man, tokens)?;
+        let lr_l = scalar_f32(lr as f32);
+        let wd_l = scalar_f32(ctx.weight_decay as f32);
+        let t_l = scalar_f32(g.adam_t as f32);
+        let mut inputs: Vec<&Literal> = Vec::with_capacity(3 * p + 4);
+        inputs.extend(g.params.iter());
+        inputs.extend(g.m.iter());
+        inputs.extend(g.v.iter());
+        inputs.push(&tok);
+        inputs.push(&lr_l);
+        inputs.push(&wd_l);
+        inputs.push(&t_l);
+        ctx.exes.train_step.run(&inputs)?
+    };
+    let loss = to_scalar_f32(&outs[3 * p])? as f64;
+    let gnorm = to_scalar_f32(&outs[3 * p + 1])? as f64;
+    install_state(ctx.man, g, outs);
+    Ok((loss, gnorm))
+}
+
+/// One inner step for a group with gradient accumulation over the
+/// provided micro-batches (Megatron-style: mean of micro-grads, single
+/// fused clip+AdamW update).
+fn accumulated_step(
+    ctx: &StepCtx,
+    g: &mut WorkerGroup,
+    micro: &[Vec<i32>],
+    lr: f64,
+) -> Result<(f64, f64)> {
+    let p = ctx.man.n_tensors();
+    if micro.len() == 1 {
+        return fused_step(ctx, g, &micro[0], lr);
+    }
+    // 1. gradient accumulation (fwd/bwd per micro-batch)
+    let mut gsum = vec![0.0f32; ctx.man.n_params];
+    let mut gflat = vec![0.0f32; ctx.man.n_params];
+    let mut loss_sum = 0.0;
+    for tokens in micro {
+        let outs = {
+            let tok = WorkerGroup::token_literal(ctx.man, tokens)?;
+            let mut inputs: Vec<&Literal> = g.params.iter().collect();
+            inputs.push(&tok);
+            ctx.exes.grad_step.run(&inputs)?
+        };
+        WorkerGroup::write_back(ctx.man, &outs, 0, &mut gflat)?;
+        for (a, b) in gsum.iter_mut().zip(&gflat) {
+            *a += b;
+        }
+        loss_sum += to_scalar_f32(&outs[p])? as f64;
+    }
+    let inv = 1.0 / micro.len() as f32;
+    for x in gsum.iter_mut() {
+        *x *= inv;
+    }
+    // 2. single fused clip+AdamW update
+    g.adam_t += 1;
+    let outs = {
+        let grad_lits = WorkerGroup::tensor_literals(ctx.man, &gsum)?;
+        let lr_l = scalar_f32(lr as f32);
+        let wd_l = scalar_f32(ctx.weight_decay as f32);
+        let t_l = scalar_f32(g.adam_t as f32);
+        let mut inputs: Vec<&Literal> = Vec::with_capacity(4 * p + 3);
+        inputs.extend(g.params.iter());
+        inputs.extend(g.m.iter());
+        inputs.extend(g.v.iter());
+        inputs.extend(grad_lits.iter());
+        inputs.push(&lr_l);
+        inputs.push(&wd_l);
+        inputs.push(&t_l);
+        ctx.exes.apply_step.run(&inputs)?
+    };
+    let gnorm = to_scalar_f32(&outs[3 * p])? as f64;
+    install_state(ctx.man, g, outs);
+    Ok((loss_sum / micro.len() as f64, gnorm))
 }
 
 fn cfg_validate(cfg: &TrainConfig, man: &Manifest) -> Result<()> {

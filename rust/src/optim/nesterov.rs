@@ -16,6 +16,7 @@
 //!   returns both positions; the trainer decides which one seeds the groups.
 
 use crate::config::NesterovKind;
+use crate::util::par::{join_spans, span, MIN_SPAN};
 
 /// Outer-optimizer state: the momentum buffer M (Alg. 1/2).
 #[derive(Clone, Debug)]
@@ -53,37 +54,66 @@ impl OuterOpt {
     /// `base` is θ_{t−H} (the pre-inner-phase parameters), `delta` the
     /// all-reduced Δθ, `mu` the scheduled momentum coefficient, `lr` the
     /// scheduled outer learning rate.
+    ///
+    /// Allocating convenience wrapper over [`OuterOpt::step_into`] — the
+    /// trainer's hot path uses the in-place variant with reusable buffers.
     pub fn step(&mut self, base: &[f32], delta: &[f32], mu: f64, lr: f64) -> OuterStep {
-        assert_eq!(base.len(), delta.len());
-        assert_eq!(base.len(), self.momentum.len());
         let n = base.len();
-        let (muf, lrf) = (mu as f32, lr as f32);
         let mut committed = vec![0.0f32; n];
-        match self.kind {
-            NesterovKind::PyTorch => {
-                for i in 0..n {
-                    let m = muf * self.momentum[i] + delta[i];
-                    self.momentum[i] = m;
-                    committed[i] = base[i] + lrf * (muf * m + delta[i]);
-                }
-                OuterStep { next_start: committed.clone(), committed }
-            }
-            NesterovKind::Theoretical => {
-                let mut next = vec![0.0f32; n];
-                for i in 0..n {
-                    let m = muf * self.momentum[i] + delta[i];
-                    self.momentum[i] = m;
-                    let pos = base[i] + lrf * m;
-                    committed[i] = pos;
-                    next[i] = pos + muf * lrf * m; // look-ahead
-                }
-                OuterStep { committed, next_start: next }
-            }
+        let mut next_start = vec![0.0f32; n];
+        self.step_into(base, delta, mu, lr, &mut committed, &mut next_start);
+        OuterStep { committed, next_start }
+    }
+
+    /// In-place outer step: updates the momentum buffer and writes the
+    /// committed and restart positions into caller-owned buffers — zero
+    /// allocations. Element-wise (momentum[i] depends only on index i), so
+    /// the update is span-parallelized with bit-identical results to the
+    /// serial loop for any thread count.
+    pub fn step_into(
+        &mut self,
+        base: &[f32],
+        delta: &[f32],
+        mu: f64,
+        lr: f64,
+        committed: &mut [f32],
+        next_start: &mut [f32],
+    ) {
+        let n = base.len();
+        assert_eq!(delta.len(), n);
+        assert_eq!(self.momentum.len(), n);
+        assert_eq!(committed.len(), n);
+        assert_eq!(next_start.len(), n);
+        let (muf, lrf) = (mu as f32, lr as f32);
+        let kind = self.kind;
+        let sp = span(n, MIN_SPAN);
+        if sp >= n {
+            step_span(kind, muf, lrf, &mut self.momentum, base, delta, committed, next_start);
+            return;
         }
+        let spans = self
+            .momentum
+            .chunks_mut(sp)
+            .zip(base.chunks(sp))
+            .zip(delta.chunks(sp))
+            .zip(committed.chunks_mut(sp))
+            .zip(next_start.chunks_mut(sp));
+        join_spans(spans.map(|((((m, b), d), c), nx)| {
+            move || step_span(kind, muf, lrf, m, b, d, c, nx)
+        }));
     }
 
     pub fn momentum_norm(&self) -> f64 {
         self.momentum.iter().map(|&m| (m as f64) * (m as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Number of parameters this optimizer covers.
+    pub fn len(&self) -> usize {
+        self.momentum.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.momentum.is_empty()
     }
 
     /// Fragment variant of [`OuterOpt::step`] for streaming partial
@@ -122,6 +152,42 @@ impl OuterOpt {
                     next[i] = pos + muf * lrf * m;
                 }
                 OuterStep { committed, next_start: next }
+            }
+        }
+    }
+}
+
+/// One contiguous span of the element-wise Nesterov update. Both variants
+/// write `committed` and `next_start` for every element, so the in-place
+/// step fills both output buffers completely.
+#[allow(clippy::too_many_arguments)]
+fn step_span(
+    kind: NesterovKind,
+    muf: f32,
+    lrf: f32,
+    momentum: &mut [f32],
+    base: &[f32],
+    delta: &[f32],
+    committed: &mut [f32],
+    next_start: &mut [f32],
+) {
+    match kind {
+        NesterovKind::PyTorch => {
+            for i in 0..momentum.len() {
+                let m = muf * momentum[i] + delta[i];
+                momentum[i] = m;
+                let c = base[i] + lrf * (muf * m + delta[i]);
+                committed[i] = c;
+                next_start[i] = c;
+            }
+        }
+        NesterovKind::Theoretical => {
+            for i in 0..momentum.len() {
+                let m = muf * momentum[i] + delta[i];
+                momentum[i] = m;
+                let pos = base[i] + lrf * m;
+                committed[i] = pos;
+                next_start[i] = pos + muf * lrf * m; // look-ahead
             }
         }
     }
@@ -183,6 +249,39 @@ mod tests {
         // untouched regions keep their old momentum
         assert_eq!(frag.momentum[0], 0.1);
         assert_eq!(frag.momentum[3], 0.4);
+    }
+
+    #[test]
+    fn step_into_matches_step_bitwise_for_both_kinds() {
+        // Cross MIN_SPAN so the threaded path engages on multi-core
+        // hosts; results must still match the allocating (serial-era) API
+        // bit for bit.
+        let n = MIN_SPAN * 2 + 777;
+        let base: Vec<f32> = (0..n).map(|i| ((i % 97) as f32) * 0.013 - 0.5).collect();
+        let delta: Vec<f32> = (0..n).map(|i| ((i % 31) as f32) * 0.007 - 0.1).collect();
+        for kind in [NesterovKind::PyTorch, NesterovKind::Theoretical] {
+            let mut a = OuterOpt::new(n, kind);
+            for (i, m) in a.momentum.iter_mut().enumerate() {
+                *m = ((i % 13) as f32) * 0.01;
+            }
+            let mut b = a.clone();
+            let s = a.step(&base, &delta, 0.9, 0.7);
+            let mut committed = vec![0.0f32; n];
+            let mut next = vec![0.0f32; n];
+            b.step_into(&base, &delta, 0.9, 0.7, &mut committed, &mut next);
+            for i in (0..n).step_by(503) {
+                assert_eq!(s.committed[i].to_bits(), committed[i].to_bits(), "committed {i}");
+                assert_eq!(s.next_start[i].to_bits(), next[i].to_bits(), "next {i}");
+                assert_eq!(a.momentum[i].to_bits(), b.momentum[i].to_bits(), "momentum {i}");
+                // independent serial reference for the PyTorch variant
+                if kind == NesterovKind::PyTorch {
+                    let m0 = ((i % 13) as f32) * 0.01;
+                    let m = 0.9f32 * m0 + delta[i];
+                    let c = base[i] + 0.7f32 * (0.9f32 * m + delta[i]);
+                    assert_eq!(committed[i].to_bits(), c.to_bits(), "reference {i}");
+                }
+            }
+        }
     }
 
     #[test]

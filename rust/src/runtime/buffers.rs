@@ -38,3 +38,79 @@ pub fn to_vec_f32(lit: &Literal) -> Result<Vec<f32>> {
 pub fn to_scalar_f32(lit: &Literal) -> Result<f32> {
     Ok(lit.get_first_element::<f32>()?)
 }
+
+/// Reusable per-group flat f32 buffers for the outer-sync boundary.
+///
+/// The trainer flattens every group's parameters at each outer sync
+/// (every `H` steps). Allocating K fresh full-model vectors per sync made
+/// the hot path slower as the group count grew; the pool allocates the K
+/// buffers once (first sync) and hands out the same memory for the rest
+/// of the run. Reshaping (different K or model size) reallocates.
+#[derive(Default)]
+pub struct FlatPool {
+    bufs: Vec<Vec<f32>>,
+}
+
+impl FlatPool {
+    pub fn new() -> FlatPool {
+        FlatPool { bufs: Vec::new() }
+    }
+
+    /// Ensure the pool holds exactly `k` buffers of `n` elements each.
+    /// Idempotent: a correctly-shaped pool is left untouched (contents
+    /// included — callers overwrite them anyway).
+    pub fn ensure(&mut self, k: usize, n: usize) {
+        let shaped = self.bufs.len() == k && self.bufs.iter().all(|b| b.len() == n);
+        if !shaped {
+            self.bufs = (0..k).map(|_| vec![0.0f32; n]).collect();
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.bufs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bufs.is_empty()
+    }
+
+    pub fn bufs(&self) -> &[Vec<f32>] {
+        &self.bufs
+    }
+
+    pub fn bufs_mut(&mut self) -> &mut [Vec<f32>] {
+        &mut self.bufs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_pool_allocates_once_for_a_stable_shape() {
+        let mut pool = FlatPool::new();
+        pool.ensure(3, 64);
+        assert_eq!(pool.len(), 3);
+        pool.bufs_mut()[1][0] = 42.0;
+        let ptr = pool.bufs()[1].as_ptr();
+        pool.ensure(3, 64); // same shape → same memory, contents kept
+        assert_eq!(pool.bufs()[1].as_ptr(), ptr);
+        assert_eq!(pool.bufs()[1][0], 42.0);
+        pool.ensure(2, 64); // reshape → fresh buffers
+        assert_eq!(pool.len(), 2);
+        assert_eq!(pool.bufs()[1][0], 0.0);
+        pool.ensure(2, 128);
+        assert!(pool.bufs().iter().all(|b| b.len() == 128));
+    }
+
+    #[test]
+    fn literal_helpers_roundtrip() {
+        let lit = lit_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(to_vec_f32(&lit).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(lit_f32(&[1.0; 3], &[2, 2]).is_err());
+        assert!(lit_i32(&[1, 2], &[2]).is_ok());
+        assert_eq!(to_scalar_f32(&scalar_f32(7.5)).unwrap(), 7.5);
+    }
+}
+

@@ -9,7 +9,7 @@ pub mod buffers;
 pub mod executable;
 pub mod manifest;
 
-pub use buffers::{lit_f32, lit_i32, scalar_f32, scalar_i32, to_scalar_f32, to_vec_f32};
+pub use buffers::{lit_f32, lit_i32, scalar_f32, scalar_i32, to_scalar_f32, to_vec_f32, FlatPool};
 pub use executable::{ModelExes, Runtime, StepExe};
 pub use manifest::{Manifest, ParamInfo};
 

@@ -8,6 +8,7 @@
 pub mod args;
 pub mod json;
 pub mod logging;
+pub mod par;
 pub mod rng;
 
 use std::time::Instant;

@@ -1,0 +1,97 @@
+//! Span sizing for deterministic data-parallel loops over flat vectors.
+//!
+//! The collectives and the outer optimizer parallelize *element-wise* work
+//! by splitting a flat vector into contiguous spans, one scoped thread per
+//! span. Because every output element depends only on its own inputs (any
+//! accumulation is per-element, in f64), the partition never changes a
+//! single bit of the result — threading is purely a wall-clock lever.
+
+/// Default minimum elements per thread span for element-wise kernels
+/// (reductions, optimizer updates) — below this, thread launch would
+/// dominate and callers stay serial. Single-sourced here so the tuning
+/// cannot drift between the collectives and the outer optimizer.
+pub const MIN_SPAN: usize = 1 << 16;
+
+/// Worker threads available to the process. `PIER_THREADS` overrides the
+/// detected core count (useful for reproducible benchmarking and for
+/// pinning CI to a known shape); `PIER_THREADS=1` disables threading.
+pub fn max_threads() -> usize {
+    if let Ok(v) = std::env::var("PIER_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Span length for processing `n` elements with at least `min_span`
+/// elements per thread. Returns `n` (i.e. "stay serial") when the input is
+/// too small to amortize thread launch, and never returns 0.
+pub fn span(n: usize, min_span: usize) -> usize {
+    let threads = max_threads();
+    if threads <= 1 || n <= min_span.max(1) {
+        return n.max(1);
+    }
+    let spans = (n / min_span.max(1)).max(1).min(threads);
+    n.div_ceil(spans)
+}
+
+/// Spawn one scoped thread per task and join them all — the shared
+/// scaffolding for the deterministic span-parallel kernels (each task
+/// typically owns one disjoint `chunks_mut(span(n, MIN_SPAN))` slice of a
+/// flat vector plus shared read-only inputs). Single-sourced so the
+/// execution pattern cannot drift between call sites.
+pub fn join_spans<F, I>(tasks: I)
+where
+    I: IntoIterator<Item = F>,
+    F: FnOnce() + Send,
+{
+    std::thread::scope(|s| {
+        for task in tasks {
+            s.spawn(task);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_inputs_stay_serial() {
+        assert_eq!(span(100, 1000), 100);
+        assert_eq!(span(0, 1000), 1);
+    }
+
+    #[test]
+    fn spans_cover_exactly() {
+        for &(n, min) in &[(10_000usize, 128usize), (1_000_000, 65_536), (7, 2), (129, 64)] {
+            let s = span(n, min);
+            assert!(s >= 1);
+            let covered: usize = (0..n).step_by(s).map(|lo| s.min(n - lo)).sum();
+            assert_eq!(covered, n);
+        }
+    }
+
+    #[test]
+    fn join_spans_runs_every_task_on_disjoint_chunks() {
+        let n = 1000;
+        let mut data = vec![0u64; n];
+        let sp = 64;
+        join_spans(data.chunks_mut(sp).enumerate().map(|(i, chunk)| {
+            move || {
+                for (j, x) in chunk.iter_mut().enumerate() {
+                    *x = (i * sp + j) as u64;
+                }
+            }
+        }));
+        assert!(data.iter().enumerate().all(|(i, &x)| x == i as u64));
+    }
+
+    #[test]
+    fn span_bounded_by_thread_count() {
+        let s = span(1 << 24, 1 << 10);
+        let n_spans = (1usize << 24).div_ceil(s);
+        assert!(n_spans <= max_threads());
+    }
+}

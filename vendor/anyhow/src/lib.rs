@@ -1,0 +1,251 @@
+//! Offline subset of the `anyhow` crate.
+//!
+//! The build environment vendors its whole dependency closure, so this
+//! crate re-implements exactly the surface `pier` uses — nothing more:
+//!
+//! * [`Error`]: a boxed message chain convertible from any
+//!   `std::error::Error + Send + Sync + 'static`.
+//! * [`Result<T>`] with the defaulted error parameter.
+//! * [`Context`]: `.context(..)` / `.with_context(..)` on `Result` (for any
+//!   error convertible into [`Error`], including `Error` itself) and on
+//!   `Option`.
+//! * The `anyhow!`, `bail!`, and `ensure!` macros with format-string
+//!   arguments (inline captures included).
+//!
+//! Display mirrors upstream: `{e}` prints the outermost message, `{e:#}`
+//! appends the cause chain (`outer: cause: root`), and `{e:?}` prints the
+//! message plus a `Caused by:` list.
+
+use std::fmt;
+
+/// Error: an owned message plus an optional cause chain.
+///
+/// Deliberately does **not** implement `std::error::Error` — that is what
+/// makes the blanket `From<E: std::error::Error>` impl coherent, exactly as
+/// in upstream anyhow.
+pub struct Error {
+    msg: String,
+    cause: Option<Box<Error>>,
+}
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), cause: None }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: context.to_string(), cause: Some(Box::new(self)) }
+    }
+
+    /// The innermost message of the chain.
+    pub fn root_cause(&self) -> &Error {
+        let mut cur = self;
+        while let Some(c) = cur.cause.as_deref() {
+            cur = c;
+        }
+        cur
+    }
+
+    /// Iterate the chain outermost-first.
+    pub fn chain(&self) -> Chain<'_> {
+        Chain { next: Some(self) }
+    }
+}
+
+/// Iterator over an [`Error`]'s cause chain.
+pub struct Chain<'a> {
+    next: Option<&'a Error>,
+}
+
+impl<'a> Iterator for Chain<'a> {
+    type Item = &'a Error;
+    fn next(&mut self) -> Option<&'a Error> {
+        let cur = self.next?;
+        self.next = cur.cause.as_deref();
+        Some(cur)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if f.alternate() {
+            let mut cur = self.cause.as_deref();
+            while let Some(c) = cur {
+                write!(f, ": {}", c.msg)?;
+                cur = c.cause.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "{}", self.msg)?;
+        let mut cur = self.cause.as_deref();
+        if cur.is_some() {
+            writeln!(f, "\nCaused by:")?;
+        }
+        while let Some(c) = cur {
+            writeln!(f, "    {}", c.msg)?;
+            cur = c.cause.as_deref();
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        // Flatten the std source chain into our owned chain.
+        let mut msgs: Vec<String> = Vec::new();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        let mut cause = None;
+        for m in msgs.into_iter().rev() {
+            cause = Some(Box::new(Error { msg: m, cause }));
+        }
+        Error { msg: e.to_string(), cause }
+    }
+}
+
+/// Attach context to errors, upstream-anyhow style.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        match self {
+            Ok(v) => Ok(v),
+            Err(e) => Err(e.into().context(context)),
+        }
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        match self {
+            Ok(v) => Ok(v),
+            Err(e) => Err(e.into().context(f())),
+        }
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        match self {
+            Some(v) => Ok(v),
+            None => Err(Error::msg(context)),
+        }
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        match self {
+            Some(v) => Ok(v),
+            None => Err(Error::msg(f())),
+        }
+    }
+}
+
+/// Build an [`Error`] from a format string (inline captures supported).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn from_std_error_and_context() {
+        let e: Error = io_err().into();
+        assert_eq!(e.to_string(), "gone");
+        let e = e.context("reading file");
+        assert_eq!(format!("{e}"), "reading file");
+        assert_eq!(format!("{e:#}"), "reading file: gone");
+        assert_eq!(e.root_cause().to_string(), "gone");
+        assert_eq!(e.chain().count(), 2);
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("ctx").unwrap_err();
+        assert_eq!(format!("{e:#}"), "ctx: gone");
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", 7)).unwrap_err();
+        assert_eq!(e.to_string(), "missing 7");
+        assert_eq!(Some(3).context("ok").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 5 {
+                bail!("five is right out");
+            }
+            Err(anyhow!("fell through with {}", x))
+        }
+        assert_eq!(f(20).unwrap_err().to_string(), "x too big: 20");
+        assert_eq!(f(5).unwrap_err().to_string(), "five is right out");
+        assert_eq!(f(1).unwrap_err().to_string(), "fell through with 1");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn g() -> Result<String> {
+            let s = std::str::from_utf8(&[0xff])?;
+            Ok(s.to_string())
+        }
+        assert!(g().is_err());
+    }
+}

@@ -1,0 +1,314 @@
+//! Offline stand-in for the `xla` crate (the xla-rs / `xla_extension`
+//! PJRT bindings `pier`'s runtime layer is written against).
+//!
+//! The host-side [`Literal`] type is **fully functional** (typed storage,
+//! reshape, tuple decomposition) — everything `pier` needs for its
+//! flat↔tensor marshalling, oracles, and tests. The device side
+//! (`compile`/`execute`) has no backend here: [`PjRtClient::compile`]
+//! returns a descriptive error, so every artifact-gated code path fails
+//! fast with a clear message instead of segfaulting. Swap this crate for
+//! the real bindings (same API surface) to run lowered HLO artifacts.
+//!
+//! Unlike the C bindings, every type in this stub is plain owned data and
+//! therefore `Send + Sync` — which is what lets the coordinator's parallel
+//! group-execution engine share `&StepExe` across worker threads. The real
+//! bindings need a `Send + Sync` wrapper audit at the same boundary; the
+//! runtime layer documents that contract.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Stub error type (implements `std::error::Error`, so `?` converts it
+/// into `anyhow::Error` at the call sites).
+#[derive(Debug, Clone)]
+pub struct Error {
+    pub msg: String,
+}
+
+impl Error {
+    fn new(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla (offline stub): {}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+// ------------------------------------------------------------------ Literal
+
+/// Element storage for a [`Literal`].
+#[derive(Clone, Debug)]
+enum Payload {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Host literal: typed buffer + dims (row-major), or a tuple of literals.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    payload: Payload,
+    dims: Vec<i64>,
+}
+
+/// Element types the stub supports (the two `pier` uses: f32 and i32).
+pub trait NativeType: Copy + Sized {
+    fn wrap(data: Vec<Self>) -> Payload;
+    fn unwrap(payload: &Payload) -> Result<&[Self]>;
+}
+
+impl NativeType for f32 {
+    fn wrap(data: Vec<f32>) -> Payload {
+        Payload::F32(data)
+    }
+    fn unwrap(payload: &Payload) -> Result<&[f32]> {
+        match payload {
+            Payload::F32(v) => Ok(v),
+            _ => Err(Error::new("literal is not f32")),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: Vec<i32>) -> Payload {
+        Payload::I32(data)
+    }
+    fn unwrap(payload: &Payload) -> Result<&[i32]> {
+        match payload {
+            Payload::I32(v) => Ok(v),
+            _ => Err(Error::new("literal is not i32")),
+        }
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { dims: vec![data.len() as i64], payload: T::wrap(data.to_vec()) }
+    }
+
+    /// Rank-0 (scalar) literal.
+    pub fn scalar<T: NativeType>(x: T) -> Literal {
+        Literal { dims: Vec::new(), payload: T::wrap(vec![x]) }
+    }
+
+    /// Tuple literal (what step functions return when lowered with
+    /// `return_tuple=True`).
+    pub fn tuple(elements: Vec<Literal>) -> Literal {
+        Literal { dims: Vec::new(), payload: Payload::Tuple(elements) }
+    }
+
+    fn element_count(&self) -> usize {
+        match &self.payload {
+            Payload::F32(v) => v.len(),
+            Payload::I32(v) => v.len(),
+            Payload::Tuple(v) => v.len(),
+        }
+    }
+
+    /// Same data, new dims. The element count must match.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if matches!(self.payload, Payload::Tuple(_)) {
+            return Err(Error::new("cannot reshape a tuple literal"));
+        }
+        if n as usize != self.element_count() {
+            return Err(Error::new(format!(
+                "reshape: {} elements vs dims {:?}",
+                self.element_count(),
+                dims
+            )));
+        }
+        Ok(Literal { payload: self.payload.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn shape(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Flat host copy of the elements.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.payload).map(|s| s.to_vec())
+    }
+
+    /// First element (scalar extraction).
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        let s = T::unwrap(&self.payload)?;
+        s.first().copied().ok_or_else(|| Error::new("empty literal"))
+    }
+
+    /// Split a tuple literal into its elements, leaving this literal empty
+    /// (mirrors the real bindings' move-out semantics).
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        match &mut self.payload {
+            Payload::Tuple(v) => Ok(std::mem::take(v)),
+            // A non-tuple decomposes to itself — some lowerings return a
+            // bare array for single-output functions.
+            _ => Ok(vec![Literal {
+                payload: std::mem::replace(&mut self.payload, Payload::F32(Vec::new())),
+                dims: std::mem::take(&mut self.dims),
+            }]),
+        }
+    }
+}
+
+// ---------------------------------------------------------------- HLO / PJRT
+
+/// Parsed (well: loaded) HLO module text.
+#[derive(Clone, Debug)]
+pub struct HloModuleProto {
+    pub text: String,
+}
+
+impl HloModuleProto {
+    /// Read HLO text from a file. Parsing/verification happens at compile
+    /// time in the real bindings; the stub only checks readability.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::new(format!("reading HLO text {path}: {e}")))?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+/// An XLA computation (opaque wrapper around the module).
+#[derive(Clone, Debug)]
+pub struct XlaComputation {
+    pub module: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { module: proto.clone() }
+    }
+}
+
+/// PJRT client handle. The stub has exactly one "device": the host.
+#[derive(Clone, Debug, Default)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "host-stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        1
+    }
+
+    /// Upload a literal (the stub's "device" is host memory).
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        literal: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Ok(PjRtBuffer { literal: literal.clone() })
+    }
+
+    /// No execution backend in the stub: fail fast with a clear message so
+    /// artifact-gated tests and benches skip instead of crashing.
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::new(
+            "no PJRT execution backend in the offline stub; \
+             link the real xla bindings to run lowered HLO artifacts",
+        ))
+    }
+}
+
+/// Device buffer (host-resident in the stub).
+#[derive(Clone, Debug)]
+pub struct PjRtBuffer {
+    literal: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.literal.clone())
+    }
+}
+
+/// Compiled executable. Never constructed by the stub (compile fails), but
+/// the type and its API exist so the runtime layer typechecks unchanged.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    client: PjRtClient,
+}
+
+impl PjRtLoadedExecutable {
+    pub fn client(&self) -> PjRtClient {
+        self.client.clone()
+    }
+
+    /// Execute with device buffers. Unreachable in the stub.
+    pub fn execute_b<B: Borrow<PjRtBuffer>>(&self, _inputs: &[B]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::new("no PJRT execution backend in the offline stub"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.shape(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 2]).is_err());
+        assert!(r.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn scalar_first_element() {
+        let s = Literal::scalar(7i32);
+        assert_eq!(s.get_first_element::<i32>().unwrap(), 7);
+        assert_eq!(s.shape(), &[] as &[i64]);
+    }
+
+    #[test]
+    fn tuple_decompose() {
+        let mut t = Literal::tuple(vec![Literal::scalar(1.0f32), Literal::scalar(2i32)]);
+        let parts = t.decompose_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0].get_first_element::<f32>().unwrap(), 1.0);
+        assert_eq!(parts[1].get_first_element::<i32>().unwrap(), 2);
+    }
+
+    #[test]
+    fn non_tuple_decomposes_to_self() {
+        let mut l = Literal::vec1(&[5.0f32]);
+        let parts = l.decompose_tuple().unwrap();
+        assert_eq!(parts.len(), 1);
+        assert_eq!(parts[0].to_vec::<f32>().unwrap(), vec![5.0]);
+    }
+
+    #[test]
+    fn client_is_host_stub() {
+        let c = PjRtClient::cpu().unwrap();
+        assert_eq!(c.device_count(), 1);
+        let buf = c.buffer_from_host_literal(None, &Literal::scalar(1.0f32)).unwrap();
+        assert_eq!(buf.to_literal_sync().unwrap().get_first_element::<f32>().unwrap(), 1.0);
+        let comp = XlaComputation::from_proto(&HloModuleProto { text: "HloModule m".into() });
+        assert!(c.compile(&comp).is_err());
+    }
+
+    #[test]
+    fn send_sync_bounds_for_parallel_groups() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Literal>();
+        assert_send_sync::<PjRtBuffer>();
+        assert_send_sync::<PjRtClient>();
+        assert_send_sync::<PjRtLoadedExecutable>();
+    }
+}
