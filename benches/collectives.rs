@@ -1,7 +1,8 @@
 //! Collective primitives: in-process all-reduce/broadcast throughput
 //! (the L3 data plane) and the DES network engine's event throughput.
 
-use pier::coordinator::collective::{all_reduce_mean, all_reduce_mean_into, broadcast, CommStats};
+use pier::coordinator::collective::{all_reduce_mean, all_reduce_mean_into, broadcast, shard_span,
+                                    tp_all_gather_into, tp_reduce_scatter_into, CommStats};
 use pier::netsim::{des_outer_sync, Flow, Network};
 use pier::perfmodel::gpu::PERLMUTTER;
 use pier::testing::bench::{bench_quick, header};
@@ -31,6 +32,29 @@ fn main() {
                 std::hint::black_box(out.len());
             });
             println!("{}", r.report_throughput((n * k) as f64, "elem"));
+        }
+    }
+
+    // Executed TP collectives (DESIGN.md §4): the per-step gradient
+    // reduce-scatter + all-gather round trip at micro-model size.
+    {
+        let n = 4 << 20;
+        let g = randvec(n, 21);
+        let mut sharded = vec![0.0f32; n];
+        let mut back = vec![0.0f32; n];
+        for tp in [2usize, 4] {
+            let r = bench_quick(&format!("tp_rs_ag_round_trip/4M/tp{tp}"), || {
+                tp_reduce_scatter_into(&[g.as_slice()], &mut sharded);
+                let shards: Vec<&[f32]> = (0..tp)
+                    .map(|rk| {
+                        let (lo, hi) = shard_span(n, tp, rk);
+                        &sharded[lo..hi]
+                    })
+                    .collect();
+                tp_all_gather_into(&shards, &mut back);
+                std::hint::black_box(back.len());
+            });
+            println!("{}", r.report_throughput(n as f64, "elem"));
         }
     }
 

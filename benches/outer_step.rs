@@ -102,6 +102,20 @@ fn main() {
         });
         println!("{}", r.report_throughput((n * k) as f64, "param"));
         snap(&mut rows, &r, (n * k) as f64, "param/s");
+
+        // DP×TP layout: the same sync as tp=4 concurrent per-shard
+        // all-reduces (bit-identical result, different recorded schedule).
+        let mut cfg_tp = cfg.clone();
+        cfg_tp.tp = 4;
+        let mut ctl_tp = OuterController::new(&cfg_tp, &groups[0]);
+        let mut stats_tp = CommStats::default();
+        let r = bench_quick(&format!("outer_sync_in_place_tp4/micro-3.2M/{k}groups"), || {
+            let refs: Vec<&[f32]> = groups.iter().map(|g| g.as_slice()).collect();
+            let next = ctl_tp.sync_in_place(500, &refs, &mut stats_tp);
+            std::hint::black_box(next.len());
+        });
+        println!("{}", r.report_throughput((n * k) as f64, "param"));
+        snap(&mut rows, &r, (n * k) as f64, "param/s");
     }
 
     let out = Json::obj(vec![

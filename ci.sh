@@ -15,6 +15,12 @@ cargo fmt --check
 echo "==> cargo clippy (all targets, warnings are errors)"
 cargo clippy --all-targets -- -D warnings
 
+echo "==> cargo doc (no deps, warnings — incl. broken intra-doc links — are errors)"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
+echo "==> cargo test --doc (doc-examples)"
+cargo test --doc -q
+
 echo "==> tier-1: cargo build --release"
 cargo build --release
 

@@ -1,15 +1,18 @@
-//! End-to-end driver (DESIGN.md deliverable (b)): pretrain the `micro`
-//! GPT-2 analog with all three optimizer arms — AdamW, DiLoCo, Pier — on
-//! the synthetic corpus, through the full L3→L2→L1 stack, logging loss
-//! curves to CSV and summarizing the Fig 1/Fig 3 comparison. Results are
-//! recorded in EXPERIMENTS.md.
+//! End-to-end driver (experiment index: DESIGN.md §6): pretrain the
+//! `micro` GPT-2 analog with all three optimizer arms — AdamW, DiLoCo,
+//! Pier — on the synthetic corpus, through the full L3→L2→L1 stack,
+//! logging loss curves to CSV and summarizing the Fig 1/Fig 3 comparison.
 //!
 //! ```bash
 //! cargo run --release --example pretrain_pier -- [iters] [model] [groups]
 //! ```
 //!
-//! Defaults: 300 iterations, `micro` (≈3.2 M params), 4 groups — about
-//! 30–40 min on one CPU core. Use `nano` for a fast smoke run.
+//! Defaults: 300 iterations, `micro` (≈3.2 M params), 4 groups. The inner
+//! phases step all groups concurrently on the scoped thread pool and the
+//! outer sync runs in place over reusable flat buffers (DESIGN.md §3), so
+//! wall-clock scales with cores — set `PIER_THREADS=1` to force the
+//! serial schedule (identical math, see `coordinator::parallel`). Use
+//! `nano` for a fast smoke run.
 
 use anyhow::Result;
 use pier::config::OptMode;

@@ -5,7 +5,7 @@ Two families:
 * **Trainable configs** (``nano``/``micro``/``mini``) — lowered to HLO
   artifacts and trained end-to-end on the CPU PJRT client. These are the
   GPT-2 small/medium/XL *analogs* used for all convergence experiments
-  (Figures 1, 3, 4; Tables II–IV); see DESIGN.md §3 for the substitution
+  (Figures 1, 3, 4; Tables II–IV); see DESIGN.md §6 for the substitution
   rationale.
 * **Paper configs** (``gpt2-small``/``-medium``/``-xl``/``-7b``) — the real
   GPT-2 family dimensions. These are never lowered here (a 1.5 B-parameter

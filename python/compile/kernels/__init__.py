@@ -2,7 +2,7 @@
 
 All kernels lower with ``interpret=True`` so the resulting HLO runs on the
 CPU PJRT plugin (real-TPU lowering emits Mosaic custom-calls the CPU client
-cannot execute); see DESIGN.md §Hardware-Adaptation.
+cannot execute); see DESIGN.md §7 (Hardware adaptation).
 """
 
 from .attention import flash_attention, attention_fwd

@@ -2,7 +2,7 @@
 
 Pier's implementation uses FlashAttention-2 on A100/GH200 (§V of the paper).
 This is the TPU-style rethink of the same insight (see DESIGN.md
-§Hardware-Adaptation): instead of CUDA threadblocks + shared memory, the
+§7, Hardware adaptation): instead of CUDA threadblocks + shared memory, the
 HBM↔VMEM schedule is expressed with a Pallas ``BlockSpec`` grid over
 (batch·heads, query blocks); inside a program, key/value blocks are streamed
 through an online-softmax loop keeping a running (max, sum, accumulator) —

@@ -1,10 +1,21 @@
-//! Parallelism configuration: the DP×TP layout of §IV-C.
+//! Parallelism configuration: the DP×TP layout of §IV-C (DESIGN.md §4).
 //!
 //! GPUs form a 2-D grid: `dp` data-parallel ranks × `tp` tensor-parallel
 //! ranks. Following Megatron (and the paper), TP ranks are packed within a
 //! node whenever possible, so TP traffic rides NVLink while DP/outer traffic
 //! crosses the fabric. DP ranks are further partitioned into `groups`
 //! local-communication groups for the DiLoCo/Pier inner loop.
+//!
+//! The in-process trainer executes this grid directly: each replica's
+//! parameter/gradient flats are **span-sharded** over its `tp` ranks
+//! (`coordinator::collective::shard_span` — rank `r` owns the contiguous
+//! `[r·n/tp, (r+1)·n/tp)` slice of the flat model). Per step, the
+//! accumulated gradient moves through the executed TP
+//! reduce-scatter/all-gather pair on intra-node links; every `H` steps the
+//! outer sync runs as `tp` concurrent per-shard all-reduces across DP
+//! replicas — the schedule `netsim::des_outer_sync` costs. Sharding is a
+//! communication layout, not a math change: `tp = 1` and `tp > 1` runs are
+//! bit-identical in losses (pinned by `rust/tests/parallel_parity.rs`).
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ParallelConfig {
@@ -154,5 +165,42 @@ mod tests {
         let p = ParallelConfig { dp: 4, tp: 4, groups: 4, gpus_per_node: 4 };
         assert_eq!(p.group_size(), 4); // 1 DP rank × TP4
         assert!(p.inner_comm_intra_node());
+    }
+
+    #[test]
+    fn nodes_round_up_for_both_cluster_shapes() {
+        // Perlmutter shape (4 GPUs/node): partial nodes count whole.
+        for (dp, tp, want) in [(1usize, 1usize, 1usize), (3, 1, 1), (5, 1, 2), (4, 2, 2),
+                               (2, 4, 2), (7, 4, 7)] {
+            let p = ParallelConfig { dp, tp, groups: 1, gpus_per_node: 4 };
+            assert_eq!(p.nodes(), want, "dp={dp} tp={tp} @4/node");
+        }
+        // Vista shape (1 GPU/node): nodes == world, no rounding possible.
+        for (dp, tp) in [(1usize, 1usize), (3, 1), (8, 2)] {
+            let p = ParallelConfig { dp, tp, groups: 1, gpus_per_node: 1 };
+            assert_eq!(p.nodes(), p.world_size(), "dp={dp} tp={tp} @1/node");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "dp 8 % groups 3")]
+    fn group_size_panic_names_the_offending_pair() {
+        let p = ParallelConfig { dp: 8, tp: 1, groups: 3, gpus_per_node: 4 };
+        p.group_size();
+    }
+
+    #[test]
+    fn world_size_consistent_across_tp_views() {
+        // world = dp·tp must equal the sum of group sizes, the count of
+        // rank_of/global_of bijection points, and tp × outer participants.
+        for (dp, tp, groups) in [(4usize, 1usize, 2usize), (4, 2, 2), (8, 4, 4), (2, 8, 1)] {
+            let p = ParallelConfig { dp, tp, groups, gpus_per_node: 4 };
+            assert_eq!(p.world_size(), dp * tp);
+            assert_eq!(p.group_size() * groups, p.world_size());
+            assert_eq!(p.tp_peer_ranks(0).len() * tp, p.world_size());
+            let distinct: std::collections::BTreeSet<usize> =
+                (0..tp).flat_map(|r| p.tp_peer_ranks(r)).collect();
+            assert_eq!(distinct.len(), p.world_size(), "TP peer sets partition the world");
+        }
     }
 }

@@ -1,5 +1,6 @@
 //! Training configuration (paper Table I + Pier's §IV/§V hyperparameters).
 
+use crate::config::parallel::ParallelConfig;
 use crate::util::json::Json;
 
 /// Which optimizer drives the run — the three arms of every convergence
@@ -53,6 +54,15 @@ pub struct TrainConfig {
     pub global_batch: usize,
     /// Number of local-communication groups k (paper verifies 8/32/64).
     pub groups: usize,
+    /// Tensor-parallel degree (§IV-C; DESIGN.md §4). Each group's model
+    /// state is span-sharded over `tp` ranks: the per-step TP collectives
+    /// ride intra-node links, and the outer sync runs as `tp` concurrent
+    /// per-shard all-reduces. `tp = 1` is the pure-DP layout and is
+    /// bit-identical to the pre-TP trainer.
+    pub tp: usize,
+    /// GPUs per modeled compute node (Perlmutter: 4, Vista: 1) — fixes
+    /// which links the TP collectives ride when the schedule is costed.
+    pub gpus_per_node: usize,
     /// Outer synchronization interval H in iterations (Table I: 50..500).
     pub sync_interval: usize,
     /// Lazy-start fraction p (paper: 0.10).
@@ -105,6 +115,8 @@ impl TrainConfig {
             iterations,
             global_batch: 32,
             groups: 8,
+            tp: 1,
+            gpus_per_node: 4,
             sync_interval: 50,
             warmup_pct: 0.10,
             inner_lr: 3e-4,
@@ -129,6 +141,21 @@ impl TrainConfig {
         (self.warmup_pct * self.iterations as f64).round() as usize
     }
 
+    /// The DP×TP layout this config trains under (DESIGN.md §4).
+    ///
+    /// The in-process trainer executes **one DP replica per group** — the
+    /// intra-group data parallelism is folded into gradient accumulation
+    /// over the group's micro-batches — so the executed topology has
+    /// `dp = groups`, with each replica span-sharded over `tp` ranks.
+    pub fn parallel(&self) -> ParallelConfig {
+        ParallelConfig {
+            dp: self.groups.max(1),
+            tp: self.tp.max(1),
+            groups: self.groups.max(1),
+            gpus_per_node: self.gpus_per_node.max(1),
+        }
+    }
+
     /// Per-group batch (DiLoCo/Pier inner loop).
     pub fn group_batch(&self) -> usize {
         assert_eq!(
@@ -147,6 +174,8 @@ impl TrainConfig {
             ("iterations", Json::num(self.iterations as f64)),
             ("global_batch", Json::num(self.global_batch as f64)),
             ("groups", Json::num(self.groups as f64)),
+            ("tp", Json::num(self.tp as f64)),
+            ("gpus_per_node", Json::num(self.gpus_per_node as f64)),
             ("sync_interval", Json::num(self.sync_interval as f64)),
             ("warmup_pct", Json::num(self.warmup_pct)),
             ("inner_lr", Json::num(self.inner_lr)),
@@ -177,6 +206,8 @@ impl TrainConfig {
         c.mode = OptMode::parse(j.get("mode")?.as_str()?)?;
         c.global_batch = j.get("global_batch")?.as_usize()?;
         c.groups = j.get("groups")?.as_usize()?;
+        c.tp = j.get("tp").and_then(Json::as_usize).unwrap_or(1);
+        c.gpus_per_node = j.get("gpus_per_node").and_then(Json::as_usize).unwrap_or(4);
         c.sync_interval = j.get("sync_interval")?.as_usize()?;
         c.warmup_pct = j.get("warmup_pct")?.as_f64()?;
         c.inner_lr = j.get("inner_lr")?.as_f64()?;
@@ -234,12 +265,41 @@ mod tests {
         c.mode = OptMode::DiLoCo;
         c.cpu_offload = true;
         c.nesterov = NesterovKind::Theoretical;
+        c.tp = 2;
+        c.gpus_per_node = 1;
         let j = c.to_json();
         let c2 = TrainConfig::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
         assert_eq!(c2.mode, OptMode::DiLoCo);
         assert!(c2.cpu_offload);
         assert_eq!(c2.nesterov, NesterovKind::Theoretical);
         assert_eq!(c2.iterations, 500);
+        assert_eq!(c2.tp, 2);
+        assert_eq!(c2.gpus_per_node, 1);
+    }
+
+    #[test]
+    fn json_without_tp_defaults_to_pure_dp() {
+        // Pre-TP configs (no "tp"/"gpus_per_node" keys) must keep loading.
+        let c = TrainConfig::default_for(100);
+        let mut j = c.to_json().to_string();
+        j = j.replace("\"tp\":1,", "").replace("\"gpus_per_node\":4,", "");
+        let c2 = TrainConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(c2.tp, 1);
+        assert_eq!(c2.gpus_per_node, 4);
+    }
+
+    #[test]
+    fn parallel_maps_one_replica_per_group() {
+        let mut c = TrainConfig::default_for(100);
+        c.groups = 8;
+        c.tp = 2;
+        c.gpus_per_node = 4;
+        let p = c.parallel();
+        assert_eq!(p.dp, 8);
+        assert_eq!(p.tp, 2);
+        assert_eq!(p.world_size(), 16);
+        assert_eq!(p.group_size(), 2); // 1 DP replica × TP2 per group
+        assert!(p.validate().is_ok());
     }
 
     #[test]

@@ -4,7 +4,10 @@
 //! reductions over the groups' host vectors (the single-host stand-in for
 //! NCCL, DESIGN.md §3). Every call also records its logical communication
 //! volume into [`CommStats`] so the cluster simulator can cost the same
-//! schedule the trainer actually executed.
+//! schedule the trainer actually executed. The DP×TP layout (DESIGN.md §4)
+//! adds the intra-node TP scope: [`shard_span`] contiguous sharding,
+//! executed [`tp_reduce_scatter_into`]/[`tp_all_gather_into`] data
+//! movement, and [`note_tp_step`] per-step accounting.
 //!
 //! # Chunk parallelism
 //!
@@ -18,8 +21,25 @@
 
 use crate::util::par::{join_spans, span, MIN_SPAN};
 
-/// Logical communication accounting, split by scope the way the paper's
-/// analysis is (§II-B): intra-group (fast links) vs global (fabric).
+/// Logical communication accounting, split by **scope** the way the
+/// paper's analysis is (§II-B) and the cluster simulator costs it
+/// (DESIGN.md §3):
+///
+/// * **intra-node TP** (`tp_*`) — the per-step tensor-parallel collectives
+///   (parameter all-gather, gradient reduce-scatter) between the `tp`
+///   ranks of one replica. With the Megatron placement these ride NVLink
+///   and never touch the fabric.
+/// * **intra-group** (`inner_*`) — the per-step DP gradient all-reduce
+///   within a local-communication group (fast links when the group fits a
+///   node, §II-B's speedup regime).
+/// * **global** (`outer_*`, `broadcast_*`) — the every-`H`-steps outer
+///   all-reduce and restart broadcast crossing the slow fabric; under
+///   DP×TP the outer all-reduce is recorded as `tp` per-shard calls whose
+///   bytes sum to the full fp32 model delta.
+///
+/// All volumes are *logical* payloads (bytes of the tensor moved, fp32
+/// unless noted); the netsim applies the ring/hierarchy algorithm factors
+/// when costing them.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct CommStats {
     pub inner_allreduce_calls: u64,
@@ -28,11 +48,26 @@ pub struct CommStats {
     pub outer_allreduce_bytes: f64,
     pub broadcast_calls: u64,
     pub broadcast_bytes: f64,
+    /// Intra-node TP scope: per-step parameter all-gathers (bf16 payload).
+    pub tp_allgather_calls: u64,
+    pub tp_allgather_bytes: f64,
+    /// Intra-node TP scope: per-step gradient reduce-scatters (bf16).
+    pub tp_reduce_scatter_calls: u64,
+    pub tp_reduce_scatter_bytes: f64,
 }
 
 impl CommStats {
     pub fn total_bytes(&self) -> f64 {
-        self.inner_allreduce_bytes + self.outer_allreduce_bytes + self.broadcast_bytes
+        self.inner_allreduce_bytes
+            + self.outer_allreduce_bytes
+            + self.broadcast_bytes
+            + self.intra_node_bytes()
+    }
+
+    /// Bytes that stay on intra-node links under the Megatron placement
+    /// (the TP scope) — the traffic Pier's argument keeps off the fabric.
+    pub fn intra_node_bytes(&self) -> f64 {
+        self.tp_allgather_bytes + self.tp_reduce_scatter_bytes
     }
 }
 
@@ -45,6 +80,21 @@ const CHUNK: usize = 4096;
 /// hot path. Deterministic: per-element accumulation in f64, in the
 /// natural group order, identical for any thread count.
 pub fn all_reduce_mean_into(vectors: &[&[f32]], out: &mut [f32]) {
+    reduce_into(vectors, out, vectors.len() as f64);
+}
+
+/// Element-wise f64 **sum** of `vectors` into `out` — the reduction the TP
+/// collectives use (partial sums add; no mean). Same determinism contract
+/// as [`all_reduce_mean_into`].
+pub fn all_reduce_sum_into(vectors: &[&[f32]], out: &mut [f32]) {
+    reduce_into(vectors, out, 1.0);
+}
+
+/// Shared span-parallel reduction core: `out[i] = (Σ_k vectors[k][i]) / div`
+/// with f64 accumulation in fixed vector order. `div = k` is the mean,
+/// `div = 1.0` the sum (division by 1.0 is exact, so the sum path costs no
+/// precision and the mean path is bit-identical to the historical loop).
+fn reduce_into(vectors: &[&[f32]], out: &mut [f32], div: f64) {
     assert!(!vectors.is_empty());
     let n = out.len();
     for v in vectors {
@@ -52,18 +102,17 @@ pub fn all_reduce_mean_into(vectors: &[&[f32]], out: &mut [f32]) {
     }
     let sp = span(n, MIN_SPAN);
     if sp >= n {
-        reduce_span(vectors, 0, out);
+        reduce_span(vectors, 0, out, div);
         return;
     }
     join_spans(out.chunks_mut(sp).enumerate().map(|(i, chunk)| {
         let start = i * sp;
-        move || reduce_span(vectors, start, chunk)
+        move || reduce_span(vectors, start, chunk, div)
     }));
 }
 
-/// Serial reduction of `out_span` = mean of `vectors[start..start+len]`.
-fn reduce_span(vectors: &[&[f32]], start: usize, out_span: &mut [f32]) {
-    let k = vectors.len() as f64;
+/// Serial reduction of `out_span` = `(Σ vectors)[start..start+len] / div`.
+fn reduce_span(vectors: &[&[f32]], start: usize, out_span: &mut [f32], div: f64) {
     let mut acc = vec![0.0f64; CHUNK.min(out_span.len().max(1))];
     let mut lo = 0;
     while lo < out_span.len() {
@@ -76,7 +125,7 @@ fn reduce_span(vectors: &[&[f32]], start: usize, out_span: &mut [f32]) {
             }
         }
         for (o, a) in out_span[lo..lo + len].iter_mut().zip(&acc[..len]) {
-            *o = (*a / k) as f32;
+            *o = (*a / div) as f32;
         }
         lo += len;
     }
@@ -138,6 +187,67 @@ pub fn all_gather(shards: &[&[f32]]) -> Vec<f32> {
         out.extend_from_slice(s);
     }
     out
+}
+
+// ---------------------------------------------------------------- TP scope
+
+/// Contiguous span sharding of an `n`-element flat vector over `tp` ranks
+/// (DESIGN.md §4): rank `r` owns `[r·n/tp, (r+1)·n/tp)`. The spans tile
+/// the vector exactly (sizes differ by at most one) — the same balanced
+/// partition the streaming partial sync uses for its fragments.
+///
+/// ```
+/// use pier::coordinator::collective::shard_span;
+/// // 10 elements over 4 ranks: spans 0..2, 2..5, 5..7, 7..10.
+/// assert_eq!(shard_span(10, 4, 1), (2, 5));
+/// let total: usize = (0..4).map(|r| { let (lo, hi) = shard_span(10, 4, r); hi - lo }).sum();
+/// assert_eq!(total, 10);
+/// ```
+pub fn shard_span(n: usize, tp: usize, r: usize) -> (usize, usize) {
+    assert!(tp > 0 && r < tp, "shard_span: rank {r} of {tp}");
+    (r * n / tp, (r + 1) * n / tp)
+}
+
+/// Executed in-process TP reduce-scatter: every rank `r` ends up owning
+/// the element-wise f64 **sum** of the `parts` (the TP ranks' partial
+/// results) over its [`shard_span`]. The single host buffer `out` stands
+/// in for all `tp` ranks' shards, so the whole vector is filled. Fixed
+/// part order and per-element accumulation make the result bit-identical
+/// for any thread count — and, with a single part, an exact copy (the
+/// f32→f64→f32 round-trip and the ÷1.0 are both lossless), which is what
+/// keeps TP numerically transparent in the single-computation stand-in.
+pub fn tp_reduce_scatter_into(parts: &[&[f32]], out: &mut [f32]) {
+    all_reduce_sum_into(parts, out);
+}
+
+/// Executed in-process TP all-gather: concatenate the `tp` contiguous
+/// shards (rank order) into `out` — re-materializing the full flat vector
+/// each rank needs before the next step's compute.
+pub fn tp_all_gather_into(shards: &[&[f32]], out: &mut [f32]) {
+    let total: usize = shards.iter().map(|s| s.len()).sum();
+    assert_eq!(total, out.len(), "tp_all_gather_into: shards do not tile out");
+    let mut lo = 0;
+    for s in shards {
+        out[lo..lo + s.len()].copy_from_slice(s);
+        lo += s.len();
+    }
+}
+
+/// Intra-node TP accounting for one inner training step of one replica:
+/// the bf16 parameter all-gather (each rank fetches the other
+/// `(tp−1)/tp` of the weights) and the matching bf16 gradient
+/// reduce-scatter. Logical payloads, like [`note_inner_allreduce`]; the
+/// netsim applies the ring factors. No-op for `tp = 1`.
+pub fn note_tp_step(n_params: usize, tp: usize, stats: &mut CommStats) {
+    if tp <= 1 {
+        return;
+    }
+    let frac = (tp - 1) as f64 / tp as f64;
+    let bytes = 2.0 * n_params as f64 * frac; // bf16
+    stats.tp_allgather_calls += 1;
+    stats.tp_allgather_bytes += bytes;
+    stats.tp_reduce_scatter_calls += 1;
+    stats.tp_reduce_scatter_bytes += bytes;
 }
 
 #[cfg(test)]
@@ -240,5 +350,92 @@ mod tests {
         let a = [1.0f32, 2.0];
         let b = [3.0f32];
         assert_eq!(all_gather(&[&a, &b]), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn shard_spans_tile_exactly() {
+        for (n, tp) in [(10usize, 4usize), (97, 3), (8, 8), (5, 1), (64, 2)] {
+            let mut covered = 0;
+            for r in 0..tp {
+                let (lo, hi) = shard_span(n, tp, r);
+                assert_eq!(lo, covered, "n={n} tp={tp} r={r}");
+                assert!(hi >= lo);
+                covered = hi;
+            }
+            assert_eq!(covered, n);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn shard_span_rank_out_of_range() {
+        shard_span(10, 2, 2);
+    }
+
+    #[test]
+    fn tp_reduce_scatter_sums_partials() {
+        let a = vec![1.0f32, 2.0, 3.0, 4.0];
+        let b = vec![10.0f32, 20.0, 30.0, 40.0];
+        let mut out = vec![0.0f32; 4];
+        tp_reduce_scatter_into(&[&a, &b], &mut out);
+        assert_eq!(out, vec![11.0, 22.0, 33.0, 44.0]);
+    }
+
+    #[test]
+    fn tp_round_trip_is_bit_identical_with_one_part() {
+        // The in-process trainer has one computation per replica, so its
+        // per-step TP collectives must be numerically transparent: a
+        // reduce-scatter of the single partial followed by the all-gather
+        // of the shards reproduces the input bit for bit.
+        let n = 1003;
+        let mut state = 0x243f6a8885a308d3u64;
+        let g: Vec<f32> = (0..n)
+            .map(|_| {
+                state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+                ((state >> 40) as f32 / (1u64 << 24) as f32) - 0.5
+            })
+            .collect();
+        for tp in [1usize, 2, 4, 7] {
+            let mut sharded = vec![0.0f32; n];
+            tp_reduce_scatter_into(&[g.as_slice()], &mut sharded);
+            let shards: Vec<&[f32]> = (0..tp)
+                .map(|r| {
+                    let (lo, hi) = shard_span(n, tp, r);
+                    &sharded[lo..hi]
+                })
+                .collect();
+            let mut back = vec![0.0f32; n];
+            tp_all_gather_into(&shards, &mut back);
+            let gb: Vec<u32> = g.iter().map(|x| x.to_bits()).collect();
+            let bb: Vec<u32> = back.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(gb, bb, "tp={tp}");
+        }
+    }
+
+    #[test]
+    fn sum_and_mean_agree_up_to_k() {
+        let a = vec![1.0f32; 300];
+        let b = vec![2.0f32; 300];
+        let mut sum = vec![0.0f32; 300];
+        let mut mean = vec![0.0f32; 300];
+        all_reduce_sum_into(&[&a, &b], &mut sum);
+        all_reduce_mean_into(&[&a, &b], &mut mean);
+        assert!(sum.iter().all(|&x| x == 3.0));
+        assert!(mean.iter().all(|&x| x == 1.5));
+    }
+
+    #[test]
+    fn note_tp_step_scope_accounting() {
+        let mut stats = CommStats::default();
+        note_tp_step(100, 1, &mut stats); // tp=1: nothing to move
+        assert_eq!(stats, CommStats::default());
+        note_tp_step(100, 4, &mut stats);
+        // bf16 payload × (tp−1)/tp, once for AG and once for RS
+        assert_eq!(stats.tp_allgather_bytes, 150.0);
+        assert_eq!(stats.tp_reduce_scatter_bytes, 150.0);
+        assert_eq!(stats.intra_node_bytes(), 300.0);
+        assert_eq!(stats.total_bytes(), 300.0);
+        assert_eq!(stats.tp_allgather_calls, 1);
+        assert_eq!(stats.tp_reduce_scatter_calls, 1);
     }
 }

@@ -87,6 +87,15 @@ impl WorkerGroup {
         Self::write_back(man, &self.params, 0, flat)
     }
 
+    /// TP rank `r`'s contiguous shard of a flat state vector (the
+    /// DESIGN.md §4 span layout). Sharding is a *view*: the flat vectors
+    /// live in the trainer's [`crate::runtime::FlatPool`] buffers and the
+    /// TP collectives operate on disjoint subslices of them.
+    pub fn flat_shard(flat: &[f32], tp: usize, r: usize) -> &[f32] {
+        let (lo, hi) = crate::coordinator::collective::shard_span(flat.len(), tp, r);
+        &flat[lo..hi]
+    }
+
     /// Flat f32 view of the current parameters (allocating convenience).
     pub fn params_flat(&self, man: &Manifest) -> Result<Vec<f32>> {
         let mut flat = vec![0.0f32; man.n_params];
@@ -197,6 +206,18 @@ mod tests {
         assert!(WorkerGroup::tensor_literals(&man, &[0.0; 95]).is_err());
         assert!(WorkerGroup::token_literal(&man, &[0; 17]).is_err());
         assert!(WorkerGroup::token_literal(&man, &[0; 18]).is_ok());
+    }
+
+    #[test]
+    fn flat_shards_are_views_that_tile_the_vector() {
+        let flat: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        let tp = 4;
+        let mut reassembled = Vec::new();
+        for r in 0..tp {
+            reassembled.extend_from_slice(WorkerGroup::flat_shard(&flat, tp, r));
+        }
+        assert_eq!(reassembled, flat);
+        assert_eq!(WorkerGroup::flat_shard(&flat, 4, 1), &flat[2..5]);
     }
 
     #[test]

@@ -6,7 +6,8 @@
 //!   momentum decay, outer-LR schedule; DiLoCo baseline behaviour).
 //! * [`group`] — worker groups: model replica + data shard + inner state.
 //! * [`collective`] — deterministic in-process collectives with logical
-//!   volume accounting (inner vs outer scope), chunk-parallel reductions.
+//!   volume accounting (intra-node TP vs intra-group vs global scope),
+//!   chunk-parallel reductions, and the DP×TP span sharding (DESIGN.md §4).
 //! * [`parallel`] — the scoped thread pool that steps all K groups
 //!   concurrently between outer syncs (deterministic by construction).
 //! * [`offload`] — §V's CPU offload of outer state, with byte/time
@@ -21,7 +22,9 @@ pub mod parallel;
 pub mod state;
 pub mod trainer;
 
-pub use collective::{all_gather, all_reduce_mean, all_reduce_mean_into, broadcast, CommStats};
+pub use collective::{all_gather, all_reduce_mean, all_reduce_mean_into, all_reduce_sum_into,
+                     broadcast, note_tp_step, shard_span, tp_all_gather_into,
+                     tp_reduce_scatter_into, CommStats};
 pub use group::WorkerGroup;
 pub use offload::{OffloadStats, OffloadStore};
 pub use outer::{OuterController, OuterResult};

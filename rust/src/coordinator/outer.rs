@@ -27,6 +27,15 @@
 //! full-model allocations or clones. The allocating [`OuterController::sync`]
 //! wrapper remains for tests and benches that want owned results.
 //!
+//! # DP×TP layout
+//!
+//! With `cfg.tp > 1` (DESIGN.md §4) the outer all-reduce executes as `tp`
+//! concurrent per-shard collectives over the contiguous [`shard_span`]
+//! partition — the §IV-C schedule whose makespan `netsim::des_outer_sync`
+//! models.
+//! Per-element math is unchanged, so the result is bit-identical to the
+//! pure-DP single all-reduce; only the recorded call structure differs.
+//!
 //! The anchor and momentum can live in the [`OffloadStore`] between outer
 //! steps (§V's CPU offload switch) — `sync` reloads them, steps, and
 //! offloads again. Offload transfers (and their host-side copies) happen
@@ -34,7 +43,8 @@
 //! device-resident and no copies are modeled.
 
 use crate::config::{OptMode, TrainConfig};
-use crate::coordinator::collective::{outer_all_reduce, outer_all_reduce_into, CommStats};
+use crate::coordinator::collective::{outer_all_reduce, outer_all_reduce_into, shard_span,
+                                     CommStats};
 use crate::coordinator::offload::OffloadStore;
 use crate::optim::nesterov::OuterOpt;
 use crate::optim::schedule;
@@ -127,6 +137,14 @@ impl OuterController {
     /// all-reduce the per-group deltas, apply Nesterov with the scheduled
     /// (μ, lr), and return the restart parameters as a borrow of the
     /// controller's reusable buffer — the zero-clone trainer path.
+    ///
+    /// Under DP×TP (`cfg.tp > 1`, DESIGN.md §4) the §IV-C outer sync runs
+    /// as `tp` concurrent per-shard all-reduces — one per TP rank, each
+    /// covering that rank's [`shard_span`] of the flat model — whose
+    /// logical volumes sum to the full fp32 delta and match what
+    /// [`crate::netsim::des_outer_sync`] costs. Element-wise math is
+    /// unchanged, so the reduced mean is bit-identical to the `tp = 1`
+    /// single all-reduce.
     pub fn sync_in_place(
         &mut self,
         step: usize,
@@ -135,7 +153,20 @@ impl OuterController {
     ) -> &[f32] {
         self.load_offloaded();
 
-        outer_all_reduce_into(group_params, &mut self.mean, stats);
+        let tp = self.cfg.tp.max(1);
+        if tp == 1 {
+            outer_all_reduce_into(group_params, &mut self.mean, stats);
+        } else {
+            // tp concurrent per-shard all-reduces (fixed rank order): the
+            // shards are disjoint views of the FlatPool-backed group flats.
+            let n = self.mean.len();
+            for r in 0..tp {
+                let (lo, hi) = shard_span(n, tp, r);
+                let shards: Vec<&[f32]> =
+                    group_params.iter().map(|g| &g[lo..hi]).collect();
+                outer_all_reduce_into(&shards, &mut self.mean[lo..hi], stats);
+            }
+        }
         for ((d, &m), &a) in self.delta.iter_mut().zip(&self.mean).zip(&self.anchor) {
             *d = m - a;
         }
@@ -193,9 +224,12 @@ impl OuterController {
         ((1.0 / frac).ceil() as usize).clamp(1, n)
     }
 
-    /// Streaming partial outer step (extension, DESIGN.md §6): synchronize
+    /// Streaming partial outer step (extension, DESIGN.md §2): synchronize
     /// only the current rotating fragment `[lo, hi)` with the same
-    /// Nesterov/schedule math restricted to the range.
+    /// Nesterov/schedule math restricted to the range. Fragments are
+    /// defined on the unsharded flat vector; under DP×TP each fragment's
+    /// all-reduce is still charged to the outer (fabric) scope, since the
+    /// rotation changes *when* bytes move, not *which links* carry them.
     ///
     /// Fragments are a *balanced partition* of the parameter vector into
     /// `partial_cycle_len()` pieces (sizes differ by at most one), so one
@@ -211,8 +245,8 @@ impl OuterController {
         let n = self.anchor.len();
         let cycle = self.partial_cycle_len();
         let idx = self.frag_cursor % cycle;
-        let lo = idx * n / cycle;
-        let hi = (idx + 1) * n / cycle;
+        // Same balanced partition as the TP shard layout — single-sourced.
+        let (lo, hi) = shard_span(n, cycle, idx);
         self.frag_cursor = (idx + 1) % cycle;
 
         self.load_offloaded();
@@ -445,6 +479,34 @@ mod tests {
     #[should_panic]
     fn adamw_mode_rejected() {
         OuterController::new(&cfg(OptMode::AdamW), &[0.0]);
+    }
+
+    #[test]
+    fn tp_sharded_sync_matches_tp1_bitwise_and_splits_calls() {
+        // n = 37 does not divide by tp = 4, so the spans are the balanced
+        // 9/9/9/10 partition; the reduced mean must still be bit-identical
+        // to the single all-reduce and the recorded volume must be the
+        // same total, split over tp calls.
+        let n = 37;
+        let init: Vec<f32> = (0..n).map(|i| (i as f32 * 0.17).sin()).collect();
+        let g1: Vec<f32> = (0..n).map(|i| (i as f32 * 0.31).cos()).collect();
+        let g2: Vec<f32> = (0..n).map(|i| (i as f32 * 0.53).sin() * 1.5).collect();
+        let c1 = cfg(OptMode::DiLoCo);
+        let mut c4 = cfg(OptMode::DiLoCo);
+        c4.tp = 4;
+        let mut a = OuterController::new(&c1, &init);
+        let mut b = OuterController::new(&c4, &init);
+        let mut s1 = CommStats::default();
+        let mut s4 = CommStats::default();
+        let ra: Vec<u32> =
+            a.sync_in_place(200, &[&g1, &g2], &mut s1).iter().map(|x| x.to_bits()).collect();
+        let rb: Vec<u32> =
+            b.sync_in_place(200, &[&g1, &g2], &mut s4).iter().map(|x| x.to_bits()).collect();
+        assert_eq!(ra, rb, "TP sharding must not change the outer step");
+        assert_eq!(s1.outer_allreduce_calls, 1);
+        assert_eq!(s4.outer_allreduce_calls, 4);
+        assert_eq!(s1.outer_allreduce_bytes, s4.outer_allreduce_bytes);
+        assert_eq!(s1.outer_allreduce_bytes, 4.0 * n as f64);
     }
 
     #[test]

@@ -31,12 +31,29 @@
 //! stats against the serial schedule (`cfg.parallel_groups = false`
 //! forces it; `PIER_THREADS` caps the worker count).
 //!
+//! **DP×TP** (`cfg.tp > 1`, DESIGN.md §4): each group's replica is
+//! span-sharded over `tp` tensor-parallel ranks in the Megatron placement
+//! (TP within a node, DP/outer across the fabric). Per inner step the
+//! accumulated gradient runs through the executed in-process
+//! reduce-scatter/all-gather pair (when gradient accumulation materializes
+//! a host gradient; the single-micro fused path accounts the same volumes
+//! like the on-device DP all-reduce) and the intra-node volumes are
+//! recorded per replica in [`CommStats`]'s TP scope; the outer sync
+//! executes as `tp` concurrent per-shard all-reduces inside
+//! [`OuterController::sync_in_place`]. The TP
+//! collectives are bit-transparent data movement over the single host
+//! computation, so `tp = 1` and `tp > 1` produce identical losses — the
+//! layout changes which links the recorded schedule loads, not the math
+//! (`rust/tests/parallel_parity.rs` pins this over the (groups, tp) grid,
+//! and `rust/tests/dp_tp_crossval.rs` cross-validates the recorded
+//! outer-sync volumes against the DES makespan).
+//!
 //! Schedule indexing: all outer-schedule queries (Alg. 1 warmup, Alg. 2
 //! μ/lr) use the number of **completed** inner steps, i.e. `t + 1` after
 //! performing 0-based step `t` — see the `coordinator::outer` module docs
 //! for the boundary semantics this pins.
 //!
-//! Perf note (EXPERIMENTS.md §Perf): group state lives as per-tensor PJRT
+//! Perf note (DESIGN.md §1): group state lives as per-tensor PJRT
 //! literals in the step functions' native layout, so the inner loop passes
 //! borrows straight back into `execute` — flat f32 views are materialized
 //! only at outer syncs, evals, and checkpoints, and the outer-sync path
@@ -48,12 +65,13 @@ use anyhow::{ensure, Context, Result};
 use xla::Literal;
 
 use crate::config::{OptMode, TrainConfig};
-use crate::coordinator::collective::{note_inner_allreduce, CommStats};
+use crate::coordinator::collective::{note_inner_allreduce, note_tp_step, tp_all_gather_into,
+                                     tp_reduce_scatter_into, CommStats};
 use crate::coordinator::group::WorkerGroup;
 use crate::coordinator::outer::OuterController;
 use crate::coordinator::parallel::ParallelExecutor;
 use crate::data::{validation_batches, Pipeline};
-use crate::metrics::{CommStatsSnapshot, IterRecord, RunLog};
+use crate::metrics::{CommStatsSnapshot, IterRecord, OuterEvent, RunLog};
 use crate::optim::schedule;
 use crate::runtime::{scalar_f32, scalar_i32, to_scalar_f32, FlatPool, Manifest, ModelExes, Runtime};
 use crate::util::Timer;
@@ -83,6 +101,9 @@ struct StepCtx<'a> {
     man: &'a Manifest,
     exes: &'a ModelExes,
     weight_decay: f64,
+    /// Tensor-parallel degree: >1 routes the accumulated gradient through
+    /// the executed TP reduce-scatter/all-gather (DESIGN.md §4).
+    tp: usize,
 }
 
 impl Trainer {
@@ -180,6 +201,7 @@ impl Trainer {
             man: &self.man,
             exes: &self.exes,
             weight_decay: self.cfg.weight_decay,
+            tp: self.cfg.tp.max(1),
         };
         fused_step(&ctx, &mut self.groups[0], &tokens, lr)
     }
@@ -209,11 +231,18 @@ impl Trainer {
                     man: &self.man,
                     exes: &self.exes,
                     weight_decay: self.cfg.weight_decay,
+                    tp: self.cfg.tp.max(1),
                 };
                 accumulated_step(&ctx, &mut self.groups[0], &micro, lr)?
             };
             // DP all-reduce accounting: one gradient exchange over all ranks
             note_inner_allreduce(self.man.n_params, &mut self.stats);
+            // Intra-node TP collectives: every modeled DP replica runs its
+            // own AG/RS pair per step, also during the synchronized phase —
+            // counted per replica, matching Phase B's per-group accounting.
+            for _ in 0..self.groups.len() {
+                note_tp_step(self.man.n_params, self.cfg.tp, &mut self.stats);
+            }
             self.record(t, loss, lr, gnorm);
 
             // Alg. 1: momentum warmup every H steps (Pier), anchor tracking
@@ -266,6 +295,7 @@ impl Trainer {
                         man: &self.man,
                         exes: &self.exes,
                         weight_decay: self.cfg.weight_decay,
+                        tp: self.cfg.tp.max(1),
                     };
                     engine.run(&mut self.groups, |_, g| {
                         let micro: Vec<Vec<i32>> =
@@ -282,6 +312,8 @@ impl Trainer {
                     gnorm_acc += gnorm;
                     // intra-group DP all-reduce (within fast links)
                     note_inner_allreduce(self.man.n_params, &mut self.stats);
+                    // per-replica intra-node TP collectives (DESIGN.md §4)
+                    note_tp_step(self.man.n_params, self.cfg.tp, &mut self.stats);
                 }
                 let kf = outcomes.len() as f64;
                 self.record(t, loss_acc / kf, lr, gnorm_acc / kf);
@@ -298,6 +330,9 @@ impl Trainer {
         let final_loss = self.eval_params(&final_params)?;
         self.log.val.push((t_total, final_loss));
         self.log.comm = CommStatsSnapshot::from(&self.stats);
+        // one per executed sync event (under DP×TP a single event runs
+        // tp per-shard all-reduce calls)
+        self.log.comm.outer_steps = self.log.outer_events.len() as u64;
         self.log.wall_secs = timer.secs();
         Ok(&self.log)
     }
@@ -315,6 +350,7 @@ impl Trainer {
         let n = self.man.n_params;
         self.flats.ensure(k, n);
         let engine = self.engine();
+        let outer_bytes_before = self.stats.outer_allreduce_bytes;
 
         // 1. flatten every group into its pooled buffer (parallel, no alloc)
         {
@@ -346,6 +382,13 @@ impl Trainer {
             self.stats.broadcast_calls += 1;
             self.stats.broadcast_bytes += 4.0 * (n * k) as f64;
         }
+        // Record the event for schedule cross-validation: the logical fp32
+        // volume this sync actually all-reduced (full model, or the
+        // rotating fragment), costable by the simulator/DES (DESIGN.md §5).
+        self.log.outer_events.push(OuterEvent {
+            step,
+            bytes: self.stats.outer_allreduce_bytes - outer_bytes_before,
+        });
         Ok(())
     }
 
@@ -448,6 +491,22 @@ fn accumulated_step(
     for x in gsum.iter_mut() {
         *x *= inv;
     }
+    // 1b. DP×TP layout (DESIGN.md §4): the mean gradient conceptually
+    // lives span-sharded over the tp ranks. Execute the reduce-scatter
+    // (fixed-order partial-sum semantics) and the all-gather that
+    // re-materializes the full vector for the fused update, reusing the
+    // per-micro-grad scratch (`gflat`, dead after the accumulation loop)
+    // as the shard buffer — zero extra allocations. With one computation
+    // per replica this data movement is bit-transparent, so tp never
+    // changes the math — only the recorded schedule. (The single-micro
+    // fused path above has no host gradient to move; its TP volumes are
+    // accounting-only, like the on-device DP all-reduce.)
+    if ctx.tp > 1 {
+        tp_reduce_scatter_into(&[gsum.as_slice()], &mut gflat);
+        let shards: Vec<&[f32]> =
+            (0..ctx.tp).map(|r| WorkerGroup::flat_shard(&gflat, ctx.tp, r)).collect();
+        tp_all_gather_into(&shards, &mut gsum);
+    }
     // 2. single fused clip+AdamW update
     g.adam_t += 1;
     let outs = {
@@ -473,6 +532,10 @@ fn accumulated_step(
 fn cfg_validate(cfg: &TrainConfig, man: &Manifest) -> Result<()> {
     ensure!(cfg.iterations > 0, "iterations must be positive");
     ensure!(cfg.sync_interval > 0, "sync_interval must be positive");
+    ensure!(cfg.tp > 0, "tp must be positive");
+    if let Err(e) = cfg.parallel().validate() {
+        anyhow::bail!("invalid DP×TP layout: {e}");
+    }
     ensure!(
         cfg.global_batch % man.micro_batch == 0,
         "global batch {} must be a multiple of the artifact micro-batch {}",

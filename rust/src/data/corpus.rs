@@ -1,4 +1,4 @@
-//! Synthetic pretraining corpus — the OpenWebText substitution (DESIGN.md §3).
+//! Synthetic pretraining corpus — the OpenWebText substitution (DESIGN.md §6).
 //!
 //! A deterministic generative "language" with the statistical properties the
 //! convergence experiments need:

@@ -1,7 +1,7 @@
 //! The thirteen downstream-task analogs (paper Table II's suite).
 //!
 //! Each paper task is mapped to a synthetic analog with the same *harness
-//! semantics* (DESIGN.md §3): binary classification scored as option
+//! semantics* (DESIGN.md §6): binary classification scored as option
 //! log-prob, multiple choice with length normalization, span-style F1, or
 //! final-word cloze. The discriminative signal comes from five families the
 //! corpus grammar actually contains, so a better-trained LM scores higher:

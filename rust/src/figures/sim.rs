@@ -8,7 +8,7 @@
 use crate::config::{model_or_die, OptMode};
 use crate::metrics::scaling_efficiency;
 use crate::perfmodel::gpu::{ClusterSpec, PERLMUTTER, VISTA};
-use crate::simulator::run::{simulate_run, Calib, SimSetup};
+use crate::simulator::run::{simulate_run, speedup_at, Calib, SimSetup};
 
 /// One scale point of a runtime figure.
 #[derive(Clone, Debug)]
@@ -153,11 +153,13 @@ pub fn fig7(cluster_name: &str, h: usize) -> FigureData {
 }
 
 /// Figure 8: DP×TP for GPT-2 7B, TP=4 (one Perlmutter node per replica),
-/// scaling 1 → 32 nodes. Efficiency reference M = 4 GPUs (one node).
+/// scaling 1 → 64 nodes. Efficiency reference M = 4 GPUs (one node). The
+/// 128-GPU row is the paper's §IV-C headline scale (54.5 % time cut); the
+/// 256-GPU row extends the sweep one doubling past it.
 pub fn fig8() -> FigureData {
     let mut setup = base_setup("gpt2-7b", &PERLMUTTER, 4, 1, 50, 4);
     setup.cpu_offload = true; // 7B outer state does not fit 40 GB otherwise
-    let worlds = [4usize, 8, 16, 32, 64, 128];
+    let worlds = [4usize, 8, 16, 32, 64, 128, 256];
     let mut rows = Vec::new();
     // baselines at one node (dp = 1: no DP comm for either arm)
     let mut s0 = setup.clone();
@@ -224,6 +226,20 @@ pub fn calibration_report() -> Vec<CalibrationPoint> {
             paper: 0.579,
             model: eff(&PERLMUTTER, 64, 256, OptMode::Pier, 500),
         },
+        // §IV-C headline: GPT-2 7B under DP×TP (TP=4, one group per node)
+        // on 128 A100s — the paper's 54.5 % end-to-end time reduction.
+        // Like the Pier efficiency anchor, this is a *prediction* of the
+        // AdamW-calibrated model, not a fit.
+        CalibrationPoint {
+            what: "Pier 7B Δt @128 A100, TP=4, H=50 (paper 54.5%)",
+            paper: 0.545,
+            model: {
+                let mut s = base_setup("gpt2-7b", &PERLMUTTER, 128, 32, 50, 4);
+                s.cpu_offload = true;
+                let (t_adamw, t_pier, _) = speedup_at(&s);
+                (t_adamw - t_pier) / t_adamw
+            },
+        },
     ]
 }
 
@@ -271,9 +287,13 @@ mod tests {
     #[test]
     fn fig8_runs() {
         let f = fig8();
+        // §IV-C headline scale: 128 A100s, TP=4.
+        let r128 = f.rows.iter().find(|r| r.world == 128).unwrap();
+        assert!(r128.speedup > 1.5, "{}", r128.speedup);
+        assert!(r128.eff_pier > r128.eff_adamw);
+        // One doubling past the headline the advantage must persist.
         let last = f.rows.last().unwrap();
-        assert_eq!(last.world, 128);
-        assert!(last.speedup > 1.5, "{}", last.speedup);
-        assert!(last.eff_pier > last.eff_adamw);
+        assert_eq!(last.world, 256);
+        assert!(last.speedup > 1.0, "{}", last.speedup);
     }
 }

@@ -15,7 +15,7 @@
 //! crate loads and executes through the PJRT C API (`runtime` module).
 //! Python is never on the training path.
 //!
-//! Module map (see DESIGN.md for the full inventory):
+//! Module map (see DESIGN.md §1 for the full architecture):
 //!
 //! * [`util`] — zero-dependency substrates: PCG RNG, JSON, CLI args, logging.
 //! * [`config`] — model/training/parallelism/cluster configuration + presets.

@@ -51,7 +51,8 @@ fn print_usage() {
          usage: pier <command> [options]\n\n\
          commands:\n\
            train     --model nano --mode pier|diloco|adamw --iters N --groups K\n\
-                     --batch B --interval H [--offload] [--csv out.csv] [--ckpt out.ckpt]\n\
+                     --batch B --interval H [--tp T] [--offload] [--csv out.csv]\n\
+                     [--ckpt out.ckpt]\n\
            eval      --model nano --ckpt file.ckpt\n\
            simulate  --model gpt2-xl --cluster perlmutter|vista --world N\n\
                      [--tp T] [--groups K] [--interval H] [--mode pier|adamw]\n\
@@ -81,6 +82,9 @@ fn summarize(log: &RunLog) {
         log.comm.outer_steps,
         log.comm.broadcast_bytes / 1e6
     );
+    if log.comm.tp_bytes > 0.0 {
+        println!("  comm (intra-node TP): {:.1} MB", log.comm.tp_bytes / 1e6);
+    }
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -93,6 +97,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let mut cfg = figures::figure_cfg(mode, iters, groups);
     cfg.global_batch = args.usize_or("batch", cfg.global_batch);
     cfg.sync_interval = args.usize_or("interval", cfg.sync_interval);
+    cfg.tp = args.usize_or("tp", cfg.tp);
     cfg.cpu_offload = args.flag("offload");
     cfg.seed = args.u64_or("seed", cfg.seed);
     cfg.eval_interval = args.usize_or("eval-interval", cfg.eval_interval);

@@ -20,6 +20,18 @@ pub struct IterRecord {
     pub outer_lr: f64,
 }
 
+/// One recorded outer synchronization event — the unit of the trainer's
+/// communication *schedule*, which `rust/tests/dp_tp_crossval.rs` costs
+/// with the cluster simulator and the DES (DESIGN.md §5).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OuterEvent {
+    /// Completed inner steps when the sync fired.
+    pub step: usize,
+    /// Logical fp32 bytes all-reduced by the event (the full model delta,
+    /// or the rotating fragment under streaming partial sync).
+    pub bytes: f64,
+}
+
 /// Full run log for one optimizer arm.
 #[derive(Clone, Debug, Default)]
 pub struct RunLog {
@@ -29,6 +41,8 @@ pub struct RunLog {
     /// (iteration, validation loss) — evaluated on the shared fixed batches.
     pub val: Vec<(usize, f64)>,
     pub comm: CommStatsSnapshot,
+    /// Every outer sync the trainer executed, in order.
+    pub outer_events: Vec<OuterEvent>,
     pub wall_secs: f64,
     pub switch_step: usize,
 }
@@ -38,6 +52,12 @@ pub struct CommStatsSnapshot {
     pub inner_allreduce_bytes: f64,
     pub outer_allreduce_bytes: f64,
     pub broadcast_bytes: f64,
+    /// Intra-node tensor-parallel traffic (all-gather + reduce-scatter).
+    pub tp_bytes: f64,
+    /// Outer synchronization events. `From<&CommStats>` seeds this with
+    /// the all-reduce call count (equal under pure DP); the trainer
+    /// overwrites it with the event count, which under DP×TP is `calls/tp`
+    /// (each event executes `tp` per-shard all-reduces).
     pub outer_steps: u64,
 }
 
@@ -47,6 +67,7 @@ impl From<&CommStats> for CommStatsSnapshot {
             inner_allreduce_bytes: s.inner_allreduce_bytes,
             outer_allreduce_bytes: s.outer_allreduce_bytes,
             broadcast_bytes: s.broadcast_bytes,
+            tp_bytes: s.intra_node_bytes(),
             outer_steps: s.outer_allreduce_calls,
         }
     }

@@ -35,6 +35,18 @@ pub fn des_outer_sync(dp: usize, tp: usize, v_total: f64, cluster: &ClusterSpec)
     makespan
 }
 
+/// DES cost of a recorded outer-sync *schedule*: the sum of per-event
+/// [`des_outer_sync`] makespans for a list of logical fp32 volumes (the
+/// trainer's `RunLog::outer_events`, one entry per executed sync). Outer
+/// events never overlap — each is a full barrier between inner phases — so
+/// the schedule makespan is the plain sum. `rust/tests/dp_tp_crossval.rs`
+/// pins this against the closed-form costing of the same schedule
+/// (`simulator::run::cost_outer_schedule`).
+pub fn des_outer_schedule(dp: usize, tp: usize, volumes: &[f64], cluster: &ClusterSpec) -> f64 {
+    let tp = tp.max(1);
+    volumes.iter().map(|&v| des_outer_sync(dp, tp, v, cluster)).sum()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -50,6 +62,16 @@ mod tests {
             let cf = outer_sync_time(32, tp, v, &PERLMUTTER);
             assert!((des - cf).abs() / cf < 0.02, "tp={tp}: des {des} vs cf {cf}");
         }
+    }
+
+    #[test]
+    fn des_schedule_is_sum_of_events() {
+        let events = [1e9, 2e9, 0.5e9];
+        let total = des_outer_schedule(16, 2, &events, &PERLMUTTER);
+        let by_hand: f64 = events.iter().map(|&v| des_outer_sync(16, 2, v, &PERLMUTTER)).sum();
+        assert_eq!(total, by_hand);
+        assert!(total > 0.0);
+        assert_eq!(des_outer_schedule(16, 2, &[], &PERLMUTTER), 0.0);
     }
 
     #[test]

@@ -67,9 +67,9 @@ impl OuterOpt {
 
     /// In-place outer step: updates the momentum buffer and writes the
     /// committed and restart positions into caller-owned buffers — zero
-    /// allocations. Element-wise (momentum[i] depends only on index i), so
-    /// the update is span-parallelized with bit-identical results to the
-    /// serial loop for any thread count.
+    /// allocations. Element-wise (`momentum[i]` depends only on index i),
+    /// so the update is span-parallelized with bit-identical results to
+    /// the serial loop for any thread count.
     pub fn step_into(
         &mut self,
         base: &[f32],

@@ -93,8 +93,8 @@ impl StepExe {
 
     /// Execute with device buffers, keeping the outputs on device.
     /// The single tuple output buffer is returned; use
-    /// [`StepExe::run_buffers_decomposed`] when per-element buffers are
-    /// needed.
+    /// [`StepExe::run_buffers_to_host`] when the decomposed host literals
+    /// are needed.
     pub fn run_buffers(&self, inputs: &[&PjRtBuffer]) -> Result<Vec<PjRtBuffer>> {
         let mut result = self
             .exe

@@ -11,4 +11,4 @@
 
 pub mod run;
 
-pub use run::{simulate_run, IterBreakdown, SimResult, SimSetup};
+pub use run::{cost_outer_schedule, simulate_run, IterBreakdown, SimResult, SimSetup};

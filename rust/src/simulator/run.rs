@@ -251,6 +251,20 @@ pub fn simulate_run(s: &SimSetup) -> SimResult {
     }
 }
 
+/// Closed-form cost of a recorded outer-sync schedule: one
+/// [`outer_sync_time`] term per event volume (the trainer's
+/// `RunLog::outer_events`). This is the simulator-side counterpart of
+/// [`crate::netsim::des_outer_schedule`] — the analytic α–β model and the
+/// DES resolve the same §IV-C contention pattern, so the two must agree
+/// within rounding for any (dp, tp); `rust/tests/dp_tp_crossval.rs` pins
+/// that agreement on schedules the trainer actually executed. (Burst
+/// contention is a property of a *specific* cluster occupancy and is
+/// applied only in [`outer_event`]; schedule costing stays uncalibrated.)
+pub fn cost_outer_schedule(dp: usize, tp: usize, volumes: &[f64], cluster: &ClusterSpec) -> f64 {
+    let tp = tp.max(1);
+    volumes.iter().map(|&v| outer_sync_time(dp, tp, v, cluster)).sum()
+}
+
 /// Convenience: AdamW-vs-Pier pair at the same scale.
 pub fn speedup_at(s_pier: &SimSetup) -> (f64, f64, f64) {
     let mut s_adamw = s_pier.clone();
@@ -375,6 +389,16 @@ mod tests {
         let oh = outer_event(&half);
         assert!(oh < 0.6 * of, "half fragment must ~halve the event: {oh} vs {of}");
         assert!(simulate_run(&half).total_secs < simulate_run(&full).total_secs);
+    }
+
+    #[test]
+    fn schedule_costing_matches_des_for_all_tp() {
+        let volumes = [6.2e9, 6.2e9, 3.1e9];
+        for tp in [1usize, 2, 4] {
+            let cf = cost_outer_schedule(32, tp, &volumes, &PERLMUTTER);
+            let des = crate::netsim::des_outer_schedule(32, tp, &volumes, &PERLMUTTER);
+            assert!((des - cf).abs() / cf < 0.02, "tp={tp}: des {des} vs cf {cf}");
+        }
     }
 
     #[test]

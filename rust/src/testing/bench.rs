@@ -3,7 +3,7 @@
 //! Criterion-style ergonomics: warmup, timed iterations until a minimum
 //! measurement window, mean/σ/percentiles, throughput reporting, and a
 //! stable one-line output format the bench binaries (`harness = false`)
-//! print for EXPERIMENTS.md.
+//! print (and snapshot to `BENCH_*.json`, see DESIGN.md §6).
 
 use std::time::Instant;
 

@@ -1,0 +1,160 @@
+//! DP×TP schedule cross-validation (DESIGN.md §4, §5).
+//!
+//! The tentpole contract: the outer-sync schedule the trainer *records*
+//! (per-event logical fp32 volumes, `RunLog::outer_events` / the
+//! `CommStats` outer scope), costed by the cluster simulator's closed-form
+//! α–β model, must agree with the DES fluid-flow makespan of the same
+//! §IV-C contention pattern — `tp` concurrent per-shard all-reduces
+//! sharing each node's injection link (`pier::netsim::des_outer_sync`).
+//!
+//! Two layers:
+//!
+//! * an artifact-free run in the trainer's Phase-B shape (the pure-Rust
+//!   AdamW oracle, as in `parallel_parity.rs`) whose recorded volumes are
+//!   costed both ways, over tp ∈ {1, 2, 4};
+//! * an artifacts-gated end-to-end run of the *real* `Trainer` with
+//!   `cfg.tp = 2`, validating the recorded `outer_events` against both
+//!   cost models and against the expected `4·N` full-sync volume.
+
+use pier::config::OptMode;
+use pier::coordinator::collective::{outer_all_reduce_into, shard_span, CommStats};
+use pier::netsim::{des_outer_schedule, des_outer_sync};
+use pier::optim::{clip_global_norm, AdamW};
+use pier::perfmodel::gpu::PERLMUTTER;
+use pier::simulator::run::cost_outer_schedule;
+use pier::util::rng::Pcg64;
+
+const N: usize = 64;
+const ITERS: usize = 30;
+const H: usize = 6;
+
+/// Phase-B-shaped toy run: returns the recorded outer-sync volumes
+/// (logical fp32 bytes per event), taken from the stats exactly the way
+/// the trainer records `RunLog::outer_events` — by diffing the outer
+/// scope around each sync.
+fn recorded_schedule(k: usize, tp: usize, seed: u64) -> Vec<f64> {
+    let tgt: Vec<f32> = (0..N).map(|i| (i as f32 * 0.23).sin()).collect();
+    let mut params: Vec<Vec<f32>> = vec![vec![0.0f32; N]; k];
+    let mut opts: Vec<AdamW> = (0..k).map(|_| AdamW::new(N)).collect();
+    let mut rngs: Vec<Pcg64> = (0..k).map(|g| Pcg64::new(seed, g as u64 + 1)).collect();
+    let mut stats = CommStats::default();
+    let mut events = Vec::new();
+
+    for t in 0..ITERS {
+        for g in 0..k {
+            let mut grad: Vec<f32> = params[g]
+                .iter()
+                .zip(&tgt)
+                .map(|(&p, &t)| 2.0 * (p - t) + 0.05 * rngs[g].normal() as f32)
+                .collect();
+            clip_global_norm(&mut grad, 1.0);
+            opts[g].update(&mut params[g], &grad, 0.05, 0.0);
+        }
+        if (t + 1) % H == 0 {
+            let before = stats.outer_allreduce_bytes;
+            let mut mean = vec![0.0f32; N];
+            for r in 0..tp {
+                let (lo, hi) = shard_span(N, tp, r);
+                let shards: Vec<&[f32]> = params.iter().map(|p| &p[lo..hi]).collect();
+                outer_all_reduce_into(&shards, &mut mean[lo..hi], &mut stats);
+            }
+            for p in params.iter_mut() {
+                p.copy_from_slice(&mean);
+            }
+            events.push(stats.outer_allreduce_bytes - before);
+        }
+    }
+    events
+}
+
+#[test]
+fn recorded_volumes_are_full_model_regardless_of_tp() {
+    for tp in [1usize, 2, 4] {
+        let events = recorded_schedule(4, tp, 7);
+        assert_eq!(events.len(), ITERS / H, "tp={tp}");
+        for (i, &v) in events.iter().enumerate() {
+            assert_eq!(v, (4 * N) as f64, "tp={tp} event {i}: sharding must not change volume");
+        }
+    }
+}
+
+#[test]
+fn simulator_costing_agrees_with_des_makespan() {
+    // The §IV-C cross-validation: the same recorded schedule, costed by
+    // the closed-form simulator and by the DES, must agree within the
+    // fluid model's rounding for every tp.
+    for tp in [1usize, 2, 4] {
+        let events = recorded_schedule(4, tp, 7);
+        // Logical volumes are tiny here; cost them at paper scale so the
+        // bandwidth term dominates the comparison the way Fig 8 has it.
+        let scaled: Vec<f64> = events.iter().map(|&v| v * 1e8).collect();
+        let cf = cost_outer_schedule(4, tp, &scaled, &PERLMUTTER);
+        let des = des_outer_schedule(4, tp, &scaled, &PERLMUTTER);
+        assert!(cf > 0.0);
+        assert!((des - cf).abs() / cf < 0.02, "tp={tp}: des {des} vs closed form {cf}");
+    }
+}
+
+#[test]
+fn des_degenerate_cases_are_free() {
+    // dp = 1: no outer ring, whatever the tp split.
+    assert_eq!(des_outer_sync(1, 4, 1e9, &PERLMUTTER), 0.0);
+    assert_eq!(cost_outer_schedule(1, 4, &[1e9, 2e9], &PERLMUTTER), 0.0);
+    assert_eq!(des_outer_schedule(16, 2, &[], &PERLMUTTER), 0.0);
+}
+
+// ---------------------------------------------------------------- gated e2e
+
+/// Real-trainer cross-validation (skips without `make artifacts`): train
+/// the nano analog with DP×TP and validate the recorded schedule.
+#[test]
+fn trainer_recorded_schedule_cross_validates() {
+    use pier::coordinator::Trainer;
+    use pier::figures::{figure_cfg, pipeline_for};
+    use pier::runtime::{load_manifest, Runtime};
+
+    let man = match load_manifest("nano") {
+        Ok(m) => m,
+        Err(_) => {
+            eprintln!("SKIP: nano artifacts missing (run `make artifacts`)");
+            return;
+        }
+    };
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let pipe = pipeline_for(&man, 11);
+
+    let mk_cfg = |tp: usize| {
+        let mut cfg = figure_cfg(OptMode::Pier, 30, 2);
+        cfg.global_batch = 16;
+        cfg.tp = tp;
+        cfg.eval_interval = 0;
+        cfg
+    };
+
+    let mut t2 = Trainer::new(&rt, man.clone(), mk_cfg(2), &pipe).unwrap();
+    t2.run().unwrap();
+    let events: Vec<f64> = t2.log.outer_events.iter().map(|e| e.bytes).collect();
+    assert!(!events.is_empty(), "Phase B must have synced");
+    for e in &t2.log.outer_events {
+        assert_eq!(e.bytes, 4.0 * man.n_params as f64, "full sync at step {}", e.step);
+    }
+    // Under tp=2 every event ran two per-shard all-reduces.
+    assert_eq!(
+        t2.stats.outer_allreduce_calls,
+        2 * t2.log.outer_events.len() as u64
+    );
+    assert!(t2.stats.intra_node_bytes() > 0.0, "TP scope must be populated");
+
+    // Costing the real recorded schedule: closed form vs DES.
+    let k = t2.cfg.groups;
+    let cf = cost_outer_schedule(k, 2, &events, &PERLMUTTER);
+    let des = des_outer_schedule(k, 2, &events, &PERLMUTTER);
+    assert!((des - cf).abs() / cf < 0.02, "des {des} vs closed form {cf}");
+
+    // And TP transparency end-to-end: same losses as the pure-DP run.
+    let mut t1 = Trainer::new(&rt, man.clone(), mk_cfg(1), &pipe).unwrap();
+    t1.run().unwrap();
+    let l1: Vec<u64> = t1.log.iters.iter().map(|r| r.loss.to_bits()).collect();
+    let l2: Vec<u64> = t2.log.iters.iter().map(|r| r.loss.to_bits()).collect();
+    assert_eq!(l1, l2, "tp must not change the training math");
+}

@@ -1,4 +1,5 @@
-//! Serial-vs-parallel parity for the group-execution engine.
+//! Serial-vs-parallel parity for the group-execution engine, over the
+//! full (groups, tp) grid.
 //!
 //! The trainer's Phase B steps all K groups concurrently through
 //! [`pier::coordinator::ParallelExecutor`]; the contract is that the
@@ -9,8 +10,17 @@
 //! pure-Rust AdamW oracle standing in for the PJRT step functions
 //! (runtime-backed parity is covered by `runtime_e2e.rs` when artifacts
 //! are present; the engine under test here is the real one).
+//!
+//! The DP×TP layout (DESIGN.md §4) adds a second axis: with `tp > 1` each
+//! step's gradient runs through the executed TP reduce-scatter/all-gather
+//! pair and the outer sync runs as `tp` per-shard all-reduces — exactly
+//! the trainer's shape. `tp = 1` must stay bit-identical to the pre-TP
+//! DP path, and because the TP collectives are bit-transparent data
+//! movement, `tp > 1` must reproduce the `tp = 1` losses bit for bit too.
 
-use pier::coordinator::collective::{note_inner_allreduce, outer_all_reduce, CommStats};
+use pier::coordinator::collective::{note_inner_allreduce, note_tp_step, outer_all_reduce,
+                                    outer_all_reduce_into, shard_span, tp_all_gather_into,
+                                    tp_reduce_scatter_into, CommStats};
 use pier::coordinator::ParallelExecutor;
 use pier::optim::{clip_global_norm, AdamW};
 use pier::util::rng::Pcg64;
@@ -50,14 +60,27 @@ fn make_groups(k: usize, seed: u64) -> Vec<ToyGroup> {
 }
 
 /// One inner step on exclusively-owned group state (the closure the
-/// engine schedules — the analog of `accumulated_step`).
-fn inner_step(g: &mut ToyGroup, tgt: &[f32]) -> (f64, f64) {
+/// engine schedules — the analog of `accumulated_step`). With `tp > 1`
+/// the gradient takes the executed TP reduce-scatter/all-gather round
+/// trip, exactly like the trainer's accumulated step.
+fn inner_step(g: &mut ToyGroup, tgt: &[f32], tp: usize) -> (f64, f64) {
     let ToyGroup { params, opt, rng } = g;
     let mut grad: Vec<f32> = params
         .iter()
         .zip(tgt)
         .map(|(&p, &t)| 2.0 * (p - t) + 0.05 * rng.normal() as f32)
         .collect();
+    if tp > 1 {
+        let mut sharded = vec![0.0f32; grad.len()];
+        tp_reduce_scatter_into(&[grad.as_slice()], &mut sharded);
+        let shards: Vec<&[f32]> = (0..tp)
+            .map(|r| {
+                let (lo, hi) = shard_span(N, tp, r);
+                &sharded[lo..hi]
+            })
+            .collect();
+        tp_all_gather_into(&shards, &mut grad);
+    }
     let gnorm = clip_global_norm(&mut grad, 1.0);
     opt.update(params, &grad, 0.05, 0.0);
     let loss: f64 =
@@ -67,26 +90,39 @@ fn inner_step(g: &mut ToyGroup, tgt: &[f32]) -> (f64, f64) {
 
 /// Phase-B-shaped run: K concurrent (or serial) inner steps per iteration,
 /// fixed-order loss reduction and comm accounting, outer averaging +
-/// broadcast every H steps.
-fn run(engine: ParallelExecutor, k: usize, seed: u64) -> ToyRunLog {
+/// broadcast every H steps. `tp > 1` mirrors the trainer's DP×TP shape:
+/// per-step TP accounting after the join, and the outer sync as `tp`
+/// per-shard all-reduces over the contiguous span partition.
+fn run(engine: ParallelExecutor, k: usize, tp: usize, seed: u64) -> ToyRunLog {
     let tgt = target();
     let mut groups = make_groups(k, seed);
     let mut stats = CommStats::default();
     let mut losses = Vec::with_capacity(ITERS);
     for t in 0..ITERS {
         let outcomes = engine
-            .run(&mut groups, |_, g| Ok(inner_step(g, &tgt)))
+            .run(&mut groups, |_, g| Ok(inner_step(g, &tgt, tp)))
             .expect("toy steps cannot fail");
         let mut loss_acc = 0.0;
         for &(loss, _) in &outcomes {
             loss_acc += loss;
             note_inner_allreduce(N, &mut stats);
+            note_tp_step(N, tp, &mut stats);
         }
         losses.push(loss_acc / k as f64);
 
         if (t + 1) % H == 0 {
             let refs: Vec<&[f32]> = groups.iter().map(|g| g.params.as_slice()).collect();
-            let mean = outer_all_reduce(&refs, &mut stats);
+            let mean = if tp == 1 {
+                outer_all_reduce(&refs, &mut stats)
+            } else {
+                let mut mean = vec![0.0f32; N];
+                for r in 0..tp {
+                    let (lo, hi) = shard_span(N, tp, r);
+                    let shards: Vec<&[f32]> = refs.iter().map(|g| &g[lo..hi]).collect();
+                    outer_all_reduce_into(&shards, &mut mean[lo..hi], &mut stats);
+                }
+                mean
+            };
             for g in groups.iter_mut() {
                 g.params.copy_from_slice(&mean);
             }
@@ -102,50 +138,105 @@ fn run(engine: ParallelExecutor, k: usize, seed: u64) -> ToyRunLog {
 }
 
 #[test]
-fn thread_pool_matches_serial_bitwise_for_1_2_4_groups() {
+fn thread_pool_matches_serial_bitwise_over_groups_x_tp_grid() {
     for k in [1usize, 2, 4] {
-        let serial = run(ParallelExecutor::serial(), k, 1234);
-        let parallel = run(ParallelExecutor::new(0), k, 1234);
+        for tp in [1usize, 2] {
+            let serial = run(ParallelExecutor::serial(), k, tp, 1234);
+            let parallel = run(ParallelExecutor::new(0), k, tp, 1234);
 
-        // Losses: bit-identical, not merely close.
-        let sbits: Vec<u64> = serial.losses.iter().map(|l| l.to_bits()).collect();
-        let pbits: Vec<u64> = parallel.losses.iter().map(|l| l.to_bits()).collect();
-        assert_eq!(sbits, pbits, "k={k}: loss trajectories diverged");
+            // Losses: bit-identical, not merely close.
+            let sbits: Vec<u64> = serial.losses.iter().map(|l| l.to_bits()).collect();
+            let pbits: Vec<u64> = parallel.losses.iter().map(|l| l.to_bits()).collect();
+            assert_eq!(sbits, pbits, "k={k} tp={tp}: loss trajectories diverged");
 
-        // Comm stats: identical calls and byte counts.
-        assert_eq!(serial.stats, parallel.stats, "k={k}: comm stats diverged");
+            // Comm stats: identical calls and byte counts.
+            assert_eq!(serial.stats, parallel.stats, "k={k} tp={tp}: comm stats diverged");
 
-        // Final parameters: bit-identical per group.
-        for (gi, (sp, pp)) in
-            serial.final_params.iter().zip(&parallel.final_params).enumerate()
-        {
-            let sb: Vec<u32> = sp.iter().map(|x| x.to_bits()).collect();
-            let pb: Vec<u32> = pp.iter().map(|x| x.to_bits()).collect();
-            assert_eq!(sb, pb, "k={k} group {gi}: params diverged");
+            // Final parameters: bit-identical per group.
+            for (gi, (sp, pp)) in
+                serial.final_params.iter().zip(&parallel.final_params).enumerate()
+            {
+                let sb: Vec<u32> = sp.iter().map(|x| x.to_bits()).collect();
+                let pb: Vec<u32> = pp.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(sb, pb, "k={k} tp={tp} group {gi}: params diverged");
+            }
         }
+    }
+}
+
+#[test]
+fn tp1_stats_match_the_pre_tp_dp_path() {
+    // The tp = 1 schedule must be exactly the historical pure-DP one: no
+    // TP-scope traffic, one outer all-reduce call per sync, and the same
+    // byte formulas the seed trainer recorded.
+    for k in [1usize, 2, 4] {
+        let log = run(ParallelExecutor::new(0), k, 1, 1234);
+        let syncs = (ITERS / H) as u64;
+        assert_eq!(log.stats.tp_allgather_calls, 0);
+        assert_eq!(log.stats.tp_reduce_scatter_calls, 0);
+        assert_eq!(log.stats.intra_node_bytes(), 0.0);
+        assert_eq!(log.stats.inner_allreduce_calls, (ITERS * k) as u64);
+        assert_eq!(log.stats.inner_allreduce_bytes, (2 * N * ITERS * k) as f64);
+        assert_eq!(log.stats.outer_allreduce_calls, syncs);
+        assert_eq!(log.stats.outer_allreduce_bytes, (4 * N) as f64 * syncs as f64);
+    }
+}
+
+#[test]
+fn tp_is_numerically_transparent() {
+    // The TP collectives are pure data movement over the single host
+    // computation: the whole trajectory (losses and final params) must be
+    // bit-identical across tp, while the recorded schedule changes — the
+    // outer sync splits into tp per-shard calls (same total bytes) and the
+    // intra-node TP scope fills in.
+    for k in [2usize, 4] {
+        let base = run(ParallelExecutor::new(0), k, 1, 99);
+        let tp2 = run(ParallelExecutor::new(0), k, 2, 99);
+
+        let b1: Vec<u64> = base.losses.iter().map(|l| l.to_bits()).collect();
+        let b2: Vec<u64> = tp2.losses.iter().map(|l| l.to_bits()).collect();
+        assert_eq!(b1, b2, "k={k}: tp must not change the math");
+        for (sp, pp) in base.final_params.iter().zip(&tp2.final_params) {
+            assert_eq!(
+                sp.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                pp.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            );
+        }
+
+        let syncs = (ITERS / H) as u64;
+        assert_eq!(base.stats.outer_allreduce_calls, syncs);
+        assert_eq!(tp2.stats.outer_allreduce_calls, 2 * syncs);
+        assert_eq!(base.stats.outer_allreduce_bytes, tp2.stats.outer_allreduce_bytes);
+        assert_eq!(base.stats.inner_allreduce_bytes, tp2.stats.inner_allreduce_bytes);
+        assert_eq!(base.stats.intra_node_bytes(), 0.0);
+        // per step per group: bf16 AG + RS at (tp−1)/tp of the model
+        let expect_tp = 2.0 * (2.0 * N as f64 * 0.5) * (ITERS * k) as f64;
+        assert_eq!(tp2.stats.intra_node_bytes(), expect_tp);
     }
 }
 
 #[test]
 fn worker_cap_does_not_change_results() {
     // Oversubscribed, undersubscribed, and exact-fit pools all agree.
-    let reference = run(ParallelExecutor::serial(), 4, 77);
-    for cap in [2usize, 3, 4, 16] {
-        let capped = run(ParallelExecutor::new(cap), 4, 77);
-        assert_eq!(
-            reference.losses.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
-            capped.losses.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
-            "cap={cap}"
-        );
-        assert_eq!(reference.stats, capped.stats, "cap={cap}");
+    for tp in [1usize, 2] {
+        let reference = run(ParallelExecutor::serial(), 4, tp, 77);
+        for cap in [2usize, 3, 4, 16] {
+            let capped = run(ParallelExecutor::new(cap), 4, tp, 77);
+            assert_eq!(
+                reference.losses.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
+                capped.losses.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
+                "cap={cap} tp={tp}"
+            );
+            assert_eq!(reference.stats, capped.stats, "cap={cap} tp={tp}");
+        }
     }
 }
 
 #[test]
 fn different_seeds_actually_diverge() {
     // Guard against a vacuous parity test: the run must be seed-sensitive.
-    let a = run(ParallelExecutor::new(0), 2, 1);
-    let b = run(ParallelExecutor::new(0), 2, 2);
+    let a = run(ParallelExecutor::new(0), 2, 1, 1);
+    let b = run(ParallelExecutor::new(0), 2, 1, 2);
     assert_ne!(
         a.losses.iter().map(|l| l.to_bits()).collect::<Vec<_>>(),
         b.losses.iter().map(|l| l.to_bits()).collect::<Vec<_>>()
