@@ -34,6 +34,7 @@ fn main() {
         tp: 1,
         pp: 1,
         sync_fraction: 1.0,
+        stream_fragments: 0,
         groups: 64,
         global_batch: 512,
         sync_interval: 50,

@@ -3,13 +3,20 @@
 //! sizes plus a GPT-2-small-sized vector (124 M params ≈ what one GPU hosts
 //! in the paper's smallest real run).
 //!
-//! Two variants per sync size: the allocating legacy path (`sync`, three
-//! full-model vectors per call at the controller layer alone) and the
-//! in-place path the trainer now uses (`sync_in_place`, zero full-model
-//! allocations; reductions and the Nesterov update are span-parallel).
+//! Per sync size: the allocating legacy path (`sync`, three full-model
+//! vectors per call at the controller layer alone), the in-place path the
+//! trainer uses for blocking syncs (`sync_in_place`, zero full-model
+//! allocations; reductions and the Nesterov update are span-parallel),
+//! its tp=4 per-shard variant, and the streaming fragment schedule
+//! (`sync_streaming`, DESIGN.md §8 — bit-identical result, fragmented
+//! all-reduces).
 //!
 //! Emits `BENCH_outer_step.json` — a machine-readable perf snapshot
 //! (mean seconds + throughput per benchmark) for tracking across PRs.
+//! `ci.sh` diffs it against the committed `BENCH_baseline.json` with
+//! `tools/bench_check.rs`: the `outer_sync_in_place*` and
+//! `outer_sync_streaming*` families are gated at 15 % mean-time
+//! regression.
 
 use pier::config::{NesterovKind, OptMode, TrainConfig};
 use pier::coordinator::collective::CommStats;
@@ -114,6 +121,42 @@ fn main() {
             let next = ctl_tp.sync_in_place(500, &refs, &mut stats_tp);
             std::hint::black_box(next.len());
         });
+        println!("{}", r.report_throughput((n * k) as f64, "param"));
+        snap(&mut rows, &r, (n * k) as f64, "param/s");
+
+        // Streaming overlapped sync (DESIGN.md §8): the same outer step as
+        // a 4-fragment pipeline — bit-identical result, fragment schedule.
+        // This is one of the two benchmark families the CI perf gate
+        // (tools/bench_check.rs) tracks against BENCH_baseline.json.
+        let mut cfg_st = cfg.clone();
+        cfg_st.stream_fragments = 4;
+        let mut ctl_st = OuterController::new(&cfg_st, &groups[0]);
+        let mut stats_st = CommStats::default();
+        let r = bench_quick(&format!("outer_sync_streaming4/micro-3.2M/{k}groups"), || {
+            let refs: Vec<&[f32]> = groups.iter().map(|g| g.as_slice()).collect();
+            let next = ctl_st.sync_streaming(500, &refs, &mut stats_st);
+            std::hint::black_box(next.len());
+        });
+        println!("{}", r.report_throughput((n * k) as f64, "param"));
+        snap(&mut rows, &r, (n * k) as f64, "param/s");
+
+        // The trainer's actual streaming hot path: the two-stage
+        // fragment pipeline (producer thread + channel + per-fragment
+        // payload copies into the staging buffer) — what PIER_THREADS>1
+        // runs, via the same `sync_streaming_pipelined` method the
+        // trainer calls. Gated alongside the serial barrier form so a
+        // regression confined to the pipeline machinery cannot hide.
+        let mut ctl_stp = OuterController::new(&cfg_st, &groups[0]);
+        let mut stats_stp = CommStats::default();
+        let mut staging = vec![0.0f32; n];
+        let r = bench_quick(
+            &format!("outer_sync_streaming4_pipelined/micro-3.2M/{k}groups"),
+            || {
+                let refs: Vec<&[f32]> = groups.iter().map(|g| g.as_slice()).collect();
+                ctl_stp.sync_streaming_pipelined(500, &refs, &mut stats_stp, &mut staging);
+                std::hint::black_box(staging.len());
+            },
+        );
         println!("{}", r.report_throughput((n * k) as f64, "param"));
         snap(&mut rows, &r, (n * k) as f64, "param/s");
     }

@@ -1,13 +1,24 @@
 #!/usr/bin/env bash
 # CI gate for the Pier reproduction.
 #
-#   ./ci.sh           # fmt + clippy + tier-1 (build + tests)
-#   RUN_BENCH=1 ./ci.sh   # additionally run the outer-step bench and
-#                         # refresh the BENCH_outer_step.json perf snapshot
+#   ./ci.sh               # fmt + clippy + docs + tier-1 (build + tests)
+#                         # + examples/benches build gates
+#   RUN_BENCH=1 ./ci.sh   # additionally run the outer-step bench, refresh
+#                         # the BENCH_outer_step.json perf snapshot, and
+#                         # diff it against BENCH_baseline.json (fails on
+#                         # >15% regression in the gated outer-sync
+#                         # benchmarks — see tools/bench_check.rs)
 #
 # Tier-1 is the ROADMAP contract: `cargo build --release && cargo test -q`.
+# Run by .github/workflows/ci.yml over PIER_THREADS={1,4} (serial and
+# parallel schedules) with the vendored-offline environment.
 set -euo pipefail
 cd "$(dirname "$0")"
+
+echo "==> toolchain"
+rustc --version
+cargo --version
+echo "PIER_THREADS=${PIER_THREADS:-<unset>} CARGO_NET_OFFLINE=${CARGO_NET_OFFLINE:-<unset>}"
 
 echo "==> cargo fmt --check"
 cargo fmt --check
@@ -24,12 +35,19 @@ cargo test --doc -q
 echo "==> tier-1: cargo build --release"
 cargo build --release
 
+echo "==> bit-rot gates: examples and benches must keep building"
+cargo build --release --examples
+cargo bench --no-run
+
 echo "==> tier-1: cargo test -q"
 cargo test -q
 
 if [[ "${RUN_BENCH:-0}" == "1" ]]; then
   echo "==> perf snapshot: cargo bench --bench outer_step (writes BENCH_outer_step.json)"
   cargo bench --bench outer_step
+  echo "==> perf gate: BENCH_outer_step.json vs BENCH_baseline.json"
+  cargo run --release --bin bench_check -- \
+    BENCH_baseline.json BENCH_outer_step.json --max-regression 0.15
 fi
 
 echo "CI OK"

@@ -1,0 +1,12 @@
+"""Pytest bootstrap: make `compile.*` importable regardless of rootdir.
+
+The L1/L2 tests import the lowering package as `compile` (this directory
+is the package root), which only resolves when `python/` is on sys.path.
+Running `pytest python -q` from the repo root — the CI invocation — would
+otherwise fail at collection.
+"""
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))

@@ -4,6 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+# Skip the whole module cleanly (not a collection error) on images without
+# hypothesis — the offline CI container is one; the GitHub workflow's
+# python job installs it and runs the full sweep.
+pytest.importorskip("hypothesis", reason="hypothesis not installed (offline image)")
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import (adamw_update, attention_fwd, flash_attention,

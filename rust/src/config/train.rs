@@ -95,6 +95,18 @@ pub struct TrainConfig {
     /// is covered every ⌈1/fraction⌉ outer steps; peak outer communication
     /// drops proportionally.
     pub sync_fraction: f64,
+    /// Streaming **overlapped** outer sync (extension, DESIGN.md §8):
+    /// split every full outer sync into this many balanced fragments
+    /// (`collective::fragment_span`) and pipeline them — each fragment's
+    /// all-reduce + Nesterov step overlaps the next fragment's assembly,
+    /// and the cost models hide all but the gating fragment under the
+    /// following round's inner compute. `0` is today's blocking
+    /// `sync_in_place`; `1` takes the streaming path with one fragment
+    /// (bit-identical to blocking, pinned by test); `> 1` changes only the
+    /// schedule — final synced params stay bit-identical because fragments
+    /// partition the flat buffer disjointly. Requires `sync_fraction = 1`
+    /// (the rotating partial sync is itself a fragment schedule).
+    pub stream_fragments: usize,
 
     /// Step the K groups concurrently on the scoped thread pool during the
     /// inner phase (default). `false` forces the legacy serial schedule —
@@ -130,6 +142,7 @@ impl TrainConfig {
             momentum_decay: true,
             cpu_offload: false,
             sync_fraction: 1.0,
+            stream_fragments: 0,
             parallel_groups: true,
             eval_interval: 0,
             seed: 1234,
@@ -195,6 +208,7 @@ impl TrainConfig {
             ),
             ("cpu_offload", Json::Bool(self.cpu_offload)),
             ("sync_fraction", Json::num(self.sync_fraction)),
+            ("stream_fragments", Json::num(self.stream_fragments as f64)),
             ("parallel_groups", Json::Bool(self.parallel_groups)),
             ("eval_interval", Json::num(self.eval_interval as f64)),
             ("seed", Json::num(self.seed as f64)),
@@ -225,6 +239,7 @@ impl TrainConfig {
         };
         c.cpu_offload = j.get("cpu_offload")?.as_bool()?;
         c.sync_fraction = j.get("sync_fraction").and_then(Json::as_f64).unwrap_or(1.0);
+        c.stream_fragments = j.get("stream_fragments").and_then(Json::as_usize).unwrap_or(0);
         c.parallel_groups = j.get("parallel_groups").and_then(Json::as_bool).unwrap_or(true);
         c.eval_interval = j.get("eval_interval")?.as_usize()?;
         c.seed = j.get("seed")?.as_f64()? as u64;
@@ -267,6 +282,7 @@ mod tests {
         c.nesterov = NesterovKind::Theoretical;
         c.tp = 2;
         c.gpus_per_node = 1;
+        c.stream_fragments = 4;
         let j = c.to_json();
         let c2 = TrainConfig::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
         assert_eq!(c2.mode, OptMode::DiLoCo);
@@ -275,6 +291,17 @@ mod tests {
         assert_eq!(c2.iterations, 500);
         assert_eq!(c2.tp, 2);
         assert_eq!(c2.gpus_per_node, 1);
+        assert_eq!(c2.stream_fragments, 4);
+    }
+
+    #[test]
+    fn json_without_stream_fragments_defaults_to_blocking() {
+        // Pre-streaming configs (no "stream_fragments" key) keep loading
+        // and take the blocking sync path.
+        let c = TrainConfig::default_for(100);
+        let j = c.to_json().to_string().replace("\"stream_fragments\":0,", "");
+        let c2 = TrainConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(c2.stream_fragments, 0);
     }
 
     #[test]

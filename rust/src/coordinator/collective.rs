@@ -7,7 +7,12 @@
 //! schedule the trainer actually executed. The DP×TP layout (DESIGN.md §4)
 //! adds the intra-node TP scope: [`shard_span`] contiguous sharding,
 //! executed [`tp_reduce_scatter_into`]/[`tp_all_gather_into`] data
-//! movement, and [`note_tp_step`] per-step accounting.
+//! movement, and [`note_tp_step`] per-step accounting. The streaming
+//! outer sync (DESIGN.md §8) adds the fragment layer: [`fragment_span`]
+//! (the single-sourced balanced partition shared with rotating partial
+//! sync), [`all_reduce_mean_fragment_into`] fragment reductions, the
+//! [`fragment_pipeline`] two-stage driver, and the overlapped-vs-exposed
+//! byte split in [`CommStats`].
 //!
 //! # Chunk parallelism
 //!
@@ -46,6 +51,17 @@ pub struct CommStats {
     pub inner_allreduce_bytes: f64,
     pub outer_allreduce_calls: u64,
     pub outer_allreduce_bytes: f64,
+    /// Outer-scope bytes whose transfer is **overlapped** with the
+    /// following round's inner compute under the streaming schedule
+    /// (DESIGN.md §8): every fragment of a streaming sync except the last.
+    /// Blocking syncs and the rotating partial sync record nothing here.
+    pub outer_overlapped_bytes: f64,
+    /// Outer-scope bytes **exposed** at the sync barrier: everything a
+    /// blocking sync moves, plus the gating (last) fragment of a streaming
+    /// sync. Invariant: `outer_overlapped_bytes + outer_exposed_bytes ==
+    /// outer_allreduce_bytes` — the streaming schedule re-times the same
+    /// traffic, it never changes the volume.
+    pub outer_exposed_bytes: f64,
     pub broadcast_calls: u64,
     pub broadcast_bytes: f64,
     /// Intra-node TP scope: per-step parameter all-gathers (bf16 payload).
@@ -68,6 +84,21 @@ impl CommStats {
     /// (the TP scope) — the traffic Pier's argument keeps off the fabric.
     pub fn intra_node_bytes(&self) -> f64 {
         self.tp_allgather_bytes + self.tp_reduce_scatter_bytes
+    }
+
+    /// Record one outer-scope all-reduce of `bytes` logical fp32 payload,
+    /// tagged overlapped (hidden under the next round's compute in the
+    /// streaming schedule) or exposed (paid at the barrier). Single-sourced
+    /// so the overlapped + exposed = total invariant cannot drift between
+    /// the blocking, partial, and streaming paths.
+    pub fn note_outer_allreduce(&mut self, bytes: f64, overlapped: bool) {
+        self.outer_allreduce_calls += 1;
+        self.outer_allreduce_bytes += bytes;
+        if overlapped {
+            self.outer_overlapped_bytes += bytes;
+        } else {
+            self.outer_exposed_bytes += bytes;
+        }
     }
 }
 
@@ -141,13 +172,45 @@ pub fn all_reduce_mean(vectors: &[&[f32]]) -> Vec<f32> {
 }
 
 /// Element-wise mean of per-group deltas into a reusable buffer (the outer
-/// all-reduce of Alg. 2 line 11) with stats accounting.
+/// all-reduce of Alg. 2 line 11) with stats accounting. Blocking-schedule
+/// entry point: the recorded bytes are exposed at the barrier.
 pub fn outer_all_reduce_into(vectors: &[&[f32]], out: &mut [f32], stats: &mut CommStats) {
     all_reduce_mean_into(vectors, out);
-    stats.outer_allreduce_calls += 1;
     // Ring all-reduce moves 2·(k−1)/k·V per rank; we record the logical
     // payload V (fp32) and let the netsim apply the algorithm factor.
-    stats.outer_allreduce_bytes += 4.0 * out.len() as f64;
+    stats.note_outer_allreduce(4.0 * out.len() as f64, false);
+}
+
+/// Fragment variant of the mean all-reduce: reduce `vectors[k][lo..hi]`
+/// element-wise into `out` (a fragment-length buffer). Pure data movement +
+/// math, no accounting — see [`outer_all_reduce_fragment_into`] for the
+/// stats-recording wrapper. Because the reduction is per-element (f64
+/// accumulation in fixed group order), reducing a fragment produces exactly
+/// the bits the full-vector reduction would put at `[lo, hi)` — the
+/// property the streaming outer sync's determinism contract rests on
+/// (DESIGN.md §8).
+pub fn all_reduce_mean_fragment_into(vectors: &[&[f32]], lo: usize, hi: usize, out: &mut [f32]) {
+    assert!(lo <= hi, "all_reduce_mean_fragment_into: inverted range {lo}..{hi}");
+    assert_eq!(out.len(), hi - lo, "all_reduce_mean_fragment_into: buffer/fragment mismatch");
+    let slices: Vec<&[f32]> = vectors.iter().map(|v| &v[lo..hi]).collect();
+    all_reduce_mean_into(&slices, out);
+}
+
+/// [`all_reduce_mean_fragment_into`] plus outer-scope accounting:
+/// `overlapped` tags the fragment's bytes as hidden under the next round's
+/// inner compute (every streaming fragment but the gating last one) or as
+/// exposed barrier traffic (blocking syncs, partial-sync fragments, the
+/// last streaming fragment).
+pub fn outer_all_reduce_fragment_into(
+    vectors: &[&[f32]],
+    lo: usize,
+    hi: usize,
+    out: &mut [f32],
+    overlapped: bool,
+    stats: &mut CommStats,
+) {
+    all_reduce_mean_fragment_into(vectors, lo, hi, out);
+    stats.note_outer_allreduce(4.0 * (hi - lo) as f64, overlapped);
 }
 
 /// Allocating variant of [`outer_all_reduce_into`] (partial-sync fragments
@@ -206,6 +269,70 @@ pub fn all_gather(shards: &[&[f32]]) -> Vec<f32> {
 pub fn shard_span(n: usize, tp: usize, r: usize) -> (usize, usize) {
     assert!(tp > 0 && r < tp, "shard_span: rank {r} of {tp}");
     (r * n / tp, (r + 1) * n / tp)
+}
+
+// ----------------------------------------------------------- fragments
+
+/// THE fragment partition of the outer-sync extensions: fragment `idx` of
+/// a balanced split of `n` parameters into `fragments` contiguous pieces.
+/// Both rotating partial sync (`sync_fraction < 1`) and streaming
+/// overlapped sync (`stream_fragments > 1`, DESIGN.md §8) derive their
+/// fragments from this one helper — the same balanced [`shard_span`]
+/// partition the TP layout uses — so the two extensions cannot drift:
+/// any cycle over `idx ∈ [0, fragments)` covers every parameter exactly
+/// once with no overlap (pinned by a property test).
+///
+/// ```
+/// use pier::coordinator::collective::fragment_span;
+/// // 10 params in 4 fragments: 0..2, 2..5, 5..7, 7..10 — exact cover.
+/// assert_eq!(fragment_span(10, 4, 1), (2, 5));
+/// ```
+pub fn fragment_span(n: usize, fragments: usize, idx: usize) -> (usize, usize) {
+    shard_span(n, fragments, idx)
+}
+
+/// Two-stage fragment pipeline: `produce(f)` emits fragment `f`'s payload
+/// on a worker thread while `consume(f, payload)` drains completed
+/// fragments on the calling thread — so fragment `f+1`'s all-reduce +
+/// outer step runs concurrently with the assembly/broadcast of fragment
+/// `f` (the executed analog of Streaming-DiLoCo's overlapped schedule,
+/// DESIGN.md §8).
+///
+/// Determinism is structural: `produce` runs fragments strictly in order
+/// on one thread, `consume` receives them strictly in send order on
+/// another, and the two stages touch disjoint data by contract — so the
+/// pipeline cannot change a bit relative to the serial
+/// `for f { consume(f, produce(f)) }` loop, which is exactly what runs
+/// when `PIER_THREADS=1` forces the serial schedule (or with ≤1 fragment).
+/// The channel is bounded (capacity 1), giving real backpressure: at most
+/// one fragment is ever staged between the stages.
+pub fn fragment_pipeline<T, P, C>(fragments: usize, mut produce: P, mut consume: C)
+where
+    T: Send,
+    P: FnMut(usize) -> T + Send,
+    C: FnMut(usize, T),
+{
+    if fragments <= 1 || crate::util::par::max_threads() <= 1 {
+        for f in 0..fragments {
+            let payload = produce(f);
+            consume(f, payload);
+        }
+        return;
+    }
+    let (tx, rx) = std::sync::mpsc::sync_channel::<(usize, T)>(1);
+    std::thread::scope(|scope| {
+        scope.spawn(move || {
+            for f in 0..fragments {
+                let payload = produce(f);
+                if tx.send((f, payload)).is_err() {
+                    break; // receiver gone: a consume panicked; unwind too
+                }
+            }
+        });
+        for (f, payload) in rx {
+            consume(f, payload);
+        }
+    });
 }
 
 /// Executed in-process TP reduce-scatter: every rank `r` ends up owning
@@ -422,6 +549,109 @@ mod tests {
         all_reduce_mean_into(&[&a, &b], &mut mean);
         assert!(sum.iter().all(|&x| x == 3.0));
         assert!(mean.iter().all(|&x| x == 1.5));
+    }
+
+    #[test]
+    fn fragment_reduce_matches_full_reduce_slice_bitwise() {
+        let n = 1003;
+        let mut state = 0x1234_5678_9abc_def0u64;
+        let mut next = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((state >> 33) as f32 / (1u64 << 31) as f32) - 0.5
+        };
+        let groups: Vec<Vec<f32>> = (0..3).map(|_| (0..n).map(|_| next()).collect()).collect();
+        let refs: Vec<&[f32]> = groups.iter().map(|g| g.as_slice()).collect();
+        let full = all_reduce_mean(&refs);
+        for fragments in [1usize, 2, 4, 7] {
+            for idx in 0..fragments {
+                let (lo, hi) = fragment_span(n, fragments, idx);
+                let mut frag = vec![0.0f32; hi - lo];
+                all_reduce_mean_fragment_into(&refs, lo, hi, &mut frag);
+                let fb: Vec<u32> = frag.iter().map(|x| x.to_bits()).collect();
+                let sb: Vec<u32> = full[lo..hi].iter().map(|x| x.to_bits()).collect();
+                assert_eq!(fb, sb, "fragments={fragments} idx={idx}");
+            }
+        }
+    }
+
+    #[test]
+    fn fragment_span_is_the_shard_span_partition() {
+        for (n, m) in [(10usize, 4usize), (97, 3), (8, 8), (5, 1)] {
+            for i in 0..m {
+                assert_eq!(fragment_span(n, m, i), shard_span(n, m, i));
+            }
+        }
+    }
+
+    #[test]
+    fn outer_fragment_accounting_splits_overlapped_and_exposed() {
+        let g = vec![1.0f32; 10];
+        let refs = [g.as_slice()];
+        let mut stats = CommStats::default();
+        let fragments = 3;
+        for idx in 0..fragments {
+            let (lo, hi) = fragment_span(10, fragments, idx);
+            let mut out = vec![0.0f32; hi - lo];
+            outer_all_reduce_fragment_into(&refs, lo, hi, &mut out, idx + 1 < fragments,
+                                           &mut stats);
+        }
+        assert_eq!(stats.outer_allreduce_calls, 3);
+        assert_eq!(stats.outer_allreduce_bytes, 40.0);
+        // last fragment (10/3 → sizes 3/3/4, final span 6..10) is exposed
+        assert_eq!(stats.outer_exposed_bytes, 16.0);
+        assert_eq!(stats.outer_overlapped_bytes, 24.0);
+        assert_eq!(stats.outer_overlapped_bytes + stats.outer_exposed_bytes,
+                   stats.outer_allreduce_bytes);
+    }
+
+    #[test]
+    fn blocking_outer_reduce_is_fully_exposed() {
+        let a = vec![1.0f32; 8];
+        let mut out = vec![0.0f32; 8];
+        let mut stats = CommStats::default();
+        outer_all_reduce_into(&[&a], &mut out, &mut stats);
+        assert_eq!(stats.outer_exposed_bytes, stats.outer_allreduce_bytes);
+        assert_eq!(stats.outer_overlapped_bytes, 0.0);
+    }
+
+    #[test]
+    fn fragment_pipeline_consumes_in_order_with_matching_payloads() {
+        for fragments in [0usize, 1, 2, 5, 16] {
+            let mut seen = Vec::new();
+            fragment_pipeline(
+                fragments,
+                |f| f * 10,
+                |f, payload| {
+                    assert_eq!(payload, f * 10);
+                    seen.push(f);
+                },
+            );
+            let expect: Vec<usize> = (0..fragments).collect();
+            assert_eq!(seen, expect, "fragments={fragments}");
+        }
+    }
+
+    #[test]
+    fn fragment_pipeline_stages_see_disjoint_halves() {
+        // Producer reads the input, consumer writes the output — the
+        // trainer's shape. The assembled output must be the identity map
+        // regardless of the schedule.
+        let n = 40;
+        let fragments = 5;
+        let input: Vec<u64> = (0..n as u64).collect();
+        let mut output = vec![0u64; n];
+        let out = &mut output;
+        fragment_pipeline(
+            fragments,
+            |f| {
+                let (lo, hi) = fragment_span(n, fragments, f);
+                (lo, input[lo..hi].to_vec())
+            },
+            |_, (lo, frag): (usize, Vec<u64>)| {
+                out[lo..lo + frag.len()].copy_from_slice(&frag);
+            },
+        );
+        assert!(output.iter().enumerate().all(|(i, &x)| x == i as u64));
     }
 
     #[test]

@@ -6,8 +6,10 @@
 //!   momentum decay, outer-LR schedule; DiLoCo baseline behaviour).
 //! * [`group`] — worker groups: model replica + data shard + inner state.
 //! * [`collective`] — deterministic in-process collectives with logical
-//!   volume accounting (intra-node TP vs intra-group vs global scope),
-//!   chunk-parallel reductions, and the DP×TP span sharding (DESIGN.md §4).
+//!   volume accounting (intra-node TP vs intra-group vs global scope, plus
+//!   the streaming sync's overlapped-vs-exposed split), chunk-parallel
+//!   reductions, the DP×TP span sharding (DESIGN.md §4), and the fragment
+//!   partition + pipeline driver of the streaming outer sync (§8).
 //! * [`parallel`] — the scoped thread pool that steps all K groups
 //!   concurrently between outer syncs (deterministic by construction).
 //! * [`offload`] — §V's CPU offload of outer state, with byte/time
@@ -22,8 +24,9 @@ pub mod parallel;
 pub mod state;
 pub mod trainer;
 
-pub use collective::{all_gather, all_reduce_mean, all_reduce_mean_into, all_reduce_sum_into,
-                     broadcast, note_tp_step, shard_span, tp_all_gather_into,
+pub use collective::{all_gather, all_reduce_mean, all_reduce_mean_fragment_into,
+                     all_reduce_mean_into, all_reduce_sum_into, broadcast, fragment_pipeline,
+                     fragment_span, note_tp_step, shard_span, tp_all_gather_into,
                      tp_reduce_scatter_into, CommStats};
 pub use group::WorkerGroup;
 pub use offload::{OffloadStats, OffloadStore};

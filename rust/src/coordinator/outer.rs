@@ -41,10 +41,30 @@
 //! offloads again. Offload transfers (and their host-side copies) happen
 //! only when the switch is on; with offload disabled the state is
 //! device-resident and no copies are modeled.
+//!
+//! # Streaming overlapped sync (DESIGN.md §8)
+//!
+//! [`OuterController::sync_streaming`] performs the *same* full outer step
+//! as [`OuterController::sync_in_place`], split into
+//! `cfg.stream_fragments` balanced [`fragment_span`] fragments processed
+//! in order — each fragment's all-reduce, delta, and Nesterov update
+//! ([`OuterOpt::step_fragment_into`] over that fragment's momentum view)
+//! touch a disjoint contiguous range of every buffer, so the final
+//! committed/restart/momentum/anchor state is **bit-identical** to the
+//! blocking sync for any fragment count. Only the schedule changes: all
+//! fragments but the last are recorded as overlapped with the following
+//! round's inner compute (the Streaming-DiLoCo timing the cost models
+//! price via `netsim::des_outer_sync_streaming`), and the trainer drives
+//! the per-fragment steps through `collective::fragment_pipeline` so
+//! fragment `f+1`'s reduce overlaps fragment `f`'s broadcast assembly.
+//! Fragments are defined on the unsharded flat vector, like the rotating
+//! partial sync, and the two extensions share the one
+//! [`fragment_span`] partition helper.
 
 use crate::config::{OptMode, TrainConfig};
-use crate::coordinator::collective::{outer_all_reduce, outer_all_reduce_into, shard_span,
-                                     CommStats};
+use crate::coordinator::collective::{fragment_pipeline, fragment_span,
+                                     outer_all_reduce_fragment_into, outer_all_reduce_into,
+                                     shard_span, CommStats};
 use crate::coordinator::offload::OffloadStore;
 use crate::optim::nesterov::OuterOpt;
 use crate::optim::schedule;
@@ -245,26 +265,174 @@ impl OuterController {
         let n = self.anchor.len();
         let cycle = self.partial_cycle_len();
         let idx = self.frag_cursor % cycle;
-        // Same balanced partition as the TP shard layout — single-sourced.
-        let (lo, hi) = shard_span(n, cycle, idx);
+        // The shared fragment partition (also the streaming sync's) —
+        // single-sourced in `collective::fragment_span`.
+        let (lo, hi) = fragment_span(n, cycle, idx);
         self.frag_cursor = (idx + 1) % cycle;
 
         self.load_offloaded();
-
-        let slices: Vec<&[f32]> = group_params.iter().map(|g| &g[lo..hi]).collect();
-        let mean = outer_all_reduce(&slices, stats);
-        let delta: Vec<f32> =
-            mean.iter().zip(&self.anchor[lo..hi]).map(|(&m, &a)| m - a).collect();
-        let (mu, lr) = self.schedule_at(step);
-        let base: Vec<f32> = self.anchor[lo..hi].to_vec();
-        let frag_step = self.opt.step_range(lo, &base, &delta, mu, lr);
-        self.anchor[lo..hi].copy_from_slice(&frag_step.next_start);
-        self.committed[lo..hi].copy_from_slice(&frag_step.committed);
+        // A partial sync is a barrier like the full sync: its fragment's
+        // bytes are exposed (the rotation relaxes volume, not timing).
+        let (mu, lr) = self.fragment_outer_step(step, lo, hi, group_params, false, stats);
         self.last_mu = mu;
         self.last_lr = lr;
         self.outer_steps += 1;
         self.refresh_offload();
-        PartialSync { lo, hi, fragment: frag_step.next_start }
+        PartialSync { lo, hi, fragment: self.restart[lo..hi].to_vec() }
+    }
+
+    /// The shared fragment core of the partial and streaming syncs:
+    /// all-reduce `[lo, hi)` across the groups into the controller's
+    /// scratch, apply the fragment Nesterov step over that range's
+    /// momentum/committed/restart views, and move the anchor fragment —
+    /// all in place, zero allocations. Single-sourced so the two
+    /// extensions cannot drift. Returns the scheduled `(μ, lr)`;
+    /// telemetry, counters, and offload bracketing stay with the callers
+    /// (per event for partial, per last-fragment for streaming).
+    fn fragment_outer_step(
+        &mut self,
+        step: usize,
+        lo: usize,
+        hi: usize,
+        group_params: &[&[f32]],
+        overlapped: bool,
+        stats: &mut CommStats,
+    ) -> (f64, f64) {
+        outer_all_reduce_fragment_into(group_params, lo, hi, &mut self.mean[lo..hi],
+                                       overlapped, stats);
+        for ((d, &m), &a) in self.delta[lo..hi]
+            .iter_mut()
+            .zip(&self.mean[lo..hi])
+            .zip(&self.anchor[lo..hi])
+        {
+            *d = m - a;
+        }
+        let (mu, lr) = self.schedule_at(step);
+        self.opt.step_fragment_into(
+            lo,
+            &self.anchor[lo..hi],
+            &self.delta[lo..hi],
+            mu,
+            lr,
+            &mut self.committed[lo..hi],
+            &mut self.restart[lo..hi],
+        );
+        // Sibling fragments read only their own (untouched) anchor
+        // ranges, so moving the anchor fragment-wise matches the blocking
+        // sync's single end-of-step copy bit for bit.
+        self.anchor[lo..hi].copy_from_slice(&self.restart[lo..hi]);
+        (mu, lr)
+    }
+
+    /// Number of fragments a streaming sync of this controller runs:
+    /// `cfg.stream_fragments` clamped to `[1, n]` (`0`, the blocking
+    /// config, still maps to one fragment so callers can treat the
+    /// streaming path uniformly).
+    pub fn stream_fragment_count(&self) -> usize {
+        self.cfg.stream_fragments.clamp(1, self.anchor.len().max(1))
+    }
+
+    /// One fragment of a streaming outer step (DESIGN.md §8): all-reduce
+    /// fragment `frag` of the balanced `n_frags`-way [`fragment_span`]
+    /// partition across the groups, apply the Nesterov update to that
+    /// fragment's momentum/anchor views, and make
+    /// `self.last_restart()[lo..hi)` the fragment's restart point.
+    /// Returns the fragment's `(lo, hi)` range.
+    ///
+    /// Fragments must be driven in order, `frag ∈ [0, n_frags)`, all with
+    /// the same `step` — fragment 0 reloads offloaded state, the last
+    /// fragment commits telemetry and re-offloads, exactly once per sync
+    /// event. All fragments but the last are recorded as overlapped in the
+    /// [`CommStats`] outer scope. Like the rotating partial sync, a
+    /// fragment's all-reduce is recorded as one outer-scope call on the
+    /// unsharded flat vector regardless of `cfg.tp` — the §IV-C per-shard
+    /// split changes which rings carry an event, not its volume, and the
+    /// streaming cost models take `tp` separately.
+    pub fn sync_streaming_fragment(
+        &mut self,
+        step: usize,
+        frag: usize,
+        n_frags: usize,
+        group_params: &[&[f32]],
+        stats: &mut CommStats,
+    ) -> (usize, usize) {
+        assert!(n_frags >= 1 && frag < n_frags, "fragment {frag} of {n_frags}");
+        let n = self.anchor.len();
+        if frag == 0 {
+            self.load_offloaded();
+        }
+        let (lo, hi) = fragment_span(n, n_frags, frag);
+        let (mu, lr) =
+            self.fragment_outer_step(step, lo, hi, group_params, frag + 1 < n_frags, stats);
+        if frag + 1 == n_frags {
+            self.last_mu = mu;
+            self.last_lr = lr;
+            self.outer_steps += 1;
+            self.refresh_offload();
+        }
+        (lo, hi)
+    }
+
+    /// Streaming outer step (DESIGN.md §8): the full Alg. 2 sync as an
+    /// in-order pass over the [`Self::stream_fragment_count`] fragments —
+    /// bit-identical final state to [`Self::sync_in_place`] for any
+    /// fragment count, with the overlapped/exposed byte split recorded in
+    /// `stats`. Returns the restart point as a borrow of the controller's
+    /// buffer, like `sync_in_place`. (The trainer overlaps the fragments
+    /// through `collective::fragment_pipeline` instead of calling this
+    /// barrier form directly.)
+    pub fn sync_streaming(
+        &mut self,
+        step: usize,
+        group_params: &[&[f32]],
+        stats: &mut CommStats,
+    ) -> &[f32] {
+        let n_frags = self.stream_fragment_count();
+        for f in 0..n_frags {
+            self.sync_streaming_fragment(step, f, n_frags, group_params, stats);
+        }
+        &self.restart
+    }
+
+    /// The restart-point view the last sync produced (fragment-wise valid
+    /// during a streaming sync: range `[lo, hi)` is current as soon as
+    /// [`Self::sync_streaming_fragment`] has returned it).
+    pub fn last_restart(&self) -> &[f32] {
+        &self.restart
+    }
+
+    /// The **pipelined** streaming sync (DESIGN.md §8): drive the
+    /// fragments through [`fragment_pipeline`] — fragment `f+1`'s
+    /// all-reduce + Nesterov step (producer thread) overlaps the assembly
+    /// of fragment `f`'s restart payload into the caller's `staging`
+    /// buffer (consumer) — leaving `staging` equal, bit for bit, to
+    /// [`Self::sync_streaming`]'s restart point. This is the one wiring
+    /// of the overlapped hot path: the trainer installs `staging` into
+    /// the groups, and the CI-gated `outer_sync_streaming4_pipelined`
+    /// bench measures exactly this method, so the gate cannot drift from
+    /// the code it protects. Serializes (with the same results) under
+    /// `PIER_THREADS=1`.
+    pub fn sync_streaming_pipelined(
+        &mut self,
+        step: usize,
+        group_params: &[&[f32]],
+        stats: &mut CommStats,
+        staging: &mut [f32],
+    ) {
+        assert_eq!(staging.len(), self.anchor.len(), "staging/model size mismatch");
+        let n_frags = self.stream_fragment_count();
+        let ctl = self;
+        fragment_pipeline(
+            n_frags,
+            |f| {
+                let (lo, hi) =
+                    ctl.sync_streaming_fragment(step, f, n_frags, group_params, stats);
+                (lo, ctl.last_restart()[lo..hi].to_vec())
+            },
+            |_, (lo, frag): (usize, Vec<f32>)| {
+                staging[lo..lo + frag.len()].copy_from_slice(&frag);
+            },
+        );
     }
 
     fn schedule_at(&self, step: usize) -> (f64, f64) {
@@ -507,6 +675,123 @@ mod tests {
         assert_eq!(s4.outer_allreduce_calls, 4);
         assert_eq!(s1.outer_allreduce_bytes, s4.outer_allreduce_bytes);
         assert_eq!(s1.outer_allreduce_bytes, 4.0 * n as f64);
+    }
+
+    #[test]
+    fn sync_streaming_matches_blocking_bitwise_for_any_fragment_count() {
+        // The §8 determinism contract at the controller layer: same final
+        // restart/committed bits as sync_in_place for F ∈ {1, 2, 4, 7},
+        // across repeated syncs (anchor and momentum evolve identically).
+        let n = 37;
+        let init: Vec<f32> = (0..n).map(|i| (i as f32 * 0.19).sin()).collect();
+        let g1: Vec<f32> = (0..n).map(|i| (i as f32 * 0.41).cos()).collect();
+        let g2: Vec<f32> = (0..n).map(|i| (i as f32 * 0.61).sin() * 1.3).collect();
+        for frags in [0usize, 1, 2, 4, 7] {
+            let mut blocking = OuterController::new(&cfg(OptMode::DiLoCo), &init);
+            let mut c = cfg(OptMode::DiLoCo);
+            c.stream_fragments = frags;
+            let mut streaming = OuterController::new(&c, &init);
+            let mut sb = CommStats::default();
+            let mut ss = CommStats::default();
+            for step in [100usize, 200] {
+                let rb: Vec<u32> = blocking
+                    .sync_in_place(step, &[&g1, &g2], &mut sb)
+                    .iter()
+                    .map(|x| x.to_bits())
+                    .collect();
+                let rs: Vec<u32> = streaming
+                    .sync_streaming(step, &[&g1, &g2], &mut ss)
+                    .iter()
+                    .map(|x| x.to_bits())
+                    .collect();
+                assert_eq!(rb, rs, "frags={frags} step={step}: restart diverged");
+            }
+            let cb: Vec<u32> =
+                blocking.last_committed().iter().map(|x| x.to_bits()).collect();
+            let cs: Vec<u32> =
+                streaming.last_committed().iter().map(|x| x.to_bits()).collect();
+            assert_eq!(cb, cs, "frags={frags}: committed diverged");
+            assert_eq!(blocking.outer_steps, streaming.outer_steps);
+            assert_eq!(blocking.last_mu, streaming.last_mu);
+            // Same traffic, re-timed: totals match, the split differs.
+            assert_eq!(sb.outer_allreduce_bytes, ss.outer_allreduce_bytes,
+                       "frags={frags}");
+            assert_eq!(ss.outer_overlapped_bytes + ss.outer_exposed_bytes,
+                       ss.outer_allreduce_bytes);
+            assert_eq!(sb.outer_overlapped_bytes, 0.0);
+            if frags <= 1 {
+                assert_eq!(ss.outer_overlapped_bytes, 0.0, "frags={frags}");
+            } else {
+                assert!(ss.outer_overlapped_bytes > 0.0, "frags={frags}");
+            }
+        }
+    }
+
+    #[test]
+    fn sync_streaming_matches_tp_sharded_blocking_bitwise() {
+        // Streaming fragments are defined on the unsharded flat vector;
+        // the result must still match the tp-sharded blocking sync (which
+        // itself matches tp=1) bit for bit.
+        let n = 41;
+        let init: Vec<f32> = (0..n).map(|i| (i as f32 * 0.23).sin()).collect();
+        let g: Vec<f32> = (0..n).map(|i| (i as f32 * 0.47).cos() * 0.8).collect();
+        let mut c_tp = cfg(OptMode::DiLoCo);
+        c_tp.tp = 4;
+        let mut blocking = OuterController::new(&c_tp, &init);
+        let mut c_st = cfg(OptMode::DiLoCo);
+        c_st.stream_fragments = 3;
+        let mut streaming = OuterController::new(&c_st, &init);
+        let mut sb = CommStats::default();
+        let mut ss = CommStats::default();
+        let rb: Vec<u32> =
+            blocking.sync_in_place(150, &[&g], &mut sb).iter().map(|x| x.to_bits()).collect();
+        let rs: Vec<u32> =
+            streaming.sync_streaming(150, &[&g], &mut ss).iter().map(|x| x.to_bits()).collect();
+        assert_eq!(rb, rs);
+        // call structure differs (tp per-shard vs per-fragment), bytes agree
+        assert_eq!(sb.outer_allreduce_calls, 4);
+        assert_eq!(ss.outer_allreduce_calls, 3);
+        assert_eq!(sb.outer_allreduce_bytes, ss.outer_allreduce_bytes);
+    }
+
+    #[test]
+    fn pipelined_streaming_fills_staging_with_the_restart_point() {
+        // The shared trainer/bench wiring: staging must end up bit-equal
+        // to the barrier form's restart point, with identical stats.
+        let n = 29;
+        let init: Vec<f32> = (0..n).map(|i| (i as f32 * 0.13).sin()).collect();
+        let g1: Vec<f32> = (0..n).map(|i| (i as f32 * 0.37).cos()).collect();
+        let g2: Vec<f32> = (0..n).map(|i| (i as f32 * 0.59).sin() * 0.7).collect();
+        let mut c = cfg(OptMode::DiLoCo);
+        c.stream_fragments = 3;
+        let mut barrier = OuterController::new(&c, &init);
+        let mut pipelined = OuterController::new(&c, &init);
+        let mut sb = CommStats::default();
+        let mut sp = CommStats::default();
+        let mut staging = vec![0.0f32; n];
+        for step in [100usize, 200] {
+            let rb: Vec<u32> = barrier
+                .sync_streaming(step, &[&g1, &g2], &mut sb)
+                .iter()
+                .map(|x| x.to_bits())
+                .collect();
+            pipelined.sync_streaming_pipelined(step, &[&g1, &g2], &mut sp, &mut staging);
+            let rp: Vec<u32> = staging.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(rb, rp, "step={step}");
+        }
+        assert_eq!(sb, sp);
+    }
+
+    #[test]
+    fn stream_fragment_count_clamps() {
+        let init = vec![0.0f32; 6];
+        let mut c = cfg(OptMode::Pier);
+        c.stream_fragments = 0;
+        assert_eq!(OuterController::new(&c, &init).stream_fragment_count(), 1);
+        c.stream_fragments = 4;
+        assert_eq!(OuterController::new(&c, &init).stream_fragment_count(), 4);
+        c.stream_fragments = 100; // more fragments than parameters
+        assert_eq!(OuterController::new(&c, &init).stream_fragment_count(), 6);
     }
 
     #[test]

@@ -48,6 +48,20 @@
 //! and `rust/tests/dp_tp_crossval.rs` cross-validates the recorded
 //! outer-sync volumes against the DES makespan).
 //!
+//! **Streaming overlapped sync** (`cfg.stream_fragments ≥ 1`, DESIGN.md
+//! §8): the full outer sync executes as a pipeline over the balanced
+//! `fragment_span` partition — fragment `f+1`'s all-reduce + Nesterov step
+//! (on the producer thread) overlaps fragment `f`'s restart-broadcast
+//! assembly (on the consumer thread), and the cost models hide every
+//! fragment but the gating last one under the following round's inner
+//! compute. The executed math is bit-identical to the blocking sync for
+//! any fragment count (fragments are disjoint ranges of every buffer;
+//! `rust/tests/streaming_parity.rs` pins it); what changes is the recorded
+//! schedule — the `CommStats` overlapped/exposed byte split and the
+//! per-event fragment count in `RunLog::outer_events`, which
+//! `netsim::des_outer_sync_streaming` and
+//! `simulator::cost_outer_schedule_streaming` price.
+//!
 //! Schedule indexing: all outer-schedule queries (Alg. 1 warmup, Alg. 2
 //! μ/lr) use the number of **completed** inner steps, i.e. `t + 1` after
 //! performing 0-based step `t` — see the `coordinator::outer` module docs
@@ -74,6 +88,7 @@ use crate::data::{validation_batches, Pipeline};
 use crate::metrics::{CommStatsSnapshot, IterRecord, OuterEvent, RunLog};
 use crate::optim::schedule;
 use crate::runtime::{scalar_f32, scalar_i32, to_scalar_f32, FlatPool, Manifest, ModelExes, Runtime};
+use crate::util::par::max_threads;
 use crate::util::Timer;
 
 /// How many fixed validation batches each eval uses.
@@ -92,6 +107,11 @@ pub struct Trainer {
     pool: ParallelExecutor,
     /// Reusable per-group flat buffers for the outer-sync boundary.
     flats: FlatPool,
+    /// Restart-point staging for the streaming sync's fragment pipeline
+    /// (DESIGN.md §8): the consumer stage assembles fragments here while
+    /// the producer reduces the next one, keeping the [`FlatPool`] buffers
+    /// immutable all-reduce inputs throughout. Empty until first use.
+    stream_restart: Vec<f32>,
 }
 
 /// Everything a single group step needs besides the group itself. Shared
@@ -150,6 +170,7 @@ impl Trainer {
             log,
             pool: ParallelExecutor::new(0),
             flats: FlatPool::new(),
+            stream_restart: Vec::new(),
         })
     }
 
@@ -363,6 +384,7 @@ impl Trainer {
 
         let refs: Vec<&[f32]> = self.flats.bufs().iter().map(|b| b.as_slice()).collect();
         let outer = self.outer.as_mut().expect("outer sync without outer optimizer");
+        let mut event_fragments = 1;
         if self.cfg.sync_fraction < 1.0 {
             // 2a. streaming partial sync: overwrite only [lo, hi) per group
             let part = outer.sync_partial(step, &refs, &mut self.stats);
@@ -374,9 +396,32 @@ impl Trainer {
             self.stats.broadcast_calls += 1;
             self.stats.broadcast_bytes += 4.0 * (part.fragment.len() * k) as f64;
         } else {
-            // 2b. full sync: Nesterov in place, restart point broadcast to
-            // every group straight from the controller's buffer
-            let next = outer.sync_in_place(step, &refs, &mut self.stats);
+            // 2b. full sync — three schedules over the same math, one
+            // shared install. Blocking (`stream_fragments = 0`) keeps the
+            // §IV-C per-shard call recording under DP×TP; streaming
+            // (DESIGN.md §8) runs the fragment schedule — pipelined when
+            // it can overlap (fragment f+1's all-reduce + Nesterov step
+            // concurrent with the assembly of fragment f's broadcast
+            // payload into the staging buffer; the FlatPool buffers stay
+            // immutable inputs), or the barrier form when one fragment /
+            // PIER_THREADS=1 makes the decoupling copies pure waste. All
+            // paths are bit-identical — only the recorded schedule
+            // differs.
+            let next: &[f32] = if self.cfg.stream_fragments >= 1 {
+                let n_frags = outer.stream_fragment_count();
+                event_fragments = n_frags;
+                if n_frags <= 1 || max_threads() <= 1 {
+                    outer.sync_streaming(step, &refs, &mut self.stats)
+                } else {
+                    self.stream_restart.resize(n, 0.0);
+                    outer.sync_streaming_pipelined(step, &refs, &mut self.stats,
+                                                   &mut self.stream_restart);
+                    &self.stream_restart
+                }
+            } else {
+                outer.sync_in_place(step, &refs, &mut self.stats)
+            };
+            // restart-point broadcast: install per group on the engine pool
             let man = &self.man;
             engine.run(&mut self.groups, |_, g| g.set_params_flat(man, next))?;
             self.stats.broadcast_calls += 1;
@@ -384,10 +429,12 @@ impl Trainer {
         }
         // Record the event for schedule cross-validation: the logical fp32
         // volume this sync actually all-reduced (full model, or the
-        // rotating fragment), costable by the simulator/DES (DESIGN.md §5).
+        // rotating fragment) and its fragment schedule, costable by the
+        // simulator/DES (DESIGN.md §5, §8).
         self.log.outer_events.push(OuterEvent {
             step,
             bytes: self.stats.outer_allreduce_bytes - outer_bytes_before,
+            fragments: event_fragments,
         });
         Ok(())
     }
@@ -533,6 +580,11 @@ fn cfg_validate(cfg: &TrainConfig, man: &Manifest) -> Result<()> {
     ensure!(cfg.iterations > 0, "iterations must be positive");
     ensure!(cfg.sync_interval > 0, "sync_interval must be positive");
     ensure!(cfg.tp > 0, "tp must be positive");
+    ensure!(
+        cfg.stream_fragments == 0 || cfg.sync_fraction >= 1.0,
+        "stream_fragments requires full sync (sync_fraction = 1): the rotating \
+         partial sync is already a fragment schedule (DESIGN.md §8)"
+    );
     if let Err(e) = cfg.parallel().validate() {
         anyhow::bail!("invalid DP×TP layout: {e}");
     }

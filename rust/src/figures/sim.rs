@@ -58,6 +58,7 @@ fn base_setup(
         tp,
         pp: 1,
         sync_fraction: 1.0,
+        stream_fragments: 0,
         groups,
         global_batch: 512,
         sync_interval: h,

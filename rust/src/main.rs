@@ -51,11 +51,12 @@ fn print_usage() {
          usage: pier <command> [options]\n\n\
          commands:\n\
            train     --model nano --mode pier|diloco|adamw --iters N --groups K\n\
-                     --batch B --interval H [--tp T] [--offload] [--csv out.csv]\n\
-                     [--ckpt out.ckpt]\n\
+                     --batch B --interval H [--tp T] [--stream-fragments F]\n\
+                     [--offload] [--csv out.csv] [--ckpt out.ckpt]\n\
            eval      --model nano --ckpt file.ckpt\n\
            simulate  --model gpt2-xl --cluster perlmutter|vista --world N\n\
                      [--tp T] [--groups K] [--interval H] [--mode pier|adamw]\n\
+                     [--stream-fragments F]\n\
            repro     fig1|fig3|fig4|fig5|fig6|fig7|fig8|table2|table3|table4|\n\
                      ablation|calibration|sim-all [--iters N] [--model nano|micro|mini]\n\
            config    [--model name]\n\
@@ -82,6 +83,13 @@ fn summarize(log: &RunLog) {
         log.comm.outer_steps,
         log.comm.broadcast_bytes / 1e6
     );
+    if log.comm.outer_overlapped_bytes > 0.0 {
+        println!(
+            "  comm (outer, streaming): {:.1} MB overlapped, {:.1} MB exposed",
+            log.comm.outer_overlapped_bytes / 1e6,
+            log.comm.outer_exposed_bytes / 1e6
+        );
+    }
     if log.comm.tp_bytes > 0.0 {
         println!("  comm (intra-node TP): {:.1} MB", log.comm.tp_bytes / 1e6);
     }
@@ -98,6 +106,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.global_batch = args.usize_or("batch", cfg.global_batch);
     cfg.sync_interval = args.usize_or("interval", cfg.sync_interval);
     cfg.tp = args.usize_or("tp", cfg.tp);
+    cfg.stream_fragments = args.usize_or("stream-fragments", cfg.stream_fragments);
     cfg.cpu_offload = args.flag("offload");
     cfg.seed = args.u64_or("seed", cfg.seed);
     cfg.eval_interval = args.usize_or("eval-interval", cfg.eval_interval);
@@ -166,6 +175,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         tp: args.usize_or("tp", 1),
         pp: args.usize_or("pp", 1),
         sync_fraction: args.f64_or("sync-fraction", 1.0),
+        stream_fragments: args.usize_or("stream-fragments", 0),
         groups: args.usize_or("groups", world),
         global_batch: args.usize_or("batch", 512),
         sync_interval: args.usize_or("interval", 50),
@@ -185,7 +195,12 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     println!("  inner iter: compute {:.3}s  tp {:.3}s  dp {:.3}s  outer/iter {:.3}s → {:.3}s",
              r.inner_iter.compute, r.inner_iter.tp_comm, r.inner_iter.dp_comm,
              r.inner_iter.outer_amortized, r.inner_iter.total());
-    println!("  outer event: {:.3}s", r.outer_event_secs);
+    if r.outer_overlap_secs > 0.0 {
+        println!("  outer event: {:.3}s exposed ({} fragments, {:.3}s overlapped)",
+                 r.outer_event_secs, s.stream_fragments, r.outer_overlap_secs);
+    } else {
+        println!("  outer event: {:.3}s", r.outer_event_secs);
+    }
     println!("  total ({} iters): {:.0}s = {:.2}h", s.iterations, r.total_secs,
              r.total_secs / 3600.0);
     Ok(())

@@ -30,6 +30,12 @@ pub struct OuterEvent {
     /// Logical fp32 bytes all-reduced by the event (the full model delta,
     /// or the rotating fragment under streaming partial sync).
     pub bytes: f64,
+    /// Fragment schedule of the event: 1 for a blocking sync (and for each
+    /// rotating partial-sync event), the `stream_fragments` pipeline depth
+    /// for a streaming overlapped sync (DESIGN.md §8). Extract the whole
+    /// recorded schedule with [`RunLog::outer_schedule`] and price it
+    /// per event with `simulator::cost_recorded_schedule_streaming`.
+    pub fragments: usize,
 }
 
 /// Full run log for one optimizer arm.
@@ -51,13 +57,21 @@ pub struct RunLog {
 pub struct CommStatsSnapshot {
     pub inner_allreduce_bytes: f64,
     pub outer_allreduce_bytes: f64,
+    /// Outer bytes hidden under the next round's inner compute by the
+    /// streaming sync schedule (DESIGN.md §8); 0 for blocking runs.
+    pub outer_overlapped_bytes: f64,
+    /// Outer bytes exposed at the sync barrier. Invariant:
+    /// `outer_overlapped_bytes + outer_exposed_bytes ==
+    /// outer_allreduce_bytes`.
+    pub outer_exposed_bytes: f64,
     pub broadcast_bytes: f64,
     /// Intra-node tensor-parallel traffic (all-gather + reduce-scatter).
     pub tp_bytes: f64,
     /// Outer synchronization events. `From<&CommStats>` seeds this with
     /// the all-reduce call count (equal under pure DP); the trainer
     /// overwrites it with the event count, which under DP×TP is `calls/tp`
-    /// (each event executes `tp` per-shard all-reduces).
+    /// (each event executes `tp` per-shard all-reduces) and under the
+    /// streaming schedule `calls/stream_fragments`.
     pub outer_steps: u64,
 }
 
@@ -66,6 +80,8 @@ impl From<&CommStats> for CommStatsSnapshot {
         CommStatsSnapshot {
             inner_allreduce_bytes: s.inner_allreduce_bytes,
             outer_allreduce_bytes: s.outer_allreduce_bytes,
+            outer_overlapped_bytes: s.outer_overlapped_bytes,
+            outer_exposed_bytes: s.outer_exposed_bytes,
             broadcast_bytes: s.broadcast_bytes,
             tp_bytes: s.intra_node_bytes(),
             outer_steps: s.outer_allreduce_calls,
@@ -76,6 +92,14 @@ impl From<&CommStats> for CommStatsSnapshot {
 impl RunLog {
     pub fn final_val_loss(&self) -> Option<f64> {
         self.val.last().map(|&(_, l)| l)
+    }
+
+    /// The recorded outer-sync schedule as `(volume, fragments)` pairs —
+    /// the input shape of the overlap-aware schedule costing
+    /// (`simulator::cost_recorded_schedule_streaming`), preserving each
+    /// event's own fragment count.
+    pub fn outer_schedule(&self) -> Vec<(f64, usize)> {
+        self.outer_events.iter().map(|e| (e.bytes, e.fragments)).collect()
     }
 
     /// Largest validation-loss increase over the previous eval point in the
@@ -178,6 +202,19 @@ mod tests {
     fn switch_spike_none_for_adamw() {
         let log = RunLog { switch_step: 0, ..Default::default() };
         assert!(log.switch_spike(100).is_none());
+    }
+
+    #[test]
+    fn snapshot_carries_the_overlap_scope() {
+        let mut s = CommStats::default();
+        s.note_outer_allreduce(30.0, true);
+        s.note_outer_allreduce(10.0, false);
+        let snap = CommStatsSnapshot::from(&s);
+        assert_eq!(snap.outer_allreduce_bytes, 40.0);
+        assert_eq!(snap.outer_overlapped_bytes, 30.0);
+        assert_eq!(snap.outer_exposed_bytes, 10.0);
+        assert_eq!(snap.outer_overlapped_bytes + snap.outer_exposed_bytes,
+                   snap.outer_allreduce_bytes);
     }
 
     #[test]

@@ -47,6 +47,104 @@ pub fn des_outer_schedule(dp: usize, tp: usize, volumes: &[f64], cluster: &Clust
     volumes.iter().map(|&v| des_outer_sync(dp, tp, v, cluster)).sum()
 }
 
+/// Cost decomposition of one **streaming** outer sync (DESIGN.md §8).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StreamingOuterCost {
+    /// Total network time of all fragment all-reduces (serialized on the
+    /// shared injection link, like the executed in-order pipeline).
+    pub comm_secs: f64,
+    /// Comm time hidden under the following round's inner compute: every
+    /// fragment but the gating last one, capped by the compute window.
+    pub overlapped_secs: f64,
+    /// The makespan the run is actually charged:
+    /// `comm_secs − overlapped_secs`.
+    pub exposed_secs: f64,
+}
+
+/// THE streaming overlap-cost rule (DESIGN.md §8), single-sourced across
+/// every model that prices a streaming sync — the DES
+/// ([`des_outer_sync_streaming`]), the closed-form schedule costing
+/// (`simulator::run::cost_outer_schedule_streaming`), and the simulator's
+/// event model (`simulator::run::outer_event_streaming`) all delegate
+/// here, so the semantics (balanced byte partition, which fragment gates,
+/// how the window caps the overlap) cannot drift between them:
+///
+/// * `v_total` splits into `fragments` balanced pieces (the byte-level
+///   shape of `coordinator::collective::fragment_span`), each priced by
+///   the caller's `cost` function and launched back to back on the shared
+///   fabric;
+/// * the next round's inner compute — `overlap_window` seconds of GPU
+///   time — runs concurrently on a different resource (GPUs vs network),
+///   so every fragment's comm except the **last** can hide under the
+///   window: the gating fragment's completion *is* the restart barrier
+///   and its time is always exposed.
+///
+/// Degenerate cases recover the blocking model exactly: `fragments ≤ 1`
+/// or `overlap_window = 0` exposes the full `cost(v_total)`.
+pub fn streaming_overlap_cost(
+    v_total: f64,
+    fragments: usize,
+    overlap_window: f64,
+    cost: impl Fn(f64) -> f64,
+) -> StreamingOuterCost {
+    let f = fragments.max(1);
+    let mut comm = 0.0;
+    let mut last = 0.0;
+    for i in 0..f {
+        let v_i = v_total * (i as f64 + 1.0) / f as f64 - v_total * i as f64 / f as f64;
+        last = cost(v_i);
+        comm += last;
+    }
+    let overlapped = (comm - last).min(overlap_window.max(0.0));
+    StreamingOuterCost { comm_secs: comm, overlapped_secs: overlapped,
+                         exposed_secs: comm - overlapped }
+}
+
+/// DES version of the streaming outer sync: the `v_total`-byte §IV-C sync
+/// under the [`streaming_overlap_cost`] rule with [`des_outer_sync`]
+/// (tp concurrent per-shard rings) pricing each fragment. `dp ≤ 1` is
+/// free. For `fragments > 1` with a positive window the exposed makespan
+/// is strictly below the blocking sync whenever the bandwidth term
+/// dominates (the Fig. 8 regime — pinned in
+/// `rust/tests/dp_tp_crossval.rs`).
+pub fn des_outer_sync_streaming(
+    dp: usize,
+    tp: usize,
+    v_total: f64,
+    fragments: usize,
+    overlap_window: f64,
+    cluster: &ClusterSpec,
+) -> StreamingOuterCost {
+    if dp <= 1 {
+        return StreamingOuterCost::default();
+    }
+    streaming_overlap_cost(v_total, fragments, overlap_window,
+                           |v| des_outer_sync(dp, tp, v, cluster))
+}
+
+/// DES cost of a recorded **streaming** schedule: the summed exposed
+/// makespans of [`des_outer_sync_streaming`] per event. The blocking
+/// [`des_outer_schedule`] is the `fragments ≤ 1` special case.
+/// Cross-validated against the closed-form
+/// `simulator::run::cost_outer_schedule_streaming` in
+/// `rust/tests/dp_tp_crossval.rs`.
+pub fn des_outer_schedule_streaming(
+    dp: usize,
+    tp: usize,
+    volumes: &[f64],
+    fragments: usize,
+    overlap_window: f64,
+    cluster: &ClusterSpec,
+) -> f64 {
+    let tp = tp.max(1);
+    volumes
+        .iter()
+        .map(|&v| {
+            des_outer_sync_streaming(dp, tp, v, fragments, overlap_window, cluster).exposed_secs
+        })
+        .sum()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -72,6 +170,67 @@ mod tests {
         assert_eq!(total, by_hand);
         assert!(total > 0.0);
         assert_eq!(des_outer_schedule(16, 2, &[], &PERLMUTTER), 0.0);
+    }
+
+    #[test]
+    fn streaming_one_fragment_or_no_window_is_the_blocking_sync() {
+        let v = 6.2e9;
+        let blocking = des_outer_sync(32, 2, v, &PERLMUTTER);
+        let one = des_outer_sync_streaming(32, 2, v, 1, 100.0, &PERLMUTTER);
+        assert_eq!(one.comm_secs, blocking);
+        assert_eq!(one.exposed_secs, blocking);
+        assert_eq!(one.overlapped_secs, 0.0);
+        let no_window = des_outer_sync_streaming(32, 2, v, 4, 0.0, &PERLMUTTER);
+        assert_eq!(no_window.overlapped_secs, 0.0);
+        assert_eq!(no_window.exposed_secs, no_window.comm_secs);
+        assert_eq!(des_outer_sync_streaming(1, 2, v, 4, 1.0, &PERLMUTTER),
+                   StreamingOuterCost::default());
+    }
+
+    #[test]
+    fn streaming_conserves_comm_and_hides_all_but_the_gate() {
+        let v = 6.2e9;
+        for frags in [2usize, 4, 8] {
+            let c = des_outer_sync_streaming(32, 4, v, frags, 1e9, &PERLMUTTER);
+            // conservation: exposed + overlapped = total comm
+            assert!((c.exposed_secs + c.overlapped_secs - c.comm_secs).abs() < 1e-12);
+            // fragmenting pays per-fragment latency, never less total comm
+            assert!(c.comm_secs >= des_outer_sync(32, 4, v, &PERLMUTTER) * 0.999);
+            // with an ample window only the gating fragment is exposed:
+            // ≈ comm/frags (balanced partition, bandwidth-dominated)
+            let expect = c.comm_secs / frags as f64;
+            assert!((c.exposed_secs - expect).abs() / expect < 0.05,
+                    "frags={frags}: exposed {} vs ~{expect}", c.exposed_secs);
+        }
+    }
+
+    #[test]
+    fn streaming_exposed_monotone_in_window_and_fragments() {
+        let v = 6.2e9;
+        let e = |frags, window| {
+            des_outer_sync_streaming(32, 4, v, frags, window, &PERLMUTTER).exposed_secs
+        };
+        assert!(e(4, 2.0) <= e(4, 1.0));
+        assert!(e(4, 1e9) <= e(2, 1e9));
+        // streaming with fragments strictly beats blocking once a window
+        // exists (bandwidth-dominated volume)
+        let blocking = des_outer_sync(32, 4, v, &PERLMUTTER);
+        assert!(e(4, 1e9) < blocking);
+        assert!(e(2, 1e9) < blocking);
+    }
+
+    #[test]
+    fn streaming_schedule_sums_events() {
+        let events = [1e9, 2e9];
+        let total = des_outer_schedule_streaming(16, 2, &events, 4, 0.5, &PERLMUTTER);
+        let by_hand: f64 = events
+            .iter()
+            .map(|&v| des_outer_sync_streaming(16, 2, v, 4, 0.5, &PERLMUTTER).exposed_secs)
+            .sum();
+        assert_eq!(total, by_hand);
+        // fragments = 1 degenerates to the blocking schedule cost
+        assert_eq!(des_outer_schedule_streaming(16, 2, &events, 1, 0.5, &PERLMUTTER),
+                   des_outer_schedule(16, 2, &events, &PERLMUTTER));
     }
 
     #[test]

@@ -79,28 +79,8 @@ impl OuterOpt {
         committed: &mut [f32],
         next_start: &mut [f32],
     ) {
-        let n = base.len();
-        assert_eq!(delta.len(), n);
-        assert_eq!(self.momentum.len(), n);
-        assert_eq!(committed.len(), n);
-        assert_eq!(next_start.len(), n);
-        let (muf, lrf) = (mu as f32, lr as f32);
-        let kind = self.kind;
-        let sp = span(n, MIN_SPAN);
-        if sp >= n {
-            step_span(kind, muf, lrf, &mut self.momentum, base, delta, committed, next_start);
-            return;
-        }
-        let spans = self
-            .momentum
-            .chunks_mut(sp)
-            .zip(base.chunks(sp))
-            .zip(delta.chunks(sp))
-            .zip(committed.chunks_mut(sp))
-            .zip(next_start.chunks_mut(sp));
-        join_spans(spans.map(|((((m, b), d), c), nx)| {
-            move || step_span(kind, muf, lrf, m, b, d, c, nx)
-        }));
+        assert_eq!(self.momentum.len(), base.len());
+        self.step_fragment_into(0, base, delta, mu, lr, committed, next_start);
     }
 
     pub fn momentum_norm(&self) -> f64 {
@@ -116,10 +96,59 @@ impl OuterOpt {
         self.momentum.is_empty()
     }
 
-    /// Fragment variant of [`OuterOpt::step`] for streaming partial
-    /// synchronization: operates on momentum[lo..lo+len) with `base`/`delta`
-    /// being the corresponding parameter fragment. Identical math to `step`
-    /// restricted to the range.
+    /// In-place fragment step for the outer-sync extensions (streaming
+    /// overlapped sync, DESIGN.md §8; rotating partial sync): apply the
+    /// outer update to `momentum[lo..lo+len)` with `base`/`delta` being
+    /// the corresponding parameter fragment, writing the committed and
+    /// restart fragments into caller-owned buffers — zero allocations.
+    ///
+    /// The math is `step_span` — the same single-sourced element kernel,
+    /// span-parallelized over the fragment exactly like the full-vector
+    /// step (which is now the `lo = 0`, full-length special case of this
+    /// method) — so stepping a partition of fragments one by one is
+    /// bit-identical to one full-vector step: the per-fragment momentum
+    /// state views are disjoint slices of the one momentum buffer, and
+    /// span splitting never changes a bit.
+    #[allow(clippy::too_many_arguments)]
+    pub fn step_fragment_into(
+        &mut self,
+        lo: usize,
+        base: &[f32],
+        delta: &[f32],
+        mu: f64,
+        lr: f64,
+        committed: &mut [f32],
+        next_start: &mut [f32],
+    ) {
+        let n = base.len();
+        assert_eq!(delta.len(), n);
+        assert_eq!(committed.len(), n);
+        assert_eq!(next_start.len(), n);
+        assert!(lo + n <= self.momentum.len(), "fragment {lo}..{} of {}", lo + n,
+                self.momentum.len());
+        let (muf, lrf) = (mu as f32, lr as f32);
+        let kind = self.kind;
+        let momentum = &mut self.momentum[lo..lo + n];
+        let sp = span(n, MIN_SPAN);
+        if sp >= n {
+            step_span(kind, muf, lrf, momentum, base, delta, committed, next_start);
+            return;
+        }
+        let spans = momentum
+            .chunks_mut(sp)
+            .zip(base.chunks(sp))
+            .zip(delta.chunks(sp))
+            .zip(committed.chunks_mut(sp))
+            .zip(next_start.chunks_mut(sp));
+        join_spans(spans.map(|((((m, b), d), c), nx)| {
+            move || step_span(kind, muf, lrf, m, b, d, c, nx)
+        }));
+    }
+
+    /// Allocating wrapper over [`OuterOpt::step_fragment_into`] returning
+    /// owned committed/restart fragments (the rotating partial sync's
+    /// result shape). Identical math to [`OuterOpt::step`] restricted to
+    /// the range.
     pub fn step_range(
         &mut self,
         lo: usize,
@@ -128,32 +157,11 @@ impl OuterOpt {
         mu: f64,
         lr: f64,
     ) -> OuterStep {
-        assert_eq!(base.len(), delta.len());
-        assert!(lo + base.len() <= self.momentum.len());
         let n = base.len();
-        let (muf, lrf) = (mu as f32, lr as f32);
         let mut committed = vec![0.0f32; n];
-        match self.kind {
-            NesterovKind::PyTorch => {
-                for i in 0..n {
-                    let m = muf * self.momentum[lo + i] + delta[i];
-                    self.momentum[lo + i] = m;
-                    committed[i] = base[i] + lrf * (muf * m + delta[i]);
-                }
-                OuterStep { next_start: committed.clone(), committed }
-            }
-            NesterovKind::Theoretical => {
-                let mut next = vec![0.0f32; n];
-                for i in 0..n {
-                    let m = muf * self.momentum[lo + i] + delta[i];
-                    self.momentum[lo + i] = m;
-                    let pos = base[i] + lrf * m;
-                    committed[i] = pos;
-                    next[i] = pos + muf * lrf * m;
-                }
-                OuterStep { committed, next_start: next }
-            }
-        }
+        let mut next_start = vec![0.0f32; n];
+        self.step_fragment_into(lo, base, delta, mu, lr, &mut committed, &mut next_start);
+        OuterStep { committed, next_start }
     }
 }
 
@@ -249,6 +257,43 @@ mod tests {
         // untouched regions keep their old momentum
         assert_eq!(frag.momentum[0], 0.1);
         assert_eq!(frag.momentum[3], 0.4);
+    }
+
+    #[test]
+    fn fragment_partition_of_steps_matches_full_step_bitwise() {
+        // Stepping a balanced partition fragment-by-fragment must equal one
+        // full-vector step bit for bit, for both formulations — the
+        // streaming sync's determinism contract at the optimizer layer.
+        let n = 1009; // prime: no fragment count divides it evenly
+        let base: Vec<f32> = (0..n).map(|i| ((i % 89) as f32) * 0.011 - 0.4).collect();
+        let delta: Vec<f32> = (0..n).map(|i| ((i % 37) as f32) * 0.009 - 0.15).collect();
+        for kind in [NesterovKind::PyTorch, NesterovKind::Theoretical] {
+            let mut full = OuterOpt::new(n, kind);
+            for (i, m) in full.momentum.iter_mut().enumerate() {
+                *m = ((i % 17) as f32) * 0.02 - 0.1;
+            }
+            for fragments in [2usize, 4, 7] {
+                let mut frag_opt = full.clone();
+                let s_full = full.clone().step(&base, &delta, 0.9, 0.7);
+                let mut committed = vec![0.0f32; n];
+                let mut next = vec![0.0f32; n];
+                for f in 0..fragments {
+                    let lo = f * n / fragments;
+                    let hi = (f + 1) * n / fragments;
+                    frag_opt.step_fragment_into(lo, &base[lo..hi], &delta[lo..hi], 0.9, 0.7,
+                                                &mut committed[lo..hi], &mut next[lo..hi]);
+                }
+                let eq_bits = |a: &[f32], b: &[f32]| {
+                    a.iter().map(|x| x.to_bits()).eq(b.iter().map(|x| x.to_bits()))
+                };
+                assert!(eq_bits(&s_full.committed, &committed), "{kind:?} F={fragments}");
+                assert!(eq_bits(&s_full.next_start, &next), "{kind:?} F={fragments}");
+                let mut ref_opt = full.clone();
+                ref_opt.step(&base, &delta, 0.9, 0.7);
+                assert!(eq_bits(&ref_opt.momentum, &frag_opt.momentum),
+                        "{kind:?} F={fragments} momentum");
+            }
+        }
     }
 
     #[test]

@@ -11,4 +11,6 @@
 
 pub mod run;
 
-pub use run::{cost_outer_schedule, simulate_run, IterBreakdown, SimResult, SimSetup};
+pub use run::{cost_outer_schedule, cost_outer_schedule_streaming,
+              cost_recorded_schedule_streaming, outer_event_streaming, simulate_run,
+              IterBreakdown, SimResult, SimSetup};

@@ -1,7 +1,8 @@
 //! Per-iteration time models and full-run simulation.
 
 use crate::config::{ModelConfig, OptMode};
-use crate::netsim::{hierarchical_allreduce, outer_sync_time, ring_allreduce};
+use crate::netsim::{hierarchical_allreduce, outer_sync_time, ring_allreduce,
+                    streaming_overlap_cost};
 use crate::perfmodel::flops::compute_time;
 use crate::perfmodel::gpu::ClusterSpec;
 
@@ -44,6 +45,12 @@ pub struct SimSetup {
     pub pp: usize,
     /// Streaming partial synchronization fraction (1.0 = full Pier).
     pub sync_fraction: f64,
+    /// Streaming **overlapped** outer sync (DESIGN.md §8): fragments per
+    /// outer event, pipelined against the next round's inner compute.
+    /// `0`/`1` = blocking sync (today's model); `> 1` hides every
+    /// fragment's all-reduce but the gating last one under the
+    /// `sync_interval`-step compute window.
+    pub stream_fragments: usize,
     /// Local-communication groups (ignored for AdamW).
     pub groups: usize,
     pub global_batch: usize,
@@ -112,8 +119,13 @@ pub struct SimResult {
     pub sync_iter: IterBreakdown,
     /// Inner-loop iteration (equals `sync_iter` for AdamW mode).
     pub inner_iter: IterBreakdown,
-    /// One outer synchronization event (un-amortized).
+    /// One outer synchronization event (un-amortized): the **exposed**
+    /// cost the run is charged — the full blocking event, or the gating
+    /// remainder under the streaming schedule (DESIGN.md §8).
     pub outer_event_secs: f64,
+    /// Per-event outer comm hidden under the next round's inner compute
+    /// (0 for the blocking schedule).
+    pub outer_overlap_secs: f64,
 }
 
 fn tp_comm_time(s: &SimSetup, cluster: &ClusterSpec) -> f64 {
@@ -182,10 +194,12 @@ pub fn inner_iter(s: &SimSetup) -> IterBreakdown {
     }
 }
 
-/// One outer synchronization: global fp32-delta all-reduce across groups
-/// (per-TP-rank concurrent, §IV-C), the Nesterov update sweep, and the
-/// host↔device offload transfers when enabled (§V).
-pub fn outer_event(s: &SimSetup) -> f64 {
+/// One outer sync's cost parts: (burst-contended cluster, delta bytes,
+/// comm seconds, Nesterov-sweep seconds, offload seconds). Shared by the
+/// blocking [`outer_event`] and the streaming [`outer_event_streaming`]
+/// so the two schedules price identical traffic — the volume formula
+/// lives only here.
+fn outer_event_parts(s: &SimSetup) -> (ClusterSpec, f64, f64, f64, f64) {
     let mut cluster = s.scaled_cluster();
     // Bursty, unoverlapped model-state collective → burst contention that
     // worsens with the number of nodes hitting the fabric simultaneously
@@ -198,17 +212,9 @@ pub fn outer_event(s: &SimSetup) -> f64 {
     // so the time-averaged volume is unchanged only if H is also scaled —
     // the peak demand, which is what congests the fabric, drops).
     let delta_bytes = 4.0 * s.model.n_params() as f64 * s.sync_fraction.clamp(0.0, 1.0);
-    // NCCL-style global all-reduce of the fp32 delta: hierarchical when the
-    // replicas are whole-node spans, per-TP/PP-shard concurrent rings under
-    // 2-D/3-D parallelism (§IV-C; PP streams the gather per stage).
-    let shards = s.tp * s.pp;
-    let comm = if shards == 1 {
-        hierarchical_allreduce(s.world, delta_bytes, &cluster)
-    } else {
-        outer_sync_time(s.dp(), shards, delta_bytes, &cluster)
-    };
+    let comm = outer_comm_time(s, delta_bytes, &cluster);
     // Elementwise Nesterov over the shard: ~4 reads + 2 writes of fp32
-    let shard = s.model.n_params() as f64 * s.sync_fraction / shards as f64;
+    let shard = s.model.n_params() as f64 * s.sync_fraction / (s.tp * s.pp) as f64;
     let update = 6.0 * 4.0 * shard / cluster.gpu.mem_bw;
     let offload = if s.cpu_offload {
         // reload anchor+momentum, store back: 4 transfers of 4·N/tp over PCIe
@@ -216,7 +222,62 @@ pub fn outer_event(s: &SimSetup) -> f64 {
     } else {
         0.0
     };
+    (cluster, delta_bytes, comm, update, offload)
+}
+
+/// The outer all-reduce of `bytes` on a (possibly burst-contended)
+/// cluster: NCCL-style global all-reduce of the fp32 delta — hierarchical
+/// when the replicas are whole-node spans, per-TP/PP-shard concurrent
+/// rings under 2-D/3-D parallelism (§IV-C; PP streams the gather per
+/// stage).
+fn outer_comm_time(s: &SimSetup, bytes: f64, cluster: &ClusterSpec) -> f64 {
+    let shards = s.tp * s.pp;
+    if shards == 1 {
+        hierarchical_allreduce(s.world, bytes, cluster)
+    } else {
+        outer_sync_time(s.dp(), shards, bytes, cluster)
+    }
+}
+
+/// One **blocking** outer synchronization: global fp32-delta all-reduce
+/// across groups (per-TP-rank concurrent, §IV-C), the Nesterov update
+/// sweep, and the host↔device offload transfers when enabled (§V).
+pub fn outer_event(s: &SimSetup) -> f64 {
+    let (_, _, comm, update, offload) = outer_event_parts(s);
     comm + update + offload
+}
+
+/// One outer sync under the configured schedule: `(exposed, overlapped)`
+/// seconds per event. With `stream_fragments ≤ 1` this is the blocking
+/// [`outer_event`] and nothing overlaps — as is any `sync_fraction < 1`
+/// config: the rotating partial sync is a barrier schedule and the
+/// trainer rejects combining it with streaming outright (DESIGN.md §8),
+/// so the model prices the combination the same way: no overlap. With
+/// more fragments the full sync streams: the fragment all-reduces
+/// serialize on the fabric while the next round's off-fabric inner work —
+/// an `H × (compute + intra-node TP)` window; the inner DP all-reduce is
+/// excluded because it contends for the same fabric — runs on the GPUs,
+/// so every fragment's comm but the gating last one hides under the
+/// window ([`streaming_overlap_cost`], the rule shared with the netsim
+/// DES).
+/// The Nesterov sweep and offload transfers stay exposed (they contend
+/// for the same GPUs/PCIe the inner steps use).
+pub fn outer_event_streaming(s: &SimSetup) -> (f64, f64) {
+    let (cluster, delta_bytes, comm, update, offload) = outer_event_parts(s);
+    if s.stream_fragments <= 1 || s.sync_fraction < 1.0 {
+        return (comm + update + offload, 0.0);
+    }
+    // The shared §8 overlap rule, with each fragment priced on the same
+    // burst-contended cluster the blocking event uses. The window is the
+    // H-step inner time that runs on *different resources* than the outer
+    // fragments: GPU compute and the intra-node (NVLink) TP collectives.
+    // The inner DP all-reduce is excluded — it rides the same inter-node
+    // fabric the fragments need, so its seconds cannot hide outer comm.
+    let inner = inner_iter(s);
+    let window = s.sync_interval as f64 * (inner.compute + inner.tp_comm);
+    let c = streaming_overlap_cost(delta_bytes, s.stream_fragments, window,
+                                   |v| outer_comm_time(s, v, &cluster));
+    (c.exposed_secs + update + offload, c.overlapped_secs)
 }
 
 /// Simulate the full run (§VI-B1's weighted average: `p·T` lazy-start
@@ -230,10 +291,13 @@ pub fn simulate_run(s: &SimSetup) -> SimResult {
             sync_iter: sync,
             inner_iter: sync,
             outer_event_secs: 0.0,
+            outer_overlap_secs: 0.0,
         },
         OptMode::DiLoCo | OptMode::Pier => {
             let inner = inner_iter(s);
-            let outer = outer_event(s);
+            // Exposed per-event cost under the configured schedule
+            // (blocking, or streaming with overlap — DESIGN.md §8).
+            let (outer, overlap) = outer_event_streaming(s);
             let warm_iters = s.warmup_pct * s.iterations as f64;
             let inner_iters = s.iterations as f64 - warm_iters;
             let n_outer = inner_iters / s.sync_interval as f64;
@@ -246,6 +310,7 @@ pub fn simulate_run(s: &SimSetup) -> SimResult {
                 sync_iter: sync,
                 inner_iter: inner_with_amort,
                 outer_event_secs: outer,
+                outer_overlap_secs: overlap,
             }
         }
     }
@@ -263,6 +328,51 @@ pub fn simulate_run(s: &SimSetup) -> SimResult {
 pub fn cost_outer_schedule(dp: usize, tp: usize, volumes: &[f64], cluster: &ClusterSpec) -> f64 {
     let tp = tp.max(1);
     volumes.iter().map(|&v| outer_sync_time(dp, tp, v, cluster)).sum()
+}
+
+/// Overlap-aware counterpart of [`cost_outer_schedule`] for **streaming**
+/// schedules (DESIGN.md §8): per event, the `fragments` balanced fragment
+/// all-reduces serialize on the fabric while `overlap_window` seconds of
+/// the next round's inner compute run concurrently — every fragment but
+/// the gating last one hides under the window. Returns the summed
+/// *exposed* seconds. `fragments ≤ 1` degenerates to
+/// [`cost_outer_schedule`]. The DES counterpart is
+/// [`crate::netsim::des_outer_schedule_streaming`]; the two must agree
+/// within the fluid model's rounding (`rust/tests/dp_tp_crossval.rs`).
+pub fn cost_outer_schedule_streaming(
+    dp: usize,
+    tp: usize,
+    volumes: &[f64],
+    fragments: usize,
+    overlap_window: f64,
+    cluster: &ClusterSpec,
+) -> f64 {
+    let events: Vec<(f64, usize)> = volumes.iter().map(|&v| (v, fragments)).collect();
+    cost_recorded_schedule_streaming(dp, tp, &events, overlap_window, cluster)
+}
+
+/// Cost a trainer-recorded schedule event by event: one
+/// `(volume, fragments)` pair per executed sync — the shape
+/// `RunLog::outer_schedule()` extracts from `RunLog::outer_events`, so a
+/// run that mixed schedules (blocking events record `fragments = 1`)
+/// is priced exactly as recorded. [`cost_outer_schedule_streaming`] is
+/// the uniform-fragments convenience over this.
+pub fn cost_recorded_schedule_streaming(
+    dp: usize,
+    tp: usize,
+    events: &[(f64, usize)],
+    overlap_window: f64,
+    cluster: &ClusterSpec,
+) -> f64 {
+    let tp = tp.max(1);
+    events
+        .iter()
+        .map(|&(v, fragments)| {
+            streaming_overlap_cost(v, fragments, overlap_window,
+                                   |vi| outer_sync_time(dp, tp, vi, cluster))
+            .exposed_secs
+        })
+        .sum()
 }
 
 /// Convenience: AdamW-vs-Pier pair at the same scale.
@@ -298,6 +408,7 @@ mod tests {
             tp: 1,
             pp: 1,
             sync_fraction: 1.0,
+            stream_fragments: 0,
             groups: world, // one GPU per group (Fig 7 regime)
             global_batch: 512,
             sync_interval: 50,
@@ -389,6 +500,87 @@ mod tests {
         let oh = outer_event(&half);
         assert!(oh < 0.6 * of, "half fragment must ~halve the event: {oh} vs {of}");
         assert!(simulate_run(&half).total_secs < simulate_run(&full).total_secs);
+    }
+
+    #[test]
+    fn streaming_fragments_cut_the_exposed_outer_event() {
+        let blocking = setup(64, OptMode::Pier);
+        let mut streaming = setup(64, OptMode::Pier);
+        streaming.stream_fragments = 4;
+        let (eb, ob) = outer_event_streaming(&blocking);
+        let (es, os) = outer_event_streaming(&streaming);
+        assert_eq!(eb, outer_event(&blocking), "blocking path unchanged");
+        assert_eq!(ob, 0.0);
+        assert!(es < eb, "streaming must cut the exposed event: {es} vs {eb}");
+        assert!(os > 0.0);
+        // conservation at the comm layer: exposed comm + overlapped comm =
+        // per-fragment comm total ≥ the blocking comm (latency per frag),
+        // so exposed + overlapped ≥ blocking event.
+        assert!(es + os >= eb * 0.999);
+        let rb = simulate_run(&blocking);
+        let rs = simulate_run(&streaming);
+        assert!(rs.total_secs < rb.total_secs);
+        assert_eq!(rb.outer_overlap_secs, 0.0);
+        assert!(rs.outer_overlap_secs > 0.0);
+        // inner-loop math is untouched — only the sync schedule moved
+        assert_eq!(rs.inner_iter.compute, rb.inner_iter.compute);
+        assert_eq!(rs.sync_iter.total(), rb.sync_iter.total());
+    }
+
+    #[test]
+    fn streaming_composes_with_offload() {
+        // The Nesterov sweep and PCIe transfers stay exposed; only comm
+        // overlaps. With offload on, streaming still helps but the floor
+        // is higher.
+        let mut s = setup(64, OptMode::Pier);
+        s.cpu_offload = true;
+        let mut st = s.clone();
+        st.stream_fragments = 8;
+        let (eb, _) = outer_event_streaming(&s);
+        let (es, os) = outer_event_streaming(&st);
+        assert!(es < eb);
+        // exposed keeps at least the PCIe transfers: only comm overlaps
+        let mut no_offload = s.clone();
+        no_offload.cpu_offload = false;
+        let pcie = eb - outer_event(&no_offload);
+        assert!(pcie > 0.0);
+        assert!(es > pcie * 0.999);
+        assert!(os > 0.0);
+    }
+
+    #[test]
+    fn partial_fraction_disables_streaming_overlap() {
+        // The trainer rejects stream_fragments with sync_fraction < 1
+        // (partial sync is a barrier schedule); the model must price the
+        // combination identically to the plain partial event — no
+        // overlap — so sim and train cannot diverge on a config that
+        // cannot train.
+        let mut partial = setup(64, OptMode::Pier);
+        partial.sync_fraction = 0.5;
+        let mut both = partial.clone();
+        both.stream_fragments = 4;
+        let (ep, op) = outer_event_streaming(&partial);
+        let (eb, ob) = outer_event_streaming(&both);
+        assert_eq!(ep, eb);
+        assert_eq!(op, 0.0);
+        assert_eq!(ob, 0.0);
+        assert_eq!(ep, outer_event(&partial));
+        assert_eq!(simulate_run(&partial).total_secs, simulate_run(&both).total_secs);
+    }
+
+    #[test]
+    fn streaming_schedule_cost_degenerates_to_blocking() {
+        let volumes = [6.2e9, 3.1e9];
+        for tp in [1usize, 4] {
+            let blocking = cost_outer_schedule(32, tp, &volumes, &PERLMUTTER);
+            let f1 = cost_outer_schedule_streaming(32, tp, &volumes, 1, 10.0, &PERLMUTTER);
+            assert!((f1 - blocking).abs() < 1e-12, "tp={tp}");
+            let f4 = cost_outer_schedule_streaming(32, tp, &volumes, 4, 1e9, &PERLMUTTER);
+            assert!(f4 < blocking, "tp={tp}: streaming must cut exposed cost");
+            let no_window =
+                cost_outer_schedule_streaming(32, tp, &volumes, 4, 0.0, &PERLMUTTER);
+            assert!(no_window >= blocking * 0.999, "tp={tp}: no window, no win");
+        }
     }
 
     #[test]

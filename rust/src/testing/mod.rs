@@ -1,8 +1,14 @@
-//! In-repo testing substrates: a proptest-style property harness and a
-//! criterion-style bench harness (neither crate is available offline).
+//! In-repo testing substrates: a proptest-style property harness, a
+//! criterion-style bench harness (neither crate is available offline),
+//! the shared toy-oracle harness the parity integration suites drive,
+//! and the bench-snapshot regression gate CI runs via
+//! `tools/bench_check.rs`.
 
 pub mod bench;
+pub mod oracle;
 pub mod prop;
+pub mod regress;
 
 pub use bench::{bench, bench_quick, header, BenchResult};
 pub use prop::{check, close, ensure, Gen};
+pub use regress::{gate_snapshots, GateReport, GATED_PREFIXES};

@@ -1,0 +1,97 @@
+//! Shared toy-oracle harness for the parity integration suites.
+//!
+//! The trainer's Phase-B shape — K independent worker groups, each
+//! running noisy clipped AdamW steps toward a fixed target, with an
+//! every-`H`-steps outer sync — is re-driven by three integration
+//! suites (`parallel_parity`, `streaming_parity`, `dp_tp_crossval`)
+//! with the pure-Rust AdamW oracle standing in for the PJRT step
+//! functions. The group/state/step pieces live here, single-sourced, so
+//! a change to the oracle shape (gradient formula, clipping, update
+//! hyperparameters, the TP round trip) cannot silently give the suites
+//! different trajectories. Each suite keeps its own *loop* (that is what
+//! it tests); only the per-group substrate is shared.
+
+use crate::coordinator::collective::{shard_span, tp_all_gather_into, tp_reduce_scatter_into};
+use crate::optim::{clip_global_norm, AdamW};
+use crate::util::rng::Pcg64;
+
+/// One independent worker group: params + AdamW state + its own noise
+/// stream (mirrors `WorkerGroup`'s sampler-per-group layout).
+pub struct ToyGroup {
+    pub params: Vec<f32>,
+    pub opt: AdamW,
+    pub rng: Pcg64,
+}
+
+/// The fixed regression target every suite optimizes toward.
+pub fn target(n: usize) -> Vec<f32> {
+    (0..n).map(|i| (i as f32 * 0.29).sin() * 2.0).collect()
+}
+
+/// `k` zero-initialized groups with per-group seeded noise streams.
+pub fn make_groups(n: usize, k: usize, seed: u64) -> Vec<ToyGroup> {
+    (0..k)
+        .map(|g| ToyGroup {
+            params: vec![0.0f32; n],
+            opt: AdamW::new(n),
+            rng: Pcg64::new(seed, g as u64 + 1),
+        })
+        .collect()
+}
+
+/// One inner step on exclusively-owned group state (the closure the
+/// group engine schedules — the analog of the trainer's
+/// `accumulated_step`). With `tp > 1` the gradient takes the executed TP
+/// reduce-scatter/all-gather round trip, exactly like the trainer's
+/// accumulated step; the round trip is bit-transparent, so `tp` never
+/// changes the returned `(loss, gnorm)`.
+pub fn inner_step(g: &mut ToyGroup, tgt: &[f32], tp: usize) -> (f64, f64) {
+    let ToyGroup { params, opt, rng } = g;
+    let n = params.len();
+    let mut grad: Vec<f32> = params
+        .iter()
+        .zip(tgt)
+        .map(|(&p, &t)| 2.0 * (p - t) + 0.05 * rng.normal() as f32)
+        .collect();
+    if tp > 1 {
+        let mut sharded = vec![0.0f32; n];
+        tp_reduce_scatter_into(&[grad.as_slice()], &mut sharded);
+        let shards: Vec<&[f32]> = (0..tp)
+            .map(|r| {
+                let (lo, hi) = shard_span(n, tp, r);
+                &sharded[lo..hi]
+            })
+            .collect();
+        tp_all_gather_into(&shards, &mut grad);
+    }
+    let gnorm = clip_global_norm(&mut grad, 1.0);
+    opt.update(params, &grad, 0.05, 0.0);
+    let loss: f64 =
+        params.iter().zip(tgt).map(|(&p, &t)| ((p - t) as f64).powi(2)).sum::<f64>();
+    (loss, gnorm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oracle_descends_and_tp_is_transparent() {
+        let n = 24;
+        let tgt = target(n);
+        let mut a = make_groups(n, 1, 7).pop().unwrap();
+        let mut b = make_groups(n, 1, 7).pop().unwrap();
+        let mut first = f64::NAN;
+        let mut last = f64::NAN;
+        for t in 0..50 {
+            let (la, _) = inner_step(&mut a, &tgt, 1);
+            let (lb, _) = inner_step(&mut b, &tgt, 2);
+            assert_eq!(la.to_bits(), lb.to_bits(), "tp must not change the math");
+            if t == 0 {
+                first = la;
+            }
+            last = la;
+        }
+        assert!(last < first, "oracle must descend: {first} → {last}");
+    }
+}

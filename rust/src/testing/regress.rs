@@ -1,0 +1,381 @@
+//! Bench-snapshot regression gate (DESIGN.md §6): diff a fresh
+//! `BENCH_outer_step.json` against the committed `BENCH_baseline.json`
+//! and fail CI when a gated benchmark's mean time regresses beyond the
+//! threshold.
+//!
+//! Policy:
+//!
+//! * **Gated families** ([`GATED_PREFIXES`]): the outer-sync hot paths the
+//!   ROADMAP's "fast as the hardware allows" contract protects — the
+//!   in-place blocking sync and the streaming fragment sync. A gated
+//!   benchmark that regresses > `max_regression`, or that exists in the
+//!   baseline but vanished from the fresh snapshot, fails the gate.
+//! * **Machine-relative normalization**: shared CI runners vary by more
+//!   than any sane threshold in absolute speed, so absolute seconds are
+//!   never compared. Both snapshots must carry the [`REFERENCE_BENCH`]
+//!   (a memory-bandwidth-bound sweep with no sync logic, recorded by the
+//!   same bench binary in the same run); every mean is divided by its
+//!   snapshot's reference mean and the gate compares *ratios to the
+//!   machine's own baseline speed*, which is stable across runner
+//!   generations. A non-empty snapshot without the anchor is a hard
+//!   error — an absolute-seconds gate on heterogeneous runners would be
+//!   meaningless, so it must not silently engage.
+//! * **Ungated benchmarks** are reported (the trajectory is still
+//!   tracked) but never fail — micro-bench noise on allocator-bound paths
+//!   is not worth red CI.
+//! * **Bootstrap**: an empty baseline (`results: []`, the committed seed
+//!   state before any toolchain-ful run) passes with a notice telling the
+//!   operator how to seed it — see README "Perf baseline".
+//!
+//! The heavy lifting lives here in the library so it is unit-tested;
+//! `tools/bench_check.rs` is the thin CI-facing binary.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// Benchmark-name prefixes whose regressions fail the gate.
+pub const GATED_PREFIXES: &[&str] = &["outer_sync_in_place", "outer_sync_streaming"];
+
+/// The same-run normalization anchor: the momentum-accumulate sweep over
+/// the GPT-2-small-sized vector — memory-bandwidth-bound like the gated
+/// syncs, always emitted by `benches/outer_step.rs`, and **code-disjoint
+/// from the gated paths**: `OuterOpt::accumulate` is its own serial loop,
+/// sharing neither the `step_span` Nesterov kernel nor the `reduce_span`
+/// collective the `outer_sync_*` families execute, so a regression in
+/// those kernels cannot divide itself out of the gate's ratios. Its mean
+/// calibrates "how fast is this machine" within each snapshot. (If the
+/// anchor itself regresses, every reported delta shifts visibly negative
+/// — the per-bench report, not silence.)
+pub const REFERENCE_BENCH: &str = "momentum_accumulate/gpt2-small-124M";
+
+/// One benchmark's baseline-vs-fresh comparison.
+#[derive(Clone, Debug)]
+pub struct BenchDelta {
+    pub name: String,
+    pub base_mean_s: f64,
+    pub fresh_mean_s: f64,
+    /// Machine-relative regression (positive = slower): `fresh/base − 1`
+    /// with both means first divided by their snapshot's
+    /// [`REFERENCE_BENCH`] mean.
+    pub ratio: f64,
+    pub gated: bool,
+}
+
+/// Gate outcome: per-benchmark deltas plus the failures that should turn
+/// CI red.
+#[derive(Clone, Debug, Default)]
+pub struct GateReport {
+    pub deltas: Vec<BenchDelta>,
+    pub failures: Vec<String>,
+    /// True when the baseline carried no results (seed state): the gate
+    /// passes vacuously and the operator should commit a refreshed
+    /// baseline.
+    pub bootstrap: bool,
+}
+
+impl GateReport {
+    pub fn passed(&self) -> bool {
+        self.failures.is_empty()
+    }
+}
+
+fn is_gated(name: &str) -> bool {
+    GATED_PREFIXES.iter().any(|p| name.starts_with(p))
+}
+
+/// Extract `name → mean_s` from a `BENCH_*.json` snapshot. Rejects
+/// structurally broken snapshots (missing `results`, rows without
+/// name/mean) — a malformed baseline must fail loudly, not gate vacuously.
+fn mean_by_name(snapshot: &Json, what: &str) -> Result<BTreeMap<String, f64>, String> {
+    let results = snapshot
+        .get("results")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| format!("{what}: no \"results\" array"))?;
+    let mut out = BTreeMap::new();
+    for (i, row) in results.iter().enumerate() {
+        let name = row
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("{what}: results[{i}] has no \"name\""))?;
+        let mean = row
+            .get("mean_s")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("{what}: results[{i}] ({name}) has no \"mean_s\""))?;
+        if mean.is_nan() || mean <= 0.0 {
+            return Err(format!("{what}: results[{i}] ({name}) mean_s {mean} not positive"));
+        }
+        out.insert(name.to_string(), mean);
+    }
+    Ok(out)
+}
+
+/// Compare a fresh snapshot against the committed baseline.
+/// `max_regression` is the relative mean-seconds threshold for gated
+/// benchmarks (0.15 = fail above +15 %).
+pub fn gate_snapshots(
+    baseline: &Json,
+    fresh: &Json,
+    max_regression: f64,
+) -> Result<GateReport, String> {
+    assert!(max_regression >= 0.0, "negative regression threshold");
+    let base = mean_by_name(baseline, "baseline")?;
+    let new = mean_by_name(fresh, "fresh snapshot")?;
+    let mut report = GateReport::default();
+    if base.is_empty() {
+        report.bootstrap = true;
+        return Ok(report);
+    }
+    if new.is_empty() {
+        return Err("fresh snapshot has no results — did the bench run?".into());
+    }
+    // The gated sync paths are span-parallel while the anchor is a serial
+    // sweep, so snapshots taken at different thread counts are not
+    // comparable even after normalization — the bench records its
+    // `threads` (util::par::max_threads) exactly so this can be enforced.
+    // Like the anchor, the field is mandatory on non-bootstrap snapshots:
+    // silently skipping the guard would gate on the machine schedule.
+    let threads = |s: &Json, what: &str| {
+        s.get("threads").and_then(Json::as_f64).ok_or_else(|| {
+            format!(
+                "{what} lacks the \"threads\" field — reseed with the current bench \
+                 binary (PIER_THREADS=4 RUN_BENCH=1 ./ci.sh; see README \"Perf baseline\")"
+            )
+        })
+    };
+    let bt = threads(baseline, "baseline")?;
+    let ft = threads(fresh, "fresh snapshot")?;
+    if bt != ft {
+        return Err(format!(
+            "snapshots are not comparable: baseline ran with {bt} threads, fresh \
+             with {ft} — reseed BENCH_baseline.json at the CI thread count \
+             (PIER_THREADS=4 RUN_BENCH=1 ./ci.sh; see README \"Perf baseline\")"
+        ));
+    }
+    // Machine-relative normalization: shared runners differ in absolute
+    // speed run to run, so gate on each snapshot's ratio to its own
+    // reference-bench mean. The anchor is mandatory — absolute seconds
+    // across heterogeneous runners would gate on the machine, not the
+    // code.
+    let base_ref = *base.get(REFERENCE_BENCH).ok_or_else(|| {
+        format!(
+            "baseline lacks the normalization anchor {REFERENCE_BENCH:?} — re-seed it \
+             (RUN_BENCH=1 ./ci.sh; see README \"Perf baseline\")"
+        )
+    })?;
+    let fresh_ref = *new.get(REFERENCE_BENCH).ok_or_else(|| {
+        format!(
+            "fresh snapshot lacks the normalization anchor {REFERENCE_BENCH:?} — did \
+             benches/outer_step.rs rename it?"
+        )
+    })?;
+    for (name, &base_mean) in &base {
+        if name == REFERENCE_BENCH {
+            continue; // the anchor normalizes itself to ratio 0 — skip it
+        }
+        let gated = is_gated(name);
+        match new.get(name) {
+            Some(&fresh_mean) => {
+                let ratio = (fresh_mean / fresh_ref) / (base_mean / base_ref) - 1.0;
+                if gated && ratio > max_regression {
+                    report.failures.push(format!(
+                        "{name}: +{:.1}% over baseline (limit +{:.0}%): {:.3e}s → {:.3e}s",
+                        100.0 * ratio,
+                        100.0 * max_regression,
+                        base_mean,
+                        fresh_mean
+                    ));
+                }
+                report.deltas.push(BenchDelta {
+                    name: name.clone(),
+                    base_mean_s: base_mean,
+                    fresh_mean_s: fresh_mean,
+                    ratio,
+                    gated,
+                });
+            }
+            None if gated => {
+                report.failures.push(format!(
+                    "{name}: gated benchmark present in baseline but missing from the \
+                     fresh snapshot"
+                ));
+            }
+            None => {}
+        }
+    }
+    // A gated benchmark that exists only in the fresh snapshot has no
+    // baseline to regress against — silently skipping it would leave a
+    // protected family untracked, so force the baseline refresh.
+    for name in new.keys() {
+        if is_gated(name) && !base.contains_key(name) {
+            report.failures.push(format!(
+                "{name}: gated benchmark has no baseline entry — refresh \
+                 BENCH_baseline.json (README \"Perf baseline\") so it is tracked"
+            ));
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snapshot_with_threads(rows: &[(&str, f64)], threads: f64) -> Json {
+        Json::obj(vec![
+            ("bench", Json::str("outer_step")),
+            ("threads", Json::num(threads)),
+            (
+                "results",
+                Json::arr(rows.iter().map(|&(name, mean)| {
+                    Json::obj(vec![("name", Json::str(name)), ("mean_s", Json::num(mean))])
+                })),
+            ),
+        ])
+    }
+
+    fn snapshot(rows: &[(&str, f64)]) -> Json {
+        snapshot_with_threads(rows, 4.0)
+    }
+
+    #[test]
+    fn within_threshold_passes_and_reports_deltas() {
+        let base = snapshot(&[("outer_sync_in_place/a", 1.0), ("nesterov_step/a", 1.0),
+                              (REFERENCE_BENCH, 0.1)]);
+        let fresh = snapshot(&[("outer_sync_in_place/a", 1.10), ("nesterov_step/a", 3.0),
+                               (REFERENCE_BENCH, 0.1)]);
+        let r = gate_snapshots(&base, &fresh, 0.15).unwrap();
+        assert!(r.passed(), "{:?}", r.failures);
+        assert!(!r.bootstrap);
+        assert_eq!(r.deltas.len(), 2);
+        let gated = r.deltas.iter().find(|d| d.name.starts_with("outer_sync")).unwrap();
+        assert!(gated.gated);
+        assert!((gated.ratio - 0.10).abs() < 1e-9);
+        // the ungated 3× regression is reported, not failed
+        assert!(r.deltas.iter().any(|d| !d.gated && d.ratio > 1.0));
+    }
+
+    #[test]
+    fn gate_is_machine_relative_via_the_reference_bench() {
+        // A runner that is uniformly 2× slower (gated bench AND reference
+        // anchor) is not a regression; a gated bench that slows 2× while
+        // the anchor holds still is.
+        let base = snapshot(&[("outer_sync_in_place/a", 1.0), (REFERENCE_BENCH, 0.1)]);
+        let slower_machine =
+            snapshot(&[("outer_sync_in_place/a", 2.0), (REFERENCE_BENCH, 0.2)]);
+        let r = gate_snapshots(&base, &slower_machine, 0.15).unwrap();
+        assert!(r.passed(), "uniform slowdown must not fail: {:?}", r.failures);
+        let d = r.deltas.iter().find(|d| d.name.starts_with("outer_sync")).unwrap();
+        assert!(d.ratio.abs() < 1e-9, "normalized ratio should be ~0, got {}", d.ratio);
+        // the anchor itself is not reported (it would always be ratio 0)
+        assert!(r.deltas.iter().all(|d| d.name != REFERENCE_BENCH));
+
+        let real_regression =
+            snapshot(&[("outer_sync_in_place/a", 2.0), (REFERENCE_BENCH, 0.1)]);
+        let r = gate_snapshots(&base, &real_regression, 0.15).unwrap();
+        assert!(!r.passed(), "same-machine 2× slowdown must fail");
+
+        // …and a faster machine cannot mask a real (relative) regression
+        let fast_but_worse =
+            snapshot(&[("outer_sync_in_place/a", 0.9), (REFERENCE_BENCH, 0.05)]);
+        let r = gate_snapshots(&base, &fast_but_worse, 0.15).unwrap();
+        assert!(!r.passed(), "0.9s on a 2× faster machine is a 1.8× relative regression");
+    }
+
+    #[test]
+    fn missing_reference_anchor_is_a_hard_error() {
+        // An absolute-seconds gate on heterogeneous runners is meaningless
+        // — it must refuse to run, not silently degrade.
+        let with = snapshot(&[("outer_sync_in_place/a", 1.0), (REFERENCE_BENCH, 0.1)]);
+        let without = snapshot(&[("outer_sync_in_place/a", 1.0)]);
+        let e = gate_snapshots(&without, &with, 0.15).unwrap_err();
+        assert!(e.contains("baseline lacks"), "{e}");
+        let e = gate_snapshots(&with, &without, 0.15).unwrap_err();
+        assert!(e.contains("fresh snapshot lacks"), "{e}");
+    }
+
+    #[test]
+    fn gated_regression_fails() {
+        let base =
+            snapshot(&[("outer_sync_streaming4/micro/4groups", 1.0), (REFERENCE_BENCH, 0.1)]);
+        let fresh =
+            snapshot(&[("outer_sync_streaming4/micro/4groups", 1.2), (REFERENCE_BENCH, 0.1)]);
+        let r = gate_snapshots(&base, &fresh, 0.15).unwrap();
+        assert!(!r.passed());
+        assert!(r.failures[0].contains("outer_sync_streaming4"));
+        // a faster run always passes
+        let better =
+            snapshot(&[("outer_sync_streaming4/micro/4groups", 0.5), (REFERENCE_BENCH, 0.1)]);
+        assert!(gate_snapshots(&base, &better, 0.15).unwrap().passed());
+    }
+
+    #[test]
+    fn missing_gated_benchmark_fails_missing_ungated_does_not() {
+        let base = snapshot(&[("outer_sync_in_place/a", 1.0), ("momentum_accumulate/a", 1.0),
+                              (REFERENCE_BENCH, 0.1)]);
+        let fresh = snapshot(&[("something_else", 1.0), (REFERENCE_BENCH, 0.1)]);
+        let r = gate_snapshots(&base, &fresh, 0.15).unwrap();
+        assert_eq!(r.failures.len(), 1);
+        assert!(r.failures[0].contains("outer_sync_in_place/a"));
+    }
+
+    #[test]
+    fn mismatched_or_missing_thread_counts_refuse_to_gate() {
+        let rows = [("outer_sync_in_place/a", 1.0), (REFERENCE_BENCH, 0.1)];
+        let base = snapshot_with_threads(&rows, 16.0);
+        let fresh = snapshot_with_threads(&rows, 4.0);
+        let e = gate_snapshots(&base, &fresh, 0.15).unwrap_err();
+        assert!(e.contains("not comparable"), "{e}");
+        // equal thread counts gate normally
+        let same = snapshot_with_threads(&rows, 4.0);
+        assert!(gate_snapshots(&same, &fresh, 0.15).unwrap().passed());
+        // a non-bootstrap snapshot without the field is a hard error, not
+        // a silently skipped guard
+        let stripped = Json::obj(vec![(
+            "results",
+            Json::arr(rows.iter().map(|&(name, mean)| {
+                Json::obj(vec![("name", Json::str(name)), ("mean_s", Json::num(mean))])
+            })),
+        )]);
+        let e = gate_snapshots(&stripped, &fresh, 0.15).unwrap_err();
+        assert!(e.contains("threads"), "{e}");
+    }
+
+    #[test]
+    fn fresh_only_gated_benchmark_forces_a_baseline_refresh() {
+        // A new gated bench landing without a baseline entry must not be
+        // silently untracked; fresh-only ungated benches are fine.
+        let base = snapshot(&[("outer_sync_in_place/a", 1.0), (REFERENCE_BENCH, 0.1)]);
+        let fresh = snapshot(&[("outer_sync_in_place/a", 1.0),
+                               ("outer_sync_streaming4_pipelined/b", 1.0),
+                               ("brand_new_ungated/c", 1.0), (REFERENCE_BENCH, 0.1)]);
+        let r = gate_snapshots(&base, &fresh, 0.15).unwrap();
+        assert_eq!(r.failures.len(), 1, "{:?}", r.failures);
+        assert!(r.failures[0].contains("outer_sync_streaming4_pipelined/b"));
+        assert!(r.failures[0].contains("no baseline entry"));
+    }
+
+    #[test]
+    fn empty_baseline_bootstraps() {
+        let base = snapshot(&[]);
+        let fresh = snapshot(&[("outer_sync_in_place/a", 1.0)]);
+        let r = gate_snapshots(&base, &fresh, 0.15).unwrap();
+        assert!(r.bootstrap);
+        assert!(r.passed());
+    }
+
+    #[test]
+    fn malformed_snapshots_error() {
+        let good = snapshot(&[("a", 1.0)]);
+        assert!(gate_snapshots(&Json::obj(vec![]), &good, 0.15).is_err());
+        let no_mean = Json::obj(vec![(
+            "results",
+            Json::arr([Json::obj(vec![("name", Json::str("x"))])]),
+        )]);
+        assert!(gate_snapshots(&no_mean, &good, 0.15).is_err());
+        let bad_mean = snapshot(&[("x", 0.0)]);
+        assert!(gate_snapshots(&bad_mean, &good, 0.15).is_err());
+        // fresh snapshot with no rows against a real baseline is an error
+        assert!(gate_snapshots(&good, &snapshot(&[]), 0.15).is_err());
+    }
+}

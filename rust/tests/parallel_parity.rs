@@ -19,19 +19,9 @@
 //! movement, `tp > 1` must reproduce the `tp = 1` losses bit for bit too.
 
 use pier::coordinator::collective::{note_inner_allreduce, note_tp_step, outer_all_reduce,
-                                    outer_all_reduce_into, shard_span, tp_all_gather_into,
-                                    tp_reduce_scatter_into, CommStats};
+                                    outer_all_reduce_into, shard_span, CommStats};
 use pier::coordinator::ParallelExecutor;
-use pier::optim::{clip_global_norm, AdamW};
-use pier::util::rng::Pcg64;
-
-/// One independent worker group: params + AdamW state + its own noise
-/// stream (mirrors `WorkerGroup`'s sampler-per-group layout).
-struct ToyGroup {
-    params: Vec<f32>,
-    opt: AdamW,
-    rng: Pcg64,
-}
+use pier::testing::oracle::{inner_step, make_groups, target};
 
 /// What a run records — the fields the acceptance criterion names:
 /// per-iteration mean losses (RunLog.iters analog) and the comm stats.
@@ -45,57 +35,14 @@ const N: usize = 48;
 const ITERS: usize = 60;
 const H: usize = 10;
 
-fn target() -> Vec<f32> {
-    (0..N).map(|i| (i as f32 * 0.29).sin() * 2.0).collect()
-}
-
-fn make_groups(k: usize, seed: u64) -> Vec<ToyGroup> {
-    (0..k)
-        .map(|g| ToyGroup {
-            params: vec![0.0f32; N],
-            opt: AdamW::new(N),
-            rng: Pcg64::new(seed, g as u64 + 1),
-        })
-        .collect()
-}
-
-/// One inner step on exclusively-owned group state (the closure the
-/// engine schedules — the analog of `accumulated_step`). With `tp > 1`
-/// the gradient takes the executed TP reduce-scatter/all-gather round
-/// trip, exactly like the trainer's accumulated step.
-fn inner_step(g: &mut ToyGroup, tgt: &[f32], tp: usize) -> (f64, f64) {
-    let ToyGroup { params, opt, rng } = g;
-    let mut grad: Vec<f32> = params
-        .iter()
-        .zip(tgt)
-        .map(|(&p, &t)| 2.0 * (p - t) + 0.05 * rng.normal() as f32)
-        .collect();
-    if tp > 1 {
-        let mut sharded = vec![0.0f32; grad.len()];
-        tp_reduce_scatter_into(&[grad.as_slice()], &mut sharded);
-        let shards: Vec<&[f32]> = (0..tp)
-            .map(|r| {
-                let (lo, hi) = shard_span(N, tp, r);
-                &sharded[lo..hi]
-            })
-            .collect();
-        tp_all_gather_into(&shards, &mut grad);
-    }
-    let gnorm = clip_global_norm(&mut grad, 1.0);
-    opt.update(params, &grad, 0.05, 0.0);
-    let loss: f64 =
-        params.iter().zip(tgt).map(|(&p, &t)| ((p - t) as f64).powi(2)).sum::<f64>();
-    (loss, gnorm)
-}
-
 /// Phase-B-shaped run: K concurrent (or serial) inner steps per iteration,
 /// fixed-order loss reduction and comm accounting, outer averaging +
 /// broadcast every H steps. `tp > 1` mirrors the trainer's DP×TP shape:
 /// per-step TP accounting after the join, and the outer sync as `tp`
 /// per-shard all-reduces over the contiguous span partition.
 fn run(engine: ParallelExecutor, k: usize, tp: usize, seed: u64) -> ToyRunLog {
-    let tgt = target();
-    let mut groups = make_groups(k, seed);
+    let tgt = target(N);
+    let mut groups = make_groups(N, k, seed);
     let mut stats = CommStats::default();
     let mut losses = Vec::with_capacity(ITERS);
     for t in 0..ITERS {

@@ -3,9 +3,10 @@
 //! algebra, and the network/simulator models.
 
 use pier::config::{NesterovKind, OptMode, TrainConfig};
-use pier::coordinator::collective::all_reduce_mean;
+use pier::coordinator::collective::{all_reduce_mean, fragment_span, shard_span};
+use pier::coordinator::OuterController;
 use pier::data::{CorpusGen, CorpusSpec, Sampler, TokenDataset, Tokenizer};
-use pier::netsim::{des_outer_sync, outer_sync_time, ring_allreduce};
+use pier::netsim::{des_outer_sync, des_outer_sync_streaming, outer_sync_time, ring_allreduce};
 use pier::optim::{clip_global_norm, inner_lr, outer_momentum, AdamW, OuterOpt};
 use pier::perfmodel::gpu::{LinkSpec, PERLMUTTER, VISTA};
 use pier::simulator::run::{simulate_run, Calib, SimSetup};
@@ -51,6 +52,84 @@ fn prop_allreduce_mean_bounded_by_extremes() {
             )?;
         }
         Ok(())
+    });
+}
+
+#[test]
+fn prop_fragment_partition_covers_every_parameter_exactly_once() {
+    // The single-sourced fragment partition (collective::fragment_span)
+    // both outer-sync extensions derive from — the rotating partial sync's
+    // cycle and the streaming sync's pipeline — must tile [0, n) exactly:
+    // contiguous, no overlap, no gap, balanced to ±1, and identical to the
+    // TP shard partition it is defined by.
+    check("fragment-partition", |g: &mut Gen| {
+        let n = g.usize(1, 50_000);
+        let m = g.usize(1, 64.min(n));
+        let mut prev = 0;
+        let base = n / m;
+        for i in 0..m {
+            let (lo, hi) = fragment_span(n, m, i);
+            ensure(lo == prev, format!("contiguous at fragment {i}"))?;
+            ensure(hi >= lo, "non-negative fragment")?;
+            ensure(hi - lo == base || hi - lo == base + 1,
+                   format!("balanced: fragment {i} has {} of ~{base}", hi - lo))?;
+            ensure(fragment_span(n, m, i) == shard_span(n, m, i), "single-sourced")?;
+            prev = hi;
+        }
+        ensure(prev == n, "covers all parameters")
+    });
+}
+
+#[test]
+fn prop_partial_cycle_and_streaming_use_the_same_partition() {
+    // A full partial-sync rotation and a streaming sync with the same
+    // fragment count must touch identical (lo, hi) ranges — the
+    // deduplication contract of DESIGN.md §8.
+    check("partial-vs-streaming-partition", |g: &mut Gen| {
+        let n = g.usize(4, 400);
+        let cycle = g.usize(1, 8.min(n));
+        let mut c = TrainConfig::default_for(1000);
+        c.mode = OptMode::DiLoCo;
+        c.sync_fraction = 1.0 / cycle as f64;
+        let init = vec![0.0f32; n];
+        let group = vec![1.0f32; n];
+        let mut ctl = OuterController::new(&c, &init);
+        // ⌈1/(1/cycle)⌉ can land on cycle or cycle+1 under fp rounding;
+        // the partition contract holds for whatever length the controller
+        // derives — take it as the ground truth.
+        let cycle = ctl.partial_cycle_len();
+        let mut stats = pier::coordinator::collective::CommStats::default();
+        for i in 0..cycle {
+            let p = ctl.sync_partial(100, &[&group], &mut stats);
+            let (lo, hi) = fragment_span(n, cycle, i);
+            ensure((p.lo, p.hi) == (lo, hi),
+                   format!("rotation {i}: {:?} vs fragment_span {:?}", (p.lo, p.hi), (lo, hi)))?;
+        }
+        // partial fragments are barrier traffic: all exposed
+        ensure(stats.outer_exposed_bytes == stats.outer_allreduce_bytes, "partial exposed")?;
+        ensure(stats.outer_overlapped_bytes == 0.0, "partial never overlaps")
+    });
+}
+
+#[test]
+fn prop_streaming_cost_conserves_comm_and_respects_bounds() {
+    check("streaming-cost", |g: &mut Gen| {
+        let dp = g.usize(2, 64);
+        let tp = *g.choose(&[1usize, 2, 4]);
+        let frags = g.usize(1, 16);
+        let v = g.f64(1e6, 1e10);
+        let window = g.f64(0.0, 10.0);
+        let cluster = *g.choose(&[&PERLMUTTER, &VISTA]);
+        let c = des_outer_sync_streaming(dp, tp, v, frags, window, cluster);
+        ensure((c.exposed_secs + c.overlapped_secs - c.comm_secs).abs() <= 1e-9 * c.comm_secs,
+               "exposed + overlapped = comm")?;
+        ensure(c.overlapped_secs <= window + 1e-12, "overlap bounded by the window")?;
+        let blocking = des_outer_sync(dp, tp, v, cluster);
+        ensure(c.comm_secs >= blocking * (1.0 - 1e-9),
+               "fragmenting never moves fewer seconds of traffic")?;
+        // the gating fragment is never hidden: exposed ≥ last fragment
+        ensure(c.exposed_secs >= blocking / frags as f64 * (1.0 - 1e-6),
+               format!("exposed {} below the gate", c.exposed_secs))
     });
 }
 
@@ -259,6 +338,7 @@ fn prop_simulator_total_monotone_in_iterations_and_interval() {
             tp: 1,
             pp: 1,
             sync_fraction: 1.0,
+            stream_fragments: *g.choose(&[0usize, 2, 4]),
             groups: world,
             global_batch: 512,
             sync_interval: g.usize(10, 400),
@@ -293,6 +373,7 @@ fn prop_pier_never_slower_than_adamw_beyond_a_node_at_h500() {
             tp: 1,
             pp: 1,
             sync_fraction: 1.0,
+            stream_fragments: 0,
             groups: world,
             global_batch: 512,
             sync_interval: 500,

@@ -1,0 +1,212 @@
+//! Streaming-vs-blocking outer-sync parity (DESIGN.md §8).
+//!
+//! The tentpole contract: splitting the outer sync into
+//! `stream_fragments` balanced fragments and pipelining them changes the
+//! *schedule* — never the math. This test drives the same Phase-B shape
+//! as `Trainer::run` (the pure-Rust AdamW oracle standing in for the PJRT
+//! step functions, as in `parallel_parity.rs`), one arm syncing through
+//! the blocking `sync_in_place`, the other through `sync_streaming`, and
+//! pins:
+//!
+//! * **(a)** bit-identical per-iteration losses and final parameters for
+//!   `stream_fragments ∈ {1, 2, 4}` vs blocking, across
+//!   `(groups, tp) ∈ {1, 2, 4} × {1, 2}`;
+//! * **(b)** the `CommStats` overlapped/exposed byte split: the streaming
+//!   run's `overlapped + exposed` equals the blocking run's outer totals,
+//!   with the per-event exposed share being exactly the gating (last)
+//!   fragment's bytes.
+//!
+//! The engine schedule is exercised too: the streaming arm runs under the
+//! thread pool and the serial executor and must agree bit for bit
+//! (`fragment_pipeline` serializes when `PIER_THREADS=1`). The per-group
+//! substrate is the shared `pier::testing::oracle` harness the other
+//! parity suites drive.
+
+use pier::config::{OptMode, TrainConfig};
+use pier::coordinator::collective::{fragment_span, CommStats};
+use pier::coordinator::{OuterController, ParallelExecutor};
+use pier::testing::oracle::{inner_step, make_groups, target};
+
+const N: usize = 53; // prime: no fragment or shard count divides it
+const ITERS: usize = 40;
+const H: usize = 8;
+
+struct ToyRunLog {
+    losses: Vec<u64>,
+    final_params: Vec<Vec<u32>>,
+    stats: CommStats,
+}
+
+/// Phase-B-shaped run with a real `OuterController` doing the every-`H`
+/// sync: `stream_fragments = 0` takes the blocking `sync_in_place`,
+/// `>= 1` the streaming path — exactly the trainer's branch.
+fn run(engine: ParallelExecutor, k: usize, tp: usize, stream_fragments: usize, seed: u64)
+    -> ToyRunLog
+{
+    let tgt = target(N);
+    let mut cfg = TrainConfig::default_for(1000);
+    cfg.mode = OptMode::DiLoCo; // fixed outer schedule: syncs differ only in path
+    cfg.sync_interval = H;
+    cfg.tp = tp;
+    cfg.stream_fragments = stream_fragments;
+    let mut groups = make_groups(N, k, seed);
+    let mut ctl = OuterController::new(&cfg, &groups[0].params);
+    let mut stats = CommStats::default();
+    let mut losses = Vec::with_capacity(ITERS);
+
+    for t in 0..ITERS {
+        let outcomes = engine
+            .run(&mut groups, |_, g| Ok(inner_step(g, &tgt, 1)))
+            .expect("toy steps cannot fail");
+        losses.push(outcomes.iter().map(|&(loss, _)| loss).sum::<f64>().to_bits());
+
+        if (t + 1) % H == 0 {
+            let refs: Vec<&[f32]> = groups.iter().map(|g| g.params.as_slice()).collect();
+            let next: Vec<f32> = if stream_fragments == 0 {
+                ctl.sync_in_place(t + 1, &refs, &mut stats).to_vec()
+            } else {
+                ctl.sync_streaming(t + 1, &refs, &mut stats).to_vec()
+            };
+            for g in groups.iter_mut() {
+                g.params.copy_from_slice(&next);
+            }
+        }
+    }
+    ToyRunLog {
+        losses,
+        final_params: groups
+            .into_iter()
+            .map(|g| g.params.iter().map(|x| x.to_bits()).collect())
+            .collect(),
+        stats,
+    }
+}
+
+#[test]
+fn streaming_matches_blocking_bitwise_over_groups_tp_fragments_grid() {
+    for k in [1usize, 2, 4] {
+        for tp in [1usize, 2] {
+            let blocking = run(ParallelExecutor::new(0), k, tp, 0, 1234);
+            for frags in [1usize, 2, 4] {
+                let streaming = run(ParallelExecutor::new(0), k, tp, frags, 1234);
+                assert_eq!(blocking.losses, streaming.losses,
+                           "k={k} tp={tp} frags={frags}: loss trajectories diverged");
+                assert_eq!(blocking.final_params, streaming.final_params,
+                           "k={k} tp={tp} frags={frags}: final params diverged");
+            }
+        }
+    }
+}
+
+#[test]
+fn streaming_serial_and_pooled_schedules_agree() {
+    for frags in [2usize, 4] {
+        let pooled = run(ParallelExecutor::new(0), 4, 1, frags, 77);
+        let serial = run(ParallelExecutor::serial(), 4, 1, frags, 77);
+        assert_eq!(pooled.losses, serial.losses, "frags={frags}");
+        assert_eq!(pooled.final_params, serial.final_params, "frags={frags}");
+        assert_eq!(pooled.stats, serial.stats, "frags={frags}");
+    }
+}
+
+#[test]
+fn overlapped_plus_exposed_equals_the_blocking_totals() {
+    let syncs = (ITERS / H) as f64;
+    for (k, tp) in [(2usize, 1usize), (4, 2)] {
+        let blocking = run(ParallelExecutor::new(0), k, tp, 0, 99);
+        for frags in [1usize, 2, 4] {
+            let streaming = run(ParallelExecutor::new(0), k, tp, frags, 99);
+            // (b) the streaming schedule re-times the blocking traffic:
+            // totals match, the overlapped/exposed split partitions them.
+            assert_eq!(streaming.stats.outer_allreduce_bytes,
+                       blocking.stats.outer_allreduce_bytes, "k={k} tp={tp} frags={frags}");
+            assert_eq!(
+                streaming.stats.outer_overlapped_bytes + streaming.stats.outer_exposed_bytes,
+                blocking.stats.outer_allreduce_bytes,
+                "k={k} tp={tp} frags={frags}: split must sum to the blocking totals"
+            );
+            assert_eq!(blocking.stats.outer_overlapped_bytes, 0.0);
+            assert_eq!(blocking.stats.outer_exposed_bytes,
+                       blocking.stats.outer_allreduce_bytes);
+            // exposed per event = the gating fragment's bytes, exactly
+            let (lo, hi) = fragment_span(N, frags, frags - 1);
+            let expect_exposed = 4.0 * (hi - lo) as f64 * syncs;
+            assert_eq!(streaming.stats.outer_exposed_bytes, expect_exposed,
+                       "k={k} tp={tp} frags={frags}");
+            // call structure: one outer call per fragment per sync
+            assert_eq!(streaming.stats.outer_allreduce_calls, frags as u64 * syncs as u64);
+        }
+    }
+}
+
+#[test]
+fn streaming_run_is_seed_sensitive() {
+    // Guard against vacuous parity: different seeds must diverge.
+    let a = run(ParallelExecutor::new(0), 2, 1, 2, 1);
+    let b = run(ParallelExecutor::new(0), 2, 1, 2, 2);
+    assert_ne!(a.losses, b.losses);
+}
+
+// ---------------------------------------------------------------- gated e2e
+
+/// Real-trainer streaming parity (skips without `make artifacts`): the
+/// full Phase A → switch → Phase B run with `stream_fragments ∈ {0, 2}`
+/// must produce bit-identical losses, with the streaming run recording
+/// fragmented outer events and the overlapped/exposed byte split.
+#[test]
+fn trainer_streaming_matches_blocking_end_to_end() {
+    use pier::coordinator::Trainer;
+    use pier::figures::{figure_cfg, pipeline_for};
+    use pier::runtime::{load_manifest, Runtime};
+
+    let man = match load_manifest("nano") {
+        Ok(m) => m,
+        Err(_) => {
+            eprintln!("SKIP: nano artifacts missing (run `make artifacts`)");
+            return;
+        }
+    };
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let pipe = pipeline_for(&man, 11);
+
+    let mk_cfg = |frags: usize| {
+        let mut cfg = figure_cfg(pier::config::OptMode::Pier, 30, 2);
+        cfg.global_batch = 16;
+        cfg.stream_fragments = frags;
+        cfg.eval_interval = 0;
+        cfg
+    };
+
+    let mut blocking = Trainer::new(&rt, man.clone(), mk_cfg(0), &pipe).unwrap();
+    blocking.run().unwrap();
+    let mut streaming = Trainer::new(&rt, man.clone(), mk_cfg(2), &pipe).unwrap();
+    streaming.run().unwrap();
+
+    let lb: Vec<u64> = blocking.log.iters.iter().map(|r| r.loss.to_bits()).collect();
+    let ls: Vec<u64> = streaming.log.iters.iter().map(|r| r.loss.to_bits()).collect();
+    assert_eq!(lb, ls, "streaming must not change the training math");
+
+    assert!(streaming.log.outer_events.iter().all(|e| e.fragments == 2));
+    assert!(blocking.log.outer_events.iter().all(|e| e.fragments == 1));
+    // The recorded schedule prices per event: with any positive overlap
+    // window the streaming record exposes strictly less than the blocking
+    // one (same volumes, fragment schedules as recorded).
+    {
+        use pier::perfmodel::gpu::PERLMUTTER;
+        use pier::simulator::run::cost_recorded_schedule_streaming;
+        let k = streaming.cfg.groups;
+        let window = 1e9; // ample: only the gating fragments stay exposed
+        let cs = cost_recorded_schedule_streaming(k, 1, &streaming.log.outer_schedule(),
+                                                  window, &PERLMUTTER);
+        let cb = cost_recorded_schedule_streaming(k, 1, &blocking.log.outer_schedule(),
+                                                  window, &PERLMUTTER);
+        assert!(cs < cb, "recorded streaming schedule must expose less: {cs} vs {cb}");
+    }
+    assert_eq!(streaming.stats.outer_allreduce_bytes, blocking.stats.outer_allreduce_bytes);
+    assert!(streaming.stats.outer_overlapped_bytes > 0.0);
+    assert_eq!(
+        streaming.stats.outer_overlapped_bytes + streaming.stats.outer_exposed_bytes,
+        blocking.stats.outer_allreduce_bytes
+    );
+    assert_eq!(blocking.stats.outer_overlapped_bytes, 0.0);
+}

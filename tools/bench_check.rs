@@ -1,0 +1,97 @@
+//! `bench_check` — the CI perf-regression gate (DESIGN.md §6).
+//!
+//! ```bash
+//! cargo run --release --bin bench_check -- \
+//!     BENCH_baseline.json BENCH_outer_step.json [--max-regression 0.15]
+//! ```
+//!
+//! Diffs a fresh bench snapshot against the committed baseline with
+//! `pier::testing::regress::gate_snapshots`: the `outer_sync_in_place*`
+//! and `outer_sync_streaming*` families fail the gate when they regress
+//! beyond the threshold — machine-relatively, normalized by each
+//! snapshot's own mandatory reference-bench mean, so heterogeneous CI
+//! runners don't flip the gate; everything else is reported
+//! informationally. An empty baseline (the committed bootstrap seed)
+//! passes with instructions for seeding it — see README "Perf baseline".
+
+use anyhow::{anyhow, Context, Result};
+
+use pier::testing::regress::{gate_snapshots, GATED_PREFIXES};
+use pier::util::json::Json;
+
+fn load(path: &str) -> Result<Json> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    Json::parse(&text).map_err(|e| anyhow!("parsing {path}: {e}"))
+}
+
+fn run() -> Result<bool> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut paths = Vec::new();
+    let mut max_regression = 0.15;
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == "--max-regression" {
+            let v = args.get(i + 1).ok_or_else(|| anyhow!("--max-regression needs a value"))?;
+            max_regression = v.parse().with_context(|| format!("bad threshold {v:?}"))?;
+            i += 2;
+        } else {
+            paths.push(args[i].clone());
+            i += 1;
+        }
+    }
+    if paths.len() != 2 {
+        return Err(anyhow!(
+            "usage: bench_check <baseline.json> <fresh.json> [--max-regression 0.15]"
+        ));
+    }
+    let baseline = load(&paths[0])?;
+    let fresh = load(&paths[1])?;
+    let report = gate_snapshots(&baseline, &fresh, max_regression).map_err(|e| anyhow!(e))?;
+
+    if report.bootstrap {
+        println!(
+            "bench_check: baseline {} is empty (bootstrap seed) — gate passes vacuously.\n\
+             Seed the trajectory with: RUN_BENCH=1 ./ci.sh && cp BENCH_outer_step.json \
+             BENCH_baseline.json, then commit the baseline.",
+            paths[0]
+        );
+        return Ok(true);
+    }
+
+    println!(
+        "bench_check: {} vs {} (gate: {:?} at +{:.0}%, machine-relative via the \
+         reference bench)",
+        paths[0],
+        paths[1],
+        GATED_PREFIXES,
+        100.0 * max_regression
+    );
+    for d in &report.deltas {
+        println!(
+            "  {} {:<44} {:>10.3e}s → {:>10.3e}s  {:+6.1}%",
+            if d.gated { "[gate]" } else { "      " },
+            d.name,
+            d.base_mean_s,
+            d.fresh_mean_s,
+            100.0 * d.ratio
+        );
+    }
+    for f in &report.failures {
+        eprintln!("FAIL: {f}");
+    }
+    if report.passed() {
+        println!("bench_check: OK");
+    }
+    Ok(report.passed())
+}
+
+fn main() {
+    match run() {
+        Ok(true) => {}
+        Ok(false) => std::process::exit(1),
+        Err(e) => {
+            eprintln!("bench_check error: {e:#}");
+            std::process::exit(2);
+        }
+    }
+}
