@@ -2,7 +2,7 @@
 //! produce from the simulator (they are called from tests and the CLI, so
 //! they must stay cheap), plus single simulate_run points.
 
-use pier::config::{model_or_die, OptMode};
+use pier::config::{model_or_die, OptMode, OuterCompress};
 use pier::figures::{fig5, fig6, fig7, fig8};
 use pier::perfmodel::gpu::PERLMUTTER;
 use pier::simulator::run::{simulate_run, Calib, SimSetup};
@@ -35,6 +35,8 @@ fn main() {
         pp: 1,
         sync_fraction: 1.0,
         stream_fragments: 0,
+        outer_compress: OuterCompress::None,
+        outer_quant_block: 4096,
         groups: 64,
         global_batch: 512,
         sync_interval: 50,

@@ -14,9 +14,9 @@
 //! Emits `BENCH_outer_step.json` — a machine-readable perf snapshot
 //! (mean seconds + throughput per benchmark) for tracking across PRs.
 //! `ci.sh` diffs it against the committed `BENCH_baseline.json` with
-//! `tools/bench_check.rs`: the `outer_sync_in_place*` and
-//! `outer_sync_streaming*` families are gated at 15 % mean-time
-//! regression.
+//! `tools/bench_check.rs`: the `outer_sync_in_place*`,
+//! `outer_sync_streaming*`, and `outer_sync_int8*` families are gated at
+//! 15 % mean-time regression.
 
 use pier::config::{NesterovKind, OptMode, TrainConfig};
 use pier::coordinator::collective::CommStats;
@@ -135,6 +135,39 @@ fn main() {
         let r = bench_quick(&format!("outer_sync_streaming4/micro-3.2M/{k}groups"), || {
             let refs: Vec<&[f32]> = groups.iter().map(|g| g.as_slice()).collect();
             let next = ctl_st.sync_streaming(500, &refs, &mut stats_st);
+            std::hint::black_box(next.len());
+        });
+        println!("{}", r.report_throughput((n * k) as f64, "param"));
+        snap(&mut rows, &r, (n * k) as f64, "param/s");
+
+        // Compressed hierarchical sync (DESIGN.md §9): gpus_per_node = 1
+        // puts every group behind its own node leader, so each sync runs
+        // the full int8 pipeline — per-leader delta quantization with
+        // error feedback, narrow exchange, leader mean. Same logical
+        // math, ≈ ¼ the modeled wire; this bench tracks the CPU cost of
+        // the quantize/dequantize sweeps on the sync path (gated family
+        // `outer_sync_int8*`).
+        let mut cfg_q = cfg.clone();
+        cfg_q.outer_compress = pier::config::OuterCompress::Int8;
+        cfg_q.gpus_per_node = 1;
+        let mut ctl_q = OuterController::new(&cfg_q, &groups[0]);
+        let mut stats_q = CommStats::default();
+        let r = bench_quick(&format!("outer_sync_int8/micro-3.2M/{k}groups"), || {
+            let refs: Vec<&[f32]> = groups.iter().map(|g| g.as_slice()).collect();
+            let next = ctl_q.sync_in_place(500, &refs, &mut stats_q);
+            std::hint::black_box(next.len());
+        });
+        println!("{}", r.report_throughput((n * k) as f64, "param"));
+        snap(&mut rows, &r, (n * k) as f64, "param/s");
+
+        // …and composed with the 4-fragment streaming schedule (§8 × §9).
+        let mut cfg_qs = cfg_q.clone();
+        cfg_qs.stream_fragments = 4;
+        let mut ctl_qs = OuterController::new(&cfg_qs, &groups[0]);
+        let mut stats_qs = CommStats::default();
+        let r = bench_quick(&format!("outer_sync_int8_streaming4/micro-3.2M/{k}groups"), || {
+            let refs: Vec<&[f32]> = groups.iter().map(|g| g.as_slice()).collect();
+            let next = ctl_qs.sync_streaming(500, &refs, &mut stats_qs);
             std::hint::black_box(next.len());
         });
         println!("{}", r.report_throughput((n * k) as f64, "param"));

@@ -79,6 +79,27 @@ impl ParallelConfig {
     }
 }
 
+/// Replica cliques of the hierarchical outer sync (DESIGN.md §9): with
+/// `tp·pp`-wide replicas on `gpus_per_node`-GPU nodes in the Megatron
+/// placement, `clique = max(1, gpus_per_node / (tp·pp))` co-located DP
+/// replicas share a node (Fig.-7's groups-per-node regime), and
+/// `nodes = ⌈dp / clique⌉` node leaders face the fabric. With TP filling
+/// the node (Fig. 8: TP=4 on 4-GPU nodes) every replica is its own
+/// leader — the hierarchy degenerates to per-replica quantization, which
+/// is exactly the §IV-C topology (`netsim::des_outer_sync`'s "dp replicas
+/// of a TP rank sit on distinct nodes").
+///
+/// Returns `(clique, nodes)`. Both executed collectives
+/// (`coordinator::collective::hier_all_reduce_fragment_into`) and the cost
+/// models (`netsim::des_outer_sync_compressed`,
+/// `simulator::cost_outer_schedule_compressed`) derive their topology from
+/// this one helper so they cannot drift.
+pub fn outer_cliques(dp: usize, shards_per_replica: usize, gpus_per_node: usize) -> (usize, usize) {
+    let dp = dp.max(1);
+    let clique = (gpus_per_node.max(1) / shards_per_replica.max(1)).max(1).min(dp);
+    (clique, dp.div_ceil(clique))
+}
+
 /// Global rank layout. Megatron order: TP is the fastest-varying dimension,
 /// so ranks `[r·tp, (r+1)·tp)` form DP rank `r`'s TP group and land on the
 /// same node when `tp ≤ gpus_per_node`.
@@ -187,6 +208,24 @@ mod tests {
     fn group_size_panic_names_the_offending_pair() {
         let p = ParallelConfig { dp: 8, tp: 1, groups: 3, gpus_per_node: 4 };
         p.group_size();
+    }
+
+    #[test]
+    fn outer_cliques_cover_all_replicas() {
+        // (dp, tp, gpn) → (clique, nodes): cliques tile dp, last may be short.
+        assert_eq!(outer_cliques(8, 1, 4), (4, 2)); // Fig-7 regime: 4 replicas/node
+        assert_eq!(outer_cliques(32, 4, 4), (1, 32)); // Fig-8: TP fills the node
+        assert_eq!(outer_cliques(6, 1, 4), (4, 2)); // ragged last clique
+        assert_eq!(outer_cliques(2, 1, 8), (2, 1)); // whole job on one node
+        assert_eq!(outer_cliques(5, 2, 4), (2, 3));
+        assert_eq!(outer_cliques(1, 1, 4), (1, 1));
+        assert_eq!(outer_cliques(8, 1, 1), (1, 8)); // Vista shape
+        for (dp, sh, gpn) in [(8usize, 1usize, 4usize), (7, 2, 4), (16, 4, 4), (9, 1, 1)] {
+            let (clique, nodes) = outer_cliques(dp, sh, gpn);
+            assert!(clique >= 1 && nodes >= 1);
+            assert!(clique * nodes >= dp, "cliques must cover every replica");
+            assert!(clique * (nodes - 1) < dp, "no empty trailing clique");
+        }
     }
 
     #[test]

@@ -35,6 +35,57 @@ impl OptMode {
     }
 }
 
+/// Wire compression of the outer all-reduce's inter-node hop (extension;
+/// ZeRO++/Psyche-style block-quantized collectives, DESIGN.md §9).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OuterCompress {
+    /// Full-width fp32 deltas on the fabric — the paper's schedule and the
+    /// PR-default; bit-identical to the pre-compression sync paths.
+    None,
+    /// Block-wise symmetric int8 quantization of the pseudo-gradient delta
+    /// for the inter-node hop, with a persistent error-feedback residual
+    /// per node leader. Intra-node clique traffic stays full-width fp32
+    /// (the two-level schedule of `collective::hier_all_reduce_*`).
+    Int8,
+}
+
+/// Default quantization block of the int8 outer compression: one f32 scale
+/// per this many parameters. 4096 keeps the scale overhead at 4/(4·4096)
+/// ≈ 0.02 % while the block still fits L1 during the quantize sweep.
+pub const DEFAULT_QUANT_BLOCK: usize = 4096;
+
+impl OuterCompress {
+    pub fn parse(s: &str) -> Option<OuterCompress> {
+        match s.to_ascii_lowercase().as_str() {
+            "none" | "f32" | "fp32" => Some(OuterCompress::None),
+            "int8" => Some(OuterCompress::Int8),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OuterCompress::None => "none",
+            OuterCompress::Int8 => "int8",
+        }
+    }
+
+    /// Effective wire bytes per parameter of the inter-node outer hop —
+    /// the single number the cost models consume
+    /// (`netsim::des_outer_sync_compressed`,
+    /// `simulator::cost_outer_schedule_compressed`,
+    /// `outer_event_streaming`): 4 for fp32; 1 payload byte plus the
+    /// amortized per-block f32 scale for int8. The executed stats use the
+    /// exact integer [`wire formula`](crate::coordinator::compress::wire_bytes);
+    /// this continuous form converges to it for `n ≫ block`.
+    pub fn bytes_per_param(&self, block: usize) -> f64 {
+        match self {
+            OuterCompress::None => 4.0,
+            OuterCompress::Int8 => 1.0 + 4.0 / block.max(1) as f64,
+        }
+    }
+}
+
 /// Formulation of the outer Nesterov step (§V compares both).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum NesterovKind {
@@ -107,6 +158,18 @@ pub struct TrainConfig {
     /// partition the flat buffer disjointly. Requires `sync_fraction = 1`
     /// (the rotating partial sync is itself a fragment schedule).
     pub stream_fragments: usize,
+    /// Wire compression of the outer sync's inter-node hop (extension,
+    /// DESIGN.md §9): `int8` switches the outer collective to the
+    /// two-level schedule — full-width fp32 intra-node clique reduce,
+    /// block-quantized int8 delta exchange between node leaders with a
+    /// persistent error-feedback residual — cutting the fabric wire bytes
+    /// to ≈ ¼. `none` keeps every existing sync path bit-identical.
+    /// Composes with both `stream_fragments` and `sync_fraction` (the
+    /// fragment cores quantize per fragment).
+    pub outer_compress: OuterCompress,
+    /// Quantization block of the int8 compression: one f32 scale per this
+    /// many parameters. Ignored under `outer_compress = none`.
+    pub outer_quant_block: usize,
 
     /// Step the K groups concurrently on the scoped thread pool during the
     /// inner phase (default). `false` forces the legacy serial schedule —
@@ -143,6 +206,8 @@ impl TrainConfig {
             cpu_offload: false,
             sync_fraction: 1.0,
             stream_fragments: 0,
+            outer_compress: OuterCompress::None,
+            outer_quant_block: DEFAULT_QUANT_BLOCK,
             parallel_groups: true,
             eval_interval: 0,
             seed: 1234,
@@ -209,6 +274,8 @@ impl TrainConfig {
             ("cpu_offload", Json::Bool(self.cpu_offload)),
             ("sync_fraction", Json::num(self.sync_fraction)),
             ("stream_fragments", Json::num(self.stream_fragments as f64)),
+            ("outer_compress", Json::str(self.outer_compress.name())),
+            ("outer_quant_block", Json::num(self.outer_quant_block as f64)),
             ("parallel_groups", Json::Bool(self.parallel_groups)),
             ("eval_interval", Json::num(self.eval_interval as f64)),
             ("seed", Json::num(self.seed as f64)),
@@ -240,6 +307,14 @@ impl TrainConfig {
         c.cpu_offload = j.get("cpu_offload")?.as_bool()?;
         c.sync_fraction = j.get("sync_fraction").and_then(Json::as_f64).unwrap_or(1.0);
         c.stream_fragments = j.get("stream_fragments").and_then(Json::as_usize).unwrap_or(0);
+        // Pre-compression configs (no "outer_compress" key) keep loading
+        // and take the uncompressed paths; an unknown value is an error.
+        c.outer_compress = match j.get("outer_compress") {
+            Some(v) => OuterCompress::parse(v.as_str()?)?,
+            None => OuterCompress::None,
+        };
+        c.outer_quant_block =
+            j.get("outer_quant_block").and_then(Json::as_usize).unwrap_or(DEFAULT_QUANT_BLOCK);
         c.parallel_groups = j.get("parallel_groups").and_then(Json::as_bool).unwrap_or(true);
         c.eval_interval = j.get("eval_interval")?.as_usize()?;
         c.seed = j.get("seed")?.as_f64()? as u64;
@@ -292,6 +367,44 @@ mod tests {
         assert_eq!(c2.tp, 2);
         assert_eq!(c2.gpus_per_node, 1);
         assert_eq!(c2.stream_fragments, 4);
+    }
+
+    #[test]
+    fn json_roundtrips_outer_compress() {
+        let mut c = TrainConfig::default_for(100);
+        c.outer_compress = OuterCompress::Int8;
+        c.outer_quant_block = 128;
+        let j = c.to_json();
+        let c2 = TrainConfig::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(c2.outer_compress, OuterCompress::Int8);
+        assert_eq!(c2.outer_quant_block, 128);
+    }
+
+    #[test]
+    fn json_without_outer_compress_defaults_to_none() {
+        // Pre-compression configs (no "outer_compress"/"outer_quant_block"
+        // keys) must keep loading on the uncompressed paths.
+        let c = TrainConfig::default_for(100);
+        let j = c
+            .to_json()
+            .to_string()
+            .replace("\"outer_compress\":\"none\",", "")
+            .replace(&format!("\"outer_quant_block\":{DEFAULT_QUANT_BLOCK},"), "");
+        let c2 = TrainConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(c2.outer_compress, OuterCompress::None);
+        assert_eq!(c2.outer_quant_block, DEFAULT_QUANT_BLOCK);
+    }
+
+    #[test]
+    fn outer_compress_parse_and_bytes_per_param() {
+        assert_eq!(OuterCompress::parse("INT8"), Some(OuterCompress::Int8));
+        assert_eq!(OuterCompress::parse("none"), Some(OuterCompress::None));
+        assert_eq!(OuterCompress::parse("fp4"), None);
+        assert_eq!(OuterCompress::None.bytes_per_param(4096), 4.0);
+        let bpp = OuterCompress::Int8.bytes_per_param(4096);
+        assert!(bpp > 1.0 && bpp < 1.002, "{bpp}");
+        // the 4x wire cut the acceptance criterion pins: ≤ 0.30×
+        assert!(bpp / 4.0 <= 0.30);
     }
 
     #[test]

@@ -12,7 +12,12 @@
 //! (the single-sourced balanced partition shared with rotating partial
 //! sync), [`all_reduce_mean_fragment_into`] fragment reductions, the
 //! [`fragment_pipeline`] two-stage driver, and the overlapped-vs-exposed
-//! byte split in [`CommStats`].
+//! byte split in [`CommStats`]. The compressed outer sync (DESIGN.md §9)
+//! adds the volume layer: [`hier_all_reduce_fragment_into`] — full-width
+//! fp32 clique reduce on intra-node links, block-quantized int8 delta
+//! exchange between node leaders with error feedback
+//! ([`crate::coordinator::compress`]) — and the logical-vs-wire byte
+//! split in [`CommStats`].
 //!
 //! # Chunk parallelism
 //!
@@ -24,6 +29,7 @@
 //! layout buys wall-clock without touching numerics. `PIER_THREADS=1`
 //! forces the serial schedule.
 
+use crate::coordinator::compress::{self, HierState};
 use crate::util::par::{join_spans, span, MIN_SPAN};
 
 /// Logical communication accounting, split by **scope** the way the
@@ -62,6 +68,25 @@ pub struct CommStats {
     /// outer_allreduce_bytes` — the streaming schedule re-times the same
     /// traffic, it never changes the volume.
     pub outer_exposed_bytes: f64,
+    /// Bytes the outer scope actually puts **on the inter-node fabric**
+    /// (DESIGN.md §9): equal to `outer_allreduce_bytes` for fp32 syncs;
+    /// the block-quantized payload (`compress::wire_bytes`) when
+    /// `outer_compress = int8` shrinks the hop (to ≈ ¼ at real model
+    /// sizes). Compression changes the wire format, never the logical
+    /// tensor, so all schedule/overlap invariants stay on
+    /// `outer_allreduce_bytes`.
+    pub outer_wire_bytes: f64,
+    /// Intra-node clique traffic of the hierarchical compressed sync: the
+    /// full-width fp32 deltas the non-leader replicas move to their node
+    /// leader (one logical fragment payload per non-leader per event).
+    /// Rides NVLink like the TP scope; 0 for the flat (uncompressed)
+    /// schedules.
+    pub hier_intra_calls: u64,
+    pub hier_intra_bytes: f64,
+    /// §IV-C outer all-gathers ([`all_gather_into`]): logical bytes of the
+    /// gathered full tensor, recorded like the other collectives.
+    pub gather_calls: u64,
+    pub gather_bytes: f64,
     pub broadcast_calls: u64,
     pub broadcast_bytes: f64,
     /// Intra-node TP scope: per-step parameter all-gathers (bf16 payload).
@@ -76,29 +101,51 @@ impl CommStats {
     pub fn total_bytes(&self) -> f64 {
         self.inner_allreduce_bytes
             + self.outer_allreduce_bytes
+            + self.gather_bytes
             + self.broadcast_bytes
             + self.intra_node_bytes()
     }
 
-    /// Bytes that stay on intra-node links under the Megatron placement
-    /// (the TP scope) — the traffic Pier's argument keeps off the fabric.
+    /// Bytes that stay on intra-node links under the Megatron placement —
+    /// the TP scope plus the hierarchical sync's clique traffic — the
+    /// traffic Pier's argument keeps off the fabric.
     pub fn intra_node_bytes(&self) -> f64 {
-        self.tp_allgather_bytes + self.tp_reduce_scatter_bytes
+        self.tp_allgather_bytes + self.tp_reduce_scatter_bytes + self.hier_intra_bytes
     }
 
     /// Record one outer-scope all-reduce of `bytes` logical fp32 payload,
     /// tagged overlapped (hidden under the next round's compute in the
     /// streaming schedule) or exposed (paid at the barrier). Single-sourced
     /// so the overlapped + exposed = total invariant cannot drift between
-    /// the blocking, partial, and streaming paths.
+    /// the blocking, partial, and streaming paths. Uncompressed: the wire
+    /// carries the logical payload as-is.
     pub fn note_outer_allreduce(&mut self, bytes: f64, overlapped: bool) {
+        self.note_outer_allreduce_wire(bytes, bytes, overlapped);
+    }
+
+    /// [`CommStats::note_outer_allreduce`] with an explicit wire payload —
+    /// the compressed sync's entry point (DESIGN.md §9): `logical` is the
+    /// fp32 tensor the event reduces (what the schedule models price per
+    /// event and what the overlap split partitions), `wire` what the
+    /// inter-node hop physically moves.
+    /// (For spans much shorter than one quantization block the scale
+    /// overhead can make `wire > logical` — honest accounting, not an
+    /// error; at real model sizes `wire ≈ logical/4`.)
+    pub fn note_outer_allreduce_wire(&mut self, logical: f64, wire: f64, overlapped: bool) {
         self.outer_allreduce_calls += 1;
-        self.outer_allreduce_bytes += bytes;
+        self.outer_allreduce_bytes += logical;
+        self.outer_wire_bytes += wire;
         if overlapped {
-            self.outer_overlapped_bytes += bytes;
+            self.outer_overlapped_bytes += logical;
         } else {
-            self.outer_exposed_bytes += bytes;
+            self.outer_exposed_bytes += logical;
         }
+    }
+
+    /// Record the intra-node clique hop of one hierarchical sync event.
+    pub fn note_hier_intra(&mut self, bytes: f64) {
+        self.hier_intra_calls += 1;
+        self.hier_intra_bytes += bytes;
     }
 }
 
@@ -240,16 +287,30 @@ pub fn broadcast(src: &[f32], targets: &mut [&mut Vec<f32>], stats: &mut CommSta
     stats.broadcast_bytes += 4.0 * src.len() as f64 * targets.len() as f64;
 }
 
-/// All-gather: concatenate per-rank shards in rank order (used by the
-/// TP-sharded outer step of §IV-C: each TP rank gathers its model
-/// partition across DP ranks).
-pub fn all_gather(shards: &[&[f32]]) -> Vec<f32> {
+/// All-gather: concatenate per-rank shards in rank order into caller
+/// scratch (the §IV-C outer all-gather: each TP rank gathers its model
+/// partition across DP ranks). In-place over `out` — the last
+/// full-model-allocating collective was retired with this variant — and
+/// accounted through [`CommStats`] like the other collectives: the
+/// logical payload is the gathered full tensor (fp32); the netsim applies
+/// the `(n−1)/n` ring factor when costing it.
+pub fn all_gather_into(shards: &[&[f32]], out: &mut [f32], stats: &mut CommStats) {
+    concat_shards_into(shards, out, "all_gather_into");
+    stats.gather_calls += 1;
+    stats.gather_bytes += 4.0 * out.len() as f64;
+}
+
+/// Shared rank-order concatenation of [`all_gather_into`] and
+/// [`tp_all_gather_into`] (the latter records no bytes itself — its
+/// volumes are the per-step [`note_tp_step`] accounting).
+fn concat_shards_into(shards: &[&[f32]], out: &mut [f32], what: &str) {
     let total: usize = shards.iter().map(|s| s.len()).sum();
-    let mut out = Vec::with_capacity(total);
+    assert_eq!(total, out.len(), "{what}: shards do not tile out");
+    let mut lo = 0;
     for s in shards {
-        out.extend_from_slice(s);
+        out[lo..lo + s.len()].copy_from_slice(s);
+        lo += s.len();
     }
-    out
 }
 
 // ---------------------------------------------------------------- TP scope
@@ -335,6 +396,102 @@ where
     });
 }
 
+// ------------------------------------------------- hierarchical compressed
+
+/// The two-level compressed outer all-reduce of one fragment `[lo, hi)`
+/// (DESIGN.md §9). Topology: `group_params` are partitioned into
+/// `clique`-sized node cliques in group order (`config::outer_cliques`
+/// derives the clique width from the DP×TP placement). Three hops, the
+/// executed analog of ZeRO++/Psyche's hierarchical quantized collectives:
+///
+/// 1. **intra-node clique reduce** (full-width fp32, NVLink): each
+///    clique's summed delta `Σ params − c·anchor` lands on its leader,
+///    recorded in the [`CommStats`] `hier_intra` scope;
+/// 2. **quantized inter-node exchange**: each leader adds its persistent
+///    error-feedback residual, block-quantizes the result to int8
+///    ([`crate::coordinator::compress`]), keeps the new residual, and the
+///    leaders exchange the narrow payloads — one outer-scope call whose
+///    logical bytes are the fp32 fragment and whose wire bytes are
+///    [`compress::wire_bytes`];
+/// 3. **leader mean**: every leader dequantizes all payloads and reduces
+///    them in fixed node order (f64 accumulation, ÷ the replica count
+///    `k`), so all leaders compute the same mean-delta bits — written to
+///    `out`. (The intra-node re-broadcast of the restart point is the
+///    trainer's existing install step.)
+///
+/// Deterministic for any thread count (per-block quantization, fixed-order
+/// reductions). Unlike the fp32 fragment reduction this is *lossy*: the
+/// mean delta differs from the exact mean by at most one quantization
+/// step per node (bounded, and unbiased in the long run via the carried
+/// residuals — pinned by the property suite). Callers gate on
+/// `nodes > 1`: with every replica in one clique there is no fabric hop
+/// to compress and the fp32 path is both exact and free of scale
+/// overhead.
+#[allow(clippy::too_many_arguments)]
+pub fn hier_all_reduce_fragment_into(
+    group_params: &[&[f32]],
+    anchor: &[f32],
+    lo: usize,
+    hi: usize,
+    clique: usize,
+    block: usize,
+    state: &mut HierState,
+    out: &mut [f32],
+    overlapped: bool,
+    stats: &mut CommStats,
+) {
+    let k = group_params.len();
+    assert!(k > 0, "hier all-reduce without groups");
+    assert!(clique >= 1, "clique must be positive");
+    assert!(lo <= hi && hi <= anchor.len(), "fragment {lo}..{hi} of {}", anchor.len());
+    assert_eq!(out.len(), hi - lo, "hier_all_reduce_fragment_into: buffer/fragment mismatch");
+    let len = hi - lo;
+    let nodes = k.div_ceil(clique);
+    state.ensure(nodes, anchor.len());
+    let HierState { residuals, scratch, acc, qbuf } = state;
+    scratch.resize(len, 0.0);
+    acc.clear();
+    acc.resize(len, 0.0);
+
+    for j in 0..nodes {
+        let members = &group_params[j * clique..((j + 1) * clique).min(k)];
+        let slices: Vec<&[f32]> = members.iter().map(|g| &g[lo..hi]).collect();
+        all_reduce_sum_into(&slices, scratch);
+        // e = Σ params − c·anchor + residual: the clique's summed delta
+        // plus the leader's carried quantization error.
+        let c = members.len() as f32;
+        for ((e_i, &a), &r) in
+            scratch.iter_mut().zip(&anchor[lo..hi]).zip(&residuals[j][lo..hi])
+        {
+            *e_i = *e_i - c * a + r;
+        }
+        // Transmit deq(quant(e)); keep residual = e − deq(quant(e)).
+        compress::quantize_into(scratch, block, qbuf);
+        compress::dequantize_with_residual_into(qbuf, scratch, &mut residuals[j][lo..hi]);
+        // Fold this leader's payload into the f64 accumulator — per
+        // element, in fixed node order: the same accumulation structure
+        // the flat reduction uses, without holding all leaders at once.
+        for (a_i, &d) in acc.iter_mut().zip(scratch.iter()) {
+            *a_i += d as f64;
+        }
+        if members.len() > 1 {
+            stats.note_hier_intra(4.0 * len as f64 * (members.len() - 1) as f64);
+        }
+    }
+
+    // Leader mean over all k replicas (not over nodes) — identical bits
+    // on every leader (same payloads, same order).
+    let kf = k as f64;
+    for (o, &a_i) in out.iter_mut().zip(acc.iter()) {
+        *o = (a_i / kf) as f32;
+    }
+    stats.note_outer_allreduce_wire(
+        4.0 * len as f64,
+        compress::wire_bytes(len, block) as f64,
+        overlapped,
+    );
+}
+
 /// Executed in-process TP reduce-scatter: every rank `r` ends up owning
 /// the element-wise f64 **sum** of the `parts` (the TP ranks' partial
 /// results) over its [`shard_span`]. The single host buffer `out` stands
@@ -351,13 +508,7 @@ pub fn tp_reduce_scatter_into(parts: &[&[f32]], out: &mut [f32]) {
 /// shards (rank order) into `out` — re-materializing the full flat vector
 /// each rank needs before the next step's compute.
 pub fn tp_all_gather_into(shards: &[&[f32]], out: &mut [f32]) {
-    let total: usize = shards.iter().map(|s| s.len()).sum();
-    assert_eq!(total, out.len(), "tp_all_gather_into: shards do not tile out");
-    let mut lo = 0;
-    for s in shards {
-        out[lo..lo + s.len()].copy_from_slice(s);
-        lo += s.len();
-    }
+    concat_shards_into(shards, out, "tp_all_gather_into");
 }
 
 /// Intra-node TP accounting for one inner training step of one replica:
@@ -473,10 +624,145 @@ mod tests {
     }
 
     #[test]
-    fn all_gather_order() {
+    fn all_gather_into_orders_and_accounts() {
         let a = [1.0f32, 2.0];
         let b = [3.0f32];
-        assert_eq!(all_gather(&[&a, &b]), vec![1.0, 2.0, 3.0]);
+        let mut out = vec![0.0f32; 3];
+        let mut stats = CommStats::default();
+        all_gather_into(&[&a, &b], &mut out, &mut stats);
+        assert_eq!(out, vec![1.0, 2.0, 3.0]);
+        assert_eq!(stats.gather_calls, 1);
+        assert_eq!(stats.gather_bytes, 12.0);
+        assert_eq!(stats.total_bytes(), 12.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn all_gather_into_rejects_mismatched_scratch() {
+        let a = [1.0f32, 2.0];
+        let mut out = vec![0.0f32; 3];
+        all_gather_into(&[&a], &mut out, &mut CommStats::default());
+    }
+
+    #[test]
+    fn wire_accounting_splits_logical_and_wire() {
+        let mut stats = CommStats::default();
+        stats.note_outer_allreduce(40.0, false);
+        assert_eq!(stats.outer_wire_bytes, 40.0, "fp32: wire == logical");
+        stats.note_outer_allreduce_wire(40.0, 11.0, true);
+        assert_eq!(stats.outer_allreduce_bytes, 80.0);
+        assert_eq!(stats.outer_wire_bytes, 51.0);
+        // overlap split stays on logical bytes
+        assert_eq!(stats.outer_overlapped_bytes, 40.0);
+        assert_eq!(stats.outer_exposed_bytes, 40.0);
+    }
+
+    #[test]
+    fn hier_reduce_matches_flat_mean_within_quant_bound() {
+        // 6 groups in cliques of 4 → 2 nodes (ragged second clique). The
+        // compressed mean delta must sit within one quantization step per
+        // node of the exact fp32 mean delta, and the stats must carry the
+        // narrow wire payload plus the clique hop.
+        let n = 512;
+        let k = 6;
+        let block = 64;
+        let anchor: Vec<f32> = (0..n).map(|i| (i as f32 * 0.05).sin() * 0.3).collect();
+        let groups: Vec<Vec<f32>> = (0..k)
+            .map(|g| {
+                (0..n)
+                    .map(|i| anchor[i] + ((i + 37 * g) as f32 * 0.11).cos() * 0.1)
+                    .collect()
+            })
+            .collect();
+        let refs: Vec<&[f32]> = groups.iter().map(|g| g.as_slice()).collect();
+
+        // exact fp32 reference: mean(params) − anchor
+        let mean = all_reduce_mean(&refs);
+        let exact: Vec<f32> = mean.iter().zip(&anchor).map(|(&m, &a)| m - a).collect();
+
+        let mut state = HierState::default();
+        let mut out = vec![0.0f32; n];
+        let mut stats = CommStats::default();
+        hier_all_reduce_fragment_into(&refs, &anchor, 0, n, 4, block, &mut state, &mut out,
+                                      false, &mut stats);
+
+        // error bound: each node's deq error ≤ its max block scale, the
+        // mean divides by k and sums 2 nodes.
+        let max_scale =
+            state.qbuf.scales.iter().fold(0.0f32, |a, &s| a.max(s)) as f64;
+        let bound = 2.0 * max_scale + 1e-6;
+        for i in 0..n {
+            assert!(
+                ((out[i] - exact[i]) as f64).abs() <= bound,
+                "i={i}: |{} − {}| > {bound}",
+                out[i],
+                exact[i]
+            );
+        }
+        // stats: one outer call, logical fp32 volume, narrow wire, and the
+        // clique hop of the 3+1 non-leaders.
+        assert_eq!(stats.outer_allreduce_calls, 1);
+        assert_eq!(stats.outer_allreduce_bytes, 4.0 * n as f64);
+        assert_eq!(stats.outer_wire_bytes, compress::wire_bytes(n, block) as f64);
+        assert!(stats.outer_wire_bytes < 0.30 * stats.outer_allreduce_bytes);
+        assert_eq!(stats.hier_intra_calls, 2);
+        assert_eq!(stats.hier_intra_bytes, 4.0 * n as f64 * (3 + 1) as f64);
+        // residuals were left behind for the next round
+        assert!(state.residual_norm() > 0.0);
+    }
+
+    #[test]
+    fn hier_reduce_fragments_tile_like_the_full_pass() {
+        // Driving the same state over a fragment partition touches each
+        // residual range exactly once and accumulates the same wire bytes
+        // as one full pass (scale overhead aside, the partition is exact).
+        let n = 96;
+        let k = 4;
+        let anchor = vec![0.0f32; n];
+        let groups: Vec<Vec<f32>> = (0..k)
+            .map(|g| (0..n).map(|i| ((i * (g + 1)) as f32 * 0.07).sin()).collect())
+            .collect();
+        let refs: Vec<&[f32]> = groups.iter().map(|g| g.as_slice()).collect();
+        let mut full_state = HierState::default();
+        let mut full = vec![0.0f32; n];
+        let mut s_full = CommStats::default();
+        hier_all_reduce_fragment_into(&refs, &anchor, 0, n, 1, n, &mut full_state, &mut full,
+                                      false, &mut s_full);
+        let mut frag_state = HierState::default();
+        let mut assembled = vec![0.0f32; n];
+        let mut s_frag = CommStats::default();
+        let fragments = 3;
+        for idx in 0..fragments {
+            let (lo, hi) = fragment_span(n, fragments, idx);
+            let mut out = vec![0.0f32; hi - lo];
+            hier_all_reduce_fragment_into(&refs, &anchor, lo, hi, 1, n, &mut frag_state,
+                                          &mut out, idx + 1 < fragments, &mut s_frag);
+            assembled[lo..hi].copy_from_slice(&out);
+        }
+        // same logical volume; per-fragment quantization differs only by
+        // block alignment, so the assembled delta stays within one step of
+        // the full pass.
+        assert_eq!(s_full.outer_allreduce_bytes, s_frag.outer_allreduce_bytes);
+        // bound from the data: both passes quantize values bounded by the
+        // per-group amplitude 1.0 summed over... take the loose per-element
+        // bound 2·(max|e|/127) per node, k nodes, mean ÷ k → 2 steps.
+        let max_abs = groups
+            .iter()
+            .flat_map(|g| g.iter())
+            .fold(0.0f32, |a, &x| a.max(x.abs())) as f64;
+        let step = max_abs / 127.0;
+        for i in 0..n {
+            assert!(
+                ((assembled[i] - full[i]) as f64).abs() <= 2.0 * step + 1e-6,
+                "i={i}: |{} − {}| > {}",
+                assembled[i],
+                full[i],
+                2.0 * step
+            );
+        }
+        // clique = 1: no intra hop either way
+        assert_eq!(s_full.hier_intra_calls, 0);
+        assert_eq!(s_frag.hier_intra_bytes, 0.0);
     }
 
     #[test]

@@ -8,8 +8,11 @@
 //! * [`collective`] — deterministic in-process collectives with logical
 //!   volume accounting (intra-node TP vs intra-group vs global scope, plus
 //!   the streaming sync's overlapped-vs-exposed split), chunk-parallel
-//!   reductions, the DP×TP span sharding (DESIGN.md §4), and the fragment
-//!   partition + pipeline driver of the streaming outer sync (§8).
+//!   reductions, the DP×TP span sharding (DESIGN.md §4), the fragment
+//!   partition + pipeline driver of the streaming outer sync (§8), and the
+//!   two-level compressed outer reduce (§9).
+//! * [`compress`] — block-wise symmetric int8 quantization kernels and the
+//!   error-feedback residual state of the compressed outer sync (§9).
 //! * [`parallel`] — the scoped thread pool that steps all K groups
 //!   concurrently between outer syncs (deterministic by construction).
 //! * [`offload`] — §V's CPU offload of outer state, with byte/time
@@ -17,6 +20,7 @@
 //! * [`state`] — binary checkpoints.
 
 pub mod collective;
+pub mod compress;
 pub mod group;
 pub mod offload;
 pub mod outer;
@@ -24,10 +28,12 @@ pub mod parallel;
 pub mod state;
 pub mod trainer;
 
-pub use collective::{all_gather, all_reduce_mean, all_reduce_mean_fragment_into,
-                     all_reduce_mean_into, all_reduce_sum_into, broadcast, fragment_pipeline,
-                     fragment_span, note_tp_step, shard_span, tp_all_gather_into,
-                     tp_reduce_scatter_into, CommStats};
+pub use collective::{all_gather_into, all_reduce_mean, all_reduce_mean_fragment_into,
+                     all_reduce_mean_into, all_reduce_sum_into, broadcast,
+                     fragment_pipeline, fragment_span, hier_all_reduce_fragment_into,
+                     note_tp_step, shard_span, tp_all_gather_into, tp_reduce_scatter_into,
+                     CommStats};
+pub use compress::{HierState, QuantBuf};
 pub use group::WorkerGroup;
 pub use offload::{OffloadStats, OffloadStore};
 pub use outer::{OuterController, OuterResult};

@@ -60,11 +60,31 @@
 //! Fragments are defined on the unsharded flat vector, like the rotating
 //! partial sync, and the two extensions share the one
 //! [`fragment_span`] partition helper.
+//!
+//! # Compressed outer sync (DESIGN.md §9)
+//!
+//! With `cfg.outer_compress = int8` every fragment core — blocking, the
+//! rotating partial sync, and the streaming fragments alike — routes
+//! through [`hier_all_reduce_fragment_into`]: a full-width fp32 clique
+//! reduce on intra-node links, then a block-quantized int8 delta exchange
+//! between node leaders with persistent error-feedback residuals (owned
+//! here, in [`HierState`], so quantization error carries across rounds
+//! instead of biasing the trajectory). The Nesterov/schedule machinery
+//! downstream is byte-for-byte the fp32 path's; what changes is the
+//! transmitted delta (≤ one quantization step per node) and the wire
+//! bytes (`CommStats::outer_wire_bytes` ≈ ¼ of the logical fp32 volume).
+//! Warmup accumulation (Alg. 1) runs on the synchronized trajectory and
+//! is never compressed. When all replicas share one node
+//! (`config::outer_cliques` yields a single clique) there is no fabric
+//! hop and the sync falls back to the exact fp32 path, bit-identical to
+//! `outer_compress = none`.
 
-use crate::config::{OptMode, TrainConfig};
+use crate::config::{outer_cliques, OptMode, OuterCompress, TrainConfig};
 use crate::coordinator::collective::{fragment_pipeline, fragment_span,
+                                     hier_all_reduce_fragment_into,
                                      outer_all_reduce_fragment_into, outer_all_reduce_into,
                                      shard_span, CommStats};
+use crate::coordinator::compress::HierState;
 use crate::coordinator::offload::OffloadStore;
 use crate::optim::nesterov::OuterOpt;
 use crate::optim::schedule;
@@ -78,6 +98,10 @@ pub struct OuterController {
     /// Rotating fragment index for streaming partial sync (extension):
     /// counts fragments of the current cycle, in `[0, cycle_len)`.
     frag_cursor: usize,
+    /// Error-feedback residuals + scratch of the int8 compressed sync
+    /// (DESIGN.md §9). Empty until the first compressed sync; persists
+    /// across rounds so quantization error is re-injected, never lost.
+    hier: HierState,
     // ---- reusable full-model scratch (allocated once) ----
     mean: Vec<f32>,
     delta: Vec<f32>,
@@ -113,6 +137,7 @@ impl OuterController {
             anchor: init_params.to_vec(),
             store,
             frag_cursor: 0,
+            hier: HierState::default(),
             mean: vec![0.0; n],
             delta: vec![0.0; n],
             // The committed/restart views start at the init point so they
@@ -172,6 +197,22 @@ impl OuterController {
         stats: &mut CommStats,
     ) -> &[f32] {
         self.load_offloaded();
+
+        if self.cfg.outer_compress == OuterCompress::Int8 {
+            // Compressed blocking sync (DESIGN.md §9): the full model as
+            // one fragment through the shared fragment core, which routes
+            // to the two-level quantized reduce. Recorded as one
+            // outer-scope call (like the streaming fragments — the §IV-C
+            // per-shard split changes which rings carry the event, not
+            // its volume).
+            let n = self.anchor.len();
+            let (mu, lr) = self.fragment_outer_step(step, 0, n, group_params, false, stats);
+            self.last_mu = mu;
+            self.last_lr = lr;
+            self.outer_steps += 1;
+            self.refresh_offload();
+            return &self.restart;
+        }
 
         let tp = self.cfg.tp.max(1);
         if tp == 1 {
@@ -289,6 +330,19 @@ impl OuterController {
     /// extensions cannot drift. Returns the scheduled `(μ, lr)`;
     /// telemetry, counters, and offload bracketing stay with the callers
     /// (per event for partial, per last-fragment for streaming).
+    /// Under `outer_compress = int8` (DESIGN.md §9) only the *delta
+    /// production* changes: the two-level quantized reduce
+    /// ([`hier_all_reduce_fragment_into`]) yields the mean delta directly
+    /// — each clique's summed delta quantized with the leader's
+    /// error-feedback residual, exchanged narrow, averaged over the `k`
+    /// replicas — instead of the fp32 path's `mean − anchor` subtraction.
+    /// Everything downstream (schedule, the fragment Nesterov step, the
+    /// fragment-wise anchor move) is the one shared tail below, so
+    /// compression changes the transmitted delta (by ≤ one quantization
+    /// step per node, unbiased long-run via the residuals) and the wire
+    /// bytes — never the optimizer algebra. When all replicas share one
+    /// node there is no inter-node hop to compress, and the exact fp32
+    /// reduction runs — bit-identical to `outer_compress = none`.
     fn fragment_outer_step(
         &mut self,
         step: usize,
@@ -298,14 +352,31 @@ impl OuterController {
         overlapped: bool,
         stats: &mut CommStats,
     ) -> (f64, f64) {
-        outer_all_reduce_fragment_into(group_params, lo, hi, &mut self.mean[lo..hi],
-                                       overlapped, stats);
-        for ((d, &m), &a) in self.delta[lo..hi]
-            .iter_mut()
-            .zip(&self.mean[lo..hi])
-            .zip(&self.anchor[lo..hi])
-        {
-            *d = m - a;
+        let int8_clique = if self.cfg.outer_compress == OuterCompress::Int8 {
+            let (clique, nodes) = outer_cliques(
+                group_params.len(),
+                self.cfg.tp.max(1),
+                self.cfg.gpus_per_node.max(1),
+            );
+            (nodes > 1).then_some(clique)
+        } else {
+            None
+        };
+        if let Some(clique) = int8_clique {
+            let block = self.cfg.outer_quant_block.max(1);
+            let OuterController { anchor, delta, hier, .. } = self;
+            hier_all_reduce_fragment_into(group_params, &anchor[..], lo, hi, clique, block,
+                                          hier, &mut delta[lo..hi], overlapped, stats);
+        } else {
+            outer_all_reduce_fragment_into(group_params, lo, hi, &mut self.mean[lo..hi],
+                                           overlapped, stats);
+            for ((d, &m), &a) in self.delta[lo..hi]
+                .iter_mut()
+                .zip(&self.mean[lo..hi])
+                .zip(&self.anchor[lo..hi])
+            {
+                *d = m - a;
+            }
         }
         let (mu, lr) = self.schedule_at(step);
         self.opt.step_fragment_into(
@@ -322,6 +393,12 @@ impl OuterController {
         // sync's single end-of-step copy bit for bit.
         self.anchor[lo..hi].copy_from_slice(&self.restart[lo..hi]);
         (mu, lr)
+    }
+
+    /// L2 norm of the int8 sync's error-feedback residuals (0 before any
+    /// compressed sync) — telemetry for the drift tests and run logs.
+    pub fn compress_residual_norm(&self) -> f64 {
+        self.hier.residual_norm()
     }
 
     /// Number of fragments a streaming sync of this controller runs:
@@ -378,19 +455,15 @@ impl OuterController {
     /// bit-identical final state to [`Self::sync_in_place`] for any
     /// fragment count, with the overlapped/exposed byte split recorded in
     /// `stats`. Returns the restart point as a borrow of the controller's
-    /// buffer, like `sync_in_place`. (The trainer overlaps the fragments
-    /// through `collective::fragment_pipeline` instead of calling this
-    /// barrier form directly.)
+    /// buffer, like `sync_in_place`. Barrier form of the single
+    /// [`Self::drive_streaming`] driver.
     pub fn sync_streaming(
         &mut self,
         step: usize,
         group_params: &[&[f32]],
         stats: &mut CommStats,
     ) -> &[f32] {
-        let n_frags = self.stream_fragment_count();
-        for f in 0..n_frags {
-            self.sync_streaming_fragment(step, f, n_frags, group_params, stats);
-        }
+        self.drive_streaming(step, group_params, stats, None);
         &self.restart
     }
 
@@ -401,8 +474,7 @@ impl OuterController {
         &self.restart
     }
 
-    /// The **pipelined** streaming sync (DESIGN.md §8): drive the
-    /// fragments through [`fragment_pipeline`] — fragment `f+1`'s
+    /// The **pipelined** streaming sync (DESIGN.md §8): fragment `f+1`'s
     /// all-reduce + Nesterov step (producer thread) overlaps the assembly
     /// of fragment `f`'s restart payload into the caller's `staging`
     /// buffer (consumer) — leaving `staging` equal, bit for bit, to
@@ -410,7 +482,8 @@ impl OuterController {
     /// of the overlapped hot path: the trainer installs `staging` into
     /// the groups, and the CI-gated `outer_sync_streaming4_pipelined`
     /// bench measures exactly this method, so the gate cannot drift from
-    /// the code it protects. Serializes (with the same results) under
+    /// the code it protects. Serializes (with the same results and
+    /// without the per-fragment decoupling copies) under
     /// `PIER_THREADS=1`.
     pub fn sync_streaming_pipelined(
         &mut self,
@@ -420,19 +493,49 @@ impl OuterController {
         staging: &mut [f32],
     ) {
         assert_eq!(staging.len(), self.anchor.len(), "staging/model size mismatch");
+        self.drive_streaming(step, group_params, stats, Some(staging));
+    }
+
+    /// THE streaming driver, single-sourced behind both public forms (the
+    /// PR-3 barrier/pipelined split left two near-identical drivers; this
+    /// is their merge): an in-order pass over the balanced fragments, run
+    /// through [`fragment_pipeline`] when a consumer stage exists to
+    /// overlap with (`staging` + multiple fragments + threads available),
+    /// or as the plain serial loop otherwise — where a pipeline would
+    /// only add per-fragment payload copies. Both schedules produce
+    /// identical bits by the §8 contract; only wall-clock differs.
+    fn drive_streaming(
+        &mut self,
+        step: usize,
+        group_params: &[&[f32]],
+        stats: &mut CommStats,
+        staging: Option<&mut [f32]>,
+    ) {
         let n_frags = self.stream_fragment_count();
-        let ctl = self;
-        fragment_pipeline(
-            n_frags,
-            |f| {
-                let (lo, hi) =
-                    ctl.sync_streaming_fragment(step, f, n_frags, group_params, stats);
-                (lo, ctl.last_restart()[lo..hi].to_vec())
-            },
-            |_, (lo, frag): (usize, Vec<f32>)| {
-                staging[lo..lo + frag.len()].copy_from_slice(&frag);
-            },
-        );
+        match staging {
+            Some(staging) if n_frags > 1 && crate::util::par::max_threads() > 1 => {
+                let ctl = self;
+                fragment_pipeline(
+                    n_frags,
+                    |f| {
+                        let (lo, hi) =
+                            ctl.sync_streaming_fragment(step, f, n_frags, group_params, stats);
+                        (lo, ctl.last_restart()[lo..hi].to_vec())
+                    },
+                    |_, (lo, frag): (usize, Vec<f32>)| {
+                        staging[lo..lo + frag.len()].copy_from_slice(&frag);
+                    },
+                );
+            }
+            staging => {
+                for f in 0..n_frags {
+                    self.sync_streaming_fragment(step, f, n_frags, group_params, stats);
+                }
+                if let Some(staging) = staging {
+                    staging.copy_from_slice(&self.restart);
+                }
+            }
+        }
     }
 
     fn schedule_at(&self, step: usize) -> (f64, f64) {
@@ -792,6 +895,154 @@ mod tests {
         assert_eq!(OuterController::new(&c, &init).stream_fragment_count(), 4);
         c.stream_fragments = 100; // more fragments than parameters
         assert_eq!(OuterController::new(&c, &init).stream_fragment_count(), 6);
+    }
+
+    fn cfg_int8(gpn: usize, block: usize) -> TrainConfig {
+        let mut c = cfg(OptMode::DiLoCo); // fixed outer schedule
+        c.outer_compress = crate::config::OuterCompress::Int8;
+        c.outer_quant_block = block;
+        c.gpus_per_node = gpn;
+        c
+    }
+
+    #[test]
+    fn int8_sync_tracks_fp32_within_quant_bound_and_cuts_wire() {
+        let n = 300;
+        let init: Vec<f32> = (0..n).map(|i| (i as f32 * 0.03).sin() * 0.2).collect();
+        let groups: Vec<Vec<f32>> = (0..4)
+            .map(|g| {
+                (0..n)
+                    .map(|i| init[i] + ((i + 101 * g) as f32 * 0.07).cos() * 0.05)
+                    .collect()
+            })
+            .collect();
+        let refs: Vec<&[f32]> = groups.iter().map(|g| g.as_slice()).collect();
+        let mut exact = OuterController::new(&cfg(OptMode::DiLoCo), &init);
+        let mut quant = OuterController::new(&cfg_int8(1, 64), &init); // 4 groups → 4 nodes
+        let mut se = CommStats::default();
+        let mut sq = CommStats::default();
+        let re: Vec<f32> = exact.sync_in_place(100, &refs, &mut se).to_vec();
+        let rq: Vec<f32> = quant.sync_in_place(100, &refs, &mut sq).to_vec();
+        // lr ≤ 0.7·1.9 amplifies the delta error; deltas are ~0.05-scale,
+        // so one step per node (4 nodes, ÷4 in the mean) stays small.
+        let step_bound = 0.05 / 127.0 * 4.0; // generous: 4 un-averaged steps
+        for i in 0..n {
+            assert!(
+                (re[i] - rq[i]).abs() <= step_bound as f32 * 2.0,
+                "i={i}: fp32 {} vs int8 {}",
+                re[i],
+                rq[i]
+            );
+        }
+        // wire scope: logical volumes match the fp32 run; the fabric bytes
+        // shrank to the quantized payload.
+        assert_eq!(se.outer_allreduce_bytes, sq.outer_allreduce_bytes);
+        assert_eq!(se.outer_wire_bytes, se.outer_allreduce_bytes);
+        assert!(sq.outer_wire_bytes < 0.30 * sq.outer_allreduce_bytes,
+                "wire {} vs logical {}", sq.outer_wire_bytes, sq.outer_allreduce_bytes);
+        // error feedback: the residuals survived for the next round
+        assert_eq!(exact.compress_residual_norm(), 0.0);
+        assert!(quant.compress_residual_norm() > 0.0);
+    }
+
+    #[test]
+    fn int8_error_feedback_reinjects_quantization_error() {
+        // Freeze the group params and sync twice: without EF the second
+        // sync would transmit the same clipped delta again; with EF the
+        // cumulative transmitted delta approaches the cumulative true
+        // delta (the residual is re-injected, so what was lost in round 1
+        // ships in round 2).
+        let n = 128;
+        let init = vec![0.0f32; n];
+        let g1: Vec<f32> = (0..n).map(|i| ((i as f32) * 0.13).sin() * 0.01 + 0.1).collect();
+        let g2: Vec<f32> = (0..n).map(|i| ((i as f32) * 0.29).cos() * 0.01 + 0.1).collect();
+        let refs = [g1.as_slice(), g2.as_slice()]; // 2 groups → 2 node leaders
+        let mut ctl = OuterController::new(&cfg_int8(1, n), &init);
+        // DiLoCo: μ=0.9, lr=0.7 fixed — the exact controller is the oracle.
+        let mut exact = OuterController::new(&cfg(OptMode::DiLoCo), &init);
+        let mut s1 = CommStats::default();
+        let mut s2 = CommStats::default();
+        let mut worst = 0.0f64;
+        for step in [100usize, 200, 300, 400] {
+            let rq: Vec<f32> = ctl.sync_in_place(step, &refs, &mut s1).to_vec();
+            let re: Vec<f32> = exact.sync_in_place(step, &refs, &mut s2).to_vec();
+            let err = rq
+                .iter()
+                .zip(&re)
+                .map(|(&a, &b)| ((a - b) as f64).abs())
+                .fold(0.0f64, f64::max);
+            worst = worst.max(err);
+        }
+        // With one group the quantization input is ~0.1-scale → step ~8e-4;
+        // EF keeps the trajectory within a few steps of the oracle even
+        // after 4 compounding rounds.
+        assert!(worst < 0.01, "int8 trajectory drifted {worst}");
+        // and wire stayed narrow every round (block = n → one scale)
+        assert_eq!(s1.outer_allreduce_calls, 4);
+        assert_eq!(s1.outer_wire_bytes, 4.0 * (n + 4) as f64);
+    }
+
+    #[test]
+    fn int8_single_node_falls_back_to_exact_fp32_bitwise() {
+        // 2 groups, 4 replicas/node → one clique: no fabric hop, so the
+        // compressed config must take the exact path, bit-identical to
+        // `outer_compress = none`, wire == logical.
+        let n = 64;
+        let init: Vec<f32> = (0..n).map(|i| (i as f32 * 0.19).sin()).collect();
+        let g1: Vec<f32> = (0..n).map(|i| (i as f32 * 0.41).cos()).collect();
+        let g2: Vec<f32> = (0..n).map(|i| (i as f32 * 0.61).sin() * 1.3).collect();
+        let mut plain = OuterController::new(&cfg(OptMode::DiLoCo), &init);
+        let mut compressed = OuterController::new(&cfg_int8(4, 64), &init);
+        let mut sp = CommStats::default();
+        let mut sc = CommStats::default();
+        let rp: Vec<u32> =
+            plain.sync_in_place(100, &[&g1, &g2], &mut sp).iter().map(|x| x.to_bits()).collect();
+        let rc: Vec<u32> = compressed
+            .sync_in_place(100, &[&g1, &g2], &mut sc)
+            .iter()
+            .map(|x| x.to_bits())
+            .collect();
+        assert_eq!(rp, rc);
+        assert_eq!(sc.outer_wire_bytes, sc.outer_allreduce_bytes);
+        assert_eq!(compressed.compress_residual_norm(), 0.0);
+    }
+
+    #[test]
+    fn int8_composes_with_streaming_and_partial_fragments() {
+        // Streaming: the compressed fragments must cover the model, carry
+        // the overlap split on logical bytes, and keep wire narrow.
+        let n = 120;
+        let init = vec![0.0f32; n];
+        let g1: Vec<f32> = (0..n).map(|i| (i as f32 * 0.11).sin() * 0.3).collect();
+        let g2: Vec<f32> = (0..n).map(|i| (i as f32 * 0.23).cos() * 0.3).collect();
+        let mut c = cfg_int8(1, 32);
+        c.stream_fragments = 3;
+        let mut ctl = OuterController::new(&c, &init);
+        let mut stats = CommStats::default();
+        ctl.sync_streaming(100, &[&g1, &g2], &mut stats);
+        assert_eq!(stats.outer_allreduce_calls, 3);
+        assert_eq!(stats.outer_allreduce_bytes, 4.0 * n as f64);
+        assert_eq!(stats.outer_overlapped_bytes + stats.outer_exposed_bytes,
+                   stats.outer_allreduce_bytes);
+        assert!(stats.outer_overlapped_bytes > 0.0);
+        assert!(stats.outer_wire_bytes < 0.5 * stats.outer_allreduce_bytes);
+
+        // Partial rotation: every parameter synced exactly once per cycle,
+        // each fragment quantized on its turn.
+        let mut cp = cfg_int8(1, 32);
+        cp.sync_fraction = 0.4;
+        let mut ctl_p = OuterController::new(&cp, &init);
+        let mut sp = CommStats::default();
+        let mut touched = vec![0u32; n];
+        for _ in 0..ctl_p.partial_cycle_len() {
+            let p = ctl_p.sync_partial(100, &[&g1, &g2], &mut sp);
+            for t in &mut touched[p.lo..p.hi] {
+                *t += 1;
+            }
+        }
+        assert!(touched.iter().all(|&t| t == 1));
+        assert!(sp.outer_wire_bytes < 0.5 * sp.outer_allreduce_bytes);
+        assert!(ctl_p.compress_residual_norm() > 0.0);
     }
 
     #[test]

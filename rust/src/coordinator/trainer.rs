@@ -62,6 +62,16 @@
 //! `netsim::des_outer_sync_streaming` and
 //! `simulator::cost_outer_schedule_streaming` price.
 //!
+//! **Compressed outer sync** (`cfg.outer_compress = int8`, DESIGN.md §9):
+//! every fragment core the sync paths above run routes through the
+//! two-level quantized reduce — full-width fp32 clique reduce intra-node,
+//! block-quantized int8 delta exchange with error feedback between node
+//! leaders — so compression composes with blocking, streaming, and
+//! partial schedules alike. The recorded events carry both the logical
+//! fp32 volume (what the overlap split and schedule models price) and the
+//! wire bytes the fabric actually moved
+//! (`CommStatsSnapshot.outer_wire_bytes` ≈ ¼ of logical at real sizes).
+//!
 //! Schedule indexing: all outer-schedule queries (Alg. 1 warmup, Alg. 2
 //! μ/lr) use the number of **completed** inner steps, i.e. `t + 1` after
 //! performing 0-based step `t` — see the `coordinator::outer` module docs
@@ -78,7 +88,7 @@
 use anyhow::{ensure, Context, Result};
 use xla::Literal;
 
-use crate::config::{OptMode, TrainConfig};
+use crate::config::{OptMode, OuterCompress, TrainConfig};
 use crate::coordinator::collective::{note_inner_allreduce, note_tp_step, tp_all_gather_into,
                                      tp_reduce_scatter_into, CommStats};
 use crate::coordinator::group::WorkerGroup;
@@ -372,6 +382,7 @@ impl Trainer {
         self.flats.ensure(k, n);
         let engine = self.engine();
         let outer_bytes_before = self.stats.outer_allreduce_bytes;
+        let outer_wire_before = self.stats.outer_wire_bytes;
 
         // 1. flatten every group into its pooled buffer (parallel, no alloc)
         {
@@ -429,11 +440,13 @@ impl Trainer {
         }
         // Record the event for schedule cross-validation: the logical fp32
         // volume this sync actually all-reduced (full model, or the
-        // rotating fragment) and its fragment schedule, costable by the
-        // simulator/DES (DESIGN.md §5, §8).
+        // rotating fragment), the bytes its inter-node hop put on the wire
+        // (narrower under `outer_compress = int8`, DESIGN.md §9), and its
+        // fragment schedule — costable by the simulator/DES (§5, §8).
         self.log.outer_events.push(OuterEvent {
             step,
             bytes: self.stats.outer_allreduce_bytes - outer_bytes_before,
+            wire_bytes: self.stats.outer_wire_bytes - outer_wire_before,
             fragments: event_fragments,
         });
         Ok(())
@@ -585,6 +598,14 @@ fn cfg_validate(cfg: &TrainConfig, man: &Manifest) -> Result<()> {
         "stream_fragments requires full sync (sync_fraction = 1): the rotating \
          partial sync is already a fragment schedule (DESIGN.md §8)"
     );
+    if cfg.outer_compress == OuterCompress::Int8 {
+        ensure!(
+            cfg.mode != OptMode::AdamW,
+            "outer_compress = int8 requires an outer optimizer (DiLoCo/Pier): \
+             AdamW has no outer sync to compress (DESIGN.md §9)"
+        );
+        ensure!(cfg.outer_quant_block > 0, "outer_quant_block must be positive");
+    }
     if let Err(e) = cfg.parallel().validate() {
         anyhow::bail!("invalid DP×TP layout: {e}");
     }

@@ -5,7 +5,8 @@
 //! baseline only); the comparisons — who wins, by what factor, where the
 //! efficiency knees fall — are model predictions.
 
-use crate::config::{model_or_die, OptMode};
+use crate::config::{model_or_die, OptMode, OuterCompress, DEFAULT_QUANT_BLOCK};
+use crate::coordinator::compress::wire_bytes;
 use crate::metrics::scaling_efficiency;
 use crate::perfmodel::gpu::{ClusterSpec, PERLMUTTER, VISTA};
 use crate::simulator::run::{simulate_run, speedup_at, Calib, SimSetup};
@@ -59,6 +60,8 @@ fn base_setup(
         pp: 1,
         sync_fraction: 1.0,
         stream_fragments: 0,
+        outer_compress: OuterCompress::None,
+        outer_quant_block: DEFAULT_QUANT_BLOCK,
         groups,
         global_batch: 512,
         sync_interval: h,
@@ -178,6 +181,78 @@ pub fn fig8() -> FigureData {
     FigureData { title: "Fig 8 — gpt2-7b, TP=4, Perlmutter, H=50".into(), rows }
 }
 
+/// One row of the Fig-8 relaxation-ladder companion: the same DP×TP scale
+/// point under the three outer-sync schedules, plus the wire cut.
+#[derive(Clone, Debug)]
+pub struct Fig8CompressRow {
+    pub world: usize,
+    /// Pier, blocking outer sync (the PR-2 schedule).
+    pub t_blocking: f64,
+    /// Pier, streaming outer sync, 4 fragments (the PR-3 schedule).
+    pub t_streaming: f64,
+    /// Pier, streaming + int8 compressed outer sync (DESIGN.md §9).
+    pub t_int8: f64,
+    /// Inter-node outer wire bytes as a fraction of the fp32 baseline
+    /// (the executed `compress::wire_bytes` formula at the 7B size) —
+    /// 1.0 on rows without a fabric hop, where compression never engages
+    /// and the run is priced exactly as fp32.
+    pub wire_ratio: f64,
+}
+
+/// Fig 8 companion (DESIGN.md §9): the outer-sync relaxation ladder on
+/// the Fig-8 configs — blocking → streaming(F=4) → streaming+int8 — as
+/// modeled total runtime. Streaming relaxes the sync in *time*, int8 in
+/// *volume*; the two compose multiplicatively, which is why the ladder is
+/// monotone on every row with a fabric hop (`dp ≥ 2`; the one-node row is
+/// flat — nothing to relax). Pinned by `rust/tests/dp_tp_crossval.rs`.
+pub fn fig8_compressed() -> Vec<Fig8CompressRow> {
+    let mut setup = base_setup("gpt2-7b", &PERLMUTTER, 4, 1, 50, 4);
+    setup.cpu_offload = true;
+    let n_params = setup.model.n_params();
+    let int8_ratio =
+        wire_bytes(n_params, setup.outer_quant_block) as f64 / (4 * n_params) as f64;
+    [4usize, 8, 16, 32, 64, 128, 256]
+        .iter()
+        .map(|&w| {
+            let mut blocking = setup.clone();
+            blocking.world = w;
+            blocking.groups = w / 4; // one group per node (per DP replica)
+            let mut streaming = blocking.clone();
+            streaming.stream_fragments = 4;
+            let mut int8 = streaming.clone();
+            int8.outer_compress = OuterCompress::Int8;
+            // The one-node row (dp = 1) has no fabric hop: compression
+            // never engages and the wire stays at the fp32 width.
+            let dp = w / setup.tp;
+            let (_, nodes) =
+                crate::config::outer_cliques(dp, setup.tp, setup.cluster.gpus_per_node);
+            Fig8CompressRow {
+                world: w,
+                t_blocking: simulate_run(&blocking).total_secs,
+                t_streaming: simulate_run(&streaming).total_secs,
+                t_int8: simulate_run(&int8).total_secs,
+                wire_ratio: if nodes > 1 { int8_ratio } else { 1.0 },
+            }
+        })
+        .collect()
+}
+
+/// Print the Fig-8 relaxation ladder in the paper's table style.
+pub fn print_fig8_compressed(rows: &[Fig8CompressRow]) {
+    println!("\n== Fig 8 companion — outer-sync relaxation ladder, gpt2-7b, TP=4, H=50 ==");
+    println!(
+        "{:>6} {:>14} {:>16} {:>16} {:>10}",
+        "GPUs", "blocking (s)", "stream F=4 (s)", "+int8 wire (s)", "wire/fp32"
+    );
+    for r in rows {
+        println!(
+            "{:>6} {:>14.0} {:>16.0} {:>16.0} {:>9.1}%",
+            r.world, r.t_blocking, r.t_streaming, r.t_int8,
+            100.0 * r.wire_ratio
+        );
+    }
+}
+
 /// Calibration report: modeled AdamW scaling efficiencies at the paper's
 /// quoted anchor points (§I, §VI-B). The constants in
 /// [`crate::simulator::run::Calib`] are tuned until these land near the
@@ -283,6 +358,26 @@ mod tests {
         // within one node Pier gains little; beyond, a lot (paper Fig 7)
         assert!(r4.speedup < 1.2, "{}", r4.speedup);
         assert!(r64.speedup > 1.5, "{}", r64.speedup);
+    }
+
+    #[test]
+    fn fig8_compressed_ladder_is_monotone() {
+        let rows = fig8_compressed();
+        assert_eq!(rows.len(), 7);
+        for r in &rows {
+            if r.world <= 4 {
+                // one node, dp=1: no fabric hop — nothing to relax, and
+                // the table must not claim a wire cut that never happened
+                assert_eq!(r.wire_ratio, 1.0);
+                assert_eq!(r.t_blocking, r.t_streaming);
+                assert_eq!(r.t_streaming, r.t_int8);
+            } else {
+                assert!(r.wire_ratio <= 0.30, "wire ratio {}", r.wire_ratio);
+                assert!(r.t_streaming < r.t_blocking, "world={}", r.world);
+                assert!(r.t_int8 < r.t_streaming, "world={}: int8 must improve on \
+                         streaming-only ({} vs {})", r.world, r.t_int8, r.t_streaming);
+            }
+        }
     }
 
     #[test]

@@ -14,7 +14,7 @@
 
 use anyhow::{anyhow, bail, Result};
 
-use pier::config::{model_or_die, OptMode, MODELS};
+use pier::config::{model_or_die, OptMode, OuterCompress, MODELS};
 use pier::coordinator::{Checkpoint, Trainer};
 use pier::figures;
 use pier::metrics::RunLog;
@@ -52,11 +52,13 @@ fn print_usage() {
          commands:\n\
            train     --model nano --mode pier|diloco|adamw --iters N --groups K\n\
                      --batch B --interval H [--tp T] [--stream-fragments F]\n\
+                     [--outer-compress none|int8] [--quant-block B]\n\
                      [--offload] [--csv out.csv] [--ckpt out.ckpt]\n\
            eval      --model nano --ckpt file.ckpt\n\
            simulate  --model gpt2-xl --cluster perlmutter|vista --world N\n\
                      [--tp T] [--groups K] [--interval H] [--mode pier|adamw]\n\
-                     [--stream-fragments F]\n\
+                     [--stream-fragments F] [--outer-compress none|int8]\n\
+                     [--quant-block B]\n\
            repro     fig1|fig3|fig4|fig5|fig6|fig7|fig8|table2|table3|table4|\n\
                      ablation|calibration|sim-all [--iters N] [--model nano|micro|mini]\n\
            config    [--model name]\n\
@@ -90,6 +92,15 @@ fn summarize(log: &RunLog) {
             log.comm.outer_exposed_bytes / 1e6
         );
     }
+    if log.comm.outer_wire_bytes != log.comm.outer_allreduce_bytes
+        && log.comm.outer_allreduce_bytes > 0.0
+    {
+        println!(
+            "  comm (outer, int8 wire): {:.1} MB on the fabric ({:.1}% of fp32)",
+            log.comm.outer_wire_bytes / 1e6,
+            100.0 * log.comm.outer_wire_bytes / log.comm.outer_allreduce_bytes
+        );
+    }
     if log.comm.tp_bytes > 0.0 {
         println!("  comm (intra-node TP): {:.1} MB", log.comm.tp_bytes / 1e6);
     }
@@ -107,6 +118,12 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.sync_interval = args.usize_or("interval", cfg.sync_interval);
     cfg.tp = args.usize_or("tp", cfg.tp);
     cfg.stream_fragments = args.usize_or("stream-fragments", cfg.stream_fragments);
+    cfg.outer_compress = match args.get("outer-compress") {
+        Some(s) => OuterCompress::parse(s)
+            .ok_or_else(|| anyhow!("--outer-compress must be none|int8"))?,
+        None => cfg.outer_compress,
+    };
+    cfg.outer_quant_block = args.usize_or("quant-block", cfg.outer_quant_block);
     cfg.cpu_offload = args.flag("offload");
     cfg.seed = args.u64_or("seed", cfg.seed);
     cfg.eval_interval = args.usize_or("eval-interval", cfg.eval_interval);
@@ -176,6 +193,16 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         pp: args.usize_or("pp", 1),
         sync_fraction: args.f64_or("sync-fraction", 1.0),
         stream_fragments: args.usize_or("stream-fragments", 0),
+        outer_compress: match args.get("outer-compress") {
+            Some(s) => OuterCompress::parse(s)
+                .ok_or_else(|| anyhow!("--outer-compress must be none|int8"))?,
+            None => OuterCompress::None,
+        },
+        outer_quant_block: match args.usize_or("quant-block", pier::config::DEFAULT_QUANT_BLOCK)
+        {
+            0 => bail!("--quant-block must be positive"),
+            b => b,
+        },
         groups: args.usize_or("groups", world),
         global_batch: args.usize_or("batch", 512),
         sync_interval: args.usize_or("interval", 50),
@@ -201,6 +228,21 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     } else {
         println!("  outer event: {:.3}s", r.outer_event_secs);
     }
+    if s.outer_compress == OuterCompress::Int8 {
+        // Only claim a wire cut when the topology has an inter-node hop to
+        // compress — single-node runs are priced exactly like fp32.
+        let (_, nodes) =
+            pier::config::outer_cliques(s.dp(), s.tp * s.pp, s.cluster.gpus_per_node);
+        if nodes > 1 {
+            println!(
+                "  outer wire: int8 block-quantized — {:.1}% of the fp32 bytes inter-node",
+                100.0 * s.outer_compress.bytes_per_param(s.outer_quant_block) / 4.0
+            );
+        } else {
+            println!("  outer wire: int8 requested, but all replicas share one node — \
+                      no fabric hop, priced as fp32");
+        }
+    }
     println!("  total ({} iters): {:.0}s = {:.2}h", s.iterations, r.total_secs,
              r.total_secs / 3600.0);
     Ok(())
@@ -224,7 +266,10 @@ fn cmd_repro(args: &Args) -> Result<()> {
             figures::fig7("vista", 50).print();
             figures::fig7("vista", 500).print();
         }
-        "fig8" => figures::fig8().print(),
+        "fig8" => {
+            figures::fig8().print();
+            figures::print_fig8_compressed(&figures::fig8_compressed());
+        }
         "calibration" => {
             println!("{:<44} {:>8} {:>8}", "anchor", "paper", "model");
             for p in figures::calibration_report() {
@@ -240,6 +285,7 @@ fn cmd_repro(args: &Args) -> Result<()> {
             figures::fig7("vista", 50).print();
             figures::fig7("vista", 500).print();
             figures::fig8().print();
+            figures::print_fig8_compressed(&figures::fig8_compressed());
         }
         "fig1" => {
             let rt = Runtime::cpu()?;

@@ -30,6 +30,12 @@ pub struct OuterEvent {
     /// Logical fp32 bytes all-reduced by the event (the full model delta,
     /// or the rotating fragment under streaming partial sync).
     pub bytes: f64,
+    /// Bytes the event's inter-node hop put on the wire: equal to `bytes`
+    /// for fp32 syncs, the block-quantized payload under
+    /// `outer_compress = int8` (DESIGN.md §9). The effective
+    /// bytes-per-param the compressed cost models consume is
+    /// `wire_bytes / (bytes / 4)`.
+    pub wire_bytes: f64,
     /// Fragment schedule of the event: 1 for a blocking sync (and for each
     /// rotating partial-sync event), the `stream_fragments` pipeline depth
     /// for a streaming overlapped sync (DESIGN.md §8). Extract the whole
@@ -64,8 +70,18 @@ pub struct CommStatsSnapshot {
     /// `outer_overlapped_bytes + outer_exposed_bytes ==
     /// outer_allreduce_bytes`.
     pub outer_exposed_bytes: f64,
+    /// Bytes the outer scope put on the inter-node fabric (DESIGN.md §9):
+    /// equals `outer_allreduce_bytes` for fp32 runs; the int8-compressed
+    /// runs' 4x wire cut shows up here (≈ 0.25× at real model sizes).
+    pub outer_wire_bytes: f64,
+    /// §IV-C outer all-gather traffic (`collective::all_gather_into`);
+    /// counted in `CommStats::total_bytes` and surfaced here so the
+    /// snapshot's scopes sum to the same total.
+    pub gather_bytes: f64,
     pub broadcast_bytes: f64,
-    /// Intra-node tensor-parallel traffic (all-gather + reduce-scatter).
+    /// Intra-node traffic: the tensor-parallel all-gather/reduce-scatter
+    /// pairs plus the hierarchical compressed sync's clique hop
+    /// (`CommStats::intra_node_bytes`).
     pub tp_bytes: f64,
     /// Outer synchronization events. `From<&CommStats>` seeds this with
     /// the all-reduce call count (equal under pure DP); the trainer
@@ -82,6 +98,8 @@ impl From<&CommStats> for CommStatsSnapshot {
             outer_allreduce_bytes: s.outer_allreduce_bytes,
             outer_overlapped_bytes: s.outer_overlapped_bytes,
             outer_exposed_bytes: s.outer_exposed_bytes,
+            outer_wire_bytes: s.outer_wire_bytes,
+            gather_bytes: s.gather_bytes,
             broadcast_bytes: s.broadcast_bytes,
             tp_bytes: s.intra_node_bytes(),
             outer_steps: s.outer_allreduce_calls,
@@ -100,6 +118,15 @@ impl RunLog {
     /// event's own fragment count.
     pub fn outer_schedule(&self) -> Vec<(f64, usize)> {
         self.outer_events.iter().map(|e| (e.bytes, e.fragments)).collect()
+    }
+
+    /// The recorded schedule priced at **wire** volumes (DESIGN.md §9):
+    /// what the fabric physically moved per event — feed these to the same
+    /// schedule costers to get the compressed makespan, cross-validated in
+    /// `rust/tests/dp_tp_crossval.rs`. Equal to [`RunLog::outer_schedule`]
+    /// for uncompressed runs.
+    pub fn outer_wire_schedule(&self) -> Vec<(f64, usize)> {
+        self.outer_events.iter().map(|e| (e.wire_bytes, e.fragments)).collect()
     }
 
     /// Largest validation-loss increase over the previous eval point in the
@@ -215,6 +242,38 @@ mod tests {
         assert_eq!(snap.outer_exposed_bytes, 10.0);
         assert_eq!(snap.outer_overlapped_bytes + snap.outer_exposed_bytes,
                    snap.outer_allreduce_bytes);
+        assert_eq!(snap.outer_wire_bytes, 40.0, "fp32: wire == logical");
+    }
+
+    #[test]
+    fn snapshot_carries_the_wire_scope() {
+        let mut s = CommStats::default();
+        s.note_outer_allreduce_wire(400.0, 104.0, false);
+        s.note_hier_intra(123.0);
+        s.gather_calls += 1;
+        s.gather_bytes += 16.0;
+        let snap = CommStatsSnapshot::from(&s);
+        assert_eq!(snap.outer_allreduce_bytes, 400.0);
+        assert_eq!(snap.outer_wire_bytes, 104.0);
+        assert_eq!(snap.tp_bytes, 123.0, "clique hop lands in the intra-node scope");
+        assert_eq!(snap.gather_bytes, 16.0);
+        // every scope in total_bytes has a snapshot field: they must sum up
+        assert_eq!(
+            s.total_bytes(),
+            snap.inner_allreduce_bytes + snap.outer_allreduce_bytes + snap.gather_bytes
+                + snap.broadcast_bytes + snap.tp_bytes
+        );
+    }
+
+    #[test]
+    fn wire_schedule_extracts_per_event_wire_volumes() {
+        let mut log = RunLog::default();
+        log.outer_events.push(OuterEvent { step: 10, bytes: 400.0, wire_bytes: 104.0,
+                                           fragments: 2 });
+        log.outer_events.push(OuterEvent { step: 20, bytes: 400.0, wire_bytes: 400.0,
+                                           fragments: 1 });
+        assert_eq!(log.outer_schedule(), vec![(400.0, 2), (400.0, 1)]);
+        assert_eq!(log.outer_wire_schedule(), vec![(104.0, 2), (400.0, 1)]);
     }
 
     #[test]

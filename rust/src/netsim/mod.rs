@@ -11,6 +11,7 @@ pub use collectives::{broadcast, hierarchical_allreduce, outer_sync_time, ring_a
                       ring_allreduce};
 pub use event::{Flow, FlowResult, LinkId, Network};
 
+use crate::config::outer_cliques;
 use crate::perfmodel::gpu::ClusterSpec;
 
 /// DES version of the §IV-C outer sync: `tp` concurrent ring all-reduces
@@ -122,6 +123,74 @@ pub fn des_outer_sync_streaming(
                            |v| des_outer_sync(dp, tp, v, cluster))
 }
 
+/// DES version of the **compressed** two-level outer sync (DESIGN.md §9):
+/// the fp32 `v_logical` delta is clique-reduced intra-node (full width,
+/// NVLink ring — contention-free by construction, priced closed-form),
+/// then only `v_logical · bytes_per_param / 4` wire bytes cross the
+/// fabric between the `⌈dp/clique⌉` node leaders under the same §IV-C
+/// contention pattern ([`des_outer_sync`]). `bytes_per_param` is the
+/// effective wire width (`config::OuterCompress::bytes_per_param`: 4.0
+/// recovers the uncompressed fabric hop; int8 ≈ 1.001). Topology comes
+/// from the single-sourced `config::outer_cliques`, so the DES, the
+/// closed form (`simulator::cost_outer_schedule_compressed`), and the
+/// executed collective agree on who faces the fabric.
+pub fn des_outer_sync_compressed(
+    dp: usize,
+    tp: usize,
+    v_logical: f64,
+    bytes_per_param: f64,
+    cluster: &ClusterSpec,
+) -> f64 {
+    if dp <= 1 {
+        return 0.0;
+    }
+    let tp = tp.max(1);
+    let (clique, nodes) = outer_cliques(dp, tp, cluster.gpus_per_node);
+    let intra =
+        if clique > 1 { ring_allreduce(clique, v_logical, &cluster.intra) } else { 0.0 };
+    intra + des_outer_sync(nodes, tp, v_logical * bytes_per_param / 4.0, cluster)
+}
+
+/// Streaming variant of [`des_outer_sync_compressed`]: the same
+/// [`streaming_overlap_cost`] rule every streaming model shares, with
+/// each fragment priced by the compressed two-level cost — compression
+/// and streaming compose multiplicatively (¼ the wire under the same
+/// gating-fragment exposure).
+pub fn des_outer_sync_streaming_compressed(
+    dp: usize,
+    tp: usize,
+    v_logical: f64,
+    bytes_per_param: f64,
+    fragments: usize,
+    overlap_window: f64,
+    cluster: &ClusterSpec,
+) -> StreamingOuterCost {
+    if dp <= 1 {
+        return StreamingOuterCost::default();
+    }
+    streaming_overlap_cost(v_logical, fragments, overlap_window, |v| {
+        des_outer_sync_compressed(dp, tp, v, bytes_per_param, cluster)
+    })
+}
+
+/// DES cost of a recorded schedule at an effective bytes-per-param:
+/// summed per-event [`des_outer_sync_compressed`] makespans.
+/// `bytes_per_param = 4.0` degenerates to the flat fabric hop of
+/// [`des_outer_schedule`] when every replica is its own node leader.
+pub fn des_outer_schedule_compressed(
+    dp: usize,
+    tp: usize,
+    volumes: &[f64],
+    bytes_per_param: f64,
+    cluster: &ClusterSpec,
+) -> f64 {
+    let tp = tp.max(1);
+    volumes
+        .iter()
+        .map(|&v| des_outer_sync_compressed(dp, tp, v, bytes_per_param, cluster))
+        .sum()
+}
+
 /// DES cost of a recorded **streaming** schedule: the summed exposed
 /// makespans of [`des_outer_sync_streaming`] per event. The blocking
 /// [`des_outer_schedule`] is the `fragments ≤ 1` special case.
@@ -231,6 +300,47 @@ mod tests {
         // fragments = 1 degenerates to the blocking schedule cost
         assert_eq!(des_outer_schedule_streaming(16, 2, &events, 1, 0.5, &PERLMUTTER),
                    des_outer_schedule(16, 2, &events, &PERLMUTTER));
+    }
+
+    #[test]
+    fn compressed_des_cuts_the_fabric_hop() {
+        let v = 6.2e9;
+        // Fig-8 shape: TP fills the node → clique 1, every replica a
+        // leader; bpp = 4 recovers the flat fabric hop exactly.
+        let flat = des_outer_sync(32, 4, v, &PERLMUTTER);
+        assert_eq!(des_outer_sync_compressed(32, 4, v, 4.0, &PERLMUTTER), flat);
+        // int8 wire: strictly below, and close to the ≈¼ wire volume
+        let bpp = crate::config::OuterCompress::Int8.bytes_per_param(4096);
+        let q = des_outer_sync_compressed(32, 4, v, bpp, &PERLMUTTER);
+        assert!(q < flat, "{q} !< {flat}");
+        assert!(q < 0.30 * flat + 2.0 * 31.0 * PERLMUTTER.inter.latency,
+                "bandwidth term must scale with the wire bytes: {q} vs {flat}");
+        // tp=1 on 4-GPU nodes: cliques of 4 pay an intra term, the fabric
+        // hop runs over 8 leaders — still strictly below the flat fp32 DES.
+        let flat1 = des_outer_sync(32, 1, v, &PERLMUTTER);
+        let q1 = des_outer_sync_compressed(32, 1, v, bpp, &PERLMUTTER);
+        assert!(q1 < flat1, "{q1} !< {flat1}");
+        // degenerate: dp=1 free
+        assert_eq!(des_outer_sync_compressed(1, 4, v, bpp, &PERLMUTTER), 0.0);
+    }
+
+    #[test]
+    fn compressed_streaming_conserves_and_composes() {
+        let v = 6.2e9;
+        let bpp = crate::config::OuterCompress::Int8.bytes_per_param(4096);
+        let c = des_outer_sync_streaming_compressed(32, 4, v, bpp, 4, 1e9, &PERLMUTTER);
+        assert!((c.exposed_secs + c.overlapped_secs - c.comm_secs).abs() < 1e-12);
+        // multiplicative composition: the compressed gate is ≈ ¼ of the
+        // f32 streaming gate (ample window: only the gate is exposed).
+        let f = des_outer_sync_streaming(32, 4, v, 4, 1e9, &PERLMUTTER);
+        assert!(c.exposed_secs < f.exposed_secs);
+        assert!(c.exposed_secs < 0.35 * f.exposed_secs,
+                "compressed gate {} vs f32 gate {}", c.exposed_secs, f.exposed_secs);
+        // schedule form sums events
+        let sched = des_outer_schedule_compressed(32, 4, &[v, v / 2.0], bpp, &PERLMUTTER);
+        let by_hand = des_outer_sync_compressed(32, 4, v, bpp, &PERLMUTTER)
+            + des_outer_sync_compressed(32, 4, v / 2.0, bpp, &PERLMUTTER);
+        assert_eq!(sched, by_hand);
     }
 
     #[test]

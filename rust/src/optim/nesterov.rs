@@ -2,7 +2,14 @@
 //!
 //! The outer "gradient" is the all-reduced model delta `Δθ = θ_{t} − θ_{t−H}`
 //! (sign convention: Δθ points in the *descent* direction already, so the
-//! update *adds* it — Alg. 2 line 21).
+//! update *adds* it — Alg. 2 line 21). Under the int8 compressed sync
+//! (DESIGN.md §9) the delta arriving here is the *transmitted* one —
+//! dequantized mean of the leaders' quantized payloads, same sign
+//! convention — and the error-feedback residual lives **outside** the
+//! optimizer (in the controller's `HierState`), so the momentum buffer
+//! only ever integrates deltas that actually crossed the wire; what
+//! quantization withheld is re-injected into the *next* round's delta,
+//! never double-counted into `M`.
 //!
 //! Two formulations, both shipped because §V measures both and picks
 //! PyTorch's:

@@ -1,6 +1,6 @@
 //! Per-iteration time models and full-run simulation.
 
-use crate::config::{ModelConfig, OptMode};
+use crate::config::{outer_cliques, ModelConfig, OptMode, OuterCompress, DEFAULT_QUANT_BLOCK};
 use crate::netsim::{hierarchical_allreduce, outer_sync_time, ring_allreduce,
                     streaming_overlap_cost};
 use crate::perfmodel::flops::compute_time;
@@ -51,6 +51,17 @@ pub struct SimSetup {
     /// fragment's all-reduce but the gating last one under the
     /// `sync_interval`-step compute window.
     pub stream_fragments: usize,
+    /// Wire compression of the outer sync's inter-node hop (DESIGN.md §9):
+    /// `int8` prices the two-level schedule — full-width fp32 clique
+    /// reduce intra-node, `bytes_per_param ≈ 1` quantized exchange between
+    /// node leaders plus the quantize/dequantize sweeps — cutting the
+    /// fabric volume ≈ 4x. Composes multiplicatively with
+    /// `stream_fragments`.
+    pub outer_compress: OuterCompress,
+    /// Quantization block of the int8 compression — must match the
+    /// trainer's `TrainConfig.outer_quant_block` for modeled and recorded
+    /// wire volumes to agree ([`DEFAULT_QUANT_BLOCK`] unless overridden).
+    pub outer_quant_block: usize,
     /// Local-communication groups (ignored for AdamW).
     pub groups: usize,
     pub global_batch: usize,
@@ -215,7 +226,14 @@ fn outer_event_parts(s: &SimSetup) -> (ClusterSpec, f64, f64, f64, f64) {
     let comm = outer_comm_time(s, delta_bytes, &cluster);
     // Elementwise Nesterov over the shard: ~4 reads + 2 writes of fp32
     let shard = s.model.n_params() as f64 * s.sync_fraction / (s.tp * s.pp) as f64;
-    let update = 6.0 * 4.0 * shard / cluster.gpu.mem_bw;
+    let mut update = 6.0 * 4.0 * shard / cluster.gpu.mem_bw;
+    if compressed_topology(s, &cluster).is_some() {
+        // int8 quantize + dequantize: two extra memory-bound sweeps of the
+        // fp32 delta shard (the int8 payload read/write is ≈ ¼ of one more
+        // and is folded into the same factor). Stays exposed — it contends
+        // for the GPUs like the Nesterov sweep.
+        update += 2.0 * 4.0 * shard / cluster.gpu.mem_bw;
+    }
     let offload = if s.cpu_offload {
         // reload anchor+momentum, store back: 4 transfers of 4·N/tp over PCIe
         4.0 * 4.0 * shard / 25e9
@@ -225,13 +243,45 @@ fn outer_event_parts(s: &SimSetup) -> (ClusterSpec, f64, f64, f64, f64) {
     (cluster, delta_bytes, comm, update, offload)
 }
 
-/// The outer all-reduce of `bytes` on a (possibly burst-contended)
-/// cluster: NCCL-style global all-reduce of the fp32 delta — hierarchical
-/// when the replicas are whole-node spans, per-TP/PP-shard concurrent
-/// rings under 2-D/3-D parallelism (§IV-C; PP streams the gather per
-/// stage).
+/// The compressed sync's topology on this cluster: `Some((clique,
+/// nodes))` when the int8 two-level schedule engages — more than one node
+/// leader faces the fabric — `None` when the run is uncompressed or has
+/// no fabric hop (single node ⇒ the executed path falls back to exact
+/// fp32, and so does the model). Single-sourced on
+/// `config::outer_cliques`, like the executed collective and the DES.
+fn compressed_topology(s: &SimSetup, cluster: &ClusterSpec) -> Option<(usize, usize)> {
+    if s.outer_compress != OuterCompress::Int8 {
+        return None;
+    }
+    let (clique, nodes) = outer_cliques(s.dp(), s.tp * s.pp, cluster.gpus_per_node);
+    if nodes > 1 {
+        Some((clique, nodes))
+    } else {
+        None
+    }
+}
+
+/// The outer all-reduce of `bytes` (logical fp32) on a (possibly
+/// burst-contended) cluster: NCCL-style global all-reduce of the fp32
+/// delta — hierarchical when the replicas are whole-node spans,
+/// per-TP/PP-shard concurrent rings under 2-D/3-D parallelism (§IV-C; PP
+/// streams the gather per stage). Under `outer_compress = int8`
+/// (DESIGN.md §9) the two-level schedule replaces it: a full-width fp32
+/// clique ring on intra-node links plus the `bytes_per_param`-scaled wire
+/// exchange between the node leaders.
 fn outer_comm_time(s: &SimSetup, bytes: f64, cluster: &ClusterSpec) -> f64 {
     let shards = s.tp * s.pp;
+    if let Some((clique, nodes)) = compressed_topology(s, cluster) {
+        let intra =
+            if clique > 1 { ring_allreduce(clique, bytes, &cluster.intra) } else { 0.0 };
+        let wire = bytes * s.outer_compress.bytes_per_param(s.outer_quant_block) / 4.0;
+        let inter = if shards == 1 {
+            ring_allreduce(nodes, wire, &cluster.inter)
+        } else {
+            outer_sync_time(nodes, shards, wire, cluster)
+        };
+        return intra + inter;
+    }
     if shards == 1 {
         hierarchical_allreduce(s.world, bytes, cluster)
     } else {
@@ -330,6 +380,32 @@ pub fn cost_outer_schedule(dp: usize, tp: usize, volumes: &[f64], cluster: &Clus
     volumes.iter().map(|&v| outer_sync_time(dp, tp, v, cluster)).sum()
 }
 
+/// Closed-form cost of a recorded outer schedule at an **effective
+/// bytes-per-param** (DESIGN.md §9): per event, the full-width fp32
+/// clique ring intra-node plus the `bytes_per_param`-scaled wire exchange
+/// between the `⌈dp/clique⌉` node leaders — the analytic counterpart of
+/// [`crate::netsim::des_outer_schedule_compressed`], cross-validated in
+/// `rust/tests/dp_tp_crossval.rs`. `bytes_per_param = 4.0` with one
+/// replica per node recovers [`cost_outer_schedule`] exactly.
+pub fn cost_outer_schedule_compressed(
+    dp: usize,
+    tp: usize,
+    volumes: &[f64],
+    bytes_per_param: f64,
+    cluster: &ClusterSpec,
+) -> f64 {
+    let tp = tp.max(1);
+    let (clique, nodes) = outer_cliques(dp, tp, cluster.gpus_per_node);
+    volumes
+        .iter()
+        .map(|&v| {
+            let intra =
+                if clique > 1 { ring_allreduce(clique, v, &cluster.intra) } else { 0.0 };
+            intra + outer_sync_time(nodes, tp, v * bytes_per_param / 4.0, cluster)
+        })
+        .sum()
+}
+
 /// Overlap-aware counterpart of [`cost_outer_schedule`] for **streaming**
 /// schedules (DESIGN.md §8): per event, the `fragments` balanced fragment
 /// all-reduces serialize on the fabric while `overlap_window` seconds of
@@ -409,6 +485,8 @@ mod tests {
             pp: 1,
             sync_fraction: 1.0,
             stream_fragments: 0,
+            outer_compress: OuterCompress::None,
+            outer_quant_block: DEFAULT_QUANT_BLOCK,
             groups: world, // one GPU per group (Fig 7 regime)
             global_batch: 512,
             sync_interval: 50,
@@ -566,6 +644,62 @@ mod tests {
         assert_eq!(ob, 0.0);
         assert_eq!(ep, outer_event(&partial));
         assert_eq!(simulate_run(&partial).total_secs, simulate_run(&both).total_secs);
+    }
+
+    #[test]
+    fn int8_compression_cuts_the_outer_event_and_composes_with_streaming() {
+        // Blocking: int8 must cut the exposed event (wire ≈ ¼, quant sweep
+        // ≪ comm at these scales); streaming+int8 must beat streaming-only
+        // — the multiplicative composition the tentpole promises.
+        let blocking = setup(64, OptMode::Pier);
+        let mut int8 = blocking.clone();
+        int8.outer_compress = OuterCompress::Int8;
+        let eb = outer_event(&blocking);
+        let eq = outer_event(&int8);
+        assert!(eq < eb, "int8 must cut the blocking event: {eq} vs {eb}");
+        let mut stream = blocking.clone();
+        stream.stream_fragments = 4;
+        let mut both = int8.clone();
+        both.stream_fragments = 4;
+        let (es, _) = outer_event_streaming(&stream);
+        let (eboth, oboth) = outer_event_streaming(&both);
+        assert!(eboth < es, "int8+streaming must beat streaming: {eboth} vs {es}");
+        assert!(oboth > 0.0);
+        let rs = simulate_run(&stream);
+        let rb = simulate_run(&both);
+        assert!(rb.total_secs < rs.total_secs);
+        // inner-loop math untouched: compression only re-prices the sync
+        assert_eq!(rb.inner_iter.compute, rs.inner_iter.compute);
+    }
+
+    #[test]
+    fn int8_without_a_fabric_hop_prices_like_fp32() {
+        // dp = 1 (one TP=4 replica on one node): no inter-node hop — the
+        // executed path falls back to exact fp32, so must the model.
+        let mut s = setup(4, OptMode::Pier);
+        s.tp = 4;
+        s.groups = 1;
+        let mut q = s.clone();
+        q.outer_compress = OuterCompress::Int8;
+        assert_eq!(outer_event(&s), outer_event(&q));
+        assert_eq!(simulate_run(&s).total_secs, simulate_run(&q).total_secs);
+    }
+
+    #[test]
+    fn compressed_schedule_cost_against_flat_and_degenerate() {
+        let volumes = [6.2e9, 3.1e9];
+        // Fig-8 shape: TP fills the node → clique 1 → bpp=4 recovers flat.
+        let flat = cost_outer_schedule(32, 4, &volumes, &PERLMUTTER);
+        let same = cost_outer_schedule_compressed(32, 4, &volumes, 4.0, &PERLMUTTER);
+        assert!((flat - same).abs() < 1e-12);
+        let bpp = OuterCompress::Int8.bytes_per_param(DEFAULT_QUANT_BLOCK);
+        let q = cost_outer_schedule_compressed(32, 4, &volumes, bpp, &PERLMUTTER);
+        assert!(q < flat);
+        // tp=1: cliques of 4 pay intra fp32, leaders exchange narrow —
+        // still below the flat fp32 schedule on these volumes.
+        let flat1 = cost_outer_schedule(32, 1, &volumes, &PERLMUTTER);
+        let q1 = cost_outer_schedule_compressed(32, 1, &volumes, bpp, &PERLMUTTER);
+        assert!(q1 < flat1, "{q1} !< {flat1}");
     }
 
     #[test]

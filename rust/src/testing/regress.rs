@@ -34,8 +34,12 @@ use std::collections::BTreeMap;
 
 use crate::util::json::Json;
 
-/// Benchmark-name prefixes whose regressions fail the gate.
-pub const GATED_PREFIXES: &[&str] = &["outer_sync_in_place", "outer_sync_streaming"];
+/// Benchmark-name prefixes whose regressions fail the gate: the blocking
+/// in-place sync, the streaming fragment sync, and the int8 compressed
+/// sync (DESIGN.md §9 — covers `outer_sync_int8` and
+/// `outer_sync_int8_streaming4` alike).
+pub const GATED_PREFIXES: &[&str] =
+    &["outer_sync_in_place", "outer_sync_streaming", "outer_sync_int8"];
 
 /// The same-run normalization anchor: the momentum-accumulate sweep over
 /// the GPT-2-small-sized vector — memory-bandwidth-bound like the gated
@@ -108,6 +112,32 @@ fn mean_by_name(snapshot: &Json, what: &str) -> Result<BTreeMap<String, f64>, St
         out.insert(name.to_string(), mean);
     }
     Ok(out)
+}
+
+/// Structural validation of a snapshot about to be **adopted as the
+/// baseline** (`bench_check --write-baseline`): well-formed rows, a
+/// non-empty result set, the [`REFERENCE_BENCH`] normalization anchor,
+/// the `threads` field, and at least one gated benchmark — adopting a
+/// baseline that could never gate anything would silently disarm CI.
+pub fn validate_snapshot(snapshot: &Json, what: &str) -> Result<(), String> {
+    let means = mean_by_name(snapshot, what)?;
+    if means.is_empty() {
+        return Err(format!("{what}: no results — did the bench run?"));
+    }
+    if !means.contains_key(REFERENCE_BENCH) {
+        return Err(format!(
+            "{what}: missing the normalization anchor {REFERENCE_BENCH:?}"
+        ));
+    }
+    if snapshot.get("threads").and_then(Json::as_f64).is_none() {
+        return Err(format!("{what}: missing the \"threads\" field"));
+    }
+    if !means.keys().any(|name| is_gated(name)) {
+        return Err(format!(
+            "{what}: no gated benchmark ({GATED_PREFIXES:?}) — nothing to protect"
+        ));
+    }
+    Ok(())
 }
 
 /// Compare a fresh snapshot against the committed baseline.
@@ -353,6 +383,50 @@ mod tests {
         assert_eq!(r.failures.len(), 1, "{:?}", r.failures);
         assert!(r.failures[0].contains("outer_sync_streaming4_pipelined/b"));
         assert!(r.failures[0].contains("no baseline entry"));
+    }
+
+    #[test]
+    fn int8_family_is_gated() {
+        let base = snapshot(&[("outer_sync_int8/micro-3.2M/4groups", 1.0),
+                              ("outer_sync_int8_streaming4/micro-3.2M/4groups", 1.0),
+                              (REFERENCE_BENCH, 0.1)]);
+        let fresh = snapshot(&[("outer_sync_int8/micro-3.2M/4groups", 1.3),
+                               ("outer_sync_int8_streaming4/micro-3.2M/4groups", 1.0),
+                               (REFERENCE_BENCH, 0.1)]);
+        let r = gate_snapshots(&base, &fresh, 0.15).unwrap();
+        assert!(!r.passed());
+        assert!(r.failures[0].contains("outer_sync_int8/"));
+        assert!(r.deltas.iter().all(|d| d.gated), "{:?}", r.deltas);
+    }
+
+    #[test]
+    fn validate_snapshot_gates_baseline_adoption() {
+        let good = snapshot(&[("outer_sync_in_place/a", 1.0), (REFERENCE_BENCH, 0.1)]);
+        assert!(validate_snapshot(&good, "fresh").is_ok());
+        // empty → refuse
+        let e = validate_snapshot(&snapshot(&[]), "fresh").unwrap_err();
+        assert!(e.contains("no results"), "{e}");
+        // missing anchor → refuse
+        let e = validate_snapshot(&snapshot(&[("outer_sync_in_place/a", 1.0)]), "fresh")
+            .unwrap_err();
+        assert!(e.contains("anchor"), "{e}");
+        // no gated family → refuse (a baseline that can't gate is disarmed CI)
+        let e = validate_snapshot(&snapshot(&[("nesterov_step/a", 1.0),
+                                              (REFERENCE_BENCH, 0.1)]), "fresh")
+            .unwrap_err();
+        assert!(e.contains("nothing to protect"), "{e}");
+        // missing threads → refuse
+        let stripped = Json::obj(vec![(
+            "results",
+            Json::arr([
+                Json::obj(vec![("name", Json::str("outer_sync_in_place/a")),
+                               ("mean_s", Json::num(1.0))]),
+                Json::obj(vec![("name", Json::str(REFERENCE_BENCH)),
+                               ("mean_s", Json::num(0.1))]),
+            ]),
+        )]);
+        let e = validate_snapshot(&stripped, "fresh").unwrap_err();
+        assert!(e.contains("threads"), "{e}");
     }
 
     #[test]

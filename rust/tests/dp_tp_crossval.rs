@@ -16,12 +16,15 @@
 //!   `cfg.tp = 2`, validating the recorded `outer_events` against both
 //!   cost models and against the expected `4·N` full-sync volume.
 
-use pier::config::OptMode;
+use pier::config::{OptMode, OuterCompress, DEFAULT_QUANT_BLOCK};
 use pier::coordinator::collective::{outer_all_reduce_into, shard_span, CommStats};
-use pier::netsim::{des_outer_schedule, des_outer_schedule_streaming, des_outer_sync,
-                   des_outer_sync_streaming};
+use pier::coordinator::OuterController;
+use pier::netsim::{des_outer_schedule, des_outer_schedule_compressed,
+                   des_outer_schedule_streaming, des_outer_sync,
+                   des_outer_sync_streaming, des_outer_sync_streaming_compressed};
 use pier::perfmodel::gpu::PERLMUTTER;
-use pier::simulator::run::{cost_outer_schedule, cost_outer_schedule_streaming};
+use pier::simulator::run::{cost_outer_schedule, cost_outer_schedule_compressed,
+                           cost_outer_schedule_streaming};
 use pier::testing::oracle::{inner_step, make_groups, target};
 
 const N: usize = 64;
@@ -142,6 +145,8 @@ fn fig8_configs_streaming_makespan_strictly_below_blocking() {
             pp: 1,
             sync_fraction: 1.0,
             stream_fragments: 0,
+            outer_compress: OuterCompress::None,
+            outer_quant_block: DEFAULT_QUANT_BLOCK,
             groups: world / 4,
             global_batch: 512,
             sync_interval: 50,
@@ -171,6 +176,172 @@ fn fig8_configs_streaming_makespan_strictly_below_blocking() {
             prev = c.exposed_secs;
         }
     }
+}
+
+/// Executed compressed schedule in the trainer's Phase-B shape: a toy run
+/// through the real `OuterController` with `outer_compress = int8`
+/// (gpus_per_node = 1 → every group a node leader), recording per-event
+/// (logical, wire) volumes the way the trainer fills `OuterEvent`.
+fn recorded_compressed_schedule(k: usize, seed: u64) -> Vec<(f64, f64)> {
+    let tgt = target(N);
+    let mut cfg = pier::config::TrainConfig::default_for(1000);
+    cfg.mode = OptMode::DiLoCo;
+    cfg.sync_interval = H;
+    cfg.outer_compress = OuterCompress::Int8;
+    cfg.gpus_per_node = 1;
+    let mut groups = make_groups(N, k, seed);
+    let mut ctl = OuterController::new(&cfg, &groups[0].params);
+    let mut stats = CommStats::default();
+    let mut events = Vec::new();
+    for t in 0..ITERS {
+        for g in groups.iter_mut() {
+            inner_step(g, &tgt, 1);
+        }
+        if (t + 1) % H == 0 {
+            let before = stats.outer_allreduce_bytes;
+            let wire_before = stats.outer_wire_bytes;
+            let refs: Vec<&[f32]> = groups.iter().map(|g| g.params.as_slice()).collect();
+            let next: Vec<f32> = ctl.sync_in_place(t + 1, &refs, &mut stats).to_vec();
+            for g in groups.iter_mut() {
+                g.params.copy_from_slice(&next);
+            }
+            events.push((
+                stats.outer_allreduce_bytes - before,
+                stats.outer_wire_bytes - wire_before,
+            ));
+        }
+    }
+    events
+}
+
+#[test]
+fn compressed_executed_wire_is_below_30_pct_of_fp32() {
+    // Acceptance pin (executed layer): with outer_compress = int8 the
+    // recorded inter-node wire bytes per event are ≤ 0.30× the logical
+    // fp32 volume — the same ratio the fig8-size wire formula gives
+    // (block 4096 over 1.75B params: ≈ 0.2502).
+    let events = recorded_compressed_schedule(4, 7);
+    assert_eq!(events.len(), ITERS / H);
+    for (i, &(logical, wire)) in events.iter().enumerate() {
+        assert_eq!(logical, (4 * N) as f64, "event {i}: logical volume is the fp32 model");
+        assert!(wire <= 0.30 * logical, "event {i}: wire {wire} vs logical {logical}");
+        assert_eq!(wire, pier::coordinator::compress::wire_bytes(N, DEFAULT_QUANT_BLOCK) as f64);
+    }
+    // fig8 model size: the formula the simulator table reports
+    let n7b = pier::config::model_or_die("gpt2-7b").n_params();
+    let ratio =
+        pier::coordinator::compress::wire_bytes(n7b, DEFAULT_QUANT_BLOCK) as f64
+            / (4 * n7b) as f64;
+    assert!(ratio <= 0.30, "7B wire ratio {ratio}");
+    assert!(ratio >= 0.25, "int8 payload floor");
+}
+
+#[test]
+fn compressed_schedule_costing_agrees_with_des() {
+    // DESIGN.md §9 cross-validation: the executed compressed schedule's
+    // wire volumes, costed by the closed-form compressed model and the
+    // compressed DES, must agree for every tp — and sit strictly below
+    // the fp32 costing of the same logical schedule.
+    let events = recorded_compressed_schedule(4, 7);
+    let logical: Vec<f64> = events.iter().map(|&(l, _)| l * 1e8).collect();
+    let bpp = OuterCompress::Int8.bytes_per_param(DEFAULT_QUANT_BLOCK);
+    for tp in [1usize, 2, 4] {
+        let cf = cost_outer_schedule_compressed(4, tp, &logical, bpp, &PERLMUTTER);
+        let des = des_outer_schedule_compressed(4, tp, &logical, bpp, &PERLMUTTER);
+        assert!(cf > 0.0);
+        assert!((des - cf).abs() / cf < 0.02, "tp={tp}: des {des} vs closed form {cf}");
+        let flat = cost_outer_schedule(4, tp, &logical, &PERLMUTTER);
+        assert!(cf < flat, "tp={tp}: compressed {cf} !< fp32 {flat}");
+    }
+}
+
+#[test]
+fn fig8_configs_compressed_streaming_strictly_below_streaming_only() {
+    // Acceptance pin: on every Fig. 8 row with a fabric hop (dp ≥ 2) the
+    // modeled makespan strictly improves over the PR-3 streaming-only
+    // schedule, at both the netsim layer (DES exposed seconds) and the
+    // simulator layer (fig8_compressed's total-runtime ladder); the
+    // one-node row (world = 4, dp = 1) has nothing to relax and stays
+    // exactly flat.
+    use pier::config::model_or_die;
+    let model = model_or_die("gpt2-7b");
+    let v_total = 4.0 * model.n_params() as f64;
+    let bpp = OuterCompress::Int8.bytes_per_param(DEFAULT_QUANT_BLOCK);
+    for world in [8usize, 16, 32, 64, 128, 256] {
+        let dp = world / 4;
+        let window = 1e3; // ample: only the gating fragment stays exposed
+        for frags in [2usize, 4] {
+            let stream = des_outer_sync_streaming(dp, 4, v_total, frags, window, &PERLMUTTER);
+            let both = des_outer_sync_streaming_compressed(dp, 4, v_total, bpp, frags,
+                                                           window, &PERLMUTTER);
+            assert!(
+                both.exposed_secs < stream.exposed_secs,
+                "world={world} frags={frags}: {} !< {}",
+                both.exposed_secs,
+                stream.exposed_secs
+            );
+            assert!(both.comm_secs < stream.comm_secs);
+        }
+    }
+    // Simulator layer: the full fig8 ladder (monotone per row, also
+    // asserted in the figures unit tests — here as the acceptance pin).
+    for r in pier::figures::fig8_compressed() {
+        if r.world <= 4 {
+            assert_eq!(r.t_int8, r.t_streaming, "no fabric hop at one node");
+            assert_eq!(r.wire_ratio, 1.0, "no wire cut without a fabric hop");
+        } else {
+            assert!(r.t_int8 < r.t_streaming,
+                    "world={}: int8 {} !< streaming {}", r.world, r.t_int8, r.t_streaming);
+            assert!(r.t_streaming < r.t_blocking, "world={}", r.world);
+            assert!(r.wire_ratio <= 0.30);
+        }
+    }
+}
+
+#[test]
+fn compressed_toy_run_still_converges() {
+    // End-to-end sanity on the executed layer: the int8 outer sync with
+    // error feedback must not break optimization — the toy Phase-B run's
+    // final loss stays within a whisker of the fp32 run's.
+    let tgt = target(N);
+    let run = |compress: OuterCompress| -> (f64, f64) {
+        let mut cfg = pier::config::TrainConfig::default_for(1000);
+        cfg.mode = OptMode::DiLoCo;
+        cfg.sync_interval = H;
+        cfg.outer_compress = compress;
+        cfg.gpus_per_node = 1;
+        let mut groups = make_groups(N, 4, 99);
+        let mut ctl = OuterController::new(&cfg, &groups[0].params);
+        let mut stats = CommStats::default();
+        let mut first = f64::NAN;
+        let mut last = f64::NAN;
+        for t in 0..ITERS {
+            let mut acc = 0.0;
+            for g in groups.iter_mut() {
+                acc += inner_step(g, &tgt, 1).0;
+            }
+            last = acc / 4.0;
+            if t == 0 {
+                first = last;
+            }
+            if (t + 1) % H == 0 {
+                let refs: Vec<&[f32]> = groups.iter().map(|g| g.params.as_slice()).collect();
+                let next: Vec<f32> = ctl.sync_in_place(t + 1, &refs, &mut stats).to_vec();
+                for g in groups.iter_mut() {
+                    g.params.copy_from_slice(&next);
+                }
+            }
+        }
+        (first, last)
+    };
+    let (f0, fp32) = run(OuterCompress::None);
+    let (_, int8) = run(OuterCompress::Int8);
+    assert!(fp32.is_finite() && int8.is_finite());
+    assert!(int8 < 0.5 * f0, "int8 run must descend: {int8} vs initial {f0}");
+    // negligible-degradation contract: within 1.5× of the fp32 floor
+    // (quantization steps are ~1e-3 against a gradient-noise floor).
+    assert!(int8 <= fp32 * 1.5 + 1e-6,
+            "int8 run must converge comparably: {int8} vs {fp32}");
 }
 
 #[test]
@@ -215,6 +386,7 @@ fn trainer_recorded_schedule_cross_validates() {
     assert!(!events.is_empty(), "Phase B must have synced");
     for e in &t2.log.outer_events {
         assert_eq!(e.bytes, 4.0 * man.n_params as f64, "full sync at step {}", e.step);
+        assert_eq!(e.wire_bytes, e.bytes, "fp32 run: wire == logical at step {}", e.step);
     }
     // Under tp=2 every event ran two per-shard all-reduces.
     assert_eq!(
@@ -235,4 +407,42 @@ fn trainer_recorded_schedule_cross_validates() {
     let l1: Vec<u64> = t1.log.iters.iter().map(|r| r.loss.to_bits()).collect();
     let l2: Vec<u64> = t2.log.iters.iter().map(|r| r.loss.to_bits()).collect();
     assert_eq!(l1, l2, "tp must not change the training math");
+}
+
+/// Real-trainer int8 run (skips without `make artifacts`): the recorded
+/// events carry the narrow wire volumes, the run stays finite, and the
+/// snapshot surfaces the wire scope.
+#[test]
+fn trainer_int8_records_narrow_wire_events() {
+    use pier::coordinator::Trainer;
+    use pier::figures::{figure_cfg, pipeline_for};
+    use pier::runtime::{load_manifest, Runtime};
+
+    let man = match load_manifest("nano") {
+        Ok(m) => m,
+        Err(_) => {
+            eprintln!("SKIP: nano artifacts missing (run `make artifacts`)");
+            return;
+        }
+    };
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let pipe = pipeline_for(&man, 11);
+    let mut cfg = figure_cfg(OptMode::Pier, 30, 2);
+    cfg.global_batch = 16;
+    cfg.eval_interval = 0;
+    cfg.outer_compress = OuterCompress::Int8;
+    cfg.gpus_per_node = 1; // both groups lead their own node: fabric hop exists
+    let mut t = Trainer::new(&rt, man.clone(), cfg, &pipe).unwrap();
+    t.run().unwrap();
+    assert!(!t.log.outer_events.is_empty());
+    let expect_wire =
+        pier::coordinator::compress::wire_bytes(man.n_params, DEFAULT_QUANT_BLOCK) as f64;
+    for e in &t.log.outer_events {
+        assert_eq!(e.bytes, 4.0 * man.n_params as f64);
+        assert_eq!(e.wire_bytes, expect_wire, "step {}", e.step);
+        assert!(e.wire_bytes <= 0.30 * e.bytes);
+    }
+    assert_eq!(t.log.comm.outer_wire_bytes,
+               expect_wire * t.log.outer_events.len() as f64);
+    assert!(t.log.final_val_loss().unwrap().is_finite());
 }

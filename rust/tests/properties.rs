@@ -2,8 +2,10 @@
 //! over coordinator invariants, data-pipeline bijections, optimizer
 //! algebra, and the network/simulator models.
 
-use pier::config::{NesterovKind, OptMode, TrainConfig};
+use pier::config::{NesterovKind, OptMode, OuterCompress, TrainConfig};
 use pier::coordinator::collective::{all_reduce_mean, fragment_span, shard_span};
+use pier::coordinator::compress::{dequantize_into, dequantize_with_residual_into,
+                                  quantize_into, wire_bytes, QuantBuf};
 use pier::coordinator::OuterController;
 use pier::data::{CorpusGen, CorpusSpec, Sampler, TokenDataset, Tokenizer};
 use pier::netsim::{des_outer_sync, des_outer_sync_streaming, outer_sync_time, ring_allreduce};
@@ -130,6 +132,136 @@ fn prop_streaming_cost_conserves_comm_and_respects_bounds() {
         // the gating fragment is never hidden: exposed ≥ last fragment
         ensure(c.exposed_secs >= blocking / frags as f64 * (1.0 - 1e-6),
                format!("exposed {} below the gate", c.exposed_secs))
+    });
+}
+
+// ----------------------------------------------------------- quantization
+
+#[test]
+fn prop_quantize_roundtrip_error_within_one_step() {
+    // For every element: |x − deq(quant(x))| ≤ the block's quantization
+    // step (amax/127), including at block boundaries and for lengths that
+    // are not a multiple of the block.
+    check("quant-roundtrip", |g: &mut Gen| {
+        let n = g.usize(1, 20_000);
+        let block = g.usize(1, 5000);
+        let amp = g.f64(1e-6, 1e4) as f32;
+        let src = g.vec_signed(n, amp as f64);
+        let mut buf = QuantBuf::default();
+        quantize_into(&src, block, &mut buf);
+        ensure(buf.scales.len() == n.div_ceil(block), "one scale per block")?;
+        let mut back = vec![0.0f32; n];
+        dequantize_into(&buf, &mut back);
+        for (b, chunk) in src.chunks(block).enumerate() {
+            let step = buf.scales[b];
+            let amax = chunk.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+            ensure(
+                (step - amax / 127.0).abs() <= amax * 1e-6,
+                format!("block {b}: scale {step} vs amax/127 {}", amax / 127.0),
+            )?;
+            for (i, &x) in chunk.iter().enumerate() {
+                let d = back[b * block + i];
+                ensure(
+                    (x - d).abs() <= step * (1.0 + 1e-5) + f32::EPSILON,
+                    format!("block {b} elem {i}: |{x} − {d}| > step {step}"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quantize_preserves_zeros_exactly() {
+    check("quant-zeros", |g: &mut Gen| {
+        let n = g.usize(1, 3000);
+        let block = g.usize(1, 512);
+        let mut src = g.vec_signed(n, 3.0);
+        // plant exact zeros at deterministic-but-varied positions
+        let stride = g.usize(1, 7);
+        for i in (0..n).step_by(stride) {
+            src[i] = 0.0;
+        }
+        let mut buf = QuantBuf::default();
+        quantize_into(&src, block, &mut buf);
+        let mut back = vec![1.0f32; n];
+        dequantize_into(&buf, &mut back);
+        for i in (0..n).step_by(stride) {
+            ensure(back[i] == 0.0, format!("zero at {i} became {}", back[i]))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quantized_wire_always_beats_fp32_above_tiny_blocks() {
+    check("quant-wire", |g: &mut Gen| {
+        let n = g.usize(64, 1_000_000);
+        let block = g.usize(16, 8192);
+        let w = wire_bytes(n, block);
+        ensure(w == n + 4 * n.div_ceil(block), "exact formula")?;
+        // one int8 byte + amortized scale < one f32 per element always;
+        // the ≤ 0.30× acceptance bound holds once the span amortizes the
+        // scales (block ≥ 64, a few blocks per span — real configs are
+        // block 4096 over millions of params, ratio ≈ 0.2502)
+        ensure(w < 4 * n, format!("wire {w} !< fp32 {}", 4 * n))?;
+        if block >= 64 && n >= 4 * block {
+            ensure(
+                (w as f64) <= 0.30 * (4 * n) as f64,
+                format!("wire ratio {} above 0.30", w as f64 / (4 * n) as f64),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_error_feedback_keeps_long_run_mean_delta_unbiased() {
+    // The EF identity: transmitting deq(quant(Δ_t + r_{t−1})) with
+    // r_t = (Δ_t + r_{t−1}) − transmitted makes the cumulative
+    // transmitted delta equal the cumulative true delta minus the final
+    // residual — so the long-run mean transmitted delta converges to the
+    // true mean at rate O(step/T): accumulation is unbiased.
+    check("ef-unbiased", |g: &mut Gen| {
+        let n = g.usize(1, 400);
+        let block = g.usize(8, 128);
+        let rounds = g.usize(5, 40);
+        let amp = 0.5;
+        let mut residual = vec![0.0f32; n];
+        let mut sum_true = vec![0.0f64; n];
+        let mut sum_sent = vec![0.0f64; n];
+        let mut buf = QuantBuf::default();
+        let mut e = vec![0.0f32; n];
+        for _ in 0..rounds {
+            let delta = g.vec_signed(n, amp);
+            for i in 0..n {
+                sum_true[i] += delta[i] as f64;
+                e[i] = delta[i] + residual[i];
+            }
+            quantize_into(&e, block, &mut buf);
+            dequantize_with_residual_into(&buf, &mut e, &mut residual);
+            for i in 0..n {
+                sum_sent[i] += e[i] as f64;
+            }
+        }
+        // |Σ sent − Σ true| = |final residual| ≤ one step of the last
+        // round's transmitted magnitude (bounded: |e| ≤ amp + step ⇒
+        // step ≤ (amp + step)/127 ⇒ step ≤ amp/126) — plus f64/f32
+        // accumulation slop over the rounds.
+        let step_bound = amp / 126.0 + 1e-4 * rounds as f64;
+        for i in 0..n {
+            let drift = (sum_sent[i] - sum_true[i]).abs();
+            let resid = residual[i].abs() as f64;
+            ensure(
+                (drift - resid).abs() <= 1e-3,
+                format!("cumulative drift {drift} must equal the final residual {resid}"),
+            )?;
+            ensure(
+                drift <= step_bound,
+                format!("elem {i}: residual drift {drift} exceeds one step {step_bound}"),
+            )?;
+        }
+        Ok(())
     });
 }
 
@@ -339,6 +471,8 @@ fn prop_simulator_total_monotone_in_iterations_and_interval() {
             pp: 1,
             sync_fraction: 1.0,
             stream_fragments: *g.choose(&[0usize, 2, 4]),
+            outer_compress: *g.choose(&[OuterCompress::None, OuterCompress::Int8]),
+            outer_quant_block: 4096,
             groups: world,
             global_batch: 512,
             sync_interval: g.usize(10, 400),
@@ -374,6 +508,8 @@ fn prop_pier_never_slower_than_adamw_beyond_a_node_at_h500() {
             pp: 1,
             sync_fraction: 1.0,
             stream_fragments: 0,
+            outer_compress: OuterCompress::None,
+            outer_quant_block: 4096,
             groups: world,
             global_batch: 512,
             sync_interval: 500,

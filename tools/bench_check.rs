@@ -3,20 +3,29 @@
 //! ```bash
 //! cargo run --release --bin bench_check -- \
 //!     BENCH_baseline.json BENCH_outer_step.json [--max-regression 0.15]
+//! # seed/refresh the committed baseline from a fresh snapshot:
+//! cargo run --release --bin bench_check -- \
+//!     BENCH_baseline.json BENCH_outer_step.json --write-baseline
 //! ```
 //!
 //! Diffs a fresh bench snapshot against the committed baseline with
-//! `pier::testing::regress::gate_snapshots`: the `outer_sync_in_place*`
-//! and `outer_sync_streaming*` families fail the gate when they regress
-//! beyond the threshold — machine-relatively, normalized by each
-//! snapshot's own mandatory reference-bench mean, so heterogeneous CI
-//! runners don't flip the gate; everything else is reported
+//! `pier::testing::regress::gate_snapshots`: the `outer_sync_in_place*`,
+//! `outer_sync_streaming*`, and `outer_sync_int8*` families fail the gate
+//! when they regress beyond the threshold — machine-relatively, normalized
+//! by each snapshot's own mandatory reference-bench mean, so heterogeneous
+//! CI runners don't flip the gate; everything else is reported
 //! informationally. An empty baseline (the committed bootstrap seed)
 //! passes with instructions for seeding it — see README "Perf baseline".
+//!
+//! `--write-baseline` adopts the fresh snapshot as the new baseline after
+//! structural validation (`regress::validate_snapshot`: non-empty, carries
+//! the normalization anchor, the thread count, and at least one gated
+//! benchmark) — the honest way for a CI runner or first toolchain-ful
+//! machine to seed the committed bootstrap instead of hand-editing JSON.
 
 use anyhow::{anyhow, Context, Result};
 
-use pier::testing::regress::{gate_snapshots, GATED_PREFIXES};
+use pier::testing::regress::{gate_snapshots, validate_snapshot, GATED_PREFIXES};
 use pier::util::json::Json;
 
 fn load(path: &str) -> Result<Json> {
@@ -28,12 +37,16 @@ fn run() -> Result<bool> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let mut paths = Vec::new();
     let mut max_regression = 0.15;
+    let mut write_baseline = false;
     let mut i = 0;
     while i < args.len() {
         if args[i] == "--max-regression" {
             let v = args.get(i + 1).ok_or_else(|| anyhow!("--max-regression needs a value"))?;
             max_regression = v.parse().with_context(|| format!("bad threshold {v:?}"))?;
             i += 2;
+        } else if args[i] == "--write-baseline" {
+            write_baseline = true;
+            i += 1;
         } else {
             paths.push(args[i].clone());
             i += 1;
@@ -41,9 +54,27 @@ fn run() -> Result<bool> {
     }
     if paths.len() != 2 {
         return Err(anyhow!(
-            "usage: bench_check <baseline.json> <fresh.json> [--max-regression 0.15]"
+            "usage: bench_check <baseline.json> <fresh.json> \
+             [--max-regression 0.15] [--write-baseline]"
         ));
     }
+
+    if write_baseline {
+        // Adopt the fresh snapshot as the committed baseline — validated,
+        // and byte-for-byte the file the bench wrote (no re-serialization
+        // drift).
+        let fresh = load(&paths[1])?;
+        validate_snapshot(&fresh, &paths[1]).map_err(|e| anyhow!(e))?;
+        std::fs::copy(&paths[1], &paths[0])
+            .with_context(|| format!("copying {} over {}", paths[1], paths[0]))?;
+        println!(
+            "bench_check: adopted {} as the new baseline {} — commit it with the change \
+             that moved perf (README \"Perf baseline\").",
+            paths[1], paths[0]
+        );
+        return Ok(true);
+    }
+
     let baseline = load(&paths[0])?;
     let fresh = load(&paths[1])?;
     let report = gate_snapshots(&baseline, &fresh, max_regression).map_err(|e| anyhow!(e))?;
@@ -51,9 +82,10 @@ fn run() -> Result<bool> {
     if report.bootstrap {
         println!(
             "bench_check: baseline {} is empty (bootstrap seed) — gate passes vacuously.\n\
-             Seed the trajectory with: RUN_BENCH=1 ./ci.sh && cp BENCH_outer_step.json \
-             BENCH_baseline.json, then commit the baseline.",
-            paths[0]
+             Seed the trajectory with: PIER_THREADS=4 RUN_BENCH=1 ./ci.sh && \
+             cargo run --release --bin bench_check -- {} BENCH_outer_step.json \
+             --write-baseline, then commit the baseline.",
+            paths[0], paths[0]
         );
         return Ok(true);
     }
