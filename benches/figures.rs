@@ -4,6 +4,7 @@
 
 use pier::config::{model_or_die, OptMode, OuterCompress};
 use pier::figures::{fig5, fig6, fig7, fig8};
+use pier::netsim::FabricShape;
 use pier::perfmodel::gpu::PERLMUTTER;
 use pier::simulator::run::{simulate_run, Calib, SimSetup};
 use pier::testing::bench::{bench_quick, header};
@@ -30,6 +31,7 @@ fn main() {
     let s = SimSetup {
         model: model_or_die("gpt2-xl"),
         cluster: &PERLMUTTER,
+        fabric: FabricShape::TwoLevel,
         world: 256,
         tp: 1,
         pp: 1,

@@ -42,6 +42,14 @@ cargo bench --no-run
 echo "==> tier-1: cargo test -q"
 cargo test -q
 
+# Scenario-engine smoke: the 24-row sweep grid must run end to end and
+# emit the Pareto JSON on both thread legs (routing is deterministic
+# across PIER_THREADS — pinned by the property suite). The threads=4
+# workflow leg uploads the JSON as an artifact.
+echo "==> pier sweep --smoke (topology scenario grid + Pareto JSON)"
+cargo run --release --bin pier -- sweep --smoke --out sweep_pareto.json
+test -s sweep_pareto.json
+
 # The quantization kernels (coordinator::compress) are span-parallel; the
 # property suite must hold on both the serial and the threaded schedule
 # regardless of which leg the ambient PIER_THREADS selects (DESIGN.md §9).

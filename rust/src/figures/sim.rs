@@ -8,8 +8,11 @@
 use crate::config::{model_or_die, OptMode, OuterCompress, DEFAULT_QUANT_BLOCK};
 use crate::coordinator::compress::wire_bytes;
 use crate::metrics::scaling_efficiency;
-use crate::perfmodel::gpu::{ClusterSpec, PERLMUTTER, VISTA};
-use crate::simulator::run::{simulate_run, speedup_at, Calib, SimSetup};
+use crate::netsim::FabricShape;
+use crate::perfmodel::gpu::{scenario, ClusterSpec, Scenario, PERLMUTTER, SCENARIOS, VISTA};
+use crate::simulator::run::{fits_memory, outer_event_wire_bytes, simulate_run, speedup_at,
+                            Calib, SimSetup};
+use crate::util::json::Json;
 
 /// One scale point of a runtime figure.
 #[derive(Clone, Debug)]
@@ -55,6 +58,7 @@ fn base_setup(
     SimSetup {
         model: model_or_die(model),
         cluster,
+        fabric: FabricShape::TwoLevel,
         world,
         tp,
         pp: 1,
@@ -253,6 +257,218 @@ pub fn print_fig8_compressed(rows: &[Fig8CompressRow]) {
     }
 }
 
+/// Axes of a `pier sweep` config grid (DESIGN.md §10): the cross product
+/// of scenario × world × tp × compression × fragments × sync fraction,
+/// with the schedule constants (H, batch, iterations) held fixed.
+#[derive(Clone, Debug)]
+pub struct SweepAxes {
+    pub model: String,
+    pub scenarios: Vec<&'static Scenario>,
+    pub worlds: Vec<usize>,
+    pub tps: Vec<usize>,
+    pub compress: Vec<OuterCompress>,
+    pub fragments: Vec<usize>,
+    pub fractions: Vec<f64>,
+    pub sync_interval: usize,
+    pub global_batch: usize,
+    pub iterations: usize,
+}
+
+impl SweepAxes {
+    /// The CI smoke grid: 3 scenarios × 2 worlds × {none, int8} ×
+    /// {blocking, F=4} = 24 cheap closed-form runs.
+    pub fn smoke() -> SweepAxes {
+        SweepAxes {
+            model: "gpt2-xl".into(),
+            scenarios: vec![scenario("perlmutter").unwrap(), scenario("vista").unwrap(),
+                            scenario("perlmutter-fattree").unwrap()],
+            worlds: vec![32, 64],
+            tps: vec![1],
+            compress: vec![OuterCompress::None, OuterCompress::Int8],
+            fragments: vec![0, 4],
+            fractions: vec![1.0],
+            sync_interval: 50,
+            global_batch: 512,
+            iterations: 10_000,
+        }
+    }
+
+    /// The default grid: every registry scenario, the Fig-5/7 scale range,
+    /// both TP widths, the full relaxation ladder.
+    pub fn default_grid() -> SweepAxes {
+        SweepAxes {
+            model: "gpt2-xl".into(),
+            scenarios: SCENARIOS.iter().collect(),
+            worlds: vec![16, 32, 64, 128, 256],
+            tps: vec![1, 4],
+            compress: vec![OuterCompress::None, OuterCompress::Int8],
+            fragments: vec![0, 4, 8],
+            fractions: vec![1.0, 0.5],
+            sync_interval: 50,
+            global_batch: 512,
+            iterations: 100_000,
+        }
+    }
+}
+
+/// One grid point of a sweep: the cell coordinates, the modeled run, and
+/// the Pareto mark (within the row's (scenario, world, tp) cell).
+#[derive(Clone, Debug)]
+pub struct SweepRow {
+    pub scenario: &'static str,
+    pub world: usize,
+    pub tp: usize,
+    pub compress: OuterCompress,
+    pub fragments: usize,
+    pub sync_fraction: f64,
+    /// `simulate_run` total for the full schedule.
+    pub makespan_secs: f64,
+    /// One exposed outer event under the configured schedule.
+    pub outer_event_secs: f64,
+    /// Whole-run inter-node outer wire (per node): events ×
+    /// `outer_event_wire_bytes`.
+    pub wire_bytes: f64,
+    /// On the (makespan, wire) Pareto frontier of its cell.
+    pub pareto: bool,
+}
+
+/// The `SimSetup` of one sweep cell — the single constructor `sweep_grid`
+/// and the `pier sweep`/`pier simulate` cross-check share, so the grid
+/// cannot price a config differently from the CLI (pinned in
+/// `rust/tests/dp_tp_crossval.rs`). Offload turns on exactly when the
+/// outer state would not fit device memory (the Fig-8 rule).
+pub fn sweep_setup(
+    axes: &SweepAxes,
+    sc: &'static Scenario,
+    world: usize,
+    tp: usize,
+    compress: OuterCompress,
+    fragments: usize,
+    fraction: f64,
+) -> SimSetup {
+    let tp = tp.max(1);
+    let mut s = base_setup(&axes.model, sc.cluster, world, world / tp, axes.sync_interval, tp);
+    s.fabric = sc.fabric;
+    s.global_batch = axes.global_batch;
+    s.iterations = axes.iterations;
+    s.sync_fraction = fraction;
+    s.stream_fragments = fragments;
+    s.outer_compress = compress;
+    s.cpu_offload = !fits_memory(&s);
+    s
+}
+
+/// Run the grid. Skipped combinations (no row emitted): `world % tp ≠ 0`,
+/// `tp` wider than the scenario's node, partial fraction with streaming
+/// fragments (the trainer rejects it — DESIGN.md §8), and models that
+/// don't fit device memory even with offload. Pareto marks are assigned
+/// per (scenario, world, tp) cell over (makespan, wire).
+pub fn sweep_grid(axes: &SweepAxes) -> Vec<SweepRow> {
+    let mut rows: Vec<SweepRow> = Vec::new();
+    for &sc in &axes.scenarios {
+        for &world in &axes.worlds {
+            for &tp in &axes.tps {
+                if tp == 0 || world % tp != 0 || tp > sc.cluster.gpus_per_node {
+                    continue;
+                }
+                let cell_start = rows.len();
+                for &compress in &axes.compress {
+                    for &fragments in &axes.fragments {
+                        for &fraction in &axes.fractions {
+                            if fraction < 1.0 && fragments > 1 {
+                                continue;
+                            }
+                            let s = sweep_setup(axes, sc, world, tp, compress, fragments,
+                                                fraction);
+                            if !fits_memory(&s) {
+                                continue;
+                            }
+                            let r = simulate_run(&s);
+                            let n_outer = (s.iterations as f64
+                                - s.warmup_pct * s.iterations as f64)
+                                / s.sync_interval as f64;
+                            rows.push(SweepRow {
+                                scenario: sc.name,
+                                world,
+                                tp,
+                                compress,
+                                fragments,
+                                sync_fraction: fraction,
+                                makespan_secs: r.total_secs,
+                                outer_event_secs: r.outer_event_secs,
+                                wire_bytes: n_outer * outer_event_wire_bytes(&s),
+                                pareto: false,
+                            });
+                        }
+                    }
+                }
+                mark_pareto(&mut rows[cell_start..]);
+            }
+        }
+    }
+    rows
+}
+
+/// Mark the Pareto-efficient rows of one cell: a row is dominated iff
+/// some other row is no worse on both axes and strictly better on one.
+fn mark_pareto(cell: &mut [SweepRow]) {
+    let metrics: Vec<(f64, f64)> =
+        cell.iter().map(|r| (r.makespan_secs, r.wire_bytes)).collect();
+    for (i, row) in cell.iter_mut().enumerate() {
+        let (m, w) = metrics[i];
+        row.pareto = !metrics
+            .iter()
+            .enumerate()
+            .any(|(j, &(mj, wj))| j != i && mj <= m && wj <= w && (mj < m || wj < w));
+    }
+}
+
+/// The sweep's JSON artifact (`pier sweep --out`): grid metadata plus one
+/// object per row, `pareto` flags included — the shape CI uploads and
+/// `dp_tp_crossval.rs` round-trips.
+pub fn sweep_json(axes: &SweepAxes, rows: &[SweepRow]) -> Json {
+    Json::obj(vec![
+        ("kind", Json::str("pier-sweep-pareto")),
+        ("model", Json::str(&axes.model)),
+        ("sync_interval", Json::num(axes.sync_interval as f64)),
+        ("global_batch", Json::num(axes.global_batch as f64)),
+        ("iterations", Json::num(axes.iterations as f64)),
+        ("scenarios", Json::arr(axes.scenarios.iter().map(|s| Json::str(s.name)))),
+        ("rows",
+         Json::arr(rows.iter().map(|r| {
+             Json::obj(vec![
+                 ("scenario", Json::str(r.scenario)),
+                 ("world", Json::num(r.world as f64)),
+                 ("tp", Json::num(r.tp as f64)),
+                 ("compress", Json::str(r.compress.name())),
+                 ("fragments", Json::num(r.fragments as f64)),
+                 ("sync_fraction", Json::num(r.sync_fraction)),
+                 ("makespan_secs", Json::num(r.makespan_secs)),
+                 ("outer_event_secs", Json::num(r.outer_event_secs)),
+                 ("wire_bytes", Json::num(r.wire_bytes)),
+                 ("pareto", Json::Bool(r.pareto)),
+             ])
+         }))),
+    ])
+}
+
+/// Print the sweep in the fig8 table style; `*` marks the cell frontier.
+pub fn print_sweep(rows: &[SweepRow]) {
+    println!("\n== pier sweep — makespan vs outer wire (Pareto `*` per scenario/world/tp) ==");
+    println!(
+        "{:>20} {:>6} {:>3} {:>8} {:>5} {:>5} {:>14} {:>12} {:>7}",
+        "scenario", "GPUs", "tp", "compress", "frag", "frac", "makespan (s)", "wire (GB)",
+        "pareto"
+    );
+    for r in rows {
+        println!(
+            "{:>20} {:>6} {:>3} {:>8} {:>5} {:>5.2} {:>14.0} {:>12.1} {:>7}",
+            r.scenario, r.world, r.tp, r.compress.name(), r.fragments, r.sync_fraction,
+            r.makespan_secs, r.wire_bytes / 1e9, if r.pareto { "*" } else { "" }
+        );
+    }
+}
+
 /// Calibration report: modeled AdamW scaling efficiencies at the paper's
 /// quoted anchor points (§I, §VI-B). The constants in
 /// [`crate::simulator::run::Calib`] are tuned until these land near the
@@ -377,6 +593,55 @@ mod tests {
                 assert!(r.t_int8 < r.t_streaming, "world={}: int8 must improve on \
                          streaming-only ({} vs {})", r.world, r.t_int8, r.t_streaming);
             }
+        }
+    }
+
+    #[test]
+    fn sweep_smoke_grid_shape_and_pareto() {
+        let axes = SweepAxes::smoke();
+        let rows = sweep_grid(&axes);
+        // 3 scenarios × 2 worlds × 1 tp × 2 compress × 2 fragment counts
+        assert_eq!(rows.len(), 24);
+        let cell = |r: &SweepRow| (r.scenario, r.world, r.tp);
+        // no pareto row is dominated within its cell, every cell keeps one
+        for r in &rows {
+            if r.pareto {
+                assert!(!rows.iter().any(|o| {
+                    cell(o) == cell(r)
+                        && o.makespan_secs <= r.makespan_secs
+                        && o.wire_bytes <= r.wire_bytes
+                        && (o.makespan_secs < r.makespan_secs || o.wire_bytes < r.wire_bytes)
+                }), "dominated row marked pareto: {r:?}");
+            }
+            assert!(rows.iter().any(|o| cell(o) == cell(r) && o.pareto));
+        }
+        // int8 strictly cuts the wire axis against the matching fp32 row
+        for r in rows.iter().filter(|r| r.compress == OuterCompress::Int8) {
+            let flat = rows
+                .iter()
+                .find(|o| o.compress == OuterCompress::None && cell(o) == cell(r)
+                          && o.fragments == r.fragments)
+                .unwrap();
+            assert!(r.wire_bytes < flat.wire_bytes, "{r:?}");
+        }
+        // the oversubscribed tree is slower than the flat fabric at 64 GPUs
+        // (16 leaf-mates share one 2:1 uplink)
+        let pick = |name: &str| {
+            rows.iter()
+                .find(|r| r.scenario == name && r.world == 64 && r.fragments == 0
+                          && r.compress == OuterCompress::None)
+                .unwrap()
+        };
+        assert!(pick("perlmutter-fattree").makespan_secs > pick("perlmutter").makespan_secs);
+        // JSON artifact round-trips with the flags intact
+        let json = sweep_json(&axes, &rows).to_string();
+        let parsed = Json::parse(&json).unwrap();
+        assert_eq!(parsed.get("kind").unwrap().as_str(), Some("pier-sweep-pareto"));
+        let jrows = parsed.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(jrows.len(), rows.len());
+        for (j, r) in jrows.iter().zip(&rows) {
+            assert_eq!(j.get("pareto").unwrap().as_bool(), Some(r.pareto));
+            assert_eq!(j.get("makespan_secs").unwrap().as_f64(), Some(r.makespan_secs));
         }
     }
 

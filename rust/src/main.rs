@@ -5,6 +5,8 @@
 //! * `train`    — train one optimizer arm end-to-end (L3→L2→L1 stack).
 //! * `eval`     — run the 13-task downstream suite on a checkpoint.
 //! * `simulate` — one cluster-simulation point with cost breakdown.
+//! * `sweep`    — config grid over scenario × world × tp × compression ×
+//!                fragments × sync fraction; Pareto JSON + table.
 //! * `repro`    — regenerate a paper figure/table (fig1…fig8, table2…table4,
 //!                calibration, sim-all).
 //! * `config`   — show model/recipe tables.
@@ -31,6 +33,7 @@ fn main() {
         Some("train") => cmd_train(&args),
         Some("eval") => cmd_eval(&args),
         Some("simulate") => cmd_simulate(&args),
+        Some("sweep") => cmd_sweep(&args),
         Some("repro") => cmd_repro(&args),
         Some("config") => cmd_config(&args),
         Some("data") => cmd_data(&args),
@@ -55,10 +58,14 @@ fn print_usage() {
                      [--outer-compress none|int8] [--quant-block B]\n\
                      [--offload] [--csv out.csv] [--ckpt out.ckpt]\n\
            eval      --model nano --ckpt file.ckpt\n\
-           simulate  --model gpt2-xl --cluster perlmutter|vista --world N\n\
+           simulate  --model gpt2-xl --cluster <scenario> --world N\n\
                      [--tp T] [--groups K] [--interval H] [--mode pier|adamw]\n\
                      [--stream-fragments F] [--outer-compress none|int8]\n\
-                     [--quant-block B]\n\
+                     [--quant-block B] [--jitter S [--jitter-seed N]]\n\
+           sweep     [--smoke] [--model M] [--clusters a,b] [--worlds 32,64]\n\
+                     [--tps 1,4] [--compress none,int8] [--fragments 0,4]\n\
+                     [--fractions 1.0,0.5] [--interval H] [--batch B]\n\
+                     [--iters N] [--out sweep_pareto.json]\n\
            repro     fig1|fig3|fig4|fig5|fig6|fig7|fig8|table2|table3|table4|\n\
                      ablation|calibration|sim-all [--iters N] [--model nano|micro|mini]\n\
            config    [--model name]\n\
@@ -181,13 +188,18 @@ fn cmd_eval(args: &Args) -> Result<()> {
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
-    use pier::perfmodel::gpu::cluster;
+    use pier::netsim::JitterSpec;
+    use pier::perfmodel::gpu::{scenario, scenario_names};
     use pier::simulator::run::{simulate_run, Calib, SimSetup};
     let cluster_name = args.str_or("cluster", "perlmutter");
+    let sc = scenario(&cluster_name).ok_or_else(|| {
+        anyhow!("unknown cluster {:?}; valid clusters: {}", cluster_name, scenario_names())
+    })?;
     let world = args.usize_or("world", 64);
     let s = SimSetup {
         model: model_or_die(&args.str_or("model", "gpt2-xl")),
-        cluster: cluster(&cluster_name).ok_or_else(|| anyhow!("unknown cluster"))?,
+        cluster: sc.cluster,
+        fabric: sc.fabric,
         world,
         tp: args.usize_or("tp", 1),
         pp: args.usize_or("pp", 1),
@@ -243,8 +255,83 @@ fn cmd_simulate(args: &Args) -> Result<()> {
                       no fabric hop, priced as fp32");
         }
     }
+    let jitter = args.f64_or("jitter", 0.0);
+    if jitter > 0.0 {
+        // Price one outer ring on the DES with seeded per-flow stragglers and
+        // show the stretch against the jitter-free fabric (DESIGN.md §10).
+        let seed = args.u64_or("jitter-seed", 0);
+        let nodes = s.world.div_ceil(s.cluster.gpus_per_node).max(1);
+        let slow = sc.fabric.lower(sc.cluster, nodes)
+                            .with_jitter(JitterSpec { seed, max_slowdown: jitter });
+        let v = 4.0 * s.model.n_params() as f64 * s.sync_fraction.clamp(0.0, 1.0);
+        let t0 = sc.fabric.lower(sc.cluster, nodes)
+                          .des_outer_makespan(s.dp(), s.tp * s.pp, v);
+        let tj = slow.des_outer_makespan(s.dp(), s.tp * s.pp, v);
+        println!("  straggler jitter (≤{:.0}% per flow, seed {seed}): outer ring \
+                  {t0:.3}s → {tj:.3}s on the DES", 100.0 * jitter);
+    }
     println!("  total ({} iters): {:.0}s = {:.2}h", s.iterations, r.total_secs,
              r.total_secs / 3600.0);
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    use pier::figures::{print_sweep, sweep_grid, sweep_json, SweepAxes};
+    use pier::perfmodel::gpu::{scenario, scenario_names};
+
+    fn usize_list(args: &Args, key: &str, cur: Vec<usize>) -> Result<Vec<usize>> {
+        match args.get(key) {
+            None => Ok(cur),
+            Some(v) => v.split(',').filter(|s| !s.is_empty())
+                        .map(|s| s.parse()
+                                  .map_err(|_| anyhow!("--{key} expects integers, got {s:?}")))
+                        .collect(),
+        }
+    }
+
+    let mut axes =
+        if args.flag("smoke") { SweepAxes::smoke() } else { SweepAxes::default_grid() };
+    if let Some(m) = args.get("model") {
+        axes.model = model_or_die(m).name.to_string();
+    }
+    if let Some(list) = args.get("clusters") {
+        axes.scenarios = list.split(',').filter(|s| !s.is_empty())
+            .map(|name| scenario(name).ok_or_else(|| {
+                anyhow!("unknown cluster {:?}; valid clusters: {}", name, scenario_names())
+            }))
+            .collect::<Result<Vec<_>>>()?;
+    }
+    axes.worlds = usize_list(args, "worlds", axes.worlds)?;
+    axes.tps = usize_list(args, "tps", axes.tps)?;
+    axes.fragments = usize_list(args, "fragments", axes.fragments)?;
+    if let Some(list) = args.get("fractions") {
+        axes.fractions = list.split(',').filter(|s| !s.is_empty())
+            .map(|s| s.parse()
+                      .map_err(|_| anyhow!("--fractions expects numbers, got {s:?}")))
+            .collect::<Result<Vec<f64>, _>>()?;
+    }
+    if let Some(list) = args.get("compress") {
+        axes.compress = list.split(',').filter(|s| !s.is_empty())
+            .map(|s| OuterCompress::parse(s)
+                      .ok_or_else(|| anyhow!("--compress entries must be none|int8, got {s:?}")))
+            .collect::<Result<Vec<_>>>()?;
+    }
+    axes.sync_interval = args.usize_or("interval", axes.sync_interval);
+    axes.global_batch = args.usize_or("batch", axes.global_batch);
+    axes.iterations = args.usize_or("iters", axes.iterations);
+
+    let rows = sweep_grid(&axes);
+    if rows.is_empty() {
+        bail!("sweep grid is empty — every configuration was skipped (tp must divide \
+               world and fit on a node; the model must fit in memory)");
+    }
+    print_sweep(&rows);
+    let json = sweep_json(&axes, &rows);
+    let out = args.str_or("out", "sweep_pareto.json");
+    std::fs::write(&out, format!("{json}\n"))?;
+    let frontier = rows.iter().filter(|r| r.pareto).count();
+    println!("\n{} rows, {} on a per-(scenario,world,tp) Pareto frontier → {}",
+             rows.len(), frontier, out);
     Ok(())
 }
 

@@ -71,14 +71,31 @@ pub fn hierarchical_allreduce(world: usize, v: f64, cluster: &ClusterSpec) -> f6
 /// node-level bytes equal `v_total` but the rings run in parallel,
 /// overlapping their latency terms.
 pub fn outer_sync_time(dp: usize, tp: usize, v_total: f64, cluster: &ClusterSpec) -> f64 {
+    outer_sync_time_path(dp, tp, v_total, cluster.inter.effective_bw(), cluster.inter.latency)
+}
+
+/// [`outer_sync_time`] over an explicit injection *path*: the same §IV-C
+/// pattern where the node's fabric attachment is a routed path through a
+/// topology graph rather than one `ClusterSpec::inter` link — `path_bw`
+/// is the path's bottleneck effective bandwidth
+/// (`netsim::topology::Topology::path_bandwidth`) and `path_latency` the
+/// summed one-way link latencies. `outer_sync_time` is the single-link
+/// special case and delegates here, so the two cannot drift.
+pub fn outer_sync_time_path(
+    dp: usize,
+    tp: usize,
+    v_total: f64,
+    path_bw: f64,
+    path_latency: f64,
+) -> f64 {
     if dp <= 1 {
         return 0.0;
     }
     let nf = dp as f64;
     let shard = v_total / tp as f64;
-    // Each of the tp rings: 2·(dp−1)/dp·shard over its share of node bw.
-    let per_ring_bw = cluster.inter.effective_bw() / tp as f64;
-    2.0 * (nf - 1.0) / nf * shard / per_ring_bw + 2.0 * (nf - 1.0) * cluster.inter.latency
+    // Each of the tp rings: 2·(dp−1)/dp·shard over its share of path bw.
+    let per_ring_bw = path_bw / tp as f64;
+    2.0 * (nf - 1.0) / nf * shard / per_ring_bw + 2.0 * (nf - 1.0) * path_latency
 }
 
 #[cfg(test)]
@@ -132,6 +149,20 @@ mod tests {
         );
         // … while Vista's *burst* factor (shared fabric) is the larger one.
         assert!(VISTA.burst_factor > PERLMUTTER.burst_factor);
+    }
+
+    #[test]
+    fn path_form_is_the_single_link_special_case() {
+        let v = 6e9;
+        for tp in [1usize, 2, 4] {
+            let a = outer_sync_time(32, tp, v, &PERLMUTTER);
+            let b = outer_sync_time_path(32, tp, v, PERLMUTTER.inter.effective_bw(),
+                                         PERLMUTTER.inter.latency);
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // a slower path bottleneck strictly slows the sync
+        assert!(outer_sync_time_path(32, 4, v, 4e9, 1e-5)
+                > outer_sync_time_path(32, 4, v, 8e9, 1e-5));
     }
 
     #[test]

@@ -1,51 +1,65 @@
-//! Network simulation substrate: α–β closed forms ([`collectives`]) and a
+//! Network simulation substrate: α–β closed forms ([`collectives`]), a
 //! discrete-event fluid-flow engine ([`event`]) that resolves contention
-//! between concurrent collectives. The cluster simulator uses the closed
-//! forms on the iteration fast path and the DES for the contended outer
-//! step and for cross-validation.
+//! between concurrent collectives, and the topology-graph scenario engine
+//! ([`topology`]) both price their traffic on. The cluster simulator uses
+//! the closed forms on the iteration fast path and the DES for the
+//! contended outer step and for cross-validation.
+//!
+//! Every outer-sync cost — plain/streaming/compressed, DES or closed form
+//! — is one call into [`outer_sync_over`] with a different [`OuterSync`]
+//! parameterization; the `des_outer_*` function family survives as thin
+//! legacy wrappers that lower a [`ClusterSpec`] through
+//! [`Topology::two_level`] (bit-transparent with the pre-topology models;
+//! pinned in `rust/tests/dp_tp_crossval.rs`).
 
 pub mod collectives;
 pub mod event;
+pub mod topology;
 
-pub use collectives::{broadcast, hierarchical_allreduce, outer_sync_time, ring_allgather,
-                      ring_allreduce};
+pub use collectives::{broadcast, hierarchical_allreduce, outer_sync_time, outer_sync_time_path,
+                      ring_allgather, ring_allreduce};
 pub use event::{Flow, FlowResult, LinkId, Network};
+pub use topology::{FabricShape, JitterSpec, LinkClass, NodeKind, TopoLink, Topology};
 
 use crate::config::outer_cliques;
 use crate::perfmodel::gpu::ClusterSpec;
 
-/// DES version of the §IV-C outer sync: `tp` concurrent ring all-reduces
-/// (one per TP rank) of `v_total/tp` bytes each across `dp` replicas, all
-/// sharing each node's injection link. Returns the makespan.
-pub fn des_outer_sync(dp: usize, tp: usize, v_total: f64, cluster: &ClusterSpec) -> f64 {
-    if dp <= 1 {
-        return 0.0;
-    }
-    let mut net = Network::new();
-    // One injection link per participating node. With Megatron placement
-    // the dp replicas of a TP rank sit on distinct nodes; model the
-    // representative worst-loaded node: all tp rings traverse it.
-    let node = net.add_link(cluster.inter.effective_bw());
-    let nf = dp as f64;
-    let ring_bytes = 2.0 * (nf - 1.0) / nf * (v_total / tp as f64);
-    let latency = 2.0 * (nf - 1.0) * cluster.inter.latency;
-    let flows = (0..tp)
-        .map(|i| Flow { bytes: ring_bytes, latency, links: vec![node], tag: i })
-        .collect();
-    let (_, makespan) = net.run(flows);
-    makespan
+/// What crosses the fabric in an outer sync.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum OuterWire {
+    /// Flat fp32: every DP replica faces the fabric with the full
+    /// `v_total` (the §IV-C baseline pattern).
+    Flat,
+    /// Two-level hierarchical wire (DESIGN.md §9): clique-reduce
+    /// intra-node first, then only `v · bytes_per_param / 4` bytes cross
+    /// the fabric between node leaders (`bytes_per_param` from
+    /// `config::OuterCompress::bytes_per_param`; 4.0 = uncompressed).
+    Hier { bytes_per_param: f64 },
 }
 
-/// DES cost of a recorded outer-sync *schedule*: the sum of per-event
-/// [`des_outer_sync`] makespans for a list of logical fp32 volumes (the
-/// trainer's `RunLog::outer_events`, one entry per executed sync). Outer
-/// events never overlap — each is a full barrier between inner phases — so
-/// the schedule makespan is the plain sum. `rust/tests/dp_tp_crossval.rs`
-/// pins this against the closed-form costing of the same schedule
-/// (`simulator::run::cost_outer_schedule`).
-pub fn des_outer_schedule(dp: usize, tp: usize, volumes: &[f64], cluster: &ClusterSpec) -> f64 {
-    let tp = tp.max(1);
-    volumes.iter().map(|&v| des_outer_sync(dp, tp, v, cluster)).sum()
+/// Which engine prices the fabric hop of [`outer_sync_over`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CostModel {
+    /// Fluid-flow DES ([`Topology::des_outer_makespan`]); sees jitter.
+    Des,
+    /// α–β closed form ([`Topology::analytic_outer_makespan`]).
+    Analytic,
+}
+
+/// Parameter block of [`outer_sync_over`] — the (who, what, how) of one
+/// outer synchronization, minus the volume (per-event) and the engine.
+#[derive(Clone, Copy, Debug)]
+pub struct OuterSync {
+    /// DP replicas participating; `dp ≤ 1` is free.
+    pub dp: usize,
+    /// Concurrent per-shard rings (TP ranks sharing the injection path).
+    pub tp: usize,
+    /// Flat fp32 or hierarchical/compressed wire.
+    pub wire: OuterWire,
+    /// Streaming fragments; `≤ 1` is the blocking sync.
+    pub fragments: usize,
+    /// Seconds of next-round inner compute the fragments can hide under.
+    pub overlap_window: f64,
 }
 
 /// Cost decomposition of one **streaming** outer sync (DESIGN.md §8).
@@ -63,8 +77,8 @@ pub struct StreamingOuterCost {
 }
 
 /// THE streaming overlap-cost rule (DESIGN.md §8), single-sourced across
-/// every model that prices a streaming sync — the DES
-/// ([`des_outer_sync_streaming`]), the closed-form schedule costing
+/// every model that prices a streaming sync — the parameterized core
+/// ([`outer_sync_over`]), the closed-form schedule costing
 /// (`simulator::run::cost_outer_schedule_streaming`), and the simulator's
 /// event model (`simulator::run::outer_event_streaming`) all delegate
 /// here, so the semantics (balanced byte partition, which fragment gates,
@@ -101,6 +115,96 @@ pub fn streaming_overlap_cost(
                          exposed_secs: comm - overlapped }
 }
 
+/// The one parameterized outer-sync cost every variant lowers onto: price
+/// a `v_logical`-byte §IV-C sync over an arbitrary [`Topology`] under a
+/// [`OuterSync`] parameterization, with either engine ([`CostModel`]).
+///
+/// * [`OuterWire::Flat`]: all `dp` replicas ring over the fabric graph.
+/// * [`OuterWire::Hier`]: clique-reduce on the representative node's
+///   intra fabric ([`Topology::rep_intra`], closed form — contention-free
+///   by construction), then the node leaders
+///   (`config::outer_cliques(dp, tp, gpus_per_node)`) ring the compressed
+///   wire bytes over the graph.
+/// * `fragments`/`overlap_window` apply [`streaming_overlap_cost`]; the
+///   blocking sync is the `fragments ≤ 1` degenerate case.
+pub fn outer_sync_over(
+    topo: &Topology,
+    sync: &OuterSync,
+    v_logical: f64,
+    model: CostModel,
+) -> StreamingOuterCost {
+    if sync.dp <= 1 {
+        return StreamingOuterCost::default();
+    }
+    let tp = sync.tp.max(1);
+    let ring = |participants: usize, v: f64| match model {
+        CostModel::Des => topo.des_outer_makespan(participants, tp, v),
+        CostModel::Analytic => topo.analytic_outer_makespan(participants, tp, v),
+    };
+    streaming_overlap_cost(v_logical, sync.fragments, sync.overlap_window, |v| {
+        match sync.wire {
+            OuterWire::Flat => ring(sync.dp, v),
+            OuterWire::Hier { bytes_per_param } => {
+                let (clique, nodes) = outer_cliques(sync.dp, tp, topo.gpus_per_node());
+                let intra =
+                    if clique > 1 { ring_allreduce(clique, v, &topo.rep_intra()) } else { 0.0 };
+                intra + ring(nodes, v * bytes_per_param / 4.0)
+            }
+        }
+    })
+}
+
+/// Cost of a recorded outer-sync *schedule* over a topology: the summed
+/// exposed makespans of per-event [`outer_sync_over`] calls. Outer events
+/// never overlap — each is a full barrier between inner phases — so the
+/// schedule makespan is the plain sum. Each event is `(volume, fragments)`
+/// — the per-event fragment count overrides `sync.fragments` (the
+/// trainer's `RunLog::outer_events` records both).
+pub fn outer_schedule_over(
+    topo: &Topology,
+    sync: &OuterSync,
+    events: &[(f64, usize)],
+    model: CostModel,
+) -> f64 {
+    events
+        .iter()
+        .map(|&(v, fragments)| {
+            let ev = OuterSync { fragments, ..*sync };
+            outer_sync_over(topo, &ev, v, model).exposed_secs
+        })
+        .sum()
+}
+
+// ---- legacy ClusterSpec-shaped wrappers -------------------------------
+//
+// Thin compatibility veneer: each lowers the cluster through
+// `Topology::two_level` and calls the parameterized core. Kept so the
+// existing call sites (`figures`, `dp_tp_crossval.rs`) read unchanged;
+// bit-equal to the pre-topology implementations.
+
+/// DES version of the §IV-C outer sync: `tp` concurrent ring all-reduces
+/// (one per TP rank) of `v_total/tp` bytes each across `dp` replicas, all
+/// sharing each node's injection link. Returns the makespan. Legacy thin
+/// wrapper over [`outer_sync_over`] on the two-level topology.
+pub fn des_outer_sync(dp: usize, tp: usize, v_total: f64, cluster: &ClusterSpec) -> f64 {
+    let topo = Topology::two_level(cluster, dp);
+    let sync = OuterSync { dp, tp, wire: OuterWire::Flat, fragments: 1, overlap_window: 0.0 };
+    outer_sync_over(&topo, &sync, v_total, CostModel::Des).exposed_secs
+}
+
+/// DES cost of a recorded outer-sync *schedule*: the sum of per-event
+/// [`des_outer_sync`] makespans for a list of logical fp32 volumes (the
+/// trainer's `RunLog::outer_events`, one entry per executed sync).
+/// `rust/tests/dp_tp_crossval.rs` pins this against the closed-form
+/// costing of the same schedule (`simulator::run::cost_outer_schedule`).
+pub fn des_outer_schedule(dp: usize, tp: usize, volumes: &[f64], cluster: &ClusterSpec) -> f64 {
+    let tp = tp.max(1);
+    let topo = Topology::two_level(cluster, dp);
+    let sync = OuterSync { dp, tp, wire: OuterWire::Flat, fragments: 1, overlap_window: 0.0 };
+    let events: Vec<(f64, usize)> = volumes.iter().map(|&v| (v, 1)).collect();
+    outer_schedule_over(&topo, &sync, &events, CostModel::Des)
+}
+
 /// DES version of the streaming outer sync: the `v_total`-byte §IV-C sync
 /// under the [`streaming_overlap_cost`] rule with [`des_outer_sync`]
 /// (tp concurrent per-shard rings) pricing each fragment. `dp ≤ 1` is
@@ -116,11 +220,9 @@ pub fn des_outer_sync_streaming(
     overlap_window: f64,
     cluster: &ClusterSpec,
 ) -> StreamingOuterCost {
-    if dp <= 1 {
-        return StreamingOuterCost::default();
-    }
-    streaming_overlap_cost(v_total, fragments, overlap_window,
-                           |v| des_outer_sync(dp, tp, v, cluster))
+    let topo = Topology::two_level(cluster, dp);
+    let sync = OuterSync { dp, tp, wire: OuterWire::Flat, fragments, overlap_window };
+    outer_sync_over(&topo, &sync, v_total, CostModel::Des)
 }
 
 /// DES version of the **compressed** two-level outer sync (DESIGN.md §9):
@@ -141,14 +243,10 @@ pub fn des_outer_sync_compressed(
     bytes_per_param: f64,
     cluster: &ClusterSpec,
 ) -> f64 {
-    if dp <= 1 {
-        return 0.0;
-    }
-    let tp = tp.max(1);
-    let (clique, nodes) = outer_cliques(dp, tp, cluster.gpus_per_node);
-    let intra =
-        if clique > 1 { ring_allreduce(clique, v_logical, &cluster.intra) } else { 0.0 };
-    intra + des_outer_sync(nodes, tp, v_logical * bytes_per_param / 4.0, cluster)
+    let topo = Topology::two_level(cluster, dp);
+    let sync = OuterSync { dp, tp, wire: OuterWire::Hier { bytes_per_param }, fragments: 1,
+                           overlap_window: 0.0 };
+    outer_sync_over(&topo, &sync, v_logical, CostModel::Des).exposed_secs
 }
 
 /// Streaming variant of [`des_outer_sync_compressed`]: the same
@@ -165,12 +263,10 @@ pub fn des_outer_sync_streaming_compressed(
     overlap_window: f64,
     cluster: &ClusterSpec,
 ) -> StreamingOuterCost {
-    if dp <= 1 {
-        return StreamingOuterCost::default();
-    }
-    streaming_overlap_cost(v_logical, fragments, overlap_window, |v| {
-        des_outer_sync_compressed(dp, tp, v, bytes_per_param, cluster)
-    })
+    let topo = Topology::two_level(cluster, dp);
+    let sync =
+        OuterSync { dp, tp, wire: OuterWire::Hier { bytes_per_param }, fragments, overlap_window };
+    outer_sync_over(&topo, &sync, v_logical, CostModel::Des)
 }
 
 /// DES cost of a recorded schedule at an effective bytes-per-param:
@@ -185,10 +281,11 @@ pub fn des_outer_schedule_compressed(
     cluster: &ClusterSpec,
 ) -> f64 {
     let tp = tp.max(1);
-    volumes
-        .iter()
-        .map(|&v| des_outer_sync_compressed(dp, tp, v, bytes_per_param, cluster))
-        .sum()
+    let topo = Topology::two_level(cluster, dp);
+    let sync = OuterSync { dp, tp, wire: OuterWire::Hier { bytes_per_param }, fragments: 1,
+                           overlap_window: 0.0 };
+    let events: Vec<(f64, usize)> = volumes.iter().map(|&v| (v, 1)).collect();
+    outer_schedule_over(&topo, &sync, &events, CostModel::Des)
 }
 
 /// DES cost of a recorded **streaming** schedule: the summed exposed
@@ -206,12 +303,10 @@ pub fn des_outer_schedule_streaming(
     cluster: &ClusterSpec,
 ) -> f64 {
     let tp = tp.max(1);
-    volumes
-        .iter()
-        .map(|&v| {
-            des_outer_sync_streaming(dp, tp, v, fragments, overlap_window, cluster).exposed_secs
-        })
-        .sum()
+    let topo = Topology::two_level(cluster, dp);
+    let sync = OuterSync { dp, tp, wire: OuterWire::Flat, fragments, overlap_window };
+    let events: Vec<(f64, usize)> = volumes.iter().map(|&v| (v, fragments)).collect();
+    outer_schedule_over(&topo, &sync, &events, CostModel::Des)
 }
 
 #[cfg(test)]
@@ -351,5 +446,23 @@ mod tests {
         let t1 = des_outer_sync(16, 1, v, &PERLMUTTER);
         let t4 = des_outer_sync(16, 4, v, &PERLMUTTER);
         assert!(t4 >= t1 * 0.99);
+    }
+
+    #[test]
+    fn core_generalizes_the_wrappers_on_any_topology() {
+        // The same OuterSync parameterization must price a non-two-level
+        // graph without any wrapper involvement (the scenario-engine path)
+        // and stay internally consistent: oversubscription can only slow
+        // the sync down, and Analytic tracks Des on the new shapes too.
+        let v = 6.2e9;
+        let sync = OuterSync { dp: 16, tp: 4, wire: OuterWire::Flat, fragments: 1,
+                               overlap_window: 0.0 };
+        let flat = Topology::two_level(&PERLMUTTER, 16);
+        let tree = Topology::fat_tree(&PERLMUTTER, 16, 4, 4.0);
+        let t_flat = outer_sync_over(&flat, &sync, v, CostModel::Des).exposed_secs;
+        let t_tree = outer_sync_over(&tree, &sync, v, CostModel::Des).exposed_secs;
+        assert!(t_tree > t_flat, "{t_tree} !> {t_flat}");
+        let cf_tree = outer_sync_over(&tree, &sync, v, CostModel::Analytic).exposed_secs;
+        assert!((t_tree - cf_tree).abs() / cf_tree < 0.02, "{t_tree} vs {cf_tree}");
     }
 }

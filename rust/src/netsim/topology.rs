@@ -1,0 +1,730 @@
+//! Topology-graph substrate for the network models (DESIGN.md §10).
+//!
+//! The earlier cost models hard-coded one shape: homogeneous nodes behind a
+//! single "representative worst-loaded injection link". [`Topology`] makes
+//! that shape one instance of a general graph — compute nodes and switches
+//! joined by typed links ([`LinkClass`]) each carrying a [`LinkSpec`] — so
+//! the same DES/closed-form machinery prices fat-trees, rail fabrics and
+//! mixed A100+GH200 fleets. The two-level builder lowers to *exactly* the
+//! legacy single-link model (bit-transparent; pinned in
+//! `rust/tests/properties.rs` and `rust/tests/dp_tp_crossval.rs`).
+//!
+//! Routing is deterministic shortest-path (BFS over the link-creation
+//! order, so equal-length ties always resolve to the earliest-built link;
+//! no threading, no `util::par` — identical across `PIER_THREADS`).
+//! Optional seeded jitter ([`JitterSpec`]) models stragglers in the DES
+//! only: per-flow slowdown factors drawn from `util::rng::Pcg64` streams
+//! keyed by the flow tag, so the same seed is bit-reproducible.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use super::event::{Flow, LinkId, Network};
+use crate::perfmodel::gpu::{ClusterSpec, LinkSpec, PCIE};
+use crate::util::rng::Pcg64;
+
+/// Vertex of the fabric graph.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NodeKind {
+    /// GPU compute node: `gpus` accelerators behind one fabric endpoint.
+    Compute { gpus: usize },
+    /// Fabric switch at `tier` (1 = leaf/rail plane, 2 = spine/core).
+    Switch { tier: u8 },
+}
+
+/// Physical class of a link — what cable the [`LinkSpec`] describes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinkClass {
+    /// Intra-node GPU↔GPU fabric (NVLink / NVLink-C2C); a self-link.
+    NvLink,
+    /// Intra-node host↔device staging (PCIe); a self-link.
+    Pcie,
+    /// Node NIC into the first switch tier (Slingshot/IB injection).
+    Injection,
+    /// Switch↔switch uplink (leaf→spine tier).
+    Spine,
+}
+
+/// One edge: endpoints `a`/`b` (node indices) and its α–β spec. A
+/// self-link (`a == b`) declares intra-node fabric — it is excluded from
+/// routing and exists so clique collectives can be priced on the node's
+/// own NVLink/PCIe numbers.
+#[derive(Clone, Copy, Debug)]
+pub struct TopoLink {
+    pub class: LinkClass,
+    pub spec: LinkSpec,
+    pub a: usize,
+    pub b: usize,
+}
+
+/// Seeded per-flow straggler injection for the DES (off by default: a
+/// `Topology` carries `jitter: None` unless [`Topology::with_jitter`] is
+/// called). Each flow's bytes are scaled by
+/// `1 + max_slowdown · u` with `u ~ U[0,1)` drawn from the
+/// `Pcg64::new(seed, tag)` stream of that flow — factors are ≥ 1 (a
+/// straggler never speeds up) and bit-reproducible for a fixed seed. The
+/// closed-form models ignore jitter; it is a DES-side perturbation.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct JitterSpec {
+    pub seed: u64,
+    /// Maximum fractional slowdown (0.1 ⇒ flows run up to 10 % long).
+    pub max_slowdown: f64,
+}
+
+impl JitterSpec {
+    /// Slowdown factor of the flow with this tag: deterministic in
+    /// `(seed, tag)`, uniform over `[1, 1 + max_slowdown)`.
+    pub fn factor(&self, flow_tag: usize) -> f64 {
+        1.0 + self.max_slowdown.max(0.0) * Pcg64::new(self.seed, flow_tag as u64).f64()
+    }
+}
+
+/// The fabric graph. Build one with [`Topology::two_level`] /
+/// [`Topology::fat_tree`] / [`Topology::rail`] / [`Topology::mixed_fleet`]
+/// (or [`FabricShape::lower`]), or assemble a custom shape from
+/// [`Topology::add_compute`] / [`Topology::add_switch`] /
+/// [`Topology::connect`].
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub name: String,
+    nodes: Vec<NodeKind>,
+    links: Vec<TopoLink>,
+    /// Per-node `(link index, peer)` adjacency, in link-creation order
+    /// (the BFS tie-break); self-links are excluded.
+    adj: Vec<Vec<(usize, usize)>>,
+    /// Routing target of outer/fabric traffic (the core switch). `None`
+    /// for disjoint multi-plane fabrics (rail), where each plane's
+    /// injection link *is* the outer path.
+    core: Option<usize>,
+    /// Seeded straggler injection for the DES; `None` = off.
+    pub jitter: Option<JitterSpec>,
+}
+
+impl Topology {
+    pub fn new(name: impl Into<String>) -> Topology {
+        Topology { name: name.into(), nodes: Vec::new(), links: Vec::new(),
+                   adj: Vec::new(), core: None, jitter: None }
+    }
+
+    /// Enable seeded straggler injection (builder style).
+    pub fn with_jitter(mut self, jitter: JitterSpec) -> Topology {
+        self.jitter = Some(jitter);
+        self
+    }
+
+    pub fn add_compute(&mut self, gpus: usize) -> usize {
+        self.nodes.push(NodeKind::Compute { gpus });
+        self.adj.push(Vec::new());
+        self.nodes.len() - 1
+    }
+
+    pub fn add_switch(&mut self, tier: u8) -> usize {
+        self.nodes.push(NodeKind::Switch { tier });
+        self.adj.push(Vec::new());
+        self.nodes.len() - 1
+    }
+
+    /// Add a link; returns its index. `a == b` declares intra-node fabric
+    /// (kept out of the routing adjacency).
+    pub fn connect(&mut self, a: usize, b: usize, class: LinkClass, spec: LinkSpec) -> usize {
+        let idx = self.links.len();
+        self.links.push(TopoLink { class, spec, a, b });
+        if a != b {
+            self.adj[a].push((idx, b));
+            self.adj[b].push((idx, a));
+        }
+        idx
+    }
+
+    pub fn set_core(&mut self, node: usize) {
+        self.core = Some(node);
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn node(&self, i: usize) -> NodeKind {
+        self.nodes[i]
+    }
+
+    pub fn links(&self) -> &[TopoLink] {
+        &self.links
+    }
+
+    /// Compute-node indices, ascending.
+    pub fn compute_nodes(&self) -> Vec<usize> {
+        (0..self.nodes.len())
+            .filter(|&i| matches!(self.nodes[i], NodeKind::Compute { .. }))
+            .collect()
+    }
+
+    /// Deterministic shortest path (link indices) from `from` to `to`:
+    /// BFS in link-creation order, so equal-hop ties resolve to the
+    /// earliest-built links — no randomness, no thread dependence.
+    /// `from == to` routes over the empty path.
+    pub fn route(&self, from: usize, to: usize) -> Option<Vec<usize>> {
+        if from == to {
+            return Some(Vec::new());
+        }
+        let mut prev: Vec<Option<(usize, usize)>> = vec![None; self.nodes.len()];
+        let mut seen = vec![false; self.nodes.len()];
+        seen[from] = true;
+        let mut queue = VecDeque::from([from]);
+        'bfs: while let Some(u) = queue.pop_front() {
+            for &(link, peer) in &self.adj[u] {
+                if !seen[peer] {
+                    seen[peer] = true;
+                    prev[peer] = Some((u, link));
+                    if peer == to {
+                        break 'bfs;
+                    }
+                    queue.push_back(peer);
+                }
+            }
+        }
+        if !seen[to] {
+            return None;
+        }
+        let mut path = Vec::new();
+        let mut cur = to;
+        while cur != from {
+            let (parent, link) = prev[cur].expect("BFS predecessor");
+            path.push(link);
+            cur = parent;
+        }
+        path.reverse();
+        Some(path)
+    }
+
+    /// Bottleneck bandwidth of a path: min over its links' effective
+    /// (contention-divided) bandwidths. Empty path ⇒ `+∞` (no fabric hop).
+    pub fn path_bandwidth(&self, path: &[usize]) -> f64 {
+        path.iter()
+            .map(|&l| self.links[l].spec.effective_bw())
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Sum of one-way link latencies along a path.
+    pub fn path_latency(&self, path: &[usize]) -> f64 {
+        path.iter().map(|&l| self.links[l].spec.latency).sum()
+    }
+
+    /// The node's parallel uplink paths into the fabric — one per incident
+    /// link, each extended by the shortest route from that link's peer to
+    /// the core switch (empty extension when there is no core: each rail
+    /// plane's injection link is the whole outer path). Concurrent outer
+    /// rings round-robin across these paths.
+    pub fn outer_paths(&self, node: usize) -> Vec<Vec<usize>> {
+        let mut paths = Vec::new();
+        for &(link, peer) in &self.adj[node] {
+            let tail = match self.core {
+                Some(core) if peer != core => match self.route(peer, core) {
+                    Some(t) => t,
+                    None => continue,
+                },
+                _ => Vec::new(),
+            };
+            let mut p = vec![link];
+            p.extend(tail);
+            paths.push(p);
+        }
+        paths
+    }
+
+    /// The representative worst-loaded compute node: smallest bottleneck
+    /// bandwidth over its outer paths, ties to the lowest index — the node
+    /// the §IV-C contention model charges (DESIGN.md §10).
+    pub fn rep_node(&self) -> usize {
+        let mut best: Option<(f64, usize)> = None;
+        for node in self.compute_nodes() {
+            let paths = self.outer_paths(node);
+            if paths.is_empty() {
+                continue;
+            }
+            let bw = paths.iter().map(|p| self.path_bandwidth(p)).fold(f64::INFINITY, f64::min);
+            match best {
+                Some((b, _)) if bw >= b => {}
+                _ => best = Some((bw, node)),
+            }
+        }
+        best.map(|(_, n)| n).unwrap_or(0)
+    }
+
+    /// Compute nodes whose outer paths share at least one link with the
+    /// representative node's — the set whose flows contend in the DES. In
+    /// the two-level shape every node owns its injection link, so the
+    /// domain is the representative node alone and the DES launches
+    /// exactly the legacy flow set.
+    pub fn contention_domain(&self) -> Vec<usize> {
+        let rep = self.rep_node();
+        let rep_links: std::collections::BTreeSet<usize> =
+            self.outer_paths(rep).into_iter().flatten().collect();
+        self.compute_nodes()
+            .into_iter()
+            .filter(|&n| {
+                n == rep
+                    || self.outer_paths(n).iter().flatten().any(|l| rep_links.contains(l))
+            })
+            .collect()
+    }
+
+    /// GPUs on the representative node (the clique width the two-level
+    /// outer schedule packs against).
+    pub fn gpus_per_node(&self) -> usize {
+        match self.nodes.get(self.rep_node()) {
+            Some(&NodeKind::Compute { gpus }) => gpus.max(1),
+            _ => 1,
+        }
+    }
+
+    /// The representative node's intra-node GPU fabric (its NVLink
+    /// self-link; any self-link as fallback). A node with no declared
+    /// intra fabric reduces for free — infinite-bandwidth, zero-latency
+    /// (the single-GPU-node semantics, e.g. Vista's `clique = 1`).
+    pub fn rep_intra(&self) -> LinkSpec {
+        let rep = self.rep_node();
+        let own = |l: &&TopoLink| l.a == rep && l.b == rep;
+        self.links
+            .iter()
+            .find(|l| own(l) && l.class == LinkClass::NvLink)
+            .or_else(|| self.links.iter().find(own))
+            .map(|l| l.spec)
+            .unwrap_or(LinkSpec { latency: 0.0, bandwidth: f64::INFINITY, contention: 1.0 })
+    }
+
+    /// One DES link per topology link (same indexing), capacities at the
+    /// links' effective bandwidths.
+    pub fn build_network(&self) -> (Network, Vec<LinkId>) {
+        let mut net = Network::new();
+        let ids = self.links.iter().map(|l| net.add_link(l.spec.effective_bw())).collect();
+        (net, ids)
+    }
+
+    /// Worst per-ring bandwidth share and outer-path latency when `rings`
+    /// concurrent rings leave every contention-domain node (rings
+    /// round-robin across each node's parallel uplink paths; every link's
+    /// capacity splits over the flows crossing it). `None` when the graph
+    /// has no outer paths at all.
+    fn ring_share(&self, rings: usize) -> Option<(f64, f64)> {
+        let rings = rings.max(1);
+        let mut counts: BTreeMap<usize, usize> = BTreeMap::new();
+        for &node in &self.contention_domain() {
+            let paths = self.outer_paths(node);
+            if paths.is_empty() {
+                continue;
+            }
+            for r in 0..rings {
+                for &l in &paths[r % paths.len()] {
+                    *counts.entry(l).or_insert(0) += 1;
+                }
+            }
+        }
+        let rep_paths = self.outer_paths(self.rep_node());
+        if rep_paths.is_empty() {
+            return None;
+        }
+        let mut per_ring_bw = f64::INFINITY;
+        let mut latency = 0.0f64;
+        for r in 0..rings {
+            let path = &rep_paths[r % rep_paths.len()];
+            let bw = path
+                .iter()
+                .map(|&l| self.links[l].spec.effective_bw() / counts[&l] as f64)
+                .fold(f64::INFINITY, f64::min);
+            per_ring_bw = per_ring_bw.min(bw);
+            latency = latency.max(self.path_latency(path));
+        }
+        Some((per_ring_bw, latency))
+    }
+
+    /// DES makespan of the §IV-C outer pattern on this graph: `tp`
+    /// concurrent per-shard rings over `participants` leaders, every
+    /// contention-domain node injecting its own `tp` flows over its outer
+    /// paths (rings round-robin across parallel uplinks). Per-flow jitter
+    /// applies when enabled. On the two-level shape this launches exactly
+    /// the legacy single-injection-link flow set — bit-equal to the
+    /// pre-topology `des_outer_sync`.
+    pub fn des_outer_makespan(&self, participants: usize, tp: usize, v_total: f64) -> f64 {
+        if participants <= 1 {
+            return 0.0;
+        }
+        let tp = tp.max(1);
+        let (net, ids) = self.build_network();
+        let nf = participants as f64;
+        let ring_bytes = 2.0 * (nf - 1.0) / nf * (v_total / tp as f64);
+        let mut flows = Vec::new();
+        for &node in &self.contention_domain() {
+            let paths = self.outer_paths(node);
+            if paths.is_empty() {
+                continue;
+            }
+            for r in 0..tp {
+                let path = &paths[r % paths.len()];
+                let latency = 2.0 * (nf - 1.0) * self.path_latency(path);
+                let tag = flows.len();
+                let mut bytes = ring_bytes;
+                if let Some(j) = &self.jitter {
+                    bytes *= j.factor(tag);
+                }
+                flows.push(Flow { bytes, latency,
+                                  links: path.iter().map(|&l| ids[l]).collect(), tag });
+            }
+        }
+        if flows.is_empty() {
+            return 0.0;
+        }
+        net.run(flows).1
+    }
+
+    /// Closed-form (α–β) counterpart of [`Topology::des_outer_makespan`]:
+    /// ring bytes over the slowest ring's bottleneck share plus the
+    /// latency term. Ignores jitter (an intentionally DES-only effect).
+    /// On the two-level shape this is bit-equal to the legacy
+    /// `collectives::outer_sync_time`.
+    pub fn analytic_outer_makespan(&self, participants: usize, tp: usize, v_total: f64) -> f64 {
+        if participants <= 1 {
+            return 0.0;
+        }
+        let tp = tp.max(1);
+        let (per_ring_bw, latency) = match self.ring_share(tp) {
+            Some(s) => s,
+            None => return 0.0,
+        };
+        let nf = participants as f64;
+        let shard = v_total / tp as f64;
+        2.0 * (nf - 1.0) / nf * shard / per_ring_bw + 2.0 * (nf - 1.0) * latency
+    }
+
+    /// α–β fold of the whole fabric onto one equivalent injection link:
+    /// `(bandwidth, latency)` such that the legacy single-link
+    /// `outer_sync_time` over it reproduces
+    /// [`Topology::analytic_outer_makespan`] for `shards` concurrent
+    /// rings. This is how non-two-level shapes ride the existing
+    /// `ClusterSpec`-shaped cost paths (`simulator::run`).
+    pub fn folded_injection(&self, shards: usize) -> (f64, f64) {
+        let shards = shards.max(1);
+        match self.ring_share(shards) {
+            Some((per_ring_bw, latency)) => (per_ring_bw * shards as f64, latency),
+            None => (f64::INFINITY, 0.0),
+        }
+    }
+
+    // -- builders ---------------------------------------------------------
+
+    /// The legacy shape: `nodes` homogeneous compute nodes, each with one
+    /// injection link ([`ClusterSpec::inter`]) into a single core switch.
+    /// Lowering `PERLMUTTER`/`VISTA` through this builder reproduces every
+    /// pre-topology cost number bit-for-bit.
+    pub fn two_level(cluster: &ClusterSpec, nodes: usize) -> Topology {
+        let n = nodes.max(1);
+        let mut t = Topology::new(format!("{}-two-level", cluster.name));
+        for _ in 0..n {
+            let c = t.add_compute(cluster.gpus_per_node);
+            t.connect(c, c, LinkClass::NvLink, cluster.intra);
+            t.connect(c, c, LinkClass::Pcie, PCIE);
+        }
+        let core = t.add_switch(2);
+        t.set_core(core);
+        for c in 0..n {
+            t.connect(c, core, LinkClass::Injection, cluster.inter);
+        }
+        t
+    }
+
+    /// Two-tier fat-tree: `leaf_radix` nodes per leaf switch, every leaf
+    /// uplinked to one spine. The uplink carries `leaf_radix` injections'
+    /// worth of bandwidth divided by `oversub` (`oversub = 1` ⇒
+    /// non-blocking ⇒ behaves like [`Topology::two_level`]; larger values
+    /// make leaf-mates contend on the shared uplink).
+    pub fn fat_tree(cluster: &ClusterSpec, nodes: usize, leaf_radix: usize, oversub: f64)
+        -> Topology
+    {
+        let n = nodes.max(1);
+        let radix = leaf_radix.max(1);
+        let mut t = Topology::new(format!("{}-fattree", cluster.name));
+        for _ in 0..n {
+            let c = t.add_compute(cluster.gpus_per_node);
+            t.connect(c, c, LinkClass::NvLink, cluster.intra);
+            t.connect(c, c, LinkClass::Pcie, PCIE);
+        }
+        let spine = t.add_switch(2);
+        t.set_core(spine);
+        let uplink = LinkSpec {
+            latency: cluster.inter.latency,
+            bandwidth: radix as f64 * cluster.inter.bandwidth / oversub.max(1e-9),
+            contention: cluster.inter.contention,
+        };
+        for first in (0..n).step_by(radix) {
+            let leaf = t.add_switch(1);
+            t.connect(leaf, spine, LinkClass::Spine, uplink);
+            for c in first..(first + radix).min(n) {
+                t.connect(c, leaf, LinkClass::Injection, cluster.inter);
+            }
+        }
+        t
+    }
+
+    /// Rail fabric: `rails` disjoint switch planes; every node splits its
+    /// injection bandwidth into one NIC per rail (Perlmutter physically
+    /// has 4). Each ring is confined to one rail, so rings on different
+    /// rails never contend — with `tp = rails` rings this prices exactly
+    /// like the shared-NIC two-level shape, while fewer rings than rails
+    /// leave capacity stranded (the cost of plane isolation).
+    pub fn rail(cluster: &ClusterSpec, nodes: usize, rails: usize) -> Topology {
+        let n = nodes.max(1);
+        let r = rails.max(1);
+        let mut t = Topology::new(format!("{}-rail", cluster.name));
+        for _ in 0..n {
+            let c = t.add_compute(cluster.gpus_per_node);
+            t.connect(c, c, LinkClass::NvLink, cluster.intra);
+            t.connect(c, c, LinkClass::Pcie, PCIE);
+        }
+        let per_rail = LinkSpec {
+            latency: cluster.inter.latency,
+            bandwidth: cluster.inter.bandwidth / r as f64,
+            contention: cluster.inter.contention,
+        };
+        let planes: Vec<usize> = (0..r).map(|_| t.add_switch(1)).collect();
+        for c in 0..n {
+            for &plane in &planes {
+                t.connect(c, plane, LinkClass::Injection, per_rail);
+            }
+        }
+        t
+    }
+
+    /// Heterogeneous fleet: `nodes_a` nodes of cluster `a` plus `nodes_b`
+    /// of cluster `b` behind one core switch, each fleet keeping its own
+    /// intra fabric and injection spec. The §IV-C contention model charges
+    /// the representative worst node, so the slower fleet's injection
+    /// gates the outer sync (A100s in an A100+GH200 mix).
+    pub fn mixed_fleet(a: &ClusterSpec, nodes_a: usize, b: &ClusterSpec, nodes_b: usize)
+        -> Topology
+    {
+        let mut t = Topology::new(format!("{}+{}", a.name, b.name));
+        let mut fleet = |t: &mut Topology, spec: &ClusterSpec, n: usize| {
+            for _ in 0..n {
+                let c = t.add_compute(spec.gpus_per_node);
+                t.connect(c, c, LinkClass::NvLink, spec.intra);
+                t.connect(c, c, LinkClass::Pcie, PCIE);
+            }
+        };
+        fleet(&mut t, a, nodes_a.max(1));
+        fleet(&mut t, b, nodes_b);
+        let core = t.add_switch(2);
+        t.set_core(core);
+        for c in t.compute_nodes() {
+            let spec = if c < nodes_a.max(1) { a.inter } else { b.inter };
+            t.connect(c, core, LinkClass::Injection, spec);
+        }
+        t
+    }
+}
+
+/// The named fabric shapes a [`ClusterSpec`] can lower to — the
+/// scenario-registry half of the topology engine
+/// (`perfmodel::gpu::SCENARIOS` pairs these with clusters; `pier sweep`
+/// and `pier simulate` share that registry).
+#[derive(Clone, Copy, Debug)]
+pub enum FabricShape {
+    /// The legacy shape: per-node injection links into one core. Folding
+    /// is the identity — bit-transparent with the pre-topology models.
+    TwoLevel,
+    /// Two-tier leaf/spine tree; see [`Topology::fat_tree`].
+    FatTree { leaf_radix: usize, oversub: f64 },
+    /// Disjoint rail planes; see [`Topology::rail`].
+    Rail { rails: usize },
+    /// Half this cluster, half `other`, one fabric; see
+    /// [`Topology::mixed_fleet`].
+    Mixed { other: &'static ClusterSpec },
+}
+
+impl FabricShape {
+    /// Build the topology graph for `nodes` compute nodes of `base`.
+    pub fn lower(&self, base: &ClusterSpec, nodes: usize) -> Topology {
+        match *self {
+            FabricShape::TwoLevel => Topology::two_level(base, nodes),
+            FabricShape::FatTree { leaf_radix, oversub } => {
+                Topology::fat_tree(base, nodes, leaf_radix, oversub)
+            }
+            FabricShape::Rail { rails } => Topology::rail(base, nodes, rails),
+            FabricShape::Mixed { other } => {
+                Topology::mixed_fleet(base, nodes.div_ceil(2), other, nodes / 2)
+            }
+        }
+    }
+
+    /// Fold the shape onto `base` as an equivalent single injection link
+    /// ([`Topology::folded_injection`] for `shards` concurrent rings), so
+    /// every `ClusterSpec`-shaped cost path prices the topology without
+    /// knowing about graphs. [`FabricShape::TwoLevel`] returns `base`
+    /// unchanged — the bit-transparency contract.
+    pub fn folded_cluster(&self, base: &ClusterSpec, nodes: usize, shards: usize)
+        -> ClusterSpec
+    {
+        match self {
+            FabricShape::TwoLevel => *base,
+            _ => {
+                let (bandwidth, latency) = self.lower(base, nodes).folded_injection(shards);
+                let mut c = *base;
+                c.inter = LinkSpec { latency, bandwidth, contention: 1.0 };
+                c
+            }
+        }
+    }
+
+    /// Short human label for tables (`two-level`, `fat-tree(16:4)`, …).
+    pub fn label(&self) -> String {
+        match self {
+            FabricShape::TwoLevel => "two-level".into(),
+            FabricShape::FatTree { leaf_radix, oversub } => {
+                format!("fat-tree({leaf_radix}:{oversub})")
+            }
+            FabricShape::Rail { rails } => format!("rail x{rails}"),
+            FabricShape::Mixed { other } => format!("mixed(+{})", other.name),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::gpu::{PERLMUTTER, VISTA};
+
+    #[test]
+    fn two_level_shape_and_domain() {
+        let t = Topology::two_level(&PERLMUTTER, 8);
+        assert_eq!(t.compute_nodes().len(), 8);
+        assert_eq!(t.gpus_per_node(), 4);
+        // every node's outer path is its own injection link
+        for n in t.compute_nodes() {
+            let paths = t.outer_paths(n);
+            assert_eq!(paths.len(), 1);
+            assert_eq!(paths[0].len(), 1);
+            assert_eq!(t.links()[paths[0][0]].class, LinkClass::Injection);
+        }
+        // …so the contention domain is the representative node alone
+        assert_eq!(t.contention_domain(), vec![t.rep_node()]);
+        // node-pair routing goes up and over: 2 hops
+        assert_eq!(t.route(0, 5).unwrap().len(), 2);
+        assert_eq!(t.rep_intra().bandwidth, PERLMUTTER.intra.bandwidth);
+    }
+
+    #[test]
+    fn fat_tree_oversubscription_contends() {
+        let v = 6.2e9;
+        let flat = Topology::two_level(&PERLMUTTER, 16);
+        // non-blocking tree: uplink never the bottleneck → same makespan
+        let fair = Topology::fat_tree(&PERLMUTTER, 16, 4, 1.0);
+        let tf = fair.des_outer_makespan(16, 4, v);
+        let t2 = flat.des_outer_makespan(16, 4, v);
+        assert!((tf - t2).abs() / t2 < 0.05, "{tf} vs {t2}");
+        // 4:1 oversubscribed: leaf-mates share the thin uplink → slower
+        let thin = Topology::fat_tree(&PERLMUTTER, 16, 4, 4.0);
+        assert_eq!(thin.contention_domain().len(), 4);
+        assert!(thin.des_outer_makespan(16, 4, v) > 2.0 * t2);
+    }
+
+    #[test]
+    fn rail_with_one_ring_per_rail_matches_shared_nic() {
+        // 4 rings over 4 rails of bw/4 each = 4 rings sharing one bw NIC,
+        // and the arithmetic is identical division by a power of two —
+        // exact equality, not approximate.
+        let v = 6.2e9;
+        let shared = Topology::two_level(&PERLMUTTER, 8);
+        let railed = Topology::rail(&PERLMUTTER, 8, 4);
+        assert_eq!(railed.des_outer_makespan(8, 4, v), shared.des_outer_makespan(8, 4, v));
+        // one ring uses one rail: 3/4 of the node bandwidth stranded
+        assert!(railed.des_outer_makespan(8, 1, v) > 3.0 * shared.des_outer_makespan(8, 1, v));
+    }
+
+    #[test]
+    fn mixed_fleet_gated_by_the_slower_injection() {
+        // A100 injection (8.1 GB/s) ≪ GH200 (37 GB/s): the representative
+        // node is an A100 node and the mixed sync prices exactly like the
+        // homogeneous A100 two-level shape.
+        let v = 6.2e9;
+        let mixed = Topology::mixed_fleet(&PERLMUTTER, 4, &VISTA, 4);
+        let a100 = Topology::two_level(&PERLMUTTER, 4);
+        assert!(mixed.rep_node() < 4, "rep must be an A100 node");
+        assert_eq!(mixed.des_outer_makespan(8, 4, v), a100.des_outer_makespan(8, 4, v));
+    }
+
+    #[test]
+    fn des_agrees_with_analytic_on_every_builder() {
+        let v = 6.2e9;
+        let topos = [
+            Topology::two_level(&PERLMUTTER, 16),
+            Topology::two_level(&VISTA, 16),
+            Topology::fat_tree(&PERLMUTTER, 16, 4, 4.0),
+            Topology::rail(&PERLMUTTER, 16, 4),
+            Topology::mixed_fleet(&PERLMUTTER, 8, &VISTA, 8),
+        ];
+        for t in &topos {
+            for tp in [1usize, 2, 4] {
+                let des = t.des_outer_makespan(16, tp, v);
+                let cf = t.analytic_outer_makespan(16, tp, v);
+                assert!((des - cf).abs() / cf < 0.02,
+                        "{} tp={tp}: des {des} vs cf {cf}", t.name);
+            }
+        }
+    }
+
+    #[test]
+    fn folded_injection_reproduces_the_analytic_makespan() {
+        // outer_sync_time over the folded (bw, lat) must equal the
+        // topology's own closed form — the contract the simulator's
+        // ClusterSpec folding relies on.
+        let v = 6.2e9;
+        for t in [Topology::fat_tree(&PERLMUTTER, 16, 4, 4.0),
+                  Topology::rail(&PERLMUTTER, 16, 4)]
+        {
+            for tp in [1usize, 2, 4] {
+                let (bw, lat) = t.folded_injection(tp);
+                let nf = 16.0f64;
+                let folded = 2.0 * (nf - 1.0) / nf * (v / tp as f64) / (bw / tp as f64)
+                    + 2.0 * (nf - 1.0) * lat;
+                let cf = t.analytic_outer_makespan(16, tp, v);
+                assert!((folded - cf).abs() / cf < 1e-9, "{}: {folded} vs {cf}", t.name);
+            }
+        }
+    }
+
+    #[test]
+    fn jitter_is_seeded_deterministic_and_never_speeds_up() {
+        let v = 6.2e9;
+        let base = Topology::two_level(&PERLMUTTER, 16);
+        let t0 = base.des_outer_makespan(16, 4, v);
+        let j = |seed| {
+            Topology::two_level(&PERLMUTTER, 16)
+                .with_jitter(JitterSpec { seed, max_slowdown: 0.2 })
+                .des_outer_makespan(16, 4, v)
+        };
+        // same seed → bit-identical; different seed → different draw
+        assert_eq!(j(7).to_bits(), j(7).to_bits());
+        assert_ne!(j(7).to_bits(), j(8).to_bits());
+        // slowdowns only: jittered ≥ baseline; zero amplitude == baseline
+        assert!(j(7) >= t0);
+        let z = Topology::two_level(&PERLMUTTER, 16)
+            .with_jitter(JitterSpec { seed: 7, max_slowdown: 0.0 })
+            .des_outer_makespan(16, 4, v);
+        assert_eq!(z.to_bits(), t0.to_bits());
+    }
+
+    #[test]
+    fn routes_exist_between_all_pairs_on_every_builder() {
+        for t in [Topology::two_level(&PERLMUTTER, 5),
+                  Topology::fat_tree(&PERLMUTTER, 9, 4, 2.0),
+                  Topology::rail(&PERLMUTTER, 5, 4),
+                  Topology::mixed_fleet(&PERLMUTTER, 3, &VISTA, 3)]
+        {
+            let nodes = t.compute_nodes();
+            for &a in &nodes {
+                for &b in &nodes {
+                    let p = t.route(a, b).unwrap_or_else(|| panic!("{}: {a}→{b}", t.name));
+                    assert_eq!(p.is_empty(), a == b);
+                }
+            }
+        }
+    }
+}

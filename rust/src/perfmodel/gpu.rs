@@ -1,4 +1,8 @@
-//! GPU and cluster hardware models — the paper's two testbeds (§VI-B).
+//! GPU and cluster hardware models — the paper's two testbeds (§VI-B) —
+//! plus the scenario registry pairing each [`ClusterSpec`] with a fabric
+//! shape ([`FabricShape`]) for the topology engine (DESIGN.md §10).
+
+use crate::netsim::topology::FabricShape;
 
 /// One accelerator.
 #[derive(Clone, Copy, Debug)]
@@ -54,6 +58,11 @@ impl LinkSpec {
         self.bandwidth / self.contention
     }
 }
+
+/// Host↔device staging link (PCIe Gen4 ×16 class, ≈25 GB/s sustained):
+/// the CPU-offload round-trip the simulator prices, and the `Pcie`-class
+/// self-link every topology compute node carries.
+pub const PCIE: LinkSpec = LinkSpec { latency: 5.0e-6, bandwidth: 25e9, contention: 1.0 };
 
 /// A cluster: homogeneous nodes of `gpus_per_node` GPUs.
 #[derive(Clone, Copy, Debug)]
@@ -114,6 +123,55 @@ pub fn cluster(name: &str) -> Option<&'static ClusterSpec> {
     }
 }
 
+/// One named entry of the scenario registry: a base [`ClusterSpec`] plus
+/// the [`FabricShape`] its nodes are wired with. `pier simulate` and
+/// `pier sweep` both resolve `--cluster` names here (the one registry the
+/// CLI error messages enumerate), and the simulator lowers the pair to a
+/// `netsim::Topology` per run.
+#[derive(Clone, Copy, Debug)]
+pub struct Scenario {
+    pub name: &'static str,
+    pub cluster: &'static ClusterSpec,
+    pub fabric: FabricShape,
+    /// One-line description for `--help`-style listings.
+    pub blurb: &'static str,
+}
+
+/// The scenario registry. The first two entries are the paper's testbeds
+/// on the legacy two-level shape (bit-transparent with the pre-topology
+/// models); the rest exercise the graph engine: oversubscribed fat-trees,
+/// Perlmutter's physical 4-rail Slingshot, and a heterogeneous A100+GH200
+/// fleet gated by its slower injection.
+pub const SCENARIOS: &[Scenario] = &[
+    Scenario { name: "perlmutter", cluster: &PERLMUTTER, fabric: FabricShape::TwoLevel,
+               blurb: "4xA100 nodes, two-level clique fabric (paper testbed)" },
+    Scenario { name: "vista", cluster: &VISTA, fabric: FabricShape::TwoLevel,
+               blurb: "1xGH200 nodes, two-level clique fabric (paper testbed)" },
+    Scenario { name: "perlmutter-fattree", cluster: &PERLMUTTER,
+               fabric: FabricShape::FatTree { leaf_radix: 16, oversub: 2.0 },
+               blurb: "A100 fleet behind a 2:1-oversubscribed 16-ary leaf/spine tree" },
+    Scenario { name: "perlmutter-rail", cluster: &PERLMUTTER,
+               fabric: FabricShape::Rail { rails: 4 },
+               blurb: "A100 fleet on 4 disjoint Slingshot rail planes" },
+    Scenario { name: "vista-fattree", cluster: &VISTA,
+               fabric: FabricShape::FatTree { leaf_radix: 32, oversub: 4.0 },
+               blurb: "GH200 fleet behind a 4:1-oversubscribed 32-ary leaf/spine tree" },
+    Scenario { name: "mixed-a100-gh200", cluster: &PERLMUTTER,
+               fabric: FabricShape::Mixed { other: &VISTA },
+               blurb: "half A100 + half GH200 behind one core, slower injection gates" },
+];
+
+/// Look up a scenario by registry name.
+pub fn scenario(name: &str) -> Option<&'static Scenario> {
+    SCENARIOS.iter().find(|s| s.name == name)
+}
+
+/// Comma-separated registry names — the CLI's unknown-`--cluster` error
+/// body, so the message and the registry cannot drift apart.
+pub fn scenario_names() -> String {
+    SCENARIOS.iter().map(|s| s.name).collect::<Vec<_>>().join(", ")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -132,5 +190,23 @@ mod tests {
         assert_eq!(cluster("perlmutter").unwrap().gpus_per_node, 4);
         assert_eq!(cluster("vista").unwrap().gpus_per_node, 1);
         assert!(cluster("frontier").is_none());
+    }
+
+    #[test]
+    fn scenario_registry_covers_and_lists() {
+        // every legacy cluster name resolves to a two-level scenario over
+        // the same spec, so the registry is a strict superset of cluster()
+        for name in ["perlmutter", "vista"] {
+            let sc = scenario(name).unwrap();
+            assert!(matches!(sc.fabric, FabricShape::TwoLevel));
+            assert_eq!(sc.cluster.name, cluster(name).unwrap().name);
+        }
+        assert!(scenario("frontier").is_none());
+        // names are unique and the listing names them all
+        let names = scenario_names();
+        for sc in SCENARIOS {
+            assert!(names.contains(sc.name), "{} missing from listing", sc.name);
+            assert_eq!(SCENARIOS.iter().filter(|s| s.name == sc.name).count(), 1);
+        }
     }
 }

@@ -7,4 +7,5 @@ pub mod gpu;
 
 pub use flops::{compute_time, flops_per_iter, flops_per_token, mfu, outer_state_bytes,
                 state_bytes};
-pub use gpu::{cluster, ClusterSpec, GpuSpec, LinkSpec, A100_40G, GH200, PERLMUTTER, VISTA};
+pub use gpu::{cluster, scenario, scenario_names, ClusterSpec, GpuSpec, LinkSpec, Scenario,
+              A100_40G, GH200, PCIE, PERLMUTTER, SCENARIOS, VISTA};

@@ -12,5 +12,5 @@
 pub mod run;
 
 pub use run::{cost_outer_schedule, cost_outer_schedule_streaming,
-              cost_recorded_schedule_streaming, outer_event_streaming, simulate_run,
-              IterBreakdown, SimResult, SimSetup};
+              cost_recorded_schedule_streaming, outer_event_streaming, outer_event_wire_bytes,
+              simulate_run, IterBreakdown, SimResult, SimSetup};

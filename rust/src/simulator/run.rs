@@ -1,10 +1,11 @@
 //! Per-iteration time models and full-run simulation.
 
 use crate::config::{outer_cliques, ModelConfig, OptMode, OuterCompress, DEFAULT_QUANT_BLOCK};
-use crate::netsim::{hierarchical_allreduce, outer_sync_time, ring_allreduce,
-                    streaming_overlap_cost};
+use crate::netsim::{hierarchical_allreduce, outer_schedule_over, outer_sync_time,
+                    ring_allreduce, streaming_overlap_cost, CostModel, FabricShape, OuterSync,
+                    OuterWire, Topology};
 use crate::perfmodel::flops::compute_time;
-use crate::perfmodel::gpu::ClusterSpec;
+use crate::perfmodel::gpu::{ClusterSpec, PCIE};
 
 /// Modeled collective efficiency: achieved fraction of nominal link
 /// bandwidth for large-message ring collectives (NCCL/RCCL bus-bandwidth
@@ -37,6 +38,12 @@ impl Default for Calib {
 pub struct SimSetup {
     pub model: &'static ModelConfig,
     pub cluster: &'static ClusterSpec,
+    /// Fabric shape the cluster's nodes are wired with (DESIGN.md §10).
+    /// `TwoLevel` is the legacy per-node-injection-link model and folds to
+    /// `cluster` unchanged (bit-transparent); other shapes lower to a
+    /// `netsim::Topology` and fold their routed outer paths into an
+    /// equivalent injection link before costing.
+    pub fabric: FabricShape,
     /// Total GPUs.
     pub world: usize,
     pub tp: usize,
@@ -96,7 +103,10 @@ impl SimSetup {
     }
 
     fn scaled_cluster(&self) -> ClusterSpec {
-        let mut c = *self.cluster;
+        // Fold the fabric shape first ([`FabricShape::folded_cluster`]:
+        // identity for TwoLevel), then apply the calibration multipliers.
+        let nodes = self.world.div_ceil(self.cluster.gpus_per_node).max(1);
+        let mut c = self.fabric.folded_cluster(self.cluster, nodes, self.tp * self.pp);
         c.intra.bandwidth *= self.calib.nvlink_eff;
         c.inter.bandwidth *= self.calib.fabric_eff;
         c
@@ -236,7 +246,7 @@ fn outer_event_parts(s: &SimSetup) -> (ClusterSpec, f64, f64, f64, f64) {
     }
     let offload = if s.cpu_offload {
         // reload anchor+momentum, store back: 4 transfers of 4·N/tp over PCIe
-        4.0 * 4.0 * shard / 25e9
+        4.0 * 4.0 * shard / PCIE.effective_bw()
     } else {
         0.0
     };
@@ -330,6 +340,25 @@ pub fn outer_event_streaming(s: &SimSetup) -> (f64, f64) {
     (c.exposed_secs + update + offload, c.overlapped_secs)
 }
 
+/// Inter-node fabric bytes one outer event injects per node — the wire
+/// axis of the `pier sweep` Pareto frontier. Zero when the run has no
+/// fabric hop (dp ≤ 1, or the whole world fits one node); the compressed
+/// two-level schedule scales the logical fp32 delta by the effective
+/// bytes-per-param exactly when it engages ([`compressed_topology`]'s
+/// gate, so modeled time and modeled wire cannot disagree about whether
+/// compression happened).
+pub fn outer_event_wire_bytes(s: &SimSetup) -> f64 {
+    let cluster = s.scaled_cluster();
+    if s.dp() <= 1 || s.world.div_ceil(cluster.gpus_per_node) <= 1 {
+        return 0.0;
+    }
+    let delta = 4.0 * s.model.n_params() as f64 * s.sync_fraction.clamp(0.0, 1.0);
+    match compressed_topology(s, &cluster) {
+        Some(_) => delta * s.outer_compress.bytes_per_param(s.outer_quant_block) / 4.0,
+        None => delta,
+    }
+}
+
 /// Simulate the full run (§VI-B1's weighted average: `p·T` lazy-start
 /// iterations at the synchronized cost, the rest at the inner cost plus the
 /// amortized outer events).
@@ -376,8 +405,10 @@ pub fn simulate_run(s: &SimSetup) -> SimResult {
 /// contention is a property of a *specific* cluster occupancy and is
 /// applied only in [`outer_event`]; schedule costing stays uncalibrated.)
 pub fn cost_outer_schedule(dp: usize, tp: usize, volumes: &[f64], cluster: &ClusterSpec) -> f64 {
-    let tp = tp.max(1);
-    volumes.iter().map(|&v| outer_sync_time(dp, tp, v, cluster)).sum()
+    let topo = Topology::two_level(cluster, dp);
+    let sync = OuterSync { dp, tp, wire: OuterWire::Flat, fragments: 1, overlap_window: 0.0 };
+    let events: Vec<(f64, usize)> = volumes.iter().map(|&v| (v, 1)).collect();
+    outer_schedule_over(&topo, &sync, &events, CostModel::Analytic)
 }
 
 /// Closed-form cost of a recorded outer schedule at an **effective
@@ -394,16 +425,11 @@ pub fn cost_outer_schedule_compressed(
     bytes_per_param: f64,
     cluster: &ClusterSpec,
 ) -> f64 {
-    let tp = tp.max(1);
-    let (clique, nodes) = outer_cliques(dp, tp, cluster.gpus_per_node);
-    volumes
-        .iter()
-        .map(|&v| {
-            let intra =
-                if clique > 1 { ring_allreduce(clique, v, &cluster.intra) } else { 0.0 };
-            intra + outer_sync_time(nodes, tp, v * bytes_per_param / 4.0, cluster)
-        })
-        .sum()
+    let topo = Topology::two_level(cluster, dp);
+    let sync = OuterSync { dp, tp, wire: OuterWire::Hier { bytes_per_param }, fragments: 1,
+                           overlap_window: 0.0 };
+    let events: Vec<(f64, usize)> = volumes.iter().map(|&v| (v, 1)).collect();
+    outer_schedule_over(&topo, &sync, &events, CostModel::Analytic)
 }
 
 /// Overlap-aware counterpart of [`cost_outer_schedule`] for **streaming**
@@ -440,15 +466,9 @@ pub fn cost_recorded_schedule_streaming(
     overlap_window: f64,
     cluster: &ClusterSpec,
 ) -> f64 {
-    let tp = tp.max(1);
-    events
-        .iter()
-        .map(|&(v, fragments)| {
-            streaming_overlap_cost(v, fragments, overlap_window,
-                                   |vi| outer_sync_time(dp, tp, vi, cluster))
-            .exposed_secs
-        })
-        .sum()
+    let topo = Topology::two_level(cluster, dp);
+    let sync = OuterSync { dp, tp, wire: OuterWire::Flat, fragments: 1, overlap_window };
+    outer_schedule_over(&topo, &sync, events, CostModel::Analytic)
 }
 
 /// Convenience: AdamW-vs-Pier pair at the same scale.
@@ -480,6 +500,7 @@ mod tests {
         SimSetup {
             model: model("gpt2-xl").unwrap(),
             cluster: &PERLMUTTER,
+            fabric: FabricShape::TwoLevel,
             world,
             tp: 1,
             pp: 1,
@@ -725,6 +746,43 @@ mod tests {
             let des = crate::netsim::des_outer_schedule(32, tp, &volumes, &PERLMUTTER);
             assert!((des - cf).abs() / cf < 0.02, "tp={tp}: des {des} vs cf {cf}");
         }
+    }
+
+    #[test]
+    fn fabric_shape_folds_into_the_outer_event() {
+        let base = setup(64, OptMode::Pier);
+        // oversubscribed leaf/spine: leaf-mates contend → slower event
+        let mut tree = base.clone();
+        tree.fabric = FabricShape::FatTree { leaf_radix: 16, oversub: 2.0 };
+        assert!(outer_event(&tree) > outer_event(&base));
+        // one ring (tp=1) on a 4-rail plane strands ¾ of the injection bw
+        let mut rails = base.clone();
+        rails.fabric = FabricShape::Rail { rails: 4 };
+        assert!(outer_event(&rails) > outer_event(&base));
+        assert!(simulate_run(&rails).total_secs > simulate_run(&base).total_secs);
+        // the TwoLevel fold is the identity — bit-transparent contract
+        let folded = base.fabric.folded_cluster(base.cluster, 16, 1);
+        assert_eq!(folded.inter.bandwidth.to_bits(), base.cluster.inter.bandwidth.to_bits());
+        assert_eq!(folded.inter.latency.to_bits(), base.cluster.inter.latency.to_bits());
+    }
+
+    #[test]
+    fn wire_bytes_track_fraction_and_compression() {
+        let full = setup(64, OptMode::Pier);
+        let w_full = outer_event_wire_bytes(&full);
+        assert_eq!(w_full, 4.0 * full.model.n_params() as f64);
+        let mut half = full.clone();
+        half.sync_fraction = 0.5;
+        assert_eq!(outer_event_wire_bytes(&half), 0.5 * w_full);
+        let mut int8 = full.clone();
+        int8.outer_compress = OuterCompress::Int8;
+        let w_q = outer_event_wire_bytes(&int8);
+        assert!(w_q < 0.3 * w_full, "int8 wire {w_q} vs fp32 {w_full}");
+        // no fabric hop → no wire (and int8 disengages, like the model)
+        let mut one_node = setup(4, OptMode::Pier);
+        one_node.tp = 4;
+        one_node.groups = 1;
+        assert_eq!(outer_event_wire_bytes(&one_node), 0.0);
     }
 
     #[test]

@@ -16,13 +16,14 @@
 //!   `cfg.tp = 2`, validating the recorded `outer_events` against both
 //!   cost models and against the expected `4·N` full-sync volume.
 
-use pier::config::{OptMode, OuterCompress, DEFAULT_QUANT_BLOCK};
+use pier::config::{outer_cliques, OptMode, OuterCompress, DEFAULT_QUANT_BLOCK};
 use pier::coordinator::collective::{outer_all_reduce_into, shard_span, CommStats};
 use pier::coordinator::OuterController;
 use pier::netsim::{des_outer_schedule, des_outer_schedule_compressed,
-                   des_outer_schedule_streaming, des_outer_sync,
-                   des_outer_sync_streaming, des_outer_sync_streaming_compressed};
-use pier::perfmodel::gpu::PERLMUTTER;
+                   des_outer_schedule_streaming, des_outer_sync, des_outer_sync_compressed,
+                   des_outer_sync_streaming, des_outer_sync_streaming_compressed,
+                   outer_sync_time, ring_allreduce, FabricShape, Flow, Network, Topology};
+use pier::perfmodel::gpu::{ClusterSpec, PERLMUTTER, VISTA};
 use pier::simulator::run::{cost_outer_schedule, cost_outer_schedule_compressed,
                            cost_outer_schedule_streaming};
 use pier::testing::oracle::{inner_step, make_groups, target};
@@ -140,6 +141,7 @@ fn fig8_configs_streaming_makespan_strictly_below_blocking() {
         let s = SimSetup {
             model,
             cluster: &PERLMUTTER,
+            fabric: FabricShape::TwoLevel,
             world,
             tp: 4,
             pp: 1,
@@ -350,6 +352,190 @@ fn des_degenerate_cases_are_free() {
     assert_eq!(des_outer_sync(1, 4, 1e9, &PERLMUTTER), 0.0);
     assert_eq!(cost_outer_schedule(1, 4, &[1e9, 2e9], &PERLMUTTER), 0.0);
     assert_eq!(des_outer_schedule(16, 2, &[], &PERLMUTTER), 0.0);
+}
+
+// --------------------------------------------- topology bit-transparency pins
+
+/// The pre-topology `des_outer_sync`, reimplemented inline exactly as it
+/// stood before the graph refactor: one injection link at the cluster's
+/// effective inter-node bandwidth, `tp` concurrent ring flows sharing it.
+/// The refactored wrappers lower through `Topology::two_level` and must
+/// reproduce this **bit-for-bit** — the load-bearing contract of the
+/// scenario-engine refactor.
+fn pre_refactor_des_outer_sync(dp: usize, tp: usize, v_total: f64, c: &ClusterSpec) -> f64 {
+    if dp <= 1 {
+        return 0.0;
+    }
+    let tp = tp.max(1);
+    let mut net = Network::new();
+    let link = net.add_link(c.inter.effective_bw());
+    let nf = dp as f64;
+    let flows: Vec<Flow> = (0..tp)
+        .map(|r| Flow { bytes: 2.0 * (nf - 1.0) / nf * (v_total / tp as f64),
+                        latency: 2.0 * (nf - 1.0) * c.inter.latency,
+                        links: vec![link],
+                        tag: r })
+        .collect();
+    net.run(flows).1
+}
+
+/// The pre-topology closed form: α–β over the single injection link.
+fn pre_refactor_outer_sync_time(dp: usize, tp: usize, v_total: f64, c: &ClusterSpec) -> f64 {
+    if dp <= 1 {
+        return 0.0;
+    }
+    let nf = dp as f64;
+    let shard = v_total / tp as f64;
+    let per_ring_bw = c.inter.effective_bw() / tp as f64;
+    2.0 * (nf - 1.0) / nf * shard / per_ring_bw + 2.0 * (nf - 1.0) * c.inter.latency
+}
+
+#[test]
+fn two_level_lowering_reproduces_the_pre_refactor_models_bit_for_bit() {
+    // Fig-8-and-beyond grid on both reference clusters: the DES wrapper,
+    // the graph closed form, and the legacy `outer_sync_time` all equal
+    // their pre-refactor implementations exactly (f64 bit patterns).
+    let v7b = 4.0 * pier::config::model_or_die("gpt2-7b").n_params() as f64;
+    for cluster in [&PERLMUTTER, &VISTA] {
+        for dp in [2usize, 4, 8, 16, 32, 64] {
+            for tp in [1usize, 2, 4] {
+                for v in [v7b, v7b / 3.0, 1e9] {
+                    let des = des_outer_sync(dp, tp, v, cluster);
+                    let pre = pre_refactor_des_outer_sync(dp, tp, v, cluster);
+                    assert_eq!(des.to_bits(), pre.to_bits(),
+                               "DES drifted: dp={dp} tp={tp} v={v}: {des} vs {pre}");
+                    let cf = Topology::two_level(cluster, dp).analytic_outer_makespan(dp, tp, v);
+                    let pre_cf = pre_refactor_outer_sync_time(dp, tp, v, cluster);
+                    assert_eq!(cf.to_bits(), pre_cf.to_bits(),
+                               "closed form drifted: dp={dp} tp={tp} v={v}: {cf} vs {pre_cf}");
+                    assert_eq!(outer_sync_time(dp, tp, v, cluster).to_bits(), pre_cf.to_bits(),
+                               "outer_sync_time drifted: dp={dp} tp={tp}");
+                }
+            }
+        }
+    }
+    assert_eq!(des_outer_sync(1, 4, 1e9, &PERLMUTTER), 0.0);
+}
+
+#[test]
+fn streaming_and_schedule_wrappers_stay_bit_transparent() {
+    let v = 6.2e9;
+    for cluster in [&PERLMUTTER, &VISTA] {
+        for &(dp, tp, frags, window) in
+            &[(8usize, 4usize, 4usize, 0.5f64), (32, 2, 2, 3.0), (64, 1, 8, 0.0)]
+        {
+            // Pre-refactor streaming: the same balanced byte partition,
+            // each fragment DES-priced on the single link, overlap capped
+            // by the window with the last fragment always exposed.
+            let f = frags.max(1);
+            let mut comm = 0.0;
+            let mut last = 0.0;
+            for i in 0..f {
+                let v_i = v * (i as f64 + 1.0) / f as f64 - v * i as f64 / f as f64;
+                last = pre_refactor_des_outer_sync(dp, tp, v_i, cluster);
+                comm += last;
+            }
+            let overlapped = (comm - last).min(window.max(0.0));
+            let c = des_outer_sync_streaming(dp, tp, v, frags, window, cluster);
+            assert_eq!(c.comm_secs.to_bits(), comm.to_bits(), "dp={dp} tp={tp} f={frags}");
+            assert_eq!(c.overlapped_secs.to_bits(), overlapped.to_bits());
+            assert_eq!(c.exposed_secs.to_bits(), (comm - overlapped).to_bits());
+        }
+        let events = [1e9, 6.2e9, 2.5e8];
+        let by_hand: f64 =
+            events.iter().map(|&e| pre_refactor_des_outer_sync(16, 2, e, cluster)).sum();
+        assert_eq!(des_outer_schedule(16, 2, &events, cluster).to_bits(), by_hand.to_bits());
+    }
+}
+
+#[test]
+fn compressed_wrapper_reproduces_the_pre_refactor_two_level_cost() {
+    // Hierarchical wire: clique-reduce intra (closed form) + leaders ring
+    // the narrow bytes over the fabric — both clusters, both tp regimes
+    // (Perlmutter tp=1 forms 4-GPU cliques; Vista is one GPU per node).
+    let v = 6.2e9;
+    let bpp = OuterCompress::Int8.bytes_per_param(DEFAULT_QUANT_BLOCK);
+    for cluster in [&PERLMUTTER, &VISTA] {
+        for dp in [4usize, 8, 32] {
+            for tp in [1usize, 4] {
+                let (clique, nodes) = outer_cliques(dp, tp, cluster.gpus_per_node);
+                let intra =
+                    if clique > 1 { ring_allreduce(clique, v, &cluster.intra) } else { 0.0 };
+                let pre =
+                    intra + pre_refactor_des_outer_sync(nodes, tp, v * bpp / 4.0, cluster);
+                let got = des_outer_sync_compressed(dp, tp, v, bpp, cluster);
+                assert_eq!(got.to_bits(), pre.to_bits(),
+                           "dp={dp} tp={tp} on {}: {got} vs {pre}", cluster.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn sweep_two_level_rows_match_pier_simulate_and_emit_valid_pareto_json() {
+    use pier::figures::{sweep_grid, sweep_json, sweep_setup, SweepAxes};
+    use pier::perfmodel::gpu::scenario;
+    use pier::simulator::run::simulate_run;
+    use std::collections::BTreeSet;
+
+    let axes = SweepAxes::smoke();
+    let rows = sweep_grid(&axes);
+    assert!(!rows.is_empty(), "smoke grid must produce rows");
+
+    // Every row reprices exactly through the shared sweep_setup — the
+    // two-level rows are therefore what `pier simulate` reports for the
+    // same flags (same SimSetup constructor, bit-for-bit).
+    let mut two_level = 0usize;
+    for r in &rows {
+        let sc = scenario(r.scenario).expect("registry covers every sweep row");
+        let s = sweep_setup(&axes, sc, r.world, r.tp, r.compress, r.fragments, r.sync_fraction);
+        let sim = simulate_run(&s);
+        assert_eq!(r.makespan_secs.to_bits(), sim.total_secs.to_bits(),
+                   "{} world={} tp={}: sweep row diverges from simulate",
+                   r.scenario, r.world, r.tp);
+        if matches!(sc.fabric, FabricShape::TwoLevel) {
+            two_level += 1;
+        }
+    }
+    assert!(two_level > 0, "smoke grid must cover the legacy two-level scenarios");
+
+    // The emitted JSON parses and round-trips the rows (Json prints ~1e-12
+    // relative precision, so the float checks are tight-relative).
+    let parsed = pier::util::json::Json::parse(&sweep_json(&axes, &rows).to_string()).unwrap();
+    let jrows = parsed.get("rows").and_then(|r| r.as_arr()).unwrap();
+    assert_eq!(jrows.len(), rows.len());
+    for (j, r) in jrows.iter().zip(&rows) {
+        assert_eq!(j.get("scenario").and_then(|s| s.as_str()), Some(r.scenario));
+        assert_eq!(j.get("pareto").and_then(|v| v.as_bool()), Some(r.pareto));
+        let m = j.get("makespan_secs").and_then(|v| v.as_f64()).unwrap();
+        assert!((m - r.makespan_secs).abs() <= 1e-9 * r.makespan_secs.abs().max(1.0));
+        let w = j.get("wire_bytes").and_then(|v| v.as_f64()).unwrap();
+        assert!((w - r.wire_bytes).abs() <= 1e-9 * r.wire_bytes.abs().max(1.0));
+    }
+
+    // Pareto validity: no frontier row is strictly dominated in its
+    // (scenario, world, tp) cell, and every cell keeps at least one.
+    let mut cells_with_pareto: BTreeSet<(&str, usize, usize)> = BTreeSet::new();
+    for a in rows.iter().filter(|r| r.pareto) {
+        cells_with_pareto.insert((a.scenario, a.world, a.tp));
+    }
+    for a in &rows {
+        assert!(cells_with_pareto.contains(&(a.scenario, a.world, a.tp)),
+                "cell ({}, {}, {}) lost its frontier", a.scenario, a.world, a.tp);
+        if !a.pareto {
+            continue;
+        }
+        for b in &rows {
+            if (b.scenario, b.world, b.tp) != (a.scenario, a.world, a.tp) {
+                continue;
+            }
+            let dominates = b.makespan_secs <= a.makespan_secs
+                && b.wire_bytes <= a.wire_bytes
+                && (b.makespan_secs < a.makespan_secs || b.wire_bytes < a.wire_bytes);
+            assert!(!dominates, "frontier row ({}, {}, {}) is dominated",
+                    a.scenario, a.world, a.tp);
+        }
+    }
 }
 
 // ---------------------------------------------------------------- gated e2e

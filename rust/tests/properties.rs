@@ -8,7 +8,8 @@ use pier::coordinator::compress::{dequantize_into, dequantize_with_residual_into
                                   quantize_into, wire_bytes, QuantBuf};
 use pier::coordinator::OuterController;
 use pier::data::{CorpusGen, CorpusSpec, Sampler, TokenDataset, Tokenizer};
-use pier::netsim::{des_outer_sync, des_outer_sync_streaming, outer_sync_time, ring_allreduce};
+use pier::netsim::{des_outer_sync, des_outer_sync_streaming, outer_sync_time, ring_allreduce,
+                   FabricShape, JitterSpec, Topology};
 use pier::optim::{clip_global_norm, inner_lr, outer_momentum, AdamW, OuterOpt};
 use pier::perfmodel::gpu::{LinkSpec, PERLMUTTER, VISTA};
 use pier::simulator::run::{simulate_run, Calib, SimSetup};
@@ -457,6 +458,138 @@ fn prop_des_matches_closed_form_outer_sync() {
     });
 }
 
+// -------------------------------------------------------- topology graph
+
+/// Draw one of the fabric builders with generator-chosen dimensions.
+fn gen_topology(g: &mut Gen) -> Topology {
+    let cluster = *g.choose(&[&PERLMUTTER, &VISTA]);
+    let nodes = g.usize(1, 24);
+    match g.usize(0, 3) {
+        0 => Topology::two_level(cluster, nodes),
+        1 => Topology::fat_tree(cluster, nodes, g.usize(2, 8), g.f64(1.0, 8.0)),
+        2 => Topology::rail(cluster, nodes, g.usize(1, 4)),
+        _ => Topology::mixed_fleet(&PERLMUTTER, nodes, &VISTA, g.usize(1, 8)),
+    }
+}
+
+#[test]
+fn prop_topology_routes_every_pair_and_bandwidth_is_the_min_link() {
+    // Invariants of the routing layer on every builder: a route exists
+    // between every node pair, the returned path is a connected walk from
+    // source to destination, and path_bandwidth equals the minimum of the
+    // member links' effective bandwidths (recomputed by hand here).
+    check("topology-routes", |g: &mut Gen| {
+        let topo = gen_topology(g);
+        let n = topo.n_nodes();
+        for a in 0..n {
+            for b in 0..n {
+                let path = match topo.route(a, b) {
+                    Some(p) => p,
+                    None => return Err(format!("no route {a}→{b} in {}", topo.name)),
+                };
+                if a == b {
+                    ensure(path.is_empty(), "self-route is empty")?;
+                    continue;
+                }
+                let mut cur = a;
+                let mut min_bw = f64::INFINITY;
+                for &l in &path {
+                    let link = topo.links()[l];
+                    ensure(cur == link.a || cur == link.b,
+                           format!("path {a}→{b} breaks at link {l}"))?;
+                    cur = if cur == link.a { link.b } else { link.a };
+                    min_bw = min_bw.min(link.spec.effective_bw());
+                }
+                ensure(cur == b, format!("path {a}→{b} ends at {cur}"))?;
+                ensure(topo.path_bandwidth(&path).to_bits() == min_bw.to_bits(),
+                       "path bandwidth = min over links")?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_routing_is_deterministic_across_builds_and_threads() {
+    // Identical builder inputs must give identical routes — including from
+    // a different OS thread, so the `PIER_THREADS` pool legs in CI exercise
+    // the same paths bit-for-bit.
+    check("topology-deterministic", |g: &mut Gen| {
+        let cluster = *g.choose(&[&PERLMUTTER, &VISTA]);
+        let nodes = g.usize(2, 16);
+        let radix = g.usize(2, 8);
+        let here: Vec<_> = {
+            let t = Topology::fat_tree(cluster, nodes, radix, 2.0);
+            (0..t.n_nodes()).map(|b| t.route(0, b)).collect()
+        };
+        let again: Vec<_> = {
+            let t = Topology::fat_tree(cluster, nodes, radix, 2.0);
+            (0..t.n_nodes()).map(|b| t.route(0, b)).collect()
+        };
+        let theirs = std::thread::spawn(move || {
+            let t = Topology::fat_tree(cluster, nodes, radix, 2.0);
+            (0..t.n_nodes()).map(|b| t.route(0, b)).collect::<Vec<_>>()
+        })
+        .join()
+        .map_err(|_| "routing thread panicked".to_string())?;
+        ensure(here == again, "routes differ between identical builds")?;
+        ensure(here == theirs, "routes differ across threads")
+    });
+}
+
+#[test]
+fn prop_two_level_lowering_matches_the_legacy_single_link_model() {
+    // The load-bearing contract: lowering a cluster through the graph and
+    // pricing the outer ring must reproduce the legacy closed form that
+    // modeled one injection link per node — bit-for-bit, and the TwoLevel
+    // fold must hand back the cluster unchanged.
+    check("two-level-transparent", |g: &mut Gen| {
+        let cluster = *g.choose(&[&PERLMUTTER, &VISTA]);
+        let dp = g.usize(2, 64);
+        let tp = *g.choose(&[1usize, 2, 4]);
+        let v = g.f64(1e6, 1e10);
+        let topo = Topology::two_level(cluster, dp);
+        let graph = topo.analytic_outer_makespan(dp, tp, v);
+        let legacy = outer_sync_time(dp, tp, v, cluster);
+        ensure(graph.to_bits() == legacy.to_bits(),
+               format!("analytic {graph} != legacy {legacy}"))?;
+        let folded = FabricShape::TwoLevel.folded_cluster(cluster, dp, tp);
+        ensure(folded.inter.bandwidth.to_bits() == cluster.inter.bandwidth.to_bits()
+                   && folded.inter.latency.to_bits() == cluster.inter.latency.to_bits()
+                   && folded.inter.contention.to_bits() == cluster.inter.contention.to_bits(),
+               "TwoLevel fold must be the identity")
+    });
+}
+
+#[test]
+fn prop_jitter_is_seeded_deterministic_and_one_sided() {
+    // Same seed → bit-identical DES makespans on independently built
+    // topologies; slowdown 0 → bit-identical to the jitter-free fabric;
+    // positive slowdown never speeds the ring up.
+    check("topology-jitter", |g: &mut Gen| {
+        let cluster = *g.choose(&[&PERLMUTTER, &VISTA]);
+        let dp = g.usize(2, 32);
+        let tp = *g.choose(&[1usize, 2, 4]);
+        let v = g.f64(1e6, 1e9);
+        let seed = g.u64(0, 1 << 48);
+        let slow = g.f64(0.01, 0.5);
+        let spec = JitterSpec { seed, max_slowdown: slow };
+        let base = Topology::two_level(cluster, dp).des_outer_makespan(dp, tp, v);
+        let j1 = Topology::two_level(cluster, dp)
+            .with_jitter(spec)
+            .des_outer_makespan(dp, tp, v);
+        let j2 = Topology::two_level(cluster, dp)
+            .with_jitter(spec)
+            .des_outer_makespan(dp, tp, v);
+        ensure(j1.to_bits() == j2.to_bits(), "same seed must be bit-identical")?;
+        ensure(j1 >= base, format!("jitter sped the ring up: {j1} < {base}"))?;
+        let z = Topology::two_level(cluster, dp)
+            .with_jitter(JitterSpec { seed, max_slowdown: 0.0 })
+            .des_outer_makespan(dp, tp, v);
+        ensure(z.to_bits() == base.to_bits(), "zero slowdown must be the identity")
+    });
+}
+
 // -------------------------------------------------------------- simulator
 
 #[test]
@@ -466,6 +599,7 @@ fn prop_simulator_total_monotone_in_iterations_and_interval() {
         let mut s = SimSetup {
             model: pier::config::model_or_die("gpt2-xl"),
             cluster: &PERLMUTTER,
+            fabric: FabricShape::TwoLevel,
             world,
             tp: 1,
             pp: 1,
@@ -503,6 +637,7 @@ fn prop_pier_never_slower_than_adamw_beyond_a_node_at_h500() {
                 "gpt2-xl"
             }),
             cluster: &PERLMUTTER,
+            fabric: FabricShape::TwoLevel,
             world,
             tp: 1,
             pp: 1,
