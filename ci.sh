@@ -53,16 +53,21 @@ test -s sweep_pareto.json
 # The quantization kernels (coordinator::compress) are span-parallel; the
 # property suite must hold on both the serial and the threaded schedule
 # regardless of which leg the ambient PIER_THREADS selects (DESIGN.md §9).
-# The ambient leg already ran it in `cargo test -q` above — run only the
-# schedules the ambient *effective* thread count (env override, else the
-# detected core count, mirroring util::par::max_threads) did not cover.
+# The resume-parity suite rides the same legs: checkpoint/restore must be
+# bit-exact under both the serial and the pooled group schedule
+# (DESIGN.md §11). The ambient leg already ran both in `cargo test -q`
+# above — run only the schedules the ambient *effective* thread count
+# (env override, else the detected core count, mirroring
+# util::par::max_threads) did not cover.
 ambient_threads="${PIER_THREADS:-$(nproc 2>/dev/null || echo 0)}"
-echo "==> property suite under the uncovered thread schedules (ambient: ${ambient_threads})"
+echo "==> property + resume-parity suites under the uncovered thread schedules (ambient: ${ambient_threads})"
 if [[ "${ambient_threads}" != "1" ]]; then
   PIER_THREADS=1 cargo test -q --test properties
+  PIER_THREADS=1 cargo test -q --test resume_parity
 fi
 if [[ "${ambient_threads}" != "4" ]]; then
   PIER_THREADS=4 cargo test -q --test properties
+  PIER_THREADS=4 cargo test -q --test resume_parity
 fi
 
 if [[ "${RUN_BENCH:-0}" == "1" ]]; then

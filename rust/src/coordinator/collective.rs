@@ -30,6 +30,7 @@
 //! forces the serial schedule.
 
 use crate::coordinator::compress::{self, HierState};
+use crate::util::json::Json;
 use crate::util::par::{join_spans, span, MIN_SPAN};
 
 /// Logical communication accounting, split by **scope** the way the
@@ -146,6 +147,59 @@ impl CommStats {
     pub fn note_hier_intra(&mut self, bytes: f64) {
         self.hier_intra_calls += 1;
         self.hier_intra_bytes += bytes;
+    }
+
+    /// Serialize for the v2 checkpoint header (DESIGN.md §11). Call
+    /// counters use the exact-integer convention ([`Json::exact_u64`]);
+    /// byte totals are f64 and round-trip through the shortest-digit
+    /// `Display` form bit-exactly.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("inner_allreduce_calls", Json::exact_u64(self.inner_allreduce_calls)),
+            ("inner_allreduce_bytes", Json::num(self.inner_allreduce_bytes)),
+            ("outer_allreduce_calls", Json::exact_u64(self.outer_allreduce_calls)),
+            ("outer_allreduce_bytes", Json::num(self.outer_allreduce_bytes)),
+            ("outer_overlapped_bytes", Json::num(self.outer_overlapped_bytes)),
+            ("outer_exposed_bytes", Json::num(self.outer_exposed_bytes)),
+            ("outer_wire_bytes", Json::num(self.outer_wire_bytes)),
+            ("hier_intra_calls", Json::exact_u64(self.hier_intra_calls)),
+            ("hier_intra_bytes", Json::num(self.hier_intra_bytes)),
+            ("gather_calls", Json::exact_u64(self.gather_calls)),
+            ("gather_bytes", Json::num(self.gather_bytes)),
+            ("broadcast_calls", Json::exact_u64(self.broadcast_calls)),
+            ("broadcast_bytes", Json::num(self.broadcast_bytes)),
+            ("tp_allgather_calls", Json::exact_u64(self.tp_allgather_calls)),
+            ("tp_allgather_bytes", Json::num(self.tp_allgather_bytes)),
+            ("tp_reduce_scatter_calls", Json::exact_u64(self.tp_reduce_scatter_calls)),
+            ("tp_reduce_scatter_bytes", Json::num(self.tp_reduce_scatter_bytes)),
+        ])
+    }
+
+    /// Decode [`CommStats::to_json`]. Every field is required and must be
+    /// losslessly typed — a checkpoint with a missing or non-integral
+    /// counter is corrupt, not defaultable.
+    pub fn from_json(j: &Json) -> Option<CommStats> {
+        let u = |key: &str| j.get(key)?.as_exact_u64();
+        let f = |key: &str| j.get(key)?.as_f64();
+        Some(CommStats {
+            inner_allreduce_calls: u("inner_allreduce_calls")?,
+            inner_allreduce_bytes: f("inner_allreduce_bytes")?,
+            outer_allreduce_calls: u("outer_allreduce_calls")?,
+            outer_allreduce_bytes: f("outer_allreduce_bytes")?,
+            outer_overlapped_bytes: f("outer_overlapped_bytes")?,
+            outer_exposed_bytes: f("outer_exposed_bytes")?,
+            outer_wire_bytes: f("outer_wire_bytes")?,
+            hier_intra_calls: u("hier_intra_calls")?,
+            hier_intra_bytes: f("hier_intra_bytes")?,
+            gather_calls: u("gather_calls")?,
+            gather_bytes: f("gather_bytes")?,
+            broadcast_calls: u("broadcast_calls")?,
+            broadcast_bytes: f("broadcast_bytes")?,
+            tp_allgather_calls: u("tp_allgather_calls")?,
+            tp_allgather_bytes: f("tp_allgather_bytes")?,
+            tp_reduce_scatter_calls: u("tp_reduce_scatter_calls")?,
+            tp_reduce_scatter_bytes: f("tp_reduce_scatter_bytes")?,
+        })
     }
 }
 

@@ -258,6 +258,13 @@ impl HierState {
         }
     }
 
+    /// Replace the per-leader residuals wholesale (checkpoint restore).
+    /// `scratch`/`acc`/`qbuf` are per-sync scratch, rebuilt by the next
+    /// compressed sync, so only the residuals carry state across a resume.
+    pub fn restore_residuals(&mut self, residuals: Vec<Vec<f32>>) {
+        self.residuals = residuals;
+    }
+
     /// L2 norm of all residuals — telemetry for drift tests and logs.
     pub fn residual_norm(&self) -> f64 {
         self.residuals

@@ -131,6 +131,37 @@ impl WorkerGroup {
         Ok(())
     }
 
+    /// Snapshot this group's inner state for the v2 checkpoint
+    /// (DESIGN.md §11): flat params + Adam moments, step counter, and the
+    /// sampler's PRNG state words.
+    pub fn export_state(&self, man: &Manifest) -> Result<crate::coordinator::state::GroupState> {
+        let (rng_hi, rng_lo) = self.sampler.rng_state();
+        Ok(crate::coordinator::state::GroupState {
+            params: self.params_flat(man)?,
+            m: self.m_flat(man)?,
+            v: self.v_flat(man)?,
+            adam_t: self.adam_t,
+            rng_hi,
+            rng_lo,
+        })
+    }
+
+    /// Restore the state captured by [`WorkerGroup::export_state`]. The
+    /// group (and its sampler) must have been constructed with the same
+    /// manifest, seed, and shard layout — only the evolved state moves.
+    pub fn restore_state(
+        &mut self,
+        man: &Manifest,
+        st: &crate::coordinator::state::GroupState,
+    ) -> Result<()> {
+        self.set_params_flat(man, &st.params)?;
+        self.set_m_flat(man, &st.m)?;
+        self.set_v_flat(man, &st.v)?;
+        self.adam_t = st.adam_t;
+        self.sampler.set_rng_state(st.rng_hi, st.rng_lo);
+        Ok(())
+    }
+
     /// Token batch literal `[b, T+1]`.
     pub fn token_literal(man: &Manifest, tokens: &[i32]) -> Result<Literal> {
         let (b, t1) = man.token_shape();

@@ -17,7 +17,8 @@
 //!   concurrently between outer syncs (deterministic by construction).
 //! * [`offload`] — §V's CPU offload of outer state, with byte/time
 //!   accounting.
-//! * [`state`] — binary checkpoints.
+//! * [`state`] — binary checkpoints: the v1 single-replica format
+//!   (back-compat) and the v2 full-trainer resume format (DESIGN.md §11).
 
 pub mod collective;
 pub mod compress;
@@ -38,5 +39,5 @@ pub use group::WorkerGroup;
 pub use offload::{OffloadStats, OffloadStore};
 pub use outer::{OuterController, OuterResult};
 pub use parallel::ParallelExecutor;
-pub use state::Checkpoint;
+pub use state::{load_any, AnyCheckpoint, Checkpoint, CheckpointV2, GroupState, OuterState};
 pub use trainer::Trainer;

@@ -79,6 +79,8 @@
 //! hop and the sync falls back to the exact fp32 path, bit-identical to
 //! `outer_compress = none`.
 
+use anyhow::{ensure, Result};
+
 use crate::config::{outer_cliques, OptMode, OuterCompress, TrainConfig};
 use crate::coordinator::collective::{fragment_pipeline, fragment_span,
                                      hier_all_reduce_fragment_into,
@@ -86,6 +88,7 @@ use crate::coordinator::collective::{fragment_pipeline, fragment_span,
                                      shard_span, CommStats};
 use crate::coordinator::compress::HierState;
 use crate::coordinator::offload::OffloadStore;
+use crate::coordinator::state::OuterState;
 use crate::optim::nesterov::OuterOpt;
 use crate::optim::schedule;
 
@@ -102,6 +105,9 @@ pub struct OuterController {
     /// (DESIGN.md §9). Empty until the first compressed sync; persists
     /// across rounds so quantization error is re-injected, never lost.
     hier: HierState,
+    /// Stragglers' 1/k-weighted deltas awaiting the next quorum round
+    /// ([`Self::sync_quorum`]); empty while no carry is outstanding.
+    late_carry: Vec<f32>,
     // ---- reusable full-model scratch (allocated once) ----
     mean: Vec<f32>,
     delta: Vec<f32>,
@@ -138,6 +144,7 @@ impl OuterController {
             store,
             frag_cursor: 0,
             hier: HierState::default(),
+            late_carry: Vec::new(),
             mean: vec![0.0; n],
             delta: vec![0.0; n],
             // The committed/restart views start at the init point so they
@@ -579,6 +586,151 @@ impl OuterController {
     pub fn momentum_norm(&self) -> f64 {
         self.opt.momentum_norm()
     }
+
+    /// Snapshot the cross-round state for the v2 checkpoint (DESIGN.md
+    /// §11): momentum, anchor, committed view, the rotating partial
+    /// sync's fragment cursor, the int8 error-feedback residuals, and the
+    /// telemetry counters. Taken between iterations, where the
+    /// mean/delta/restart scratch holds nothing the next sync reads (the
+    /// restart point equals the anchor at every such boundary) and no
+    /// quorum carry is outstanding — the trainer's checkpoint sites.
+    pub fn export_state(&self) -> OuterState {
+        OuterState {
+            momentum: self.opt.momentum.clone(),
+            anchor: self.anchor.clone(),
+            committed: self.committed.clone(),
+            frag_cursor: self.frag_cursor,
+            outer_steps: self.outer_steps,
+            warmup_accums: self.warmup_accums,
+            last_mu: self.last_mu,
+            last_lr: self.last_lr,
+            residuals: self.hier.residuals.clone(),
+        }
+    }
+
+    /// Restore the state captured by [`Self::export_state`] into a freshly
+    /// constructed controller (same config, same model size). The restart
+    /// scratch is reset to the anchor — its invariant at any
+    /// between-iterations boundary — and every sync path rewrites the
+    /// ranges it reads, so the continuation is bit-identical to the
+    /// uninterrupted run (`rust/tests/resume_parity.rs`).
+    pub fn restore_state(&mut self, st: &OuterState) -> Result<()> {
+        let n = self.anchor.len();
+        ensure!(
+            st.momentum.len() == n && st.anchor.len() == n && st.committed.len() == n,
+            "outer state length mismatch: expected {n} params"
+        );
+        for (i, r) in st.residuals.iter().enumerate() {
+            ensure!(r.len() == n, "residual {i} length {} != {n}", r.len());
+        }
+        self.opt.momentum.copy_from_slice(&st.momentum);
+        self.anchor.copy_from_slice(&st.anchor);
+        self.committed.copy_from_slice(&st.committed);
+        self.restart.copy_from_slice(&st.anchor);
+        self.frag_cursor = st.frag_cursor;
+        self.hier.restore_residuals(st.residuals.clone());
+        self.outer_steps = st.outer_steps;
+        self.warmup_accums = st.warmup_accums;
+        self.last_mu = st.last_mu;
+        self.last_lr = st.last_lr;
+        self.late_carry.clear();
+        self.refresh_offload();
+        Ok(())
+    }
+
+    /// Straggler-aware quorum outer step (DESIGN.md §11): the outer step
+    /// proceeds over the on-time quorum without waiting for stragglers,
+    /// and the late groups' deltas are folded into the next round's
+    /// reduction instead of being dropped.
+    ///
+    /// Semantics — deterministic and total-mass preserving: with `k`
+    /// total groups, **every** group's delta enters an applied outer
+    /// delta with weight exactly `1/k` — on-time deltas this round, late
+    /// deltas via the carry added to the round that follows (measured
+    /// against the anchor their inner phase actually started from). With
+    /// every group on time and no carry outstanding this is bit-identical
+    /// to [`Self::sync_in_place`] (fp32, `tp = 1` — the quorum path's
+    /// scope).
+    ///
+    /// Accounting: one outer-scope all-reduce of the full logical volume,
+    /// like the blocking sync — the relaxation re-times the stragglers'
+    /// payloads, it does not shrink them (netsim's failure traces price
+    /// the timing side). Outstanding carry is *not* checkpoint state:
+    /// the trainer checkpoints at round boundaries with no quorum round
+    /// in flight.
+    pub fn sync_quorum(
+        &mut self,
+        step: usize,
+        group_params: &[&[f32]],
+        on_time: &[bool],
+        stats: &mut CommStats,
+    ) -> &[f32] {
+        let k = group_params.len();
+        assert_eq!(on_time.len(), k, "on_time mask must cover every group");
+        let q = on_time.iter().filter(|&&b| b).count();
+        assert!(q >= 1, "quorum sync needs at least one on-time group");
+        assert_eq!(
+            self.cfg.outer_compress,
+            OuterCompress::None,
+            "quorum sync is defined on the fp32 path"
+        );
+        self.load_offloaded();
+
+        let on: Vec<&[f32]> =
+            group_params.iter().zip(on_time).filter(|&(_, &b)| b).map(|(g, _)| *g).collect();
+        outer_all_reduce_into(&on, &mut self.mean, stats);
+        for ((d, &m), &a) in self.delta.iter_mut().zip(&self.mean).zip(&self.anchor) {
+            *d = m - a;
+        }
+        if q < k {
+            // mean over the quorum, re-weighted so each on-time delta
+            // carries 1/k: (q/k)·(mean_Q − anchor) = (1/k)·Σ_Q Δ_g.
+            let scale = q as f32 / k as f32;
+            for d in self.delta.iter_mut() {
+                *d *= scale;
+            }
+        }
+        // Drain the previous round's carry into this round's delta…
+        if !self.late_carry.is_empty() {
+            for (d, &c) in self.delta.iter_mut().zip(&self.late_carry) {
+                *d += c;
+            }
+            self.late_carry.clear();
+        }
+        // …then fold this round's stragglers (against the pre-step anchor)
+        // for the next one.
+        if q < k {
+            self.late_carry.resize(self.anchor.len(), 0.0);
+            let inv_k = 1.0 / k as f32;
+            for (g, _) in group_params.iter().zip(on_time).filter(|&(_, &b)| !b) {
+                for ((c, &p), &a) in self.late_carry.iter_mut().zip(*g).zip(&self.anchor) {
+                    *c += (p - a) * inv_k;
+                }
+            }
+        }
+
+        let (mu, lr) = self.schedule_at(step);
+        self.opt.step_into(
+            &self.anchor,
+            &self.delta,
+            mu,
+            lr,
+            &mut self.committed,
+            &mut self.restart,
+        );
+        self.anchor.copy_from_slice(&self.restart);
+        self.last_mu = mu;
+        self.last_lr = lr;
+        self.outer_steps += 1;
+        self.refresh_offload();
+        &self.restart
+    }
+
+    /// Whether a quorum round left stragglers' deltas waiting to be folded
+    /// into the next round.
+    pub fn has_late_carry(&self) -> bool {
+        !self.late_carry.is_empty()
+    }
 }
 
 pub struct OuterResult {
@@ -598,6 +750,149 @@ mod tests {
         c.mode = mode;
         c.sync_interval = 10;
         c
+    }
+
+    #[test]
+    fn export_restore_roundtrip_continues_bit_identically() {
+        let c = cfg(OptMode::DiLoCo);
+        let init: Vec<f32> = (0..64).map(|i| (i as f32 * 0.37).sin()).collect();
+        let mut a = OuterController::new(&c, &init);
+        let mut stats = CommStats::default();
+        let g1: Vec<f32> = (0..64).map(|i| (i as f32 * 0.11).cos()).collect();
+        let g2: Vec<f32> = (0..64).map(|i| (i as f32 * 0.23).sin() * 2.0).collect();
+        a.sync_in_place(10, &[&g1, &g2], &mut stats);
+        a.sync_in_place(20, &[&g2, &g1], &mut stats);
+        // Restore into a fresh controller and continue both in lockstep.
+        let st = a.export_state();
+        let mut b = OuterController::new(&c, &init);
+        b.restore_state(&st).unwrap();
+        assert_eq!(b.outer_steps, 2);
+        let mut sa = CommStats::default();
+        let mut sb = CommStats::default();
+        let ra: Vec<u32> =
+            a.sync_in_place(30, &[&g1, &g2], &mut sa).iter().map(|x| x.to_bits()).collect();
+        let rb: Vec<u32> =
+            b.sync_in_place(30, &[&g1, &g2], &mut sb).iter().map(|x| x.to_bits()).collect();
+        assert_eq!(ra, rb);
+        assert_eq!(
+            a.last_committed().iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            b.last_committed().iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(sa, sb);
+    }
+
+    #[test]
+    fn restore_state_rejects_wrong_sizes() {
+        let c = cfg(OptMode::DiLoCo);
+        let mut ctl = OuterController::new(&c, &[0.0f32; 8]);
+        let mut st = ctl.export_state();
+        st.anchor.truncate(4);
+        assert!(ctl.restore_state(&st).is_err());
+    }
+
+    #[test]
+    fn quorum_with_everyone_on_time_matches_blocking_sync_bitwise() {
+        let c = cfg(OptMode::DiLoCo);
+        let init: Vec<f32> = (0..40).map(|i| (i as f32 * 0.13).sin()).collect();
+        let mut a = OuterController::new(&c, &init);
+        let mut b = OuterController::new(&c, &init);
+        let gs: Vec<Vec<f32>> =
+            (0..4).map(|g| (0..40).map(|i| ((g * 40 + i) as f32 * 0.07).cos()).collect()).collect();
+        let refs: Vec<&[f32]> = gs.iter().map(|v| v.as_slice()).collect();
+        let mut sa = CommStats::default();
+        let mut sb = CommStats::default();
+        for step in [10, 20, 30] {
+            let ra: Vec<u32> =
+                a.sync_in_place(step, &refs, &mut sa).iter().map(|x| x.to_bits()).collect();
+            let rb: Vec<u32> = b
+                .sync_quorum(step, &refs, &[true; 4], &mut sb)
+                .iter()
+                .map(|x| x.to_bits())
+                .collect();
+            assert_eq!(ra, rb, "step {step}");
+        }
+        assert_eq!(sa, sb);
+        assert!(!b.has_late_carry());
+    }
+
+    #[test]
+    fn quorum_round_is_deterministic_and_weights_survivor_deltas_by_inv_k() {
+        // μ = 0 (DiLoCo reads cfg.outer_momentum) isolates the delta
+        // algebra: restart − anchor = lr · D with D = (1/k)·Σ_Q Δ_g.
+        let mut c = cfg(OptMode::DiLoCo);
+        c.outer_momentum = 0.0;
+        let a0 = vec![0.0f32; 4];
+        let g0 = vec![4.0f32; 4]; // on time, Δ = 4
+        let g1 = vec![-8.0f32; 4]; // late, Δ = −8
+        let mut ctl = OuterController::new(&c, &a0);
+        let mut stats = CommStats::default();
+        let r1 = ctl.sync_quorum(10, &[&g0, &g1], &[true, false], &mut stats).to_vec();
+        // k = 2: applied D = (1/2)·4 = 2 → restart = lr·2
+        let lr = schedule::DILOCO_OUTER_LR as f32;
+        for &x in &r1 {
+            assert!((x - lr * 2.0).abs() < 1e-5, "{x}");
+        }
+        assert!(ctl.has_late_carry());
+        // Round 2, everyone on time at the same params: Δ measured from
+        // the new anchor r1, plus the carry (1/2)·(−8) from g1's round-1
+        // delta. D = (1/2)·((4 − r1) + (−8 − r1)) + (−4) … computed below.
+        let mut s2 = CommStats::default();
+        let r2 = ctl.sync_quorum(20, &[&g0, &g1], &[true, true], &mut s2).to_vec();
+        let d2 = 0.5 * ((4.0 - r1[0]) + (-8.0 - r1[0])) + 0.5 * -8.0;
+        let expect = r1[0] + lr * d2;
+        for &x in &r2 {
+            assert!((x - expect).abs() < 1e-4, "{x} vs {expect}");
+        }
+        assert!(!ctl.has_late_carry(), "carry must drain after one round");
+        // Determinism: the identical schedule replayed gives identical bits.
+        let mut ctl2 = OuterController::new(&c, &a0);
+        let mut s3 = CommStats::default();
+        let q1: Vec<u32> = ctl2
+            .sync_quorum(10, &[&g0, &g1], &[true, false], &mut s3)
+            .iter()
+            .map(|x| x.to_bits())
+            .collect();
+        assert_eq!(q1, r1.iter().map(|x| x.to_bits()).collect::<Vec<_>>());
+        let q2: Vec<u32> = ctl2
+            .sync_quorum(20, &[&g0, &g1], &[true, true], &mut s3)
+            .iter()
+            .map(|x| x.to_bits())
+            .collect();
+        assert_eq!(q2, r2.iter().map(|x| x.to_bits()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn survivor_subset_sync_is_the_divide_by_survivors_mean() {
+        // Elastic dropout contract (DESIGN.md §11): syncing over the
+        // survivor subset IS the ÷|survivors| mean — deterministic, and
+        // identical to a run that never had the dropped group.
+        let c = cfg(OptMode::DiLoCo);
+        let init = vec![0.0f32; 6];
+        let g0 = vec![1.0f32; 6];
+        let g1 = vec![2.0f32; 6];
+        let g2 = vec![9.0f32; 6]; // dropped mid-round
+        let mut survivors = OuterController::new(&c, &init);
+        let mut reference = OuterController::new(&c, &init);
+        let mut s1 = CommStats::default();
+        let mut s2 = CommStats::default();
+        let a: Vec<u32> = survivors
+            .sync_in_place(10, &[&g0, &g1], &mut s1)
+            .iter()
+            .map(|x| x.to_bits())
+            .collect();
+        let b: Vec<u32> = reference
+            .sync_in_place(10, &[&g0, &g1], &mut s2)
+            .iter()
+            .map(|x| x.to_bits())
+            .collect();
+        assert_eq!(a, b);
+        // And the dropped group's params never entered the mean: a sync
+        // over all three gives a different result.
+        let mut all = OuterController::new(&c, &init);
+        let mut s3 = CommStats::default();
+        let c3: Vec<u32> =
+            all.sync_in_place(10, &[&g0, &g1, &g2], &mut s3).iter().map(|x| x.to_bits()).collect();
+        assert_ne!(a, c3);
     }
 
     #[test]

@@ -1,19 +1,58 @@
 //! Checkpointing: binary save/load of training state.
 //!
-//! Format: a JSON header line (magic, model, counts) followed by raw
-//! little-endian f32 blobs in a fixed order (params, m, v, outer momentum,
-//! outer anchor). Self-describing enough to be validated on load and small
-//! enough to keep the writer dependency-free.
+//! Two formats share one file shape — a JSON header line followed by raw
+//! little-endian f32 blobs in a fixed order (DESIGN.md §11):
+//!
+//! * **v1** (`pier-ckpt-v1`, [`Checkpoint`]): single-replica state —
+//!   params, Adam moments, outer momentum + anchor. Kept loadable for
+//!   back-compat; it cannot express a resume (no per-group state, no
+//!   sampler streams, no fragment cursor, no error-feedback residuals).
+//! * **v2** (`pier-ckpt-v2`, [`CheckpointV2`]): the full trainer state —
+//!   per-group inner Adam state and sampler PRNG words, the outer
+//!   controller (momentum, anchor, committed view, `frag_cursor`, int8
+//!   error-feedback residuals, schedule counters), the completed-iteration
+//!   count, and the [`CommStats`] snapshot. `pier train --resume` restores
+//!   it bit-exactly (`rust/tests/resume_parity.rs`).
+//!
+//! Integers in the headers use the exact encoding ([`Json::exact_u64`]):
+//! a plain number within f64's exact range, a decimal string above it,
+//! and loads **reject** non-integral or out-of-range values instead of
+//! silently rounding them.
 
 use std::io::{Read, Write};
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::coordinator::collective::CommStats;
 use crate::util::json::Json;
 
-const MAGIC: &str = "pier-ckpt-v1";
+const MAGIC_V1: &str = "pier-ckpt-v1";
+const MAGIC_V2: &str = "pier-ckpt-v2";
 
+/// Require an exactly-encoded integer header field (v2 contract; also
+/// enforced on v1 loads, whose writers always emitted in-range values).
+fn req_u64(header: &Json, key: &str) -> Result<u64> {
+    header
+        .get(key)
+        .and_then(Json::as_exact_u64)
+        .with_context(|| format!("checkpoint header field {key:?} missing or not an exact integer"))
+}
+
+fn req_usize(header: &Json, key: &str) -> Result<usize> {
+    let x = req_u64(header, key)?;
+    usize::try_from(x).with_context(|| format!("checkpoint header field {key:?} out of range"))
+}
+
+fn req_str(header: &Json, key: &str) -> Result<String> {
+    Ok(header
+        .get(key)
+        .and_then(Json::as_str)
+        .with_context(|| format!("checkpoint header field {key:?} missing or not a string"))?
+        .to_string())
+}
+
+/// The v1 single-replica checkpoint (back-compat).
 #[derive(Clone, Debug, PartialEq)]
 pub struct Checkpoint {
     pub model: String,
@@ -31,13 +70,13 @@ pub struct Checkpoint {
 impl Checkpoint {
     pub fn save(&self, path: &Path) -> Result<()> {
         let header = Json::obj(vec![
-            ("magic", Json::str(MAGIC)),
+            ("magic", Json::str(MAGIC_V1)),
             ("model", Json::str(&self.model)),
             ("mode", Json::str(&self.mode)),
-            ("iteration", Json::num(self.iteration as f64)),
-            ("adam_t", Json::num(self.adam_t as f64)),
-            ("n_params", Json::num(self.params.len() as f64)),
-            ("n_outer", Json::num(self.outer_momentum.len() as f64)),
+            ("iteration", Json::exact_u64(self.iteration as u64)),
+            ("adam_t", Json::exact_u64(self.adam_t)),
+            ("n_params", Json::exact_u64(self.params.len() as u64)),
+            ("n_outer", Json::exact_u64(self.outer_momentum.len() as u64)),
         ]);
         let mut f = std::fs::File::create(path)
             .with_context(|| format!("creating checkpoint {path:?}"))?;
@@ -49,53 +88,331 @@ impl Checkpoint {
     }
 
     pub fn load(path: &Path) -> Result<Checkpoint> {
-        let mut f = std::fs::File::open(path)
-            .with_context(|| format!("opening checkpoint {path:?}"))?;
-        let mut all = Vec::new();
-        f.read_to_end(&mut all)?;
-        let nl = all
-            .iter()
-            .position(|&b| b == b'\n')
-            .context("checkpoint missing header line")?;
-        let header = Json::parse(std::str::from_utf8(&all[..nl])?)
-            .map_err(|e| anyhow::anyhow!("checkpoint header: {e}"))?;
-        if header.get("magic").and_then(Json::as_str) != Some(MAGIC) {
-            bail!("not a pier checkpoint: {path:?}");
+        match load_any(path)? {
+            AnyCheckpoint::V1(c) => Ok(c),
+            AnyCheckpoint::V2(_) => bail!("{path:?} is a v2 checkpoint; load it with CheckpointV2"),
         }
-        let n_params = header.get("n_params").and_then(Json::as_usize).unwrap_or(0);
-        let n_outer = header.get("n_outer").and_then(Json::as_usize).unwrap_or(0);
-        let mut rest = &all[nl + 1..];
-        let mut take = |n: usize| -> Result<Vec<f32>> {
-            let bytes = n * 4;
-            if rest.len() < bytes {
-                bail!("checkpoint truncated: wanted {bytes} bytes, have {}", rest.len());
-            }
-            let (head, tail) = rest.split_at(bytes);
-            rest = tail;
-            Ok(head
-                .chunks_exact(4)
-                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                .collect())
-        };
-        let params = take(n_params)?;
-        let m = take(n_params)?;
-        let v = take(n_params)?;
-        let outer_momentum = take(n_outer)?;
-        let outer_anchor = take(n_outer)?;
-        if !rest.is_empty() {
-            bail!("checkpoint has {} trailing bytes", rest.len());
-        }
+    }
+
+    fn from_parts(header: &Json, body: &[u8], path: &Path) -> Result<Checkpoint> {
+        let n_params = req_usize(header, "n_params")?;
+        let n_outer = req_usize(header, "n_outer")?;
+        let mut r = BlobReader::new(body);
+        let params = r.take(n_params)?;
+        let m = r.take(n_params)?;
+        let v = r.take(n_params)?;
+        let outer_momentum = r.take(n_outer)?;
+        let outer_anchor = r.take(n_outer)?;
+        r.finish()?;
         Ok(Checkpoint {
-            model: header.get("model").and_then(Json::as_str).unwrap_or("").into(),
-            mode: header.get("mode").and_then(Json::as_str).unwrap_or("").into(),
-            iteration: header.get("iteration").and_then(Json::as_usize).unwrap_or(0),
-            adam_t: header.get("adam_t").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+            model: req_str(header, "model").with_context(|| format!("loading {path:?}"))?,
+            mode: req_str(header, "mode")?,
+            iteration: req_usize(header, "iteration")?,
+            adam_t: req_u64(header, "adam_t")?,
             params,
             m,
             v,
             outer_momentum,
             outer_anchor,
         })
+    }
+}
+
+/// Per-group inner state in a v2 checkpoint: flat params + Adam moments,
+/// the fused optimizer's step counter, and the sampler PRNG state words
+/// ([`crate::data::Sampler::rng_state`]) so the resumed run draws the
+/// exact batch sequence the uninterrupted run would have.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GroupState {
+    pub params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub adam_t: u64,
+    pub rng_hi: u64,
+    pub rng_lo: u64,
+}
+
+/// Outer-controller state in a v2 checkpoint (absent for AdamW runs):
+/// everything `OuterController` carries across rounds — the Nesterov
+/// momentum, anchor, last committed view, the rotating partial sync's
+/// fragment cursor, the int8 error-feedback residuals, and the schedule
+/// counters that drive the momentum-warmup telemetry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct OuterState {
+    pub momentum: Vec<f32>,
+    pub anchor: Vec<f32>,
+    pub committed: Vec<f32>,
+    pub frag_cursor: usize,
+    pub outer_steps: u64,
+    pub warmup_accums: u64,
+    pub last_mu: f64,
+    pub last_lr: f64,
+    /// Per-node-leader error-feedback residuals (`HierState`), each
+    /// full-model length; empty unless the run compresses.
+    pub residuals: Vec<Vec<f32>>,
+}
+
+/// The v2 full-trainer checkpoint — see the module docs for the format.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CheckpointV2 {
+    pub model: String,
+    pub mode: String,
+    /// The run's data/init seed: resume must be launched with the same
+    /// seed (sampler increments are derived from it, only the state words
+    /// are stored).
+    pub seed: u64,
+    /// Iterations actually **completed** (the trainer's counter, not the
+    /// configured target).
+    pub iteration: usize,
+    pub groups: Vec<GroupState>,
+    pub outer: Option<OuterState>,
+    pub comm: CommStats,
+}
+
+impl CheckpointV2 {
+    /// The evaluation view of the model — group 0's params, matching the
+    /// trainer's own eval path (`global_params()`).
+    pub fn eval_params(&self) -> &[f32] {
+        &self.groups[0].params
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let n = self.groups.first().map_or(0, |g| g.params.len());
+        for (i, g) in self.groups.iter().enumerate() {
+            if g.params.len() != n || g.m.len() != n || g.v.len() != n {
+                bail!("group {i} state length mismatch (expected {n} params)");
+            }
+        }
+        let groups = Json::arr(self.groups.iter().map(|g| {
+            Json::obj(vec![
+                ("adam_t", Json::exact_u64(g.adam_t)),
+                ("rng_hi", Json::exact_u64(g.rng_hi)),
+                ("rng_lo", Json::exact_u64(g.rng_lo)),
+            ])
+        }));
+        let outer = match &self.outer {
+            None => Json::Null,
+            Some(o) => {
+                for (what, v) in
+                    [("momentum", &o.momentum), ("anchor", &o.anchor), ("committed", &o.committed)]
+                {
+                    if v.len() != n {
+                        bail!("outer {what} length {} != n_params {n}", v.len());
+                    }
+                }
+                for (i, r) in o.residuals.iter().enumerate() {
+                    if r.len() != n {
+                        bail!("residual {i} length {} != n_params {n}", r.len());
+                    }
+                }
+                Json::obj(vec![
+                    ("frag_cursor", Json::exact_u64(o.frag_cursor as u64)),
+                    ("outer_steps", Json::exact_u64(o.outer_steps)),
+                    ("warmup_accums", Json::exact_u64(o.warmup_accums)),
+                    ("last_mu", Json::num(o.last_mu)),
+                    ("last_lr", Json::num(o.last_lr)),
+                    ("n_residuals", Json::exact_u64(o.residuals.len() as u64)),
+                ])
+            }
+        };
+        let header = Json::obj(vec![
+            ("magic", Json::str(MAGIC_V2)),
+            ("model", Json::str(&self.model)),
+            ("mode", Json::str(&self.mode)),
+            ("seed", Json::exact_u64(self.seed)),
+            ("iteration", Json::exact_u64(self.iteration as u64)),
+            ("n_params", Json::exact_u64(n as u64)),
+            ("groups", groups),
+            ("outer", outer),
+            ("comm", self.comm.to_json()),
+        ]);
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating checkpoint {path:?}"))?;
+        writeln!(f, "{header}")?;
+        for g in &self.groups {
+            for blob in [&g.params, &g.m, &g.v] {
+                write_f32s(&mut f, blob)?;
+            }
+        }
+        if let Some(o) = &self.outer {
+            for blob in [&o.momentum, &o.anchor, &o.committed] {
+                write_f32s(&mut f, blob)?;
+            }
+            for r in &o.residuals {
+                write_f32s(&mut f, r)?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<CheckpointV2> {
+        match load_any(path)? {
+            AnyCheckpoint::V2(c) => Ok(c),
+            AnyCheckpoint::V1(_) => {
+                bail!("{path:?} is a v1 checkpoint: it lacks the per-group and outer state \
+                       a resume needs (re-save with the current writer)")
+            }
+        }
+    }
+
+    fn from_parts(header: &Json, body: &[u8], path: &Path) -> Result<CheckpointV2> {
+        let n = req_usize(header, "n_params")?;
+        let group_hdrs = header
+            .get("groups")
+            .and_then(Json::as_arr)
+            .context("checkpoint header field \"groups\" missing or not an array")?;
+        if group_hdrs.is_empty() {
+            bail!("checkpoint has no groups");
+        }
+        let outer_hdr = match header.get("outer") {
+            None | Some(Json::Null) => None,
+            Some(o) => Some(o),
+        };
+        let comm = header
+            .get("comm")
+            .and_then(CommStats::from_json)
+            .context("checkpoint header field \"comm\" missing or malformed")?;
+
+        let mut r = BlobReader::new(body);
+        let mut groups = Vec::with_capacity(group_hdrs.len());
+        for (i, gh) in group_hdrs.iter().enumerate() {
+            let params = r.take(n)?;
+            let m = r.take(n)?;
+            let v = r.take(n)?;
+            groups.push(GroupState {
+                params,
+                m,
+                v,
+                adam_t: req_u64(gh, "adam_t").with_context(|| format!("group {i}"))?,
+                rng_hi: req_u64(gh, "rng_hi").with_context(|| format!("group {i}"))?,
+                rng_lo: req_u64(gh, "rng_lo").with_context(|| format!("group {i}"))?,
+            });
+        }
+        let outer = match outer_hdr {
+            None => None,
+            Some(oh) => {
+                let momentum = r.take(n)?;
+                let anchor = r.take(n)?;
+                let committed = r.take(n)?;
+                let n_residuals = req_usize(oh, "n_residuals")?;
+                let mut residuals = Vec::with_capacity(n_residuals.min(1024));
+                for _ in 0..n_residuals {
+                    residuals.push(r.take(n)?);
+                }
+                Some(OuterState {
+                    momentum,
+                    anchor,
+                    committed,
+                    frag_cursor: req_usize(oh, "frag_cursor")?,
+                    outer_steps: req_u64(oh, "outer_steps")?,
+                    warmup_accums: req_u64(oh, "warmup_accums")?,
+                    last_mu: oh
+                        .get("last_mu")
+                        .and_then(Json::as_f64)
+                        .context("outer header field \"last_mu\" missing")?,
+                    last_lr: oh
+                        .get("last_lr")
+                        .and_then(Json::as_f64)
+                        .context("outer header field \"last_lr\" missing")?,
+                    residuals,
+                })
+            }
+        };
+        r.finish()?;
+        Ok(CheckpointV2 {
+            model: req_str(header, "model").with_context(|| format!("loading {path:?}"))?,
+            mode: req_str(header, "mode")?,
+            seed: req_u64(header, "seed")?,
+            iteration: req_usize(header, "iteration")?,
+            groups,
+            outer,
+            comm,
+        })
+    }
+}
+
+/// A checkpoint of either format, dispatched on the header magic — the
+/// entry point for readers that accept both (`pier eval`).
+#[derive(Clone, Debug, PartialEq)]
+pub enum AnyCheckpoint {
+    V1(Checkpoint),
+    V2(CheckpointV2),
+}
+
+impl AnyCheckpoint {
+    pub fn model(&self) -> &str {
+        match self {
+            AnyCheckpoint::V1(c) => &c.model,
+            AnyCheckpoint::V2(c) => &c.model,
+        }
+    }
+
+    pub fn mode(&self) -> &str {
+        match self {
+            AnyCheckpoint::V1(c) => &c.mode,
+            AnyCheckpoint::V2(c) => &c.mode,
+        }
+    }
+
+    pub fn iteration(&self) -> usize {
+        match self {
+            AnyCheckpoint::V1(c) => c.iteration,
+            AnyCheckpoint::V2(c) => c.iteration,
+        }
+    }
+
+    /// The evaluation view of the model parameters.
+    pub fn eval_params(&self) -> &[f32] {
+        match self {
+            AnyCheckpoint::V1(c) => &c.params,
+            AnyCheckpoint::V2(c) => c.eval_params(),
+        }
+    }
+}
+
+/// Sniff the magic and load whichever format the file holds.
+pub fn load_any(path: &Path) -> Result<AnyCheckpoint> {
+    let mut f =
+        std::fs::File::open(path).with_context(|| format!("opening checkpoint {path:?}"))?;
+    let mut all = Vec::new();
+    f.read_to_end(&mut all)?;
+    let nl = all.iter().position(|&b| b == b'\n').context("checkpoint missing header line")?;
+    let header = Json::parse(std::str::from_utf8(&all[..nl])?)
+        .map_err(|e| anyhow::anyhow!("checkpoint header: {e}"))?;
+    let body = &all[nl + 1..];
+    match header.get("magic").and_then(Json::as_str) {
+        Some(MAGIC_V1) => Ok(AnyCheckpoint::V1(Checkpoint::from_parts(&header, body, path)?)),
+        Some(MAGIC_V2) => Ok(AnyCheckpoint::V2(CheckpointV2::from_parts(&header, body, path)?)),
+        _ => bail!("not a pier checkpoint: {path:?}"),
+    }
+}
+
+/// Sequential f32-blob reader over the post-header bytes: overflow-safe
+/// sizing, truncation and trailing-garbage both rejected.
+struct BlobReader<'a> {
+    rest: &'a [u8],
+}
+
+impl<'a> BlobReader<'a> {
+    fn new(body: &'a [u8]) -> Self {
+        BlobReader { rest: body }
+    }
+
+    fn take(&mut self, n: usize) -> Result<Vec<f32>> {
+        let bytes = n.checked_mul(4).context("checkpoint blob size overflows")?;
+        if self.rest.len() < bytes {
+            bail!("checkpoint truncated: wanted {bytes} bytes, have {}", self.rest.len());
+        }
+        let (head, tail) = self.rest.split_at(bytes);
+        self.rest = tail;
+        Ok(head.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+
+    fn finish(&self) -> Result<()> {
+        if !self.rest.is_empty() {
+            bail!("checkpoint has {} trailing bytes", self.rest.len());
+        }
+        Ok(())
     }
 }
 
@@ -130,10 +447,49 @@ mod tests {
         }
     }
 
+    fn sample_v2() -> CheckpointV2 {
+        let n = 5;
+        let grp = |s: f32, t: u64| GroupState {
+            params: (0..n).map(|i| s + i as f32).collect(),
+            m: (0..n).map(|i| s * 0.1 + i as f32 * 0.01).collect(),
+            v: (0..n).map(|i| s * 0.2 + i as f32 * 0.02).collect(),
+            adam_t: t,
+            rng_hi: u64::MAX - t,
+            rng_lo: 0x9e3779b97f4a7c15,
+        };
+        // inner_allreduce_calls > 2^53 forces the string integer form
+        let mut comm = CommStats { inner_allreduce_calls: 1 << 55, ..Default::default() };
+        comm.note_outer_allreduce(4.0 * n as f64, false);
+        CheckpointV2 {
+            model: "nano".into(),
+            mode: "pier".into(),
+            seed: 1234,
+            iteration: 77,
+            groups: vec![grp(1.0, 456), grp(2.0, 456)],
+            outer: Some(OuterState {
+                momentum: vec![0.5; n],
+                anchor: vec![-0.25; n],
+                committed: vec![0.125; n],
+                frag_cursor: 3,
+                outer_steps: 9,
+                warmup_accums: 2,
+                last_mu: 0.875,
+                last_lr: 0.7,
+                residuals: vec![vec![1e-3; n], vec![-2e-3; n]],
+            }),
+            comm,
+        }
+    }
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("pier-ckpt-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
     #[test]
     fn roundtrip() {
-        let dir = std::env::temp_dir().join(format!("pier-ckpt-{}", std::process::id()));
-        std::fs::create_dir_all(&dir).unwrap();
+        let dir = tmp("v1");
         let path = dir.join("a.ckpt");
         let c = sample();
         c.save(&path).unwrap();
@@ -144,8 +500,7 @@ mod tests {
 
     #[test]
     fn rejects_truncation() {
-        let dir = std::env::temp_dir().join(format!("pier-ckpt-tr-{}", std::process::id()));
-        std::fs::create_dir_all(&dir).unwrap();
+        let dir = tmp("tr");
         let path = dir.join("b.ckpt");
         sample().save(&path).unwrap();
         let bytes = std::fs::read(&path).unwrap();
@@ -156,18 +511,17 @@ mod tests {
 
     #[test]
     fn rejects_wrong_magic() {
-        let dir = std::env::temp_dir().join(format!("pier-ckpt-mg-{}", std::process::id()));
-        std::fs::create_dir_all(&dir).unwrap();
+        let dir = tmp("mg");
         let path = dir.join("c.ckpt");
         std::fs::write(&path, "{\"magic\":\"nope\"}\n").unwrap();
         assert!(Checkpoint::load(&path).is_err());
+        assert!(load_any(&path).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
     fn empty_outer_state_ok() {
-        let dir = std::env::temp_dir().join(format!("pier-ckpt-eo-{}", std::process::id()));
-        std::fs::create_dir_all(&dir).unwrap();
+        let dir = tmp("eo");
         let path = dir.join("d.ckpt");
         let mut c = sample();
         c.outer_momentum.clear();
@@ -175,6 +529,115 @@ mod tests {
         c.save(&path).unwrap();
         let c2 = Checkpoint::load(&path).unwrap();
         assert!(c2.outer_momentum.is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_non_integral_counters() {
+        // Satellite bugfix pin: a header whose adam_t is fractional (the
+        // old lossy f64 path could produce one) must be rejected, not
+        // silently truncated to an integer.
+        let dir = tmp("ni");
+        let path = dir.join("e.ckpt");
+        std::fs::write(
+            &path,
+            "{\"magic\":\"pier-ckpt-v1\",\"model\":\"nano\",\"mode\":\"pier\",\
+             \"iteration\":10,\"adam_t\":1.5,\"n_params\":0,\"n_outer\":0}\n",
+        )
+        .unwrap();
+        let err = Checkpoint::load(&path).unwrap_err().to_string();
+        assert!(err.contains("adam_t"), "unexpected error: {err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn v2_roundtrip_is_exact_including_big_integers() {
+        let dir = tmp("v2");
+        let path = dir.join("f.ckpt");
+        let c = sample_v2();
+        c.save(&path).unwrap();
+        let c2 = CheckpointV2::load(&path).unwrap();
+        assert_eq!(c, c2);
+        // The PRNG words exceed 2^53 — exact round-trip is the whole point.
+        assert_eq!(c2.groups[0].rng_hi, u64::MAX - 456);
+        assert_eq!(c2.comm.inner_allreduce_calls, 1 << 55);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn v2_without_outer_roundtrips() {
+        let dir = tmp("v2a");
+        let path = dir.join("g.ckpt");
+        let mut c = sample_v2();
+        c.outer = None;
+        c.mode = "adamw".into();
+        c.groups.truncate(1);
+        c.save(&path).unwrap();
+        let c2 = CheckpointV2::load(&path).unwrap();
+        assert_eq!(c, c2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn v2_rejects_truncation_at_every_blob_boundary() {
+        let dir = tmp("v2t");
+        let path = dir.join("h.ckpt");
+        let c = sample_v2();
+        c.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let header_end = bytes.iter().position(|&b| b == b'\n').unwrap() + 1;
+        let n_blob_bytes = bytes.len() - header_end;
+        // cut in the middle of each 20-byte blob (n=5 f32s)
+        for cut in (0..n_blob_bytes).step_by(20) {
+            std::fs::write(&path, &bytes[..header_end + cut]).unwrap();
+            assert!(CheckpointV2::load(&path).is_err(), "cut at {cut} must fail");
+        }
+        // trailing garbage must also fail
+        let mut fat = bytes.clone();
+        fat.extend_from_slice(&[0u8; 8]);
+        std::fs::write(&path, &fat).unwrap();
+        assert!(CheckpointV2::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn v2_rejects_garbage_headers() {
+        let dir = tmp("v2g");
+        let path = dir.join("i.ckpt");
+        for (i, hdr) in [
+            "not json at all",
+            "{\"magic\":\"pier-ckpt-v2\"}",
+            "{\"magic\":\"pier-ckpt-v2\",\"model\":\"nano\",\"mode\":\"pier\",\"seed\":1,\
+             \"iteration\":-3,\"n_params\":0,\"groups\":[{}],\"outer\":null}",
+            "{\"magic\":\"pier-ckpt-v2\",\"model\":\"nano\",\"mode\":\"pier\",\"seed\":1,\
+             \"iteration\":1,\"n_params\":9999999999999999999999,\"groups\":[{}],\"outer\":null}",
+        ]
+        .iter()
+        .enumerate()
+        {
+            std::fs::write(&path, format!("{hdr}\n")).unwrap();
+            assert!(CheckpointV2::load(&path).is_err(), "garbage header {i} must fail");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_any_dispatches_on_magic() {
+        let dir = tmp("any");
+        let p1 = dir.join("v1.ckpt");
+        let p2 = dir.join("v2.ckpt");
+        sample().save(&p1).unwrap();
+        sample_v2().save(&p2).unwrap();
+        let a1 = load_any(&p1).unwrap();
+        let a2 = load_any(&p2).unwrap();
+        assert!(matches!(a1, AnyCheckpoint::V1(_)));
+        assert!(matches!(a2, AnyCheckpoint::V2(_)));
+        assert_eq!(a1.model(), "nano");
+        assert_eq!(a2.iteration(), 77);
+        assert_eq!(a2.eval_params(), &sample_v2().groups[0].params[..]);
+        // Cross-format strict loads refuse the other magic.
+        assert!(Checkpoint::load(&p2).is_err());
+        assert!(CheckpointV2::load(&p1).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -85,7 +85,7 @@
 //! zero full-model allocations or clones per sync beyond the single
 //! reduction output.
 
-use anyhow::{ensure, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 use xla::Literal;
 
 use crate::config::{OptMode, OuterCompress, TrainConfig};
@@ -94,6 +94,7 @@ use crate::coordinator::collective::{note_inner_allreduce, note_tp_step, tp_all_
 use crate::coordinator::group::WorkerGroup;
 use crate::coordinator::outer::OuterController;
 use crate::coordinator::parallel::ParallelExecutor;
+use crate::coordinator::state::{CheckpointV2, GroupState};
 use crate::data::{validation_batches, Pipeline};
 use crate::metrics::{CommStatsSnapshot, IterRecord, OuterEvent, RunLog};
 use crate::optim::schedule;
@@ -122,6 +123,18 @@ pub struct Trainer {
     /// the producer reduces the next one, keeping the [`FlatPool`] buffers
     /// immutable all-reduce inputs throughout. Empty until first use.
     stream_restart: Vec<f32>,
+    /// Completed-iteration counter — the checkpoint/resume cursor
+    /// (DESIGN.md §11). [`Trainer::run_until`] advances it; a restored
+    /// trainer continues from the checkpoint's recorded value.
+    completed_iters: usize,
+    /// Whether the post-warmup fork (switch) has executed. Derived on
+    /// restore as `iteration >= switch_step`, so a resumed run never
+    /// re-forks: the checkpoint already holds the post-fork group state.
+    switched: bool,
+    /// Elastic membership (DESIGN.md §11): `active[g]` gates group `g`'s
+    /// Phase-B stepping and its slot in the outer mean. Runtime state,
+    /// not checkpoint state — a restored run starts with the full cohort.
+    active: Vec<bool>,
 }
 
 /// Everything a single group step needs besides the group itself. Shared
@@ -181,6 +194,9 @@ impl Trainer {
             pool: ParallelExecutor::new(0),
             flats: FlatPool::new(),
             stream_restart: Vec::new(),
+            completed_iters: 0,
+            switched: false,
+            active: vec![true; n_groups],
         })
     }
 
@@ -250,11 +266,41 @@ impl Trainer {
     pub fn run(&mut self) -> Result<&RunLog> {
         let timer = Timer::start();
         let t_total = self.cfg.iterations;
-        let switch = if self.cfg.mode == OptMode::AdamW { t_total } else { self.cfg.switch_step() };
+        self.run_until(t_total)?;
+
+        // final eval
+        let final_params = self.global_params()?;
+        let final_loss = self.eval_params(&final_params)?;
+        self.log.val.push((t_total, final_loss));
+        self.log.comm = CommStatsSnapshot::from(&self.stats);
+        // one per executed sync event (under DP×TP a single event runs
+        // tp per-shard all-reduce calls). Taken from the controller, whose
+        // counter is checkpointed — `log.outer_events` only holds events
+        // since the last restore.
+        self.log.comm.outer_steps = match self.outer.as_ref() {
+            Some(o) => o.outer_steps,
+            None => self.log.outer_events.len() as u64,
+        };
+        self.log.wall_secs = timer.secs();
+        Ok(&self.log)
+    }
+
+    /// Advance training to `stop` completed iterations (clamped to the
+    /// configured total). Re-entrant: [`Trainer::run`] calls it once for
+    /// the whole schedule; checkpoint-driven callers stop mid-run,
+    /// snapshot with [`Trainer::checkpoint`], and a trainer restored via
+    /// [`Trainer::restore`] continues bit-identically from the recorded
+    /// iteration (`rust/tests/resume_parity.rs` pins this).
+    pub fn run_until(&mut self, stop: usize) -> Result<()> {
+        let t_total = self.cfg.iterations;
+        let stop = stop.min(t_total);
+        let switch =
+            if self.cfg.mode == OptMode::AdamW { t_total } else { self.cfg.switch_step() };
         let h = self.cfg.sync_interval;
 
         // ---------------- Phase A: fully-synchronized AdamW ----------------
-        for t in 0..switch.min(t_total) {
+        while self.completed_iters < switch.min(stop) {
+            let t = self.completed_iters;
             let lr = schedule::inner_lr(&self.cfg, t);
             let micro = self.global_micro_batches();
             let (loss, gnorm) = {
@@ -285,10 +331,15 @@ impl Trainer {
                     outer.warmup_accumulate(t + 1, &params);
                 }
             }
+            self.completed_iters = t + 1;
             self.maybe_eval(t)?;
         }
 
-        if switch < t_total && self.cfg.mode != OptMode::AdamW {
+        if self.completed_iters == switch
+            && switch < t_total
+            && self.cfg.mode != OptMode::AdamW
+            && !self.switched
+        {
             // ---------------- Switch: fork the groups ----------------
             let src_p = self.groups[0].params_flat(&self.man)?;
             let src_m = self.groups[0].m_flat(&self.man)?;
@@ -310,17 +361,23 @@ impl Trainer {
             if let Some(outer) = self.outer.as_mut() {
                 outer.on_switch(&src_p);
             }
+            self.switched = true;
+        }
 
-            // -------- Phase B: concurrent inner loops + outer steps --------
+        // -------- Phase B: concurrent inner loops + outer steps --------
+        if self.switched {
             let group_batch = self.cfg.group_batch();
             let mb = self.man.micro_batch;
             let n_micro = group_batch / mb;
             let engine = self.engine();
-            for t in switch..t_total {
+            while self.completed_iters < stop {
+                let t = self.completed_iters;
                 let lr = schedule::inner_lr(&self.cfg, t);
-                // All K groups step concurrently; each closure owns exactly
-                // one group's state (sampler, literals, adam_t), so the
-                // schedule cannot change the math.
+                // All active groups step concurrently; each closure owns
+                // exactly one group's state (sampler, literals, adam_t), so
+                // the schedule cannot change the math. Dropped groups do no
+                // work and draw no data (their samplers hold still for a
+                // checkpointed rejoin).
                 let outcomes = {
                     let ctx = StepCtx {
                         man: &self.man,
@@ -328,26 +385,34 @@ impl Trainer {
                         weight_decay: self.cfg.weight_decay,
                         tp: self.cfg.tp.max(1),
                     };
-                    engine.run(&mut self.groups, |_, g| {
+                    let active = &self.active;
+                    engine.run(&mut self.groups, |gi, g| {
+                        if !active[gi] {
+                            return Ok(None);
+                        }
                         let micro: Vec<Vec<i32>> =
                             (0..n_micro).map(|_| g.sampler.next_batch(mb)).collect();
-                        accumulated_step(&ctx, g, &micro, lr)
+                        accumulated_step(&ctx, g, &micro, lr).map(Some)
                     })?
                 };
                 // Fixed-order reduction after the join: identical to the
                 // serial schedule's running sums and accounting.
                 let mut loss_acc = 0.0;
                 let mut gnorm_acc = 0.0;
-                for &(loss, gnorm) in &outcomes {
+                let mut n_active = 0usize;
+                for outcome in outcomes.iter().flatten() {
+                    let (loss, gnorm) = *outcome;
                     loss_acc += loss;
                     gnorm_acc += gnorm;
+                    n_active += 1;
                     // intra-group DP all-reduce (within fast links)
                     note_inner_allreduce(self.man.n_params, &mut self.stats);
                     // per-replica intra-node TP collectives (DESIGN.md §4)
                     note_tp_step(self.man.n_params, self.cfg.tp, &mut self.stats);
                 }
-                let kf = outcomes.len() as f64;
+                let kf = n_active as f64;
                 self.record(t, loss_acc / kf, lr, gnorm_acc / kf);
+                self.completed_iters = t + 1;
 
                 if (t + 1 - switch) % h == 0 || t + 1 == t_total {
                     self.outer_sync(t)?;
@@ -355,17 +420,129 @@ impl Trainer {
                 self.maybe_eval(t)?;
             }
         }
+        Ok(())
+    }
 
-        // final eval
-        let final_params = self.global_params()?;
-        let final_loss = self.eval_params(&final_params)?;
-        self.log.val.push((t_total, final_loss));
-        self.log.comm = CommStatsSnapshot::from(&self.stats);
-        // one per executed sync event (under DP×TP a single event runs
-        // tp per-shard all-reduce calls)
-        self.log.comm.outer_steps = self.log.outer_events.len() as u64;
-        self.log.wall_secs = timer.secs();
-        Ok(&self.log)
+    /// Completed iterations so far (the resume cursor).
+    pub fn completed_iterations(&self) -> usize {
+        self.completed_iters
+    }
+
+    /// Snapshot the full trainer state as a v2 checkpoint (DESIGN.md §11):
+    /// per-group inner state (params, Adam moments + step counter, sampler
+    /// RNG), the outer controller (momentum, anchor, fragment cursor, int8
+    /// error-feedback residuals, schedule telemetry), the comm-accounting
+    /// counters, and the completed-iteration cursor.
+    pub fn checkpoint(&self) -> Result<CheckpointV2> {
+        let mut groups = Vec::with_capacity(self.groups.len());
+        for g in &self.groups {
+            groups.push(g.export_state(&self.man)?);
+        }
+        Ok(CheckpointV2 {
+            model: self.man.model_name.clone(),
+            mode: self.cfg.mode.name().to_string(),
+            seed: self.cfg.seed,
+            iteration: self.completed_iters,
+            groups,
+            outer: self.outer.as_ref().map(|o| o.export_state()),
+            comm: self.stats.clone(),
+        })
+    }
+
+    /// Restore the full trainer state from a v2 checkpoint (DESIGN.md
+    /// §11). The trainer must have been constructed against the same
+    /// model, mode, seed, and group count — the identity fields are
+    /// validated, then the evolved state is replaced wholesale: per-group
+    /// params + Adam moments + sampler RNG, the outer controller, the
+    /// comm counters, and the iteration cursor. Membership resets to the
+    /// full cohort; `switched` is derived from the cursor so a resumed
+    /// run never re-forks.
+    pub fn restore(&mut self, ckpt: &CheckpointV2) -> Result<()> {
+        ensure!(
+            ckpt.model == self.man.model_name,
+            "checkpoint is for model '{}', trainer runs '{}'",
+            ckpt.model,
+            self.man.model_name
+        );
+        ensure!(
+            ckpt.mode == self.cfg.mode.name(),
+            "checkpoint is a {} run, trainer is configured for {}",
+            ckpt.mode,
+            self.cfg.mode.name()
+        );
+        ensure!(
+            ckpt.seed == self.cfg.seed,
+            "checkpoint seed {} != configured seed {} (samplers would desync)",
+            ckpt.seed,
+            self.cfg.seed
+        );
+        ensure!(
+            ckpt.groups.len() == self.groups.len(),
+            "checkpoint has {} groups, trainer has {}",
+            ckpt.groups.len(),
+            self.groups.len()
+        );
+        ensure!(
+            ckpt.iteration <= self.cfg.iterations,
+            "checkpoint is at iteration {}, beyond the configured total {}",
+            ckpt.iteration,
+            self.cfg.iterations
+        );
+        match (&mut self.outer, &ckpt.outer) {
+            (Some(o), Some(st)) => o.restore_state(st)?,
+            (None, None) => {}
+            (Some(_), None) => {
+                bail!("checkpoint lacks the outer state a {} resume needs", ckpt.mode)
+            }
+            (None, Some(_)) => {
+                bail!("checkpoint carries outer state but this run has no outer optimizer")
+            }
+        }
+        for (g, st) in self.groups.iter_mut().zip(&ckpt.groups) {
+            g.restore_state(&self.man, st)?;
+        }
+        self.stats = ckpt.comm.clone();
+        self.completed_iters = ckpt.iteration;
+        let switch = if self.cfg.mode == OptMode::AdamW {
+            self.cfg.iterations
+        } else {
+            self.cfg.switch_step()
+        };
+        self.switched = self.cfg.mode != OptMode::AdamW
+            && switch < self.cfg.iterations
+            && ckpt.iteration >= switch;
+        self.active = vec![true; self.groups.len()];
+        Ok(())
+    }
+
+    /// Drop a group from the cohort mid-round (elastic membership,
+    /// DESIGN.md §11): it stops stepping, draws no data, and is
+    /// deterministically excluded from subsequent outer syncs — the outer
+    /// mean runs over the survivors (÷ survivor count).
+    pub fn deactivate_group(&mut self, gi: usize) -> Result<()> {
+        ensure!(gi < self.groups.len(), "no group {gi} to deactivate");
+        ensure!(self.active[gi], "group {gi} is already inactive");
+        ensure!(
+            self.active.iter().filter(|a| **a).count() > 1,
+            "cannot deactivate the last active group"
+        );
+        self.active[gi] = false;
+        Ok(())
+    }
+
+    /// Rejoin a previously dropped group from checkpointed state
+    /// (DESIGN.md §11): the group resumes from exactly the inner state the
+    /// checkpoint recorded and re-enters the next outer sync's mean.
+    pub fn rejoin_group(&mut self, gi: usize, st: &GroupState) -> Result<()> {
+        ensure!(gi < self.groups.len(), "no group {gi} to rejoin");
+        self.groups[gi].restore_state(&self.man, st)?;
+        self.active[gi] = true;
+        Ok(())
+    }
+
+    /// How many groups are currently in the cohort.
+    pub fn active_groups(&self) -> usize {
+        self.active.iter().filter(|a| **a).count()
     }
 
     /// Outer synchronization after iteration `t` (Alg. 2 lines 10–21; or
@@ -375,37 +552,61 @@ impl Trainer {
     /// [`FlatPool`] buffers (concurrently), reduced in place by the
     /// controller's scratch, and the restart point is installed straight
     /// from the controller's buffer.
+    ///
+    /// Elastic membership (DESIGN.md §11): only active groups contribute
+    /// to and receive the sync — the controller sees the survivor subset,
+    /// so its mean divides by the survivor count, deterministically.
     fn outer_sync(&mut self, t: usize) -> Result<()> {
         let step = t + 1; // schedules see completed steps
         let k = self.groups.len();
         let n = self.man.n_params;
         self.flats.ensure(k, n);
         let engine = self.engine();
+        let active = self.active.clone();
+        let ka = active.iter().filter(|a| **a).count();
         let outer_bytes_before = self.stats.outer_allreduce_bytes;
         let outer_wire_before = self.stats.outer_wire_bytes;
 
-        // 1. flatten every group into its pooled buffer (parallel, no alloc)
+        // 1. flatten every active group into its pooled buffer (parallel,
+        //    no alloc); dropped groups' buffers are dead this round
         {
             let man = &self.man;
             let groups = &self.groups;
+            let active = &active;
             engine.run(self.flats.bufs_mut(), |gi, buf| {
-                groups[gi].params_flat_into(man, buf)
+                if active[gi] {
+                    groups[gi].params_flat_into(man, buf)
+                } else {
+                    Ok(())
+                }
             })?;
         }
 
-        let refs: Vec<&[f32]> = self.flats.bufs().iter().map(|b| b.as_slice()).collect();
+        let refs: Vec<&[f32]> = self
+            .flats
+            .bufs()
+            .iter()
+            .enumerate()
+            .filter(|(gi, _)| active[*gi])
+            .map(|(_, b)| b.as_slice())
+            .collect();
         let outer = self.outer.as_mut().expect("outer sync without outer optimizer");
         let mut event_fragments = 1;
         if self.cfg.sync_fraction < 1.0 {
             // 2a. streaming partial sync: overwrite only [lo, hi) per group
             let part = outer.sync_partial(step, &refs, &mut self.stats);
             let man = &self.man;
-            for (g, flat) in self.groups.iter_mut().zip(self.flats.bufs_mut()) {
+            for (gi, (g, flat)) in
+                self.groups.iter_mut().zip(self.flats.bufs_mut()).enumerate()
+            {
+                if !active[gi] {
+                    continue;
+                }
                 flat[part.lo..part.hi].copy_from_slice(&part.fragment);
                 g.set_params_flat(man, flat)?;
             }
             self.stats.broadcast_calls += 1;
-            self.stats.broadcast_bytes += 4.0 * (part.fragment.len() * k) as f64;
+            self.stats.broadcast_bytes += 4.0 * (part.fragment.len() * ka) as f64;
         } else {
             // 2b. full sync — three schedules over the same math, one
             // shared install. Blocking (`stream_fragments = 0`) keeps the
@@ -432,11 +633,18 @@ impl Trainer {
             } else {
                 outer.sync_in_place(step, &refs, &mut self.stats)
             };
-            // restart-point broadcast: install per group on the engine pool
+            // restart-point broadcast: install per active group on the pool
             let man = &self.man;
-            engine.run(&mut self.groups, |_, g| g.set_params_flat(man, next))?;
+            let active = &active;
+            engine.run(&mut self.groups, |gi, g| {
+                if active[gi] {
+                    g.set_params_flat(man, next)
+                } else {
+                    Ok(())
+                }
+            })?;
             self.stats.broadcast_calls += 1;
-            self.stats.broadcast_bytes += 4.0 * (n * k) as f64;
+            self.stats.broadcast_bytes += 4.0 * (n * ka) as f64;
         }
         // Record the event for schedule cross-validation: the logical fp32
         // volume this sync actually all-reduced (full model, or the

@@ -77,6 +77,19 @@ impl Sampler {
         Sampler { data, lo, hi, rng: Pcg64::new(seed, shard as u64 + 1), seq_len }
     }
 
+    /// Raw PRNG state words for checkpointing. The increment is derived
+    /// from the construction `(seed, shard)`, so only the state words need
+    /// to persist; restore with [`Sampler::set_rng_state`] on a sampler
+    /// built with the same construction arguments.
+    pub fn rng_state(&self) -> (u64, u64) {
+        self.rng.state_words()
+    }
+
+    /// Restore the PRNG state saved by [`Sampler::rng_state`].
+    pub fn set_rng_state(&mut self, hi: u64, lo: u64) {
+        self.rng.set_state_words(hi, lo);
+    }
+
     /// One batch of `b` windows, flattened row-major to `b × (seq_len+1)`.
     pub fn next_batch(&mut self, b: usize) -> Vec<i32> {
         let t1 = self.seq_len + 1;
@@ -171,6 +184,21 @@ mod tests {
         assert_eq!(b1, b2);
         assert_ne!(b1, b3);
         assert_ne!(b1, b4);
+    }
+
+    #[test]
+    fn sampler_rng_state_roundtrip_resumes_the_stream() {
+        let d = Arc::new(ds(10_000));
+        let mut a = Sampler::new(d.clone(), 1, 2, 16, 7);
+        for _ in 0..13 {
+            a.next_batch(4);
+        }
+        let (hi, lo) = a.rng_state();
+        let mut b = Sampler::new(d, 1, 2, 16, 7);
+        b.set_rng_state(hi, lo);
+        for _ in 0..8 {
+            assert_eq!(a.next_batch(4), b.next_batch(4));
+        }
     }
 
     #[test]

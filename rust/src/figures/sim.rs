@@ -8,10 +8,10 @@
 use crate::config::{model_or_die, OptMode, OuterCompress, DEFAULT_QUANT_BLOCK};
 use crate::coordinator::compress::wire_bytes;
 use crate::metrics::scaling_efficiency;
-use crate::netsim::FabricShape;
+use crate::netsim::{FabricShape, FailureSpec};
 use crate::perfmodel::gpu::{scenario, ClusterSpec, Scenario, PERLMUTTER, SCENARIOS, VISTA};
-use crate::simulator::run::{fits_memory, outer_event_wire_bytes, simulate_run, speedup_at,
-                            Calib, SimSetup};
+use crate::simulator::run::{fits_memory, outer_event_recovery_secs, outer_event_wire_bytes,
+                            simulate_run, speedup_at, Calib, SimSetup};
 use crate::util::json::Json;
 
 /// One scale point of a runtime figure.
@@ -272,6 +272,9 @@ pub struct SweepAxes {
     pub sync_interval: usize,
     pub global_batch: usize,
     pub iterations: usize,
+    /// Per-flow failure probability of the canonical seeded trace the
+    /// recovery column prices (seed 0, restart penalty 1; DESIGN.md §11).
+    pub failure_prob: f64,
 }
 
 impl SweepAxes {
@@ -290,6 +293,7 @@ impl SweepAxes {
             sync_interval: 50,
             global_batch: 512,
             iterations: 10_000,
+            failure_prob: 0.25,
         }
     }
 
@@ -307,6 +311,7 @@ impl SweepAxes {
             sync_interval: 50,
             global_batch: 512,
             iterations: 100_000,
+            failure_prob: 0.25,
         }
     }
 }
@@ -328,6 +333,10 @@ pub struct SweepRow {
     /// Whole-run inter-node outer wire (per node): events ×
     /// `outer_event_wire_bytes`.
     pub wire_bytes: f64,
+    /// DES recovery makespan of one outer ring under the axes' canonical
+    /// seeded failure trace (`outer_event_recovery_secs`; DESIGN.md §11).
+    /// Never below the failure-free DES makespan of the same ring.
+    pub recovery_secs: f64,
     /// On the (makespan, wire) Pareto frontier of its cell.
     pub pareto: bool,
 }
@@ -387,6 +396,11 @@ pub fn sweep_grid(axes: &SweepAxes) -> Vec<SweepRow> {
                             let n_outer = (s.iterations as f64
                                 - s.warmup_pct * s.iterations as f64)
                                 / s.sync_interval as f64;
+                            let trace = FailureSpec {
+                                seed: 0,
+                                prob: axes.failure_prob,
+                                restart_penalty: 1.0,
+                            };
                             rows.push(SweepRow {
                                 scenario: sc.name,
                                 world,
@@ -397,6 +411,7 @@ pub fn sweep_grid(axes: &SweepAxes) -> Vec<SweepRow> {
                                 makespan_secs: r.total_secs,
                                 outer_event_secs: r.outer_event_secs,
                                 wire_bytes: n_outer * outer_event_wire_bytes(&s),
+                                recovery_secs: outer_event_recovery_secs(&s, Some(trace)),
                                 pareto: false,
                             });
                         }
@@ -433,6 +448,7 @@ pub fn sweep_json(axes: &SweepAxes, rows: &[SweepRow]) -> Json {
         ("sync_interval", Json::num(axes.sync_interval as f64)),
         ("global_batch", Json::num(axes.global_batch as f64)),
         ("iterations", Json::num(axes.iterations as f64)),
+        ("failure_prob", Json::num(axes.failure_prob)),
         ("scenarios", Json::arr(axes.scenarios.iter().map(|s| Json::str(s.name)))),
         ("rows",
          Json::arr(rows.iter().map(|r| {
@@ -446,6 +462,7 @@ pub fn sweep_json(axes: &SweepAxes, rows: &[SweepRow]) -> Json {
                  ("makespan_secs", Json::num(r.makespan_secs)),
                  ("outer_event_secs", Json::num(r.outer_event_secs)),
                  ("wire_bytes", Json::num(r.wire_bytes)),
+                 ("recovery_secs", Json::num(r.recovery_secs)),
                  ("pareto", Json::Bool(r.pareto)),
              ])
          }))),
@@ -456,15 +473,16 @@ pub fn sweep_json(axes: &SweepAxes, rows: &[SweepRow]) -> Json {
 pub fn print_sweep(rows: &[SweepRow]) {
     println!("\n== pier sweep — makespan vs outer wire (Pareto `*` per scenario/world/tp) ==");
     println!(
-        "{:>20} {:>6} {:>3} {:>8} {:>5} {:>5} {:>14} {:>12} {:>7}",
+        "{:>20} {:>6} {:>3} {:>8} {:>5} {:>5} {:>14} {:>12} {:>13} {:>7}",
         "scenario", "GPUs", "tp", "compress", "frag", "frac", "makespan (s)", "wire (GB)",
-        "pareto"
+        "recovery (s)", "pareto"
     );
     for r in rows {
         println!(
-            "{:>20} {:>6} {:>3} {:>8} {:>5} {:>5.2} {:>14.0} {:>12.1} {:>7}",
+            "{:>20} {:>6} {:>3} {:>8} {:>5} {:>5.2} {:>14.0} {:>12.1} {:>13.3} {:>7}",
             r.scenario, r.world, r.tp, r.compress.name(), r.fragments, r.sync_fraction,
-            r.makespan_secs, r.wire_bytes / 1e9, if r.pareto { "*" } else { "" }
+            r.makespan_secs, r.wire_bytes / 1e9, r.recovery_secs,
+            if r.pareto { "*" } else { "" }
         );
     }
 }
@@ -642,6 +660,35 @@ mod tests {
         for (j, r) in jrows.iter().zip(&rows) {
             assert_eq!(j.get("pareto").unwrap().as_bool(), Some(r.pareto));
             assert_eq!(j.get("makespan_secs").unwrap().as_f64(), Some(r.makespan_secs));
+        }
+    }
+
+    #[test]
+    fn sweep_recovery_column_prices_the_failure_trace() {
+        let axes = SweepAxes::smoke();
+        let rows = sweep_grid(&axes);
+        for r in &rows {
+            // recovery makespan is never below the failure-free DES ring
+            let sc = axes.scenarios.iter().copied().find(|s| s.name == r.scenario).unwrap();
+            let s = sweep_setup(&axes, sc, r.world, r.tp, r.compress, r.fragments,
+                                r.sync_fraction);
+            let clean = outer_event_recovery_secs(&s, None);
+            assert!(r.recovery_secs >= clean,
+                    "{} w={}: recovery {} < failure-free {}",
+                    r.scenario, r.world, r.recovery_secs, clean);
+        }
+        // seeded trace → the grid replays bit-for-bit
+        let again = sweep_grid(&axes);
+        for (a, b) in rows.iter().zip(&again) {
+            assert_eq!(a.recovery_secs.to_bits(), b.recovery_secs.to_bits());
+        }
+        // the JSON artifact carries the column
+        let json = sweep_json(&axes, &rows).to_string();
+        let parsed = Json::parse(&json).unwrap();
+        assert_eq!(parsed.get("failure_prob").unwrap().as_f64(), Some(axes.failure_prob));
+        let jrows = parsed.get("rows").unwrap().as_arr().unwrap();
+        for (j, r) in jrows.iter().zip(&rows) {
+            assert_eq!(j.get("recovery_secs").unwrap().as_f64(), Some(r.recovery_secs));
         }
     }
 

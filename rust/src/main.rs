@@ -17,7 +17,7 @@
 use anyhow::{anyhow, bail, Result};
 
 use pier::config::{model_or_die, OptMode, OuterCompress, MODELS};
-use pier::coordinator::{Checkpoint, Trainer};
+use pier::coordinator::{load_any, CheckpointV2, Trainer};
 use pier::figures;
 use pier::metrics::RunLog;
 use pier::runtime::{load_manifest, Runtime};
@@ -57,15 +57,17 @@ fn print_usage() {
                      --batch B --interval H [--tp T] [--stream-fragments F]\n\
                      [--outer-compress none|int8] [--quant-block B]\n\
                      [--offload] [--csv out.csv] [--ckpt out.ckpt]\n\
-           eval      --model nano --ckpt file.ckpt\n\
+                     [--resume file.ckpt]\n\
+           eval      --model nano --ckpt file.ckpt [--allow-model-mismatch]\n\
            simulate  --model gpt2-xl --cluster <scenario> --world N\n\
                      [--tp T] [--groups K] [--interval H] [--mode pier|adamw]\n\
                      [--stream-fragments F] [--outer-compress none|int8]\n\
                      [--quant-block B] [--jitter S [--jitter-seed N]]\n\
+                     [--failures P [--failure-seed N] [--restart-penalty R]]\n\
            sweep     [--smoke] [--model M] [--clusters a,b] [--worlds 32,64]\n\
                      [--tps 1,4] [--compress none,int8] [--fragments 0,4]\n\
                      [--fractions 1.0,0.5] [--interval H] [--batch B]\n\
-                     [--iters N] [--out sweep_pareto.json]\n\
+                     [--iters N] [--failures P] [--out sweep_pareto.json]\n\
            repro     fig1|fig3|fig4|fig5|fig6|fig7|fig8|table2|table3|table4|\n\
                      ablation|calibration|sim-all [--iters N] [--model nano|micro|mini]\n\
            config    [--model name]\n\
@@ -146,6 +148,13 @@ fn cmd_train(args: &Args) -> Result<()> {
     );
 
     let mut trainer = Trainer::new(&rt, man, cfg.clone(), &pipe)?;
+    if let Some(resume) = args.get("resume") {
+        // Resume-exact restore (DESIGN.md §11): requires the v2 format —
+        // v1 checkpoints lack the per-group and outer state.
+        let ckpt = CheckpointV2::load(std::path::Path::new(resume))?;
+        trainer.restore(&ckpt)?;
+        println!("resumed {resume} at iteration {}", trainer.completed_iterations());
+    }
     trainer.run()?;
     summarize(&trainer.log);
 
@@ -154,19 +163,10 @@ fn cmd_train(args: &Args) -> Result<()> {
         println!("wrote {csv} (+ .val.csv)");
     }
     if let Some(ckpt) = args.get("ckpt") {
-        let g0 = &trainer.groups[0];
-        Checkpoint {
-            model: trainer.man.model_name.clone(),
-            mode: cfg.mode.name().into(),
-            iteration: cfg.iterations,
-            adam_t: g0.adam_t,
-            params: g0.params_flat(&trainer.man)?,
-            m: g0.m_flat(&trainer.man)?,
-            v: g0.v_flat(&trainer.man)?,
-            outer_momentum: Vec::new(),
-            outer_anchor: Vec::new(),
-        }
-        .save(std::path::Path::new(ckpt))?;
+        // Full v2 resume state: every group's inner state, the real outer
+        // momentum/anchor (not placeholders), the actual completed-iteration
+        // counter, and the comm accounting (DESIGN.md §11).
+        trainer.checkpoint()?.save(std::path::Path::new(ckpt))?;
         println!("wrote {ckpt}");
     }
     Ok(())
@@ -175,20 +175,29 @@ fn cmd_train(args: &Args) -> Result<()> {
 fn cmd_eval(args: &Args) -> Result<()> {
     let model = args.str_or("model", "nano");
     let ckpt_path = args.get("ckpt").ok_or_else(|| anyhow!("--ckpt required"))?;
-    let ckpt = Checkpoint::load(std::path::Path::new(ckpt_path))?;
+    let ckpt = load_any(std::path::Path::new(ckpt_path))?;
+    if ckpt.model() != model && !args.flag("allow-model-mismatch") {
+        bail!(
+            "checkpoint was trained on model '{}' but --model is '{}'; pass \
+             --allow-model-mismatch to evaluate anyway (sizes must still agree)",
+            ckpt.model(),
+            model
+        );
+    }
     let rt = Runtime::cpu()?;
     let man = load_manifest(&model)?;
-    if ckpt.params.len() != man.n_params {
-        bail!("checkpoint has {} params, model {} needs {}", ckpt.params.len(), model, man.n_params);
+    let params = ckpt.eval_params();
+    if params.len() != man.n_params {
+        bail!("checkpoint has {} params, model {} needs {}", params.len(), model, man.n_params);
     }
     let pipe = figures::pipeline_for(&man, 11);
-    let results = figures::eval_checkpoint(&rt, &man, &pipe, &ckpt.params, 3)?;
-    figures::print_task_table(&[(ckpt.mode.clone(), results)]);
+    let results = figures::eval_checkpoint(&rt, &man, &pipe, params, 3)?;
+    figures::print_task_table(&[(ckpt.mode().to_string(), results)]);
     Ok(())
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
-    use pier::netsim::JitterSpec;
+    use pier::netsim::{FailureSpec, JitterSpec};
     use pier::perfmodel::gpu::{scenario, scenario_names};
     use pier::simulator::run::{simulate_run, Calib, SimSetup};
     let cluster_name = args.str_or("cluster", "perlmutter");
@@ -270,6 +279,25 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         println!("  straggler jitter (≤{:.0}% per flow, seed {seed}): outer ring \
                   {t0:.3}s → {tj:.3}s on the DES", 100.0 * jitter);
     }
+    let failures = args.f64_or("failures", 0.0);
+    if failures > 0.0 {
+        // Price one outer ring under a seeded failure/preemption trace and
+        // report the recovery makespan against the failure-free fabric
+        // (DESIGN.md §11): a failed flow retransmits after a restart
+        // penalty, so recovery is never cheaper than the clean ring.
+        let seed = args.u64_or("failure-seed", 0);
+        let penalty = args.f64_or("restart-penalty", 1.0);
+        let nodes = s.world.div_ceil(s.cluster.gpus_per_node).max(1);
+        let v = 4.0 * s.model.n_params() as f64 * s.sync_fraction.clamp(0.0, 1.0);
+        let t0 = sc.fabric.lower(sc.cluster, nodes)
+                          .des_outer_makespan(s.dp(), s.tp * s.pp, v);
+        let tf = sc.fabric.lower(sc.cluster, nodes)
+                          .with_failures(FailureSpec {
+                              seed, prob: failures, restart_penalty: penalty })
+                          .des_outer_makespan(s.dp(), s.tp * s.pp, v);
+        println!("  failure trace (p={failures:.2}/flow, seed {seed}): outer ring \
+                  {t0:.3}s → {tf:.3}s recovery makespan on the DES");
+    }
     println!("  total ({} iters): {:.0}s = {:.2}h", s.iterations, r.total_secs,
              r.total_secs / 3600.0);
     Ok(())
@@ -319,6 +347,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     axes.sync_interval = args.usize_or("interval", axes.sync_interval);
     axes.global_batch = args.usize_or("batch", axes.global_batch);
     axes.iterations = args.usize_or("iters", axes.iterations);
+    axes.failure_prob = args.f64_or("failures", axes.failure_prob);
 
     let rows = sweep_grid(&axes);
     if rows.is_empty() {

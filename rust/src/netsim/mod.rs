@@ -19,7 +19,7 @@ pub mod topology;
 pub use collectives::{broadcast, hierarchical_allreduce, outer_sync_time, outer_sync_time_path,
                       ring_allgather, ring_allreduce};
 pub use event::{Flow, FlowResult, LinkId, Network};
-pub use topology::{FabricShape, JitterSpec, LinkClass, NodeKind, TopoLink, Topology};
+pub use topology::{FabricShape, FailureSpec, JitterSpec, LinkClass, NodeKind, TopoLink, Topology};
 
 use crate::config::outer_cliques;
 use crate::perfmodel::gpu::ClusterSpec;

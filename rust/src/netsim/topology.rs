@@ -78,6 +78,40 @@ impl JitterSpec {
     }
 }
 
+/// Seeded per-flow failure/preemption trace for the DES (off by default;
+/// enable with [`Topology::with_failures`]). Each flow independently fails
+/// with probability `prob`, drawn from the `Pcg64::new(seed, tag)` stream
+/// of that flow: a failed flow transmits a fraction `u ~ U[0,1)` of its
+/// bytes, pays a restart overhead of `restart_penalty` transfer-times,
+/// then re-runs from scratch — a work multiplier of
+/// `1 + u + restart_penalty`, always ≥ 1. Like jitter, this is a DES-side
+/// perturbation the closed-form models ignore, and a `prob = 0` trace is
+/// the failure-free fabric bit-for-bit (DESIGN.md §11).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FailureSpec {
+    pub seed: u64,
+    /// Per-flow failure probability, clamped to `[0, 1]`.
+    pub prob: f64,
+    /// Restart/reload overhead of one recovery, in units of the flow's own
+    /// failure-free transfer time.
+    pub restart_penalty: f64,
+}
+
+impl FailureSpec {
+    /// Work multiplier of the flow with this tag: `1` when the seeded draw
+    /// spares it, `1 + u + restart_penalty` when it fails mid-flight at
+    /// fraction `u` of the transfer. Deterministic in `(seed, tag)`.
+    pub fn factor(&self, flow_tag: usize) -> f64 {
+        let mut rng = Pcg64::new(self.seed, flow_tag as u64);
+        let draw = rng.f64();
+        if draw < self.prob.clamp(0.0, 1.0) {
+            1.0 + rng.f64() + self.restart_penalty.max(0.0)
+        } else {
+            1.0
+        }
+    }
+}
+
 /// The fabric graph. Build one with [`Topology::two_level`] /
 /// [`Topology::fat_tree`] / [`Topology::rail`] / [`Topology::mixed_fleet`]
 /// (or [`FabricShape::lower`]), or assemble a custom shape from
@@ -97,17 +131,25 @@ pub struct Topology {
     core: Option<usize>,
     /// Seeded straggler injection for the DES; `None` = off.
     pub jitter: Option<JitterSpec>,
+    /// Seeded failure/preemption trace for the DES; `None` = off.
+    pub failures: Option<FailureSpec>,
 }
 
 impl Topology {
     pub fn new(name: impl Into<String>) -> Topology {
         Topology { name: name.into(), nodes: Vec::new(), links: Vec::new(),
-                   adj: Vec::new(), core: None, jitter: None }
+                   adj: Vec::new(), core: None, jitter: None, failures: None }
     }
 
     /// Enable seeded straggler injection (builder style).
     pub fn with_jitter(mut self, jitter: JitterSpec) -> Topology {
         self.jitter = Some(jitter);
+        self
+    }
+
+    /// Enable a seeded failure/preemption trace (builder style).
+    pub fn with_failures(mut self, failures: FailureSpec) -> Topology {
+        self.failures = Some(failures);
         self
     }
 
@@ -365,6 +407,9 @@ impl Topology {
                 let mut bytes = ring_bytes;
                 if let Some(j) = &self.jitter {
                     bytes *= j.factor(tag);
+                }
+                if let Some(f) = &self.failures {
+                    bytes *= f.factor(tag);
                 }
                 flows.push(Flow { bytes, latency,
                                   links: path.iter().map(|&l| ids[l]).collect(), tag });
@@ -709,6 +754,30 @@ mod tests {
             .with_jitter(JitterSpec { seed: 7, max_slowdown: 0.0 })
             .des_outer_makespan(16, 4, v);
         assert_eq!(z.to_bits(), t0.to_bits());
+    }
+
+    #[test]
+    fn failures_are_seeded_deterministic_and_recovery_never_beats_failure_free() {
+        let v = 6.2e9;
+        let base = Topology::two_level(&PERLMUTTER, 16);
+        let t0 = base.des_outer_makespan(16, 4, v);
+        let f = |seed, prob| {
+            Topology::two_level(&PERLMUTTER, 16)
+                .with_failures(FailureSpec { seed, prob, restart_penalty: 0.5 })
+                .des_outer_makespan(16, 4, v)
+        };
+        // same trace → bit-identical replay
+        assert_eq!(f(3, 0.5).to_bits(), f(3, 0.5).to_bits());
+        // p = 1: every flow fails and re-runs → strictly slower; different
+        // seeds draw different failure fractions
+        assert!(f(3, 1.0) > t0);
+        assert_ne!(f(3, 1.0).to_bits(), f(4, 1.0).to_bits());
+        // recovery makespan never beats the failure-free fabric
+        for seed in 0..8 {
+            assert!(f(seed, 0.3) >= t0, "seed {seed}");
+        }
+        // an empty trace (p = 0) is the failure-free fabric, bit-for-bit
+        assert_eq!(f(9, 0.0).to_bits(), t0.to_bits());
     }
 
     #[test]

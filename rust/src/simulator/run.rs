@@ -2,8 +2,8 @@
 
 use crate::config::{outer_cliques, ModelConfig, OptMode, OuterCompress, DEFAULT_QUANT_BLOCK};
 use crate::netsim::{hierarchical_allreduce, outer_schedule_over, outer_sync_time,
-                    ring_allreduce, streaming_overlap_cost, CostModel, FabricShape, OuterSync,
-                    OuterWire, Topology};
+                    ring_allreduce, streaming_overlap_cost, CostModel, FabricShape, FailureSpec,
+                    OuterSync, OuterWire, Topology};
 use crate::perfmodel::flops::compute_time;
 use crate::perfmodel::gpu::{ClusterSpec, PCIE};
 
@@ -357,6 +357,22 @@ pub fn outer_event_wire_bytes(s: &SimSetup) -> f64 {
         Some(_) => delta * s.outer_compress.bytes_per_param(s.outer_quant_block) / 4.0,
         None => delta,
     }
+}
+
+/// DES makespan of one outer ring under a seeded failure/preemption trace
+/// (DESIGN.md §11): the configured fabric lowered to its topology graph,
+/// each flow failing and re-running per [`FailureSpec`]. `None` prices
+/// the failure-free fabric — and because every failure factor is ≥ 1, the
+/// recovery makespan is never below it (`pier sweep`'s recovery column;
+/// pinned in `netsim::topology` and `figures::sim` tests).
+pub fn outer_event_recovery_secs(s: &SimSetup, failures: Option<FailureSpec>) -> f64 {
+    let nodes = s.world.div_ceil(s.cluster.gpus_per_node).max(1);
+    let mut topo = s.fabric.lower(s.cluster, nodes);
+    if let Some(f) = failures {
+        topo = topo.with_failures(f);
+    }
+    let v = 4.0 * s.model.n_params() as f64 * s.sync_fraction.clamp(0.0, 1.0);
+    topo.des_outer_makespan(s.dp(), s.tp * s.pp, v)
 }
 
 /// Simulate the full run (§VI-B1's weighted average: `p·T` lazy-start

@@ -102,6 +102,35 @@ impl Json {
     pub fn str(s: &str) -> Json {
         Json::Str(s.to_string())
     }
+
+    // -- exact integers ---------------------------------------------------
+
+    /// Encode a `u64` exactly: a plain JSON number while the value fits
+    /// the f64-exact integer range (≤ 2^53), a decimal string above it.
+    /// The checkpoint headers use this for step counters and PRNG state
+    /// words, where a silent `as f64` rounding would corrupt a resume.
+    pub fn exact_u64(x: u64) -> Json {
+        if x <= (1u64 << 53) {
+            Json::num(x as f64)
+        } else {
+            Json::str(&x.to_string())
+        }
+    }
+
+    /// Decode [`Json::exact_u64`]: an integral non-negative number within
+    /// the f64-exact range, or a decimal string. `None` for anything that
+    /// cannot round-trip losslessly (non-integral, negative, a number
+    /// above 2^53) — loaders treat that as corruption, not as data.
+    pub fn as_exact_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(x) => {
+                (x.fract() == 0.0 && *x >= 0.0 && *x <= (1u64 << 53) as f64)
+                    .then(|| *x as u64)
+            }
+            Json::Str(s) => s.parse::<u64>().ok(),
+            _ => None,
+        }
+    }
 }
 
 impl fmt::Display for Json {
@@ -409,5 +438,27 @@ mod tests {
     fn integers_serialize_without_fraction() {
         assert_eq!(Json::Num(512.0).to_string(), "512");
         assert_eq!(Json::Num(0.5).to_string(), "0.5");
+    }
+
+    #[test]
+    fn exact_u64_roundtrips_the_full_range() {
+        for x in [0u64, 1, (1 << 53) - 1, 1 << 53, (1 << 53) + 1, u64::MAX] {
+            let j = Json::exact_u64(x);
+            // The wire form must survive serialize → parse unchanged.
+            let j2 = Json::parse(&j.to_string()).unwrap();
+            assert_eq!(j2.as_exact_u64(), Some(x), "x={x}");
+        }
+        // Values past 2^53 take the string form (a number would be lossy).
+        assert!(matches!(Json::exact_u64(u64::MAX), Json::Str(_)));
+    }
+
+    #[test]
+    fn exact_u64_rejects_lossy_forms() {
+        assert_eq!(Json::Num(1.5).as_exact_u64(), None);
+        assert_eq!(Json::Num(-1.0).as_exact_u64(), None);
+        assert_eq!(Json::Num(1e19).as_exact_u64(), None);
+        assert_eq!(Json::str("12x").as_exact_u64(), None);
+        assert_eq!(Json::str("-3").as_exact_u64(), None);
+        assert_eq!(Json::Null.as_exact_u64(), None);
     }
 }

@@ -1,0 +1,467 @@
+//! Checkpoint/resume bit-exactness (DESIGN.md §11).
+//!
+//! The tentpole contract: a run interrupted at iteration `t`, saved
+//! through the `pier-ckpt-v2` file format, and restored into freshly
+//! constructed state continues **bit-identically** to the uninterrupted
+//! run — losses, parameters, and the `CommStats` counters — across
+//! every relaxation axis (blocking, streaming, rotating partial sync,
+//! int8 compression) and `(groups, tp) ∈ {1, 2, 4} × {1, 2}`.
+//!
+//! The loop re-drives the trainer's Phase-B shape with the shared
+//! `pier::testing::oracle` substrate (as the other parity suites do),
+//! with a real `OuterController` doing the every-`H` sync and the real
+//! `CheckpointV2` writer/reader in the middle — the serialization is
+//! part of the round trip, not mocked. Also pinned here:
+//!
+//! * v1 checkpoints still load (`load_any`), and are refused by the
+//!   v2 resume reader with a real error, not garbage state;
+//! * truncated and header-corrupted v2 files are rejected at load;
+//! * a mid-run checkpoint carries the *real* outer state (momentum,
+//!   anchor) and the *completed* iteration count — the lossy-writer
+//!   bugs this PR fixes;
+//! * the quorum outer step: all-on-time is bit-identical to the
+//!   blocking sync, a straggler round leaves a late carry that drains
+//!   exactly one round later, and the dropout schedule replays
+//!   bit-identically.
+
+use std::path::PathBuf;
+
+use pier::config::{OptMode, OuterCompress, TrainConfig};
+use pier::coordinator::collective::CommStats;
+use pier::coordinator::{Checkpoint, CheckpointV2, GroupState, OuterController};
+use pier::testing::oracle::{inner_step, make_groups, target, ToyGroup};
+
+const N: usize = 53; // prime: no fragment or shard count divides it
+const ITERS: usize = 40;
+const H: usize = 8;
+const T_CUT: usize = 13; // mid-round, one partial rotation in (frag_cursor = 1)
+
+/// The relaxation axes the resume contract must hold across — each maps
+/// to the sync path the trainer would take under that config.
+#[derive(Clone, Copy, Debug)]
+enum Relax {
+    Blocking,
+    Streaming,
+    Partial,
+    Int8,
+}
+
+const AXES: [Relax; 4] = [Relax::Blocking, Relax::Streaming, Relax::Partial, Relax::Int8];
+
+fn cfg_for(r: Relax, k: usize, tp: usize, seed: u64) -> TrainConfig {
+    let mut cfg = TrainConfig::default_for(1000);
+    cfg.mode = OptMode::DiLoCo; // fixed outer schedule: runs differ only in path
+    cfg.sync_interval = H;
+    cfg.groups = k;
+    cfg.tp = tp;
+    cfg.gpus_per_node = 1; // one replica per node: int8 gets an inter-node hop at k > 1
+    cfg.seed = seed;
+    match r {
+        Relax::Blocking => {}
+        Relax::Streaming => cfg.stream_fragments = 2,
+        Relax::Partial => cfg.sync_fraction = 0.5,
+        Relax::Int8 => {
+            cfg.outer_compress = OuterCompress::Int8;
+            cfg.outer_quant_block = 16;
+        }
+    }
+    cfg
+}
+
+/// The live state a resume must reconstruct: groups + controller + stats.
+struct ToyState {
+    groups: Vec<ToyGroup>,
+    ctl: OuterController,
+    stats: CommStats,
+}
+
+fn fresh(cfg: &TrainConfig) -> ToyState {
+    let groups = make_groups(N, cfg.groups, cfg.seed);
+    let ctl = OuterController::new(cfg, &groups[0].params);
+    ToyState { groups, ctl, stats: CommStats::default() }
+}
+
+/// Advance iterations `[from, to)` — inner steps every iteration, the
+/// config-selected outer sync path at every `H` boundary (the trainer's
+/// dispatch: partial when `sync_fraction < 1`, streaming when
+/// `stream_fragments >= 1`, else the blocking path, which under int8
+/// routes through the compressed fragment core).
+fn advance(st: &mut ToyState, cfg: &TrainConfig, from: usize, to: usize, losses: &mut Vec<u64>) {
+    let tgt = target(N);
+    for t in from..to {
+        let mut sum = 0.0;
+        for g in st.groups.iter_mut() {
+            let (loss, _) = inner_step(g, &tgt, cfg.tp);
+            sum += loss;
+        }
+        losses.push(sum.to_bits());
+        if (t + 1) % H == 0 {
+            let refs: Vec<&[f32]> = st.groups.iter().map(|g| g.params.as_slice()).collect();
+            if cfg.sync_fraction < 1.0 {
+                let part = st.ctl.sync_partial(t + 1, &refs, &mut st.stats);
+                for g in st.groups.iter_mut() {
+                    g.params[part.lo..part.hi].copy_from_slice(&part.fragment);
+                }
+            } else {
+                let next: Vec<f32> = if cfg.stream_fragments >= 1 {
+                    st.ctl.sync_streaming(t + 1, &refs, &mut st.stats).to_vec()
+                } else {
+                    st.ctl.sync_in_place(t + 1, &refs, &mut st.stats).to_vec()
+                };
+                for g in st.groups.iter_mut() {
+                    g.params.copy_from_slice(&next);
+                }
+            }
+        }
+    }
+}
+
+/// Snapshot the live state into the v2 checkpoint — the same mapping
+/// `Trainer::checkpoint` performs (group flats + Adam moments + sampler
+/// PRNG words; the controller's exported cross-round state; the stats).
+fn snapshot(st: &ToyState, cfg: &TrainConfig, iteration: usize) -> CheckpointV2 {
+    CheckpointV2 {
+        model: "toy".into(),
+        mode: cfg.mode.name().into(),
+        seed: cfg.seed,
+        iteration,
+        groups: st
+            .groups
+            .iter()
+            .map(|g| {
+                let (rng_hi, rng_lo) = g.rng.state_words();
+                GroupState {
+                    params: g.params.clone(),
+                    m: g.opt.m.clone(),
+                    v: g.opt.v.clone(),
+                    adam_t: g.opt.step,
+                    rng_hi,
+                    rng_lo,
+                }
+            })
+            .collect(),
+        outer: Some(st.ctl.export_state()),
+        comm: st.stats.clone(),
+    }
+}
+
+/// Rebuild live state from a loaded checkpoint — fresh construction (as a
+/// restarted process would do) plus the restore calls.
+fn restore(ckpt: &CheckpointV2, cfg: &TrainConfig) -> ToyState {
+    let mut groups = make_groups(N, ckpt.groups.len(), cfg.seed);
+    for (g, gs) in groups.iter_mut().zip(&ckpt.groups) {
+        g.params.copy_from_slice(&gs.params);
+        g.opt.m.copy_from_slice(&gs.m);
+        g.opt.v.copy_from_slice(&gs.v);
+        g.opt.step = gs.adam_t;
+        g.rng.set_state_words(gs.rng_hi, gs.rng_lo);
+    }
+    let mut ctl = OuterController::new(cfg, &groups[0].params);
+    ctl.restore_state(ckpt.outer.as_ref().expect("toy snapshots always carry outer state"))
+        .expect("restore into a same-shape controller");
+    ToyState { groups, ctl, stats: ckpt.comm.clone() }
+}
+
+fn params_bits(groups: &[ToyGroup]) -> Vec<Vec<u32>> {
+    groups.iter().map(|g| g.params.iter().map(|x| x.to_bits()).collect()).collect()
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("pier-resume-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Interrupt at `cut`, round-trip through the file format, and continue;
+/// returns (pre-cut losses, post-cut losses, final params, final stats).
+#[allow(clippy::type_complexity)]
+fn interrupted_run(
+    cfg: &TrainConfig,
+    cut: usize,
+    path: &std::path::Path,
+) -> (Vec<u64>, Vec<u64>, Vec<Vec<u32>>, CommStats) {
+    let mut a = fresh(cfg);
+    let mut pre = Vec::new();
+    advance(&mut a, cfg, 0, cut, &mut pre);
+    snapshot(&a, cfg, cut).save(path).unwrap();
+    drop(a); // the resumed process has nothing but the file
+    let loaded = CheckpointV2::load(path).unwrap();
+    assert_eq!(loaded.iteration, cut, "checkpoint must record the completed count");
+    let mut b = restore(&loaded, cfg);
+    let mut post = Vec::new();
+    advance(&mut b, cfg, cut, ITERS, &mut post);
+    (pre, post, params_bits(&b.groups), b.stats)
+}
+
+#[test]
+fn resume_is_bit_identical_across_relaxation_and_layout_grid() {
+    let dir = tmp("grid");
+    for k in [1usize, 2, 4] {
+        for tp in [1usize, 2] {
+            for r in AXES {
+                let cfg = cfg_for(r, k, tp, 1234);
+                let mut full = fresh(&cfg);
+                let mut full_losses = Vec::new();
+                advance(&mut full, &cfg, 0, ITERS, &mut full_losses);
+
+                let path = dir.join(format!("{r:?}-k{k}-tp{tp}.ckpt"));
+                let (pre, post, final_params, final_stats) = interrupted_run(&cfg, T_CUT, &path);
+
+                assert_eq!(&full_losses[..T_CUT], &pre[..], "k={k} tp={tp} {r:?}: pre-cut");
+                assert_eq!(
+                    &full_losses[T_CUT..],
+                    &post[..],
+                    "k={k} tp={tp} {r:?}: resumed loss trajectory diverged"
+                );
+                assert_eq!(
+                    params_bits(&full.groups),
+                    final_params,
+                    "k={k} tp={tp} {r:?}: final params diverged"
+                );
+                assert_eq!(
+                    full.stats, final_stats,
+                    "k={k} tp={tp} {r:?}: CommStats diverged across the resume"
+                );
+            }
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn resume_is_exact_at_sync_boundaries_and_mid_round() {
+    // The partial axis keeps cross-round state in the fragment cursor and
+    // the int8 axis in the error-feedback residuals — cut right on a sync
+    // boundary (8, 16), mid-round (13), and one step before the end (39).
+    let dir = tmp("cuts");
+    for r in [Relax::Partial, Relax::Int8] {
+        let cfg = cfg_for(r, 4, 1, 77);
+        let mut full = fresh(&cfg);
+        let mut full_losses = Vec::new();
+        advance(&mut full, &cfg, 0, ITERS, &mut full_losses);
+        for cut in [8usize, 13, 16, 39] {
+            let path = dir.join(format!("{r:?}-cut{cut}.ckpt"));
+            let (_, post, final_params, final_stats) = interrupted_run(&cfg, cut, &path);
+            assert_eq!(&full_losses[cut..], &post[..], "{r:?} cut={cut}: losses");
+            assert_eq!(params_bits(&full.groups), final_params, "{r:?} cut={cut}: params");
+            assert_eq!(full.stats, final_stats, "{r:?} cut={cut}: stats");
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn resume_run_is_seed_sensitive() {
+    // Guard against vacuous parity: a different seed must diverge.
+    let ca = cfg_for(Relax::Blocking, 2, 1, 1);
+    let cb = cfg_for(Relax::Blocking, 2, 1, 2);
+    let (mut a, mut b) = (fresh(&ca), fresh(&cb));
+    let (mut la, mut lb) = (Vec::new(), Vec::new());
+    advance(&mut a, &ca, 0, ITERS, &mut la);
+    advance(&mut b, &cb, 0, ITERS, &mut lb);
+    assert_ne!(la, lb);
+}
+
+#[test]
+fn checkpoint_carries_real_outer_state_and_completed_count() {
+    // The bugs this PR fixes: the old writer stored empty outer vectors
+    // and `cfg.iterations` instead of the completed count.
+    let cfg = cfg_for(Relax::Blocking, 2, 1, 9);
+    let mut st = fresh(&cfg);
+    let mut losses = Vec::new();
+    advance(&mut st, &cfg, 0, 20, &mut losses); // two syncs in
+    let ckpt = snapshot(&st, &cfg, 20);
+    let outer = ckpt.outer.as_ref().unwrap();
+    assert_eq!(outer.momentum.len(), N, "momentum must be full-model length");
+    assert!(outer.momentum.iter().any(|&x| x != 0.0), "momentum must be live after syncs");
+    assert!(outer.anchor.iter().any(|&x| x != 0.0), "anchor must track the synced params");
+    assert_eq!(outer.outer_steps, 2);
+    assert_eq!(ckpt.iteration, 20, "completed count, not cfg.iterations");
+    assert_ne!(ckpt.iteration, cfg.iterations);
+}
+
+#[test]
+fn v1_checkpoints_still_load_and_are_refused_for_resume() {
+    use pier::coordinator::{load_any, AnyCheckpoint};
+    let dir = tmp("v1");
+    let path = dir.join("old.ckpt");
+    let v1 = Checkpoint {
+        model: "toy".into(),
+        mode: "pier".into(),
+        iteration: 7,
+        adam_t: 7,
+        params: (0..N).map(|i| i as f32 * 0.5).collect(),
+        m: vec![0.1; N],
+        v: vec![0.2; N],
+        outer_momentum: vec![0.3; N],
+        outer_anchor: vec![0.4; N],
+    };
+    v1.save(&path).unwrap();
+    match load_any(&path).unwrap() {
+        AnyCheckpoint::V1(c) => assert_eq!(c, v1),
+        AnyCheckpoint::V2(_) => panic!("v1 magic must dispatch to the v1 reader"),
+    }
+    // The resume reader must refuse it with a real error, not garbage.
+    let err = CheckpointV2::load(&path).unwrap_err().to_string();
+    assert!(err.contains("v1"), "unexpected error: {err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn corrupt_v2_files_are_rejected_at_load() {
+    let dir = tmp("fuzz");
+    let path = dir.join("c.ckpt");
+    let cfg = cfg_for(Relax::Int8, 2, 1, 5);
+    let mut st = fresh(&cfg);
+    let mut losses = Vec::new();
+    advance(&mut st, &cfg, 0, T_CUT, &mut losses);
+    snapshot(&st, &cfg, T_CUT).save(&path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    let header_end = bytes.iter().position(|&b| b == b'\n').unwrap() + 1;
+    // truncations: inside the header, at the body start, mid-body, end-4
+    let mid_body = (header_end + bytes.len()) / 2;
+    for cut in [3usize, header_end - 2, header_end, mid_body, bytes.len() - 4] {
+        std::fs::write(&path, &bytes[..cut]).unwrap();
+        assert!(CheckpointV2::load(&path).is_err(), "truncation at {cut} must fail");
+    }
+    // trailing garbage
+    let mut fat = bytes.clone();
+    fat.extend_from_slice(&[0xAB; 6]);
+    std::fs::write(&path, &fat).unwrap();
+    assert!(CheckpointV2::load(&path).is_err());
+    // header bit-rot: mangle the magic, keep the body
+    let mut rot = bytes.clone();
+    rot[2] ^= 0x20;
+    std::fs::write(&path, &rot).unwrap();
+    assert!(CheckpointV2::load(&path).is_err());
+    // the pristine bytes still load (the fuzz harness itself is sound)
+    std::fs::write(&path, &bytes).unwrap();
+    assert!(CheckpointV2::load(&path).is_ok());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ------------------------------------------------------------- quorum sync
+
+/// Drive the toy loop through `sync_quorum` with a per-sync on-time mask.
+#[allow(clippy::type_complexity)]
+fn quorum_run(cfg: &TrainConfig, late: &[(usize, usize)]) -> (Vec<u64>, Vec<Vec<u32>>, Vec<bool>) {
+    let tgt = target(N);
+    let mut st = fresh(cfg);
+    let mut losses = Vec::new();
+    let mut carry_after = Vec::new();
+    for t in 0..ITERS {
+        let mut sum = 0.0;
+        for g in st.groups.iter_mut() {
+            let (loss, _) = inner_step(g, &tgt, cfg.tp);
+            sum += loss;
+        }
+        losses.push(sum.to_bits());
+        if (t + 1) % H == 0 {
+            let mut on_time = vec![true; cfg.groups];
+            for &(step, gi) in late {
+                if step == t + 1 {
+                    on_time[gi] = false;
+                }
+            }
+            let refs: Vec<&[f32]> = st.groups.iter().map(|g| g.params.as_slice()).collect();
+            let next = st.ctl.sync_quorum(t + 1, &refs, &on_time, &mut st.stats).to_vec();
+            for g in st.groups.iter_mut() {
+                g.params.copy_from_slice(&next);
+            }
+            carry_after.push(st.ctl.has_late_carry());
+        }
+    }
+    (losses, params_bits(&st.groups), carry_after)
+}
+
+#[test]
+fn quorum_all_on_time_is_bit_identical_to_blocking() {
+    let cfg = cfg_for(Relax::Blocking, 4, 1, 42);
+    let mut blocking = fresh(&cfg);
+    let mut bl = Vec::new();
+    advance(&mut blocking, &cfg, 0, ITERS, &mut bl);
+    let (ql, qp, carry) = quorum_run(&cfg, &[]);
+    assert_eq!(bl, ql, "all-on-time quorum must not change the math");
+    assert_eq!(params_bits(&blocking.groups), qp);
+    assert!(carry.iter().all(|&c| !c), "no stragglers, no carry");
+}
+
+#[test]
+fn quorum_dropout_is_deterministic_and_drains_the_late_carry() {
+    let cfg = cfg_for(Relax::Blocking, 4, 1, 42);
+    // group 3 straggles at the t=16 sync, everyone on time otherwise
+    let late = [(16usize, 3usize)];
+    let a = quorum_run(&cfg, &late);
+    let b = quorum_run(&cfg, &late);
+    assert_eq!(a, b, "the dropout schedule must replay bit-identically");
+    // syncs land at 8, 16, 24, 32, 40: the straggler's delta is carried
+    // out of the 16-sync and folded into the 24-sync, then gone.
+    assert_eq!(a.2, vec![false, true, false, false, false]);
+    // and the relaxation is not vacuous: the trajectory actually moved
+    let (full_losses, full_params, _) = quorum_run(&cfg, &[]);
+    assert_ne!(a.0, full_losses);
+    assert_ne!(a.1, full_params);
+}
+
+// ---------------------------------------------------------------- gated e2e
+
+/// Real-trainer resume parity (skips without `make artifacts`): run 30
+/// iterations uninterrupted; run a second trainer to iteration 15, save a
+/// v2 checkpoint, restore it into a *third* freshly built trainer, finish
+/// the run, and require the tail losses, final group/outer state, and
+/// CommStats to match bit for bit.
+#[test]
+fn trainer_resume_matches_uninterrupted_end_to_end() {
+    use pier::coordinator::Trainer;
+    use pier::figures::{figure_cfg, pipeline_for};
+    use pier::runtime::{load_manifest, Runtime};
+
+    let man = match load_manifest("nano") {
+        Ok(m) => m,
+        Err(_) => {
+            eprintln!("SKIP: nano artifacts missing (run `make artifacts`)");
+            return;
+        }
+    };
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let pipe = pipeline_for(&man, 11);
+    let mk_cfg = || {
+        let mut cfg = figure_cfg(OptMode::Pier, 30, 2);
+        cfg.global_batch = 16;
+        cfg.eval_interval = 0;
+        cfg
+    };
+
+    let mut full = Trainer::new(&rt, man.clone(), mk_cfg(), &pipe).unwrap();
+    full.run().unwrap();
+
+    let mut a = Trainer::new(&rt, man.clone(), mk_cfg(), &pipe).unwrap();
+    a.run_until(15).unwrap();
+    let ckpt = a.checkpoint().unwrap();
+    assert_eq!(ckpt.iteration, 15);
+    let outer = ckpt.outer.as_ref().expect("pier checkpoint must carry outer state");
+    assert_eq!(outer.momentum.len(), ckpt.groups[0].params.len());
+    assert!(outer.anchor.iter().any(|&x| x != 0.0), "anchor must be the real state");
+
+    let dir = tmp("e2e");
+    let path = dir.join("mid.ckpt");
+    ckpt.save(&path).unwrap();
+    drop(a);
+
+    let loaded = CheckpointV2::load(&path).unwrap();
+    let mut b = Trainer::new(&rt, man.clone(), mk_cfg(), &pipe).unwrap();
+    b.restore(&loaded).unwrap();
+    assert_eq!(b.completed_iterations(), 15);
+    b.run().unwrap();
+
+    let tail: Vec<u64> = b.log.iters.iter().map(|r| r.loss.to_bits()).collect();
+    let full_tail: Vec<u64> = full.log.iters[15..].iter().map(|r| r.loss.to_bits()).collect();
+    assert_eq!(full_tail, tail, "resumed run must replay the uninterrupted tail bit for bit");
+
+    let fin_full = full.checkpoint().unwrap();
+    let fin_b = b.checkpoint().unwrap();
+    assert_eq!(fin_full.groups, fin_b.groups, "final per-group state diverged");
+    assert_eq!(fin_full.outer, fin_b.outer, "final outer state diverged");
+    assert_eq!(fin_full.comm, fin_b.comm, "final CommStats diverged");
+    std::fs::remove_dir_all(&dir).ok();
+}
