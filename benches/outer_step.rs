@@ -7,7 +7,8 @@
 //! vectors per call at the controller layer alone), the in-place path the
 //! trainer uses for blocking syncs (`sync_in_place`, zero full-model
 //! allocations; reductions and the Nesterov update are span-parallel),
-//! its tp=4 per-shard variant, and the streaming fragment schedule
+//! its tp=4 and tp=2×pp=2 (DP×TP×PP) per-shard variants, and the
+//! streaming fragment schedule
 //! (`sync_streaming`, DESIGN.md §8 — bit-identical result, fragmented
 //! all-reduces).
 //!
@@ -119,6 +120,24 @@ fn main() {
         let r = bench_quick(&format!("outer_sync_in_place_tp4/micro-3.2M/{k}groups"), || {
             let refs: Vec<&[f32]> = groups.iter().map(|g| g.as_slice()).collect();
             let next = ctl_tp.sync_in_place(500, &refs, &mut stats_tp);
+            std::hint::black_box(next.len());
+        });
+        println!("{}", r.report_throughput((n * k) as f64, "param"));
+        snap(&mut rows, &r, (n * k) as f64, "param/s");
+
+        // DP×TP×PP layout (DESIGN.md §12): tp=2 per-shard all-reduces
+        // under a pp=2 pipeline split — the replica width tp·pp = 4 routes
+        // the hierarchical clique packing (`shards_per_replica()`), while
+        // the executed sync math stays bit-identical. Gated under the
+        // `outer_sync_in_place*` family.
+        let mut cfg_pp = cfg.clone();
+        cfg_pp.tp = 2;
+        cfg_pp.pp = 2;
+        let mut ctl_pp = OuterController::new(&cfg_pp, &groups[0]);
+        let mut stats_pp = CommStats::default();
+        let r = bench_quick(&format!("outer_sync_in_place_pp2/micro-3.2M/{k}groups"), || {
+            let refs: Vec<&[f32]> = groups.iter().map(|g| g.as_slice()).collect();
+            let next = ctl_pp.sync_in_place(500, &refs, &mut stats_pp);
             std::hint::black_box(next.len());
         });
         println!("{}", r.report_throughput((n * k) as f64, "param"));

@@ -42,7 +42,7 @@ cargo bench --no-run
 echo "==> tier-1: cargo test -q"
 cargo test -q
 
-# Scenario-engine smoke: the 24-row sweep grid must run end to end and
+# Scenario-engine smoke: the 48-row sweep grid must run end to end and
 # emit the Pareto JSON on both thread legs (routing is deterministic
 # across PIER_THREADS — pinned by the property suite). The threads=4
 # workflow leg uploads the JSON as an artifact.
@@ -55,19 +55,23 @@ test -s sweep_pareto.json
 # regardless of which leg the ambient PIER_THREADS selects (DESIGN.md §9).
 # The resume-parity suite rides the same legs: checkpoint/restore must be
 # bit-exact under both the serial and the pooled group schedule
-# (DESIGN.md §11). The ambient leg already ran both in `cargo test -q`
-# above — run only the schedules the ambient *effective* thread count
-# (env override, else the detected core count, mirroring
+# (DESIGN.md §11). The pipeline-parity suite does too: the pp layout is
+# pure data movement, so its bit contracts must hold on every thread
+# schedule (DESIGN.md §12). The ambient leg already ran all three in
+# `cargo test -q` above — run only the schedules the ambient *effective*
+# thread count (env override, else the detected core count, mirroring
 # util::par::max_threads) did not cover.
 ambient_threads="${PIER_THREADS:-$(nproc 2>/dev/null || echo 0)}"
-echo "==> property + resume-parity suites under the uncovered thread schedules (ambient: ${ambient_threads})"
+echo "==> property + resume-parity + pipeline-parity suites under the uncovered thread schedules (ambient: ${ambient_threads})"
 if [[ "${ambient_threads}" != "1" ]]; then
   PIER_THREADS=1 cargo test -q --test properties
   PIER_THREADS=1 cargo test -q --test resume_parity
+  PIER_THREADS=1 cargo test -q --test pipeline_parity
 fi
 if [[ "${ambient_threads}" != "4" ]]; then
   PIER_THREADS=4 cargo test -q --test properties
   PIER_THREADS=4 cargo test -q --test resume_parity
+  PIER_THREADS=4 cargo test -q --test pipeline_parity
 fi
 
 if [[ "${RUN_BENCH:-0}" == "1" ]]; then

@@ -220,6 +220,11 @@ mod tests {
         assert_eq!(outer_cliques(5, 2, 4), (2, 3));
         assert_eq!(outer_cliques(1, 1, 4), (1, 1));
         assert_eq!(outer_cliques(8, 1, 1), (1, 8)); // Vista shape
+        // shards_per_replica = tp·pp: a 2×2 (TP×PP) replica fills a 4-GPU
+        // node, so every replica is its own leader — the pp>1 regression
+        // for the `cfg.shards_per_replica()` routing (DESIGN.md §12).
+        assert_eq!(outer_cliques(8, 2 * 2, 4), (1, 8));
+        assert_eq!(outer_cliques(8, 2 * 1, 4), (2, 4)); // tp=2, pp=1 baseline
         for (dp, sh, gpn) in [(8usize, 1usize, 4usize), (7, 2, 4), (16, 4, 4), (9, 1, 1)] {
             let (clique, nodes) = outer_cliques(dp, sh, gpn);
             assert!(clique >= 1 && nodes >= 1);

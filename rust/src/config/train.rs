@@ -111,6 +111,14 @@ pub struct TrainConfig {
     /// per-shard all-reduces. `tp = 1` is the pure-DP layout and is
     /// bit-identical to the pre-TP trainer.
     pub tp: usize,
+    /// Pipeline-parallel degree (§IV-C; DESIGN.md §12). Each replica's
+    /// layers are span-sharded over `pp` stages (the balanced
+    /// `collective::fragment_span` partition) and micro-batches run the
+    /// 1F1B schedule; stage-boundary activation/grad traffic is executed
+    /// as deterministic P2P copies and accounted in the `CommStats` P2P
+    /// scope. `pp = 1` is the pure DP×TP layout and is bit-identical to
+    /// the pre-PP trainer; `pp > 1` is pure data movement.
+    pub pp: usize,
     /// GPUs per modeled compute node (Perlmutter: 4, Vista: 1) — fixes
     /// which links the TP collectives ride when the schedule is costed.
     pub gpus_per_node: usize,
@@ -191,6 +199,7 @@ impl TrainConfig {
             global_batch: 32,
             groups: 8,
             tp: 1,
+            pp: 1,
             gpus_per_node: 4,
             sync_interval: 50,
             warmup_pct: 0.10,
@@ -225,6 +234,8 @@ impl TrainConfig {
     /// intra-group data parallelism is folded into gradient accumulation
     /// over the group's micro-batches — so the executed topology has
     /// `dp = groups`, with each replica span-sharded over `tp` ranks.
+    /// The pipeline axis multiplies the replica width on top of this
+    /// layout; placement checks use [`TrainConfig::shards_per_replica`].
     pub fn parallel(&self) -> ParallelConfig {
         ParallelConfig {
             dp: self.groups.max(1),
@@ -232,6 +243,15 @@ impl TrainConfig {
             groups: self.groups.max(1),
             gpus_per_node: self.gpus_per_node.max(1),
         }
+    }
+
+    /// Model-parallel shards per DP replica — the `tp·pp` width every
+    /// clique/placement derivation must use
+    /// ([`crate::config::outer_cliques`]'s `shards_per_replica` argument).
+    /// Single-sourced here so the executed collective, the cost models,
+    /// and the sweep grid cannot drift on which axes widen a replica.
+    pub fn shards_per_replica(&self) -> usize {
+        self.tp.max(1) * self.pp.max(1)
     }
 
     /// Per-group batch (DiLoCo/Pier inner loop).
@@ -253,6 +273,7 @@ impl TrainConfig {
             ("global_batch", Json::num(self.global_batch as f64)),
             ("groups", Json::num(self.groups as f64)),
             ("tp", Json::num(self.tp as f64)),
+            ("pp", Json::num(self.pp as f64)),
             ("gpus_per_node", Json::num(self.gpus_per_node as f64)),
             ("sync_interval", Json::num(self.sync_interval as f64)),
             ("warmup_pct", Json::num(self.warmup_pct)),
@@ -288,6 +309,8 @@ impl TrainConfig {
         c.global_batch = j.get("global_batch")?.as_usize()?;
         c.groups = j.get("groups")?.as_usize()?;
         c.tp = j.get("tp").and_then(Json::as_usize).unwrap_or(1);
+        // Pre-PP configs (no "pp" key) keep loading on the pp=1 paths.
+        c.pp = j.get("pp").and_then(Json::as_usize).unwrap_or(1);
         c.gpus_per_node = j.get("gpus_per_node").and_then(Json::as_usize).unwrap_or(4);
         c.sync_interval = j.get("sync_interval")?.as_usize()?;
         c.warmup_pct = j.get("warmup_pct")?.as_f64()?;
@@ -356,6 +379,7 @@ mod tests {
         c.cpu_offload = true;
         c.nesterov = NesterovKind::Theoretical;
         c.tp = 2;
+        c.pp = 2;
         c.gpus_per_node = 1;
         c.stream_fragments = 4;
         let j = c.to_json();
@@ -365,6 +389,7 @@ mod tests {
         assert_eq!(c2.nesterov, NesterovKind::Theoretical);
         assert_eq!(c2.iterations, 500);
         assert_eq!(c2.tp, 2);
+        assert_eq!(c2.pp, 2);
         assert_eq!(c2.gpus_per_node, 1);
         assert_eq!(c2.stream_fragments, 4);
     }
@@ -426,6 +451,26 @@ mod tests {
         let c2 = TrainConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
         assert_eq!(c2.tp, 1);
         assert_eq!(c2.gpus_per_node, 4);
+    }
+
+    #[test]
+    fn json_without_pp_defaults_to_1() {
+        // Pre-PP configs (no "pp" key) must keep loading on pp = 1.
+        let c = TrainConfig::default_for(100);
+        let j = c.to_json().to_string().replace("\"pp\":1,", "");
+        let c2 = TrainConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(c2.pp, 1);
+    }
+
+    #[test]
+    fn shards_per_replica_is_tp_times_pp() {
+        let mut c = TrainConfig::default_for(100);
+        assert_eq!(c.shards_per_replica(), 1);
+        c.tp = 2;
+        c.pp = 4;
+        assert_eq!(c.shards_per_replica(), 8);
+        c.pp = 0; // degenerate inputs clamp to 1
+        assert_eq!(c.shards_per_replica(), 2);
     }
 
     #[test]

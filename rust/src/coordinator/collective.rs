@@ -96,6 +96,14 @@ pub struct CommStats {
     /// Intra-node TP scope: per-step gradient reduce-scatters (bf16).
     pub tp_reduce_scatter_calls: u64,
     pub tp_reduce_scatter_bytes: f64,
+    /// Pipeline P2P scope (DESIGN.md §12): per-step stage-boundary
+    /// send/recv pairs of the 1F1B schedule — activation slabs forward,
+    /// activation-grad slabs backward, one pair per micro-batch per
+    /// boundary. Stage boundaries usually cross nodes in the Megatron
+    /// placement (TP fills the node first), so this scope rides the
+    /// fabric, not NVLink; 0 for `pp = 1`.
+    pub pp_send_calls: u64,
+    pub pp_bytes: f64,
 }
 
 impl CommStats {
@@ -105,6 +113,7 @@ impl CommStats {
             + self.gather_bytes
             + self.broadcast_bytes
             + self.intra_node_bytes()
+            + self.pp_bytes
     }
 
     /// Bytes that stay on intra-node links under the Megatron placement —
@@ -172,12 +181,17 @@ impl CommStats {
             ("tp_allgather_bytes", Json::num(self.tp_allgather_bytes)),
             ("tp_reduce_scatter_calls", Json::exact_u64(self.tp_reduce_scatter_calls)),
             ("tp_reduce_scatter_bytes", Json::num(self.tp_reduce_scatter_bytes)),
+            ("pp_send_calls", Json::exact_u64(self.pp_send_calls)),
+            ("pp_bytes", Json::num(self.pp_bytes)),
         ])
     }
 
     /// Decode [`CommStats::to_json`]. Every field is required and must be
     /// losslessly typed — a checkpoint with a missing or non-integral
-    /// counter is corrupt, not defaultable.
+    /// counter is corrupt, not defaultable. Exception: the pipeline P2P
+    /// scope, which post-dates the v2 format — pre-PP checkpoints (no
+    /// `pp_*` keys) decode with the scope at zero, exactly what a `pp = 1`
+    /// run would have recorded.
     pub fn from_json(j: &Json) -> Option<CommStats> {
         let u = |key: &str| j.get(key)?.as_exact_u64();
         let f = |key: &str| j.get(key)?.as_f64();
@@ -199,6 +213,8 @@ impl CommStats {
             tp_allgather_bytes: f("tp_allgather_bytes")?,
             tp_reduce_scatter_calls: u("tp_reduce_scatter_calls")?,
             tp_reduce_scatter_bytes: f("tp_reduce_scatter_bytes")?,
+            pp_send_calls: j.get("pp_send_calls").and_then(Json::as_exact_u64).unwrap_or(0),
+            pp_bytes: j.get("pp_bytes").and_then(Json::as_f64).unwrap_or(0.0),
         })
     }
 }
@@ -580,6 +596,43 @@ pub fn note_tp_step(n_params: usize, tp: usize, stats: &mut CommStats) {
     stats.tp_allgather_bytes += bytes;
     stats.tp_reduce_scatter_calls += 1;
     stats.tp_reduce_scatter_bytes += bytes;
+}
+
+// ---------------------------------------------------------------- PP scope
+
+/// Executed in-process pipeline P2P primitive (DESIGN.md §12): one
+/// stage-boundary send/recv — the sender's contiguous slab lands bit-for-
+/// bit in the receiver's buffer. This is the whole collective: P2P has no
+/// reduction, so it is bit-transparent by construction, which is what
+/// makes the pp axis pure data movement over the single host computation
+/// (the 1F1B schedule's activation-forward and grad-backward hops both
+/// route through here; `rust/tests/pipeline_parity.rs` pins the
+/// transparency). Pure movement, no accounting — per-step volumes are
+/// recorded by [`note_pp_step`], mirroring the TP scope's split between
+/// executed collectives and logical accounting.
+pub fn pp_send_recv_into(src: &[f32], dst: &mut [f32]) {
+    assert_eq!(src.len(), dst.len(), "pp_send_recv_into: slab length mismatch");
+    dst.copy_from_slice(src);
+}
+
+/// Pipeline P2P accounting for one inner training step of one replica
+/// (DESIGN.md §12): under the 1F1B schedule each of the `pp − 1` stage
+/// boundaries carries every micro-batch's activation slab forward and its
+/// activation-grad slab backward (bf16, like the TP scope's payloads).
+/// The slab is proxied by the boundary-owning stage spans of the flat
+/// model — `Σ spans = n·(pp−1)/pp` — the same parameter-based convention
+/// [`note_tp_step`] uses, so the two model-parallel scopes stay
+/// comparable. Logical payloads; the netsim prices the routed P2P hops.
+/// No-op for `pp = 1`.
+pub fn note_pp_step(n_params: usize, pp: usize, n_micro: usize, stats: &mut CommStats) {
+    if pp <= 1 {
+        return;
+    }
+    let m = n_micro.max(1) as u64;
+    let frac = (pp - 1) as f64 / pp as f64;
+    let slab = 2.0 * n_params as f64 * frac; // bf16, all boundaries of one direction
+    stats.pp_send_calls += 2 * (pp as u64 - 1) * m; // fwd + bwd per boundary per micro
+    stats.pp_bytes += 2.0 * slab * m as f64;
 }
 
 #[cfg(test)]
@@ -1007,5 +1060,53 @@ mod tests {
         assert_eq!(stats.total_bytes(), 300.0);
         assert_eq!(stats.tp_allgather_calls, 1);
         assert_eq!(stats.tp_reduce_scatter_calls, 1);
+    }
+
+    #[test]
+    fn pp_send_recv_is_a_bit_exact_copy() {
+        let src: Vec<f32> = (0..257).map(|i| (i as f32 * 0.37).sin()).collect();
+        let mut dst = vec![9.0f32; 257];
+        pp_send_recv_into(&src, &mut dst);
+        let sb: Vec<u32> = src.iter().map(|x| x.to_bits()).collect();
+        let db: Vec<u32> = dst.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(sb, db);
+    }
+
+    #[test]
+    #[should_panic]
+    fn pp_send_recv_rejects_mismatched_slabs() {
+        pp_send_recv_into(&[1.0, 2.0], &mut [0.0]);
+    }
+
+    #[test]
+    fn note_pp_step_scope_accounting() {
+        let mut stats = CommStats::default();
+        note_pp_step(100, 1, 4, &mut stats); // pp=1: no boundaries
+        assert_eq!(stats, CommStats::default());
+        note_pp_step(100, 4, 8, &mut stats);
+        // bf16 slab × (pp−1)/pp per direction, 2 directions, 8 micros
+        assert_eq!(stats.pp_bytes, 2.0 * (2.0 * 100.0 * 0.75) * 8.0);
+        assert_eq!(stats.pp_send_calls, 2 * 3 * 8);
+        // P2P rides the fabric, not NVLink: its own scope in the total
+        assert_eq!(stats.intra_node_bytes(), 0.0);
+        assert_eq!(stats.total_bytes(), stats.pp_bytes);
+    }
+
+    #[test]
+    fn comm_stats_json_roundtrips_the_pp_scope_and_defaults_it() {
+        let mut stats = CommStats::default();
+        note_pp_step(64, 2, 2, &mut stats);
+        note_tp_step(64, 2, &mut stats);
+        let j = stats.to_json().to_string();
+        let back = CommStats::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back, stats);
+        // pre-PP checkpoints (no pp_* keys) decode with the scope at zero
+        let stripped = j
+            .replace(&format!("\"pp_send_calls\":{},", stats.pp_send_calls), "")
+            .replace(&format!(",\"pp_bytes\":{}", stats.pp_bytes), "");
+        let old = CommStats::from_json(&Json::parse(&stripped).unwrap()).unwrap();
+        assert_eq!(old.pp_send_calls, 0);
+        assert_eq!(old.pp_bytes, 0.0);
+        assert_eq!(old.tp_allgather_bytes, stats.tp_allgather_bytes);
     }
 }

@@ -13,6 +13,9 @@
 //!   two-level compressed outer reduce (§9).
 //! * [`compress`] — block-wise symmetric int8 quantization kernels and the
 //!   error-feedback residual state of the compressed outer sync (§9).
+//! * [`pipeline`] — the 1F1B pipeline-parallel micro-batch schedule
+//!   (DESIGN.md §12): pure per-stage action sequences + the balanced
+//!   layer-span partition the executed pp axis and the cost models share.
 //! * [`parallel`] — the scoped thread pool that steps all K groups
 //!   concurrently between outer syncs (deterministic by construction).
 //! * [`offload`] — §V's CPU offload of outer state, with byte/time
@@ -26,18 +29,20 @@ pub mod group;
 pub mod offload;
 pub mod outer;
 pub mod parallel;
+pub mod pipeline;
 pub mod state;
 pub mod trainer;
 
 pub use collective::{all_gather_into, all_reduce_mean, all_reduce_mean_fragment_into,
                      all_reduce_mean_into, all_reduce_sum_into, broadcast,
                      fragment_pipeline, fragment_span, hier_all_reduce_fragment_into,
-                     note_tp_step, shard_span, tp_all_gather_into, tp_reduce_scatter_into,
-                     CommStats};
+                     note_pp_step, note_tp_step, pp_send_recv_into, shard_span,
+                     tp_all_gather_into, tp_reduce_scatter_into, CommStats};
 pub use compress::{HierState, QuantBuf};
 pub use group::WorkerGroup;
 pub use offload::{OffloadStats, OffloadStore};
 pub use outer::{OuterController, OuterResult};
 pub use parallel::ParallelExecutor;
+pub use pipeline::{stage_layer_span, OneFOneB, PipelineAction};
 pub use state::{load_any, AnyCheckpoint, Checkpoint, CheckpointV2, GroupState, OuterState};
 pub use trainer::Trainer;

@@ -360,9 +360,11 @@ impl OuterController {
         stats: &mut CommStats,
     ) -> (f64, f64) {
         let int8_clique = if self.cfg.outer_compress == OuterCompress::Int8 {
+            // Replica width is tp·pp, not tp: `shards_per_replica()` is the
+            // one routing for the clique contract (DESIGN.md §9, §12).
             let (clique, nodes) = outer_cliques(
                 group_params.len(),
-                self.cfg.tp.max(1),
+                self.cfg.shards_per_replica(),
                 self.cfg.gpus_per_node.max(1),
             );
             (nodes > 1).then_some(clique)

@@ -1,0 +1,304 @@
+//! The 1F1B pipeline-parallel micro-batch schedule (DESIGN.md §12).
+//!
+//! Pipeline parallelism span-shards a replica's *layers* over `pp` stages
+//! — the same balanced contiguous partition TP shards and sync fragments
+//! use ([`stage_layer_span`] delegates to `collective::fragment_span`) —
+//! and streams `m` micro-batches through the stages under the 1F1B
+//! (one-forward-one-backward) schedule: stage `s` runs
+//! `min(m, p−1−s)` warmup forwards, then alternates one forward with one
+//! backward until the forwards are exhausted, then drains the remaining
+//! backwards. Relative to GPipe this caps the in-flight activations per
+//! stage at `min(m, p−s)` instead of `m` while keeping the same bubble:
+//! each stage idles `p−1` slots in the fill phase and `p−1` in the drain
+//! phase, so the overhead over the `2m` work slots is the paper-standard
+//! `(p−1)/m` bubble fraction both cost models price
+//! (`SimSetup::pp_bubble`, `netsim::pipeline_makespan`).
+//!
+//! Everything here is a **pure function of `(p, m)`** — no clocks, no
+//! threads, no RNG — so the schedule is trivially invariant across
+//! `PIER_THREADS` and bit-reproducible, and the trainer can consult it
+//! without changing any math: 1F1B completes backwards in micro-batch
+//! order at every stage ([`OneFOneB::backward_order`]), which is exactly
+//! the accumulation order the pp=1 gradient loop already uses — the
+//! keystone of the pp bit-transparency contract
+//! (`rust/tests/pipeline_parity.rs`).
+//!
+//! The slot grid uses unit-time forward and backward slots. That is a
+//! *scheduling* model (dependency structure and slot counts), not a cost
+//! model — the cost models price the same schedule with real per-slot
+//! seconds and routed P2P hops.
+
+use crate::coordinator::collective::fragment_span;
+
+/// What one pipeline stage does in one schedule slot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PipelineAction {
+    /// Forward pass of micro-batch `i` through this stage's layer span.
+    Forward(usize),
+    /// Backward pass of micro-batch `i` through this stage's layer span.
+    Backward(usize),
+    /// Idle slot — fill/drain bubble.
+    Bubble,
+}
+
+/// Layer span of pipeline stage `s` in a `pp`-stage split of `n_layers`
+/// layers: the single-sourced balanced contiguous partition
+/// (`collective::fragment_span`), so stage spans tile the layers exactly —
+/// balanced to ±1 with the ragged tail on the early stages handled the
+/// same way TP shards and sync fragments handle it.
+pub fn stage_layer_span(n_layers: usize, pp: usize, s: usize) -> (usize, usize) {
+    fragment_span(n_layers, pp, s)
+}
+
+/// The 1F1B schedule for `stages` pipeline stages × `micros` micro-batches,
+/// materialized as a rectangular slot grid (`stages` rows × `makespan()`
+/// unit slots) plus the per-stage work orders.
+#[derive(Clone, Debug)]
+pub struct OneFOneB {
+    pub stages: usize,
+    pub micros: usize,
+    /// `grid[s][t]`: stage `s`'s action in slot `t`. Rows are padded with
+    /// [`PipelineAction::Bubble`] to the common makespan.
+    grid: Vec<Vec<PipelineAction>>,
+}
+
+impl OneFOneB {
+    /// Warmup forward count of stage `s`: how many forwards run before the
+    /// stage's first backward (`min(m, p−1−s)`; the last stage has none —
+    /// it backward-propagates each micro-batch the moment it finishes its
+    /// forward).
+    pub fn warmup_forwards(stages: usize, micros: usize, s: usize) -> usize {
+        assert!(s < stages, "stage {s} of {stages}");
+        micros.min(stages - 1 - s)
+    }
+
+    /// Stage `s`'s work order (no bubbles): the 1F1B action sequence —
+    /// warmup forwards, the steady one-forward-one-backward ladder, the
+    /// cooldown backwards. Always `2m` actions: every micro-batch runs
+    /// exactly one forward and one backward per stage.
+    pub fn stage_order(stages: usize, micros: usize, s: usize) -> Vec<PipelineAction> {
+        assert!(stages >= 1 && s < stages, "stage {s} of {stages}");
+        let w = Self::warmup_forwards(stages, micros, s);
+        let mut order = Vec::with_capacity(2 * micros);
+        for i in 0..w {
+            order.push(PipelineAction::Forward(i));
+        }
+        for i in w..micros {
+            order.push(PipelineAction::Forward(i));
+            order.push(PipelineAction::Backward(i - w));
+        }
+        for i in micros - w..micros {
+            order.push(PipelineAction::Backward(i));
+        }
+        order
+    }
+
+    /// Build the schedule: run the per-stage work orders through the
+    /// dependency structure (a forward needs the upstream stage's forward
+    /// of the same micro-batch from a strictly earlier slot; a backward
+    /// needs the downstream stage's backward — or, at the last stage, the
+    /// local forward) on a synchronous unit-slot clock. Deterministic
+    /// greedy: every stage issues its next pending action the first slot
+    /// its dependency allows, else records a bubble.
+    pub fn new(stages: usize, micros: usize) -> OneFOneB {
+        assert!(stages >= 1, "pipeline needs at least one stage");
+        assert!(micros >= 1, "pipeline needs at least one micro-batch");
+        let p = stages;
+        let m = micros;
+        let orders: Vec<Vec<PipelineAction>> =
+            (0..p).map(|s| Self::stage_order(p, m, s)).collect();
+        let mut next = vec![0usize; p]; // per-stage cursor into its order
+        let mut f_done = vec![vec![usize::MAX; m]; p]; // completion slot
+        let mut b_done = vec![vec![usize::MAX; m]; p];
+        let mut grid: Vec<Vec<PipelineAction>> = vec![Vec::new(); p];
+        let cap = 2 * (2 * m + 2 * p) + 4; // defensive: schedule must finish well before
+        for t in 0..cap {
+            if next.iter().zip(&orders).all(|(&c, o)| c == o.len()) {
+                break;
+            }
+            // Readiness is judged against completions from *earlier* slots
+            // (collect first, commit after), mirroring real pipelining:
+            // a slab produced in slot t is consumable from slot t+1.
+            let mut issue: Vec<Option<PipelineAction>> = Vec::with_capacity(p);
+            for s in 0..p {
+                let a = match orders[s].get(next[s]) {
+                    None => {
+                        issue.push(None);
+                        continue;
+                    }
+                    Some(&a) => a,
+                };
+                let ready = match a {
+                    PipelineAction::Forward(i) => s == 0 || f_done[s - 1][i] < t,
+                    PipelineAction::Backward(i) => {
+                        if s == p - 1 {
+                            f_done[s][i] < t
+                        } else {
+                            b_done[s + 1][i] < t
+                        }
+                    }
+                    PipelineAction::Bubble => unreachable!("orders carry no bubbles"),
+                };
+                issue.push(if ready { Some(a) } else { None });
+            }
+            for s in 0..p {
+                match issue[s] {
+                    Some(a) => {
+                        match a {
+                            PipelineAction::Forward(i) => f_done[s][i] = t,
+                            PipelineAction::Backward(i) => b_done[s][i] = t,
+                            PipelineAction::Bubble => {}
+                        }
+                        next[s] += 1;
+                        grid[s].push(a);
+                    }
+                    // stalled on a dependency, or already drained: bubble
+                    None => grid[s].push(PipelineAction::Bubble),
+                }
+            }
+        }
+        assert!(
+            next.iter().zip(&orders).all(|(&c, o)| c == o.len()),
+            "1F1B schedule did not drain within {cap} slots (p={p}, m={m})"
+        );
+        // trim the uniform trailing padding back to the true makespan,
+        // then re-pad every row to it — a rectangular grid
+        let makespan = (0..p)
+            .map(|s| {
+                grid[s]
+                    .iter()
+                    .rposition(|a| *a != PipelineAction::Bubble)
+                    .map_or(0, |t| t + 1)
+            })
+            .max()
+            .unwrap_or(0);
+        for row in &mut grid {
+            row.truncate(makespan);
+            row.resize(makespan, PipelineAction::Bubble);
+        }
+        OneFOneB { stages: p, micros: m, grid }
+    }
+
+    /// Total schedule length in unit slots: `2m + 2(p−1)` — the `2m` work
+    /// slots plus one fill and one drain bubble per upstream/downstream
+    /// stage (the `(p−1)/m` bubble fraction over the work).
+    pub fn makespan(&self) -> usize {
+        self.grid.first().map_or(0, |r| r.len())
+    }
+
+    /// Stage `s`'s slot row (bubbles included), `makespan()` long.
+    pub fn stage_slots(&self, s: usize) -> &[PipelineAction] {
+        &self.grid[s]
+    }
+
+    /// Bubble slots of stage `s` across the rectangular grid.
+    pub fn bubble_slots(&self, s: usize) -> usize {
+        self.grid[s].iter().filter(|a| **a == PipelineAction::Bubble).count()
+    }
+
+    /// Micro-batch indices in the order stage `s` completes backwards —
+    /// 1F1B completes them in micro order, which is what keeps the
+    /// trainer's gradient accumulation order (and hence every bit of the
+    /// run) identical to the pp = 1 loop.
+    pub fn backward_order(&self, s: usize) -> Vec<usize> {
+        self.grid[s]
+            .iter()
+            .filter_map(|a| match a {
+                PipelineAction::Backward(i) => Some(*i),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// High-water mark of in-flight activations at stage `s`: the maximum,
+    /// over slots, of forwards issued minus backwards completed — the
+    /// activation slabs the stage is holding. 1F1B bounds this at
+    /// `min(m, p−s) ≤ p` (GPipe holds `m`).
+    pub fn in_flight_high_water(&self, s: usize) -> usize {
+        let mut in_flight = 0usize;
+        let mut high = 0usize;
+        for a in &self.grid[s] {
+            match a {
+                PipelineAction::Forward(_) => {
+                    in_flight += 1;
+                    high = high.max(in_flight);
+                }
+                PipelineAction::Backward(_) => in_flight -= 1,
+                PipelineAction::Bubble => {}
+            }
+        }
+        high
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_stage_has_no_bubbles() {
+        let s = OneFOneB::new(1, 4);
+        assert_eq!(s.makespan(), 8);
+        assert_eq!(s.bubble_slots(0), 0);
+        assert_eq!(s.backward_order(0), vec![0, 1, 2, 3]);
+        assert_eq!(s.in_flight_high_water(0), 1);
+    }
+
+    #[test]
+    fn textbook_grid_p2_m2() {
+        // The classic 2-stage trapezoid: fill bubble at stage 1's slot 0,
+        // drain bubble at stage 0's steady gap.
+        use PipelineAction::{Backward as B, Bubble as O, Forward as F};
+        let s = OneFOneB::new(2, 2);
+        assert_eq!(s.makespan(), 6);
+        assert_eq!(s.stage_slots(0), &[F(0), F(1), O, B(0), O, B(1)]);
+        assert_eq!(s.stage_slots(1), &[O, F(0), B(0), F(1), B(1), O]);
+    }
+
+    #[test]
+    fn makespan_and_bubbles_follow_the_closed_forms() {
+        for (p, m) in [(2usize, 2usize), (2, 8), (3, 2), (4, 8), (4, 2), (8, 3)] {
+            let s = OneFOneB::new(p, m);
+            assert_eq!(s.makespan(), 2 * m + 2 * (p - 1), "p={p} m={m}");
+            for st in 0..p {
+                assert_eq!(s.bubble_slots(st), 2 * (p - 1), "p={p} m={m} stage {st}");
+            }
+        }
+    }
+
+    #[test]
+    fn backwards_complete_in_micro_order_everywhere() {
+        for (p, m) in [(2usize, 4usize), (4, 8), (4, 2), (3, 5)] {
+            let s = OneFOneB::new(p, m);
+            for st in 0..p {
+                assert_eq!(s.backward_order(st), (0..m).collect::<Vec<_>>(),
+                           "p={p} m={m} stage {st}");
+            }
+        }
+    }
+
+    #[test]
+    fn in_flight_bounded_by_stage_depth() {
+        for (p, m) in [(2usize, 8usize), (4, 8), (4, 2), (8, 4)] {
+            let s = OneFOneB::new(p, m);
+            for st in 0..p {
+                let hw = s.in_flight_high_water(st);
+                assert_eq!(hw, m.min(p - st), "p={p} m={m} stage {st}");
+                assert!(hw <= p);
+            }
+        }
+    }
+
+    #[test]
+    fn stage_layer_spans_partition_layers() {
+        for (layers, pp) in [(12usize, 4usize), (13, 4), (7, 3), (4, 4), (5, 1)] {
+            let mut prev = 0;
+            for s in 0..pp {
+                let (lo, hi) = stage_layer_span(layers, pp, s);
+                assert_eq!(lo, prev);
+                prev = hi;
+            }
+            assert_eq!(prev, layers);
+        }
+    }
+}

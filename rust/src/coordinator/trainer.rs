@@ -48,6 +48,23 @@
 //! and `rust/tests/dp_tp_crossval.rs` cross-validates the recorded
 //! outer-sync volumes against the DES makespan).
 //!
+//! **DP×TP×PP** (`cfg.pp > 1`, DESIGN.md §12): each replica's layers are
+//! additionally span-sharded over `pp` pipeline stages
+//! ([`crate::coordinator::pipeline::stage_layer_span`]) and the
+//! micro-batches stream through the 1F1B schedule
+//! ([`crate::coordinator::pipeline::OneFOneB`]). The executed movement is
+//! the per-micro, per-boundary P2P round trip (`pp_send_recv_into`) over
+//! the stage spans of the host gradient, accumulated in the schedule's
+//! backward-completion order — which 1F1B guarantees is micro order — so
+//! `pp = 1` and `pp > 1` runs are bit-identical
+//! (`rust/tests/pipeline_parity.rs`). Wire volumes land in [`CommStats`]'s
+//! pp scope per replica per step (`note_pp_step`); the cost models price
+//! the `(p−1)/m` bubble and the routed P2P hops. Checkpoints need no new
+//! cursor: every micro-batch of an iteration is consumed before
+//! `completed_iters` advances, and syncs/evals/checkpoints all land on
+//! completed-iteration boundaries, so mid-iteration micro state never
+//! escapes and `rust/tests/resume_parity.rs` holds verbatim.
+//!
 //! **Streaming overlapped sync** (`cfg.stream_fragments ≥ 1`, DESIGN.md
 //! §8): the full outer sync executes as a pipeline over the balanced
 //! `fragment_span` partition — fragment `f+1`'s all-reduce + Nesterov step
@@ -89,11 +106,13 @@ use anyhow::{bail, ensure, Context, Result};
 use xla::Literal;
 
 use crate::config::{OptMode, OuterCompress, TrainConfig};
-use crate::coordinator::collective::{note_inner_allreduce, note_tp_step, tp_all_gather_into,
+use crate::coordinator::collective::{fragment_span, note_inner_allreduce, note_pp_step,
+                                     note_tp_step, pp_send_recv_into, tp_all_gather_into,
                                      tp_reduce_scatter_into, CommStats};
 use crate::coordinator::group::WorkerGroup;
 use crate::coordinator::outer::OuterController;
 use crate::coordinator::parallel::ParallelExecutor;
+use crate::coordinator::pipeline::OneFOneB;
 use crate::coordinator::state::{CheckpointV2, GroupState};
 use crate::data::{validation_batches, Pipeline};
 use crate::metrics::{CommStatsSnapshot, IterRecord, OuterEvent, RunLog};
@@ -147,6 +166,10 @@ struct StepCtx<'a> {
     /// Tensor-parallel degree: >1 routes the accumulated gradient through
     /// the executed TP reduce-scatter/all-gather (DESIGN.md §4).
     tp: usize,
+    /// Pipeline-parallel degree: >1 streams the micro-batches through the
+    /// 1F1B schedule and runs the executed per-boundary P2P round trips
+    /// on the stage spans of the host gradient (DESIGN.md §12).
+    pp: usize,
 }
 
 impl Trainer {
@@ -249,6 +272,7 @@ impl Trainer {
             exes: &self.exes,
             weight_decay: self.cfg.weight_decay,
             tp: self.cfg.tp.max(1),
+            pp: self.cfg.pp.max(1),
         };
         fused_step(&ctx, &mut self.groups[0], &tokens, lr)
     }
@@ -309,6 +333,7 @@ impl Trainer {
                     exes: &self.exes,
                     weight_decay: self.cfg.weight_decay,
                     tp: self.cfg.tp.max(1),
+                    pp: self.cfg.pp.max(1),
                 };
                 accumulated_step(&ctx, &mut self.groups[0], &micro, lr)?
             };
@@ -317,8 +342,13 @@ impl Trainer {
             // Intra-node TP collectives: every modeled DP replica runs its
             // own AG/RS pair per step, also during the synchronized phase —
             // counted per replica, matching Phase B's per-group accounting.
+            // Likewise the pipeline P2P hops (DESIGN.md §12): each replica
+            // streams its share of the global batch through its pp stages.
+            let micros_per_replica = (micro.len() / self.groups.len()).max(1);
             for _ in 0..self.groups.len() {
                 note_tp_step(self.man.n_params, self.cfg.tp, &mut self.stats);
+                note_pp_step(self.man.n_params, self.cfg.pp, micros_per_replica,
+                             &mut self.stats);
             }
             self.record(t, loss, lr, gnorm);
 
@@ -384,6 +414,7 @@ impl Trainer {
                         exes: &self.exes,
                         weight_decay: self.cfg.weight_decay,
                         tp: self.cfg.tp.max(1),
+                        pp: self.cfg.pp.max(1),
                     };
                     let active = &self.active;
                     engine.run(&mut self.groups, |gi, g| {
@@ -409,6 +440,8 @@ impl Trainer {
                     note_inner_allreduce(self.man.n_params, &mut self.stats);
                     // per-replica intra-node TP collectives (DESIGN.md §4)
                     note_tp_step(self.man.n_params, self.cfg.tp, &mut self.stats);
+                    // per-replica pipeline P2P hops (DESIGN.md §12)
+                    note_pp_step(self.man.n_params, self.cfg.pp, n_micro, &mut self.stats);
                 }
                 let kf = n_active as f64;
                 self.record(t, loss_acc / kf, lr, gnorm_acc / kf);
@@ -738,18 +771,43 @@ fn accumulated_step(
     if micro.len() == 1 {
         return fused_step(ctx, g, &micro[0], lr);
     }
-    // 1. gradient accumulation (fwd/bwd per micro-batch)
+    // 1. gradient accumulation (fwd/bwd per micro-batch). Under pipeline
+    // parallelism (ctx.pp > 1, DESIGN.md §12) the micro-batches stream
+    // through the 1F1B schedule, so the host accumulates them in the
+    // schedule's backward-completion order — which 1F1B guarantees is
+    // micro order at every stage, keeping the running sum (and every bit
+    // of the run) identical to the pp = 1 loop.
+    let micro_order: Vec<usize> = if ctx.pp > 1 {
+        OneFOneB::new(ctx.pp, micro.len()).backward_order(0)
+    } else {
+        (0..micro.len()).collect()
+    };
     let mut gsum = vec![0.0f32; ctx.man.n_params];
     let mut gflat = vec![0.0f32; ctx.man.n_params];
+    let mut stage_slab: Vec<f32> = Vec::new(); // pp > 1 boundary staging
     let mut loss_sum = 0.0;
-    for tokens in micro {
+    for &mi in &micro_order {
         let outs = {
-            let tok = WorkerGroup::token_literal(ctx.man, tokens)?;
+            let tok = WorkerGroup::token_literal(ctx.man, &micro[mi])?;
             let mut inputs: Vec<&Literal> = g.params.iter().collect();
             inputs.push(&tok);
             ctx.exes.grad_step.run(&inputs)?
         };
         WorkerGroup::write_back(ctx.man, &outs, 0, &mut gflat)?;
+        // Executed pipeline P2P (DESIGN.md §12): each stage boundary moves
+        // the downstream stage's slab of this micro-gradient across the
+        // cut and back — the forward activation hop and the backward
+        // gradient hop of the 1F1B ladder, as bit-exact copies over the
+        // balanced stage spans. Pure data movement: the slab returns to
+        // its offset unchanged, so pp only changes the recorded schedule.
+        if ctx.pp > 1 {
+            for s in 1..ctx.pp {
+                let (lo, hi) = fragment_span(ctx.man.n_params, ctx.pp, s);
+                stage_slab.resize(hi - lo, 0.0);
+                pp_send_recv_into(&gflat[lo..hi], &mut stage_slab); // fwd hop
+                pp_send_recv_into(&stage_slab, &mut gflat[lo..hi]); // bwd hop
+            }
+        }
         for (a, b) in gsum.iter_mut().zip(&gflat) {
             *a += b;
         }
@@ -801,6 +859,7 @@ fn cfg_validate(cfg: &TrainConfig, man: &Manifest) -> Result<()> {
     ensure!(cfg.iterations > 0, "iterations must be positive");
     ensure!(cfg.sync_interval > 0, "sync_interval must be positive");
     ensure!(cfg.tp > 0, "tp must be positive");
+    ensure!(cfg.pp > 0, "pp must be positive");
     ensure!(
         cfg.stream_fragments == 0 || cfg.sync_fraction >= 1.0,
         "stream_fragments requires full sync (sync_fraction = 1): the rotating \
@@ -817,6 +876,16 @@ fn cfg_validate(cfg: &TrainConfig, man: &Manifest) -> Result<()> {
     if let Err(e) = cfg.parallel().validate() {
         anyhow::bail!("invalid DP×TP layout: {e}");
     }
+    // Megatron placement for the full tp·pp-wide replica (DESIGN.md §12):
+    // the model shards either pack within a node or tile whole nodes, so
+    // pipeline/tensor traffic never straddles a node boundary mid-shard.
+    let spr = cfg.shards_per_replica();
+    let gpn = cfg.gpus_per_node.max(1);
+    ensure!(
+        spr <= gpn || spr % gpn == 0,
+        "tp·pp = {spr} shards per replica spanning nodes must be a multiple of \
+         gpus_per_node {gpn}"
+    );
     ensure!(
         cfg.global_batch % man.micro_batch == 0,
         "global batch {} must be a multiple of the artifact micro-batch {}",

@@ -228,8 +228,10 @@ pub fn fig8_compressed() -> Vec<Fig8CompressRow> {
             // The one-node row (dp = 1) has no fabric hop: compression
             // never engages and the wire stays at the fp32 width.
             let dp = w / setup.tp;
-            let (_, nodes) =
-                crate::config::outer_cliques(dp, setup.tp, setup.cluster.gpus_per_node);
+            // Replica width is tp·pp — the one clique contract
+            // (`cfg.shards_per_replica()`; DESIGN.md §9, §12).
+            let (_, nodes) = crate::config::outer_cliques(dp, setup.tp * setup.pp,
+                                                          setup.cluster.gpus_per_node);
             Fig8CompressRow {
                 world: w,
                 t_blocking: simulate_run(&blocking).total_secs,
@@ -258,14 +260,16 @@ pub fn print_fig8_compressed(rows: &[Fig8CompressRow]) {
 }
 
 /// Axes of a `pier sweep` config grid (DESIGN.md §10): the cross product
-/// of scenario × world × tp × compression × fragments × sync fraction,
-/// with the schedule constants (H, batch, iterations) held fixed.
+/// of scenario × world × tp × pp × compression × fragments × sync
+/// fraction, with the schedule constants (H, batch, iterations) held
+/// fixed.
 #[derive(Clone, Debug)]
 pub struct SweepAxes {
     pub model: String,
     pub scenarios: Vec<&'static Scenario>,
     pub worlds: Vec<usize>,
     pub tps: Vec<usize>,
+    pub pps: Vec<usize>,
     pub compress: Vec<OuterCompress>,
     pub fragments: Vec<usize>,
     pub fractions: Vec<f64>,
@@ -278,8 +282,8 @@ pub struct SweepAxes {
 }
 
 impl SweepAxes {
-    /// The CI smoke grid: 3 scenarios × 2 worlds × {none, int8} ×
-    /// {blocking, F=4} = 24 cheap closed-form runs.
+    /// The CI smoke grid: 3 scenarios × 2 worlds × pp {1, 2} ×
+    /// {none, int8} × {blocking, F=4} = 48 cheap closed-form runs.
     pub fn smoke() -> SweepAxes {
         SweepAxes {
             model: "gpt2-xl".into(),
@@ -287,6 +291,7 @@ impl SweepAxes {
                             scenario("perlmutter-fattree").unwrap()],
             worlds: vec![32, 64],
             tps: vec![1],
+            pps: vec![1, 2],
             compress: vec![OuterCompress::None, OuterCompress::Int8],
             fragments: vec![0, 4],
             fractions: vec![1.0],
@@ -305,6 +310,7 @@ impl SweepAxes {
             scenarios: SCENARIOS.iter().collect(),
             worlds: vec![16, 32, 64, 128, 256],
             tps: vec![1, 4],
+            pps: vec![1, 2],
             compress: vec![OuterCompress::None, OuterCompress::Int8],
             fragments: vec![0, 4, 8],
             fractions: vec![1.0, 0.5],
@@ -323,6 +329,7 @@ pub struct SweepRow {
     pub scenario: &'static str,
     pub world: usize,
     pub tp: usize,
+    pub pp: usize,
     pub compress: OuterCompress,
     pub fragments: usize,
     pub sync_fraction: f64,
@@ -351,12 +358,16 @@ pub fn sweep_setup(
     sc: &'static Scenario,
     world: usize,
     tp: usize,
+    pp: usize,
     compress: OuterCompress,
     fragments: usize,
     fraction: f64,
 ) -> SimSetup {
     let tp = tp.max(1);
-    let mut s = base_setup(&axes.model, sc.cluster, world, world / tp, axes.sync_interval, tp);
+    let pp = pp.max(1);
+    let mut s =
+        base_setup(&axes.model, sc.cluster, world, world / (tp * pp), axes.sync_interval, tp);
+    s.pp = pp;
     s.fabric = sc.fabric;
     s.global_batch = axes.global_batch;
     s.iterations = axes.iterations;
@@ -367,57 +378,66 @@ pub fn sweep_setup(
     s
 }
 
-/// Run the grid. Skipped combinations (no row emitted): `world % tp ≠ 0`,
-/// `tp` wider than the scenario's node, partial fraction with streaming
+/// Run the grid. Skipped combinations (no row emitted):
+/// `world % (tp·pp) ≠ 0`, `tp` wider than the scenario's node, a replica
+/// width `tp·pp` that spans nodes without tiling them (the
+/// `cfg_validate` placement rule), partial fraction with streaming
 /// fragments (the trainer rejects it — DESIGN.md §8), and models that
 /// don't fit device memory even with offload. Pareto marks are assigned
-/// per (scenario, world, tp) cell over (makespan, wire).
+/// per (scenario, world, tp, pp) cell over (makespan, wire).
 pub fn sweep_grid(axes: &SweepAxes) -> Vec<SweepRow> {
     let mut rows: Vec<SweepRow> = Vec::new();
     for &sc in &axes.scenarios {
         for &world in &axes.worlds {
             for &tp in &axes.tps {
-                if tp == 0 || world % tp != 0 || tp > sc.cluster.gpus_per_node {
-                    continue;
-                }
-                let cell_start = rows.len();
-                for &compress in &axes.compress {
-                    for &fragments in &axes.fragments {
-                        for &fraction in &axes.fractions {
-                            if fraction < 1.0 && fragments > 1 {
-                                continue;
+                for &pp in &axes.pps {
+                    let gpn = sc.cluster.gpus_per_node;
+                    let spr = tp * pp; // replica width (shards per replica)
+                    if tp == 0 || pp == 0 || world % spr != 0 || tp > gpn
+                        || (spr > gpn && spr % gpn != 0)
+                    {
+                        continue;
+                    }
+                    let cell_start = rows.len();
+                    for &compress in &axes.compress {
+                        for &fragments in &axes.fragments {
+                            for &fraction in &axes.fractions {
+                                if fraction < 1.0 && fragments > 1 {
+                                    continue;
+                                }
+                                let s = sweep_setup(axes, sc, world, tp, pp, compress,
+                                                    fragments, fraction);
+                                if !fits_memory(&s) {
+                                    continue;
+                                }
+                                let r = simulate_run(&s);
+                                let n_outer = (s.iterations as f64
+                                    - s.warmup_pct * s.iterations as f64)
+                                    / s.sync_interval as f64;
+                                let trace = FailureSpec {
+                                    seed: 0,
+                                    prob: axes.failure_prob,
+                                    restart_penalty: 1.0,
+                                };
+                                rows.push(SweepRow {
+                                    scenario: sc.name,
+                                    world,
+                                    tp,
+                                    pp,
+                                    compress,
+                                    fragments,
+                                    sync_fraction: fraction,
+                                    makespan_secs: r.total_secs,
+                                    outer_event_secs: r.outer_event_secs,
+                                    wire_bytes: n_outer * outer_event_wire_bytes(&s),
+                                    recovery_secs: outer_event_recovery_secs(&s, Some(trace)),
+                                    pareto: false,
+                                });
                             }
-                            let s = sweep_setup(axes, sc, world, tp, compress, fragments,
-                                                fraction);
-                            if !fits_memory(&s) {
-                                continue;
-                            }
-                            let r = simulate_run(&s);
-                            let n_outer = (s.iterations as f64
-                                - s.warmup_pct * s.iterations as f64)
-                                / s.sync_interval as f64;
-                            let trace = FailureSpec {
-                                seed: 0,
-                                prob: axes.failure_prob,
-                                restart_penalty: 1.0,
-                            };
-                            rows.push(SweepRow {
-                                scenario: sc.name,
-                                world,
-                                tp,
-                                compress,
-                                fragments,
-                                sync_fraction: fraction,
-                                makespan_secs: r.total_secs,
-                                outer_event_secs: r.outer_event_secs,
-                                wire_bytes: n_outer * outer_event_wire_bytes(&s),
-                                recovery_secs: outer_event_recovery_secs(&s, Some(trace)),
-                                pareto: false,
-                            });
                         }
                     }
+                    mark_pareto(&mut rows[cell_start..]);
                 }
-                mark_pareto(&mut rows[cell_start..]);
             }
         }
     }
@@ -456,6 +476,7 @@ pub fn sweep_json(axes: &SweepAxes, rows: &[SweepRow]) -> Json {
                  ("scenario", Json::str(r.scenario)),
                  ("world", Json::num(r.world as f64)),
                  ("tp", Json::num(r.tp as f64)),
+                 ("pp", Json::num(r.pp as f64)),
                  ("compress", Json::str(r.compress.name())),
                  ("fragments", Json::num(r.fragments as f64)),
                  ("sync_fraction", Json::num(r.sync_fraction)),
@@ -471,16 +492,18 @@ pub fn sweep_json(axes: &SweepAxes, rows: &[SweepRow]) -> Json {
 
 /// Print the sweep in the fig8 table style; `*` marks the cell frontier.
 pub fn print_sweep(rows: &[SweepRow]) {
-    println!("\n== pier sweep — makespan vs outer wire (Pareto `*` per scenario/world/tp) ==");
     println!(
-        "{:>20} {:>6} {:>3} {:>8} {:>5} {:>5} {:>14} {:>12} {:>13} {:>7}",
-        "scenario", "GPUs", "tp", "compress", "frag", "frac", "makespan (s)", "wire (GB)",
-        "recovery (s)", "pareto"
+        "\n== pier sweep — makespan vs outer wire (Pareto `*` per scenario/world/tp/pp) =="
+    );
+    println!(
+        "{:>20} {:>6} {:>3} {:>3} {:>8} {:>5} {:>5} {:>14} {:>12} {:>13} {:>7}",
+        "scenario", "GPUs", "tp", "pp", "compress", "frag", "frac", "makespan (s)",
+        "wire (GB)", "recovery (s)", "pareto"
     );
     for r in rows {
         println!(
-            "{:>20} {:>6} {:>3} {:>8} {:>5} {:>5.2} {:>14.0} {:>12.1} {:>13.3} {:>7}",
-            r.scenario, r.world, r.tp, r.compress.name(), r.fragments, r.sync_fraction,
+            "{:>20} {:>6} {:>3} {:>3} {:>8} {:>5} {:>5.2} {:>14.0} {:>12.1} {:>13.3} {:>7}",
+            r.scenario, r.world, r.tp, r.pp, r.compress.name(), r.fragments, r.sync_fraction,
             r.makespan_secs, r.wire_bytes / 1e9, r.recovery_secs,
             if r.pareto { "*" } else { "" }
         );
@@ -618,9 +641,12 @@ mod tests {
     fn sweep_smoke_grid_shape_and_pareto() {
         let axes = SweepAxes::smoke();
         let rows = sweep_grid(&axes);
-        // 3 scenarios × 2 worlds × 1 tp × 2 compress × 2 fragment counts
-        assert_eq!(rows.len(), 24);
-        let cell = |r: &SweepRow| (r.scenario, r.world, r.tp);
+        // 3 scenarios × 2 worlds × 1 tp × 2 pp × 2 compress × 2 fragment
+        // counts (Vista's 1-GPU nodes still take pp=2: a replica spanning
+        // whole nodes tiles them, the cfg_validate placement rule)
+        assert_eq!(rows.len(), 48);
+        assert_eq!(rows.iter().filter(|r| r.pp == 2).count(), 24);
+        let cell = |r: &SweepRow| (r.scenario, r.world, r.tp, r.pp);
         // no pareto row is dominated within its cell, every cell keeps one
         for r in &rows {
             if r.pareto {
@@ -646,8 +672,8 @@ mod tests {
         // (16 leaf-mates share one 2:1 uplink)
         let pick = |name: &str| {
             rows.iter()
-                .find(|r| r.scenario == name && r.world == 64 && r.fragments == 0
-                          && r.compress == OuterCompress::None)
+                .find(|r| r.scenario == name && r.world == 64 && r.pp == 1
+                          && r.fragments == 0 && r.compress == OuterCompress::None)
                 .unwrap()
         };
         assert!(pick("perlmutter-fattree").makespan_secs > pick("perlmutter").makespan_secs);
@@ -670,7 +696,7 @@ mod tests {
         for r in &rows {
             // recovery makespan is never below the failure-free DES ring
             let sc = axes.scenarios.iter().copied().find(|s| s.name == r.scenario).unwrap();
-            let s = sweep_setup(&axes, sc, r.world, r.tp, r.compress, r.fragments,
+            let s = sweep_setup(&axes, sc, r.world, r.tp, r.pp, r.compress, r.fragments,
                                 r.sync_fraction);
             let clean = outer_event_recovery_secs(&s, None);
             assert!(r.recovery_secs >= clean,

@@ -54,18 +54,18 @@ fn print_usage() {
          usage: pier <command> [options]\n\n\
          commands:\n\
            train     --model nano --mode pier|diloco|adamw --iters N --groups K\n\
-                     --batch B --interval H [--tp T] [--stream-fragments F]\n\
+                     --batch B --interval H [--tp T] [--pp P] [--stream-fragments F]\n\
                      [--outer-compress none|int8] [--quant-block B]\n\
                      [--offload] [--csv out.csv] [--ckpt out.ckpt]\n\
                      [--resume file.ckpt]\n\
            eval      --model nano --ckpt file.ckpt [--allow-model-mismatch]\n\
            simulate  --model gpt2-xl --cluster <scenario> --world N\n\
-                     [--tp T] [--groups K] [--interval H] [--mode pier|adamw]\n\
+                     [--tp T] [--pp P] [--groups K] [--interval H] [--mode pier|adamw]\n\
                      [--stream-fragments F] [--outer-compress none|int8]\n\
                      [--quant-block B] [--jitter S [--jitter-seed N]]\n\
                      [--failures P [--failure-seed N] [--restart-penalty R]]\n\
            sweep     [--smoke] [--model M] [--clusters a,b] [--worlds 32,64]\n\
-                     [--tps 1,4] [--compress none,int8] [--fragments 0,4]\n\
+                     [--tps 1,4] [--pps 1,2] [--compress none,int8] [--fragments 0,4]\n\
                      [--fractions 1.0,0.5] [--interval H] [--batch B]\n\
                      [--iters N] [--failures P] [--out sweep_pareto.json]\n\
            repro     fig1|fig3|fig4|fig5|fig6|fig7|fig8|table2|table3|table4|\n\
@@ -113,6 +113,9 @@ fn summarize(log: &RunLog) {
     if log.comm.tp_bytes > 0.0 {
         println!("  comm (intra-node TP): {:.1} MB", log.comm.tp_bytes / 1e6);
     }
+    if log.comm.pp_bytes > 0.0 {
+        println!("  comm (pipeline P2P): {:.1} MB", log.comm.pp_bytes / 1e6);
+    }
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -126,6 +129,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.global_batch = args.usize_or("batch", cfg.global_batch);
     cfg.sync_interval = args.usize_or("interval", cfg.sync_interval);
     cfg.tp = args.usize_or("tp", cfg.tp);
+    cfg.pp = args.usize_or("pp", cfg.pp);
     cfg.stream_fragments = args.usize_or("stream-fragments", cfg.stream_fragments);
     cfg.outer_compress = match args.get("outer-compress") {
         Some(s) => OuterCompress::parse(s)
@@ -234,8 +238,8 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         calib: Calib::default(),
     };
     let r = simulate_run(&s);
-    println!("{} on {} × {} GPUs (tp={}, groups={}, H={}, mode={})",
-             s.model.name, cluster_name, s.world, s.tp, s.groups,
+    println!("{} on {} × {} GPUs (tp={}, pp={}, groups={}, H={}, mode={})",
+             s.model.name, cluster_name, s.world, s.tp, s.pp, s.groups,
              s.sync_interval, s.mode.name());
     println!("  sync iter:  compute {:.3}s  tp {:.3}s  dp {:.3}s  → {:.3}s",
              r.sync_iter.compute, r.sync_iter.tp_comm, r.sync_iter.dp_comm,
@@ -331,6 +335,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     }
     axes.worlds = usize_list(args, "worlds", axes.worlds)?;
     axes.tps = usize_list(args, "tps", axes.tps)?;
+    axes.pps = usize_list(args, "pps", axes.pps)?;
     axes.fragments = usize_list(args, "fragments", axes.fragments)?;
     if let Some(list) = args.get("fractions") {
         axes.fractions = list.split(',').filter(|s| !s.is_empty())

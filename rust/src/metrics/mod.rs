@@ -83,6 +83,11 @@ pub struct CommStatsSnapshot {
     /// pairs plus the hierarchical compressed sync's clique hop
     /// (`CommStats::intra_node_bytes`).
     pub tp_bytes: f64,
+    /// Pipeline-parallel P2P traffic (DESIGN.md §12): the per-boundary
+    /// activation-forward + gradient-backward hops of the 1F1B micro-batch
+    /// schedule (`CommStats`'s pp scope). Rides the fabric between the
+    /// stage cuts, so it is its own scope, not part of `tp_bytes`.
+    pub pp_bytes: f64,
     /// Outer synchronization events. `From<&CommStats>` seeds this with
     /// the all-reduce call count (equal under pure DP); the trainer
     /// overwrites it with the event count, which under DP×TP is `calls/tp`
@@ -102,6 +107,7 @@ impl From<&CommStats> for CommStatsSnapshot {
             gather_bytes: s.gather_bytes,
             broadcast_bytes: s.broadcast_bytes,
             tp_bytes: s.intra_node_bytes(),
+            pp_bytes: s.pp_bytes,
             outer_steps: s.outer_allreduce_calls,
         }
     }
@@ -252,16 +258,19 @@ mod tests {
         s.note_hier_intra(123.0);
         s.gather_calls += 1;
         s.gather_bytes += 16.0;
+        s.pp_send_calls += 4;
+        s.pp_bytes += 64.0;
         let snap = CommStatsSnapshot::from(&s);
         assert_eq!(snap.outer_allreduce_bytes, 400.0);
         assert_eq!(snap.outer_wire_bytes, 104.0);
         assert_eq!(snap.tp_bytes, 123.0, "clique hop lands in the intra-node scope");
         assert_eq!(snap.gather_bytes, 16.0);
+        assert_eq!(snap.pp_bytes, 64.0, "P2P hops are their own fabric scope");
         // every scope in total_bytes has a snapshot field: they must sum up
         assert_eq!(
             s.total_bytes(),
             snap.inner_allreduce_bytes + snap.outer_allreduce_bytes + snap.gather_bytes
-                + snap.broadcast_bytes + snap.tp_bytes
+                + snap.broadcast_bytes + snap.tp_bytes + snap.pp_bytes
         );
     }
 

@@ -22,6 +22,7 @@ pub use event::{Flow, FlowResult, LinkId, Network};
 pub use topology::{FabricShape, FailureSpec, JitterSpec, LinkClass, NodeKind, TopoLink, Topology};
 
 use crate::config::outer_cliques;
+use crate::coordinator::pipeline::{OneFOneB, PipelineAction};
 use crate::perfmodel::gpu::ClusterSpec;
 
 /// What crosses the fabric in an outer sync.
@@ -54,6 +55,11 @@ pub struct OuterSync {
     pub dp: usize,
     /// Concurrent per-shard rings (TP ranks sharing the injection path).
     pub tp: usize,
+    /// Pipeline stages per replica (DESIGN.md §12): like `tp`, each stage
+    /// runs its own concurrent per-shard ring, and the full replica width
+    /// `tp·pp` decides the hierarchical clique packing. `pp = 1` is
+    /// bit-identical to the pre-pipeline model.
+    pub pp: usize,
     /// Flat fp32 or hierarchical/compressed wire.
     pub wire: OuterWire,
     /// Streaming fragments; `≤ 1` is the blocking sync.
@@ -123,7 +129,7 @@ pub fn streaming_overlap_cost(
 /// * [`OuterWire::Hier`]: clique-reduce on the representative node's
 ///   intra fabric ([`Topology::rep_intra`], closed form — contention-free
 ///   by construction), then the node leaders
-///   (`config::outer_cliques(dp, tp, gpus_per_node)`) ring the compressed
+///   (`config::outer_cliques(dp, tp·pp, gpus_per_node)`) ring the compressed
 ///   wire bytes over the graph.
 /// * `fragments`/`overlap_window` apply [`streaming_overlap_cost`]; the
 ///   blocking sync is the `fragments ≤ 1` degenerate case.
@@ -136,16 +142,19 @@ pub fn outer_sync_over(
     if sync.dp <= 1 {
         return StreamingOuterCost::default();
     }
-    let tp = sync.tp.max(1);
+    // The full replica width: every TP×PP shard rings its own span
+    // concurrently, and the clique packing sees the whole replica
+    // (`config::outer_cliques` takes tp·pp — DESIGN.md §12).
+    let shards = sync.tp.max(1) * sync.pp.max(1);
     let ring = |participants: usize, v: f64| match model {
-        CostModel::Des => topo.des_outer_makespan(participants, tp, v),
-        CostModel::Analytic => topo.analytic_outer_makespan(participants, tp, v),
+        CostModel::Des => topo.des_outer_makespan(participants, shards, v),
+        CostModel::Analytic => topo.analytic_outer_makespan(participants, shards, v),
     };
     streaming_overlap_cost(v_logical, sync.fragments, sync.overlap_window, |v| {
         match sync.wire {
             OuterWire::Flat => ring(sync.dp, v),
             OuterWire::Hier { bytes_per_param } => {
-                let (clique, nodes) = outer_cliques(sync.dp, tp, topo.gpus_per_node());
+                let (clique, nodes) = outer_cliques(sync.dp, shards, topo.gpus_per_node());
                 let intra =
                     if clique > 1 { ring_allreduce(clique, v, &topo.rep_intra()) } else { 0.0 };
                 intra + ring(nodes, v * bytes_per_param / 4.0)
@@ -175,6 +184,170 @@ pub fn outer_schedule_over(
         .sum()
 }
 
+// ---- pipeline-parallel P2P pricing (DESIGN.md §12) --------------------
+
+/// Seconds to move one `slab_bytes` activation (forward) or gradient
+/// (backward) slab across a single stage boundary. Same node: the
+/// representative node's intra fabric ([`Topology::rep_intra`] — a node
+/// with no declared intra fabric moves slabs for free, the
+/// single-GPU-node semantics). Different nodes: the deterministic BFS
+/// route ([`Topology::route`]) priced at its bottleneck bandwidth plus
+/// summed one-way latency; an unroutable pair moves for free (partitioned
+/// scenario graphs model the outage elsewhere).
+pub fn pp_boundary_secs(
+    topo: &Topology,
+    from_node: usize,
+    to_node: usize,
+    slab_bytes: f64,
+) -> f64 {
+    let price = |bw: f64, latency: f64| {
+        let xfer = if bw.is_finite() { slab_bytes.max(0.0) / bw } else { 0.0 };
+        xfer + latency
+    };
+    if from_node == to_node {
+        let intra = topo.rep_intra();
+        return price(intra.effective_bw(), intra.latency);
+    }
+    match topo.route(from_node, to_node) {
+        Some(path) => price(topo.path_bandwidth(&path), topo.path_latency(&path)),
+        None => 0.0,
+    }
+}
+
+/// One-way P2P hop costs of the `pp−1` stage boundaries of one replica
+/// under the Megatron placement (DESIGN.md §12): stage `s` occupies the
+/// replica's GPUs `[s·tp, (s+1)·tp)`, so boundary `s` crosses a node
+/// exactly when GPUs `s·tp−1` and `s·tp` straddle a `gpus_per_node`
+/// multiple — intra-node boundaries ride the NVLink fabric, inter-node
+/// boundaries route over the topology graph. `pp ≤ 1` has no boundaries.
+pub fn pp_boundary_hops(topo: &Topology, tp: usize, pp: usize, slab_bytes: f64) -> Vec<f64> {
+    let tp = tp.max(1);
+    let gpn = topo.gpus_per_node().max(1);
+    let nodes = topo.compute_nodes();
+    (1..pp.max(1))
+        .map(|s| {
+            let a = (s * tp - 1) / gpn;
+            let b = (s * tp) / gpn;
+            if a == b || nodes.is_empty() {
+                pp_boundary_secs(topo, 0, 0, slab_bytes)
+            } else {
+                pp_boundary_secs(topo, nodes[a % nodes.len()], nodes[b % nodes.len()],
+                                 slab_bytes)
+            }
+        })
+        .collect()
+}
+
+/// Closed-form 1F1B pipeline makespan of one `m`-micro-batch gradient
+/// step: the `2m` work slots plus the fill/drain trapezoid —
+///
+/// ```text
+/// T = m·(f + b) + Σ_{boundaries s} (f + b + 2·c_s)
+/// ```
+///
+/// where each of the `pp−1` boundaries contributes one extra
+/// forward-slot, one extra backward-slot (the `(p−1)/m` bubble fraction
+/// over the work, matching `OneFOneB::makespan` on unit slots and the
+/// simulator's `SimSetup::pp_bubble`) and a round trip of its routed
+/// P2P hop ([`pp_boundary_hops`]). `pp = 1` is exactly `m·(f + b)` — the
+/// pipeline term vanishes with no residue. Cross-validated against
+/// [`des_pipeline_makespan`] in `rust/tests/dp_tp_crossval.rs`.
+pub fn pipeline_makespan(
+    topo: &Topology,
+    tp: usize,
+    pp: usize,
+    micros: usize,
+    fwd_secs: f64,
+    bwd_secs: f64,
+    slab_bytes: f64,
+) -> f64 {
+    let m = micros.max(1) as f64;
+    let slot = fwd_secs + bwd_secs;
+    let trapezoid: f64 = pp_boundary_hops(topo, tp, pp, slab_bytes)
+        .iter()
+        .map(|&c| slot + 2.0 * c)
+        .sum();
+    m * slot + trapezoid
+}
+
+/// DES 1F1B pipeline makespan: a longest-path sweep over the schedule's
+/// action DAG. Each stage executes its serial [`OneFOneB::stage_order`];
+/// a forward is ready when the upstream forward of the same micro-batch
+/// has landed plus the boundary hop, a backward when the downstream
+/// backward has (last stage: its own forward, no hop), and an action
+/// starts at `max(stage free, ready)`. Deterministic fixpoint — no
+/// clocks, no threads — so it sees what the closed form abstracts away:
+/// hop round trips landing on the steady-state critical path. In the
+/// compute-dominated regime (`hop ≪ f + b`, the realistic activation-slab
+/// case) it agrees with [`pipeline_makespan`] to within 2%; it can only
+/// exceed it, never undercut it.
+pub fn des_pipeline_makespan(
+    topo: &Topology,
+    tp: usize,
+    pp: usize,
+    micros: usize,
+    fwd_secs: f64,
+    bwd_secs: f64,
+    slab_bytes: f64,
+) -> f64 {
+    let p = pp.max(1);
+    let m = micros.max(1);
+    let hops = pp_boundary_hops(topo, tp, p, slab_bytes);
+    let orders: Vec<Vec<PipelineAction>> =
+        (0..p).map(|s| OneFOneB::stage_order(p, m, s)).collect();
+    let mut f_done = vec![vec![f64::NAN; m]; p];
+    let mut b_done = vec![vec![f64::NAN; m]; p];
+    let mut next = vec![0usize; p];
+    let mut free = vec![0.0f64; p];
+    let mut makespan = 0.0f64;
+    loop {
+        let mut progressed = false;
+        let mut all_done = true;
+        for s in 0..p {
+            while let Some(&a) = orders[s].get(next[s]) {
+                // NaN marks a dependency that has not landed yet.
+                let ready = match a {
+                    PipelineAction::Forward(_) if s == 0 => Some(0.0),
+                    PipelineAction::Forward(i) => {
+                        let d = f_done[s - 1][i];
+                        (!d.is_nan()).then(|| d + hops[s - 1])
+                    }
+                    PipelineAction::Backward(i) if s == p - 1 => {
+                        let d = f_done[s][i];
+                        (!d.is_nan()).then_some(d)
+                    }
+                    PipelineAction::Backward(i) => {
+                        let d = b_done[s + 1][i];
+                        (!d.is_nan()).then(|| d + hops[s])
+                    }
+                    PipelineAction::Bubble => unreachable!("orders carry no bubbles"),
+                };
+                let Some(ready) = ready else { break };
+                let end = free[s].max(ready)
+                    + match a {
+                        PipelineAction::Forward(_) => fwd_secs,
+                        _ => bwd_secs,
+                    };
+                match a {
+                    PipelineAction::Forward(i) => f_done[s][i] = end,
+                    PipelineAction::Backward(i) => b_done[s][i] = end,
+                    PipelineAction::Bubble => unreachable!(),
+                }
+                free[s] = end;
+                makespan = makespan.max(end);
+                next[s] += 1;
+                progressed = true;
+            }
+            all_done &= next[s] == orders[s].len();
+        }
+        if all_done {
+            break;
+        }
+        assert!(progressed, "pipeline DES deadlocked (pp={p}, m={m})");
+    }
+    makespan
+}
+
 // ---- legacy ClusterSpec-shaped wrappers -------------------------------
 //
 // Thin compatibility veneer: each lowers the cluster through
@@ -188,7 +361,8 @@ pub fn outer_schedule_over(
 /// wrapper over [`outer_sync_over`] on the two-level topology.
 pub fn des_outer_sync(dp: usize, tp: usize, v_total: f64, cluster: &ClusterSpec) -> f64 {
     let topo = Topology::two_level(cluster, dp);
-    let sync = OuterSync { dp, tp, wire: OuterWire::Flat, fragments: 1, overlap_window: 0.0 };
+    let sync =
+        OuterSync { dp, tp, pp: 1, wire: OuterWire::Flat, fragments: 1, overlap_window: 0.0 };
     outer_sync_over(&topo, &sync, v_total, CostModel::Des).exposed_secs
 }
 
@@ -200,7 +374,8 @@ pub fn des_outer_sync(dp: usize, tp: usize, v_total: f64, cluster: &ClusterSpec)
 pub fn des_outer_schedule(dp: usize, tp: usize, volumes: &[f64], cluster: &ClusterSpec) -> f64 {
     let tp = tp.max(1);
     let topo = Topology::two_level(cluster, dp);
-    let sync = OuterSync { dp, tp, wire: OuterWire::Flat, fragments: 1, overlap_window: 0.0 };
+    let sync =
+        OuterSync { dp, tp, pp: 1, wire: OuterWire::Flat, fragments: 1, overlap_window: 0.0 };
     let events: Vec<(f64, usize)> = volumes.iter().map(|&v| (v, 1)).collect();
     outer_schedule_over(&topo, &sync, &events, CostModel::Des)
 }
@@ -221,7 +396,7 @@ pub fn des_outer_sync_streaming(
     cluster: &ClusterSpec,
 ) -> StreamingOuterCost {
     let topo = Topology::two_level(cluster, dp);
-    let sync = OuterSync { dp, tp, wire: OuterWire::Flat, fragments, overlap_window };
+    let sync = OuterSync { dp, tp, pp: 1, wire: OuterWire::Flat, fragments, overlap_window };
     outer_sync_over(&topo, &sync, v_total, CostModel::Des)
 }
 
@@ -244,8 +419,14 @@ pub fn des_outer_sync_compressed(
     cluster: &ClusterSpec,
 ) -> f64 {
     let topo = Topology::two_level(cluster, dp);
-    let sync = OuterSync { dp, tp, wire: OuterWire::Hier { bytes_per_param }, fragments: 1,
-                           overlap_window: 0.0 };
+    let sync = OuterSync {
+        dp,
+        tp,
+        pp: 1,
+        wire: OuterWire::Hier { bytes_per_param },
+        fragments: 1,
+        overlap_window: 0.0,
+    };
     outer_sync_over(&topo, &sync, v_logical, CostModel::Des).exposed_secs
 }
 
@@ -264,8 +445,14 @@ pub fn des_outer_sync_streaming_compressed(
     cluster: &ClusterSpec,
 ) -> StreamingOuterCost {
     let topo = Topology::two_level(cluster, dp);
-    let sync =
-        OuterSync { dp, tp, wire: OuterWire::Hier { bytes_per_param }, fragments, overlap_window };
+    let sync = OuterSync {
+        dp,
+        tp,
+        pp: 1,
+        wire: OuterWire::Hier { bytes_per_param },
+        fragments,
+        overlap_window,
+    };
     outer_sync_over(&topo, &sync, v_logical, CostModel::Des)
 }
 
@@ -282,8 +469,14 @@ pub fn des_outer_schedule_compressed(
 ) -> f64 {
     let tp = tp.max(1);
     let topo = Topology::two_level(cluster, dp);
-    let sync = OuterSync { dp, tp, wire: OuterWire::Hier { bytes_per_param }, fragments: 1,
-                           overlap_window: 0.0 };
+    let sync = OuterSync {
+        dp,
+        tp,
+        pp: 1,
+        wire: OuterWire::Hier { bytes_per_param },
+        fragments: 1,
+        overlap_window: 0.0,
+    };
     let events: Vec<(f64, usize)> = volumes.iter().map(|&v| (v, 1)).collect();
     outer_schedule_over(&topo, &sync, &events, CostModel::Des)
 }
@@ -304,7 +497,7 @@ pub fn des_outer_schedule_streaming(
 ) -> f64 {
     let tp = tp.max(1);
     let topo = Topology::two_level(cluster, dp);
-    let sync = OuterSync { dp, tp, wire: OuterWire::Flat, fragments, overlap_window };
+    let sync = OuterSync { dp, tp, pp: 1, wire: OuterWire::Flat, fragments, overlap_window };
     let events: Vec<(f64, usize)> = volumes.iter().map(|&v| (v, fragments)).collect();
     outer_schedule_over(&topo, &sync, &events, CostModel::Des)
 }
@@ -449,14 +642,88 @@ mod tests {
     }
 
     #[test]
+    fn pipeline_pp1_is_pure_compute() {
+        // No boundaries: both engines collapse to m·(f+b), no residue.
+        let topo = Topology::two_level(&PERLMUTTER, 8);
+        let cf = pipeline_makespan(&topo, 2, 1, 8, 0.05, 0.1, 1e6);
+        assert_eq!(cf, 8.0 * (0.05 + 0.1));
+        let des = des_pipeline_makespan(&topo, 2, 1, 8, 0.05, 0.1, 1e6);
+        assert!((des - cf).abs() / cf < 1e-9, "{des} vs {cf}");
+    }
+
+    #[test]
+    fn pipeline_boundaries_follow_the_megatron_placement() {
+        // 4-GPU nodes: tp=1 keeps every boundary inside the node (NVLink
+        // hop); tp=4 pushes every boundary across the fabric, which can
+        // only cost more.
+        let topo = Topology::two_level(&PERLMUTTER, 8);
+        let slab = 8e6;
+        let intra = pp_boundary_hops(&topo, 1, 4, slab);
+        let inter = pp_boundary_hops(&topo, 4, 4, slab);
+        assert_eq!(intra.len(), 3);
+        assert_eq!(inter.len(), 3);
+        for (i, x) in intra.iter().zip(&inter) {
+            assert!(i <= x, "intra hop {i} !<= inter hop {x}");
+        }
+        assert!(inter[0] > intra[0], "fabric hop must out-price NVLink");
+        assert!(pp_boundary_hops(&topo, 4, 1, slab).is_empty());
+    }
+
+    #[test]
+    fn pipeline_des_tracks_closed_form_in_the_compute_dominated_regime() {
+        // Realistic shape: 30/60 ms compute slots vs an 8 MB activation
+        // slab (sub-ms on either fabric). The DES sees hop round trips on
+        // the steady-state critical path that the closed form folds into
+        // the trapezoid, so it may run long — but never by more than 2%
+        // when hops are small, and never short.
+        let topos =
+            [Topology::two_level(&PERLMUTTER, 8), Topology::fat_tree(&PERLMUTTER, 8, 4, 2.0)];
+        for topo in &topos {
+            for &(tp, pp, m) in
+                &[(1usize, 2usize, 4usize), (1, 2, 8), (4, 2, 8), (1, 4, 8), (4, 4, 16)]
+            {
+                let cf = pipeline_makespan(topo, tp, pp, m, 0.03, 0.06, 8e6);
+                let des = des_pipeline_makespan(topo, tp, pp, m, 0.03, 0.06, 8e6);
+                assert!(des >= cf * (1.0 - 1e-9),
+                        "tp={tp} pp={pp} m={m}: des {des} undercuts cf {cf}");
+                assert!((des - cf).abs() / cf < 0.02,
+                        "tp={tp} pp={pp} m={m}: des {des} vs cf {cf}");
+            }
+        }
+    }
+
+    #[test]
+    fn pipeline_makespan_monotone_in_depth() {
+        // Each added boundary pays at least one extra (f+b) trapezoid
+        // slot: deeper pipelines never model cheaper at fixed m.
+        let topo = Topology::two_level(&PERLMUTTER, 8);
+        let t = |pp| pipeline_makespan(&topo, 4, pp, 8, 0.03, 0.06, 8e6);
+        assert!(t(2) > t(1));
+        assert!(t(4) > t(2));
+        // and more micro-batches amortize: bubble fraction shrinks
+        let frac = |m: usize| {
+            let total = pipeline_makespan(&topo, 4, 4, m, 0.03, 0.06, 8e6);
+            let work = m as f64 * 0.09;
+            (total - work) / work
+        };
+        assert!(frac(16) < frac(4));
+    }
+
+    #[test]
     fn core_generalizes_the_wrappers_on_any_topology() {
         // The same OuterSync parameterization must price a non-two-level
         // graph without any wrapper involvement (the scenario-engine path)
         // and stay internally consistent: oversubscription can only slow
         // the sync down, and Analytic tracks Des on the new shapes too.
         let v = 6.2e9;
-        let sync = OuterSync { dp: 16, tp: 4, wire: OuterWire::Flat, fragments: 1,
-                               overlap_window: 0.0 };
+        let sync = OuterSync {
+            dp: 16,
+            tp: 4,
+            pp: 1,
+            wire: OuterWire::Flat,
+            fragments: 1,
+            overlap_window: 0.0,
+        };
         let flat = Topology::two_level(&PERLMUTTER, 16);
         let tree = Topology::fat_tree(&PERLMUTTER, 16, 4, 4.0);
         let t_flat = outer_sync_over(&flat, &sync, v, CostModel::Des).exposed_secs;

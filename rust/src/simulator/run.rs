@@ -422,7 +422,8 @@ pub fn simulate_run(s: &SimSetup) -> SimResult {
 /// applied only in [`outer_event`]; schedule costing stays uncalibrated.)
 pub fn cost_outer_schedule(dp: usize, tp: usize, volumes: &[f64], cluster: &ClusterSpec) -> f64 {
     let topo = Topology::two_level(cluster, dp);
-    let sync = OuterSync { dp, tp, wire: OuterWire::Flat, fragments: 1, overlap_window: 0.0 };
+    let sync =
+        OuterSync { dp, tp, pp: 1, wire: OuterWire::Flat, fragments: 1, overlap_window: 0.0 };
     let events: Vec<(f64, usize)> = volumes.iter().map(|&v| (v, 1)).collect();
     outer_schedule_over(&topo, &sync, &events, CostModel::Analytic)
 }
@@ -442,8 +443,14 @@ pub fn cost_outer_schedule_compressed(
     cluster: &ClusterSpec,
 ) -> f64 {
     let topo = Topology::two_level(cluster, dp);
-    let sync = OuterSync { dp, tp, wire: OuterWire::Hier { bytes_per_param }, fragments: 1,
-                           overlap_window: 0.0 };
+    let sync = OuterSync {
+        dp,
+        tp,
+        pp: 1,
+        wire: OuterWire::Hier { bytes_per_param },
+        fragments: 1,
+        overlap_window: 0.0,
+    };
     let events: Vec<(f64, usize)> = volumes.iter().map(|&v| (v, 1)).collect();
     outer_schedule_over(&topo, &sync, &events, CostModel::Analytic)
 }
@@ -483,7 +490,7 @@ pub fn cost_recorded_schedule_streaming(
     cluster: &ClusterSpec,
 ) -> f64 {
     let topo = Topology::two_level(cluster, dp);
-    let sync = OuterSync { dp, tp, wire: OuterWire::Flat, fragments: 1, overlap_window };
+    let sync = OuterSync { dp, tp, pp: 1, wire: OuterWire::Flat, fragments: 1, overlap_window };
     outer_schedule_over(&topo, &sync, events, CostModel::Analytic)
 }
 

@@ -22,7 +22,8 @@ use pier::coordinator::OuterController;
 use pier::netsim::{des_outer_schedule, des_outer_schedule_compressed,
                    des_outer_schedule_streaming, des_outer_sync, des_outer_sync_compressed,
                    des_outer_sync_streaming, des_outer_sync_streaming_compressed,
-                   outer_sync_time, ring_allreduce, FabricShape, Flow, Network, Topology};
+                   des_pipeline_makespan, outer_sync_time, pipeline_makespan, ring_allreduce,
+                   FabricShape, Flow, Network, Topology};
 use pier::perfmodel::gpu::{ClusterSpec, PERLMUTTER, VISTA};
 use pier::simulator::run::{cost_outer_schedule, cost_outer_schedule_compressed,
                            cost_outer_schedule_streaming};
@@ -354,6 +355,98 @@ fn des_degenerate_cases_are_free() {
     assert_eq!(des_outer_schedule(16, 2, &[], &PERLMUTTER), 0.0);
 }
 
+// ------------------------------------------------ pipeline-bubble crossval
+
+#[test]
+fn pipeline_des_and_closed_form_agree_within_2_pct() {
+    // DESIGN.md §12 cross-validation: the 1F1B closed form
+    // (m·(f+b) + Σ(f+b+2c) over the boundaries) against the DES
+    // longest-path sweep of the same schedule, over topologies ×
+    // (tp, pp, m) in the realistic regime — tens-of-ms compute slots vs a
+    // 4 MB activation slab (sub-ms on either fabric). The DES sees hop
+    // round trips on the steady-state critical path, so it may run long
+    // but never short.
+    let topos = [Topology::two_level(&PERLMUTTER, 8), Topology::two_level(&VISTA, 8),
+                 Topology::fat_tree(&PERLMUTTER, 8, 4, 2.0)];
+    for topo in &topos {
+        for &(tp, pp, m) in
+            &[(1usize, 2usize, 4usize), (1, 2, 8), (4, 2, 8), (1, 4, 8), (4, 4, 16)]
+        {
+            let cf = pipeline_makespan(topo, tp, pp, m, 0.05, 0.10, 4e6);
+            let des = des_pipeline_makespan(topo, tp, pp, m, 0.05, 0.10, 4e6);
+            assert!(cf > 0.0);
+            assert!(des >= cf * (1.0 - 1e-9),
+                    "tp={tp} pp={pp} m={m}: des {des} undercuts closed form {cf}");
+            assert!((des - cf).abs() / cf < 0.02,
+                    "tp={tp} pp={pp} m={m}: des {des} vs closed form {cf}");
+        }
+    }
+}
+
+#[test]
+fn pipeline_pp1_prices_exactly_as_pure_compute() {
+    // pp = 1 must reproduce today's numbers with no pipeline residue:
+    // the closed form is exactly m·(f+b), the DES the same modulo float
+    // summation order.
+    for topo in [Topology::two_level(&PERLMUTTER, 8), Topology::two_level(&VISTA, 4)] {
+        for m in [1usize, 4, 32] {
+            let cf = pipeline_makespan(&topo, 4, 1, m, 0.05, 0.10, 4e6);
+            assert_eq!(cf, m as f64 * (0.05 + 0.10), "m={m}");
+            let des = des_pipeline_makespan(&topo, 4, 1, m, 0.05, 0.10, 4e6);
+            assert!((des - cf).abs() <= 1e-9 * cf, "m={m}: {des} vs {cf}");
+        }
+    }
+}
+
+#[test]
+fn fig8_configs_pp_never_beats_the_bubble_bound() {
+    // Acceptance pin on the Fig-8 shape (gpt2-7b, TP=4, Perlmutter,
+    // H=50): splitting the layers over pp stages can at best divide the
+    // per-iteration compute by pp, and 1F1B then pays the (m+pp−1)/m
+    // bubble on top — so the modeled compute never drops below the
+    // bubble-scaled ideal split, and the P2P boundary traffic is
+    // strictly accounted.
+    use pier::config::model_or_die;
+    use pier::simulator::run::{inner_iter, Calib, SimSetup};
+    let model = model_or_die("gpt2-7b");
+    let mk = |pp: usize, dp: usize| SimSetup {
+        model,
+        cluster: &PERLMUTTER,
+        fabric: FabricShape::TwoLevel,
+        world: 4 * pp * dp,
+        tp: 4,
+        pp,
+        sync_fraction: 1.0,
+        stream_fragments: 0,
+        outer_compress: OuterCompress::None,
+        outer_quant_block: DEFAULT_QUANT_BLOCK,
+        groups: dp,
+        global_batch: 512,
+        sync_interval: 50,
+        mode: OptMode::Pier,
+        warmup_pct: 0.10,
+        iterations: 100_000,
+        cpu_offload: true,
+        calib: Calib::default(),
+    };
+    for dp in [8usize, 32, 64] {
+        let base = inner_iter(&mk(1, dp));
+        for pp in [2usize, 4] {
+            let s = mk(pp, dp);
+            assert!(s.pp_bubble() > 1.0, "pp={pp}: bubble factor must engage");
+            let it = inner_iter(&s);
+            let bound = base.compute / pp as f64 * s.pp_bubble();
+            assert!(it.compute >= bound * (1.0 - 1e-9),
+                    "dp={dp} pp={pp}: compute {} below bubble bound {bound}", it.compute);
+            // the bubble means pp never reaches the ideal 1/pp split
+            assert!(it.compute > base.compute / pp as f64 * 1.000001,
+                    "dp={dp} pp={pp}: bubble must cost something");
+            // P2P activation traffic joins the comm scope
+            assert!(it.tp_comm > 0.0, "dp={dp} pp={pp}");
+        }
+    }
+}
+
 // --------------------------------------------- topology bit-transparency pins
 
 /// The pre-topology `des_outer_sync`, reimplemented inline exactly as it
@@ -488,11 +581,12 @@ fn sweep_two_level_rows_match_pier_simulate_and_emit_valid_pareto_json() {
     let mut two_level = 0usize;
     for r in &rows {
         let sc = scenario(r.scenario).expect("registry covers every sweep row");
-        let s = sweep_setup(&axes, sc, r.world, r.tp, r.compress, r.fragments, r.sync_fraction);
+        let s = sweep_setup(&axes, sc, r.world, r.tp, r.pp, r.compress, r.fragments,
+                            r.sync_fraction);
         let sim = simulate_run(&s);
         assert_eq!(r.makespan_secs.to_bits(), sim.total_secs.to_bits(),
-                   "{} world={} tp={}: sweep row diverges from simulate",
-                   r.scenario, r.world, r.tp);
+                   "{} world={} tp={} pp={}: sweep row diverges from simulate",
+                   r.scenario, r.world, r.tp, r.pp);
         if matches!(sc.fabric, FabricShape::TwoLevel) {
             two_level += 1;
         }
@@ -506,6 +600,7 @@ fn sweep_two_level_rows_match_pier_simulate_and_emit_valid_pareto_json() {
     assert_eq!(jrows.len(), rows.len());
     for (j, r) in jrows.iter().zip(&rows) {
         assert_eq!(j.get("scenario").and_then(|s| s.as_str()), Some(r.scenario));
+        assert_eq!(j.get("pp").and_then(|v| v.as_f64()), Some(r.pp as f64));
         assert_eq!(j.get("pareto").and_then(|v| v.as_bool()), Some(r.pareto));
         let m = j.get("makespan_secs").and_then(|v| v.as_f64()).unwrap();
         assert!((m - r.makespan_secs).abs() <= 1e-9 * r.makespan_secs.abs().max(1.0));
@@ -514,26 +609,26 @@ fn sweep_two_level_rows_match_pier_simulate_and_emit_valid_pareto_json() {
     }
 
     // Pareto validity: no frontier row is strictly dominated in its
-    // (scenario, world, tp) cell, and every cell keeps at least one.
-    let mut cells_with_pareto: BTreeSet<(&str, usize, usize)> = BTreeSet::new();
+    // (scenario, world, tp, pp) cell, and every cell keeps at least one.
+    let mut cells_with_pareto: BTreeSet<(&str, usize, usize, usize)> = BTreeSet::new();
     for a in rows.iter().filter(|r| r.pareto) {
-        cells_with_pareto.insert((a.scenario, a.world, a.tp));
+        cells_with_pareto.insert((a.scenario, a.world, a.tp, a.pp));
     }
     for a in &rows {
-        assert!(cells_with_pareto.contains(&(a.scenario, a.world, a.tp)),
-                "cell ({}, {}, {}) lost its frontier", a.scenario, a.world, a.tp);
+        assert!(cells_with_pareto.contains(&(a.scenario, a.world, a.tp, a.pp)),
+                "cell ({}, {}, {}, {}) lost its frontier", a.scenario, a.world, a.tp, a.pp);
         if !a.pareto {
             continue;
         }
         for b in &rows {
-            if (b.scenario, b.world, b.tp) != (a.scenario, a.world, a.tp) {
+            if (b.scenario, b.world, b.tp, b.pp) != (a.scenario, a.world, a.tp, a.pp) {
                 continue;
             }
             let dominates = b.makespan_secs <= a.makespan_secs
                 && b.wire_bytes <= a.wire_bytes
                 && (b.makespan_secs < a.makespan_secs || b.wire_bytes < a.wire_bytes);
-            assert!(!dominates, "frontier row ({}, {}, {}) is dominated",
-                    a.scenario, a.world, a.tp);
+            assert!(!dominates, "frontier row ({}, {}, {}, {}) is dominated",
+                    a.scenario, a.world, a.tp, a.pp);
         }
     }
 }

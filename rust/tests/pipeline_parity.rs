@@ -1,0 +1,264 @@
+//! Pipeline-parallel bit-transparency over the (groups, tp, pp) grid
+//! (DESIGN.md §12).
+//!
+//! The pp layout is **pure data movement**: layers span-shard over `pp`
+//! stages and micro-batch slabs cross the stage boundaries through the
+//! deterministic P2P primitives (`collective::pp_send_recv_into` —
+//! bit-exact copies by construction), while the host computes the same
+//! numbers in the same order (1F1B completes backwards in micro order —
+//! `OneFOneB::backward_order`). Two contracts, both at the f32/f64 bit
+//! level:
+//!
+//! * `pp = 1` is **bit-identical to the pre-pipeline path** — same
+//!   losses, same final params, same comm stats, including all-zero pp
+//!   scope (pinned against an independently written reference loop that
+//!   contains no pp code at all);
+//! * `pp > 1` reproduces the `pp = 1` trajectory bit for bit under every
+//!   outer mode — blocking, streaming (F=4), int8-compressed, and the
+//!   composed int8+streaming schedule — while the pp comm scope fills in
+//!   with exactly the accounted P2P traffic.
+//!
+//! The suite is driven by `ci.sh` under both `PIER_THREADS` legs: the
+//! controller's span-parallel sync paths must hold the same bits on the
+//! serial and the pooled schedule.
+
+use pier::config::{OptMode, OuterCompress, TrainConfig};
+use pier::coordinator::collective::{fragment_span, note_inner_allreduce, note_pp_step,
+                                    note_tp_step, pp_send_recv_into, CommStats};
+use pier::coordinator::OuterController;
+use pier::testing::oracle::{inner_step, make_groups, target};
+
+const N: usize = 48;
+const ITERS: usize = 60;
+const H: usize = 10;
+
+/// Which outer-sync schedule the run drives through the controller.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Mode {
+    Blocking,
+    Streaming,
+    Int8,
+    Int8Streaming,
+}
+
+const MODES: [Mode; 4] = [Mode::Blocking, Mode::Streaming, Mode::Int8, Mode::Int8Streaming];
+
+struct ToyRunLog {
+    losses: Vec<f64>,
+    final_params: Vec<Vec<f32>>,
+    stats: CommStats,
+}
+
+fn config(tp: usize, pp: usize, mode: Mode) -> TrainConfig {
+    let mut cfg = TrainConfig::default_for(1000);
+    cfg.mode = OptMode::DiLoCo;
+    cfg.sync_interval = H;
+    cfg.tp = tp;
+    cfg.pp = pp;
+    match mode {
+        Mode::Blocking => {}
+        Mode::Streaming => cfg.stream_fragments = 4,
+        Mode::Int8 => {
+            cfg.outer_compress = OuterCompress::Int8;
+            cfg.gpus_per_node = 1; // every group leads its node: fabric hop exists
+        }
+        Mode::Int8Streaming => {
+            cfg.outer_compress = OuterCompress::Int8;
+            cfg.gpus_per_node = 1;
+            cfg.stream_fragments = 4;
+        }
+    }
+    cfg
+}
+
+/// Phase-B-shaped run in the trainer's DP×TP×PP step shape: per inner
+/// step the oracle computes the math, then (pp > 1) every stage span of
+/// the group's state takes the executed P2P round trip — the
+/// activation-forward and grad-backward hops of the 1F1B boundary,
+/// `pp_send_recv_into` both ways — exactly the movement
+/// `Trainer::accumulated_step` runs on the host gradient. The movement is
+/// bit-exact copying, so it must never change a single bit of the
+/// trajectory; the comm stats record it in the pp scope (`note_pp_step`).
+fn run(k: usize, tp: usize, pp: usize, mode: Mode, seed: u64) -> ToyRunLog {
+    let tgt = target(N);
+    let cfg = config(tp, pp, mode);
+    let mut groups = make_groups(N, k, seed);
+    let mut ctl = OuterController::new(&cfg, &groups[0].params);
+    let mut stats = CommStats::default();
+    let mut slab: Vec<f32> = Vec::new();
+    let mut losses = Vec::with_capacity(ITERS);
+    for t in 0..ITERS {
+        let mut acc = 0.0;
+        for g in groups.iter_mut() {
+            let (loss, _) = inner_step(g, &tgt, tp);
+            acc += loss;
+            if pp > 1 {
+                for s in 1..pp {
+                    let (lo, hi) = fragment_span(N, pp, s);
+                    slab.resize(hi - lo, 0.0);
+                    pp_send_recv_into(&g.params[lo..hi], &mut slab); // activation fwd
+                    pp_send_recv_into(&slab, &mut g.params[lo..hi]); // grad bwd
+                }
+            }
+            note_inner_allreduce(N, &mut stats);
+            note_tp_step(N, tp, &mut stats);
+            note_pp_step(N, pp, 1, &mut stats);
+        }
+        losses.push(acc / k as f64);
+        if (t + 1) % H == 0 {
+            let refs: Vec<&[f32]> = groups.iter().map(|g| g.params.as_slice()).collect();
+            let next: Vec<f32> = match mode {
+                Mode::Streaming | Mode::Int8Streaming => {
+                    ctl.sync_streaming(t + 1, &refs, &mut stats).to_vec()
+                }
+                Mode::Blocking | Mode::Int8 => ctl.sync_in_place(t + 1, &refs, &mut stats).to_vec(),
+            };
+            for g in groups.iter_mut() {
+                g.params.copy_from_slice(&next);
+            }
+        }
+    }
+    ToyRunLog {
+        losses,
+        final_params: groups.into_iter().map(|g| g.params).collect(),
+        stats,
+    }
+}
+
+/// The pre-pipeline reference loop, written with **no pp code at all** —
+/// the exact Phase-B shape `streaming_parity.rs` has pinned since the
+/// streaming PR: oracle steps, DP/TP accounting, the real
+/// `OuterController` doing the every-`H` blocking sync. `cfg.pp` is never
+/// assigned (`default_for` leaves it at the back-compat default) and
+/// neither `note_pp_step` nor any P2P movement appears, so this is the
+/// seed trainer as it ran before the pipeline axis existed.
+fn reference_run_pre_pp(k: usize, tp: usize, seed: u64) -> ToyRunLog {
+    let tgt = target(N);
+    let mut cfg = TrainConfig::default_for(1000);
+    cfg.mode = OptMode::DiLoCo;
+    cfg.sync_interval = H;
+    cfg.tp = tp;
+    let mut groups = make_groups(N, k, seed);
+    let mut ctl = OuterController::new(&cfg, &groups[0].params);
+    let mut stats = CommStats::default();
+    let mut losses = Vec::with_capacity(ITERS);
+    for t in 0..ITERS {
+        let mut acc = 0.0;
+        for g in groups.iter_mut() {
+            let (loss, _) = inner_step(g, &tgt, tp);
+            acc += loss;
+            note_inner_allreduce(N, &mut stats);
+            note_tp_step(N, tp, &mut stats);
+        }
+        losses.push(acc / k as f64);
+        if (t + 1) % H == 0 {
+            let refs: Vec<&[f32]> = groups.iter().map(|g| g.params.as_slice()).collect();
+            let next = ctl.sync_in_place(t + 1, &refs, &mut stats).to_vec();
+            for g in groups.iter_mut() {
+                g.params.copy_from_slice(&next);
+            }
+        }
+    }
+    ToyRunLog {
+        losses,
+        final_params: groups.into_iter().map(|g| g.params).collect(),
+        stats,
+    }
+}
+
+fn loss_bits(log: &ToyRunLog) -> Vec<u64> {
+    log.losses.iter().map(|l| l.to_bits()).collect()
+}
+
+fn param_bits(log: &ToyRunLog) -> Vec<Vec<u32>> {
+    log.final_params
+        .iter()
+        .map(|p| p.iter().map(|x| x.to_bits()).collect())
+        .collect()
+}
+
+#[test]
+fn pp1_losses_and_params_match_the_pre_pipeline_path_bitwise() {
+    // The pp = 1 configuration must be the pre-PR trainer, bit for bit:
+    // the reference loop contains no pp code anywhere — `cfg.pp` is never
+    // written, no P2P movement, no pp accounting — and the pp = 1 run must
+    // reproduce it exactly: same losses, same final params, and the
+    // *entire* CommStats equal (which pins the pp scope to zero and every
+    // shared scope to the seed formulas at once).
+    for k in [1usize, 2] {
+        for tp in [1usize, 2] {
+            let pp1 = run(k, tp, 1, Mode::Blocking, 1234);
+            let pre = reference_run_pre_pp(k, tp, 1234);
+            assert_eq!(loss_bits(&pp1), loss_bits(&pre), "k={k} tp={tp}");
+            assert_eq!(param_bits(&pp1), param_bits(&pre), "k={k} tp={tp}");
+            assert_eq!(pp1.stats, pre.stats, "k={k} tp={tp}: stats diverged");
+            // and the pp scope never fills in at pp = 1
+            assert_eq!(pp1.stats.pp_send_calls, 0, "k={k} tp={tp}");
+            assert_eq!(pp1.stats.pp_bytes, 0.0, "k={k} tp={tp}");
+        }
+    }
+}
+
+#[test]
+fn pp_is_bit_transparent_over_the_groups_x_tp_x_pp_grid() {
+    // The tentpole contract: over (groups, tp, pp) ∈ {1,2} × {1,2} ×
+    // {1,2,4} and every outer mode, pp is invisible to the math — losses
+    // and final params bit-identical to the pp = 1 run of the same
+    // (groups, tp, mode, seed) — while the comm schedule changes in
+    // exactly the accounted way: the pp P2P scope fills in, nothing else
+    // moves.
+    for mode in MODES {
+        for k in [1usize, 2] {
+            for tp in [1usize, 2] {
+                let base = run(k, tp, 1, mode, 99);
+                for pp in [2usize, 4] {
+                    let ppr = run(k, tp, pp, mode, 99);
+                    assert_eq!(loss_bits(&base), loss_bits(&ppr),
+                               "{mode:?} k={k} tp={tp} pp={pp}: pp changed the math");
+                    assert_eq!(param_bits(&base), param_bits(&ppr),
+                               "{mode:?} k={k} tp={tp} pp={pp}: params diverged");
+
+                    // pp scope: 2 hops per boundary per micro (m = 1 here),
+                    // per group per iteration, at the bf16 slab proxy.
+                    let hops = (2 * (pp - 1) * ITERS * k) as u64;
+                    assert_eq!(ppr.stats.pp_send_calls, hops, "{mode:?} k={k} tp={tp} pp={pp}");
+                    let slab = 2.0 * N as f64 * (pp as f64 - 1.0) / pp as f64;
+                    let expect = 2.0 * slab * (ITERS * k) as f64;
+                    assert_eq!(ppr.stats.pp_bytes, expect, "{mode:?} k={k} tp={tp} pp={pp}");
+                    assert!(ppr.stats.total_bytes() > base.stats.total_bytes(),
+                            "{mode:?} k={k} tp={tp} pp={pp}: pp traffic must be accounted");
+
+                    // every other scope is byte-for-byte the pp = 1
+                    // schedule: zero the pp scope and the stats must be
+                    // equal as a whole.
+                    let mut scrubbed = ppr.stats.clone();
+                    scrubbed.pp_send_calls = 0;
+                    scrubbed.pp_bytes = 0.0;
+                    assert_eq!(scrubbed, base.stats,
+                               "{mode:?} k={k} tp={tp} pp={pp}: non-pp scopes drifted");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn int8_wire_stays_narrow_under_pp() {
+    // DESIGN.md §9 × §12 interaction: the pp split must not widen the
+    // compressed outer wire — the recorded wire bytes are identical across
+    // pp (and strictly below the fp32 logical volume).
+    let base = run(2, 1, 1, Mode::Int8, 7);
+    for pp in [2usize, 4] {
+        let ppr = run(2, 1, pp, Mode::Int8, 7);
+        assert_eq!(ppr.stats.outer_wire_bytes, base.stats.outer_wire_bytes, "pp={pp}");
+        assert!(ppr.stats.outer_wire_bytes < ppr.stats.outer_allreduce_bytes, "pp={pp}");
+    }
+}
+
+#[test]
+fn different_seeds_actually_diverge() {
+    // Guard against a vacuous parity suite: the run is seed-sensitive.
+    let a = run(2, 1, 2, Mode::Blocking, 1);
+    let b = run(2, 1, 2, Mode::Blocking, 2);
+    assert_ne!(loss_bits(&a), loss_bits(&b));
+}

@@ -6,7 +6,7 @@ use pier::config::{NesterovKind, OptMode, OuterCompress, TrainConfig};
 use pier::coordinator::collective::{all_reduce_mean, fragment_span, shard_span};
 use pier::coordinator::compress::{dequantize_into, dequantize_with_residual_into,
                                   quantize_into, wire_bytes, QuantBuf};
-use pier::coordinator::OuterController;
+use pier::coordinator::{stage_layer_span, OneFOneB, OuterController, PipelineAction};
 use pier::data::{CorpusGen, CorpusSpec, Sampler, TokenDataset, Tokenizer};
 use pier::netsim::{des_outer_sync, des_outer_sync_streaming, outer_sync_time, ring_allreduce,
                    FabricShape, JitterSpec, Topology};
@@ -659,6 +659,149 @@ fn prop_pier_never_slower_than_adamw_beyond_a_node_at_h500() {
         sa.mode = OptMode::AdamW;
         let ta = simulate_run(&sa).total_secs;
         ensure(tp_ <= ta * 1.001, format!("pier {tp_} vs adamw {ta} @{world}"))
+    });
+}
+
+// ------------------------------------------------- 1F1B pipeline schedule
+
+#[test]
+fn prop_1f1b_runs_forward_before_backward_exactly_once_per_stage_micro() {
+    // The schedule's correctness core: at every stage, every micro-batch
+    // appears as exactly one Forward and exactly one Backward, with the
+    // Forward in a strictly earlier slot — and the backwards retire in
+    // micro order, the accumulation-order keystone of the pp
+    // bit-transparency contract (DESIGN.md §12).
+    check("1f1b-exactly-once", |g: &mut Gen| {
+        let p = g.usize(1, 8);
+        let m = g.usize(1, 16);
+        let s = OneFOneB::new(p, m);
+        for st in 0..p {
+            let mut f_slot = vec![None; m];
+            let mut b_slot = vec![None; m];
+            for (t, a) in s.stage_slots(st).iter().enumerate() {
+                match a {
+                    PipelineAction::Forward(i) => {
+                        ensure(f_slot[*i].is_none(),
+                               format!("p={p} m={m} stage {st}: micro {i} forwarded twice"))?;
+                        f_slot[*i] = Some(t);
+                    }
+                    PipelineAction::Backward(i) => {
+                        ensure(b_slot[*i].is_none(),
+                               format!("p={p} m={m} stage {st}: micro {i} backwarded twice"))?;
+                        b_slot[*i] = Some(t);
+                    }
+                    PipelineAction::Bubble => {}
+                }
+            }
+            for i in 0..m {
+                match (f_slot[i], b_slot[i]) {
+                    (Some(f), Some(b)) => {
+                        ensure(f < b, format!("p={p} m={m} stage {st}: micro {i} B before F"))?
+                    }
+                    _ => ensure(false, format!("p={p} m={m} stage {st}: micro {i} missing"))?,
+                }
+            }
+            ensure(s.backward_order(st) == (0..m).collect::<Vec<_>>(),
+                   format!("p={p} m={m} stage {st}: backwards out of micro order"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_1f1b_in_flight_high_water_bounded_by_depth() {
+    // 1F1B's reason to exist over GPipe: the activation high-water mark at
+    // stage s is min(m, p−s) — never more than the pipeline depth — where
+    // GPipe holds all m micro-batches.
+    check("1f1b-in-flight", |g: &mut Gen| {
+        let p = g.usize(1, 8);
+        let m = g.usize(1, 16);
+        let s = OneFOneB::new(p, m);
+        for st in 0..p {
+            let hw = s.in_flight_high_water(st);
+            ensure(hw == m.min(p - st),
+                   format!("p={p} m={m} stage {st}: high water {hw} != min(m, p−s)"))?;
+            ensure(hw <= p, format!("p={p} m={m} stage {st}: high water {hw} > depth"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_1f1b_bubble_budget_follows_the_closed_form() {
+    // Makespan 2m + 2(p−1) unit slots; every stage idles exactly 2(p−1) of
+    // them — s in its fill ladder (it cannot start before slot s), s in its
+    // drain ladder (backwards flow upward, so stage s goes quiet s slots
+    // before stage 0), the rest as steady-state gaps — which is the
+    // (p−1)/m bubble fraction both cost models price.
+    check("1f1b-bubbles", |g: &mut Gen| {
+        let p = g.usize(1, 8);
+        let m = g.usize(1, 16);
+        let s = OneFOneB::new(p, m);
+        ensure(s.makespan() == 2 * m + 2 * (p - 1),
+               format!("p={p} m={m}: makespan {}", s.makespan()))?;
+        for st in 0..p {
+            let row = s.stage_slots(st);
+            ensure(s.bubble_slots(st) == 2 * (p - 1),
+                   format!("p={p} m={m} stage {st}: {} bubbles", s.bubble_slots(st)))?;
+            let first = row.iter().position(|a| *a != PipelineAction::Bubble);
+            let last = row.iter().rposition(|a| *a != PipelineAction::Bubble);
+            ensure(first == Some(st), format!("p={p} m={m} stage {st}: fill ladder"))?;
+            ensure(last == Some(s.makespan() - 1 - st),
+                   format!("p={p} m={m} stage {st}: drain ladder"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_stage_layer_spans_partition_layers_exactly_once() {
+    // The pipeline's layer split is the single-sourced balanced contiguous
+    // partition: stage spans tile [0, n_layers) exactly — no overlap, no
+    // gap, balanced to ±1 — for any (layers, pp) with pp ≤ layers.
+    check("stage-layer-partition", |g: &mut Gen| {
+        let layers = g.usize(1, 200);
+        let pp = g.usize(1, 16.min(layers));
+        let base = layers / pp;
+        let mut prev = 0;
+        for st in 0..pp {
+            let (lo, hi) = stage_layer_span(layers, pp, st);
+            ensure(lo == prev, format!("layers={layers} pp={pp} stage {st}: contiguous"))?;
+            ensure(hi - lo == base || hi - lo == base + 1,
+                   format!("layers={layers} pp={pp} stage {st}: balanced"))?;
+            prev = hi;
+        }
+        ensure(prev == layers, "spans must cover every layer")
+    });
+}
+
+#[test]
+fn prop_1f1b_schedule_is_identical_across_threads() {
+    // The schedule is a pure function of (p, m) — no clocks, threads, or
+    // RNG — so the grid built on another OS thread (as under the CI
+    // PIER_THREADS pool legs) must match bit for bit, and the grid's
+    // non-bubble subsequence must be exactly the per-stage work order.
+    check("1f1b-thread-invariant", |g: &mut Gen| {
+        let p = g.usize(1, 8);
+        let m = g.usize(1, 16);
+        let here: Vec<Vec<PipelineAction>> = {
+            let s = OneFOneB::new(p, m);
+            (0..p).map(|st| s.stage_slots(st).to_vec()).collect()
+        };
+        let theirs = std::thread::spawn(move || {
+            let s = OneFOneB::new(p, m);
+            (0..p).map(|st| s.stage_slots(st).to_vec()).collect::<Vec<_>>()
+        })
+        .join()
+        .map_err(|_| "schedule thread panicked".to_string())?;
+        ensure(here == theirs, format!("p={p} m={m}: grid differs across threads"))?;
+        for st in 0..p {
+            let squeezed: Vec<PipelineAction> =
+                here[st].iter().copied().filter(|a| *a != PipelineAction::Bubble).collect();
+            ensure(squeezed == OneFOneB::stage_order(p, m, st),
+                   format!("p={p} m={m} stage {st}: grid vs work order"))?;
+        }
+        Ok(())
     });
 }
 
