@@ -46,6 +46,7 @@ fn main() {
         warmup_pct: 0.10,
         iterations: 100_000,
         cpu_offload: false,
+        outer_shard: false,
         calib: Calib::default(),
     };
     let r = bench_quick("simulate_run/xl_256gpu", || {

@@ -49,6 +49,9 @@ cargo test -q
 echo "==> pier sweep --smoke (topology scenario grid + Pareto JSON)"
 cargo run --release --bin pier -- sweep --smoke --out sweep_pareto.json
 test -s sweep_pareto.json
+# The memory ledger's peak-bytes column (DESIGN.md §13) must reach the
+# Pareto artifact — every row carries a peak_gb figure.
+grep -q '"peak_gb"' sweep_pareto.json
 
 # The quantization kernels (coordinator::compress) are span-parallel; the
 # property suite must hold on both the serial and the threaded schedule

@@ -1,6 +1,9 @@
 //! Training configuration (paper Table I + Pier's §IV/§V hyperparameters).
 
+use anyhow::{anyhow, ensure, Result};
+
 use crate::config::parallel::ParallelConfig;
+use crate::util::args::Args;
 use crate::util::json::Json;
 
 /// Which optimizer drives the run — the three arms of every convergence
@@ -178,6 +181,15 @@ pub struct TrainConfig {
     /// Quantization block of the int8 compression: one f32 scale per this
     /// many parameters. Ignored under `outer_compress = none`.
     pub outer_quant_block: usize,
+    /// ZeRO-shard the outer-optimizer state across the outer clique
+    /// (extension, DESIGN.md §13): each node leader owns its
+    /// `collective::fragment_span` slice of the outer momentum + committed
+    /// params, the outer step runs reduce-scatter → shard Nesterov →
+    /// restart all-gather, and per-leader outer-state memory drops ~k×
+    /// (k = node-leader count). Bit-identical to the replicated outer step
+    /// for every k; composes with streaming, partial sync, int8, offload,
+    /// and the v2 checkpoint (`pier train --outer-shard`).
+    pub outer_shard: bool,
 
     /// Step the K groups concurrently on the scoped thread pool during the
     /// inner phase (default). `false` forces the legacy serial schedule —
@@ -217,6 +229,7 @@ impl TrainConfig {
             stream_fragments: 0,
             outer_compress: OuterCompress::None,
             outer_quant_block: DEFAULT_QUANT_BLOCK,
+            outer_shard: false,
             parallel_groups: true,
             eval_interval: 0,
             seed: 1234,
@@ -266,6 +279,37 @@ impl TrainConfig {
         self.global_batch / self.groups
     }
 
+    /// Apply the CLI's shared layout/relaxation flags onto this config —
+    /// THE one place `--tp`/`--pp`/`--stream-fragments`/`--outer-compress`/
+    /// `--quant-block`/`--sync-fraction`/`--offload`/`--outer-shard` (plus
+    /// `--batch`/`--interval`) are interpreted, shared by `pier train` and
+    /// `pier simulate` (which historically each hand-rolled the same
+    /// parses; the sweep's comma-list *axes* expand into per-row configs
+    /// through the same `SimSetup` constructor instead). Absent options
+    /// keep the current value, so command-specific defaults are set on
+    /// `self` before calling.
+    pub fn apply_cli_overrides(&mut self, args: &Args) -> Result<()> {
+        self.global_batch = args.usize_or("batch", self.global_batch);
+        self.sync_interval = args.usize_or("interval", self.sync_interval);
+        self.tp = args.usize_or("tp", self.tp);
+        self.pp = args.usize_or("pp", self.pp);
+        self.sync_fraction = args.f64_or("sync-fraction", self.sync_fraction);
+        self.stream_fragments = args.usize_or("stream-fragments", self.stream_fragments);
+        if let Some(s) = args.get("outer-compress") {
+            self.outer_compress = OuterCompress::parse(s)
+                .ok_or_else(|| anyhow!("--outer-compress must be none|int8"))?;
+        }
+        self.outer_quant_block = args.usize_or("quant-block", self.outer_quant_block);
+        ensure!(self.outer_quant_block > 0, "--quant-block must be positive");
+        if args.flag("offload") {
+            self.cpu_offload = true;
+        }
+        if args.flag("outer-shard") {
+            self.outer_shard = true;
+        }
+        Ok(())
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("mode", Json::str(self.mode.name())),
@@ -297,6 +341,7 @@ impl TrainConfig {
             ("stream_fragments", Json::num(self.stream_fragments as f64)),
             ("outer_compress", Json::str(self.outer_compress.name())),
             ("outer_quant_block", Json::num(self.outer_quant_block as f64)),
+            ("outer_shard", Json::Bool(self.outer_shard)),
             ("parallel_groups", Json::Bool(self.parallel_groups)),
             ("eval_interval", Json::num(self.eval_interval as f64)),
             ("seed", Json::num(self.seed as f64)),
@@ -338,6 +383,9 @@ impl TrainConfig {
         };
         c.outer_quant_block =
             j.get("outer_quant_block").and_then(Json::as_usize).unwrap_or(DEFAULT_QUANT_BLOCK);
+        // Pre-sharding configs (no "outer_shard" key) keep the replicated
+        // outer state.
+        c.outer_shard = j.get("outer_shard").and_then(Json::as_bool).unwrap_or(false);
         c.parallel_groups = j.get("parallel_groups").and_then(Json::as_bool).unwrap_or(true);
         c.eval_interval = j.get("eval_interval")?.as_usize()?;
         c.seed = j.get("seed")?.as_f64()? as u64;
@@ -451,6 +499,58 @@ mod tests {
         let c2 = TrainConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
         assert_eq!(c2.tp, 1);
         assert_eq!(c2.gpus_per_node, 4);
+    }
+
+    #[test]
+    fn json_without_outer_shard_defaults_to_replicated() {
+        // Pre-sharding configs (no "outer_shard" key) must keep loading on
+        // the replicated outer state.
+        let c = TrainConfig::default_for(100);
+        let j = c.to_json().to_string().replace("\"outer_shard\":false,", "");
+        let c2 = TrainConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert!(!c2.outer_shard);
+        // …and the knob itself round-trips.
+        let mut c3 = TrainConfig::default_for(100);
+        c3.outer_shard = true;
+        let j3 = c3.to_json();
+        assert!(TrainConfig::from_json(&Json::parse(&j3.to_string()).unwrap())
+            .unwrap()
+            .outer_shard);
+    }
+
+    #[test]
+    fn apply_cli_overrides_parses_the_shared_flags_once() {
+        let argv = "train --tp 4 --pp 2 --stream-fragments 3 --outer-compress int8 \
+                    --quant-block 128 --batch 64 --interval 25 --sync-fraction 0.5 \
+                    --offload --outer-shard";
+        let args = Args::parse(argv.split_whitespace().map(str::to_string));
+        let mut c = TrainConfig::default_for(100);
+        c.apply_cli_overrides(&args).unwrap();
+        assert_eq!(c.tp, 4);
+        assert_eq!(c.pp, 2);
+        assert_eq!(c.stream_fragments, 3);
+        assert_eq!(c.outer_compress, OuterCompress::Int8);
+        assert_eq!(c.outer_quant_block, 128);
+        assert_eq!(c.global_batch, 64);
+        assert_eq!(c.sync_interval, 25);
+        assert_eq!(c.sync_fraction, 0.5);
+        assert!(c.cpu_offload);
+        assert!(c.outer_shard);
+
+        // absent options keep the caller's defaults…
+        let none = Args::parse(["train".to_string()].into_iter());
+        let mut d = TrainConfig::default_for(100);
+        d.global_batch = 512;
+        d.apply_cli_overrides(&none).unwrap();
+        assert_eq!(d.global_batch, 512);
+        assert_eq!(d.tp, 1);
+        assert!(!d.cpu_offload && !d.outer_shard);
+
+        // …and the two error paths reject bad values.
+        let bad = Args::parse("train --outer-compress fp4".split_whitespace().map(str::to_string));
+        assert!(TrainConfig::default_for(100).apply_cli_overrides(&bad).is_err());
+        let zero = Args::parse("train --quant-block 0".split_whitespace().map(str::to_string));
+        assert!(TrainConfig::default_for(100).apply_cli_overrides(&zero).is_err());
     }
 
     #[test]

@@ -422,6 +422,23 @@ pub fn fragment_span(n: usize, fragments: usize, idx: usize) -> (usize, usize) {
     shard_span(n, fragments, idx)
 }
 
+/// All `k` owner spans of the balanced [`fragment_span`] partition of
+/// `[0, n)` — the ZeRO shard layout of the sharded outer optimizer
+/// (DESIGN.md §13): node leader `r` owns span `r` of its outer momentum,
+/// anchor, and committed view. The spans tile the vector exactly, so
+/// per-leader owned bytes sum to the replicated total (pinned by the
+/// memory-ledger property tests).
+///
+/// ```
+/// use pier::coordinator::collective::fragment_spans;
+/// assert_eq!(fragment_spans(10, 4), vec![(0, 2), (2, 5), (5, 7), (7, 10)]);
+/// assert_eq!(fragment_spans(10, 1), vec![(0, 10)]); // k = 1: replicated
+/// ```
+pub fn fragment_spans(n: usize, k: usize) -> Vec<(usize, usize)> {
+    let k = k.max(1);
+    (0..k).map(|r| fragment_span(n, k, r)).collect()
+}
+
 /// Two-stage fragment pipeline: `produce(f)` emits fragment `f`'s payload
 /// on a worker thread while `consume(f, payload)` drains completed
 /// fragments on the calling thread — so fragment `f+1`'s all-reduce +

@@ -41,7 +41,7 @@ pub use collective::{all_gather_into, all_reduce_mean, all_reduce_mean_fragment_
 pub use compress::{HierState, QuantBuf};
 pub use group::WorkerGroup;
 pub use offload::{OffloadStats, OffloadStore};
-pub use outer::{OuterController, OuterResult};
+pub use outer::{OuterController, OuterResult, SyncKind, SyncPlan, SyncSpan};
 pub use parallel::ParallelExecutor;
 pub use pipeline::{stage_layer_span, OneFOneB, PipelineAction};
 pub use state::{load_any, AnyCheckpoint, Checkpoint, CheckpointV2, GroupState, OuterState};

@@ -19,13 +19,46 @@
 //! 10 % switch the accumulated trajectory has run `0.10·T` steps, so the
 //! boundary query `outer_momentum(cfg, 0.10·T)` already returns 0.99.
 //!
+//! # One entry point: `sync(&SyncPlan, …)`
+//!
+//! PR 9 collapses the historically separate `sync_*` methods onto the
+//! single [`OuterController::sync`] entry point driven by a [`SyncPlan`]
+//! — [`SyncPlan::from_config`] is the *one* place mode selection happens
+//! (blocking / rotating partial / streaming ± pipelined / quorum, each ×
+//! compression × ZeRO sharding). The legacy names remain as
+//! `#[deprecated]` one-line wrappers, pinned bit-identical to the plan
+//! dispatch by the parity suites.
+//!
 //! # Allocation discipline
 //!
-//! The full-model sync path ([`OuterController::sync_in_place`]) reuses
-//! four controller-owned scratch buffers (mean, delta, committed, restart)
-//! allocated once at construction — an outer step performs **zero**
-//! full-model allocations or clones. The allocating [`OuterController::sync`]
-//! wrapper remains for tests and benches that want owned results.
+//! The full-model sync path reuses four controller-owned scratch buffers
+//! (mean, delta, committed, restart) allocated once at construction — an
+//! outer step performs **zero** full-model allocations or clones. The
+//! allocating [`OuterController::sync_owned`] wrapper remains for tests
+//! and benches that want owned results.
+//!
+//! # ZeRO-sharded outer state (DESIGN.md §13)
+//!
+//! With `cfg.outer_shard` each outer-clique node leader *owns* its
+//! [`fragment_span`]-derived slice of the outer momentum + committed
+//! params instead of replicating all of them: the outer step becomes
+//! reduce-scatter the delta (each leader reduces only its owned span) →
+//! Nesterov on the owned shard → all-gather the restart point
+//! ([`all_gather_into`], recorded in the gather scope). Per-leader
+//! outer-state memory drops ~k× ([`OuterController::owned_outer_state_bytes`],
+//! cross-validated by the perfmodel memory ledger) and the outer step
+//! parallelizes across leaders. The executed math is the same
+//! fragment-partitioned element-wise arithmetic as the replicated step,
+//! so the result is **bit-identical** to `outer_shard = false` for every
+//! owner count — including composed with streaming fragments and the
+//! rotating partial sync (the owner partition refines each fragment).
+//! Under int8 the two-level quantized exchange keeps its replicated
+//! block structure (re-anchoring quantization blocks per owner would
+//! change the bits); sharding then partitions state ownership and adds
+//! the restart all-gather, leaving the compressed trajectory bit-equal
+//! to the unsharded int8 run. Checkpoints are unaffected: the in-process
+//! controller models all k leaders, so the v2 format keeps full-length
+//! vectors and resume-exact parity holds with any owner count.
 //!
 //! # DP×TP layout
 //!
@@ -82,8 +115,8 @@
 use anyhow::{ensure, Result};
 
 use crate::config::{outer_cliques, OptMode, OuterCompress, TrainConfig};
-use crate::coordinator::collective::{fragment_pipeline, fragment_span,
-                                     hier_all_reduce_fragment_into,
+use crate::coordinator::collective::{all_gather_into, fragment_pipeline, fragment_span,
+                                     fragment_spans, hier_all_reduce_fragment_into,
                                      outer_all_reduce_fragment_into, outer_all_reduce_into,
                                      shard_span, CommStats};
 use crate::coordinator::compress::HierState;
@@ -113,6 +146,9 @@ pub struct OuterController {
     delta: Vec<f32>,
     committed: Vec<f32>,
     restart: Vec<f32>,
+    /// Internal staging for the pipelined streaming plan (lazily sized on
+    /// first use; empty — zero cost — for every other plan kind).
+    staging: Vec<f32>,
     /// Telemetry for the run log.
     pub last_mu: f64,
     pub last_lr: f64,
@@ -128,6 +164,87 @@ pub struct PartialSync {
     pub lo: usize,
     pub hi: usize,
     pub fragment: Vec<f32>,
+}
+
+/// One fully described outer synchronization: the schedule index and the
+/// sync schedule to run. [`SyncPlan::from_config`] is the single place
+/// mode selection happens (PR 9) — the trainer derives a plan from the
+/// [`TrainConfig`] + round index and hands it to
+/// [`OuterController::sync`]; compression and ZeRO sharding are config
+/// properties the controller applies to whichever kind the plan selects.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SyncPlan {
+    /// Completed inner steps at this sync — the schedule index `t + 1`
+    /// (see the module docs on step indexing).
+    pub step: usize,
+    /// Which sync schedule runs.
+    pub kind: SyncKind,
+}
+
+/// The sync schedule a [`SyncPlan`] selects.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SyncKind {
+    /// Full-model barrier sync (DESIGN.md §2; `stream_fragments = 0`).
+    Blocking,
+    /// Rotating partial sync of the next [`fragment_span`] fragment
+    /// (`sync_fraction < 1`, DESIGN.md §2).
+    Partial,
+    /// Streaming overlapped sync (DESIGN.md §8). `pipelined` overlaps
+    /// fragment production with restart-payload assembly on a worker
+    /// thread; both schedules produce identical bits.
+    Streaming { pipelined: bool },
+    /// Quorum sync over the on-time mask (elastic membership, DESIGN.md
+    /// §11): stragglers' deltas carry to the next round.
+    Quorum { on_time: Vec<bool> },
+}
+
+impl SyncPlan {
+    /// Derive the plan for the sync after `step` completed inner steps —
+    /// THE mode selection, single-sourced (the trainer's historical
+    /// hand-rolled dispatch, pinned by the `properties` suite): a
+    /// sub-unity `sync_fraction` selects the rotating partial sync,
+    /// otherwise `stream_fragments ≥ 1` selects streaming (pipelined when
+    /// >1 fragment and a worker thread exists to overlap with), otherwise
+    /// the blocking barrier. Quorum plans are built explicitly via
+    /// [`SyncPlan::quorum`] — membership is runtime state, not config.
+    pub fn from_config(cfg: &TrainConfig, step: usize) -> SyncPlan {
+        let kind = if cfg.sync_fraction < 1.0 {
+            SyncKind::Partial
+        } else if cfg.stream_fragments >= 1 {
+            SyncKind::Streaming {
+                pipelined: cfg.stream_fragments > 1 && crate::util::par::max_threads() > 1,
+            }
+        } else {
+            SyncKind::Blocking
+        };
+        SyncPlan { step, kind }
+    }
+
+    pub fn blocking(step: usize) -> SyncPlan {
+        SyncPlan { step, kind: SyncKind::Blocking }
+    }
+
+    pub fn partial(step: usize) -> SyncPlan {
+        SyncPlan { step, kind: SyncKind::Partial }
+    }
+
+    pub fn streaming(step: usize, pipelined: bool) -> SyncPlan {
+        SyncPlan { step, kind: SyncKind::Streaming { pipelined } }
+    }
+
+    pub fn quorum(step: usize, on_time: Vec<bool>) -> SyncPlan {
+        SyncPlan { step, kind: SyncKind::Quorum { on_time } }
+    }
+}
+
+/// What a [`OuterController::sync`] call refreshed: the groups must
+/// install `last_restart()[lo..hi)` — the full model for every plan kind
+/// except the rotating partial sync, whose fragment is the only range
+/// whose replicas re-converge this round.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SyncSpan {
+    pub lo: usize,
+    pub hi: usize,
 }
 
 impl OuterController {
@@ -151,6 +268,7 @@ impl OuterController {
             // are never a stale all-zeros buffer before the first sync.
             committed: init_params.to_vec(),
             restart: init_params.to_vec(),
+            staging: Vec::new(),
             last_mu: 0.0,
             last_lr: 0.0,
             outer_steps: 0,
@@ -185,10 +303,52 @@ impl OuterController {
         self.refresh_offload();
     }
 
-    /// Alg. 2 outer step after `step` completed inner iterations:
-    /// all-reduce the per-group deltas, apply Nesterov with the scheduled
-    /// (μ, lr), and return the restart parameters as a borrow of the
-    /// controller's reusable buffer — the zero-clone trainer path.
+    /// THE outer-sync entry point (PR 9): execute `plan` across the
+    /// groups and return the [`SyncSpan`] the caller must install from
+    /// [`Self::last_restart`]. Every historical `sync_*` method is a
+    /// deprecated one-line wrapper over this dispatch — same cores, same
+    /// bits, pinned by the parity suites.
+    pub fn sync(
+        &mut self,
+        plan: &SyncPlan,
+        group_params: &[&[f32]],
+        stats: &mut CommStats,
+    ) -> SyncSpan {
+        let n = self.anchor.len();
+        match &plan.kind {
+            SyncKind::Blocking => {
+                self.blocking_core(plan.step, group_params, stats);
+                SyncSpan { lo: 0, hi: n }
+            }
+            SyncKind::Partial => {
+                let (lo, hi) = self.partial_core(plan.step, group_params, stats);
+                SyncSpan { lo, hi }
+            }
+            SyncKind::Streaming { pipelined } => {
+                if *pipelined {
+                    // The internal staging buffer decouples restart-payload
+                    // assembly from fragment production (taken out of self
+                    // for the duration to satisfy the borrow checker).
+                    let mut staging = std::mem::take(&mut self.staging);
+                    staging.resize(n, 0.0);
+                    self.drive_streaming(plan.step, group_params, stats, Some(&mut staging));
+                    self.staging = staging;
+                } else {
+                    self.drive_streaming(plan.step, group_params, stats, None);
+                }
+                SyncSpan { lo: 0, hi: n }
+            }
+            SyncKind::Quorum { on_time } => {
+                self.quorum_core(plan.step, group_params, on_time, stats);
+                SyncSpan { lo: 0, hi: n }
+            }
+        }
+    }
+
+    /// Alg. 2 blocking outer step after `step` completed inner
+    /// iterations: all-reduce the per-group deltas, apply Nesterov with
+    /// the scheduled (μ, lr), and leave the restart point in
+    /// [`Self::last_restart`] — the zero-clone trainer path.
     ///
     /// Under DP×TP (`cfg.tp > 1`, DESIGN.md §4) the §IV-C outer sync runs
     /// as `tp` concurrent per-shard all-reduces — one per TP rank, each
@@ -196,29 +356,29 @@ impl OuterController {
     /// logical volumes sum to the full fp32 delta and match what
     /// [`crate::netsim::des_outer_sync`] costs. Element-wise math is
     /// unchanged, so the reduced mean is bit-identical to the `tp = 1`
-    /// single all-reduce.
-    pub fn sync_in_place(
-        &mut self,
-        step: usize,
-        group_params: &[&[f32]],
-        stats: &mut CommStats,
-    ) -> &[f32] {
+    /// single all-reduce. With `cfg.outer_shard` (DESIGN.md §13) the step
+    /// instead runs through the shared fragment core, whose per-owner
+    /// reduce-scatter / shard Nesterov / restart all-gather is likewise
+    /// bit-identical.
+    fn blocking_core(&mut self, step: usize, group_params: &[&[f32]], stats: &mut CommStats) {
         self.load_offloaded();
 
-        if self.cfg.outer_compress == OuterCompress::Int8 {
-            // Compressed blocking sync (DESIGN.md §9): the full model as
+        if self.cfg.outer_compress == OuterCompress::Int8
+            || self.shard_owner_count(group_params.len()) > 1
+        {
+            // Compressed and/or sharded blocking sync: the full model as
             // one fragment through the shared fragment core, which routes
-            // to the two-level quantized reduce. Recorded as one
-            // outer-scope call (like the streaming fragments — the §IV-C
-            // per-shard split changes which rings carry the event, not
-            // its volume).
+            // to the two-level quantized reduce (§9) and/or the per-owner
+            // reduce-scatter + restart all-gather (§13). Recorded per
+            // fragment/owner — the §IV-C per-shard split changes which
+            // rings carry the event, not its volume.
             let n = self.anchor.len();
             let (mu, lr) = self.fragment_outer_step(step, 0, n, group_params, false, stats);
             self.last_mu = mu;
             self.last_lr = lr;
             self.outer_steps += 1;
             self.refresh_offload();
-            return &self.restart;
+            return;
         }
 
         let tp = self.cfg.tp.max(1);
@@ -254,19 +414,97 @@ impl OuterController {
         self.last_lr = lr;
         self.outer_steps += 1;
         self.refresh_offload();
+    }
+
+    /// Deprecated blocking entry point — thin wrapper over
+    /// [`Self::sync`] with a [`SyncPlan::blocking`] plan, bit-identical
+    /// by construction (same core).
+    #[deprecated(note = "use sync(&SyncPlan::blocking(step), …) — the unified PR 9 entry point")]
+    pub fn sync_in_place(
+        &mut self,
+        step: usize,
+        group_params: &[&[f32]],
+        stats: &mut CommStats,
+    ) -> &[f32] {
+        self.sync(&SyncPlan::blocking(step), group_params, stats);
         &self.restart
     }
 
-    /// Allocating wrapper over [`OuterController::sync_in_place`] returning
-    /// owned committed/restart vectors (tests, benches, checkpoints).
-    pub fn sync(
+    /// Allocating wrapper returning owned committed/restart vectors
+    /// (tests, benches, checkpoints). Formerly the `sync(step, …)`
+    /// method; renamed when [`Self::sync`] became the plan entry point.
+    #[deprecated(note = "use sync(&SyncPlan::blocking(step), …) + last_committed()/last_restart()")]
+    pub fn sync_owned(
         &mut self,
         step: usize,
         group_params: &[&[f32]],
         stats: &mut CommStats,
     ) -> OuterResult {
-        self.sync_in_place(step, group_params, stats);
+        self.sync(&SyncPlan::blocking(step), group_params, stats);
         OuterResult { committed: self.committed.clone(), next_start: self.restart.clone() }
+    }
+
+    /// Number of ZeRO shard owners of the outer state for a `dp`-group
+    /// run: 1 (replicated) unless `cfg.outer_shard`, else the outer-clique
+    /// node-leader count — the same [`outer_cliques`] routing the int8
+    /// hierarchy uses, so ownership always lands on the ranks that
+    /// already terminate the inter-node hop (DESIGN.md §13).
+    pub fn shard_owner_count(&self, dp: usize) -> usize {
+        if !self.cfg.outer_shard {
+            return 1;
+        }
+        let (_, nodes) = outer_cliques(
+            dp.max(1),
+            self.cfg.shards_per_replica(),
+            self.cfg.gpus_per_node.max(1),
+        );
+        nodes
+    }
+
+    /// **Measured** outer-state bytes resident on `leader` for a
+    /// `dp`-group run: the actual momentum + anchor slice lengths of the
+    /// leader's owned [`fragment_span`] (the full vectors when
+    /// replicated). This is the ground truth the perfmodel memory ledger
+    /// is cross-validated against (`rust/tests/properties.rs`).
+    pub fn owned_outer_state_bytes(&self, dp: usize, leader: usize) -> f64 {
+        let k = self.shard_owner_count(dp);
+        let (lo, hi) = fragment_span(self.anchor.len(), k, leader % k);
+        self.opt.state_bytes_in(lo, hi) + 4.0 * self.anchor[lo..hi].len() as f64
+    }
+
+    /// The restart all-gather of the sharded outer step (DESIGN.md §13):
+    /// after each owner's Nesterov step has filled its span of
+    /// `self.restart[lo..hi)`, the leaders exchange shards so every node
+    /// can broadcast the full restart point. Executed as a real
+    /// [`all_gather_into`] over the owner sub-spans (into the dead `mean`
+    /// scratch — rank-order concat reproduces the restart range, which
+    /// stays authoritative), recording the gather-scope traffic. No-op
+    /// when replicated.
+    fn sharded_restart_gather(
+        &mut self,
+        lo: usize,
+        hi: usize,
+        dp: usize,
+        stats: &mut CommStats,
+    ) {
+        let k = self.shard_owner_count(dp);
+        if k <= 1 {
+            return;
+        }
+        let n = self.anchor.len();
+        let OuterController { restart, mean, .. } = self;
+        let shards: Vec<&[f32]> = fragment_spans(n, k)
+            .into_iter()
+            .filter_map(|(a, b)| {
+                let (a, b) = (a.max(lo), b.min(hi));
+                (a < b).then(|| &restart[a..b])
+            })
+            .collect();
+        all_gather_into(&shards, &mut mean[lo..hi], stats);
+        debug_assert!(
+            mean[lo..hi].iter().zip(&restart[lo..hi]).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "sharded restart gather must reassemble the restart range"
+        );
     }
 
     /// The controller's committed-parameter view (checkpoint/eval):
@@ -304,12 +542,12 @@ impl OuterController {
     /// full rotation covers every parameter **exactly once** — also when
     /// `sync_fraction · n` does not divide `n`. Peak communication per
     /// outer step drops to ≈ `fraction · 4N` bytes.
-    pub fn sync_partial(
+    fn partial_core(
         &mut self,
         step: usize,
         group_params: &[&[f32]],
         stats: &mut CommStats,
-    ) -> PartialSync {
+    ) -> (usize, usize) {
         let n = self.anchor.len();
         let cycle = self.partial_cycle_len();
         let idx = self.frag_cursor % cycle;
@@ -326,7 +564,26 @@ impl OuterController {
         self.last_lr = lr;
         self.outer_steps += 1;
         self.refresh_offload();
-        PartialSync { lo, hi, fragment: self.restart[lo..hi].to_vec() }
+        (lo, hi)
+    }
+
+    /// Deprecated partial entry point — thin wrapper over [`Self::sync`]
+    /// with a [`SyncPlan::partial`] plan; the returned fragment is the
+    /// synced restart range (the unified path installs the same bytes
+    /// from [`Self::last_restart`] without the clone).
+    #[deprecated(note = "use sync(&SyncPlan::partial(step), …) — the unified PR 9 entry point")]
+    pub fn sync_partial(
+        &mut self,
+        step: usize,
+        group_params: &[&[f32]],
+        stats: &mut CommStats,
+    ) -> PartialSync {
+        let span = self.sync(&SyncPlan::partial(step), group_params, stats);
+        PartialSync {
+            lo: span.lo,
+            hi: span.hi,
+            fragment: self.restart[span.lo..span.hi].to_vec(),
+        }
     }
 
     /// The shared fragment core of the partial and streaming syncs:
@@ -372,13 +629,37 @@ impl OuterController {
             None
         };
         if let Some(clique) = int8_clique {
+            // Sharding never re-partitions the quantized exchange: block
+            // quantization re-anchors per transmitted fragment, so a
+            // per-owner split would change the bits (§13's interaction
+            // matrix). Ownership partitions the state + restart gather.
             let block = self.cfg.outer_quant_block.max(1);
             let OuterController { anchor, delta, hier, .. } = self;
             hier_all_reduce_fragment_into(group_params, &anchor[..], lo, hi, clique, block,
                                           hier, &mut delta[lo..hi], overlapped, stats);
         } else {
-            outer_all_reduce_fragment_into(group_params, lo, hi, &mut self.mean[lo..hi],
-                                           overlapped, stats);
+            // fp32: with ZeRO sharding (§13) the fragment's all-reduce is
+            // the reduce-scatter leg — each owner reduces only its span,
+            // so the per-owner sub-spans of [lo, hi) are recorded (and
+            // executed) separately. Chunked element-wise reduction makes
+            // the refined partition bit-identical to the single call.
+            let owners = self.shard_owner_count(group_params.len());
+            let n = self.anchor.len();
+            let subs: Vec<(usize, usize)> = if owners > 1 {
+                fragment_spans(n, owners)
+                    .into_iter()
+                    .filter_map(|(a, b)| {
+                        let (a, b) = (a.max(lo), b.min(hi));
+                        (a < b).then_some((a, b))
+                    })
+                    .collect()
+            } else {
+                vec![(lo, hi)]
+            };
+            for &(a, b) in &subs {
+                outer_all_reduce_fragment_into(group_params, a, b, &mut self.mean[a..b],
+                                               overlapped, stats);
+            }
             for ((d, &m), &a) in self.delta[lo..hi]
                 .iter_mut()
                 .zip(&self.mean[lo..hi])
@@ -401,6 +682,8 @@ impl OuterController {
         // ranges, so moving the anchor fragment-wise matches the blocking
         // sync's single end-of-step copy bit for bit.
         self.anchor[lo..hi].copy_from_slice(&self.restart[lo..hi]);
+        // ZeRO sharding: leaders exchange their restart shards (§13).
+        self.sharded_restart_gather(lo, hi, group_params.len(), stats);
         (mu, lr)
     }
 
@@ -434,7 +717,23 @@ impl OuterController {
     /// unsharded flat vector regardless of `cfg.tp` — the §IV-C per-shard
     /// split changes which rings carry an event, not its volume, and the
     /// streaming cost models take `tp` separately.
+    #[deprecated(note = "use sync(&SyncPlan::streaming(step, …), …) — the unified PR 9 entry \
+                         point drives the fragments")]
     pub fn sync_streaming_fragment(
+        &mut self,
+        step: usize,
+        frag: usize,
+        n_frags: usize,
+        group_params: &[&[f32]],
+        stats: &mut CommStats,
+    ) -> (usize, usize) {
+        self.stream_fragment(step, frag, n_frags, group_params, stats)
+    }
+
+    /// The per-fragment streaming core behind [`Self::sync`]'s streaming
+    /// plans and the deprecated [`Self::sync_streaming_fragment`] wrapper
+    /// — see the wrapper's docs for the driving contract.
+    fn stream_fragment(
         &mut self,
         step: usize,
         frag: usize,
@@ -464,15 +763,17 @@ impl OuterController {
     /// bit-identical final state to [`Self::sync_in_place`] for any
     /// fragment count, with the overlapped/exposed byte split recorded in
     /// `stats`. Returns the restart point as a borrow of the controller's
-    /// buffer, like `sync_in_place`. Barrier form of the single
-    /// [`Self::drive_streaming`] driver.
+    /// buffer. Barrier form of the single [`Self::drive_streaming`]
+    /// driver; deprecated wrapper over the unified [`Self::sync`].
+    #[deprecated(note = "use sync(&SyncPlan::streaming(step, false), …) — the unified PR 9 \
+                         entry point")]
     pub fn sync_streaming(
         &mut self,
         step: usize,
         group_params: &[&[f32]],
         stats: &mut CommStats,
     ) -> &[f32] {
-        self.drive_streaming(step, group_params, stats, None);
+        self.sync(&SyncPlan::streaming(step, false), group_params, stats);
         &self.restart
     }
 
@@ -494,6 +795,13 @@ impl OuterController {
     /// the code it protects. Serializes (with the same results and
     /// without the per-fragment decoupling copies) under
     /// `PIER_THREADS=1`.
+    ///
+    /// Deprecated alias of `sync(&SyncPlan::streaming(step, true), …)`;
+    /// kept as a direct wrapper over the driver (no extra copy through
+    /// the internal staging buffer) so the CI-gated bench keeps
+    /// measuring exactly the hot path.
+    #[deprecated(note = "use sync(&SyncPlan::streaming(step, true), …) — the unified PR 9 \
+                         entry point")]
     pub fn sync_streaming_pipelined(
         &mut self,
         step: usize,
@@ -527,8 +835,7 @@ impl OuterController {
                 fragment_pipeline(
                     n_frags,
                     |f| {
-                        let (lo, hi) =
-                            ctl.sync_streaming_fragment(step, f, n_frags, group_params, stats);
+                        let (lo, hi) = ctl.stream_fragment(step, f, n_frags, group_params, stats);
                         (lo, ctl.last_restart()[lo..hi].to_vec())
                     },
                     |_, (lo, frag): (usize, Vec<f32>)| {
@@ -538,7 +845,7 @@ impl OuterController {
             }
             staging => {
                 for f in 0..n_frags {
-                    self.sync_streaming_fragment(step, f, n_frags, group_params, stats);
+                    self.stream_fragment(step, f, n_frags, group_params, stats);
                 }
                 if let Some(staging) = staging {
                     staging.copy_from_slice(&self.restart);
@@ -660,6 +967,10 @@ impl OuterController {
     /// the timing side). Outstanding carry is *not* checkpoint state:
     /// the trainer checkpoints at round boundaries with no quorum round
     /// in flight.
+    ///
+    /// Deprecated wrapper over `sync(&SyncPlan::quorum(step, …), …)`.
+    #[deprecated(note = "use sync(&SyncPlan::quorum(step, on_time), …) — the unified PR 9 \
+                         entry point")]
     pub fn sync_quorum(
         &mut self,
         step: usize,
@@ -667,6 +978,19 @@ impl OuterController {
         on_time: &[bool],
         stats: &mut CommStats,
     ) -> &[f32] {
+        self.sync(&SyncPlan::quorum(step, on_time.to_vec()), group_params, stats);
+        &self.restart
+    }
+
+    /// Core of the quorum plan (see [`Self::sync_quorum`] for the full
+    /// semantics contract).
+    fn quorum_core(
+        &mut self,
+        step: usize,
+        group_params: &[&[f32]],
+        on_time: &[bool],
+        stats: &mut CommStats,
+    ) {
         let k = group_params.len();
         assert_eq!(on_time.len(), k, "on_time mask must cover every group");
         let q = on_time.iter().filter(|&&b| b).count();
@@ -721,11 +1045,12 @@ impl OuterController {
             &mut self.restart,
         );
         self.anchor.copy_from_slice(&self.restart);
+        let n = self.anchor.len();
+        self.sharded_restart_gather(0, n, k, stats);
         self.last_mu = mu;
         self.last_lr = lr;
         self.outer_steps += 1;
         self.refresh_offload();
-        &self.restart
     }
 
     /// Whether a quorum round left stragglers' deltas waiting to be folded
@@ -743,6 +1068,10 @@ pub struct OuterResult {
 }
 
 #[cfg(test)]
+// The suites deliberately exercise the deprecated legacy entry points —
+// they are the pins that keep each wrapper bit-identical to the unified
+// `sync(&SyncPlan, …)` it forwards to.
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::config::{OptMode, TrainConfig};
@@ -951,7 +1280,7 @@ mod tests {
         let g1 = vec![1.0f32, 3.0];
         let g2 = vec![3.0f32, 1.0];
         let mut stats = CommStats::default();
-        let r = ctl.sync(200, &[&g1, &g2], &mut stats);
+        let r = ctl.sync_owned(200, &[&g1, &g2], &mut stats);
         // mean = [2,2], Δ = [2,2], M = Δ, update = lr·(μM + Δ) = 0.7·1.9·2
         let expect = 0.7 * (0.9 * 2.0 + 2.0);
         assert!((r.committed[0] - expect).abs() < 1e-5, "{}", r.committed[0]);
@@ -969,7 +1298,7 @@ mod tests {
         let mut b = OuterController::new(&c, &init);
         let mut s1 = CommStats::default();
         let mut s2 = CommStats::default();
-        let owned = a.sync(200, &[&g1, &g2], &mut s1);
+        let owned = a.sync_owned(200, &[&g1, &g2], &mut s1);
         let borrowed: Vec<f32> = b.sync_in_place(200, &[&g1, &g2], &mut s2).to_vec();
         assert_eq!(owned.next_start, borrowed);
         assert_eq!(owned.committed, b.last_committed());
@@ -997,7 +1326,7 @@ mod tests {
         let mut ctl = OuterController::new(&c, &[0.0f32; 100]);
         let g = vec![0.5f32; 100];
         let mut stats = CommStats::default();
-        ctl.sync(200, &[&g], &mut stats);
+        ctl.sync_owned(200, &[&g], &mut stats);
         assert!(ctl.store.stats.bytes_to_host > 0.0);
         assert!(ctl.store.stats.bytes_to_device > 0.0);
         assert!(ctl.store.stats.sim_seconds > 0.0);
@@ -1010,8 +1339,8 @@ mod tests {
         let stores_at_init = ctl.store.stats.stores;
         let g = vec![0.5f32; 100];
         let mut stats = CommStats::default();
-        ctl.sync(200, &[&g], &mut stats);
-        ctl.sync(210, &[&g], &mut stats);
+        ctl.sync_owned(200, &[&g], &mut stats);
+        ctl.sync_owned(210, &[&g], &mut stats);
         assert_eq!(ctl.store.stats.bytes_to_host, 0.0);
         assert_eq!(ctl.store.stats.loads, 0);
         // device-resident state is not re-stored per step
@@ -1351,7 +1680,7 @@ mod tests {
         let mut b = OuterController::new(&cfg(OptMode::DiLoCo), &init);
         let mut s1 = CommStats::default();
         let mut s2 = CommStats::default();
-        let full = a.sync(200, &[&g1, &g2], &mut s1);
+        let full = a.sync_owned(200, &[&g1, &g2], &mut s1);
         let part = b.sync_partial(200, &[&g1, &g2], &mut s2); // fraction = 1.0
         assert_eq!(part.lo, 0);
         assert_eq!(part.hi, 8);
@@ -1416,7 +1745,7 @@ mod tests {
 
         let mut full_ctl = OuterController::new(&cfg(OptMode::DiLoCo), &init);
         let mut s1 = CommStats::default();
-        let full = full_ctl.sync(100, &[&g1, &g2], &mut s1);
+        let full = full_ctl.sync_owned(100, &[&g1, &g2], &mut s1);
 
         let mut c = cfg(OptMode::DiLoCo);
         c.sync_fraction = 0.3;
@@ -1430,5 +1759,293 @@ mod tests {
         assert_eq!(assembled, full.next_start);
         // a full rotation moves exactly the full-model volume in total
         assert_eq!(s1.outer_allreduce_bytes, s2.outer_allreduce_bytes);
+    }
+
+    #[test]
+    fn every_legacy_wrapper_pins_bitwise_to_the_unified_plan_dispatch() {
+        // The PR 9 API contract: each deprecated `sync_*` name and its
+        // `SyncPlan` produce identical bits and identical stats.
+        let n = 33;
+        let init: Vec<f32> = (0..n).map(|i| (i as f32 * 0.29).sin()).collect();
+        let g1: Vec<f32> = (0..n).map(|i| (i as f32 * 0.43).cos()).collect();
+        let g2: Vec<f32> = (0..n).map(|i| (i as f32 * 0.67).sin() * 1.1).collect();
+        let refs: [&[f32]; 2] = [&g1, &g2];
+        let run = |mut legacy: OuterController,
+                   mut planned: OuterController,
+                   plan_for: &dyn Fn(usize) -> SyncPlan,
+                   call: &dyn Fn(&mut OuterController, usize, &mut CommStats)| {
+            let mut sl = CommStats::default();
+            let mut sp = CommStats::default();
+            for step in [100usize, 200] {
+                call(&mut legacy, step, &mut sl);
+                planned.sync(&plan_for(step), &refs, &mut sp);
+                assert_eq!(
+                    legacy.last_restart().iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    planned.last_restart().iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    "restart diverged at step {step}"
+                );
+            }
+            assert_eq!(
+                legacy.last_committed().iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                planned.last_committed().iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            );
+            assert_eq!(sl, sp);
+        };
+        let base = cfg(OptMode::DiLoCo);
+        run(
+            OuterController::new(&base, &init),
+            OuterController::new(&base, &init),
+            &SyncPlan::blocking,
+            &|c, s, st| {
+                c.sync_in_place(s, &refs, st);
+            },
+        );
+        run(
+            OuterController::new(&base, &init),
+            OuterController::new(&base, &init),
+            &SyncPlan::blocking,
+            &|c, s, st| {
+                c.sync_owned(s, &refs, st);
+            },
+        );
+        let mut part = base.clone();
+        part.sync_fraction = 0.4;
+        run(
+            OuterController::new(&part, &init),
+            OuterController::new(&part, &init),
+            &SyncPlan::partial,
+            &|c, s, st| {
+                c.sync_partial(s, &refs, st);
+            },
+        );
+        let mut st3 = base.clone();
+        st3.stream_fragments = 3;
+        run(
+            OuterController::new(&st3, &init),
+            OuterController::new(&st3, &init),
+            &|s| SyncPlan::streaming(s, false),
+            &|c, s, st| {
+                c.sync_streaming(s, &refs, st);
+            },
+        );
+        run(
+            OuterController::new(&st3, &init),
+            OuterController::new(&st3, &init),
+            &|s| SyncPlan::streaming(s, true),
+            &|c, s, st| {
+                let mut staging = vec![0.0f32; n];
+                c.sync_streaming_pipelined(s, &refs, st, &mut staging);
+            },
+        );
+        run(
+            OuterController::new(&base, &init),
+            OuterController::new(&base, &init),
+            &|s| SyncPlan::quorum(s, vec![true, false]),
+            &|c, s, st| {
+                c.sync_quorum(s, &refs, &[true, false], st);
+            },
+        );
+    }
+
+    #[test]
+    fn from_config_selects_partial_then_streaming_then_blocking() {
+        let base = cfg(OptMode::DiLoCo);
+        assert_eq!(SyncPlan::from_config(&base, 7).kind, SyncKind::Blocking);
+        assert_eq!(SyncPlan::from_config(&base, 7).step, 7);
+        let mut p = base.clone();
+        p.sync_fraction = 0.5;
+        p.stream_fragments = 4; // partial wins over streaming
+        assert_eq!(SyncPlan::from_config(&p, 1).kind, SyncKind::Partial);
+        let mut s1 = base.clone();
+        s1.stream_fragments = 1; // one fragment: nothing to pipeline
+        assert_eq!(
+            SyncPlan::from_config(&s1, 1).kind,
+            SyncKind::Streaming { pipelined: false }
+        );
+        let mut s4 = base.clone();
+        s4.stream_fragments = 4;
+        let expect = crate::util::par::max_threads() > 1;
+        assert_eq!(
+            SyncPlan::from_config(&s4, 1).kind,
+            SyncKind::Streaming { pipelined: expect }
+        );
+    }
+
+    /// 4 groups, `shards_per_replica() = 1`: `gpus_per_node` ∈ {4, 2, 1}
+    /// puts the leaders on 1, 2, or 4 nodes → owner count k ∈ {1, 2, 4}.
+    fn cfg_sharded(base: &TrainConfig, gpn: usize) -> TrainConfig {
+        let mut c = base.clone();
+        c.outer_shard = true;
+        c.gpus_per_node = gpn;
+        c
+    }
+
+    #[test]
+    fn sharded_outer_step_matches_replicated_bitwise_for_every_owner_count() {
+        // The §13 contract across k ∈ {1, 2, 4} and the blocking /
+        // streaming / partial plans: same restart, committed, and momentum
+        // bits as the replicated run; same logical reduce volume; the
+        // restart all-gather appears in the gather scope for k > 1.
+        let n = 53;
+        let init: Vec<f32> = (0..n).map(|i| (i as f32 * 0.21).sin()).collect();
+        let gs: Vec<Vec<f32>> = (0..4)
+            .map(|g| (0..n).map(|i| ((g * n + i) as f32 * 0.09).cos() * 0.6).collect())
+            .collect();
+        let refs: Vec<&[f32]> = gs.iter().map(|v| v.as_slice()).collect();
+        // (config mutation, full-model gathers three syncs add up to):
+        // blocking and streaming gather the whole restart every sync; a
+        // 0.4-fraction rotation has cycle 3, so three partial syncs gather
+        // each parameter exactly once.
+        let variants: [(fn(&mut TrainConfig), f64); 3] = [
+            (|_c| {}, 3.0),
+            (|c| c.stream_fragments = 3, 3.0),
+            (|c| c.sync_fraction = 0.4, 1.0),
+        ];
+        for (mutate, gathers) in variants {
+            let mut base = cfg(OptMode::DiLoCo);
+            mutate(&mut base);
+            for (gpn, k) in [(4usize, 1usize), (2, 2), (1, 4)] {
+                let shard_cfg = cfg_sharded(&base, gpn);
+                let mut sharded = OuterController::new(&shard_cfg, &init);
+                assert_eq!(sharded.shard_owner_count(refs.len()), k, "gpn={gpn}");
+                let mut replicated = OuterController::new(&base, &init);
+                let mut sr2 = CommStats::default();
+                let mut ss = CommStats::default();
+                for step in [100usize, 200, 300] {
+                    let plan = SyncPlan::from_config(&shard_cfg, step);
+                    replicated.sync(&SyncPlan::from_config(&base, step), &refs, &mut sr2);
+                    sharded.sync(&plan, &refs, &mut ss);
+                    assert_eq!(
+                        replicated.last_restart().iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                        sharded.last_restart().iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                        "k={k} step={step}: restart diverged"
+                    );
+                }
+                assert_eq!(
+                    replicated.last_committed().iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    sharded.last_committed().iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    "k={k}: committed diverged"
+                );
+                assert_eq!(
+                    replicated.opt.momentum.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    sharded.opt.momentum.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    "k={k}: momentum diverged"
+                );
+                // Same logical reduce volume, re-partitioned per owner.
+                assert_eq!(sr2.outer_allreduce_bytes, ss.outer_allreduce_bytes, "k={k}");
+                if k > 1 {
+                    assert!(ss.gather_calls >= 3, "k={k}: {}", ss.gather_calls);
+                    assert_eq!(ss.gather_bytes, gathers * 4.0 * n as f64, "k={k}");
+                } else {
+                    assert_eq!(ss.gather_calls, sr2.gather_calls, "k=1 adds no gather");
+                    assert_eq!(ss.gather_bytes, sr2.gather_bytes);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_int8_matches_unsharded_int8_bitwise() {
+        // §13 interaction matrix: sharding never re-partitions the
+        // quantized exchange, so the int8 trajectory is bit-equal with and
+        // without `outer_shard` — only the gather scope gains traffic.
+        let n = 120;
+        let init = vec![0.0f32; n];
+        let gs: Vec<Vec<f32>> = (0..4)
+            .map(|g| (0..n).map(|i| ((i + 31 * g) as f32 * 0.05).sin() * 0.2).collect())
+            .collect();
+        let refs: Vec<&[f32]> = gs.iter().map(|v| v.as_slice()).collect();
+        let base = cfg_int8(1, 32); // 4 groups on 4 nodes: fabric hop exists
+        let mut sharded_cfg = base.clone();
+        sharded_cfg.outer_shard = true;
+        let mut plain = OuterController::new(&base, &init);
+        let mut sharded = OuterController::new(&sharded_cfg, &init);
+        assert_eq!(sharded.shard_owner_count(4), 4);
+        let mut sp = CommStats::default();
+        let mut ss = CommStats::default();
+        for step in [100usize, 200, 300] {
+            plain.sync(&SyncPlan::blocking(step), &refs, &mut sp);
+            sharded.sync(&SyncPlan::blocking(step), &refs, &mut ss);
+            assert_eq!(
+                plain.last_restart().iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                sharded.last_restart().iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "step {step}"
+            );
+        }
+        assert_eq!(sp.outer_wire_bytes, ss.outer_wire_bytes, "same compressed exchange");
+        assert!(ss.gather_bytes > 0.0 && sp.gather_bytes == 0.0);
+    }
+
+    #[test]
+    fn sharded_quorum_matches_replicated_bitwise() {
+        let n = 40;
+        let init: Vec<f32> = (0..n).map(|i| (i as f32 * 0.17).sin()).collect();
+        let g0: Vec<f32> = (0..n).map(|i| (i as f32 * 0.33).cos()).collect();
+        let g1: Vec<f32> = (0..n).map(|i| (i as f32 * 0.51).sin() * 0.9).collect();
+        let base = cfg(OptMode::DiLoCo);
+        let sharded_cfg = cfg_sharded(&base, 1); // 2 groups → k = 2
+        let mut replicated = OuterController::new(&base, &init);
+        let mut sharded = OuterController::new(&sharded_cfg, &init);
+        let mut sr = CommStats::default();
+        let mut ss = CommStats::default();
+        for (step, mask) in [(10usize, [true, false]), (20, [true, true])] {
+            replicated.sync(&SyncPlan::quorum(step, mask.to_vec()), &[&g0, &g1], &mut sr);
+            sharded.sync(&SyncPlan::quorum(step, mask.to_vec()), &[&g0, &g1], &mut ss);
+            assert_eq!(
+                replicated.last_restart().iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                sharded.last_restart().iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "step {step}"
+            );
+        }
+        assert!(ss.gather_bytes > 0.0);
+    }
+
+    #[test]
+    fn sharded_resume_from_checkpoint_continues_bit_identically() {
+        // The v2 format keeps full-length vectors (the in-process
+        // controller models all k leaders), so restore under sharding is
+        // the plain restore — pinned here at the controller layer.
+        let base = cfg(OptMode::DiLoCo);
+        let shard_cfg = cfg_sharded(&base, 1); // 2 groups → k = 2
+        let init: Vec<f32> = (0..48).map(|i| (i as f32 * 0.27).sin()).collect();
+        let g1: Vec<f32> = (0..48).map(|i| (i as f32 * 0.39).cos()).collect();
+        let g2: Vec<f32> = (0..48).map(|i| (i as f32 * 0.57).sin() * 1.2).collect();
+        let mut a = OuterController::new(&shard_cfg, &init);
+        let mut sa = CommStats::default();
+        a.sync(&SyncPlan::blocking(10), &[&g1, &g2], &mut sa);
+        a.sync(&SyncPlan::blocking(20), &[&g2, &g1], &mut sa);
+        let st = a.export_state();
+        let mut b = OuterController::new(&shard_cfg, &init);
+        b.restore_state(&st).unwrap();
+        let mut s1 = CommStats::default();
+        let mut s2 = CommStats::default();
+        a.sync(&SyncPlan::blocking(30), &[&g1, &g2], &mut s1);
+        b.sync(&SyncPlan::blocking(30), &[&g1, &g2], &mut s2);
+        assert_eq!(
+            a.last_restart().iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            b.last_restart().iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(s1, s2);
+    }
+
+    #[test]
+    fn owned_outer_state_bytes_shrinks_k_fold_and_sums_to_replicated() {
+        let n = 1003; // does not divide by 2 or 4
+        let init = vec![0.0f32; n];
+        let base = cfg(OptMode::DiLoCo);
+        let replicated = OuterController::new(&base, &init);
+        assert_eq!(replicated.owned_outer_state_bytes(4, 0), 8.0 * n as f64);
+        for (gpn, k) in [(2usize, 2usize), (1, 4)] {
+            let ctl = OuterController::new(&cfg_sharded(&base, gpn), &init);
+            let per: Vec<f64> =
+                (0..k).map(|l| ctl.owned_outer_state_bytes(4, l)).collect();
+            // exact partition: shards sum to the replicated total…
+            assert_eq!(per.iter().sum::<f64>(), 8.0 * n as f64, "k={k}");
+            // …and every leader holds ~1/k of it (balanced spans).
+            for (l, &b) in per.iter().enumerate() {
+                let ideal = 8.0 * n as f64 / k as f64;
+                assert!((b - ideal).abs() <= 8.0, "k={k} leader {l}: {b} vs {ideal}");
+            }
+        }
     }
 }

@@ -137,6 +137,14 @@ pub struct GroupState {
 /// momentum, anchor, last committed view, the rotating partial sync's
 /// fragment cursor, the int8 error-feedback residuals, and the schedule
 /// counters that drive the momentum-warmup telemetry.
+///
+/// ZeRO-sharded runs (`cfg.outer_shard`, DESIGN.md §13) checkpoint through
+/// this same struct unchanged: shard ownership is *virtual* in the
+/// single-process trainer — every leader's owned slice lives inside the
+/// same full-length `momentum`/`anchor`/`committed` vectors, tiled by
+/// `collective::fragment_span` — so the v2 format, its length validation,
+/// and resume-exact parity need no sharded variant (pinned in
+/// `rust/tests/resume_parity.rs`).
 #[derive(Clone, Debug, PartialEq)]
 pub struct OuterState {
     pub momentum: Vec<f32>,

@@ -39,8 +39,8 @@
 //! a host gradient; the single-micro fused path accounts the same volumes
 //! like the on-device DP all-reduce) and the intra-node volumes are
 //! recorded per replica in [`CommStats`]'s TP scope; the outer sync
-//! executes as `tp` concurrent per-shard all-reduces inside
-//! [`OuterController::sync_in_place`]. The TP
+//! executes as `tp` concurrent per-shard all-reduces inside the unified
+//! [`OuterController::sync`] entry point. The TP
 //! collectives are bit-transparent data movement over the single host
 //! computation, so `tp = 1` and `tp > 1` produce identical losses — the
 //! layout changes which links the recorded schedule loads, not the math
@@ -110,15 +110,14 @@ use crate::coordinator::collective::{fragment_span, note_inner_allreduce, note_p
                                      note_tp_step, pp_send_recv_into, tp_all_gather_into,
                                      tp_reduce_scatter_into, CommStats};
 use crate::coordinator::group::WorkerGroup;
-use crate::coordinator::outer::OuterController;
+use crate::coordinator::outer::{OuterController, SyncKind, SyncPlan};
 use crate::coordinator::parallel::ParallelExecutor;
 use crate::coordinator::pipeline::OneFOneB;
 use crate::coordinator::state::{CheckpointV2, GroupState};
 use crate::data::{validation_batches, Pipeline};
-use crate::metrics::{CommStatsSnapshot, IterRecord, OuterEvent, RunLog};
+use crate::metrics::{CommStatsSnapshot, IterRecord, MemoryFootprint, OuterEvent, RunLog};
 use crate::optim::schedule;
 use crate::runtime::{scalar_f32, scalar_i32, to_scalar_f32, FlatPool, Manifest, ModelExes, Runtime};
-use crate::util::par::max_threads;
 use crate::util::Timer;
 
 /// How many fixed validation batches each eval uses.
@@ -137,11 +136,6 @@ pub struct Trainer {
     pool: ParallelExecutor,
     /// Reusable per-group flat buffers for the outer-sync boundary.
     flats: FlatPool,
-    /// Restart-point staging for the streaming sync's fragment pipeline
-    /// (DESIGN.md §8): the consumer stage assembles fragments here while
-    /// the producer reduces the next one, keeping the [`FlatPool`] buffers
-    /// immutable all-reduce inputs throughout. Empty until first use.
-    stream_restart: Vec<f32>,
     /// Completed-iteration counter — the checkpoint/resume cursor
     /// (DESIGN.md §11). [`Trainer::run_until`] advances it; a restored
     /// trainer continues from the checkpoint's recorded value.
@@ -216,7 +210,6 @@ impl Trainer {
             log,
             pool: ParallelExecutor::new(0),
             flats: FlatPool::new(),
-            stream_restart: Vec::new(),
             completed_iters: 0,
             switched: false,
             active: vec![true; n_groups],
@@ -305,6 +298,18 @@ impl Trainer {
             Some(o) => o.outer_steps,
             None => self.log.outer_events.len() as u64,
         };
+        // Measured outer-state footprint (DESIGN.md §13): the worst
+        // leader's owned bytes, read from the controller's live buffers —
+        // the measurement the perfmodel ledger is pinned against.
+        if let Some(o) = self.outer.as_ref() {
+            let dp = self.groups.len();
+            let k = o.shard_owner_count(dp);
+            let worst = (0..k)
+                .map(|leader| o.owned_outer_state_bytes(dp, leader))
+                .fold(0.0, f64::max);
+            self.log.memory =
+                MemoryFootprint { shard_owners: k, outer_state_bytes: worst };
+        }
         self.log.wall_secs = timer.secs();
         Ok(&self.log)
     }
@@ -624,10 +629,21 @@ impl Trainer {
             .map(|(_, b)| b.as_slice())
             .collect();
         let outer = self.outer.as_mut().expect("outer sync without outer optimizer");
-        let mut event_fragments = 1;
-        if self.cfg.sync_fraction < 1.0 {
-            // 2a. streaming partial sync: overwrite only [lo, hi) per group
-            let part = outer.sync_partial(step, &refs, &mut self.stats);
+        // 2. one plan, one entry point: SyncPlan::from_config is the single
+        // place the schedule is selected (blocking / partial / streaming,
+        // pipelined when overlap can help — DESIGN.md §8) and
+        // OuterController::sync the single place it executes; compression
+        // (§9) and ZeRO sharding (§13) apply inside, orthogonally. All
+        // schedules are bit-identical — only the recorded events differ.
+        let plan = SyncPlan::from_config(&self.cfg, step);
+        let event_fragments = match plan.kind {
+            SyncKind::Streaming { .. } => outer.stream_fragment_count(),
+            _ => 1,
+        };
+        let span = outer.sync(&plan, &refs, &mut self.stats);
+        let next = outer.last_restart();
+        if matches!(plan.kind, SyncKind::Partial) {
+            // 3a. partial install: overwrite only the rotated [lo, hi)
             let man = &self.man;
             for (gi, (g, flat)) in
                 self.groups.iter_mut().zip(self.flats.bufs_mut()).enumerate()
@@ -635,38 +651,14 @@ impl Trainer {
                 if !active[gi] {
                     continue;
                 }
-                flat[part.lo..part.hi].copy_from_slice(&part.fragment);
+                flat[span.lo..span.hi].copy_from_slice(&next[span.lo..span.hi]);
                 g.set_params_flat(man, flat)?;
             }
             self.stats.broadcast_calls += 1;
-            self.stats.broadcast_bytes += 4.0 * (part.fragment.len() * ka) as f64;
+            self.stats.broadcast_bytes += 4.0 * ((span.hi - span.lo) * ka) as f64;
         } else {
-            // 2b. full sync — three schedules over the same math, one
-            // shared install. Blocking (`stream_fragments = 0`) keeps the
-            // §IV-C per-shard call recording under DP×TP; streaming
-            // (DESIGN.md §8) runs the fragment schedule — pipelined when
-            // it can overlap (fragment f+1's all-reduce + Nesterov step
-            // concurrent with the assembly of fragment f's broadcast
-            // payload into the staging buffer; the FlatPool buffers stay
-            // immutable inputs), or the barrier form when one fragment /
-            // PIER_THREADS=1 makes the decoupling copies pure waste. All
-            // paths are bit-identical — only the recorded schedule
-            // differs.
-            let next: &[f32] = if self.cfg.stream_fragments >= 1 {
-                let n_frags = outer.stream_fragment_count();
-                event_fragments = n_frags;
-                if n_frags <= 1 || max_threads() <= 1 {
-                    outer.sync_streaming(step, &refs, &mut self.stats)
-                } else {
-                    self.stream_restart.resize(n, 0.0);
-                    outer.sync_streaming_pipelined(step, &refs, &mut self.stats,
-                                                   &mut self.stream_restart);
-                    &self.stream_restart
-                }
-            } else {
-                outer.sync_in_place(step, &refs, &mut self.stats)
-            };
-            // restart-point broadcast: install per active group on the pool
+            // 3b. restart-point broadcast: install per active group on the
+            // pool (the controller's restart buffer is the one source).
             let man = &self.man;
             let active = &active;
             engine.run(&mut self.groups, |gi, g| {
@@ -865,6 +857,13 @@ fn cfg_validate(cfg: &TrainConfig, man: &Manifest) -> Result<()> {
         "stream_fragments requires full sync (sync_fraction = 1): the rotating \
          partial sync is already a fragment schedule (DESIGN.md §8)"
     );
+    if cfg.outer_shard {
+        ensure!(
+            cfg.mode != OptMode::AdamW,
+            "outer_shard requires an outer optimizer (DiLoCo/Pier): AdamW has \
+             no outer state to shard (DESIGN.md §13)"
+        );
+    }
     if cfg.outer_compress == OuterCompress::Int8 {
         ensure!(
             cfg.mode != OptMode::AdamW,

@@ -10,8 +10,8 @@ use crate::coordinator::compress::wire_bytes;
 use crate::metrics::scaling_efficiency;
 use crate::netsim::{FabricShape, FailureSpec};
 use crate::perfmodel::gpu::{scenario, ClusterSpec, Scenario, PERLMUTTER, SCENARIOS, VISTA};
-use crate::simulator::run::{fits_memory, outer_event_recovery_secs, outer_event_wire_bytes,
-                            simulate_run, speedup_at, Calib, SimSetup};
+use crate::simulator::run::{fits_memory, memory_ledger_for, outer_event_recovery_secs,
+                            outer_event_wire_bytes, simulate_run, speedup_at, Calib, SimSetup};
 use crate::util::json::Json;
 
 /// One scale point of a runtime figure.
@@ -73,6 +73,7 @@ fn base_setup(
         warmup_pct: 0.10,
         iterations: 100_000,
         cpu_offload: false,
+        outer_shard: false,
         calib: Calib::default(),
     }
 }
@@ -344,6 +345,10 @@ pub struct SweepRow {
     /// seeded failure trace (`outer_event_recovery_secs`; DESIGN.md §11).
     /// Never below the failure-free DES makespan of the same ring.
     pub recovery_secs: f64,
+    /// Peak per-GPU device bytes in decimal GB — the memory-ledger
+    /// ([`memory_ledger_for`], DESIGN.md §13) persistent footprint plus
+    /// the transient outer-event scratch, after the cell's offload rule.
+    pub peak_gb: f64,
     /// On the (makespan, wire) Pareto frontier of its cell.
     pub pareto: bool,
 }
@@ -431,6 +436,7 @@ pub fn sweep_grid(axes: &SweepAxes) -> Vec<SweepRow> {
                                     outer_event_secs: r.outer_event_secs,
                                     wire_bytes: n_outer * outer_event_wire_bytes(&s),
                                     recovery_secs: outer_event_recovery_secs(&s, Some(trace)),
+                                    peak_gb: memory_ledger_for(&s).peak_gb(),
                                     pareto: false,
                                 });
                             }
@@ -484,6 +490,7 @@ pub fn sweep_json(axes: &SweepAxes, rows: &[SweepRow]) -> Json {
                  ("outer_event_secs", Json::num(r.outer_event_secs)),
                  ("wire_bytes", Json::num(r.wire_bytes)),
                  ("recovery_secs", Json::num(r.recovery_secs)),
+                 ("peak_gb", Json::num(r.peak_gb)),
                  ("pareto", Json::Bool(r.pareto)),
              ])
          }))),
@@ -496,15 +503,16 @@ pub fn print_sweep(rows: &[SweepRow]) {
         "\n== pier sweep — makespan vs outer wire (Pareto `*` per scenario/world/tp/pp) =="
     );
     println!(
-        "{:>20} {:>6} {:>3} {:>3} {:>8} {:>5} {:>5} {:>14} {:>12} {:>13} {:>7}",
+        "{:>20} {:>6} {:>3} {:>3} {:>8} {:>5} {:>5} {:>14} {:>12} {:>13} {:>9} {:>7}",
         "scenario", "GPUs", "tp", "pp", "compress", "frag", "frac", "makespan (s)",
-        "wire (GB)", "recovery (s)", "pareto"
+        "wire (GB)", "recovery (s)", "peak (GB)", "pareto"
     );
     for r in rows {
         println!(
-            "{:>20} {:>6} {:>3} {:>3} {:>8} {:>5} {:>5.2} {:>14.0} {:>12.1} {:>13.3} {:>7}",
+            "{:>20} {:>6} {:>3} {:>3} {:>8} {:>5} {:>5.2} {:>14.0} {:>12.1} {:>13.3} \
+             {:>9.1} {:>7}",
             r.scenario, r.world, r.tp, r.pp, r.compress.name(), r.fragments, r.sync_fraction,
-            r.makespan_secs, r.wire_bytes / 1e9, r.recovery_secs,
+            r.makespan_secs, r.wire_bytes / 1e9, r.recovery_secs, r.peak_gb,
             if r.pareto { "*" } else { "" }
         );
     }
@@ -686,6 +694,14 @@ mod tests {
         for (j, r) in jrows.iter().zip(&rows) {
             assert_eq!(j.get("pareto").unwrap().as_bool(), Some(r.pareto));
             assert_eq!(j.get("makespan_secs").unwrap().as_f64(), Some(r.makespan_secs));
+            assert_eq!(j.get("peak_gb").unwrap().as_f64(), Some(r.peak_gb));
+        }
+        // the memory column is live: every smoke row carries a positive
+        // peak that stays inside the scenario's HBM (gpt2-xl fits bare)
+        for r in &rows {
+            let sc = axes.scenarios.iter().copied().find(|s| s.name == r.scenario).unwrap();
+            assert!(r.peak_gb > 0.0, "{r:?}");
+            assert!(r.peak_gb * 1e9 < sc.cluster.gpu.mem_bytes, "{r:?}");
         }
     }
 

@@ -56,13 +56,14 @@ fn print_usage() {
            train     --model nano --mode pier|diloco|adamw --iters N --groups K\n\
                      --batch B --interval H [--tp T] [--pp P] [--stream-fragments F]\n\
                      [--outer-compress none|int8] [--quant-block B]\n\
-                     [--offload] [--csv out.csv] [--ckpt out.ckpt]\n\
+                     [--offload] [--outer-shard] [--csv out.csv] [--ckpt out.ckpt]\n\
                      [--resume file.ckpt]\n\
            eval      --model nano --ckpt file.ckpt [--allow-model-mismatch]\n\
            simulate  --model gpt2-xl --cluster <scenario> --world N\n\
                      [--tp T] [--pp P] [--groups K] [--interval H] [--mode pier|adamw]\n\
                      [--stream-fragments F] [--outer-compress none|int8]\n\
-                     [--quant-block B] [--jitter S [--jitter-seed N]]\n\
+                     [--quant-block B] [--offload] [--outer-shard]\n\
+                     [--jitter S [--jitter-seed N]]\n\
                      [--failures P [--failure-seed N] [--restart-penalty R]]\n\
            sweep     [--smoke] [--model M] [--clusters a,b] [--worlds 32,64]\n\
                      [--tps 1,4] [--pps 1,2] [--compress none,int8] [--fragments 0,4]\n\
@@ -126,18 +127,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let groups = args.usize_or("groups", 4);
 
     let mut cfg = figures::figure_cfg(mode, iters, groups);
-    cfg.global_batch = args.usize_or("batch", cfg.global_batch);
-    cfg.sync_interval = args.usize_or("interval", cfg.sync_interval);
-    cfg.tp = args.usize_or("tp", cfg.tp);
-    cfg.pp = args.usize_or("pp", cfg.pp);
-    cfg.stream_fragments = args.usize_or("stream-fragments", cfg.stream_fragments);
-    cfg.outer_compress = match args.get("outer-compress") {
-        Some(s) => OuterCompress::parse(s)
-            .ok_or_else(|| anyhow!("--outer-compress must be none|int8"))?,
-        None => cfg.outer_compress,
-    };
-    cfg.outer_quant_block = args.usize_or("quant-block", cfg.outer_quant_block);
-    cfg.cpu_offload = args.flag("offload");
+    cfg.apply_cli_overrides(args)?;
     cfg.seed = args.u64_or("seed", cfg.seed);
     cfg.eval_interval = args.usize_or("eval-interval", cfg.eval_interval);
 
@@ -201,40 +191,43 @@ fn cmd_eval(args: &Args) -> Result<()> {
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
+    use pier::config::TrainConfig;
     use pier::netsim::{FailureSpec, JitterSpec};
     use pier::perfmodel::gpu::{scenario, scenario_names};
     use pier::simulator::run::{simulate_run, Calib, SimSetup};
+    use pier::simulator::{fits_memory, memory_ledger_for};
     let cluster_name = args.str_or("cluster", "perlmutter");
     let sc = scenario(&cluster_name).ok_or_else(|| {
         anyhow!("unknown cluster {:?}; valid clusters: {}", cluster_name, scenario_names())
     })?;
     let world = args.usize_or("world", 64);
+    // The shared layout/relaxation flags go through the one CLI-override
+    // helper (same interpretation as `pier train`); only the simulate-specific
+    // defaults differ and are set on the scratch config first.
+    let mut cfg = TrainConfig::default_for(args.usize_or("iters", 100_000));
+    cfg.mode = OptMode::parse(&args.str_or("mode", "pier"))
+        .ok_or_else(|| anyhow!("--mode must be adamw|diloco|pier"))?;
+    cfg.global_batch = 512;
+    cfg.apply_cli_overrides(args)?;
     let s = SimSetup {
         model: model_or_die(&args.str_or("model", "gpt2-xl")),
         cluster: sc.cluster,
         fabric: sc.fabric,
         world,
-        tp: args.usize_or("tp", 1),
-        pp: args.usize_or("pp", 1),
-        sync_fraction: args.f64_or("sync-fraction", 1.0),
-        stream_fragments: args.usize_or("stream-fragments", 0),
-        outer_compress: match args.get("outer-compress") {
-            Some(s) => OuterCompress::parse(s)
-                .ok_or_else(|| anyhow!("--outer-compress must be none|int8"))?,
-            None => OuterCompress::None,
-        },
-        outer_quant_block: match args.usize_or("quant-block", pier::config::DEFAULT_QUANT_BLOCK)
-        {
-            0 => bail!("--quant-block must be positive"),
-            b => b,
-        },
+        tp: cfg.tp,
+        pp: cfg.pp,
+        sync_fraction: cfg.sync_fraction,
+        stream_fragments: cfg.stream_fragments,
+        outer_compress: cfg.outer_compress,
+        outer_quant_block: cfg.outer_quant_block,
         groups: args.usize_or("groups", world),
-        global_batch: args.usize_or("batch", 512),
-        sync_interval: args.usize_or("interval", 50),
-        mode: OptMode::parse(&args.str_or("mode", "pier")).unwrap(),
+        global_batch: cfg.global_batch,
+        sync_interval: cfg.sync_interval,
+        mode: cfg.mode,
         warmup_pct: 0.10,
-        iterations: args.usize_or("iters", 100_000),
-        cpu_offload: args.flag("offload"),
+        iterations: cfg.iterations,
+        cpu_offload: cfg.cpu_offload,
+        outer_shard: cfg.outer_shard,
         calib: Calib::default(),
     };
     let r = simulate_run(&s);
@@ -301,6 +294,23 @@ fn cmd_simulate(args: &Args) -> Result<()> {
                           .des_outer_makespan(s.dp(), s.tp * s.pp, v);
         println!("  failure trace (p={failures:.2}/flow, seed {seed}): outer ring \
                   {t0:.3}s → {tf:.3}s recovery makespan on the DES");
+    }
+    // First-class memory ledger (DESIGN.md §13): per-GPU byte breakdown of
+    // the configuration, replicated vs ZeRO-sharded, device vs offloaded.
+    let led = memory_ledger_for(&s);
+    println!("  memory per GPU:");
+    println!("{}", led.report());
+    if !fits_memory(&s) {
+        // Non-fatal: the simulation is still priced, but the configuration
+        // would not fit on the scenario's GPUs as specified.
+        println!(
+            "  warning: persistent state {:.1} GB exceeds 75% of the {:.0} GB \
+             {} HBM — consider --offload, --outer-shard, or more model \
+             parallelism",
+            led.persistent_device_bytes() / 1e9,
+            s.cluster.gpu.mem_bytes / 1e9,
+            cluster_name
+        );
     }
     println!("  total ({} iters): {:.0}s = {:.2}h", s.iterations, r.total_secs,
              r.total_secs / 3600.0);

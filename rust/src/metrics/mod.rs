@@ -44,6 +44,22 @@ pub struct OuterEvent {
     pub fragments: usize,
 }
 
+/// Measured per-leader footprint of the outer optimizer state
+/// (DESIGN.md §13) — taken from the controller's **live buffers** at run
+/// end, not from a formula: this is the measurement side of the
+/// perfmodel memory ledger's cross-validation (the two must agree within
+/// 1 %, pinned in `rust/tests/properties.rs`). Zero/default for runs
+/// without an outer optimizer.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct MemoryFootprint {
+    /// Outer-clique shard owners `k` (1 = replicated outer state; 0 =
+    /// no outer optimizer).
+    pub shard_owners: usize,
+    /// Largest per-leader outer-state bytes: fp32 momentum + fp32 anchor
+    /// over the leader's owned span — `8n` replicated, `≈ 8n/k` sharded.
+    pub outer_state_bytes: f64,
+}
+
 /// Full run log for one optimizer arm.
 #[derive(Clone, Debug, Default)]
 pub struct RunLog {
@@ -55,6 +71,8 @@ pub struct RunLog {
     pub comm: CommStatsSnapshot,
     /// Every outer sync the trainer executed, in order.
     pub outer_events: Vec<OuterEvent>,
+    /// Measured outer-state memory footprint (DESIGN.md §13).
+    pub memory: MemoryFootprint,
     pub wall_secs: f64,
     pub switch_step: usize,
 }
@@ -283,6 +301,14 @@ mod tests {
                                            fragments: 1 });
         assert_eq!(log.outer_schedule(), vec![(400.0, 2), (400.0, 1)]);
         assert_eq!(log.outer_wire_schedule(), vec![(104.0, 2), (400.0, 1)]);
+    }
+
+    #[test]
+    fn memory_footprint_defaults_to_no_outer_state() {
+        let log = RunLog::default();
+        assert_eq!(log.memory, MemoryFootprint::default());
+        assert_eq!(log.memory.shard_owners, 0);
+        assert_eq!(log.memory.outer_state_bytes, 0.0);
     }
 
     #[test]

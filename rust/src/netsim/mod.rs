@@ -366,6 +366,27 @@ pub fn des_outer_sync(dp: usize, tp: usize, v_total: f64, cluster: &ClusterSpec)
     outer_sync_over(&topo, &sync, v_total, CostModel::Des).exposed_secs
 }
 
+/// DES cost of the **ZeRO-sharded** outer sync (DESIGN.md §13): the
+/// per-owner reduce-scatter of the delta plus the all-gather of the
+/// restart shards. A ring all-reduce *is* a reduce-scatter followed by an
+/// all-gather over the same ring — splitting the two legs across `owners`
+/// leaders re-labels which rank applies the Nesterov step to which span
+/// but moves the same `2·(k−1)/k · v` bytes per link in the same pattern
+/// — so the sharded makespan equals the replicated [`des_outer_sync`] for
+/// every owner count (pinned in `rust/tests/properties.rs`). The alias
+/// exists so schedule-costing call sites can name the executed layout;
+/// sharding buys memory ([`crate::perfmodel::memory`]), not wire time.
+pub fn des_outer_sync_sharded(
+    dp: usize,
+    tp: usize,
+    owners: usize,
+    v_total: f64,
+    cluster: &ClusterSpec,
+) -> f64 {
+    assert!(owners >= 1, "at least one shard owner");
+    des_outer_sync(dp, tp, v_total, cluster)
+}
+
 /// DES cost of a recorded outer-sync *schedule*: the sum of per-event
 /// [`des_outer_sync`] makespans for a list of logical fp32 volumes (the
 /// trainer's `RunLog::outer_events`, one entry per executed sync).

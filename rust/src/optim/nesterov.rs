@@ -103,6 +103,14 @@ impl OuterOpt {
         self.momentum.is_empty()
     }
 
+    /// Bytes of optimizer state backing the `[lo, hi)` parameter range —
+    /// the fp32 momentum slice. Measured from the actual buffer, so the
+    /// ZeRO shard accounting (DESIGN.md §13) reports what a leader would
+    /// really hold, not a formula that could drift from the layout.
+    pub fn state_bytes_in(&self, lo: usize, hi: usize) -> f64 {
+        4.0 * self.momentum[lo..hi].len() as f64
+    }
+
     /// In-place fragment step for the outer-sync extensions (streaming
     /// overlapped sync, DESIGN.md §8; rotating partial sync): apply the
     /// outer update to `momentum[lo..lo+len)` with `base`/`delta` being

@@ -1,0 +1,279 @@
+//! First-class per-GPU memory ledger (DESIGN.md §13).
+//!
+//! Every byte a training GPU holds, itemized: parameters, gradients,
+//! inner (AdamW) optimizer state, outer (Nesterov) optimizer state,
+//! int8 error-feedback residuals, and the transient outer-event scratch
+//! — with the outer state either **replicated** on every node leader
+//! (`shard_owners = 1`, today's default) or **ZeRO-sharded** across the
+//! `k` leaders of the outer clique (`TrainConfig.outer_shard`), where
+//! each leader keeps only its [`fragment_span`]-derived slice.
+//!
+//! The ledger replaces the old `fits_memory` stub's two-term formula and
+//! feeds the `peak_gb` column of `pier sweep`. Its numbers are **measured
+//! from the same span arithmetic the executed path uses** — the sharded
+//! outer-state term is `8 · |fragment_span(n, k, owner)|`, the exact
+//! byte count `OuterController::owned_outer_state_bytes` reports from
+//! its live buffers — so model and measurement cannot drift (pinned
+//! within 1 % by `rust/tests/properties.rs`).
+//!
+//! Component model (bytes per GPU, `n` = params, `spr = tp·pp` shards
+//! per replica):
+//!
+//! | component    | bytes                 | notes                         |
+//! |--------------|-----------------------|-------------------------------|
+//! | params       | `2n/spr`              | bf16 working copy             |
+//! | grads        | `2n/spr`              | bf16 main-grad buffer         |
+//! | inner_opt    | `12n/spr`             | fp32 master + AdamW m, v      |
+//! | outer_state  | `8·max_span/spr`      | fp32 momentum + anchor slice  |
+//! | residuals    | `4n/spr`              | int8 error feedback (fp32)    |
+//! | scratch      | `(4n + 4·max_span)/spr` | gather buffer + delta slice |
+//!
+//! `params + grads + inner_opt` is exactly the legacy
+//! [`state_bytes`](crate::perfmodel::state_bytes) `= 16n/tp`, and the
+//! replicated (`k = 1`) outer term is exactly
+//! [`outer_state_bytes`](crate::perfmodel::outer_state_bytes) `= 8n/tp`
+//! — the k=1 ledger reproduces today's numbers bit-for-bit.
+//!
+//! With `cpu_offload` the outer state, residuals, and outer-event
+//! scratch live in host RAM between syncs (DESIGN.md §5): their device
+//! terms drop to zero and the bytes move to `offload_host`, which is
+//! informational (host RAM is not the scarce resource the `fits` gate
+//! protects).
+
+use crate::config::ModelConfig;
+use crate::coordinator::collective::fragment_span;
+
+/// Itemized per-GPU memory footprint. Build with [`memory_ledger`];
+/// all fields are bytes except `shard_owners`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MemoryLedger {
+    /// bf16 parameter working copy: `2n/spr`.
+    pub params: f64,
+    /// bf16 gradient buffer: `2n/spr`.
+    pub grads: f64,
+    /// fp32 master params + AdamW moments: `12n/spr`. Zero only for a
+    /// hypothetical stateless inner optimizer (none modeled).
+    pub inner_opt: f64,
+    /// Outer Nesterov momentum + anchor, fp32: the **largest owner
+    /// slice** `8·max_span/spr` (every leader must fit, so the ledger
+    /// prices the worst one). Zero for AdamW or when offloaded.
+    pub outer_state: f64,
+    /// int8 error-feedback residuals, fp32 full-width: `4n/spr` when the
+    /// compressed two-level schedule engages (multi-node int8), else 0.
+    /// Follows the outer state to the host under `cpu_offload`.
+    pub residuals: f64,
+    /// Transient outer-event scratch: the fp32 gather/mean buffer
+    /// (`4n/spr`) plus the owner's delta slice (`4·max_span/spr`).
+    /// Replicated (`k = 1`) this is the classic mean+delta `8n/spr`.
+    /// Alive only during the sync event — separates *persistent* from
+    /// *peak* occupancy.
+    pub scratch: f64,
+    /// Host-RAM bytes parked by `cpu_offload` (outer state + residuals
+    /// + scratch). Informational; not part of the device totals.
+    pub offload_host: f64,
+    /// Outer-clique shard owners `k` (1 = fully replicated).
+    pub shard_owners: usize,
+}
+
+impl MemoryLedger {
+    /// Bytes resident for the whole run: params, grads, inner optimizer
+    /// state, outer state, residuals. This is what the `fits` gate
+    /// compares against HBM (activations claim the headroom).
+    pub fn persistent_device_bytes(&self) -> f64 {
+        self.params + self.grads + self.inner_opt + self.outer_state + self.residuals
+    }
+
+    /// Peak bytes: persistent footprint plus the outer-event scratch
+    /// that coexists with it at the sync barrier.
+    pub fn peak_device_bytes(&self) -> f64 {
+        self.persistent_device_bytes() + self.scratch
+    }
+
+    /// Peak in decimal gigabytes — the `pier sweep` column unit.
+    pub fn peak_gb(&self) -> f64 {
+        self.peak_device_bytes() / 1e9
+    }
+
+    /// Human-readable breakdown for `pier simulate`.
+    pub fn report(&self) -> String {
+        let gb = |b: f64| b / 1e9;
+        let mut s = String::new();
+        s.push_str(&format!("  params          {:8.2} GB\n", gb(self.params)));
+        s.push_str(&format!("  grads           {:8.2} GB\n", gb(self.grads)));
+        s.push_str(&format!("  inner opt state {:8.2} GB\n", gb(self.inner_opt)));
+        s.push_str(&format!(
+            "  outer opt state {:8.2} GB  ({} owner{})\n",
+            gb(self.outer_state),
+            self.shard_owners,
+            if self.shard_owners == 1 { ", replicated" } else { "s, ZeRO-sharded" }
+        ));
+        if self.residuals > 0.0 || self.offload_host > 0.0 {
+            s.push_str(&format!("  int8 residuals  {:8.2} GB\n", gb(self.residuals)));
+        }
+        s.push_str(&format!("  outer scratch   {:8.2} GB  (transient)\n", gb(self.scratch)));
+        if self.offload_host > 0.0 {
+            s.push_str(&format!("  offloaded(host) {:8.2} GB\n", gb(self.offload_host)));
+        }
+        s.push_str(&format!(
+            "  persistent      {:8.2} GB   peak {:8.2} GB",
+            gb(self.persistent_device_bytes()),
+            gb(self.peak_device_bytes())
+        ));
+        s
+    }
+}
+
+/// Outer-state bytes leader `owner` of `k` holds for an `n`-parameter
+/// model (before the `spr` model-parallel split): fp32 momentum + fp32
+/// anchor over its [`fragment_span`] slice — the formula twin of
+/// `OuterController::owned_outer_state_bytes`, which measures the same
+/// quantity from live buffers. The spans tile `[0, n)`, so these sum to
+/// the replicated `8n` **exactly** for every `k` (pinned in
+/// `rust/tests/properties.rs`).
+pub fn owner_outer_state_bytes(n_params: usize, k: usize, owner: usize) -> f64 {
+    let (lo, hi) = fragment_span(n_params, k.max(1), owner % k.max(1));
+    8.0 * (hi - lo) as f64
+}
+
+/// Largest owner slice of `[0, n)` split `k` ways — the leader every
+/// ledger prices, since all leaders must fit simultaneously.
+fn max_owner_span(n_params: usize, k: usize) -> f64 {
+    let k = k.max(1);
+    (0..k)
+        .map(|r| {
+            let (lo, hi) = fragment_span(n_params, k, r);
+            hi - lo
+        })
+        .max()
+        .unwrap_or(0) as f64
+}
+
+/// Build the per-GPU [`MemoryLedger`] for model `m` under `spr = tp·pp`
+/// model-parallel shards, `has_outer` (Pier/DiLoCo carry outer state;
+/// AdamW does not), `shard_owners = k` ZeRO owners (1 = replicated),
+/// `int8_residuals` (the compressed schedule's error-feedback buffer —
+/// pass true only when int8 actually engages, i.e. multi-node), and
+/// `cpu_offload` (§5: outer state parks in host RAM between syncs).
+pub fn memory_ledger(
+    m: &ModelConfig,
+    spr: usize,
+    has_outer: bool,
+    shard_owners: usize,
+    int8_residuals: bool,
+    cpu_offload: bool,
+) -> MemoryLedger {
+    let n = m.n_params();
+    let spr = spr.max(1) as f64;
+    let nf = n as f64;
+    let k = shard_owners.max(1);
+    let params = 2.0 * nf / spr;
+    let grads = 2.0 * nf / spr;
+    let inner_opt = 12.0 * nf / spr;
+    let (outer, resid, scratch) = if has_outer {
+        let span = max_owner_span(n, k);
+        let outer = 8.0 * span / spr;
+        let resid = if int8_residuals { 4.0 * nf / spr } else { 0.0 };
+        let scratch = (4.0 * nf + 4.0 * span) / spr;
+        (outer, resid, scratch)
+    } else {
+        (0.0, 0.0, 0.0)
+    };
+    if cpu_offload {
+        MemoryLedger {
+            params,
+            grads,
+            inner_opt,
+            outer_state: 0.0,
+            residuals: 0.0,
+            scratch: 0.0,
+            offload_host: outer + resid + scratch,
+            shard_owners: k,
+        }
+    } else {
+        MemoryLedger {
+            params,
+            grads,
+            inner_opt,
+            outer_state: outer,
+            residuals: resid,
+            scratch,
+            offload_host: 0.0,
+            shard_owners: k,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model;
+    use crate::perfmodel::{outer_state_bytes, state_bytes};
+
+    #[test]
+    fn replicated_ledger_reproduces_the_legacy_formulas() {
+        // params + grads + inner == state_bytes, outer (k=1) ==
+        // outer_state_bytes — the stub's two terms, now itemized.
+        for tp in [1usize, 4] {
+            let m = model("gpt2-xl").unwrap();
+            let l = memory_ledger(m, tp, true, 1, false, false);
+            assert_eq!(l.params + l.grads + l.inner_opt, state_bytes(m, tp));
+            assert_eq!(l.outer_state, outer_state_bytes(m, tp));
+            assert_eq!(
+                l.persistent_device_bytes(),
+                state_bytes(m, tp) + outer_state_bytes(m, tp)
+            );
+        }
+    }
+
+    #[test]
+    fn shard_bytes_tile_the_replicated_total_exactly() {
+        let m = model("gpt2-xl").unwrap();
+        let n = m.n_params();
+        for k in [1usize, 2, 3, 4, 7] {
+            let sum: f64 = (0..k).map(|r| owner_outer_state_bytes(n, k, r)).sum();
+            assert_eq!(sum, 8.0 * n as f64, "k={k}: spans must tile exactly");
+        }
+    }
+
+    #[test]
+    fn sharding_shrinks_outer_state_about_k_fold_and_never_raises_peak() {
+        let m = model("gpt2-xl").unwrap();
+        let replicated = memory_ledger(m, 1, true, 1, false, false);
+        for k in [2usize, 4, 8] {
+            let sharded = memory_ledger(m, 1, true, k, false, false);
+            let ratio = replicated.outer_state / sharded.outer_state;
+            assert!(
+                (ratio - k as f64).abs() / k as f64 < 0.01,
+                "k={k}: outer shrink {ratio} not ~k"
+            );
+            assert!(sharded.peak_device_bytes() <= replicated.peak_device_bytes());
+            assert!(sharded.persistent_device_bytes() < replicated.persistent_device_bytes());
+        }
+    }
+
+    #[test]
+    fn offload_moves_outer_bytes_to_host() {
+        let m = model("gpt2-xl").unwrap();
+        let on = memory_ledger(m, 1, true, 1, true, true);
+        let off = memory_ledger(m, 1, true, 1, true, false);
+        assert_eq!(on.outer_state, 0.0);
+        assert_eq!(on.residuals, 0.0);
+        assert_eq!(on.scratch, 0.0);
+        assert_eq!(on.offload_host, off.outer_state + off.residuals + off.scratch);
+        assert!(on.persistent_device_bytes() < off.persistent_device_bytes());
+        // AdamW: no outer state to offload, nothing parked.
+        let adamw = memory_ledger(m, 1, false, 1, false, true);
+        assert_eq!(adamw.offload_host, 0.0);
+        assert_eq!(adamw.outer_state, 0.0);
+    }
+
+    #[test]
+    fn report_names_the_sharding() {
+        let m = model("gpt2-xl").unwrap();
+        let r = memory_ledger(m, 1, true, 4, false, false).report();
+        assert!(r.contains("ZeRO-sharded"), "{r}");
+        assert!(r.contains("peak"), "{r}");
+        let r1 = memory_ledger(m, 1, true, 1, false, false).report();
+        assert!(r1.contains("replicated"), "{r1}");
+    }
+}

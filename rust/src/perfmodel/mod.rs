@@ -4,8 +4,10 @@
 
 pub mod flops;
 pub mod gpu;
+pub mod memory;
 
 pub use flops::{compute_time, flops_per_iter, flops_per_token, mfu, outer_state_bytes,
                 state_bytes};
+pub use memory::{memory_ledger, owner_outer_state_bytes, MemoryLedger};
 pub use gpu::{cluster, scenario, scenario_names, ClusterSpec, GpuSpec, LinkSpec, Scenario,
               A100_40G, GH200, PCIE, PERLMUTTER, SCENARIOS, VISTA};

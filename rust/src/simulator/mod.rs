@@ -12,5 +12,6 @@
 pub mod run;
 
 pub use run::{cost_outer_schedule, cost_outer_schedule_streaming,
-              cost_recorded_schedule_streaming, outer_event_streaming, outer_event_wire_bytes,
-              simulate_run, IterBreakdown, SimResult, SimSetup};
+              cost_recorded_schedule_streaming, fits_memory, memory_ledger_for,
+              outer_event_streaming, outer_event_wire_bytes, simulate_run, IterBreakdown,
+              SimResult, SimSetup};

@@ -6,6 +6,7 @@ use crate::netsim::{hierarchical_allreduce, outer_schedule_over, outer_sync_time
                     OuterSync, OuterWire, Topology};
 use crate::perfmodel::flops::compute_time;
 use crate::perfmodel::gpu::{ClusterSpec, PCIE};
+use crate::perfmodel::memory::{memory_ledger, MemoryLedger};
 
 /// Modeled collective efficiency: achieved fraction of nominal link
 /// bandwidth for large-message ring collectives (NCCL/RCCL bus-bandwidth
@@ -77,6 +78,14 @@ pub struct SimSetup {
     pub warmup_pct: f64,
     pub iterations: usize,
     pub cpu_offload: bool,
+    /// ZeRO-shard the outer optimizer state across the outer clique
+    /// (DESIGN.md §13): each node leader keeps only its
+    /// `fragment_span` slice of momentum + anchor, shrinking the
+    /// per-leader outer footprint ~k× ([`memory_ledger_for`]). Time
+    /// model is unchanged — the sharded reduce-scatter + all-gather
+    /// moves the same ring volume as the replicated all-reduce
+    /// (`netsim::des_outer_sync_sharded`).
+    pub outer_shard: bool,
     pub calib: Calib,
 }
 
@@ -503,14 +512,32 @@ pub fn speedup_at(s_pier: &SimSetup) -> (f64, f64, f64) {
     (t_a, t_p, t_a / t_p)
 }
 
-/// Can the model's training state fit GPU memory at this TP degree?
+/// The itemized per-GPU [`MemoryLedger`] for this setup (DESIGN.md §13):
+/// `spr = tp·pp` model-parallel shards, outer state present for
+/// Pier/DiLoCo, sharded across the outer clique's `k` node leaders when
+/// `outer_shard` is set (the same [`outer_cliques`] split the executed
+/// collective and the int8 schedule use), int8 residuals counted exactly
+/// when the compressed schedule engages, offload parking honored.
+pub fn memory_ledger_for(s: &SimSetup) -> MemoryLedger {
+    let has_outer = matches!(s.mode, OptMode::Pier | OptMode::DiLoCo);
+    let k = if has_outer && s.outer_shard {
+        outer_cliques(s.dp(), s.tp * s.pp, s.cluster.gpus_per_node).1
+    } else {
+        1
+    };
+    let int8 = has_outer && compressed_topology(s, s.cluster).is_some();
+    memory_ledger(s.model, s.tp * s.pp, has_outer, k, int8, s.cpu_offload)
+}
+
+/// Can the model's training state fit GPU memory at this setup's
+/// parallelism? Ledger-backed ([`memory_ledger_for`]): the persistent
+/// footprint — params, grads, inner + outer optimizer state, residuals —
+/// must leave ~25 % of HBM for activations. The transient outer-event
+/// scratch is excluded here (it coexists with freed activation memory at
+/// the sync barrier) but is visible in [`MemoryLedger::peak_gb`], which
+/// `pier simulate` warns on and `pier sweep` tabulates.
 pub fn fits_memory(s: &SimSetup) -> bool {
-    let mut need = crate::perfmodel::state_bytes(s.model, s.tp);
-    if matches!(s.mode, OptMode::Pier | OptMode::DiLoCo) && !s.cpu_offload {
-        need += crate::perfmodel::outer_state_bytes(s.model, s.tp);
-    }
-    // leave room for activations (~25 %)
-    need < 0.75 * s.cluster.gpu.mem_bytes
+    memory_ledger_for(s).persistent_device_bytes() < 0.75 * s.cluster.gpu.mem_bytes
 }
 
 #[cfg(test)]
@@ -538,6 +565,7 @@ mod tests {
             warmup_pct: 0.10,
             iterations: 1000,
             cpu_offload: false,
+            outer_shard: false,
             calib: Calib::default(),
         }
     }
@@ -817,5 +845,45 @@ mod tests {
         s.tp = 4;
         s.cpu_offload = true;
         assert!(fits_memory(&s));
+    }
+
+    #[test]
+    fn outer_sharding_fits_the_7b_pier_config_without_offload() {
+        // 7B Pier at tp=4 on 40 GB parts: 4n inner state (28 GB) plus a
+        // replicated 2n outer state (14 GB) blows the 30 GB budget —
+        // ZeRO-sharding the outer state across the 32 node leaders
+        // shrinks that term ~32× and the config fits, no offload needed.
+        let mut s = setup(128, OptMode::Pier);
+        s.model = model("gpt2-7b").unwrap();
+        s.tp = 4;
+        s.groups = 32;
+        assert!(!fits_memory(&s), "replicated outer state must not fit");
+        s.outer_shard = true;
+        assert!(fits_memory(&s), "sharded outer state must fit");
+        let led = memory_ledger_for(&s);
+        assert_eq!(led.shard_owners, 32);
+        // time model is orthogonal to the memory layout
+        let mut rep = s.clone();
+        rep.outer_shard = false;
+        assert_eq!(simulate_run(&s).total_secs, simulate_run(&rep).total_secs);
+    }
+
+    #[test]
+    fn ledger_matches_the_fits_gate_components() {
+        // AdamW: no outer term; Pier adds exactly the replicated outer
+        // state; offload clears it from the device ledger.
+        let adamw = memory_ledger_for(&setup(64, OptMode::AdamW));
+        assert_eq!(adamw.outer_state, 0.0);
+        assert_eq!(adamw.scratch, 0.0);
+        let pier = memory_ledger_for(&setup(64, OptMode::Pier));
+        assert_eq!(
+            pier.persistent_device_bytes() - adamw.persistent_device_bytes(),
+            crate::perfmodel::outer_state_bytes(setup(64, OptMode::Pier).model, 1)
+        );
+        let mut off = setup(64, OptMode::Pier);
+        off.cpu_offload = true;
+        let l_off = memory_ledger_for(&off);
+        assert_eq!(l_off.outer_state, 0.0);
+        assert!(l_off.offload_host > 0.0);
     }
 }

@@ -16,6 +16,11 @@
 //!   `cfg.tp = 2`, validating the recorded `outer_events` against both
 //!   cost models and against the expected `4·N` full-sync volume.
 
+// This suite deliberately pins the deprecated `sync_*` wrappers against the
+// unified `OuterController::sync(&SyncPlan)` entry point (DESIGN.md §13):
+// the deprecation is the API's, not the suite's.
+#![allow(deprecated)]
+
 use pier::config::{outer_cliques, OptMode, OuterCompress, DEFAULT_QUANT_BLOCK};
 use pier::coordinator::collective::{outer_all_reduce_into, shard_span, CommStats};
 use pier::coordinator::OuterController;
@@ -157,6 +162,7 @@ fn fig8_configs_streaming_makespan_strictly_below_blocking() {
             warmup_pct: 0.10,
             iterations: 100_000,
             cpu_offload: true,
+            outer_shard: false,
             calib: Calib::default(),
         };
         let dp = s.dp();
@@ -427,6 +433,7 @@ fn fig8_configs_pp_never_beats_the_bubble_bound() {
         warmup_pct: 0.10,
         iterations: 100_000,
         cpu_offload: true,
+        outer_shard: false,
         calib: Calib::default(),
     };
     for dp in [8usize, 32, 64] {

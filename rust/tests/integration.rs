@@ -2,6 +2,11 @@
 //! trainer math (via the pure-Rust optimizer oracles), outer-optimizer
 //! trajectory semantics, offload accounting, checkpoints, metrics.
 
+// This suite deliberately pins the deprecated `sync_*` wrappers against the
+// unified `OuterController::sync(&SyncPlan)` entry point (DESIGN.md §13):
+// the deprecation is the API's, not the suite's.
+#![allow(deprecated)]
+
 use pier::config::{analog_recipe, NesterovKind, OptMode, TrainConfig};
 use pier::coordinator::collective::{all_reduce_mean, CommStats};
 use pier::coordinator::{Checkpoint, OuterController};
@@ -139,7 +144,7 @@ impl ToyArm {
                 if (t + 1 - switch) % h == 0 {
                     let refs: Vec<&[f32]> =
                         self.groups.iter().map(|g| g.0.as_slice()).collect();
-                    let res = self.outer.as_mut().unwrap().sync(t + 1, &refs, &mut stats);
+                    let res = self.outer.as_mut().unwrap().sync_owned(t + 1, &refs, &mut stats);
                     for g in self.groups.iter_mut() {
                         g.0 = res.next_start.clone();
                     }
@@ -230,7 +235,7 @@ fn warmup_mu_is_warm_at_the_switch_boundary() {
     // the [10 %, 15 %) window.
     let g: Vec<f32> = vec![2.5f32; 8];
     let mut stats = CommStats::default();
-    ctl.sync(11_000, &[&g], &mut stats);
+    ctl.sync_owned(11_000, &[&g], &mut stats);
     assert_eq!(ctl.last_mu, 0.99);
 }
 
@@ -267,7 +272,7 @@ fn outer_controller_full_cycle_matches_manual_algebra() {
     let g2 = vec![4.0f32, 4.0, 4.0];
     let mut stats = CommStats::default();
     // t=90 → frac 0.9 → μ = 0.9, outer lr = 0.9 (final 20 % of schedule)
-    let r = ctl.sync(90, &[&g1, &g2], &mut stats);
+    let r = ctl.sync_owned(90, &[&g1, &g2], &mut stats);
     // mean 3, Δ 2, M = 2, update = lr·(μM + Δ) = 0.9·(1.8 + 2) = 3.42
     assert!((r.committed[0] - (1.0 + 3.42)).abs() < 1e-5, "{}", r.committed[0]);
     assert_eq!(stats.outer_allreduce_calls, 1);

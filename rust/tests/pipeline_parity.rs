@@ -22,6 +22,11 @@
 //! controller's span-parallel sync paths must hold the same bits on the
 //! serial and the pooled schedule.
 
+// This suite deliberately pins the deprecated `sync_*` wrappers against the
+// unified `OuterController::sync(&SyncPlan)` entry point (DESIGN.md §13):
+// the deprecation is the API's, not the suite's.
+#![allow(deprecated)]
+
 use pier::config::{OptMode, OuterCompress, TrainConfig};
 use pier::coordinator::collective::{fragment_span, note_inner_allreduce, note_pp_step,
                                     note_tp_step, pp_send_recv_into, CommStats};

@@ -2,6 +2,11 @@
 //! over coordinator invariants, data-pipeline bijections, optimizer
 //! algebra, and the network/simulator models.
 
+// This suite deliberately pins the deprecated `sync_*` wrappers against the
+// unified `OuterController::sync(&SyncPlan)` entry point (DESIGN.md §13):
+// the deprecation is the API's, not the suite's.
+#![allow(deprecated)]
+
 use pier::config::{NesterovKind, OptMode, OuterCompress, TrainConfig};
 use pier::coordinator::collective::{all_reduce_mean, fragment_span, shard_span};
 use pier::coordinator::compress::{dequantize_into, dequantize_with_residual_into,
@@ -614,6 +619,7 @@ fn prop_simulator_total_monotone_in_iterations_and_interval() {
             warmup_pct: 0.10,
             iterations: g.usize(1000, 50_000),
             cpu_offload: g.bool(),
+            outer_shard: false,
             calib: Calib::default(),
         };
         let t1 = simulate_run(&s).total_secs;
@@ -652,6 +658,7 @@ fn prop_pier_never_slower_than_adamw_beyond_a_node_at_h500() {
             warmup_pct: 0.10,
             iterations: 10_000,
             cpu_offload: false,
+            outer_shard: false,
             calib: Calib::default(),
         };
         let tp_ = simulate_run(&s).total_secs;
@@ -840,5 +847,139 @@ fn prop_topology_rank_bijection() {
             }
         }
         ensure(seen.iter().all(|&s| s), "peers cover world")
+    });
+}
+
+// ---------------------------------------- memory ledger + SyncPlan (§13)
+
+#[test]
+fn prop_ledger_shard_spans_tile_the_replicated_outer_bytes_exactly() {
+    // ZeRO ownership is a partition, not an approximation: the per-owner
+    // outer-state bytes must sum to the replicated `8n` total **exactly**
+    // (f64-exact — the spans tile `[0, n)`), and the worst owner is never
+    // below the mean.
+    use pier::perfmodel::owner_outer_state_bytes;
+    check("ledger-shard-tiling", |g: &mut Gen| {
+        let n = g.usize(1, 5_000_000);
+        let k = g.usize(1, 64);
+        let total: f64 = (0..k).map(|o| owner_outer_state_bytes(n, k, o)).sum();
+        ensure(total == 8.0 * n as f64,
+               format!("n={n} k={k}: shards sum to {total}, want {}", 8.0 * n as f64))?;
+        let worst = (0..k).map(|o| owner_outer_state_bytes(n, k, o)).fold(0.0, f64::max);
+        ensure(worst >= 8.0 * n as f64 / k as f64, "max owner at least the mean")
+    });
+}
+
+#[test]
+fn ledger_sharding_shrinks_outer_state_k_fold_and_never_raises_peak() {
+    // Over every model × model-parallel width: k = 1 reproduces the legacy
+    // closed-form byte formulas exactly, and k > 1 shrinks the outer state
+    // ~k× (within 1%) while the transient peak and the persistent
+    // footprint only ever go down. Sharding touches only the outer terms.
+    use pier::config::MODELS;
+    use pier::perfmodel::{memory_ledger, outer_state_bytes, state_bytes};
+    for m in MODELS {
+        for spr in [1usize, 2, 4] {
+            let rep = memory_ledger(m, spr, true, 1, false, false);
+            assert_eq!(rep.params + rep.grads + rep.inner_opt, state_bytes(m, spr));
+            assert_eq!(rep.outer_state, outer_state_bytes(m, spr));
+            for k in [2usize, 4, 8, 32] {
+                let sh = memory_ledger(m, spr, true, k, false, false);
+                let ratio = rep.outer_state / sh.outer_state;
+                assert!((ratio - k as f64).abs() <= 0.01 * k as f64,
+                        "{} spr={spr} k={k}: outer shrink {ratio:.3}", m.name);
+                assert!(sh.peak_device_bytes() <= rep.peak_device_bytes(),
+                        "{} spr={spr} k={k}: sharded peak above replicated", m.name);
+                assert!(sh.persistent_device_bytes() < rep.persistent_device_bytes());
+                assert_eq!(sh.params, rep.params);
+                assert_eq!(sh.grads, rep.grads);
+                assert_eq!(sh.inner_opt, rep.inner_opt);
+            }
+        }
+    }
+}
+
+#[test]
+fn ledger_formula_agrees_with_the_measured_controller_shard_bytes() {
+    // The cross-validation contract (DESIGN.md §13): the ledger's formula
+    // side (`owner_outer_state_bytes`) and the controller's measured side
+    // (`owned_outer_state_bytes`, actual momentum/anchor slice lengths)
+    // must agree within 1% — they agree exactly, for every leader, at an
+    // odd n where the spans are unbalanced.
+    use pier::perfmodel::owner_outer_state_bytes;
+    let n = 10_001;
+    let dp = 4;
+    let mut cfg = TrainConfig::default_for(100);
+    cfg.mode = OptMode::Pier;
+    cfg.groups = dp;
+    cfg.gpus_per_node = 2;
+    cfg.outer_shard = true;
+    let init = vec![0.0f32; n];
+    let ctl = OuterController::new(&cfg, &init);
+    let k = ctl.shard_owner_count(dp);
+    assert_eq!(k, 2, "4 single-GPU groups on 2-GPU nodes → 2 node leaders");
+    for leader in 0..k {
+        let measured = ctl.owned_outer_state_bytes(dp, leader);
+        let formula = owner_outer_state_bytes(n, k, leader);
+        assert!((measured - formula).abs() <= 0.01 * formula,
+                "leader {leader}: measured {measured} vs formula {formula}");
+        assert_eq!(measured, formula);
+    }
+    // Replicated control: one owner holding the full 8n.
+    cfg.outer_shard = false;
+    let ctl = OuterController::new(&cfg, &init);
+    assert_eq!(ctl.shard_owner_count(dp), 1);
+    assert_eq!(ctl.owned_outer_state_bytes(dp, 0), 8.0 * n as f64);
+}
+
+#[test]
+fn prop_syncplan_selection_matches_the_historical_dispatch() {
+    // Every (sync_fraction, stream_fragments) the fig8/sweep grids emit
+    // maps to exactly one plan, and the plan is what the trainer's
+    // pre-redesign hand-rolled dispatch chose: partial when the fraction
+    // is sub-unity, else streaming when fragments are configured
+    // (pipelined only with >1 fragment and a worker thread), else the
+    // blocking barrier. Stated here independently so `from_config` cannot
+    // drift from the historical selection.
+    use pier::coordinator::{SyncKind, SyncPlan};
+    use pier::util::par::max_threads;
+    check("syncplan-dispatch", |g: &mut Gen| {
+        let mut cfg = TrainConfig::default_for(1000);
+        cfg.sync_fraction = *g.choose(&[1.0f64, 1.0, 0.5, 0.25, 0.125]);
+        cfg.stream_fragments = *g.choose(&[0usize, 1, 2, 4, 8]);
+        cfg.outer_shard = g.bool(); // never part of the selection
+        let step = g.usize(1, 10_000);
+        let plan = SyncPlan::from_config(&cfg, step);
+        ensure(plan.step == step, "plan carries the schedule index")?;
+        let expect = if cfg.sync_fraction < 1.0 {
+            SyncKind::Partial
+        } else if cfg.stream_fragments >= 1 {
+            SyncKind::Streaming {
+                pipelined: cfg.stream_fragments > 1 && max_threads() > 1,
+            }
+        } else {
+            SyncKind::Blocking
+        };
+        ensure(plan.kind == expect,
+               format!("cfg (f={}, F={}) chose {:?}, history chose {:?}",
+                       cfg.sync_fraction, cfg.stream_fragments, plan.kind, expect))
+    });
+}
+
+#[test]
+fn prop_sharded_outer_ring_prices_identically_to_the_replicated_ring() {
+    // Reduce-scatter + all-gather over the owner partition moves the same
+    // `2·(k−1)/k · v` bytes per ring link as the one all-reduce it
+    // replaces — sharding buys memory, never wire time (DESIGN.md §13).
+    use pier::netsim::des_outer_sync_sharded;
+    check("sharded-des-alias", |g: &mut Gen| {
+        let dp = g.usize(2, 64);
+        let tp = *g.choose(&[1usize, 2, 4]);
+        let owners = g.usize(1, 32);
+        let v = g.f64(1e6, 1e10);
+        let cluster = *g.choose(&[&PERLMUTTER, &VISTA]);
+        let a = des_outer_sync_sharded(dp, tp, owners, v, cluster);
+        let b = des_outer_sync(dp, tp, v, cluster);
+        ensure(a == b, format!("sharded ring {a} vs replicated {b}"))
     });
 }

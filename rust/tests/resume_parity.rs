@@ -24,6 +24,11 @@
 //!   exactly one round later, and the dropout schedule replays
 //!   bit-identically.
 
+// This suite deliberately pins the deprecated `sync_*` wrappers against the
+// unified `OuterController::sync(&SyncPlan)` entry point (DESIGN.md §13):
+// the deprecation is the API's, not the suite's.
+#![allow(deprecated)]
+
 use std::path::PathBuf;
 
 use pier::config::{OptMode, OuterCompress, TrainConfig};
@@ -245,6 +250,48 @@ fn resume_is_exact_at_sync_boundaries_and_mid_round() {
             assert_eq!(&full_losses[cut..], &post[..], "{r:?} cut={cut}: losses");
             assert_eq!(params_bits(&full.groups), final_params, "{r:?} cut={cut}: params");
             assert_eq!(full.stats, final_stats, "{r:?} cut={cut}: stats");
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn resume_is_bit_identical_with_the_outer_state_zero_sharded() {
+    // DESIGN.md §13: sharded runs keep full-length outer vectors, so the
+    // v2 format round-trips them unchanged — interrupting a ZeRO-sharded
+    // run must resume bit-identically on every relaxation axis, and the
+    // sharded run must itself match its replicated twin bit for bit (the
+    // resume harness doubles as the sharding-parity harness). One replica
+    // per node (`gpus_per_node = 1`) makes the owner count equal `k`.
+    let dir = tmp("sharded");
+    for r in AXES {
+        for k in [1usize, 2, 4] {
+            let mut cfg = cfg_for(r, k, 1, 4321);
+            cfg.outer_shard = true;
+            let mut full = fresh(&cfg);
+            assert_eq!(full.ctl.shard_owner_count(k), k, "{r:?}: owner count");
+            let mut full_losses = Vec::new();
+            advance(&mut full, &cfg, 0, ITERS, &mut full_losses);
+
+            let path = dir.join(format!("{r:?}-shard-k{k}.ckpt"));
+            let (pre, post, final_params, final_stats) = interrupted_run(&cfg, T_CUT, &path);
+            assert_eq!(&full_losses[..T_CUT], &pre[..], "{r:?} k={k}: pre-cut");
+            assert_eq!(&full_losses[T_CUT..], &post[..],
+                       "{r:?} k={k}: resumed sharded tail diverged");
+            assert_eq!(params_bits(&full.groups), final_params, "{r:?} k={k}: params");
+            assert_eq!(full.stats, final_stats, "{r:?} k={k}: stats");
+
+            // The replicated twin: same losses and params bit for bit —
+            // only the restart-gather accounting may differ.
+            let mut rep_cfg = cfg.clone();
+            rep_cfg.outer_shard = false;
+            let mut rep = fresh(&rep_cfg);
+            let mut rep_losses = Vec::new();
+            advance(&mut rep, &rep_cfg, 0, ITERS, &mut rep_losses);
+            assert_eq!(rep_losses, full_losses,
+                       "{r:?} k={k}: sharded vs replicated loss trajectories");
+            assert_eq!(params_bits(&rep.groups), params_bits(&full.groups),
+                       "{r:?} k={k}: sharded vs replicated final params");
         }
     }
     std::fs::remove_dir_all(&dir).ok();

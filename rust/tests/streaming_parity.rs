@@ -22,7 +22,12 @@
 //! substrate is the shared `pier::testing::oracle` harness the other
 //! parity suites drive.
 
-use pier::config::{OptMode, TrainConfig};
+// This suite deliberately pins the deprecated `sync_*` wrappers against the
+// unified `OuterController::sync(&SyncPlan)` entry point (DESIGN.md §13):
+// the deprecation is the API's, not the suite's.
+#![allow(deprecated)]
+
+use pier::config::{OptMode, OuterCompress, TrainConfig};
 use pier::coordinator::collective::{fragment_span, CommStats};
 use pier::coordinator::{OuterController, ParallelExecutor};
 use pier::testing::oracle::{inner_step, make_groups, target};
@@ -43,12 +48,27 @@ struct ToyRunLog {
 fn run(engine: ParallelExecutor, k: usize, tp: usize, stream_fragments: usize, seed: u64)
     -> ToyRunLog
 {
+    run_with(engine, k, seed, |cfg| {
+        cfg.tp = tp;
+        cfg.stream_fragments = stream_fragments;
+    })
+}
+
+/// [`run`] with an arbitrary config tweak on top of the suite's base
+/// recipe — the ZeRO-sharding grid varies `outer_shard`, `gpus_per_node`
+/// (owner count), and the int8 hierarchy on the same substrate.
+fn run_with(
+    engine: ParallelExecutor,
+    k: usize,
+    seed: u64,
+    tweak: impl Fn(&mut TrainConfig),
+) -> ToyRunLog {
     let tgt = target(N);
     let mut cfg = TrainConfig::default_for(1000);
     cfg.mode = OptMode::DiLoCo; // fixed outer schedule: syncs differ only in path
     cfg.sync_interval = H;
-    cfg.tp = tp;
-    cfg.stream_fragments = stream_fragments;
+    tweak(&mut cfg);
+    let stream_fragments = cfg.stream_fragments;
     let mut groups = make_groups(N, k, seed);
     let mut ctl = OuterController::new(&cfg, &groups[0].params);
     let mut stats = CommStats::default();
@@ -135,6 +155,48 @@ fn overlapped_plus_exposed_equals_the_blocking_totals() {
                        "k={k} tp={tp} frags={frags}");
             // call structure: one outer call per fragment per sync
             assert_eq!(streaming.stats.outer_allreduce_calls, frags as u64 * syncs as u64);
+        }
+    }
+}
+
+#[test]
+fn zero_sharded_outer_matches_replicated_bitwise_across_owner_counts() {
+    // DESIGN.md §13: shard ownership is *virtual* in the single-process
+    // collective — the sharded outer step executes the same element-wise
+    // math over a refined partition, so toggling `outer_shard` must be
+    // bit-identical at every owner count, composed with the blocking,
+    // streaming, and int8 schedules. 4 single-GPU groups on nodes of
+    // {4, 2, 1} GPUs give k ∈ {1, 2, 4} owners; N = 53 is prime, so every
+    // owner partition is unbalanced.
+    for gpn in [4usize, 2, 1] {
+        for frags in [0usize, 2] {
+            for int8 in [false, true] {
+                let arm = |shard: bool| {
+                    run_with(ParallelExecutor::new(0), 4, 1234, |c| {
+                        c.stream_fragments = frags;
+                        c.gpus_per_node = gpn;
+                        c.outer_shard = shard;
+                        if int8 {
+                            c.outer_compress = OuterCompress::Int8;
+                            c.outer_quant_block = 8;
+                        }
+                    })
+                };
+                let (rep, sh) = (arm(false), arm(true));
+                let tag = format!("gpn={gpn} frags={frags} int8={int8}");
+                assert_eq!(rep.losses, sh.losses, "{tag}: loss trajectories diverged");
+                assert_eq!(rep.final_params, sh.final_params, "{tag}: final params diverged");
+                // The delta reduction moves the same logical fp32 volume;
+                // only the restart all-gather is added on top (k > 1).
+                assert_eq!(rep.stats.outer_allreduce_bytes, sh.stats.outer_allreduce_bytes,
+                           "{tag}: sharding must not change the reduce volume");
+                if gpn < 4 {
+                    // Guard against vacuous parity: with >1 owner the
+                    // sharded arm must actually run the restart gather.
+                    assert!(sh.stats.gather_bytes > rep.stats.gather_bytes,
+                            "{tag}: sharded arm recorded no restart-gather traffic");
+                }
+            }
         }
     }
 }
