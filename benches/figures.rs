@@ -38,7 +38,7 @@ fn main() {
         sync_fraction: 1.0,
         stream_fragments: 0,
         outer_compress: OuterCompress::None,
-        outer_quant_block: 4096,
+        outer_broadcast_quant: false,
         groups: 64,
         global_batch: 512,
         sync_interval: 50,

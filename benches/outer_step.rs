@@ -16,8 +16,8 @@
 //! (mean seconds + throughput per benchmark) for tracking across PRs.
 //! `ci.sh` diffs it against the committed `BENCH_baseline.json` with
 //! `tools/bench_check.rs`: the `outer_sync_in_place*`,
-//! `outer_sync_streaming*`, and `outer_sync_int8*` families are gated at
-//! 15 % mean-time regression.
+//! `outer_sync_streaming*`, `outer_sync_int8*`, and `outer_sync_dct_topk*`
+//! families are gated at 15 % mean-time regression.
 
 // This bench deliberately measures the deprecated `sync_*` wrappers next to
 // the unified `OuterController::sync(&SyncPlan)` entry point (DESIGN.md §13):
@@ -172,7 +172,8 @@ fn main() {
         // the quantize/dequantize sweeps on the sync path (gated family
         // `outer_sync_int8*`).
         let mut cfg_q = cfg.clone();
-        cfg_q.outer_compress = pier::config::OuterCompress::Int8;
+        cfg_q.outer_compress =
+            pier::config::OuterCompress::Int8 { block: pier::config::DEFAULT_QUANT_BLOCK };
         cfg_q.gpus_per_node = 1;
         let mut ctl_q = OuterController::new(&cfg_q, &groups[0]);
         let mut stats_q = CommStats::default();
@@ -192,6 +193,39 @@ fn main() {
         let r = bench_quick(&format!("outer_sync_int8_streaming4/micro-3.2M/{k}groups"), || {
             let refs: Vec<&[f32]> = groups.iter().map(|g| g.as_slice()).collect();
             let next = ctl_qs.sync_streaming(500, &refs, &mut stats_qs);
+            std::hint::black_box(next.len());
+        });
+        println!("{}", r.report_throughput((n * k) as f64, "param"));
+        snap(&mut rows, &r, (n * k) as f64, "param/s");
+
+        // DCT/top-k hierarchical sync (DESIGN.md §14): same leader layout
+        // as the int8 bench, but each sync runs the 4-sweep pipeline —
+        // blockwise DCT-II, per-block top-k selection, int8 coefficient
+        // quantization with error feedback, inverse DCT on decode. Block
+        // 256 / k 32 keeps the O(n·block) transform cost bench-sized
+        // while staying in the k = block/8 sub-1-bit wire regime (gated
+        // family `outer_sync_dct_topk*`).
+        let mut cfg_d = cfg.clone();
+        cfg_d.outer_compress = pier::config::OuterCompress::DctTopK { block: 256, k: 32 };
+        cfg_d.gpus_per_node = 1;
+        let mut ctl_d = OuterController::new(&cfg_d, &groups[0]);
+        let mut stats_d = CommStats::default();
+        let r = bench_quick(&format!("outer_sync_dct_topk/micro-3.2M/{k}groups"), || {
+            let refs: Vec<&[f32]> = groups.iter().map(|g| g.as_slice()).collect();
+            let next = ctl_d.sync_in_place(500, &refs, &mut stats_d);
+            std::hint::black_box(next.len());
+        });
+        println!("{}", r.report_throughput((n * k) as f64, "param"));
+        snap(&mut rows, &r, (n * k) as f64, "param/s");
+
+        // …and composed with the 4-fragment streaming schedule (§8 × §14).
+        let mut cfg_ds = cfg_d.clone();
+        cfg_ds.stream_fragments = 4;
+        let mut ctl_ds = OuterController::new(&cfg_ds, &groups[0]);
+        let mut stats_ds = CommStats::default();
+        let r = bench_quick(&format!("outer_sync_dct_topk_streaming4/micro-3.2M/{k}groups"), || {
+            let refs: Vec<&[f32]> = groups.iter().map(|g| g.as_slice()).collect();
+            let next = ctl_ds.sync_streaming(500, &refs, &mut stats_ds);
             std::hint::black_box(next.len());
         });
         println!("{}", r.report_throughput((n * k) as f64, "param"));

@@ -42,16 +42,25 @@ cargo bench --no-run
 echo "==> tier-1: cargo test -q"
 cargo test -q
 
-# Scenario-engine smoke: the 48-row sweep grid must run end to end and
-# emit the Pareto JSON on both thread legs (routing is deterministic
-# across PIER_THREADS — pinned by the property suite). The threads=4
-# workflow leg uploads the JSON as an artifact.
+# Scenario-engine smoke: the 72-row sweep grid (compress axis spans
+# none,int8,dct-topk — DESIGN.md §14) must run end to end and emit the
+# Pareto JSON on both thread legs (routing is deterministic across
+# PIER_THREADS — pinned by the property suite). The threads=4 workflow
+# leg uploads the JSON as an artifact.
 echo "==> pier sweep --smoke (topology scenario grid + Pareto JSON)"
 cargo run --release --bin pier -- sweep --smoke --out sweep_pareto.json
 test -s sweep_pareto.json
 # The memory ledger's peak-bytes column (DESIGN.md §13) must reach the
 # Pareto artifact — every row carries a peak_gb figure.
 grep -q '"peak_gb"' sweep_pareto.json
+
+# fig8 compression ladder (DESIGN.md §14): regenerating the figure also
+# writes fig8_ladder.json with the +dct-topk / +quant-bcast rungs; the
+# threads=4 workflow leg uploads it next to sweep_pareto.json.
+echo "==> pier repro fig8 (compression ladder + JSON artifact)"
+cargo run --release --bin pier -- repro fig8 --out fig8_ladder.json
+test -s fig8_ladder.json
+grep -q '"dct_wire_ratio"' fig8_ladder.json
 
 # The quantization kernels (coordinator::compress) are span-parallel; the
 # property suite must hold on both the serial and the threaded schedule

@@ -7,7 +7,8 @@ pub mod train;
 
 pub use model::{model, model_or_die, ModelConfig, MODELS};
 pub use parallel::{outer_cliques, ParallelConfig, Rank};
-pub use train::{NesterovKind, OptMode, OuterCompress, TrainConfig, DEFAULT_QUANT_BLOCK};
+pub use train::{NesterovKind, OptMode, OuterCompress, TrainConfig, DEFAULT_QUANT_BLOCK,
+                DEFAULT_TOPK};
 
 /// Paper Table I inner learning rates per GPT-2 size.
 pub fn paper_inner_lr(model_name: &str) -> Option<(f64, f64)> {

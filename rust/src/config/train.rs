@@ -39,7 +39,12 @@ impl OptMode {
 }
 
 /// Wire compression of the outer all-reduce's inter-node hop (extension;
-/// ZeRO++/Psyche-style block-quantized collectives, DESIGN.md §9).
+/// ZeRO++/Psyche-style block-quantized collectives, DESIGN.md §9, §14).
+///
+/// Struct-carrying: each compressing variant owns its parameters (the
+/// quantization block, the top-k budget) so they travel with the scheme
+/// through cost models, CLI, JSON, and the checkpoint instead of living
+/// as loose `TrainConfig` fields that every layer must thread separately.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum OuterCompress {
     /// Full-width fp32 deltas on the fabric — the paper's schedule and the
@@ -49,19 +54,43 @@ pub enum OuterCompress {
     /// for the inter-node hop, with a persistent error-feedback residual
     /// per node leader. Intra-node clique traffic stays full-width fp32
     /// (the two-level schedule of `collective::hier_all_reduce_*`).
-    Int8,
+    Int8 {
+        /// Quantization block: one f32 scale per this many parameters.
+        block: usize,
+    },
+    /// Transform-domain sparsification (DisTrO/Psyche-style, DESIGN.md
+    /// §14): blockwise DCT-II of the delta, per-block top-k coefficient
+    /// selection, int8 payload + u16/u32 indices on the wire, and an
+    /// error-feedback residual absorbing both the dropped coefficients
+    /// and the rounding. Sub-1-bit/param for k ≪ block.
+    DctTopK {
+        /// Transform/quantization block (one DCT + one f32 scale per block).
+        block: usize,
+        /// Coefficients kept per block; `k ≥ block` degenerates to the
+        /// dense int8 encoding (same wire bytes as [`OuterCompress::Int8`]).
+        k: usize,
+    },
 }
 
-/// Default quantization block of the int8 outer compression: one f32 scale
-/// per this many parameters. 4096 keeps the scale overhead at 4/(4·4096)
-/// ≈ 0.02 % while the block still fits L1 during the quantize sweep.
+/// Default quantization block of the compressed outer schemes: one f32
+/// scale per this many parameters. 4096 keeps the scale overhead at
+/// 4/(4·4096) ≈ 0.02 % while the block still fits L1 during the
+/// quantize sweep.
 pub const DEFAULT_QUANT_BLOCK: usize = 4096;
+
+/// Default top-k budget of `dct-topk`: block/8 keeps ≈ 0.094× the fp32
+/// wire (3 bytes per kept coefficient at u16 indices) while the toy-run
+/// convergence stays within tolerance of fp32.
+pub const DEFAULT_TOPK: usize = DEFAULT_QUANT_BLOCK / 8;
 
 impl OuterCompress {
     pub fn parse(s: &str) -> Option<OuterCompress> {
         match s.to_ascii_lowercase().as_str() {
             "none" | "f32" | "fp32" => Some(OuterCompress::None),
-            "int8" => Some(OuterCompress::Int8),
+            "int8" => Some(OuterCompress::Int8 { block: DEFAULT_QUANT_BLOCK }),
+            "dct-topk" | "dct_topk" => {
+                Some(OuterCompress::DctTopK { block: DEFAULT_QUANT_BLOCK, k: DEFAULT_TOPK })
+            }
             _ => None,
         }
     }
@@ -69,7 +98,50 @@ impl OuterCompress {
     pub fn name(&self) -> &'static str {
         match self {
             OuterCompress::None => "none",
-            OuterCompress::Int8 => "int8",
+            OuterCompress::Int8 { .. } => "int8",
+            OuterCompress::DctTopK { .. } => "dct-topk",
+        }
+    }
+
+    /// The quantization/transform block carried by the variant
+    /// (`DEFAULT_QUANT_BLOCK` for the uncompressed scheme, where it only
+    /// parameterizes cost-model formulas that multiply by zero).
+    pub fn block(&self) -> usize {
+        match self {
+            OuterCompress::None => DEFAULT_QUANT_BLOCK,
+            OuterCompress::Int8 { block } | OuterCompress::DctTopK { block, .. } => *block,
+        }
+    }
+
+    /// The per-block top-k budget, for the scheme that has one.
+    pub fn topk(&self) -> Option<usize> {
+        match self {
+            OuterCompress::DctTopK { k, .. } => Some(*k),
+            _ => None,
+        }
+    }
+
+    /// Whether the inter-node hop is narrower than fp32 — the gate every
+    /// fragment core uses to pick the two-level compressed schedule.
+    pub fn is_compressing(&self) -> bool {
+        !matches!(self, OuterCompress::None)
+    }
+
+    /// Return the scheme with its block replaced (no-op for `none`).
+    pub fn with_block(self, block: usize) -> OuterCompress {
+        match self {
+            OuterCompress::None => OuterCompress::None,
+            OuterCompress::Int8 { .. } => OuterCompress::Int8 { block },
+            OuterCompress::DctTopK { k, .. } => OuterCompress::DctTopK { block, k },
+        }
+    }
+
+    /// Return the scheme with its top-k budget replaced (no-op for the
+    /// schemes without one).
+    pub fn with_topk(self, k: usize) -> OuterCompress {
+        match self {
+            OuterCompress::DctTopK { block, .. } => OuterCompress::DctTopK { block, k },
+            other => other,
         }
     }
 
@@ -78,13 +150,27 @@ impl OuterCompress {
     /// (`netsim::des_outer_sync_compressed`,
     /// `simulator::cost_outer_schedule_compressed`,
     /// `outer_event_streaming`): 4 for fp32; 1 payload byte plus the
-    /// amortized per-block f32 scale for int8. The executed stats use the
-    /// exact integer [`wire formula`](crate::coordinator::compress::wire_bytes);
-    /// this continuous form converges to it for `n ≫ block`.
-    pub fn bytes_per_param(&self, block: usize) -> f64 {
+    /// amortized per-block f32 scale for int8; for dct-topk, the kept
+    /// coefficients' payload+index bytes plus the scale, amortized over
+    /// the block. The executed stats use the exact integer wire formulas
+    /// ([`crate::coordinator::compress::wire_bytes`],
+    /// [`crate::coordinator::compress::wire_bytes_topk`]); these
+    /// continuous forms converge to them for `n ≫ block`.
+    pub fn bytes_per_param(&self) -> f64 {
         match self {
             OuterCompress::None => 4.0,
-            OuterCompress::Int8 => 1.0 + 4.0 / block.max(1) as f64,
+            OuterCompress::Int8 { block } => 1.0 + 4.0 / (*block).max(1) as f64,
+            OuterCompress::DctTopK { block, k } => {
+                let b = (*block).max(1);
+                let kept = (*k).min(b).max(1);
+                if kept == b {
+                    // dense degenerate form: indices implicit, int8 wire
+                    1.0 + 4.0 / b as f64
+                } else {
+                    let idx = if b <= u16::MAX as usize + 1 { 2.0 } else { 4.0 };
+                    (kept as f64 * (1.0 + idx) + 4.0) / b as f64
+                }
+            }
         }
     }
 }
@@ -176,11 +262,16 @@ pub struct TrainConfig {
     /// persistent error-feedback residual — cutting the fabric wire bytes
     /// to ≈ ¼. `none` keeps every existing sync path bit-identical.
     /// Composes with both `stream_fragments` and `sync_fraction` (the
-    /// fragment cores quantize per fragment).
+    /// fragment cores quantize per fragment). The variant carries its own
+    /// parameters (`--quant-block`, `--topk`).
     pub outer_compress: OuterCompress,
-    /// Quantization block of the int8 compression: one f32 scale per this
-    /// many parameters. Ignored under `outer_compress = none`.
-    pub outer_quant_block: usize,
+    /// Quantize the leader→clique restart broadcast (the second hop of
+    /// the two-level schedule) with block-int8 + a per-leader
+    /// error-feedback residual, ZeRO++-style (extension, DESIGN.md §14).
+    /// Only engages when the outer clique spans more than one node;
+    /// single-node runs stay exactly fp32. `CommStats` books the narrow
+    /// wire in `broadcast_wire_bytes`.
+    pub outer_broadcast_quant: bool,
     /// ZeRO-shard the outer-optimizer state across the outer clique
     /// (extension, DESIGN.md §13): each node leader owns its
     /// `collective::fragment_span` slice of the outer momentum + committed
@@ -228,7 +319,7 @@ impl TrainConfig {
             sync_fraction: 1.0,
             stream_fragments: 0,
             outer_compress: OuterCompress::None,
-            outer_quant_block: DEFAULT_QUANT_BLOCK,
+            outer_broadcast_quant: false,
             outer_shard: false,
             parallel_groups: true,
             eval_interval: 0,
@@ -297,10 +388,19 @@ impl TrainConfig {
         self.stream_fragments = args.usize_or("stream-fragments", self.stream_fragments);
         if let Some(s) = args.get("outer-compress") {
             self.outer_compress = OuterCompress::parse(s)
-                .ok_or_else(|| anyhow!("--outer-compress must be none|int8"))?;
+                .ok_or_else(|| anyhow!("--outer-compress must be none|int8|dct-topk"))?;
         }
-        self.outer_quant_block = args.usize_or("quant-block", self.outer_quant_block);
-        ensure!(self.outer_quant_block > 0, "--quant-block must be positive");
+        let block = args.usize_or("quant-block", self.outer_compress.block());
+        ensure!(block > 0, "--quant-block must be positive");
+        self.outer_compress = self.outer_compress.with_block(block);
+        if let Some(k) = args.get("topk") {
+            let k: usize = k.parse().map_err(|_| anyhow!("--topk must be a positive integer"))?;
+            ensure!(k > 0, "--topk must be positive");
+            self.outer_compress = self.outer_compress.with_topk(k);
+        }
+        if args.flag("outer-broadcast-quant") {
+            self.outer_broadcast_quant = true;
+        }
         if args.flag("offload") {
             self.cpu_offload = true;
         }
@@ -339,8 +439,15 @@ impl TrainConfig {
             ("cpu_offload", Json::Bool(self.cpu_offload)),
             ("sync_fraction", Json::num(self.sync_fraction)),
             ("stream_fragments", Json::num(self.stream_fragments as f64)),
+            // Flat keys on purpose: they match the pre-refactor format, so
+            // configs round-trip across the struct-carrying enum change.
             ("outer_compress", Json::str(self.outer_compress.name())),
-            ("outer_quant_block", Json::num(self.outer_quant_block as f64)),
+            ("outer_quant_block", Json::num(self.outer_compress.block() as f64)),
+            (
+                "outer_topk",
+                Json::num(self.outer_compress.topk().unwrap_or(DEFAULT_TOPK) as f64),
+            ),
+            ("outer_broadcast_quant", Json::Bool(self.outer_broadcast_quant)),
             ("outer_shard", Json::Bool(self.outer_shard)),
             ("parallel_groups", Json::Bool(self.parallel_groups)),
             ("eval_interval", Json::num(self.eval_interval as f64)),
@@ -377,12 +484,20 @@ impl TrainConfig {
         c.stream_fragments = j.get("stream_fragments").and_then(Json::as_usize).unwrap_or(0);
         // Pre-compression configs (no "outer_compress" key) keep loading
         // and take the uncompressed paths; an unknown value is an error.
+        // The flat "outer_quant_block"/"outer_topk" keys (the loose-field
+        // format older configs carry) fold into the variant's payload.
         c.outer_compress = match j.get("outer_compress") {
             Some(v) => OuterCompress::parse(v.as_str()?)?,
             None => OuterCompress::None,
         };
-        c.outer_quant_block =
-            j.get("outer_quant_block").and_then(Json::as_usize).unwrap_or(DEFAULT_QUANT_BLOCK);
+        if let Some(b) = j.get("outer_quant_block").and_then(Json::as_usize) {
+            c.outer_compress = c.outer_compress.with_block(b);
+        }
+        if let Some(k) = j.get("outer_topk").and_then(Json::as_usize) {
+            c.outer_compress = c.outer_compress.with_topk(k);
+        }
+        c.outer_broadcast_quant =
+            j.get("outer_broadcast_quant").and_then(Json::as_bool).unwrap_or(false);
         // Pre-sharding configs (no "outer_shard" key) keep the replicated
         // outer state.
         c.outer_shard = j.get("outer_shard").and_then(Json::as_bool).unwrap_or(false);
@@ -445,12 +560,19 @@ mod tests {
     #[test]
     fn json_roundtrips_outer_compress() {
         let mut c = TrainConfig::default_for(100);
-        c.outer_compress = OuterCompress::Int8;
-        c.outer_quant_block = 128;
+        c.outer_compress = OuterCompress::Int8 { block: 128 };
         let j = c.to_json();
         let c2 = TrainConfig::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
-        assert_eq!(c2.outer_compress, OuterCompress::Int8);
-        assert_eq!(c2.outer_quant_block, 128);
+        assert_eq!(c2.outer_compress, OuterCompress::Int8 { block: 128 });
+        assert_eq!(c2.outer_compress.block(), 128);
+
+        let mut c3 = TrainConfig::default_for(100);
+        c3.outer_compress = OuterCompress::DctTopK { block: 512, k: 48 };
+        c3.outer_broadcast_quant = true;
+        let j3 = c3.to_json();
+        let c4 = TrainConfig::from_json(&Json::parse(&j3.to_string()).unwrap()).unwrap();
+        assert_eq!(c4.outer_compress, OuterCompress::DctTopK { block: 512, k: 48 });
+        assert!(c4.outer_broadcast_quant);
     }
 
     #[test]
@@ -462,22 +584,81 @@ mod tests {
             .to_json()
             .to_string()
             .replace("\"outer_compress\":\"none\",", "")
-            .replace(&format!("\"outer_quant_block\":{DEFAULT_QUANT_BLOCK},"), "");
+            .replace(&format!("\"outer_quant_block\":{DEFAULT_QUANT_BLOCK},"), "")
+            .replace(&format!("\"outer_topk\":{DEFAULT_TOPK},"), "")
+            .replace("\"outer_broadcast_quant\":false,", "");
         let c2 = TrainConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
         assert_eq!(c2.outer_compress, OuterCompress::None);
-        assert_eq!(c2.outer_quant_block, DEFAULT_QUANT_BLOCK);
+        assert_eq!(c2.outer_compress.block(), DEFAULT_QUANT_BLOCK);
+        assert!(!c2.outer_broadcast_quant);
+    }
+
+    #[test]
+    fn json_old_loose_field_configs_fold_into_the_variant() {
+        // Back-compat pin for the struct-carrying enum refactor: a config
+        // serialized by the loose-field format ("outer_compress":"int8"
+        // plus a separate "outer_quant_block") parses into the variant
+        // with the block folded in — no "outer_topk" key required.
+        let c = TrainConfig::default_for(100);
+        let j = c
+            .to_json()
+            .to_string()
+            .replace("\"outer_compress\":\"none\"", "\"outer_compress\":\"int8\"")
+            .replace(
+                &format!("\"outer_quant_block\":{DEFAULT_QUANT_BLOCK}"),
+                "\"outer_quant_block\":256",
+            )
+            .replace(&format!("\"outer_topk\":{DEFAULT_TOPK},"), "")
+            .replace("\"outer_broadcast_quant\":false,", "");
+        let c2 = TrainConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(c2.outer_compress, OuterCompress::Int8 { block: 256 });
     }
 
     #[test]
     fn outer_compress_parse_and_bytes_per_param() {
-        assert_eq!(OuterCompress::parse("INT8"), Some(OuterCompress::Int8));
+        assert_eq!(OuterCompress::parse("INT8"),
+                   Some(OuterCompress::Int8 { block: DEFAULT_QUANT_BLOCK }));
         assert_eq!(OuterCompress::parse("none"), Some(OuterCompress::None));
+        assert_eq!(OuterCompress::parse("dct-topk"),
+                   Some(OuterCompress::DctTopK { block: DEFAULT_QUANT_BLOCK, k: DEFAULT_TOPK }));
+        assert_eq!(OuterCompress::parse("dct_topk"), OuterCompress::parse("dct-topk"));
         assert_eq!(OuterCompress::parse("fp4"), None);
-        assert_eq!(OuterCompress::None.bytes_per_param(4096), 4.0);
-        let bpp = OuterCompress::Int8.bytes_per_param(4096);
+        assert_eq!(OuterCompress::None.bytes_per_param(), 4.0);
+        let bpp = OuterCompress::Int8 { block: 4096 }.bytes_per_param();
         assert!(bpp > 1.0 && bpp < 1.002, "{bpp}");
         // the 4x wire cut the acceptance criterion pins: ≤ 0.30×
         assert!(bpp / 4.0 <= 0.30);
+        // dct-topk at the default k = block/8: 3 B per kept coefficient
+        // (u16 indices) + the block scale — ≤ 0.15× fp32, the sub-1-bit
+        // acceptance bound of the leader-exchange leg.
+        let dct = OuterCompress::DctTopK { block: 4096, k: 512 }.bytes_per_param();
+        assert!((dct - (512.0 * 3.0 + 4.0) / 4096.0).abs() < 1e-12, "{dct}");
+        assert!(dct / 4.0 <= 0.15, "{dct}");
+        // k ≥ block degenerates to the dense int8 wire.
+        assert_eq!(OuterCompress::DctTopK { block: 4096, k: 4096 }.bytes_per_param(), bpp);
+        assert_eq!(OuterCompress::DctTopK { block: 4096, k: 9999 }.bytes_per_param(), bpp);
+        // blocks past u16 range pay u32 indices.
+        let wide = OuterCompress::DctTopK { block: 1 << 17, k: 16 }.bytes_per_param();
+        assert!((wide - (16.0 * 5.0 + 4.0) / (1u64 << 17) as f64).abs() < 1e-15, "{wide}");
+    }
+
+    #[test]
+    fn outer_compress_accessors_carry_the_variant_payload() {
+        let d = OuterCompress::DctTopK { block: 1024, k: 64 };
+        assert_eq!(d.block(), 1024);
+        assert_eq!(d.topk(), Some(64));
+        assert!(d.is_compressing());
+        assert_eq!(d.with_block(2048), OuterCompress::DctTopK { block: 2048, k: 64 });
+        assert_eq!(d.with_topk(8), OuterCompress::DctTopK { block: 1024, k: 8 });
+        assert_eq!(d.name(), "dct-topk");
+        let i = OuterCompress::Int8 { block: 128 };
+        assert_eq!(i.block(), 128);
+        assert_eq!(i.topk(), None);
+        assert!(i.is_compressing());
+        assert_eq!(i.with_topk(8), i, "topk is a no-op off dct-topk");
+        assert!(!OuterCompress::None.is_compressing());
+        assert_eq!(OuterCompress::None.with_block(64), OuterCompress::None);
+        assert_eq!(OuterCompress::None.block(), DEFAULT_QUANT_BLOCK);
     }
 
     #[test]
@@ -529,13 +710,25 @@ mod tests {
         assert_eq!(c.tp, 4);
         assert_eq!(c.pp, 2);
         assert_eq!(c.stream_fragments, 3);
-        assert_eq!(c.outer_compress, OuterCompress::Int8);
-        assert_eq!(c.outer_quant_block, 128);
+        assert_eq!(c.outer_compress, OuterCompress::Int8 { block: 128 });
         assert_eq!(c.global_batch, 64);
         assert_eq!(c.sync_interval, 25);
         assert_eq!(c.sync_fraction, 0.5);
         assert!(c.cpu_offload);
         assert!(c.outer_shard);
+        assert!(!c.outer_broadcast_quant);
+
+        // the dct-topk flags compose onto the variant payload
+        let dct = Args::parse(
+            "train --outer-compress dct-topk --quant-block 256 --topk 16 \
+             --outer-broadcast-quant"
+                .split_whitespace()
+                .map(str::to_string),
+        );
+        let mut cd = TrainConfig::default_for(100);
+        cd.apply_cli_overrides(&dct).unwrap();
+        assert_eq!(cd.outer_compress, OuterCompress::DctTopK { block: 256, k: 16 });
+        assert!(cd.outer_broadcast_quant);
 
         // absent options keep the caller's defaults…
         let none = Args::parse(["train".to_string()].into_iter());
@@ -544,13 +737,15 @@ mod tests {
         d.apply_cli_overrides(&none).unwrap();
         assert_eq!(d.global_batch, 512);
         assert_eq!(d.tp, 1);
-        assert!(!d.cpu_offload && !d.outer_shard);
+        assert!(!d.cpu_offload && !d.outer_shard && !d.outer_broadcast_quant);
 
-        // …and the two error paths reject bad values.
+        // …and the error paths reject bad values.
         let bad = Args::parse("train --outer-compress fp4".split_whitespace().map(str::to_string));
         assert!(TrainConfig::default_for(100).apply_cli_overrides(&bad).is_err());
         let zero = Args::parse("train --quant-block 0".split_whitespace().map(str::to_string));
         assert!(TrainConfig::default_for(100).apply_cli_overrides(&zero).is_err());
+        let badk = Args::parse("train --topk 0".split_whitespace().map(str::to_string));
+        assert!(TrainConfig::default_for(100).apply_cli_overrides(&badk).is_err());
     }
 
     #[test]

@@ -29,6 +29,7 @@
 //! layout buys wall-clock without touching numerics. `PIER_THREADS=1`
 //! forces the serial schedule.
 
+use crate::config::OuterCompress;
 use crate::coordinator::compress::{self, HierState};
 use crate::util::json::Json;
 use crate::util::par::{join_spans, span, MIN_SPAN};
@@ -88,8 +89,19 @@ pub struct CommStats {
     /// gathered full tensor, recorded like the other collectives.
     pub gather_calls: u64,
     pub gather_bytes: f64,
+    /// Bytes the gather scope actually puts on the fabric (DESIGN.md
+    /// §14): equal to `gather_bytes` for fp32 gathers; the block-int8
+    /// payload when the quantized restart broadcast shrinks the sharded
+    /// restart exchange ([`all_gather_wire_into`]).
+    pub gather_wire_bytes: f64,
     pub broadcast_calls: u64,
     pub broadcast_bytes: f64,
+    /// Bytes the restart broadcast actually puts on the fabric
+    /// (DESIGN.md §14): equal to `broadcast_bytes` for fp32 broadcasts;
+    /// the block-int8 payload (`compress::wire_bytes`) when
+    /// `outer_broadcast_quant` compresses the leader→clique restart leg.
+    /// Mirrors the `outer_wire_bytes` logical-vs-wire split.
+    pub broadcast_wire_bytes: f64,
     /// Intra-node TP scope: per-step parameter all-gathers (bf16 payload).
     pub tp_allgather_calls: u64,
     pub tp_allgather_bytes: f64,
@@ -158,6 +170,26 @@ impl CommStats {
         self.hier_intra_bytes += bytes;
     }
 
+    /// Record one restart broadcast: `logical` is the fp32 payload the
+    /// receivers install, `wire` what the fabric physically moves —
+    /// equal for fp32 broadcasts, the narrow block-int8 format under
+    /// `outer_broadcast_quant` (DESIGN.md §14). Single-sourced so the
+    /// wire column can never drift from the call/byte counters.
+    pub fn note_broadcast_wire(&mut self, logical: f64, wire: f64) {
+        self.broadcast_calls += 1;
+        self.broadcast_bytes += logical;
+        self.broadcast_wire_bytes += wire;
+    }
+
+    /// Record one gather-scope collective with an explicit wire payload
+    /// (the quantized sharded restart exchange; see
+    /// [`CommStats::note_broadcast_wire`] for the split's semantics).
+    pub fn note_gather_wire(&mut self, logical: f64, wire: f64) {
+        self.gather_calls += 1;
+        self.gather_bytes += logical;
+        self.gather_wire_bytes += wire;
+    }
+
     /// Serialize for the v2 checkpoint header (DESIGN.md §11). Call
     /// counters use the exact-integer convention ([`Json::exact_u64`]);
     /// byte totals are f64 and round-trip through the shortest-digit
@@ -175,8 +207,10 @@ impl CommStats {
             ("hier_intra_bytes", Json::num(self.hier_intra_bytes)),
             ("gather_calls", Json::exact_u64(self.gather_calls)),
             ("gather_bytes", Json::num(self.gather_bytes)),
+            ("gather_wire_bytes", Json::num(self.gather_wire_bytes)),
             ("broadcast_calls", Json::exact_u64(self.broadcast_calls)),
             ("broadcast_bytes", Json::num(self.broadcast_bytes)),
+            ("broadcast_wire_bytes", Json::num(self.broadcast_wire_bytes)),
             ("tp_allgather_calls", Json::exact_u64(self.tp_allgather_calls)),
             ("tp_allgather_bytes", Json::num(self.tp_allgather_bytes)),
             ("tp_reduce_scatter_calls", Json::exact_u64(self.tp_reduce_scatter_calls)),
@@ -188,13 +222,17 @@ impl CommStats {
 
     /// Decode [`CommStats::to_json`]. Every field is required and must be
     /// losslessly typed — a checkpoint with a missing or non-integral
-    /// counter is corrupt, not defaultable. Exception: the pipeline P2P
-    /// scope, which post-dates the v2 format — pre-PP checkpoints (no
+    /// counter is corrupt, not defaultable. Exceptions, each post-dating
+    /// the v2 format: the pipeline P2P scope — pre-PP checkpoints (no
     /// `pp_*` keys) decode with the scope at zero, exactly what a `pp = 1`
-    /// run would have recorded.
+    /// run would have recorded — and the gather/broadcast wire columns,
+    /// which default to their logical totals (pre-upgrade runs were fp32
+    /// on both legs, where wire == logical by definition).
     pub fn from_json(j: &Json) -> Option<CommStats> {
         let u = |key: &str| j.get(key)?.as_exact_u64();
         let f = |key: &str| j.get(key)?.as_f64();
+        let gather_bytes = f("gather_bytes")?;
+        let broadcast_bytes = f("broadcast_bytes")?;
         Some(CommStats {
             inner_allreduce_calls: u("inner_allreduce_calls")?,
             inner_allreduce_bytes: f("inner_allreduce_bytes")?,
@@ -206,9 +244,17 @@ impl CommStats {
             hier_intra_calls: u("hier_intra_calls")?,
             hier_intra_bytes: f("hier_intra_bytes")?,
             gather_calls: u("gather_calls")?,
-            gather_bytes: f("gather_bytes")?,
+            gather_bytes,
+            gather_wire_bytes: j
+                .get("gather_wire_bytes")
+                .and_then(Json::as_f64)
+                .unwrap_or(gather_bytes),
             broadcast_calls: u("broadcast_calls")?,
-            broadcast_bytes: f("broadcast_bytes")?,
+            broadcast_bytes,
+            broadcast_wire_bytes: j
+                .get("broadcast_wire_bytes")
+                .and_then(Json::as_f64)
+                .unwrap_or(broadcast_bytes),
             tp_allgather_calls: u("tp_allgather_calls")?,
             tp_allgather_bytes: f("tp_allgather_bytes")?,
             tp_reduce_scatter_calls: u("tp_reduce_scatter_calls")?,
@@ -348,13 +394,36 @@ pub fn note_inner_allreduce(n_params: usize, stats: &mut CommStats) {
 }
 
 /// Broadcast: copy `src` into every target (outer-step model distribution).
+///
+/// Accounting contract (satellite of DESIGN.md §14): `targets` are the
+/// *actual copy destinations* — the source's own view is never passed in,
+/// so no self-copy is booked here, and every recorded byte is a real
+/// transfer. Callers that install a restart into all `k` replicas
+/// including the one co-located with the leader must account `k − 1`
+/// receivers (the trainer's restart-install bookings follow this rule).
 pub fn broadcast(src: &[f32], targets: &mut [&mut Vec<f32>], stats: &mut CommStats) {
+    let logical = 4.0 * src.len() as f64 * targets.len() as f64;
+    broadcast_wire(src, targets, logical, stats);
+}
+
+/// [`broadcast`] with an explicit wire payload — the quantized restart
+/// broadcast's entry point (DESIGN.md §14): under `outer_broadcast_quant`
+/// the controller has already folded the payload through block-int8 with
+/// its broadcast error-feedback residual, so `src` holds the dequantized
+/// restart every receiver must install bit-for-bit; `wire` is what the
+/// fabric physically moves (the §14 int8 + scale format, summed over the
+/// receivers). For fp32 broadcasts wire == logical.
+pub fn broadcast_wire(
+    src: &[f32],
+    targets: &mut [&mut Vec<f32>],
+    wire: f64,
+    stats: &mut CommStats,
+) {
     for t in targets.iter_mut() {
         t.clear();
         t.extend_from_slice(src);
     }
-    stats.broadcast_calls += 1;
-    stats.broadcast_bytes += 4.0 * src.len() as f64 * targets.len() as f64;
+    stats.note_broadcast_wire(4.0 * src.len() as f64 * targets.len() as f64, wire);
 }
 
 /// All-gather: concatenate per-rank shards in rank order into caller
@@ -365,9 +434,23 @@ pub fn broadcast(src: &[f32], targets: &mut [&mut Vec<f32>], stats: &mut CommSta
 /// logical payload is the gathered full tensor (fp32); the netsim applies
 /// the `(n−1)/n` ring factor when costing it.
 pub fn all_gather_into(shards: &[&[f32]], out: &mut [f32], stats: &mut CommStats) {
+    let logical = 4.0 * out.len() as f64;
+    all_gather_wire_into(shards, out, logical, stats);
+}
+
+/// [`all_gather_into`] with an explicit wire payload — the quantized
+/// sharded-restart exchange (DESIGN.md §14): when `outer_broadcast_quant`
+/// has already narrowed the restart content to the block-int8 format, the
+/// leaders' shard exchange moves that narrow payload; `wire` is its byte
+/// count (fp32 gathers pass wire == logical via [`all_gather_into`]).
+pub fn all_gather_wire_into(
+    shards: &[&[f32]],
+    out: &mut [f32],
+    wire: f64,
+    stats: &mut CommStats,
+) {
     concat_shards_into(shards, out, "all_gather_into");
-    stats.gather_calls += 1;
-    stats.gather_bytes += 4.0 * out.len() as f64;
+    stats.note_gather_wire(4.0 * out.len() as f64, wire);
 }
 
 /// Shared rank-order concatenation of [`all_gather_into`] and
@@ -494,12 +577,15 @@ where
 /// 1. **intra-node clique reduce** (full-width fp32, NVLink): each
 ///    clique's summed delta `Σ params − c·anchor` lands on its leader,
 ///    recorded in the [`CommStats`] `hier_intra` scope;
-/// 2. **quantized inter-node exchange**: each leader adds its persistent
-///    error-feedback residual, block-quantizes the result to int8
-///    ([`crate::coordinator::compress`]), keeps the new residual, and the
-///    leaders exchange the narrow payloads — one outer-scope call whose
-///    logical bytes are the fp32 fragment and whose wire bytes are
-///    [`compress::wire_bytes`];
+/// 2. **compressed inter-node exchange**: each leader adds its persistent
+///    error-feedback residual and encodes the result with the `codec` —
+///    block-int8 ([`compress::quantize_into`]) or blockwise DCT/top-k
+///    ([`compress::dct_topk_forward_into`], DESIGN.md §14) — keeps the new
+///    residual (absorbing rounding *and*, for dct-topk, the dropped
+///    coefficients), and the leaders exchange the narrow payloads — one
+///    outer-scope call whose logical bytes are the fp32 fragment and whose
+///    wire bytes are [`compress::wire_bytes`] /
+///    [`compress::wire_bytes_topk`];
 /// 3. **leader mean**: every leader dequantizes all payloads and reduces
 ///    them in fixed node order (f64 accumulation, ÷ the replica count
 ///    `k`), so all leaders compute the same mean-delta bits — written to
@@ -521,7 +607,7 @@ pub fn hier_all_reduce_fragment_into(
     lo: usize,
     hi: usize,
     clique: usize,
-    block: usize,
+    codec: OuterCompress,
     state: &mut HierState,
     out: &mut [f32],
     overlapped: bool,
@@ -532,10 +618,15 @@ pub fn hier_all_reduce_fragment_into(
     assert!(clique >= 1, "clique must be positive");
     assert!(lo <= hi && hi <= anchor.len(), "fragment {lo}..{hi} of {}", anchor.len());
     assert_eq!(out.len(), hi - lo, "hier_all_reduce_fragment_into: buffer/fragment mismatch");
+    assert!(
+        codec.is_compressing(),
+        "hier_all_reduce_fragment_into requires a compressing codec (got {})",
+        codec.name()
+    );
     let len = hi - lo;
     let nodes = k.div_ceil(clique);
     state.ensure(nodes, anchor.len());
-    let HierState { residuals, scratch, acc, qbuf } = state;
+    let HierState { residuals, scratch, acc, qbuf, tbuf } = state;
     scratch.resize(len, 0.0);
     acc.clear();
     acc.resize(len, 0.0);
@@ -545,16 +636,29 @@ pub fn hier_all_reduce_fragment_into(
         let slices: Vec<&[f32]> = members.iter().map(|g| &g[lo..hi]).collect();
         all_reduce_sum_into(&slices, scratch);
         // e = Σ params − c·anchor + residual: the clique's summed delta
-        // plus the leader's carried quantization error.
+        // plus the leader's carried compression error.
         let c = members.len() as f32;
         for ((e_i, &a), &r) in
             scratch.iter_mut().zip(&anchor[lo..hi]).zip(&residuals[j][lo..hi])
         {
             *e_i = *e_i - c * a + r;
         }
-        // Transmit deq(quant(e)); keep residual = e − deq(quant(e)).
-        compress::quantize_into(scratch, block, qbuf);
-        compress::dequantize_with_residual_into(qbuf, scratch, &mut residuals[j][lo..hi]);
+        // Transmit deq(enc(e)); keep residual = e − deq(enc(e)) — for
+        // dct-topk the residual also carries the dropped coefficients'
+        // mass back into the parameter domain (DESIGN.md §14).
+        match codec {
+            OuterCompress::Int8 { block } => {
+                compress::quantize_into(scratch, block, qbuf);
+                compress::dequantize_with_residual_into(qbuf, scratch,
+                                                        &mut residuals[j][lo..hi]);
+            }
+            OuterCompress::DctTopK { block, k: topk } => {
+                compress::dct_topk_forward_into(scratch, block, topk, tbuf);
+                compress::dct_topk_decode_with_residual_into(tbuf, scratch,
+                                                             &mut residuals[j][lo..hi]);
+            }
+            OuterCompress::None => unreachable!("asserted is_compressing above"),
+        }
         // Fold this leader's payload into the f64 accumulator — per
         // element, in fixed node order: the same accumulation structure
         // the flat reduction uses, without holding all leaders at once.
@@ -572,11 +676,12 @@ pub fn hier_all_reduce_fragment_into(
     for (o, &a_i) in out.iter_mut().zip(acc.iter()) {
         *o = (a_i / kf) as f32;
     }
-    stats.note_outer_allreduce_wire(
-        4.0 * len as f64,
-        compress::wire_bytes(len, block) as f64,
-        overlapped,
-    );
+    let wire = match codec {
+        OuterCompress::Int8 { block } => compress::wire_bytes(len, block),
+        OuterCompress::DctTopK { block, k: topk } => compress::wire_bytes_topk(len, block, topk),
+        OuterCompress::None => unreachable!("asserted is_compressing above"),
+    };
+    stats.note_outer_allreduce_wire(4.0 * len as f64, wire as f64, overlapped);
 }
 
 /// Executed in-process TP reduce-scatter: every rank `r` ends up owning
@@ -744,7 +849,22 @@ mod tests {
         broadcast(&src, &mut [&mut a, &mut b], &mut stats);
         assert_eq!(a, src);
         assert_eq!(b, src);
+        // 2 targets = 2 real copy destinations; the source's own view is
+        // never among the targets, so no self-copy inflates the total.
         assert_eq!(stats.broadcast_bytes, 8.0 * 4.0 * 2.0);
+        assert_eq!(stats.broadcast_wire_bytes, stats.broadcast_bytes, "fp32: wire == logical");
+    }
+
+    #[test]
+    fn broadcast_wire_splits_logical_and_wire() {
+        let src = vec![1.0f32; 16];
+        let mut a = vec![0.0f32; 16];
+        let mut stats = CommStats::default();
+        broadcast_wire(&src, &mut [&mut a], 9.0, &mut stats);
+        assert_eq!(a, src);
+        assert_eq!(stats.broadcast_calls, 1);
+        assert_eq!(stats.broadcast_bytes, 64.0);
+        assert_eq!(stats.broadcast_wire_bytes, 9.0);
     }
 
     #[test]
@@ -757,7 +877,20 @@ mod tests {
         assert_eq!(out, vec![1.0, 2.0, 3.0]);
         assert_eq!(stats.gather_calls, 1);
         assert_eq!(stats.gather_bytes, 12.0);
+        assert_eq!(stats.gather_wire_bytes, 12.0, "fp32: wire == logical");
         assert_eq!(stats.total_bytes(), 12.0);
+    }
+
+    #[test]
+    fn all_gather_wire_into_splits_logical_and_wire() {
+        let a = [1.0f32, 2.0];
+        let b = [3.0f32];
+        let mut out = vec![0.0f32; 3];
+        let mut stats = CommStats::default();
+        all_gather_wire_into(&[&a, &b], &mut out, 5.0, &mut stats);
+        assert_eq!(out, vec![1.0, 2.0, 3.0]);
+        assert_eq!(stats.gather_bytes, 12.0);
+        assert_eq!(stats.gather_wire_bytes, 5.0);
     }
 
     #[test]
@@ -807,7 +940,8 @@ mod tests {
         let mut state = HierState::default();
         let mut out = vec![0.0f32; n];
         let mut stats = CommStats::default();
-        hier_all_reduce_fragment_into(&refs, &anchor, 0, n, 4, block, &mut state, &mut out,
+        hier_all_reduce_fragment_into(&refs, &anchor, 0, n, 4,
+                                      OuterCompress::Int8 { block }, &mut state, &mut out,
                                       false, &mut stats);
 
         // error bound: each node's deq error ≤ its max block scale, the
@@ -850,8 +984,8 @@ mod tests {
         let mut full_state = HierState::default();
         let mut full = vec![0.0f32; n];
         let mut s_full = CommStats::default();
-        hier_all_reduce_fragment_into(&refs, &anchor, 0, n, 1, n, &mut full_state, &mut full,
-                                      false, &mut s_full);
+        hier_all_reduce_fragment_into(&refs, &anchor, 0, n, 1, OuterCompress::Int8 { block: n },
+                                      &mut full_state, &mut full, false, &mut s_full);
         let mut frag_state = HierState::default();
         let mut assembled = vec![0.0f32; n];
         let mut s_frag = CommStats::default();
@@ -859,7 +993,8 @@ mod tests {
         for idx in 0..fragments {
             let (lo, hi) = fragment_span(n, fragments, idx);
             let mut out = vec![0.0f32; hi - lo];
-            hier_all_reduce_fragment_into(&refs, &anchor, lo, hi, 1, n, &mut frag_state,
+            hier_all_reduce_fragment_into(&refs, &anchor, lo, hi, 1,
+                                          OuterCompress::Int8 { block: n }, &mut frag_state,
                                           &mut out, idx + 1 < fragments, &mut s_frag);
             assembled[lo..hi].copy_from_slice(&out);
         }
@@ -887,6 +1022,58 @@ mod tests {
         // clique = 1: no intra hop either way
         assert_eq!(s_full.hier_intra_calls, 0);
         assert_eq!(s_frag.hier_intra_bytes, 0.0);
+    }
+
+    #[test]
+    fn hier_reduce_dct_topk_books_the_sparse_wire_and_keeps_residuals() {
+        // Same topology as the int8 test (6 groups, cliques of 4 → 2
+        // nodes) under the dct-topk codec at k = block/8: the outer call
+        // must book the exact sparse wire formula (sub-1-bit regime) and
+        // park the dropped-coefficient mass in the residuals.
+        let n = 512;
+        let k = 6;
+        let (block, topk) = (64usize, 8usize);
+        let anchor: Vec<f32> = (0..n).map(|i| (i as f32 * 0.05).sin() * 0.3).collect();
+        let groups: Vec<Vec<f32>> = (0..k)
+            .map(|g| {
+                (0..n)
+                    .map(|i| anchor[i] + ((i + 37 * g) as f32 * 0.11).cos() * 0.1)
+                    .collect()
+            })
+            .collect();
+        let refs: Vec<&[f32]> = groups.iter().map(|g| g.as_slice()).collect();
+        let mut state = HierState::default();
+        let mut out = vec![0.0f32; n];
+        let mut stats = CommStats::default();
+        hier_all_reduce_fragment_into(&refs, &anchor, 0, n, 4,
+                                      OuterCompress::DctTopK { block, k: topk }, &mut state,
+                                      &mut out, false, &mut stats);
+        assert!(out.iter().all(|x| x.is_finite()));
+        assert_eq!(stats.outer_allreduce_calls, 1);
+        assert_eq!(stats.outer_allreduce_bytes, 4.0 * n as f64);
+        assert_eq!(stats.outer_wire_bytes, compress::wire_bytes_topk(n, block, topk) as f64);
+        assert!(
+            stats.outer_wire_bytes <= 0.15 * stats.outer_allreduce_bytes,
+            "k ≤ block/8 must reach the sub-1-bit regime: {} vs {}",
+            stats.outer_wire_bytes,
+            stats.outer_allreduce_bytes
+        );
+        // intra-node clique hop is codec-independent (full-width fp32)
+        assert_eq!(stats.hier_intra_calls, 2);
+        assert_eq!(stats.hier_intra_bytes, 4.0 * n as f64 * (3 + 1) as f64);
+        // dropped coefficients + rounding land in the residuals
+        assert!(state.residual_norm() > 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn hier_reduce_rejects_the_uncompressed_codec() {
+        let g = vec![0.0f32; 8];
+        let anchor = vec![0.0f32; 8];
+        let mut out = vec![0.0f32; 8];
+        hier_all_reduce_fragment_into(&[g.as_slice()], &anchor, 0, 8, 1, OuterCompress::None,
+                                      &mut HierState::default(), &mut out, false,
+                                      &mut CommStats::default());
     }
 
     #[test]
@@ -1125,5 +1312,28 @@ mod tests {
         assert_eq!(old.pp_send_calls, 0);
         assert_eq!(old.pp_bytes, 0.0);
         assert_eq!(old.tp_allgather_bytes, stats.tp_allgather_bytes);
+    }
+
+    #[test]
+    fn comm_stats_json_defaults_wire_columns_to_their_logical_totals() {
+        // Pre-upgrade checkpoints carry broadcast/gather totals but no
+        // wire columns; both legs were fp32, so wire must decode equal to
+        // logical — not zero.
+        let mut stats = CommStats::default();
+        let src = vec![1.0f32; 8];
+        let mut t = vec![0.0f32; 8];
+        broadcast(&src, &mut [&mut t], &mut stats);
+        let mut out = vec![0.0f32; 8];
+        all_gather_into(&[&src[..]], &mut out, &mut stats);
+        let j = stats.to_json().to_string();
+        let back = CommStats::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back, stats);
+        let stripped = j
+            .replace(&format!("\"broadcast_wire_bytes\":{},", stats.broadcast_wire_bytes), "")
+            .replace(&format!("\"gather_wire_bytes\":{},", stats.gather_wire_bytes), "");
+        assert_ne!(stripped, j, "test must actually strip the wire keys");
+        let old = CommStats::from_json(&Json::parse(&stripped).unwrap()).unwrap();
+        assert_eq!(old.broadcast_wire_bytes, stats.broadcast_bytes);
+        assert_eq!(old.gather_wire_bytes, stats.gather_bytes);
     }
 }

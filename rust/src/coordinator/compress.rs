@@ -37,6 +37,28 @@
 //! (DiLoCo-style error feedback, as Psyche ships for its outer steps).
 //! Residuals live in [`HierState`], one per node leader, owned by
 //! `OuterController` across syncs.
+//!
+//! # DCT/top-k (sub-1-bit, DESIGN.md §14)
+//!
+//! `outer_compress = dct-topk` transforms each block with an orthonormal
+//! DCT-II (f64 accumulation, f32 storage), keeps the `k` largest-magnitude
+//! coefficients per block (ties broken by ascending index, so selection is
+//! thread-invariant), and quantizes the kept coefficients to int8 with one
+//! f32 scale per block. Wire format per block of size `s`
+//! (`kept = min(k, s)`):
+//!
+//! * `kept < s` (sparse): 4-byte scale + `kept` little-endian indices
+//!   (u16 when `block ≤ 65536`, else u32) + `kept` int8 payload bytes;
+//! * `kept = s` (dense degenerate): 4-byte scale + `s` int8 payload bytes,
+//!   indices implicit — exactly the [`wire_bytes`] int8 encoding, so
+//!   `k ≥ block` reproduces the dense-int8 wire bound.
+//!
+//! [`wire_bytes_topk`] is the exact byte count; [`DctTopKBuf::to_wire`]
+//! serializes to it. The error-feedback sweep
+//! ([`dct_topk_decode_with_residual_into`]) inverts the kept coefficients
+//! (DCT-III) back to parameter space and stores `r = e − idct(deq(topk))`
+//! — one residual absorbing *both* the dropped coefficients and the int8
+//! rounding, in the same param-space residual store the int8 path uses.
 
 use crate::util::par::{join_spans, max_threads, span, MIN_SPAN};
 
@@ -218,6 +240,341 @@ pub fn dequantize_with_residual_into(buf: &QuantBuf, inout: &mut [f32], residual
     );
 }
 
+// ------------------------------------------------------------------------
+// DCT/top-k transform compression (DESIGN.md §14)
+
+/// Index width of the sparse encoding: u16 while block-local indices fit.
+fn topk_idx_bytes(block: usize) -> usize {
+    if block <= u16::MAX as usize + 1 {
+        2
+    } else {
+        4
+    }
+}
+
+/// Exact wire bytes of a dct-topk-compressed `n`-element span: per block,
+/// a 4-byte scale plus either the sparse `kept·(1 + idx)` encoding or the
+/// dense `s` int8 payload when every coefficient is kept. `k ≥ block`
+/// therefore equals [`wire_bytes`]`(n, block)` exactly. The continuous
+/// per-param form the cost models use is
+/// `config::OuterCompress::bytes_per_param`.
+pub fn wire_bytes_topk(n: usize, block: usize, k: usize) -> usize {
+    assert!(block > 0, "dct block must be positive");
+    assert!(k > 0, "topk must be positive");
+    let idx = topk_idx_bytes(block);
+    let n_blocks = n.div_ceil(block);
+    let mut total = 0;
+    for b in 0..n_blocks {
+        let s_b = (n - b * block).min(block);
+        let kept = k.min(s_b);
+        total += 4 + if kept == s_b { s_b } else { kept * (1 + idx) };
+    }
+    total
+}
+
+/// Reusable dct-topk buffer: per block, the kept coefficient indices
+/// (block-local, ascending), their int8 payload, and one f32 scale.
+/// `len`/`block`/`k` record the span geometry; per-block offsets are
+/// derived from it (all blocks but a ragged tail keep `min(k, block)`).
+#[derive(Clone, Debug, Default)]
+pub struct DctTopKBuf {
+    pub idx: Vec<u32>,
+    pub q: Vec<i8>,
+    pub scales: Vec<f32>,
+    pub block: usize,
+    pub k: usize,
+    pub len: usize,
+}
+
+impl DctTopKBuf {
+    /// Exact serialized size — [`wire_bytes_topk`] over this geometry.
+    pub fn wire_len(&self) -> usize {
+        if self.len == 0 {
+            return 0;
+        }
+        wire_bytes_topk(self.len, self.block, self.k)
+    }
+
+    /// Serialize to the wire format (scale + indices + payload per sparse
+    /// block; scale + dense payload when every coefficient is kept).
+    /// `to_wire().len() == wire_len()` is pinned by the property suite.
+    pub fn to_wire(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.wire_len());
+        if self.len == 0 {
+            return out;
+        }
+        let idx_w = topk_idx_bytes(self.block);
+        let kmin = self.k.min(self.block);
+        for b in 0..self.scales.len() {
+            let s_b = (self.len - b * self.block).min(self.block);
+            let kept = self.k.min(s_b);
+            let off = b * kmin;
+            out.extend_from_slice(&self.scales[b].to_le_bytes());
+            if kept < s_b {
+                for &i in &self.idx[off..off + kept] {
+                    if idx_w == 2 {
+                        out.extend_from_slice(&(i as u16).to_le_bytes());
+                    } else {
+                        out.extend_from_slice(&i.to_le_bytes());
+                    }
+                }
+            }
+            for &qi in &self.q[off..off + kept] {
+                out.push(qi as u8);
+            }
+        }
+        out
+    }
+}
+
+/// Orthonormal DCT-II of one block (f64 accumulation, f32 storage):
+/// `X_k = s_k · Σ_i x_i · cos(π/N · (i+½) · k)`, `s_0 = √(1/N)`,
+/// `s_k = √(2/N)`. Naive O(N²) — the transform runs once per block per
+/// outer sync, and blocks are a few hundred to a few thousand elements.
+fn dct2_block(src: &[f32], out: &mut [f32]) {
+    let n = src.len();
+    debug_assert_eq!(out.len(), n);
+    let nf = n as f64;
+    let step = std::f64::consts::PI / nf;
+    for (kk, o) in out.iter_mut().enumerate() {
+        let mut acc = 0.0f64;
+        for (i, &x) in src.iter().enumerate() {
+            acc += x as f64 * (step * (i as f64 + 0.5) * kk as f64).cos();
+        }
+        let s = if kk == 0 { (1.0 / nf).sqrt() } else { (2.0 / nf).sqrt() };
+        *o = (acc * s) as f32;
+    }
+}
+
+/// Orthonormal DCT-III of one block — the exact transpose (= inverse) of
+/// [`dct2_block`], same f64 accumulation.
+fn dct3_block(coef: &[f32], out: &mut [f32]) {
+    let n = coef.len();
+    debug_assert_eq!(out.len(), n);
+    let nf = n as f64;
+    let step = std::f64::consts::PI / nf;
+    let s0 = (1.0 / nf).sqrt();
+    let sk = (2.0 / nf).sqrt();
+    for (i, o) in out.iter_mut().enumerate() {
+        let mut acc = coef[0] as f64 * s0;
+        for (kk, &c) in coef.iter().enumerate().skip(1) {
+            acc += c as f64 * sk * (step * (i as f64 + 0.5) * kk as f64).cos();
+        }
+        *o = acc as f32;
+    }
+}
+
+/// Transform + select + quantize one block serially. `idx_out`/`q_out`
+/// are the block's `kept` slots; returns the block scale. Selection is by
+/// descending |coefficient| with ties broken by ascending index
+/// (`total_cmp`, so it is a fixed total order — thread-invariant), and
+/// the kept set is stored in ascending index order.
+fn dct_topk_block(
+    src: &[f32],
+    coef: &mut Vec<f32>,
+    order: &mut Vec<u32>,
+    idx_out: &mut [u32],
+    q_out: &mut [i8],
+) -> f32 {
+    let s_b = src.len();
+    let kept = idx_out.len();
+    coef.clear();
+    coef.resize(s_b, 0.0);
+    dct2_block(src, coef);
+    order.clear();
+    order.extend(0..s_b as u32);
+    order.sort_unstable_by(|&a, &b| {
+        coef[b as usize]
+            .abs()
+            .total_cmp(&coef[a as usize].abs())
+            .then(a.cmp(&b))
+    });
+    order.truncate(kept);
+    order.sort_unstable();
+    idx_out.copy_from_slice(order);
+    let mut amax = 0.0f32;
+    for &i in order.iter() {
+        amax = amax.max(coef[i as usize].abs());
+    }
+    if amax == 0.0 {
+        q_out.fill(0);
+        return 0.0;
+    }
+    let amax = amax.min(f32::MAX); // non-finite inputs clamp, as int8 does
+    let scale = amax / 127.0;
+    let inv = 1.0 / scale;
+    for (o, &i) in q_out.iter_mut().zip(order.iter()) {
+        *o = (coef[i as usize] * inv).round().clamp(-127.0, 127.0) as i8;
+    }
+    scale
+}
+
+/// Kept coefficients of block `b` given the span geometry.
+fn topk_kept(n: usize, block: usize, k: usize, b: usize) -> usize {
+    k.min((n - b * block).min(block))
+}
+
+/// DCT-II + top-k + int8 encode of `src` into `buf` (resizing it),
+/// span-parallel over block-aligned chunks. Deterministic for any thread
+/// count: each block's coefficients, selection, and payload depend only
+/// on that block's inputs, and the per-block pipeline is serial.
+pub fn dct_topk_forward_into(src: &[f32], block: usize, k: usize, buf: &mut DctTopKBuf) {
+    assert!(block > 0, "dct block must be positive");
+    assert!(k > 0, "topk must be positive");
+    let n = src.len();
+    let n_blocks = n.div_ceil(block);
+    let kmin = k.min(block);
+    let total_kept = if n == 0 {
+        0
+    } else {
+        (n_blocks - 1) * kmin + topk_kept(n, block, k, n_blocks - 1)
+    };
+    buf.idx.resize(total_kept, 0);
+    buf.q.resize(total_kept, 0);
+    buf.scales.resize(n_blocks, 0.0);
+    buf.block = block;
+    buf.k = k;
+    buf.len = n;
+    if n == 0 {
+        return;
+    }
+    let chunk_blocks = par_chunk_blocks(n, block, n_blocks);
+    let DctTopKBuf { idx, q, scales, .. } = buf;
+    if chunk_blocks >= n_blocks {
+        let mut coef = Vec::new();
+        let mut order = Vec::new();
+        for (b, s) in scales.iter_mut().enumerate() {
+            let lo = b * block;
+            let hi = (lo + block).min(n);
+            let kept = k.min(hi - lo);
+            let off = b * kmin;
+            *s = dct_topk_block(&src[lo..hi], &mut coef, &mut order,
+                                &mut idx[off..off + kept], &mut q[off..off + kept]);
+        }
+        return;
+    }
+    let eb = chunk_blocks * block;
+    let ek = chunk_blocks * kmin;
+    join_spans(
+        idx.chunks_mut(ek)
+            .zip(q.chunks_mut(ek))
+            .zip(scales.chunks_mut(chunk_blocks))
+            .enumerate()
+            .map(|(i, ((ic, qc), sc))| {
+                let start = i * eb;
+                let src = &src[start..(start + eb).min(n)];
+                move || {
+                    let mut coef = Vec::new();
+                    let mut order = Vec::new();
+                    for (b, s) in sc.iter_mut().enumerate() {
+                        let lo = b * block;
+                        let hi = (lo + block).min(src.len());
+                        let kept = k.min(hi - lo);
+                        let off = b * kmin;
+                        *s = dct_topk_block(&src[lo..hi], &mut coef, &mut order,
+                                            &mut ic[off..off + kept],
+                                            &mut qc[off..off + kept]);
+                    }
+                }
+            }),
+    );
+}
+
+/// Decode one block into `out`: scatter the dequantized kept coefficients
+/// into a zeroed coefficient vector and invert (DCT-III).
+fn dct_topk_decode_block(
+    idx: &[u32],
+    q: &[i8],
+    scale: f32,
+    coef: &mut Vec<f32>,
+    out: &mut [f32],
+) {
+    coef.clear();
+    coef.resize(out.len(), 0.0);
+    for (&i, &qi) in idx.iter().zip(q) {
+        coef[i as usize] = qi as f32 * scale;
+    }
+    dct3_block(coef, out);
+}
+
+/// Decode `buf` into `out` (`out = idct(deq(topk))`), span-parallel over
+/// block-aligned chunks.
+pub fn dct_topk_decode_into(buf: &DctTopKBuf, out: &mut [f32]) {
+    assert_eq!(out.len(), buf.len, "dct decode: buffer/span mismatch");
+    let (n, block, k) = (buf.len, buf.block, buf.k);
+    if n == 0 {
+        return;
+    }
+    let kmin = k.min(block);
+    let n_blocks = buf.scales.len();
+    let chunk_blocks = par_chunk_blocks(n, block, n_blocks);
+    let eb = chunk_blocks * block;
+    join_spans(out.chunks_mut(eb).enumerate().map(|(i, oc)| {
+        let b0 = i * chunk_blocks;
+        move || {
+            let mut coef = Vec::new();
+            for (bl, ob) in oc.chunks_mut(block).enumerate() {
+                let b = b0 + bl;
+                let kept = k.min(ob.len());
+                let off = b * kmin;
+                dct_topk_decode_block(&buf.idx[off..off + kept], &buf.q[off..off + kept],
+                                      buf.scales[b], &mut coef, ob);
+            }
+        }
+    }));
+}
+
+/// The dct-topk error-feedback core, mirroring
+/// [`dequantize_with_residual_into`]: `inout` holds the transmitted value
+/// `e = Δ + r` on entry; on exit `inout = idct(deq(topk(e)))` (what the
+/// wire delivered back in parameter space) and `residual = e − inout` —
+/// one sweep absorbing both the dropped coefficients and the rounding.
+pub fn dct_topk_decode_with_residual_into(
+    buf: &DctTopKBuf,
+    inout: &mut [f32],
+    residual: &mut [f32],
+) {
+    assert_eq!(inout.len(), buf.len, "dct residual sweep: buffer/span mismatch");
+    assert_eq!(residual.len(), buf.len, "dct residual sweep: residual/span mismatch");
+    let (n, block, k) = (buf.len, buf.block, buf.k);
+    if n == 0 {
+        return;
+    }
+    let kmin = k.min(block);
+    let n_blocks = buf.scales.len();
+    let chunk_blocks = par_chunk_blocks(n, block, n_blocks);
+    let eb = chunk_blocks * block;
+    join_spans(
+        inout
+            .chunks_mut(eb)
+            .zip(residual.chunks_mut(eb))
+            .enumerate()
+            .map(|(i, (ec, rc))| {
+                let b0 = i * chunk_blocks;
+                move || {
+                    let mut coef = Vec::new();
+                    let mut dec = Vec::new();
+                    for (bl, (ebk, rbk)) in
+                        ec.chunks_mut(block).zip(rc.chunks_mut(block)).enumerate()
+                    {
+                        let b = b0 + bl;
+                        let kept = k.min(ebk.len());
+                        let off = b * kmin;
+                        dec.clear();
+                        dec.resize(ebk.len(), 0.0);
+                        dct_topk_decode_block(&buf.idx[off..off + kept],
+                                              &buf.q[off..off + kept], buf.scales[b],
+                                              &mut coef, &mut dec);
+                        for ((e, r), &d) in ebk.iter_mut().zip(rbk.iter_mut()).zip(&dec) {
+                            *r = *e - d;
+                            *e = d;
+                        }
+                    }
+                }
+            }),
+    );
+}
+
 /// Persistent state of the hierarchical compressed outer sync, owned by
 /// `OuterController` (DESIGN.md §9): one full-model error-feedback
 /// residual per node leader (the only state that must persist across
@@ -240,6 +597,9 @@ pub struct HierState {
     pub acc: Vec<f64>,
     /// Shared quantize buffer (one leader is processed at a time).
     pub qbuf: QuantBuf,
+    /// Shared dct-topk buffer (same single-leader discipline; unused —
+    /// and unallocated — under `none`/`int8`).
+    pub tbuf: DctTopKBuf,
 }
 
 impl HierState {
@@ -301,6 +661,120 @@ mod tests {
             let ratio = wire_bytes(n, 4096) as f64 / (4 * n) as f64;
             assert!(ratio <= 0.30, "n={n}: {ratio}");
         }
+    }
+
+    #[test]
+    fn wire_bytes_topk_formula() {
+        // sparse: kept·(1 + 2) + 4 per full u16 block
+        assert_eq!(wire_bytes_topk(4096, 4096, 512), 512 * 3 + 4);
+        // ragged tail keeps min(k, tail) and may go dense
+        assert_eq!(wire_bytes_topk(4096 + 100, 4096, 512), (512 * 3 + 4) + (100 + 4));
+        assert_eq!(wire_bytes_topk(4096 + 1000, 4096, 512), (512 * 3 + 4) + (512 * 3 + 4));
+        // k ≥ block degenerates to the dense int8 wire — exactly
+        for (n, block) in [(4096usize, 4096usize), (10_000, 512), (300, 100), (1, 7)] {
+            assert_eq!(wire_bytes_topk(n, block, block), wire_bytes(n, block), "n={n}");
+            assert_eq!(wire_bytes_topk(n, block, 5 * block), wire_bytes(n, block), "n={n}");
+        }
+        // u32 indices past the u16 block bound
+        let wide = 1usize << 17;
+        assert_eq!(wire_bytes_topk(wide, wide, 16), 16 * 5 + 4);
+        assert_eq!(wire_bytes_topk(0, 4096, 512), 0);
+        // the sub-1-bit cut: k = block/8 at u16 is ≤ 0.15× of fp32
+        for n in [4096usize, 100_000, 1 << 20] {
+            let ratio = wire_bytes_topk(n, 4096, 512) as f64 / (4 * n) as f64;
+            assert!(ratio <= 0.15, "n={n}: {ratio}");
+        }
+    }
+
+    #[test]
+    fn dct_forward_inverse_roundtrip_dense() {
+        // k = block keeps every coefficient: encode→decode is the DCT
+        // round-trip plus int8 rounding — bounded by one quantization
+        // step of the largest coefficient, mapped through an orthonormal
+        // transform (norm-preserving, so the same scale bounds hold).
+        let n = 700;
+        let block = 128;
+        let src = randvec(n, 5);
+        let mut buf = DctTopKBuf::default();
+        dct_topk_forward_into(&src, block, block, &mut buf);
+        let mut back = vec![0.0f32; n];
+        dct_topk_decode_into(&buf, &mut back);
+        for (b, chunk) in src.chunks(block).enumerate() {
+            let tol = buf.scales[b] * (chunk.len() as f32).sqrt() + 1e-5;
+            for (i, (&x, &d)) in chunk.iter().zip(&back[b * block..]).enumerate() {
+                assert!((x - d).abs() <= tol, "b={b} i={i}: |{x} − {d}| > {tol}");
+            }
+        }
+    }
+
+    #[test]
+    fn dct_topk_residual_sweep_is_exact_split() {
+        // Mirror of `residual_sweep_is_exact_split` for the transform
+        // path: inout ends as the decoded value, residual as e − decoded.
+        let e0 = randvec(500, 13);
+        let mut e = e0.clone();
+        let mut r = vec![9.0f32; 500];
+        let mut buf = DctTopKBuf::default();
+        dct_topk_forward_into(&e, 64, 8, &mut buf);
+        let mut d = vec![0.0f32; 500];
+        dct_topk_decode_into(&buf, &mut d);
+        dct_topk_decode_with_residual_into(&buf, &mut e, &mut r);
+        for i in 0..500 {
+            assert_eq!(e[i].to_bits(), d[i].to_bits(), "inout holds the decoded value");
+            assert_eq!(r[i].to_bits(), (e0[i] - d[i]).to_bits(), "residual is the error");
+        }
+    }
+
+    #[test]
+    fn dct_topk_serialization_matches_the_wire_formula() {
+        for (n, block, k) in
+            [(1000usize, 64usize, 8usize), (4096, 4096, 512), (300, 100, 100), (777, 256, 300)]
+        {
+            let src = randvec(n, 31);
+            let mut buf = DctTopKBuf::default();
+            dct_topk_forward_into(&src, block, k, &mut buf);
+            let wire = buf.to_wire();
+            assert_eq!(wire.len(), buf.wire_len(), "n={n} block={block} k={k}");
+            assert_eq!(wire.len(), wire_bytes_topk(n, block, k));
+        }
+    }
+
+    #[test]
+    fn dct_topk_selection_keeps_the_largest_coefficients() {
+        // A block that is exactly one DCT basis vector concentrates all
+        // energy in one coefficient; k=1 must find it and reconstruct the
+        // block to within int8 rounding of the single coefficient.
+        let n = 64;
+        let nf = n as f64;
+        let kk = 5usize;
+        let src: Vec<f32> = (0..n)
+            .map(|i| {
+                ((2.0 / nf).sqrt()
+                    * (std::f64::consts::PI / nf * (i as f64 + 0.5) * kk as f64).cos())
+                    as f32
+            })
+            .collect();
+        let mut buf = DctTopKBuf::default();
+        dct_topk_forward_into(&src, n, 1, &mut buf);
+        assert_eq!(buf.idx.len(), 1);
+        assert_eq!(buf.idx[0], kk as u32, "the energy coefficient is selected");
+        assert_eq!(buf.q[0], 127);
+        let mut back = vec![0.0f32; n];
+        dct_topk_decode_into(&buf, &mut back);
+        for (i, (&x, &d)) in src.iter().zip(&back).enumerate() {
+            assert!((x - d).abs() < 1e-3, "i={i}: {x} vs {d}");
+        }
+    }
+
+    #[test]
+    fn dct_topk_zero_block_is_exact() {
+        let src = vec![0.0f32; 200];
+        let mut buf = DctTopKBuf::default();
+        dct_topk_forward_into(&src, 64, 8, &mut buf);
+        assert!(buf.scales.iter().all(|&s| s == 0.0));
+        let mut back = vec![1.0f32; 200];
+        dct_topk_decode_into(&buf, &mut back);
+        assert!(back.iter().all(|&x| x == 0.0));
     }
 
     #[test]

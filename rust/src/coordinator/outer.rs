@@ -94,32 +94,52 @@
 //! partial sync, and the two extensions share the one
 //! [`fragment_span`] partition helper.
 //!
-//! # Compressed outer sync (DESIGN.md §9)
+//! # Compressed outer sync (DESIGN.md §9, §14)
 //!
-//! With `cfg.outer_compress = int8` every fragment core — blocking, the
-//! rotating partial sync, and the streaming fragments alike — routes
-//! through [`hier_all_reduce_fragment_into`]: a full-width fp32 clique
-//! reduce on intra-node links, then a block-quantized int8 delta exchange
-//! between node leaders with persistent error-feedback residuals (owned
-//! here, in [`HierState`], so quantization error carries across rounds
-//! instead of biasing the trajectory). The Nesterov/schedule machinery
-//! downstream is byte-for-byte the fp32 path's; what changes is the
-//! transmitted delta (≤ one quantization step per node) and the wire
-//! bytes (`CommStats::outer_wire_bytes` ≈ ¼ of the logical fp32 volume).
-//! Warmup accumulation (Alg. 1) runs on the synchronized trajectory and
-//! is never compressed. When all replicas share one node
+//! With a compressing `cfg.outer_compress` codec (block-int8 or the
+//! sub-1-bit DCT/top-k of §14) every fragment core — blocking, the
+//! rotating partial sync, the streaming fragments, and the quorum sync
+//! alike — routes through [`hier_all_reduce_fragment_into`]: a full-width
+//! fp32 clique reduce on intra-node links, then a compressed delta
+//! exchange between node leaders with persistent error-feedback residuals
+//! (owned here, in [`HierState`], so the encoding error — rounding, and
+//! for dct-topk the dropped coefficients — carries across rounds instead
+//! of biasing the trajectory). The Nesterov/schedule machinery downstream
+//! is byte-for-byte the fp32 path's; what changes is the transmitted
+//! delta and the wire bytes (`CommStats::outer_wire_bytes` ≈ ¼ of the
+//! logical fp32 volume for int8, sub-1-bit-per-param for dct-topk at
+//! k ≤ block/8). Warmup accumulation (Alg. 1) runs on the synchronized
+//! trajectory and is never compressed. When all replicas share one node
 //! (`config::outer_cliques` yields a single clique) there is no fabric
 //! hop and the sync falls back to the exact fp32 path, bit-identical to
 //! `outer_compress = none`.
+//!
+//! # Quantized restart broadcast (DESIGN.md §14)
+//!
+//! With `cfg.outer_broadcast_quant` the *second* fabric hop — the
+//! leader→clique restart broadcast, a full fp32 model copy per receiver
+//! after PR 4 — is block-int8 quantized ZeRO++-style:
+//! [`Self::quantize_restart_for_broadcast`] folds the restart delta
+//! (measured against the pre-step anchor, the reference every replica
+//! already holds) through `quant`/`dequant` with its **own** persistent
+//! error-feedback residual before the end-of-step anchor move, so the
+//! restart every replica installs is exactly what the narrow wire format
+//! can carry, and the anchor the next round measures deltas from matches
+//! it. The post-mean restart is identical on every leader, so one
+//! full-model residual stream suffices; quantization always runs over
+//! the whole fragment span — never per shard owner — keeping the sharded
+//! run bit-identical to the unsharded one. The sharded restart gather
+//! books its wire bytes at the same narrow payload. No-op (exact fp32,
+//! bit-identical to the knob off) when all replicas share one node.
 
 use anyhow::{ensure, Result};
 
-use crate::config::{outer_cliques, OptMode, OuterCompress, TrainConfig};
-use crate::coordinator::collective::{all_gather_into, fragment_pipeline, fragment_span,
+use crate::config::{outer_cliques, OptMode, TrainConfig};
+use crate::coordinator::collective::{all_gather_wire_into, fragment_pipeline, fragment_span,
                                      fragment_spans, hier_all_reduce_fragment_into,
                                      outer_all_reduce_fragment_into, outer_all_reduce_into,
                                      shard_span, CommStats};
-use crate::coordinator::compress::HierState;
+use crate::coordinator::compress::{self, HierState, QuantBuf};
 use crate::coordinator::offload::OffloadStore;
 use crate::coordinator::state::OuterState;
 use crate::optim::nesterov::OuterOpt;
@@ -134,10 +154,20 @@ pub struct OuterController {
     /// Rotating fragment index for streaming partial sync (extension):
     /// counts fragments of the current cycle, in `[0, cycle_len)`.
     frag_cursor: usize,
-    /// Error-feedback residuals + scratch of the int8 compressed sync
-    /// (DESIGN.md §9). Empty until the first compressed sync; persists
-    /// across rounds so quantization error is re-injected, never lost.
+    /// Error-feedback residuals + scratch of the compressed sync
+    /// (DESIGN.md §9, §14 — int8 and dct-topk share the store). Empty
+    /// until the first compressed sync; persists across rounds so the
+    /// encoding error is re-injected, never lost.
     hier: HierState,
+    /// Error-feedback residual of the quantized restart broadcast
+    /// (DESIGN.md §14) — one full-model stream: the post-mean restart is
+    /// identical on every leader, so a single residual suffices. Empty
+    /// until the first quantized broadcast; checkpointed (resume-exact).
+    bcast_residual: Vec<f32>,
+    /// Scratch + quant buffer of the quantized broadcast — its own state,
+    /// so the delta-exchange residual machinery is untouched.
+    bcast_scratch: Vec<f32>,
+    bcast_qbuf: QuantBuf,
     /// Stragglers' 1/k-weighted deltas awaiting the next quorum round
     /// ([`Self::sync_quorum`]); empty while no carry is outstanding.
     late_carry: Vec<f32>,
@@ -261,6 +291,9 @@ impl OuterController {
             store,
             frag_cursor: 0,
             hier: HierState::default(),
+            bcast_residual: Vec::new(),
+            bcast_scratch: Vec::new(),
+            bcast_qbuf: QuantBuf::default(),
             late_carry: Vec::new(),
             mean: vec![0.0; n],
             delta: vec![0.0; n],
@@ -363,7 +396,7 @@ impl OuterController {
     fn blocking_core(&mut self, step: usize, group_params: &[&[f32]], stats: &mut CommStats) {
         self.load_offloaded();
 
-        if self.cfg.outer_compress == OuterCompress::Int8
+        if self.cfg.outer_compress.is_compressing()
             || self.shard_owner_count(group_params.len()) > 1
         {
             // Compressed and/or sharded blocking sync: the full model as
@@ -409,6 +442,8 @@ impl OuterController {
             &mut self.restart,
         );
 
+        let n = self.anchor.len();
+        self.quantize_restart_for_broadcast(0, n, group_params.len());
         self.anchor.copy_from_slice(&self.restart);
         self.last_mu = mu;
         self.last_lr = lr;
@@ -491,6 +526,11 @@ impl OuterController {
         if k <= 1 {
             return;
         }
+        // With the quantized broadcast engaged the restart content is
+        // already the narrow §14 block-int8 payload (the leaders share
+        // the anchor, so only indices-free int8 + scales move); book the
+        // gather's wire column at that width, logical stays fp32.
+        let wire = self.restart_wire_bytes(hi - lo, dp);
         let n = self.anchor.len();
         let OuterController { restart, mean, .. } = self;
         let shards: Vec<&[f32]> = fragment_spans(n, k)
@@ -500,11 +540,96 @@ impl OuterController {
                 (a < b).then(|| &restart[a..b])
             })
             .collect();
-        all_gather_into(&shards, &mut mean[lo..hi], stats);
+        all_gather_wire_into(&shards, &mut mean[lo..hi], wire, stats);
         debug_assert!(
             mean[lo..hi].iter().zip(&restart[lo..hi]).all(|(a, b)| a.to_bits() == b.to_bits()),
             "sharded restart gather must reassemble the restart range"
         );
+    }
+
+    /// Whether the quantized restart broadcast (DESIGN.md §14) engages
+    /// for a `dp`-group run: the `outer_broadcast_quant` knob is on AND
+    /// the leaders span more than one node — with a single clique the
+    /// restart moves on intra-node links, where the exact fp32 install is
+    /// both fast and lossless (bit-identical to the knob off).
+    pub fn broadcast_quant_active(&self, dp: usize) -> bool {
+        if !self.cfg.outer_broadcast_quant {
+            return false;
+        }
+        let (_, nodes) = outer_cliques(
+            dp.max(1),
+            self.cfg.shards_per_replica(),
+            self.cfg.gpus_per_node.max(1),
+        );
+        nodes > 1
+    }
+
+    /// Wire bytes one receiver moves when a restart span of `span_len`
+    /// params is installed across the fabric: the §14 block-int8 payload
+    /// when the quantized broadcast engages for this `dp`-group run, the
+    /// fp32 span otherwise. The trainer multiplies by its receiver count
+    /// when booking the broadcast scope; the sharded restart gather books
+    /// one gathered tensor at this width.
+    pub fn restart_wire_bytes(&self, span_len: usize, dp: usize) -> f64 {
+        if self.broadcast_quant_active(dp) {
+            compress::wire_bytes(span_len, self.cfg.outer_compress.block().max(1)) as f64
+        } else {
+            4.0 * span_len as f64
+        }
+    }
+
+    /// The quantized restart-broadcast leg (DESIGN.md §14, ZeRO++-style):
+    /// fold `restart[lo..hi)` through block-int8 with the controller's
+    /// broadcast error-feedback residual, so the restart every replica
+    /// installs is `anchor + deq(quant(restart − anchor + r))` — exactly
+    /// the bits the narrow wire format can carry. Must run before the
+    /// end-of-step anchor move: the anchor still holds the point every
+    /// replica restarted the finished phase from, the delta reference
+    /// both ends of the wire share — and the subsequent anchor copy then
+    /// keeps the controller's reference equal to what the replicas
+    /// actually installed, so next round's deltas are measured
+    /// consistently. Quantization runs over the whole fragment span —
+    /// never per shard owner — so the sharded run stays bit-identical to
+    /// the unsharded one (§14 interaction matrix). No-op when inactive.
+    fn quantize_restart_for_broadcast(&mut self, lo: usize, hi: usize, dp: usize) {
+        if hi <= lo || !self.broadcast_quant_active(dp) {
+            return;
+        }
+        let block = self.cfg.outer_compress.block().max(1);
+        let n = self.anchor.len();
+        if self.bcast_residual.len() != n {
+            self.bcast_residual.resize(n, 0.0);
+        }
+        let OuterController { anchor, restart, bcast_residual, bcast_scratch, bcast_qbuf, .. } =
+            self;
+        bcast_scratch.resize(hi - lo, 0.0);
+        // e = (restart − anchor_prev) + residual over the fragment span.
+        for ((e, (&t, &a)), &r) in bcast_scratch
+            .iter_mut()
+            .zip(restart[lo..hi].iter().zip(&anchor[lo..hi]))
+            .zip(&bcast_residual[lo..hi])
+        {
+            *e = (t - a) + r;
+        }
+        // Transmit deq(quant(e)); keep residual = e − deq(quant(e)).
+        compress::quantize_into(bcast_scratch, block, bcast_qbuf);
+        compress::dequantize_with_residual_into(bcast_qbuf, bcast_scratch,
+                                                &mut bcast_residual[lo..hi]);
+        // Every replica (the leader-co-located one included) installs the
+        // dequantized form — one global model, no leader-local fork.
+        for (t, (&a, &d)) in restart[lo..hi]
+            .iter_mut()
+            .zip(anchor[lo..hi].iter().zip(bcast_scratch.iter()))
+        {
+            *t = a + d;
+        }
+    }
+
+    /// L2 norm of the quantized restart broadcast's error-feedback
+    /// residual (0 before any quantized broadcast) — telemetry mirroring
+    /// [`Self::compress_residual_norm`].
+    pub fn broadcast_residual_norm(&self) -> f64 {
+        self.bcast_residual.iter().map(|&r| r as f64 * r as f64).sum::<f64>().sqrt()
     }
 
     /// The controller's committed-parameter view (checkpoint/eval):
@@ -594,19 +719,19 @@ impl OuterController {
     /// extensions cannot drift. Returns the scheduled `(μ, lr)`;
     /// telemetry, counters, and offload bracketing stay with the callers
     /// (per event for partial, per last-fragment for streaming).
-    /// Under `outer_compress = int8` (DESIGN.md §9) only the *delta
-    /// production* changes: the two-level quantized reduce
-    /// ([`hier_all_reduce_fragment_into`]) yields the mean delta directly
-    /// — each clique's summed delta quantized with the leader's
+    /// Under a compressing `outer_compress` codec (int8 §9, dct-topk
+    /// §14) only the *delta production* changes: the two-level compressed
+    /// reduce ([`hier_all_reduce_fragment_into`]) yields the mean delta
+    /// directly — each clique's summed delta encoded with the leader's
     /// error-feedback residual, exchanged narrow, averaged over the `k`
     /// replicas — instead of the fp32 path's `mean − anchor` subtraction.
     /// Everything downstream (schedule, the fragment Nesterov step, the
     /// fragment-wise anchor move) is the one shared tail below, so
-    /// compression changes the transmitted delta (by ≤ one quantization
-    /// step per node, unbiased long-run via the residuals) and the wire
-    /// bytes — never the optimizer algebra. When all replicas share one
-    /// node there is no inter-node hop to compress, and the exact fp32
-    /// reduction runs — bit-identical to `outer_compress = none`.
+    /// compression changes the transmitted delta (bounded, unbiased
+    /// long-run via the residuals) and the wire bytes — never the
+    /// optimizer algebra. When all replicas share one node there is no
+    /// inter-node hop to compress, and the exact fp32 reduction runs —
+    /// bit-identical to `outer_compress = none`.
     fn fragment_outer_step(
         &mut self,
         step: usize,
@@ -616,7 +741,7 @@ impl OuterController {
         overlapped: bool,
         stats: &mut CommStats,
     ) -> (f64, f64) {
-        let int8_clique = if self.cfg.outer_compress == OuterCompress::Int8 {
+        let hier_clique = if self.cfg.outer_compress.is_compressing() {
             // Replica width is tp·pp, not tp: `shards_per_replica()` is the
             // one routing for the clique contract (DESIGN.md §9, §12).
             let (clique, nodes) = outer_cliques(
@@ -628,14 +753,14 @@ impl OuterController {
         } else {
             None
         };
-        if let Some(clique) = int8_clique {
-            // Sharding never re-partitions the quantized exchange: block
-            // quantization re-anchors per transmitted fragment, so a
-            // per-owner split would change the bits (§13's interaction
+        if let Some(clique) = hier_clique {
+            // Sharding never re-partitions the compressed exchange: both
+            // codecs re-anchor their blocks per transmitted fragment, so a
+            // per-owner split would change the bits (§13/§14's interaction
             // matrix). Ownership partitions the state + restart gather.
-            let block = self.cfg.outer_quant_block.max(1);
+            let codec = self.cfg.outer_compress;
             let OuterController { anchor, delta, hier, .. } = self;
-            hier_all_reduce_fragment_into(group_params, &anchor[..], lo, hi, clique, block,
+            hier_all_reduce_fragment_into(group_params, &anchor[..], lo, hi, clique, codec,
                                           hier, &mut delta[lo..hi], overlapped, stats);
         } else {
             // fp32: with ZeRO sharding (§13) the fragment's all-reduce is
@@ -678,6 +803,9 @@ impl OuterController {
             &mut self.committed[lo..hi],
             &mut self.restart[lo..hi],
         );
+        // Quantized restart broadcast (§14): narrow the restart fragment
+        // before the anchor move, so anchor and receivers agree bitwise.
+        self.quantize_restart_for_broadcast(lo, hi, group_params.len());
         // Sibling fragments read only their own (untouched) anchor
         // ranges, so moving the anchor fragment-wise matches the blocking
         // sync's single end-of-step copy bit for bit.
@@ -687,8 +815,9 @@ impl OuterController {
         (mu, lr)
     }
 
-    /// L2 norm of the int8 sync's error-feedback residuals (0 before any
-    /// compressed sync) — telemetry for the drift tests and run logs.
+    /// L2 norm of the compressed sync's error-feedback residuals (0
+    /// before any compressed sync; int8 and dct-topk share the store) —
+    /// telemetry for the drift tests and run logs.
     pub fn compress_residual_norm(&self) -> f64 {
         self.hier.residual_norm()
     }
@@ -898,8 +1027,10 @@ impl OuterController {
 
     /// Snapshot the cross-round state for the v2 checkpoint (DESIGN.md
     /// §11): momentum, anchor, committed view, the rotating partial
-    /// sync's fragment cursor, the int8 error-feedback residuals, and the
-    /// telemetry counters. Taken between iterations, where the
+    /// sync's fragment cursor, the compressed sync's error-feedback
+    /// residuals (delta-exchange *and* broadcast streams, §14 — both
+    /// must resume exactly or the EF unbiasedness contract breaks), and
+    /// the telemetry counters. Taken between iterations, where the
     /// mean/delta/restart scratch holds nothing the next sync reads (the
     /// restart point equals the anchor at every such boundary) and no
     /// quorum carry is outstanding — the trainer's checkpoint sites.
@@ -914,6 +1045,11 @@ impl OuterController {
             last_mu: self.last_mu,
             last_lr: self.last_lr,
             residuals: self.hier.residuals.clone(),
+            bcast_residuals: if self.bcast_residual.is_empty() {
+                Vec::new()
+            } else {
+                vec![self.bcast_residual.clone()]
+            },
         }
     }
 
@@ -932,12 +1068,21 @@ impl OuterController {
         for (i, r) in st.residuals.iter().enumerate() {
             ensure!(r.len() == n, "residual {i} length {} != {n}", r.len());
         }
+        ensure!(
+            st.bcast_residuals.len() <= 1,
+            "at most one broadcast residual stream, got {}",
+            st.bcast_residuals.len()
+        );
+        for (i, r) in st.bcast_residuals.iter().enumerate() {
+            ensure!(r.len() == n, "broadcast residual {i} length {} != {n}", r.len());
+        }
         self.opt.momentum.copy_from_slice(&st.momentum);
         self.anchor.copy_from_slice(&st.anchor);
         self.committed.copy_from_slice(&st.committed);
         self.restart.copy_from_slice(&st.anchor);
         self.frag_cursor = st.frag_cursor;
         self.hier.restore_residuals(st.residuals.clone());
+        self.bcast_residual = st.bcast_residuals.first().cloned().unwrap_or_default();
         self.outer_steps = st.outer_steps;
         self.warmup_accums = st.warmup_accums;
         self.last_mu = st.last_mu;
@@ -995,18 +1140,37 @@ impl OuterController {
         assert_eq!(on_time.len(), k, "on_time mask must cover every group");
         let q = on_time.iter().filter(|&&b| b).count();
         assert!(q >= 1, "quorum sync needs at least one on-time group");
-        assert_eq!(
-            self.cfg.outer_compress,
-            OuterCompress::None,
-            "quorum sync is defined on the fp32 path"
-        );
         self.load_offloaded();
 
         let on: Vec<&[f32]> =
             group_params.iter().zip(on_time).filter(|&(_, &b)| b).map(|(g, _)| *g).collect();
-        outer_all_reduce_into(&on, &mut self.mean, stats);
-        for ((d, &m), &a) in self.delta.iter_mut().zip(&self.mean).zip(&self.anchor) {
-            *d = m - a;
+        // A compressing codec routes the on-time quorum through the same
+        // hierarchical seam as the other cores (§14 interaction matrix).
+        // Cliques are re-derived over the quorum order — stragglers leave
+        // holes in the placement, and re-packing the survivors is the
+        // §11 elastic-membership convention — so with everyone on time
+        // the exchange is bit-identical to the blocking compressed sync.
+        let hier_clique = if self.cfg.outer_compress.is_compressing() {
+            let (clique, nodes) = outer_cliques(
+                on.len(),
+                self.cfg.shards_per_replica(),
+                self.cfg.gpus_per_node.max(1),
+            );
+            (nodes > 1).then_some(clique)
+        } else {
+            None
+        };
+        if let Some(clique) = hier_clique {
+            let codec = self.cfg.outer_compress;
+            let full = self.anchor.len();
+            let OuterController { anchor, delta, hier, .. } = self;
+            hier_all_reduce_fragment_into(&on, anchor, 0, full, clique, codec, hier,
+                                          &mut delta[..], false, stats);
+        } else {
+            outer_all_reduce_into(&on, &mut self.mean, stats);
+            for ((d, &m), &a) in self.delta.iter_mut().zip(&self.mean).zip(&self.anchor) {
+                *d = m - a;
+            }
         }
         if q < k {
             // mean over the quorum, re-weighted so each on-time delta
@@ -1044,8 +1208,9 @@ impl OuterController {
             &mut self.committed,
             &mut self.restart,
         );
-        self.anchor.copy_from_slice(&self.restart);
         let n = self.anchor.len();
+        self.quantize_restart_for_broadcast(0, n, k);
+        self.anchor.copy_from_slice(&self.restart);
         self.sharded_restart_gather(0, n, k, stats);
         self.last_mu = mu;
         self.last_lr = lr;
@@ -1525,8 +1690,14 @@ mod tests {
 
     fn cfg_int8(gpn: usize, block: usize) -> TrainConfig {
         let mut c = cfg(OptMode::DiLoCo); // fixed outer schedule
-        c.outer_compress = crate::config::OuterCompress::Int8;
-        c.outer_quant_block = block;
+        c.outer_compress = crate::config::OuterCompress::Int8 { block };
+        c.gpus_per_node = gpn;
+        c
+    }
+
+    fn cfg_dct(gpn: usize, block: usize, k: usize) -> TrainConfig {
+        let mut c = cfg(OptMode::DiLoCo);
+        c.outer_compress = crate::config::OuterCompress::DctTopK { block, k };
         c.gpus_per_node = gpn;
         c
     }
@@ -1669,6 +1840,239 @@ mod tests {
         assert!(touched.iter().all(|&t| t == 1));
         assert!(sp.outer_wire_bytes < 0.5 * sp.outer_allreduce_bytes);
         assert!(ctl_p.compress_residual_norm() > 0.0);
+    }
+
+    #[test]
+    fn dct_topk_sync_tracks_fp32_and_books_the_sparse_wire() {
+        // Smooth, per-block-dominant deltas: the DC coefficient carries
+        // ~0.1-scale signal, a 0.002-scale ripple spreads over the rest.
+        // top-8 of 64 keeps the DC plus the largest ripple coefficients,
+        // so the restart stays within the dropped-ripple + int8 bound of
+        // the exact fp32 trajectory while the wire is ~0.11× fp32.
+        let n = 256;
+        let block = 64;
+        let k = 8;
+        let init: Vec<f32> = (0..n).map(|i| (i as f32 * 0.02).sin() * 0.1).collect();
+        let dc = [0.08f32, -0.05, 0.1, 0.02];
+        let groups: Vec<Vec<f32>> = (0..4)
+            .map(|g| {
+                (0..n)
+                    .map(|i| init[i] + dc[g] + ((i + 97 * g) as f32 * 2.7).sin() * 0.002)
+                    .collect()
+            })
+            .collect();
+        let refs: Vec<&[f32]> = groups.iter().map(|g| g.as_slice()).collect();
+        let mut exact = OuterController::new(&cfg(OptMode::DiLoCo), &init);
+        let mut sparse = OuterController::new(&cfg_dct(1, block, k), &init);
+        let mut se = CommStats::default();
+        let mut ss = CommStats::default();
+        for step in [100usize, 200] {
+            let re: Vec<f32> = exact.sync_in_place(step, &refs, &mut se).to_vec();
+            let rs: Vec<f32> = sparse.sync_in_place(step, &refs, &mut ss).to_vec();
+            for i in 0..n {
+                assert!(
+                    (re[i] - rs[i]).abs() < 0.05,
+                    "step {step} i={i}: fp32 {} vs dct {}",
+                    re[i],
+                    rs[i]
+                );
+            }
+        }
+        // Wire pinned to the exact sparse formula, under the 0.15× target.
+        let per_sync = compress::wire_bytes_topk(n, block, k) as f64;
+        assert_eq!(ss.outer_wire_bytes, 2.0 * per_sync);
+        assert_eq!(ss.outer_allreduce_bytes, 2.0 * 4.0 * n as f64);
+        assert!(ss.outer_wire_bytes <= 0.15 * ss.outer_allreduce_bytes,
+                "wire {} vs logical {}", ss.outer_wire_bytes, ss.outer_allreduce_bytes);
+        // dropped coefficients persist as error-feedback residuals
+        assert!(sparse.compress_residual_norm() > 0.0);
+        assert_eq!(exact.compress_residual_norm(), 0.0);
+    }
+
+    #[test]
+    fn dct_topk_single_node_falls_back_to_exact_fp32_bitwise() {
+        let n = 64;
+        let init: Vec<f32> = (0..n).map(|i| (i as f32 * 0.19).sin()).collect();
+        let g1: Vec<f32> = (0..n).map(|i| (i as f32 * 0.41).cos()).collect();
+        let g2: Vec<f32> = (0..n).map(|i| (i as f32 * 0.61).sin() * 1.3).collect();
+        let mut plain = OuterController::new(&cfg(OptMode::DiLoCo), &init);
+        // 2 groups, 4 replicas/node → one clique: no fabric hop to compress
+        let mut sparse = OuterController::new(&cfg_dct(4, 32, 4), &init);
+        let mut sp = CommStats::default();
+        let mut sc = CommStats::default();
+        let rp: Vec<u32> =
+            plain.sync_in_place(100, &[&g1, &g2], &mut sp).iter().map(|x| x.to_bits()).collect();
+        let rc: Vec<u32> =
+            sparse.sync_in_place(100, &[&g1, &g2], &mut sc).iter().map(|x| x.to_bits()).collect();
+        assert_eq!(rp, rc);
+        assert_eq!(sc.outer_wire_bytes, sc.outer_allreduce_bytes);
+        assert_eq!(sparse.compress_residual_norm(), 0.0);
+    }
+
+    #[test]
+    fn quorum_compressed_routes_the_hier_seam_and_matches_blocking() {
+        // §14 interaction matrix: with everyone on time the quorum plan is
+        // bit-identical to the blocking compressed sync (cliques re-derived
+        // over the same order); a straggler round still compresses and
+        // leaves a carry.
+        let n = 128;
+        let init = vec![0.0f32; n];
+        let gs: Vec<Vec<f32>> = (0..4)
+            .map(|g| (0..n).map(|i| ((i + 41 * g) as f32 * 0.07).sin() * 0.2).collect())
+            .collect();
+        let refs: Vec<&[f32]> = gs.iter().map(|v| v.as_slice()).collect();
+        let c = cfg_int8(1, 32); // 4 groups → 4 nodes
+        let mut blocking = OuterController::new(&c, &init);
+        let mut quorum = OuterController::new(&c, &init);
+        let mut sb = CommStats::default();
+        let mut sq = CommStats::default();
+        for step in [100usize, 200] {
+            let rb: Vec<u32> =
+                blocking.sync_in_place(step, &refs, &mut sb).iter().map(|x| x.to_bits()).collect();
+            let rq: Vec<u32> = quorum
+                .sync_quorum(step, &refs, &[true; 4], &mut sq)
+                .iter()
+                .map(|x| x.to_bits())
+                .collect();
+            assert_eq!(rb, rq, "step {step}");
+        }
+        assert_eq!(sb, sq);
+        // A straggler round: compression still applies over the survivors.
+        let mut s3 = CommStats::default();
+        quorum.sync_quorum(300, &refs, &[true, true, true, false], &mut s3);
+        assert!(quorum.has_late_carry());
+        assert!(s3.outer_wire_bytes < s3.outer_allreduce_bytes);
+    }
+
+    fn cfg_bcast_quant(gpn: usize, block: usize) -> TrainConfig {
+        let mut c = cfg_int8(gpn, block);
+        c.outer_broadcast_quant = true;
+        c
+    }
+
+    #[test]
+    fn broadcast_quant_perturbs_restart_within_bound_and_narrows_wire() {
+        let n = 300;
+        let init: Vec<f32> = (0..n).map(|i| (i as f32 * 0.03).sin() * 0.2).collect();
+        let groups: Vec<Vec<f32>> = (0..4)
+            .map(|g| {
+                (0..n)
+                    .map(|i| init[i] + ((i + 101 * g) as f32 * 0.07).cos() * 0.05)
+                    .collect()
+            })
+            .collect();
+        let refs: Vec<&[f32]> = groups.iter().map(|g| g.as_slice()).collect();
+        let mut plain = OuterController::new(&cfg_int8(1, 64), &init);
+        let mut quant = OuterController::new(&cfg_bcast_quant(1, 64), &init);
+        let mut sp = CommStats::default();
+        let mut sq = CommStats::default();
+        for step in [100usize, 200] {
+            let rp: Vec<f32> = plain.sync_in_place(step, &refs, &mut sp).to_vec();
+            let rq: Vec<f32> = quant.sync_in_place(step, &refs, &mut sq).to_vec();
+            // The broadcast leg quantizes restart − anchor_prev (≈ lr·1.9·Δ
+            // with Δ ~0.05-scale → step ~1e-3); error feedback keeps the
+            // second round from compounding.
+            for i in 0..n {
+                assert!((rp[i] - rq[i]).abs() < 0.01,
+                        "step {step} i={i}: {} vs {}", rp[i], rq[i]);
+            }
+        }
+        assert!(quant.broadcast_residual_norm() > 0.0);
+        assert_eq!(plain.broadcast_residual_norm(), 0.0);
+        // The wire helper serves the trainer's booking: quantized payload
+        // well under the 0.30× fp32 acceptance line.
+        let wire = quant.restart_wire_bytes(n, 4);
+        assert_eq!(wire, compress::wire_bytes(n, 64) as f64);
+        assert!(wire <= 0.30 * 4.0 * n as f64, "bcast wire {wire}");
+        assert_eq!(plain.restart_wire_bytes(n, 4), 4.0 * n as f64);
+    }
+
+    #[test]
+    fn broadcast_quant_single_node_is_a_bitwise_no_op() {
+        // 2 groups on one node: the restart broadcast never crosses the
+        // fabric, so the knob must not touch the bits.
+        let n = 64;
+        let init: Vec<f32> = (0..n).map(|i| (i as f32 * 0.19).sin()).collect();
+        let g1: Vec<f32> = (0..n).map(|i| (i as f32 * 0.41).cos()).collect();
+        let g2: Vec<f32> = (0..n).map(|i| (i as f32 * 0.61).sin() * 1.3).collect();
+        let mut off = OuterController::new(&cfg_int8(4, 32), &init);
+        let mut on = OuterController::new(&cfg_bcast_quant(4, 32), &init);
+        let mut so = CommStats::default();
+        let mut sn = CommStats::default();
+        for step in [100usize, 200] {
+            let ro: Vec<u32> =
+                off.sync_in_place(step, &[&g1, &g2], &mut so).iter().map(|x| x.to_bits()).collect();
+            let rn: Vec<u32> =
+                on.sync_in_place(step, &[&g1, &g2], &mut sn).iter().map(|x| x.to_bits()).collect();
+            assert_eq!(ro, rn, "step {step}");
+        }
+        assert_eq!(so, sn);
+        assert!(!on.broadcast_quant_active(2));
+        assert_eq!(on.broadcast_residual_norm(), 0.0);
+        assert_eq!(on.restart_wire_bytes(n, 2), 4.0 * n as f64);
+    }
+
+    #[test]
+    fn broadcast_quant_sharded_matches_unsharded_bitwise_and_narrows_gather() {
+        // The quantization runs over the full fragment span before the
+        // gather partitions it, so the sharded trajectory is bit-equal and
+        // the gather scope books the quantized wire.
+        let n = 120;
+        let init = vec![0.0f32; n];
+        let gs: Vec<Vec<f32>> = (0..4)
+            .map(|g| (0..n).map(|i| ((i + 31 * g) as f32 * 0.05).sin() * 0.2).collect())
+            .collect();
+        let refs: Vec<&[f32]> = gs.iter().map(|v| v.as_slice()).collect();
+        let base = cfg_bcast_quant(1, 32); // 4 groups → 4 nodes
+        let mut sharded_cfg = base.clone();
+        sharded_cfg.outer_shard = true;
+        let mut plain = OuterController::new(&base, &init);
+        let mut sharded = OuterController::new(&sharded_cfg, &init);
+        let mut sp = CommStats::default();
+        let mut ss = CommStats::default();
+        for step in [100usize, 200, 300] {
+            plain.sync(&SyncPlan::blocking(step), &refs, &mut sp);
+            sharded.sync(&SyncPlan::blocking(step), &refs, &mut ss);
+            assert_eq!(
+                plain.last_restart().iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                sharded.last_restart().iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "step {step}"
+            );
+        }
+        // Three full-model gathers: logical stays fp32, wire is quantized.
+        assert_eq!(ss.gather_bytes, 3.0 * 4.0 * n as f64);
+        assert_eq!(ss.gather_wire_bytes, 3.0 * compress::wire_bytes(n, 32) as f64);
+        assert!(ss.gather_wire_bytes < 0.30 * ss.gather_bytes);
+        assert_eq!(sp.gather_bytes, 0.0);
+    }
+
+    #[test]
+    fn broadcast_quant_export_restore_roundtrips_the_residual() {
+        let c = cfg_bcast_quant(1, 32);
+        let n = 96;
+        let init: Vec<f32> = (0..n).map(|i| (i as f32 * 0.37).sin() * 0.3).collect();
+        let gs: Vec<Vec<f32>> = (0..2)
+            .map(|g| (0..n).map(|i| init[i] + ((i + 53 * g) as f32 * 0.11).cos() * 0.04).collect())
+            .collect();
+        let refs: Vec<&[f32]> = gs.iter().map(|v| v.as_slice()).collect();
+        let mut a = OuterController::new(&c, &init);
+        let mut stats = CommStats::default();
+        a.sync_in_place(10, &refs, &mut stats);
+        a.sync_in_place(20, &refs, &mut stats);
+        assert!(a.broadcast_residual_norm() > 0.0);
+        let st = a.export_state();
+        assert_eq!(st.bcast_residuals.len(), 1);
+        let mut b = OuterController::new(&c, &init);
+        b.restore_state(&st).unwrap();
+        assert_eq!(a.broadcast_residual_norm(), b.broadcast_residual_norm());
+        let mut sa = CommStats::default();
+        let mut sb = CommStats::default();
+        let ra: Vec<u32> =
+            a.sync_in_place(30, &refs, &mut sa).iter().map(|x| x.to_bits()).collect();
+        let rb: Vec<u32> =
+            b.sync_in_place(30, &refs, &mut sb).iter().map(|x| x.to_bits()).collect();
+        assert_eq!(ra, rb);
+        assert_eq!(sa, sb);
     }
 
     #[test]

@@ -9,10 +9,14 @@
 //!   sampler streams, no fragment cursor, no error-feedback residuals).
 //! * **v2** (`pier-ckpt-v2`, [`CheckpointV2`]): the full trainer state —
 //!   per-group inner Adam state and sampler PRNG words, the outer
-//!   controller (momentum, anchor, committed view, `frag_cursor`, int8
-//!   error-feedback residuals, schedule counters), the completed-iteration
-//!   count, and the [`CommStats`] snapshot. `pier train --resume` restores
-//!   it bit-exactly (`rust/tests/resume_parity.rs`).
+//!   controller (momentum, anchor, committed view, `frag_cursor`,
+//!   compression error-feedback residuals — both the leader-exchange
+//!   stores and the restart-broadcast residual, DESIGN.md §14 — schedule
+//!   counters), the completed-iteration count, and the [`CommStats`]
+//!   snapshot. `pier train --resume` restores it bit-exactly
+//!   (`rust/tests/resume_parity.rs`). Fields added after the initial v2
+//!   writer (`n_bcast_residuals`) are optional on load with a zero
+//!   default, so older v2 files keep loading.
 //!
 //! Integers in the headers use the exact encoding ([`Json::exact_u64`]):
 //! a plain number within f64's exact range, a decimal string above it,
@@ -156,8 +160,15 @@ pub struct OuterState {
     pub last_mu: f64,
     pub last_lr: f64,
     /// Per-node-leader error-feedback residuals (`HierState`), each
-    /// full-model length; empty unless the run compresses.
+    /// full-model length; empty unless the run compresses (int8 and
+    /// dct-topk share the store).
     pub residuals: Vec<Vec<f32>>,
+    /// Restart-broadcast error-feedback residual(s)
+    /// (`--outer-broadcast-quant`, DESIGN.md §14): at most one full-model
+    /// stream today, written as a count so the format can grow. The
+    /// header field `n_bcast_residuals` is optional on load (default 0) —
+    /// checkpoints from before the quantized broadcast leg still load.
+    pub bcast_residuals: Vec<Vec<f32>>,
 }
 
 /// The v2 full-trainer checkpoint — see the module docs for the format.
@@ -213,6 +224,11 @@ impl CheckpointV2 {
                         bail!("residual {i} length {} != n_params {n}", r.len());
                     }
                 }
+                for (i, r) in o.bcast_residuals.iter().enumerate() {
+                    if r.len() != n {
+                        bail!("bcast residual {i} length {} != n_params {n}", r.len());
+                    }
+                }
                 Json::obj(vec![
                     ("frag_cursor", Json::exact_u64(o.frag_cursor as u64)),
                     ("outer_steps", Json::exact_u64(o.outer_steps)),
@@ -220,6 +236,7 @@ impl CheckpointV2 {
                     ("last_mu", Json::num(o.last_mu)),
                     ("last_lr", Json::num(o.last_lr)),
                     ("n_residuals", Json::exact_u64(o.residuals.len() as u64)),
+                    ("n_bcast_residuals", Json::exact_u64(o.bcast_residuals.len() as u64)),
                 ])
             }
         };
@@ -247,6 +264,9 @@ impl CheckpointV2 {
                 write_f32s(&mut f, blob)?;
             }
             for r in &o.residuals {
+                write_f32s(&mut f, r)?;
+            }
+            for r in &o.bcast_residuals {
                 write_f32s(&mut f, r)?;
             }
         }
@@ -307,6 +327,16 @@ impl CheckpointV2 {
                 for _ in 0..n_residuals {
                     residuals.push(r.take(n)?);
                 }
+                // Optional (default 0): pre-§14 writers never emitted it,
+                // and their blob stream ends at the hier residuals.
+                let n_bcast = match oh.get("n_bcast_residuals") {
+                    None => 0,
+                    Some(_) => req_usize(oh, "n_bcast_residuals")?,
+                };
+                let mut bcast_residuals = Vec::with_capacity(n_bcast.min(1024));
+                for _ in 0..n_bcast {
+                    bcast_residuals.push(r.take(n)?);
+                }
                 Some(OuterState {
                     momentum,
                     anchor,
@@ -323,6 +353,7 @@ impl CheckpointV2 {
                         .and_then(Json::as_f64)
                         .context("outer header field \"last_lr\" missing")?,
                     residuals,
+                    bcast_residuals,
                 })
             }
         };
@@ -484,6 +515,7 @@ mod tests {
                 last_mu: 0.875,
                 last_lr: 0.7,
                 residuals: vec![vec![1e-3; n], vec![-2e-3; n]],
+                bcast_residuals: vec![vec![5e-4; n]],
             }),
             comm,
         }
@@ -605,6 +637,31 @@ mod tests {
         fat.extend_from_slice(&[0u8; 8]);
         std::fs::write(&path, &fat).unwrap();
         assert!(CheckpointV2::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn v2_without_bcast_residual_header_field_still_loads() {
+        // Back-compat pin: pre-§14 writers never emitted
+        // `n_bcast_residuals`, and their blob stream ends at the hier
+        // residuals — loading must default the new field to empty, not
+        // reject the file.
+        let dir = tmp("v2b");
+        let path = dir.join("j.ckpt");
+        let mut c = sample_v2();
+        c.outer.as_mut().unwrap().bcast_residuals.clear();
+        c.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let nl = bytes.iter().position(|&b| b == b'\n').unwrap();
+        let header = std::str::from_utf8(&bytes[..nl]).unwrap();
+        let stripped = header.replace(",\"n_bcast_residuals\":0", "");
+        assert_ne!(stripped, header, "strip must remove the field");
+        let mut out = stripped.into_bytes();
+        out.extend_from_slice(&bytes[nl..]);
+        std::fs::write(&path, &out).unwrap();
+        let c2 = CheckpointV2::load(&path).unwrap();
+        assert_eq!(c, c2);
+        assert!(c2.outer.unwrap().bcast_residuals.is_empty());
         std::fs::remove_dir_all(&dir).ok();
     }
 

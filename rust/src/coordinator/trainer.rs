@@ -79,15 +79,21 @@
 //! `netsim::des_outer_sync_streaming` and
 //! `simulator::cost_outer_schedule_streaming` price.
 //!
-//! **Compressed outer sync** (`cfg.outer_compress = int8`, DESIGN.md §9):
-//! every fragment core the sync paths above run routes through the
-//! two-level quantized reduce — full-width fp32 clique reduce intra-node,
-//! block-quantized int8 delta exchange with error feedback between node
-//! leaders — so compression composes with blocking, streaming, and
-//! partial schedules alike. The recorded events carry both the logical
-//! fp32 volume (what the overlap split and schedule models price) and the
-//! wire bytes the fabric actually moved
-//! (`CommStatsSnapshot.outer_wire_bytes` ≈ ¼ of logical at real sizes).
+//! **Compressed outer sync** (`cfg.outer_compress = int8 | dct-topk`,
+//! DESIGN.md §9, §14): every fragment core the sync paths above run routes
+//! through the two-level compressed reduce — full-width fp32 clique reduce
+//! intra-node, then either the block-int8 quantized delta exchange or the
+//! blockwise DCT-II top-k sparse coefficient exchange between node
+//! leaders, both with error feedback — so compression composes with
+//! blocking, streaming, and partial schedules alike. The recorded events
+//! carry both the logical fp32 volume (what the overlap split and schedule
+//! models price) and the wire bytes the fabric actually moved
+//! (`CommStatsSnapshot.outer_wire_bytes` ≈ ¼ of logical for int8, well
+//! under ⅒ for dct-topk at k ≤ block/8). `cfg.outer_broadcast_quant`
+//! additionally quantizes the second hop — the leader→clique restart
+//! broadcast — with its own error-feedback residual; the trainer books
+//! that leg's wire through `OuterController::restart_wire_bytes` into the
+//! `broadcast_wire_bytes`/`gather_wire_bytes` columns.
 //!
 //! Schedule indexing: all outer-schedule queries (Alg. 1 warmup, Alg. 2
 //! μ/lr) use the number of **completed** inner steps, i.e. `t + 1` after
@@ -391,8 +397,9 @@ impl Trainer {
                     g.adam_t = adam_t;
                 }
             }
-            self.stats.broadcast_calls += 1;
-            self.stats.broadcast_bytes += 4.0 * (3 * src_p.len() * (k - 1)) as f64;
+            // One-time fork over fast links, always fp32: wire == logical.
+            let logical = 4.0 * (3 * src_p.len() * (k - 1)) as f64;
+            self.stats.note_broadcast_wire(logical, logical);
             if let Some(outer) = self.outer.as_mut() {
                 outer.on_switch(&src_p);
             }
@@ -468,9 +475,10 @@ impl Trainer {
 
     /// Snapshot the full trainer state as a v2 checkpoint (DESIGN.md §11):
     /// per-group inner state (params, Adam moments + step counter, sampler
-    /// RNG), the outer controller (momentum, anchor, fragment cursor, int8
-    /// error-feedback residuals, schedule telemetry), the comm-accounting
-    /// counters, and the completed-iteration cursor.
+    /// RNG), the outer controller (momentum, anchor, fragment cursor, the
+    /// compression error-feedback residuals — leader-exchange and
+    /// restart-broadcast stores alike — schedule telemetry), the
+    /// comm-accounting counters, and the completed-iteration cursor.
     pub fn checkpoint(&self) -> Result<CheckpointV2> {
         let mut groups = Vec::with_capacity(self.groups.len());
         for g in &self.groups {
@@ -642,8 +650,16 @@ impl Trainer {
         };
         let span = outer.sync(&plan, &refs, &mut self.stats);
         let next = outer.last_restart();
+        // Broadcast accounting (`collective::broadcast` contract): the
+        // leader that produced the restart point installs it locally for
+        // free, so the fan-out moves ka − 1 receiver copies — the old
+        // `· ka` bookings counted the self-copy. The wire column carries
+        // the §14 quantized payload when `--outer-broadcast-quant` crosses
+        // a node boundary, else wire == logical.
         if matches!(plan.kind, SyncKind::Partial) {
             // 3a. partial install: overwrite only the rotated [lo, hi)
+            let frag = span.hi - span.lo;
+            let wire = outer.restart_wire_bytes(frag, ka);
             let man = &self.man;
             for (gi, (g, flat)) in
                 self.groups.iter_mut().zip(self.flats.bufs_mut()).enumerate()
@@ -654,11 +670,14 @@ impl Trainer {
                 flat[span.lo..span.hi].copy_from_slice(&next[span.lo..span.hi]);
                 g.set_params_flat(man, flat)?;
             }
-            self.stats.broadcast_calls += 1;
-            self.stats.broadcast_bytes += 4.0 * ((span.hi - span.lo) * ka) as f64;
+            self.stats.note_broadcast_wire(
+                4.0 * (frag * (ka - 1)) as f64,
+                wire * (ka - 1) as f64,
+            );
         } else {
             // 3b. restart-point broadcast: install per active group on the
             // pool (the controller's restart buffer is the one source).
+            let wire = outer.restart_wire_bytes(n, ka);
             let man = &self.man;
             let active = &active;
             engine.run(&mut self.groups, |gi, g| {
@@ -668,14 +687,17 @@ impl Trainer {
                     Ok(())
                 }
             })?;
-            self.stats.broadcast_calls += 1;
-            self.stats.broadcast_bytes += 4.0 * (n * ka) as f64;
+            self.stats.note_broadcast_wire(
+                4.0 * (n * (ka - 1)) as f64,
+                wire * (ka - 1) as f64,
+            );
         }
         // Record the event for schedule cross-validation: the logical fp32
         // volume this sync actually all-reduced (full model, or the
         // rotating fragment), the bytes its inter-node hop put on the wire
-        // (narrower under `outer_compress = int8`, DESIGN.md §9), and its
-        // fragment schedule — costable by the simulator/DES (§5, §8).
+        // (narrower under `outer_compress = int8 | dct-topk`, DESIGN.md
+        // §9, §14), and its fragment schedule — costable by the
+        // simulator/DES (§5, §8).
         self.log.outer_events.push(OuterEvent {
             step,
             bytes: self.stats.outer_allreduce_bytes - outer_bytes_before,
@@ -864,13 +886,24 @@ fn cfg_validate(cfg: &TrainConfig, man: &Manifest) -> Result<()> {
              no outer state to shard (DESIGN.md §13)"
         );
     }
-    if cfg.outer_compress == OuterCompress::Int8 {
+    if cfg.outer_compress.is_compressing() {
         ensure!(
             cfg.mode != OptMode::AdamW,
-            "outer_compress = int8 requires an outer optimizer (DiLoCo/Pier): \
-             AdamW has no outer sync to compress (DESIGN.md §9)"
+            "outer_compress = {} requires an outer optimizer (DiLoCo/Pier): \
+             AdamW has no outer sync to compress (DESIGN.md §9, §14)",
+            cfg.outer_compress.name()
         );
-        ensure!(cfg.outer_quant_block > 0, "outer_quant_block must be positive");
+        ensure!(cfg.outer_compress.block() > 0, "outer_quant_block must be positive");
+        if let OuterCompress::DctTopK { k, .. } = cfg.outer_compress {
+            ensure!(k > 0, "outer_topk must be positive");
+        }
+    }
+    if cfg.outer_broadcast_quant {
+        ensure!(
+            cfg.mode != OptMode::AdamW,
+            "outer_broadcast_quant requires an outer optimizer (DiLoCo/Pier): \
+             AdamW has no restart broadcast to quantize (DESIGN.md §14)"
+        );
     }
     if let Err(e) = cfg.parallel().validate() {
         anyhow::bail!("invalid DP×TP layout: {e}");

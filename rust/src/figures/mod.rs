@@ -9,7 +9,8 @@ pub mod sim;
 pub mod train;
 
 pub use sim::{calibration_report, fig5, fig6, fig7, fig8, fig8_compressed,
-              print_fig8_compressed, print_sweep, sweep_grid, sweep_json, sweep_setup,
+              fig8_compressed_json, print_fig8_compressed, print_sweep, sweep_grid,
+              sweep_json, sweep_setup,
               Fig8CompressRow, FigureData, ScaleRow, SweepAxes, SweepRow};
 pub use train::{ablation, eval_checkpoint, fig1, fig3_panel, fig4, figure_cfg,
                 pipeline_for, print_task_table, run_arm, table4, TrainedScorer};

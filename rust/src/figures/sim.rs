@@ -5,8 +5,8 @@
 //! baseline only); the comparisons — who wins, by what factor, where the
 //! efficiency knees fall — are model predictions.
 
-use crate::config::{model_or_die, OptMode, OuterCompress, DEFAULT_QUANT_BLOCK};
-use crate::coordinator::compress::wire_bytes;
+use crate::config::{model_or_die, OptMode, OuterCompress, DEFAULT_QUANT_BLOCK, DEFAULT_TOPK};
+use crate::coordinator::compress::{wire_bytes, wire_bytes_topk};
 use crate::metrics::scaling_efficiency;
 use crate::netsim::{FabricShape, FailureSpec};
 use crate::perfmodel::gpu::{scenario, ClusterSpec, Scenario, PERLMUTTER, SCENARIOS, VISTA};
@@ -65,7 +65,7 @@ fn base_setup(
         sync_fraction: 1.0,
         stream_fragments: 0,
         outer_compress: OuterCompress::None,
-        outer_quant_block: DEFAULT_QUANT_BLOCK,
+        outer_broadcast_quant: false,
         groups,
         global_batch: 512,
         sync_interval: h,
@@ -197,17 +197,29 @@ pub struct Fig8CompressRow {
     pub t_streaming: f64,
     /// Pier, streaming + int8 compressed outer sync (DESIGN.md §9).
     pub t_int8: f64,
-    /// Inter-node outer wire bytes as a fraction of the fp32 baseline
-    /// (the executed `compress::wire_bytes` formula at the 7B size) —
-    /// 1.0 on rows without a fabric hop, where compression never engages
-    /// and the run is priced exactly as fp32.
+    /// Pier, streaming + dct-topk compressed outer sync (DESIGN.md §14):
+    /// the sparse DCT/top-k wire replaces the dense int8 exchange.
+    pub t_dct: f64,
+    /// Pier, streaming + dct-topk + quantized restart broadcast
+    /// (`outer_broadcast_quant`, DESIGN.md §14): the fan-out leg narrows
+    /// from fp32 to block-int8 — the ladder's last rung.
+    pub t_bcast: f64,
+    /// Inter-node outer wire bytes of the int8 exchange as a fraction of
+    /// the fp32 baseline (the executed `compress::wire_bytes` formula at
+    /// the 7B size) — 1.0 on rows without a fabric hop, where compression
+    /// never engages and the run is priced exactly as fp32.
     pub wire_ratio: f64,
+    /// Same fraction for the dct-topk wire (`compress::wire_bytes_topk`
+    /// at the default block/k) — ≤ 0.15 whenever the hop exists.
+    pub dct_wire_ratio: f64,
 }
 
-/// Fig 8 companion (DESIGN.md §9): the outer-sync relaxation ladder on
-/// the Fig-8 configs — blocking → streaming(F=4) → streaming+int8 — as
-/// modeled total runtime. Streaming relaxes the sync in *time*, int8 in
-/// *volume*; the two compose multiplicatively, which is why the ladder is
+/// Fig 8 companion (DESIGN.md §9, §14): the outer-sync relaxation ladder
+/// on the Fig-8 configs — blocking → streaming(F=4) → streaming+int8 →
+/// streaming+dct-topk → +quantized restart broadcast — as modeled total
+/// runtime. Streaming relaxes the sync in *time*, the codecs in *volume*
+/// (dct-topk below int8, the broadcast knob narrowing the remaining fp32
+/// fan-out); they compose multiplicatively, which is why the ladder is
 /// monotone on every row with a fabric hop (`dp ≥ 2`; the one-node row is
 /// flat — nothing to relax). Pinned by `rust/tests/dp_tp_crossval.rs`.
 pub fn fig8_compressed() -> Vec<Fig8CompressRow> {
@@ -215,7 +227,9 @@ pub fn fig8_compressed() -> Vec<Fig8CompressRow> {
     setup.cpu_offload = true;
     let n_params = setup.model.n_params();
     let int8_ratio =
-        wire_bytes(n_params, setup.outer_quant_block) as f64 / (4 * n_params) as f64;
+        wire_bytes(n_params, DEFAULT_QUANT_BLOCK) as f64 / (4 * n_params) as f64;
+    let dct_ratio = wire_bytes_topk(n_params, DEFAULT_QUANT_BLOCK, DEFAULT_TOPK) as f64
+        / (4 * n_params) as f64;
     [4usize, 8, 16, 32, 64, 128, 256]
         .iter()
         .map(|&w| {
@@ -225,7 +239,12 @@ pub fn fig8_compressed() -> Vec<Fig8CompressRow> {
             let mut streaming = blocking.clone();
             streaming.stream_fragments = 4;
             let mut int8 = streaming.clone();
-            int8.outer_compress = OuterCompress::Int8;
+            int8.outer_compress = OuterCompress::Int8 { block: DEFAULT_QUANT_BLOCK };
+            let mut dct = streaming.clone();
+            dct.outer_compress =
+                OuterCompress::DctTopK { block: DEFAULT_QUANT_BLOCK, k: DEFAULT_TOPK };
+            let mut bcast = dct.clone();
+            bcast.outer_broadcast_quant = true;
             // The one-node row (dp = 1) has no fabric hop: compression
             // never engages and the wire stays at the fp32 width.
             let dp = w / setup.tp;
@@ -238,24 +257,51 @@ pub fn fig8_compressed() -> Vec<Fig8CompressRow> {
                 t_blocking: simulate_run(&blocking).total_secs,
                 t_streaming: simulate_run(&streaming).total_secs,
                 t_int8: simulate_run(&int8).total_secs,
+                t_dct: simulate_run(&dct).total_secs,
+                t_bcast: simulate_run(&bcast).total_secs,
                 wire_ratio: if nodes > 1 { int8_ratio } else { 1.0 },
+                dct_wire_ratio: if nodes > 1 { dct_ratio } else { 1.0 },
             }
         })
         .collect()
+}
+
+/// The Fig-8 ladder's JSON artifact (`pier repro fig8 --out`): one object
+/// per scale row with every rung and both wire ratios — the shape CI
+/// uploads next to `sweep_pareto.json`.
+pub fn fig8_compressed_json(rows: &[Fig8CompressRow]) -> Json {
+    Json::obj(vec![
+        ("kind", Json::str("pier-fig8-ladder")),
+        ("model", Json::str("gpt2-7b")),
+        ("rows",
+         Json::arr(rows.iter().map(|r| {
+             Json::obj(vec![
+                 ("world", Json::num(r.world as f64)),
+                 ("t_blocking", Json::num(r.t_blocking)),
+                 ("t_streaming", Json::num(r.t_streaming)),
+                 ("t_int8", Json::num(r.t_int8)),
+                 ("t_dct", Json::num(r.t_dct)),
+                 ("t_bcast", Json::num(r.t_bcast)),
+                 ("wire_ratio", Json::num(r.wire_ratio)),
+                 ("dct_wire_ratio", Json::num(r.dct_wire_ratio)),
+             ])
+         }))),
+    ])
 }
 
 /// Print the Fig-8 relaxation ladder in the paper's table style.
 pub fn print_fig8_compressed(rows: &[Fig8CompressRow]) {
     println!("\n== Fig 8 companion — outer-sync relaxation ladder, gpt2-7b, TP=4, H=50 ==");
     println!(
-        "{:>6} {:>14} {:>16} {:>16} {:>10}",
-        "GPUs", "blocking (s)", "stream F=4 (s)", "+int8 wire (s)", "wire/fp32"
+        "{:>6} {:>14} {:>16} {:>11} {:>13} {:>14} {:>10} {:>10}",
+        "GPUs", "blocking (s)", "stream F=4 (s)", "+int8 (s)", "+dct-topk (s)",
+        "+quant-bc (s)", "wire/fp32", "dct/fp32"
     );
     for r in rows {
         println!(
-            "{:>6} {:>14.0} {:>16.0} {:>16.0} {:>9.1}%",
-            r.world, r.t_blocking, r.t_streaming, r.t_int8,
-            100.0 * r.wire_ratio
+            "{:>6} {:>14.0} {:>16.0} {:>11.0} {:>13.0} {:>14.0} {:>9.1}% {:>9.1}%",
+            r.world, r.t_blocking, r.t_streaming, r.t_int8, r.t_dct, r.t_bcast,
+            100.0 * r.wire_ratio, 100.0 * r.dct_wire_ratio
         );
     }
 }
@@ -284,7 +330,8 @@ pub struct SweepAxes {
 
 impl SweepAxes {
     /// The CI smoke grid: 3 scenarios × 2 worlds × pp {1, 2} ×
-    /// {none, int8} × {blocking, F=4} = 48 cheap closed-form runs.
+    /// {none, int8, dct-topk} × {blocking, F=4} = 72 cheap closed-form
+    /// runs.
     pub fn smoke() -> SweepAxes {
         SweepAxes {
             model: "gpt2-xl".into(),
@@ -293,7 +340,12 @@ impl SweepAxes {
             worlds: vec![32, 64],
             tps: vec![1],
             pps: vec![1, 2],
-            compress: vec![OuterCompress::None, OuterCompress::Int8],
+            compress: vec![OuterCompress::None,
+                           OuterCompress::Int8 { block: DEFAULT_QUANT_BLOCK },
+                           OuterCompress::DctTopK {
+                               block: DEFAULT_QUANT_BLOCK,
+                               k: DEFAULT_TOPK,
+                           }],
             fragments: vec![0, 4],
             fractions: vec![1.0],
             sync_interval: 50,
@@ -312,7 +364,12 @@ impl SweepAxes {
             worlds: vec![16, 32, 64, 128, 256],
             tps: vec![1, 4],
             pps: vec![1, 2],
-            compress: vec![OuterCompress::None, OuterCompress::Int8],
+            compress: vec![OuterCompress::None,
+                           OuterCompress::Int8 { block: DEFAULT_QUANT_BLOCK },
+                           OuterCompress::DctTopK {
+                               block: DEFAULT_QUANT_BLOCK,
+                               k: DEFAULT_TOPK,
+                           }],
             fragments: vec![0, 4, 8],
             fractions: vec![1.0, 0.5],
             sync_interval: 50,
@@ -634,14 +691,32 @@ mod tests {
                 // one node, dp=1: no fabric hop — nothing to relax, and
                 // the table must not claim a wire cut that never happened
                 assert_eq!(r.wire_ratio, 1.0);
+                assert_eq!(r.dct_wire_ratio, 1.0);
                 assert_eq!(r.t_blocking, r.t_streaming);
                 assert_eq!(r.t_streaming, r.t_int8);
+                assert_eq!(r.t_int8, r.t_dct);
+                assert_eq!(r.t_dct, r.t_bcast);
             } else {
                 assert!(r.wire_ratio <= 0.30, "wire ratio {}", r.wire_ratio);
+                assert!(r.dct_wire_ratio <= 0.15, "dct wire ratio {}", r.dct_wire_ratio);
                 assert!(r.t_streaming < r.t_blocking, "world={}", r.world);
                 assert!(r.t_int8 < r.t_streaming, "world={}: int8 must improve on \
                          streaming-only ({} vs {})", r.world, r.t_int8, r.t_streaming);
+                assert!(r.t_dct < r.t_int8, "world={}: dct-topk must improve on \
+                         int8 ({} vs {})", r.world, r.t_dct, r.t_int8);
+                assert!(r.t_bcast < r.t_dct, "world={}: quantized bcast must improve \
+                         on dct-topk ({} vs {})", r.world, r.t_bcast, r.t_dct);
             }
+        }
+        // the JSON artifact round-trips every rung
+        let json = fig8_compressed_json(&rows).to_string();
+        let parsed = Json::parse(&json).unwrap();
+        assert_eq!(parsed.get("kind").unwrap().as_str(), Some("pier-fig8-ladder"));
+        let jrows = parsed.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(jrows.len(), rows.len());
+        for (j, r) in jrows.iter().zip(&rows) {
+            assert_eq!(j.get("t_bcast").unwrap().as_f64(), Some(r.t_bcast));
+            assert_eq!(j.get("dct_wire_ratio").unwrap().as_f64(), Some(r.dct_wire_ratio));
         }
     }
 
@@ -649,11 +724,11 @@ mod tests {
     fn sweep_smoke_grid_shape_and_pareto() {
         let axes = SweepAxes::smoke();
         let rows = sweep_grid(&axes);
-        // 3 scenarios × 2 worlds × 1 tp × 2 pp × 2 compress × 2 fragment
+        // 3 scenarios × 2 worlds × 1 tp × 2 pp × 3 compress × 2 fragment
         // counts (Vista's 1-GPU nodes still take pp=2: a replica spanning
         // whole nodes tiles them, the cfg_validate placement rule)
-        assert_eq!(rows.len(), 48);
-        assert_eq!(rows.iter().filter(|r| r.pp == 2).count(), 24);
+        assert_eq!(rows.len(), 72);
+        assert_eq!(rows.iter().filter(|r| r.pp == 2).count(), 36);
         let cell = |r: &SweepRow| (r.scenario, r.world, r.tp, r.pp);
         // no pareto row is dominated within its cell, every cell keeps one
         for r in &rows {
@@ -667,14 +742,23 @@ mod tests {
             }
             assert!(rows.iter().any(|o| cell(o) == cell(r) && o.pareto));
         }
-        // int8 strictly cuts the wire axis against the matching fp32 row
-        for r in rows.iter().filter(|r| r.compress == OuterCompress::Int8) {
+        // each codec strictly cuts the wire axis against the matching fp32
+        // row, and dct-topk undercuts int8 on the same cell
+        for r in rows.iter().filter(|r| r.compress.is_compressing()) {
             let flat = rows
                 .iter()
                 .find(|o| o.compress == OuterCompress::None && cell(o) == cell(r)
                           && o.fragments == r.fragments)
                 .unwrap();
             assert!(r.wire_bytes < flat.wire_bytes, "{r:?}");
+        }
+        for r in rows.iter().filter(|r| matches!(r.compress, OuterCompress::DctTopK { .. })) {
+            let int8 = rows
+                .iter()
+                .find(|o| matches!(o.compress, OuterCompress::Int8 { .. })
+                          && cell(o) == cell(r) && o.fragments == r.fragments)
+                .unwrap();
+            assert!(r.wire_bytes < int8.wire_bytes, "{r:?}");
         }
         // the oversubscribed tree is slower than the flat fabric at 64 GPUs
         // (16 leaf-mates share one 2:1 uplink)

@@ -55,22 +55,24 @@ fn print_usage() {
          commands:\n\
            train     --model nano --mode pier|diloco|adamw --iters N --groups K\n\
                      --batch B --interval H [--tp T] [--pp P] [--stream-fragments F]\n\
-                     [--outer-compress none|int8] [--quant-block B]\n\
-                     [--offload] [--outer-shard] [--csv out.csv] [--ckpt out.ckpt]\n\
-                     [--resume file.ckpt]\n\
+                     [--outer-compress none|int8|dct-topk] [--quant-block B] [--topk K]\n\
+                     [--outer-broadcast-quant] [--offload] [--outer-shard]\n\
+                     [--csv out.csv] [--ckpt out.ckpt] [--resume file.ckpt]\n\
            eval      --model nano --ckpt file.ckpt [--allow-model-mismatch]\n\
            simulate  --model gpt2-xl --cluster <scenario> --world N\n\
                      [--tp T] [--pp P] [--groups K] [--interval H] [--mode pier|adamw]\n\
-                     [--stream-fragments F] [--outer-compress none|int8]\n\
-                     [--quant-block B] [--offload] [--outer-shard]\n\
+                     [--stream-fragments F] [--outer-compress none|int8|dct-topk]\n\
+                     [--quant-block B] [--topk K] [--outer-broadcast-quant]\n\
+                     [--offload] [--outer-shard]\n\
                      [--jitter S [--jitter-seed N]]\n\
                      [--failures P [--failure-seed N] [--restart-penalty R]]\n\
            sweep     [--smoke] [--model M] [--clusters a,b] [--worlds 32,64]\n\
-                     [--tps 1,4] [--pps 1,2] [--compress none,int8] [--fragments 0,4]\n\
-                     [--fractions 1.0,0.5] [--interval H] [--batch B]\n\
-                     [--iters N] [--failures P] [--out sweep_pareto.json]\n\
+                     [--tps 1,4] [--pps 1,2] [--compress none,int8,dct-topk]\n\
+                     [--fragments 0,4] [--fractions 1.0,0.5] [--interval H]\n\
+                     [--batch B] [--iters N] [--failures P] [--out sweep_pareto.json]\n\
            repro     fig1|fig3|fig4|fig5|fig6|fig7|fig8|table2|table3|table4|\n\
                      ablation|calibration|sim-all [--iters N] [--model nano|micro|mini]\n\
+                     [--out fig8_ladder.json (fig8)]\n\
            config    [--model name]\n\
            data      [--vocab V] [--docs N]"
     );
@@ -106,9 +108,18 @@ fn summarize(log: &RunLog) {
         && log.comm.outer_allreduce_bytes > 0.0
     {
         println!(
-            "  comm (outer, int8 wire): {:.1} MB on the fabric ({:.1}% of fp32)",
+            "  comm (outer, compressed wire): {:.1} MB on the fabric ({:.1}% of fp32)",
             log.comm.outer_wire_bytes / 1e6,
             100.0 * log.comm.outer_wire_bytes / log.comm.outer_allreduce_bytes
+        );
+    }
+    if log.comm.broadcast_wire_bytes != log.comm.broadcast_bytes
+        && log.comm.broadcast_bytes > 0.0
+    {
+        println!(
+            "  comm (restart bcast wire): {:.1} MB on the fabric ({:.1}% of fp32)",
+            log.comm.broadcast_wire_bytes / 1e6,
+            100.0 * log.comm.broadcast_wire_bytes / log.comm.broadcast_bytes
         );
     }
     if log.comm.tp_bytes > 0.0 {
@@ -219,7 +230,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         sync_fraction: cfg.sync_fraction,
         stream_fragments: cfg.stream_fragments,
         outer_compress: cfg.outer_compress,
-        outer_quant_block: cfg.outer_quant_block,
+        outer_broadcast_quant: cfg.outer_broadcast_quant,
         groups: args.usize_or("groups", world),
         global_batch: cfg.global_batch,
         sync_interval: cfg.sync_interval,
@@ -246,19 +257,29 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     } else {
         println!("  outer event: {:.3}s", r.outer_event_secs);
     }
-    if s.outer_compress == OuterCompress::Int8 {
+    if s.outer_compress.is_compressing() {
         // Only claim a wire cut when the topology has an inter-node hop to
         // compress — single-node runs are priced exactly like fp32.
         let (_, nodes) =
             pier::config::outer_cliques(s.dp(), s.tp * s.pp, s.cluster.gpus_per_node);
         if nodes > 1 {
             println!(
-                "  outer wire: int8 block-quantized — {:.1}% of the fp32 bytes inter-node",
-                100.0 * s.outer_compress.bytes_per_param(s.outer_quant_block) / 4.0
+                "  outer wire: {} compressed — {:.1}% of the fp32 bytes inter-node",
+                s.outer_compress.name(),
+                100.0 * s.outer_compress.bytes_per_param() / 4.0
             );
+            if s.outer_broadcast_quant {
+                let bpp = OuterCompress::Int8 { block: s.outer_compress.block() }
+                    .bytes_per_param();
+                println!(
+                    "  restart bcast: block-int8 quantized — {:.1}% of the fp32 bytes \
+                     on the fan-out leg",
+                    100.0 * bpp / 4.0
+                );
+            }
         } else {
-            println!("  outer wire: int8 requested, but all replicas share one node — \
-                      no fabric hop, priced as fp32");
+            println!("  outer wire: {} requested, but all replicas share one node — \
+                      no fabric hop, priced as fp32", s.outer_compress.name());
         }
     }
     let jitter = args.f64_or("jitter", 0.0);
@@ -356,7 +377,9 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     if let Some(list) = args.get("compress") {
         axes.compress = list.split(',').filter(|s| !s.is_empty())
             .map(|s| OuterCompress::parse(s)
-                      .ok_or_else(|| anyhow!("--compress entries must be none|int8, got {s:?}")))
+                      .ok_or_else(|| {
+                          anyhow!("--compress entries must be none|int8|dct-topk, got {s:?}")
+                      }))
             .collect::<Result<Vec<_>>>()?;
     }
     axes.sync_interval = args.usize_or("interval", axes.sync_interval);
@@ -399,7 +422,12 @@ fn cmd_repro(args: &Args) -> Result<()> {
         }
         "fig8" => {
             figures::fig8().print();
-            figures::print_fig8_compressed(&figures::fig8_compressed());
+            let rows = figures::fig8_compressed();
+            figures::print_fig8_compressed(&rows);
+            // The ladder artifact CI uploads next to sweep_pareto.json.
+            let out = args.str_or("out", "fig8_ladder.json");
+            std::fs::write(&out, format!("{}\n", figures::fig8_compressed_json(&rows)))?;
+            println!("wrote {out}");
         }
         "calibration" => {
             println!("{:<44} {:>8} {:>8}", "anchor", "paper", "model");

@@ -619,7 +619,7 @@ mod tests {
         let flat = des_outer_sync(32, 4, v, &PERLMUTTER);
         assert_eq!(des_outer_sync_compressed(32, 4, v, 4.0, &PERLMUTTER), flat);
         // int8 wire: strictly below, and close to the ≈¼ wire volume
-        let bpp = crate::config::OuterCompress::Int8.bytes_per_param(4096);
+        let bpp = crate::config::OuterCompress::Int8 { block: 4096 }.bytes_per_param();
         let q = des_outer_sync_compressed(32, 4, v, bpp, &PERLMUTTER);
         assert!(q < flat, "{q} !< {flat}");
         assert!(q < 0.30 * flat + 2.0 * 31.0 * PERLMUTTER.inter.latency,
@@ -636,7 +636,7 @@ mod tests {
     #[test]
     fn compressed_streaming_conserves_and_composes() {
         let v = 6.2e9;
-        let bpp = crate::config::OuterCompress::Int8.bytes_per_param(4096);
+        let bpp = crate::config::OuterCompress::Int8 { block: 4096 }.bytes_per_param();
         let c = des_outer_sync_streaming_compressed(32, 4, v, bpp, 4, 1e9, &PERLMUTTER);
         assert!((c.exposed_secs + c.overlapped_secs - c.comm_secs).abs() < 1e-12);
         // multiplicative composition: the compressed gate is ≈ ¼ of the

@@ -1,6 +1,6 @@
 //! Per-iteration time models and full-run simulation.
 
-use crate::config::{outer_cliques, ModelConfig, OptMode, OuterCompress, DEFAULT_QUANT_BLOCK};
+use crate::config::{outer_cliques, ModelConfig, OptMode, OuterCompress};
 use crate::netsim::{hierarchical_allreduce, outer_schedule_over, outer_sync_time,
                     ring_allreduce, streaming_overlap_cost, CostModel, FabricShape, FailureSpec,
                     OuterSync, OuterWire, Topology};
@@ -59,17 +59,25 @@ pub struct SimSetup {
     /// fragment's all-reduce but the gating last one under the
     /// `sync_interval`-step compute window.
     pub stream_fragments: usize,
-    /// Wire compression of the outer sync's inter-node hop (DESIGN.md §9):
-    /// `int8` prices the two-level schedule — full-width fp32 clique
+    /// Wire compression of the outer sync's inter-node hop (DESIGN.md §9,
+    /// §14): `int8` prices the two-level schedule — full-width fp32 clique
     /// reduce intra-node, `bytes_per_param ≈ 1` quantized exchange between
     /// node leaders plus the quantize/dequantize sweeps — cutting the
-    /// fabric volume ≈ 4x. Composes multiplicatively with
-    /// `stream_fragments`.
+    /// fabric volume ≈ 4x. `dct-topk` swaps the leader exchange for the
+    /// sparse DCT/top-k wire (`bytes_per_param ≈ 0.4` at the defaults,
+    /// sub-1-bit-per-coefficient territory at small k) at the price of two
+    /// more transform sweeps. Both compose multiplicatively with
+    /// `stream_fragments`. Block/k ride inside the enum and must match the
+    /// trainer's `TrainConfig.outer_compress` for modeled and recorded
+    /// wire volumes to agree.
     pub outer_compress: OuterCompress,
-    /// Quantization block of the int8 compression — must match the
-    /// trainer's `TrainConfig.outer_quant_block` for modeled and recorded
-    /// wire volumes to agree ([`DEFAULT_QUANT_BLOCK`] unless overridden).
-    pub outer_quant_block: usize,
+    /// Quantize the §14 restart-broadcast leg: block-int8 over the
+    /// controller's restart delta (its own error-feedback residual),
+    /// shrinking the one-to-all fan-out the compressed schedule prices
+    /// after the leader exchange ≈ 4×. No effect without a fabric hop or
+    /// without an engaged compressed schedule — matching the executed
+    /// fallback ([`crate::coordinator::OuterController`]).
+    pub outer_broadcast_quant: bool,
     /// Local-communication groups (ignored for AdamW).
     pub groups: usize,
     pub global_batch: usize,
@@ -247,11 +255,18 @@ fn outer_event_parts(s: &SimSetup) -> (ClusterSpec, f64, f64, f64, f64) {
     let shard = s.model.n_params() as f64 * s.sync_fraction / (s.tp * s.pp) as f64;
     let mut update = 6.0 * 4.0 * shard / cluster.gpu.mem_bw;
     if compressed_topology(s, &cluster).is_some() {
-        // int8 quantize + dequantize: two extra memory-bound sweeps of the
-        // fp32 delta shard (the int8 payload read/write is ≈ ¼ of one more
-        // and is folded into the same factor). Stays exposed — it contends
-        // for the GPUs like the Nesterov sweep.
-        update += 2.0 * 4.0 * shard / cluster.gpu.mem_bw;
+        // Codec sweeps, memory-bound: int8 quantize + dequantize are two
+        // extra sweeps of the fp32 delta shard (the int8 payload
+        // read/write is ≈ ¼ of one more and is folded into the same
+        // factor). dct-topk adds the blockwise DCT-II forward + inverse —
+        // fast transforms, O(n log block) flops ≪ the HBM traffic, so two
+        // more memory-bound sweeps. Stays exposed — it contends for the
+        // GPUs like the Nesterov sweep.
+        let sweeps = match s.outer_compress {
+            OuterCompress::DctTopK { .. } => 4.0,
+            _ => 2.0,
+        };
+        update += sweeps * 4.0 * shard / cluster.gpu.mem_bw;
     }
     let offload = if s.cpu_offload {
         // reload anchor+momentum, store back: 4 transfers of 4·N/tp over PCIe
@@ -263,13 +278,13 @@ fn outer_event_parts(s: &SimSetup) -> (ClusterSpec, f64, f64, f64, f64) {
 }
 
 /// The compressed sync's topology on this cluster: `Some((clique,
-/// nodes))` when the int8 two-level schedule engages — more than one node
-/// leader faces the fabric — `None` when the run is uncompressed or has
-/// no fabric hop (single node ⇒ the executed path falls back to exact
-/// fp32, and so does the model). Single-sourced on
+/// nodes))` when the two-level schedule engages for either codec — more
+/// than one node leader faces the fabric — `None` when the run is
+/// uncompressed or has no fabric hop (single node ⇒ the executed path
+/// falls back to exact fp32, and so does the model). Single-sourced on
 /// `config::outer_cliques`, like the executed collective and the DES.
 fn compressed_topology(s: &SimSetup, cluster: &ClusterSpec) -> Option<(usize, usize)> {
-    if s.outer_compress != OuterCompress::Int8 {
+    if !s.outer_compress.is_compressing() {
         return None;
     }
     let (clique, nodes) = outer_cliques(s.dp(), s.tp * s.pp, cluster.gpus_per_node);
@@ -284,22 +299,36 @@ fn compressed_topology(s: &SimSetup, cluster: &ClusterSpec) -> Option<(usize, us
 /// burst-contended) cluster: NCCL-style global all-reduce of the fp32
 /// delta — hierarchical when the replicas are whole-node spans,
 /// per-TP/PP-shard concurrent rings under 2-D/3-D parallelism (§IV-C; PP
-/// streams the gather per stage). Under `outer_compress = int8`
-/// (DESIGN.md §9) the two-level schedule replaces it: a full-width fp32
-/// clique ring on intra-node links plus the `bytes_per_param`-scaled wire
-/// exchange between the node leaders.
+/// streams the gather per stage). Under `outer_compress = int8|dct-topk`
+/// (DESIGN.md §9, §14) the two-level schedule replaces it: a full-width
+/// fp32 clique ring on intra-node links, the `bytes_per_param`-scaled
+/// wire exchange between the node leaders, and the restart fan-out leg —
+/// the controller distributes the error-feedback-corrected restart point
+/// to the other `nodes − 1` leaders (chain-pipelined one-to-all; the
+/// executed trainer books exactly this leg into `broadcast_wire_bytes`),
+/// fp32-wide or block-int8-narrow under `outer_broadcast_quant`. The
+/// uncompressed flat all-reduce has no fan-out term: it leaves every
+/// replica holding the mean delta, and the deterministic Nesterov restart
+/// is re-derived locally.
 fn outer_comm_time(s: &SimSetup, bytes: f64, cluster: &ClusterSpec) -> f64 {
     let shards = s.tp * s.pp;
     if let Some((clique, nodes)) = compressed_topology(s, cluster) {
         let intra =
             if clique > 1 { ring_allreduce(clique, bytes, &cluster.intra) } else { 0.0 };
-        let wire = bytes * s.outer_compress.bytes_per_param(s.outer_quant_block) / 4.0;
+        let wire = bytes * s.outer_compress.bytes_per_param() / 4.0;
         let inter = if shards == 1 {
             ring_allreduce(nodes, wire, &cluster.inter)
         } else {
             outer_sync_time(nodes, shards, wire, cluster)
         };
-        return intra + inter;
+        let bpp_bcast = if s.outer_broadcast_quant {
+            OuterCompress::Int8 { block: s.outer_compress.block() }.bytes_per_param()
+        } else {
+            4.0
+        };
+        let fanout = bytes * bpp_bcast / 4.0 / cluster.inter.effective_bw()
+            + (nodes as f64 - 1.0) * cluster.inter.latency;
+        return intra + inter + fanout;
     }
     if shards == 1 {
         hierarchical_allreduce(s.world, bytes, cluster)
@@ -363,7 +392,7 @@ pub fn outer_event_wire_bytes(s: &SimSetup) -> f64 {
     }
     let delta = 4.0 * s.model.n_params() as f64 * s.sync_fraction.clamp(0.0, 1.0);
     match compressed_topology(s, &cluster) {
-        Some(_) => delta * s.outer_compress.bytes_per_param(s.outer_quant_block) / 4.0,
+        Some(_) => delta * s.outer_compress.bytes_per_param() / 4.0,
         None => delta,
     }
 }
@@ -516,8 +545,8 @@ pub fn speedup_at(s_pier: &SimSetup) -> (f64, f64, f64) {
 /// `spr = tp·pp` model-parallel shards, outer state present for
 /// Pier/DiLoCo, sharded across the outer clique's `k` node leaders when
 /// `outer_shard` is set (the same [`outer_cliques`] split the executed
-/// collective and the int8 schedule use), int8 residuals counted exactly
-/// when the compressed schedule engages, offload parking honored.
+/// collective and the compressed schedule use), error-feedback residuals
+/// counted exactly when a codec engages, offload parking honored.
 pub fn memory_ledger_for(s: &SimSetup) -> MemoryLedger {
     let has_outer = matches!(s.mode, OptMode::Pier | OptMode::DiLoCo);
     let k = if has_outer && s.outer_shard {
@@ -543,7 +572,7 @@ pub fn fits_memory(s: &SimSetup) -> bool {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::model;
+    use crate::config::{model, DEFAULT_QUANT_BLOCK, DEFAULT_TOPK};
     use crate::perfmodel::gpu::{PERLMUTTER, VISTA};
 
     fn setup(world: usize, mode: OptMode) -> SimSetup {
@@ -557,7 +586,7 @@ mod tests {
             sync_fraction: 1.0,
             stream_fragments: 0,
             outer_compress: OuterCompress::None,
-            outer_quant_block: DEFAULT_QUANT_BLOCK,
+            outer_broadcast_quant: false,
             groups: world, // one GPU per group (Fig 7 regime)
             global_batch: 512,
             sync_interval: 50,
@@ -725,7 +754,7 @@ mod tests {
         // — the multiplicative composition the tentpole promises.
         let blocking = setup(64, OptMode::Pier);
         let mut int8 = blocking.clone();
-        int8.outer_compress = OuterCompress::Int8;
+        int8.outer_compress = OuterCompress::Int8 { block: DEFAULT_QUANT_BLOCK };
         let eb = outer_event(&blocking);
         let eq = outer_event(&int8);
         assert!(eq < eb, "int8 must cut the blocking event: {eq} vs {eb}");
@@ -752,9 +781,69 @@ mod tests {
         s.tp = 4;
         s.groups = 1;
         let mut q = s.clone();
-        q.outer_compress = OuterCompress::Int8;
+        q.outer_compress = OuterCompress::Int8 { block: DEFAULT_QUANT_BLOCK };
         assert_eq!(outer_event(&s), outer_event(&q));
         assert_eq!(simulate_run(&s).total_secs, simulate_run(&q).total_secs);
+    }
+
+    #[test]
+    fn dct_topk_undercuts_int8_and_quant_bcast_undercuts_dct() {
+        // The §14 ladder at a fabric-hop scale: dct-topk's sparse wire
+        // (bpp ≈ 0.38 at the defaults vs int8's ≈ 1.0) buys more than its
+        // two extra transform sweeps cost, and quantizing the restart
+        // fan-out shrinks the remaining fp32 leg ≈ 4×.
+        let base = setup(64, OptMode::Pier);
+        let mut int8 = base.clone();
+        int8.outer_compress = OuterCompress::Int8 { block: DEFAULT_QUANT_BLOCK };
+        let mut dct = base.clone();
+        dct.outer_compress =
+            OuterCompress::DctTopK { block: DEFAULT_QUANT_BLOCK, k: DEFAULT_TOPK };
+        let mut bq = dct.clone();
+        bq.outer_broadcast_quant = true;
+        let ei = outer_event(&int8);
+        let ed = outer_event(&dct);
+        let eq = outer_event(&bq);
+        assert!(ed < ei, "dct-topk must undercut int8: {ed} vs {ei}");
+        assert!(eq < ed, "quantized bcast must undercut dct: {eq} vs {ed}");
+        // wire axis: the k ≤ block/8 default lands ≤ 0.15× the fp32 wire
+        let w_full = outer_event_wire_bytes(&base);
+        let w_dct = outer_event_wire_bytes(&dct);
+        assert!(w_dct < 0.15 * w_full, "dct wire {w_dct} vs fp32 {w_full}");
+        // streaming composition survives the new rungs
+        let mut both = bq.clone();
+        both.stream_fragments = 4;
+        let (es, os) = outer_event_streaming(&both);
+        assert!(es < eq, "streaming must still cut the exposed event");
+        assert!(os > 0.0);
+    }
+
+    #[test]
+    fn dct_and_broadcast_quant_without_a_fabric_hop_price_like_fp32() {
+        // dp = 1 (one TP=4 replica fills the node): the executed path
+        // falls back to exact fp32 for both codecs and skips the
+        // broadcast quantization; so must the model.
+        let mut s = setup(4, OptMode::Pier);
+        s.tp = 4;
+        s.groups = 1;
+        let mut q = s.clone();
+        q.outer_compress =
+            OuterCompress::DctTopK { block: DEFAULT_QUANT_BLOCK, k: DEFAULT_TOPK };
+        q.outer_broadcast_quant = true;
+        assert_eq!(outer_event(&s), outer_event(&q));
+        assert_eq!(simulate_run(&s).total_secs, simulate_run(&q).total_secs);
+        assert_eq!(outer_event_wire_bytes(&q), 0.0);
+    }
+
+    #[test]
+    fn broadcast_quant_alone_requires_an_engaged_codec() {
+        // outer_broadcast_quant only re-prices the fan-out leg the
+        // compressed schedule exposes; on an uncompressed run the model
+        // (like the flat all-reduce story it prices) has no separate
+        // fan-out to shrink.
+        let base = setup(64, OptMode::Pier);
+        let mut bq = base.clone();
+        bq.outer_broadcast_quant = true;
+        assert_eq!(outer_event(&base), outer_event(&bq));
     }
 
     #[test]
@@ -764,7 +853,7 @@ mod tests {
         let flat = cost_outer_schedule(32, 4, &volumes, &PERLMUTTER);
         let same = cost_outer_schedule_compressed(32, 4, &volumes, 4.0, &PERLMUTTER);
         assert!((flat - same).abs() < 1e-12);
-        let bpp = OuterCompress::Int8.bytes_per_param(DEFAULT_QUANT_BLOCK);
+        let bpp = OuterCompress::Int8 { block: DEFAULT_QUANT_BLOCK }.bytes_per_param();
         let q = cost_outer_schedule_compressed(32, 4, &volumes, bpp, &PERLMUTTER);
         assert!(q < flat);
         // tp=1: cliques of 4 pay intra fp32, leaders exchange narrow —
@@ -826,7 +915,7 @@ mod tests {
         half.sync_fraction = 0.5;
         assert_eq!(outer_event_wire_bytes(&half), 0.5 * w_full);
         let mut int8 = full.clone();
-        int8.outer_compress = OuterCompress::Int8;
+        int8.outer_compress = OuterCompress::Int8 { block: DEFAULT_QUANT_BLOCK };
         let w_q = outer_event_wire_bytes(&int8);
         assert!(w_q < 0.3 * w_full, "int8 wire {w_q} vs fp32 {w_full}");
         // no fabric hop → no wire (and int8 disengages, like the model)

@@ -35,11 +35,16 @@ use std::collections::BTreeMap;
 use crate::util::json::Json;
 
 /// Benchmark-name prefixes whose regressions fail the gate: the blocking
-/// in-place sync, the streaming fragment sync, and the int8 compressed
-/// sync (DESIGN.md §9 — covers `outer_sync_int8` and
-/// `outer_sync_int8_streaming4` alike).
-pub const GATED_PREFIXES: &[&str] =
-    &["outer_sync_in_place", "outer_sync_streaming", "outer_sync_int8"];
+/// in-place sync, the streaming fragment sync, the int8 compressed sync
+/// (DESIGN.md §9 — covers `outer_sync_int8` and `outer_sync_int8_streaming4`
+/// alike), and the DCT/top-k compressed sync (DESIGN.md §14 — covers
+/// `outer_sync_dct_topk` and `outer_sync_dct_topk_streaming4` alike).
+pub const GATED_PREFIXES: &[&str] = &[
+    "outer_sync_in_place",
+    "outer_sync_streaming",
+    "outer_sync_int8",
+    "outer_sync_dct_topk",
+];
 
 /// The same-run normalization anchor: the momentum-accumulate sweep over
 /// the GPT-2-small-sized vector — memory-bandwidth-bound like the gated
@@ -396,6 +401,20 @@ mod tests {
         let r = gate_snapshots(&base, &fresh, 0.15).unwrap();
         assert!(!r.passed());
         assert!(r.failures[0].contains("outer_sync_int8/"));
+        assert!(r.deltas.iter().all(|d| d.gated), "{:?}", r.deltas);
+    }
+
+    #[test]
+    fn dct_topk_family_is_gated() {
+        let base = snapshot(&[("outer_sync_dct_topk/micro-3.2M/4groups", 1.0),
+                              ("outer_sync_dct_topk_streaming4/micro-3.2M/4groups", 1.0),
+                              (REFERENCE_BENCH, 0.1)]);
+        let fresh = snapshot(&[("outer_sync_dct_topk/micro-3.2M/4groups", 1.3),
+                               ("outer_sync_dct_topk_streaming4/micro-3.2M/4groups", 1.0),
+                               (REFERENCE_BENCH, 0.1)]);
+        let r = gate_snapshots(&base, &fresh, 0.15).unwrap();
+        assert!(!r.passed());
+        assert!(r.failures[0].contains("outer_sync_dct_topk/"));
         assert!(r.deltas.iter().all(|d| d.gated), "{:?}", r.deltas);
     }
 

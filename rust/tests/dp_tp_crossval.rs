@@ -21,7 +21,7 @@
 // the deprecation is the API's, not the suite's.
 #![allow(deprecated)]
 
-use pier::config::{outer_cliques, OptMode, OuterCompress, DEFAULT_QUANT_BLOCK};
+use pier::config::{outer_cliques, OptMode, OuterCompress, DEFAULT_QUANT_BLOCK, DEFAULT_TOPK};
 use pier::coordinator::collective::{outer_all_reduce_into, shard_span, CommStats};
 use pier::coordinator::OuterController;
 use pier::netsim::{des_outer_schedule, des_outer_schedule_compressed,
@@ -154,7 +154,7 @@ fn fig8_configs_streaming_makespan_strictly_below_blocking() {
             sync_fraction: 1.0,
             stream_fragments: 0,
             outer_compress: OuterCompress::None,
-            outer_quant_block: DEFAULT_QUANT_BLOCK,
+            outer_broadcast_quant: false,
             groups: world / 4,
             global_batch: 512,
             sync_interval: 50,
@@ -188,15 +188,15 @@ fn fig8_configs_streaming_makespan_strictly_below_blocking() {
 }
 
 /// Executed compressed schedule in the trainer's Phase-B shape: a toy run
-/// through the real `OuterController` with `outer_compress = int8`
+/// through the real `OuterController` with the given engaged codec
 /// (gpus_per_node = 1 → every group a node leader), recording per-event
 /// (logical, wire) volumes the way the trainer fills `OuterEvent`.
-fn recorded_compressed_schedule(k: usize, seed: u64) -> Vec<(f64, f64)> {
+fn recorded_codec_schedule(codec: OuterCompress, k: usize, seed: u64) -> Vec<(f64, f64)> {
     let tgt = target(N);
     let mut cfg = pier::config::TrainConfig::default_for(1000);
     cfg.mode = OptMode::DiLoCo;
     cfg.sync_interval = H;
-    cfg.outer_compress = OuterCompress::Int8;
+    cfg.outer_compress = codec;
     cfg.gpus_per_node = 1;
     let mut groups = make_groups(N, k, seed);
     let mut ctl = OuterController::new(&cfg, &groups[0].params);
@@ -229,7 +229,7 @@ fn compressed_executed_wire_is_below_30_pct_of_fp32() {
     // recorded inter-node wire bytes per event are ≤ 0.30× the logical
     // fp32 volume — the same ratio the fig8-size wire formula gives
     // (block 4096 over 1.75B params: ≈ 0.2502).
-    let events = recorded_compressed_schedule(4, 7);
+    let events = recorded_codec_schedule(OuterCompress::Int8 { block: DEFAULT_QUANT_BLOCK }, 4, 7);
     assert_eq!(events.len(), ITERS / H);
     for (i, &(logical, wire)) in events.iter().enumerate() {
         assert_eq!(logical, (4 * N) as f64, "event {i}: logical volume is the fp32 model");
@@ -246,14 +246,100 @@ fn compressed_executed_wire_is_below_30_pct_of_fp32() {
 }
 
 #[test]
+fn dct_topk_executed_wire_is_below_15_pct_of_fp32() {
+    // Acceptance pin (executed layer): with outer_compress = dct-topk at
+    // k = block/8 the recorded leader-exchange wire bytes per event are
+    // ≤ 0.15× the logical fp32 volume — sub-1-bit-per-parameter plus the
+    // amortized per-block scale. Block 64 makes the toy span exactly one
+    // full block, so the formula is exercised without a ragged tail.
+    let codec = OuterCompress::DctTopK { block: 64, k: 8 };
+    let events = recorded_codec_schedule(codec, 4, 7);
+    assert_eq!(events.len(), ITERS / H);
+    let expect = pier::coordinator::compress::wire_bytes_topk(N, 64, 8) as f64;
+    for (i, &(logical, wire)) in events.iter().enumerate() {
+        assert_eq!(logical, (4 * N) as f64, "event {i}: logical volume is the fp32 model");
+        assert_eq!(wire, expect, "event {i}");
+        assert!(wire <= 0.15 * logical,
+                "event {i}: dct-topk wire {wire} vs logical {logical}");
+    }
+    // fig8 model size: the formula the simulator table reports, at the
+    // default block 4096 / k 512 sweep point.
+    let n7b = pier::config::model_or_die("gpt2-7b").n_params();
+    let ratio = pier::coordinator::compress::wire_bytes_topk(
+        n7b, DEFAULT_QUANT_BLOCK, DEFAULT_TOPK) as f64
+        / (4 * n7b) as f64;
+    assert!(ratio <= 0.15, "7B dct-topk wire ratio {ratio}");
+    assert!(ratio >= 0.09, "indices + payload floor (3 bytes per kept coefficient)");
+}
+
+#[test]
+fn quantized_restart_broadcast_wire_is_below_30_pct_of_fp32() {
+    // Acceptance pin (executed layer): with outer_broadcast_quant the
+    // restart fan-out leg's recorded wire bytes are ≤ 0.30× its fp32
+    // logical volume. The toy harness books the broadcast scope exactly
+    // the way the trainer does after each sync — ka − 1 receivers (the
+    // leader-co-located replica installs its local copy for free) at
+    // `restart_wire_bytes` width — and the narrow width itself comes from
+    // the controller that quantized the restart in place.
+    let tgt = target(N);
+    let k = 4usize;
+    let mut cfg = pier::config::TrainConfig::default_for(1000);
+    cfg.mode = OptMode::DiLoCo;
+    cfg.sync_interval = H;
+    cfg.outer_compress = OuterCompress::DctTopK { block: 64, k: 8 };
+    cfg.outer_broadcast_quant = true;
+    cfg.gpus_per_node = 1; // every group leads its own node: fan-out crosses the fabric
+    let mut groups = make_groups(N, k, 7);
+    let mut ctl = OuterController::new(&cfg, &groups[0].params);
+    let mut stats = CommStats::default();
+    assert!(ctl.broadcast_quant_active(k), "knob + multi-node leaders must engage");
+    for t in 0..ITERS {
+        for g in groups.iter_mut() {
+            inner_step(g, &tgt, 1);
+        }
+        if (t + 1) % H == 0 {
+            let refs: Vec<&[f32]> = groups.iter().map(|g| g.params.as_slice()).collect();
+            let next: Vec<f32> = ctl.sync_in_place(t + 1, &refs, &mut stats).to_vec();
+            let wire = ctl.restart_wire_bytes(N, k);
+            stats.note_broadcast_wire(
+                4.0 * N as f64 * (k - 1) as f64,
+                wire * (k - 1) as f64,
+            );
+            for g in groups.iter_mut() {
+                g.params.copy_from_slice(&next);
+            }
+        }
+    }
+    assert!(stats.broadcast_bytes > 0.0);
+    assert!(
+        stats.broadcast_wire_bytes <= 0.30 * stats.broadcast_bytes,
+        "restart broadcast wire {} vs logical {}",
+        stats.broadcast_wire_bytes,
+        stats.broadcast_bytes
+    );
+    assert!(stats.broadcast_wire_bytes > 0.0);
+    // the per-receiver width is the §14 block-int8 payload of the span
+    assert_eq!(ctl.restart_wire_bytes(N, k),
+               pier::coordinator::compress::wire_bytes(N, 64) as f64);
+    assert!(ctl.broadcast_residual_norm() > 0.0, "broadcast EF residual must engage");
+    // with the knob off (or one node) the width is the fp32 span
+    let mut cfg_off = cfg.clone();
+    cfg_off.outer_broadcast_quant = false;
+    let ctl_off = OuterController::new(&cfg_off, &groups[0].params);
+    assert_eq!(ctl_off.restart_wire_bytes(N, k), 4.0 * N as f64);
+}
+
+#[test]
 fn compressed_schedule_costing_agrees_with_des() {
     // DESIGN.md §9 cross-validation: the executed compressed schedule's
     // wire volumes, costed by the closed-form compressed model and the
     // compressed DES, must agree for every tp — and sit strictly below
     // the fp32 costing of the same logical schedule.
-    let events = recorded_compressed_schedule(4, 7);
+    let events = recorded_codec_schedule(OuterCompress::Int8 { block: DEFAULT_QUANT_BLOCK }, 4, 7);
     let logical: Vec<f64> = events.iter().map(|&(l, _)| l * 1e8).collect();
-    let bpp = OuterCompress::Int8.bytes_per_param(DEFAULT_QUANT_BLOCK);
+    let bpp = OuterCompress::Int8 { block: DEFAULT_QUANT_BLOCK }.bytes_per_param();
+    let bpp_dct =
+        OuterCompress::DctTopK { block: DEFAULT_QUANT_BLOCK, k: DEFAULT_TOPK }.bytes_per_param();
     for tp in [1usize, 2, 4] {
         let cf = cost_outer_schedule_compressed(4, tp, &logical, bpp, &PERLMUTTER);
         let des = des_outer_schedule_compressed(4, tp, &logical, bpp, &PERLMUTTER);
@@ -261,6 +347,13 @@ fn compressed_schedule_costing_agrees_with_des() {
         assert!((des - cf).abs() / cf < 0.02, "tp={tp}: des {des} vs closed form {cf}");
         let flat = cost_outer_schedule(4, tp, &logical, &PERLMUTTER);
         assert!(cf < flat, "tp={tp}: compressed {cf} !< fp32 {flat}");
+        // The same cross-validation holds at the dct-topk wire width, and
+        // the narrower payload prices strictly below the int8 one.
+        let cf_d = cost_outer_schedule_compressed(4, tp, &logical, bpp_dct, &PERLMUTTER);
+        let des_d = des_outer_schedule_compressed(4, tp, &logical, bpp_dct, &PERLMUTTER);
+        assert!(cf_d > 0.0);
+        assert!((des_d - cf_d).abs() / cf_d < 0.02, "tp={tp}: des {des_d} vs closed form {cf_d}");
+        assert!(cf_d < cf, "tp={tp}: dct-topk {cf_d} !< int8 {cf}");
     }
 }
 
@@ -275,7 +368,7 @@ fn fig8_configs_compressed_streaming_strictly_below_streaming_only() {
     use pier::config::model_or_die;
     let model = model_or_die("gpt2-7b");
     let v_total = 4.0 * model.n_params() as f64;
-    let bpp = OuterCompress::Int8.bytes_per_param(DEFAULT_QUANT_BLOCK);
+    let bpp = OuterCompress::Int8 { block: DEFAULT_QUANT_BLOCK }.bytes_per_param();
     for world in [8usize, 16, 32, 64, 128, 256] {
         let dp = world / 4;
         let window = 1e3; // ample: only the gating fragment stays exposed
@@ -297,12 +390,20 @@ fn fig8_configs_compressed_streaming_strictly_below_streaming_only() {
     for r in pier::figures::fig8_compressed() {
         if r.world <= 4 {
             assert_eq!(r.t_int8, r.t_streaming, "no fabric hop at one node");
+            assert_eq!(r.t_dct, r.t_int8, "no fabric hop: dct rung is flat");
+            assert_eq!(r.t_bcast, r.t_dct, "no fabric hop: quant-bcast rung is flat");
             assert_eq!(r.wire_ratio, 1.0, "no wire cut without a fabric hop");
+            assert_eq!(r.dct_wire_ratio, 1.0);
         } else {
             assert!(r.t_int8 < r.t_streaming,
                     "world={}: int8 {} !< streaming {}", r.world, r.t_int8, r.t_streaming);
+            assert!(r.t_dct < r.t_int8,
+                    "world={}: +dct-topk {} !< int8 {}", r.world, r.t_dct, r.t_int8);
+            assert!(r.t_bcast < r.t_dct,
+                    "world={}: +quant-bcast {} !< dct {}", r.world, r.t_bcast, r.t_dct);
             assert!(r.t_streaming < r.t_blocking, "world={}", r.world);
             assert!(r.wire_ratio <= 0.30);
+            assert!(r.dct_wire_ratio <= 0.15, "world={}: {}", r.world, r.dct_wire_ratio);
         }
     }
 }
@@ -344,13 +445,21 @@ fn compressed_toy_run_still_converges() {
         (first, last)
     };
     let (f0, fp32) = run(OuterCompress::None);
-    let (_, int8) = run(OuterCompress::Int8);
+    let (_, int8) = run(OuterCompress::Int8 { block: DEFAULT_QUANT_BLOCK });
     assert!(fp32.is_finite() && int8.is_finite());
     assert!(int8 < 0.5 * f0, "int8 run must descend: {int8} vs initial {f0}");
     // negligible-degradation contract: within 1.5× of the fp32 floor
     // (quantization steps are ~1e-3 against a gradient-noise floor).
     assert!(int8 <= fp32 * 1.5 + 1e-6,
             "int8 run must converge comparably: {int8} vs {fp32}");
+    // dct-topk arm: k = block/4 over the toy span. Top-k truncation with
+    // only ITERS/H error-feedback rounds is lossier than pure rounding,
+    // so the pin is descent plus a looser multiple of the fp32 floor.
+    let (_, dct) = run(OuterCompress::DctTopK { block: 64, k: 16 });
+    assert!(dct.is_finite());
+    assert!(dct < 0.5 * f0, "dct-topk run must descend: {dct} vs initial {f0}");
+    assert!(dct <= fp32 * 3.0 + 1e-6,
+            "dct-topk run must converge comparably: {dct} vs {fp32}");
 }
 
 #[test]
@@ -425,7 +534,7 @@ fn fig8_configs_pp_never_beats_the_bubble_bound() {
         sync_fraction: 1.0,
         stream_fragments: 0,
         outer_compress: OuterCompress::None,
-        outer_quant_block: DEFAULT_QUANT_BLOCK,
+        outer_broadcast_quant: false,
         groups: dp,
         global_batch: 512,
         sync_interval: 50,
@@ -554,7 +663,7 @@ fn compressed_wrapper_reproduces_the_pre_refactor_two_level_cost() {
     // the narrow bytes over the fabric — both clusters, both tp regimes
     // (Perlmutter tp=1 forms 4-GPU cliques; Vista is one GPU per node).
     let v = 6.2e9;
-    let bpp = OuterCompress::Int8.bytes_per_param(DEFAULT_QUANT_BLOCK);
+    let bpp = OuterCompress::Int8 { block: DEFAULT_QUANT_BLOCK }.bytes_per_param();
     for cluster in [&PERLMUTTER, &VISTA] {
         for dp in [4usize, 8, 32] {
             for tp in [1usize, 4] {
@@ -718,7 +827,7 @@ fn trainer_int8_records_narrow_wire_events() {
     let mut cfg = figure_cfg(OptMode::Pier, 30, 2);
     cfg.global_batch = 16;
     cfg.eval_interval = 0;
-    cfg.outer_compress = OuterCompress::Int8;
+    cfg.outer_compress = OuterCompress::Int8 { block: DEFAULT_QUANT_BLOCK };
     cfg.gpus_per_node = 1; // both groups lead their own node: fabric hop exists
     let mut t = Trainer::new(&rt, man.clone(), cfg, &pipe).unwrap();
     t.run().unwrap();

@@ -27,7 +27,7 @@
 // the deprecation is the API's, not the suite's.
 #![allow(deprecated)]
 
-use pier::config::{OptMode, OuterCompress, TrainConfig};
+use pier::config::{OptMode, OuterCompress, TrainConfig, DEFAULT_QUANT_BLOCK};
 use pier::coordinator::collective::{fragment_span, note_inner_allreduce, note_pp_step,
                                     note_tp_step, pp_send_recv_into, CommStats};
 use pier::coordinator::OuterController;
@@ -64,11 +64,11 @@ fn config(tp: usize, pp: usize, mode: Mode) -> TrainConfig {
         Mode::Blocking => {}
         Mode::Streaming => cfg.stream_fragments = 4,
         Mode::Int8 => {
-            cfg.outer_compress = OuterCompress::Int8;
+            cfg.outer_compress = OuterCompress::Int8 { block: DEFAULT_QUANT_BLOCK };
             cfg.gpus_per_node = 1; // every group leads its node: fabric hop exists
         }
         Mode::Int8Streaming => {
-            cfg.outer_compress = OuterCompress::Int8;
+            cfg.outer_compress = OuterCompress::Int8 { block: DEFAULT_QUANT_BLOCK };
             cfg.gpus_per_node = 1;
             cfg.stream_fragments = 4;
         }

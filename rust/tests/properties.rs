@@ -9,8 +9,10 @@
 
 use pier::config::{NesterovKind, OptMode, OuterCompress, TrainConfig};
 use pier::coordinator::collective::{all_reduce_mean, fragment_span, shard_span};
-use pier::coordinator::compress::{dequantize_into, dequantize_with_residual_into,
-                                  quantize_into, wire_bytes, QuantBuf};
+use pier::coordinator::compress::{dct_topk_decode_into, dct_topk_decode_with_residual_into,
+                                  dct_topk_forward_into, dequantize_into,
+                                  dequantize_with_residual_into, quantize_into, wire_bytes,
+                                  wire_bytes_topk, DctTopKBuf, QuantBuf};
 use pier::coordinator::{stage_layer_span, OneFOneB, OuterController, PipelineAction};
 use pier::data::{CorpusGen, CorpusSpec, Sampler, TokenDataset, Tokenizer};
 use pier::netsim::{des_outer_sync, des_outer_sync_streaming, outer_sync_time, ring_allreduce,
@@ -254,7 +256,7 @@ fn prop_error_feedback_keeps_long_run_mean_delta_unbiased() {
         // round's transmitted magnitude (bounded: |e| ≤ amp + step ⇒
         // step ≤ (amp + step)/127 ⇒ step ≤ amp/126) — plus f64/f32
         // accumulation slop over the rounds.
-        let step_bound = amp / 126.0 + 1e-4 * rounds as f64;
+        let step_bound = amp as f64 / 126.0 + 1e-4 * rounds as f64;
         for i in 0..n {
             let drift = (sum_sent[i] - sum_true[i]).abs();
             let resid = residual[i].abs() as f64;
@@ -265,6 +267,198 @@ fn prop_error_feedback_keeps_long_run_mean_delta_unbiased() {
             ensure(
                 drift <= step_bound,
                 format!("elem {i}: residual drift {drift} exceeds one step {step_bound}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dct_topk_dense_roundtrip_error_within_one_quant_step() {
+    // With k ≥ block nothing is dropped, so the only loss is the int8
+    // rounding of the DCT coefficients: per coefficient ≤ half a scale
+    // step, and the inverse transform is orthonormal, so the per-block
+    // L2 error is ≤ 0.5·scale·√s_b (plus f32 transform slop).
+    check("dct-dense-roundtrip", |g: &mut Gen| {
+        let n = g.usize(1, 2000);
+        let block = g.usize(2, 128);
+        let amp = g.f32(1e-3, 10.0);
+        let src = g.vec_signed(n, amp);
+        let mut buf = DctTopKBuf::default();
+        dct_topk_forward_into(&src, block, block, &mut buf);
+        let mut out = vec![0.0f32; n];
+        dct_topk_decode_into(&buf, &mut out);
+        for (b, chunk) in src.chunks(block).enumerate() {
+            let lo = b * block;
+            let s_b = chunk.len();
+            let scale = buf.scales[b] as f64;
+            let l2: f64 = chunk
+                .iter()
+                .zip(&out[lo..lo + s_b])
+                .map(|(x, d)| ((*x - *d) as f64).powi(2))
+                .sum::<f64>()
+                .sqrt();
+            let bound = 0.51 * scale * (s_b as f64).sqrt()
+                + 1e-5 * amp as f64 * (s_b as f64).sqrt()
+                + 1e-9;
+            ensure(
+                l2 <= bound,
+                format!("block {b}: roundtrip L2 {l2} above quant-step bound {bound}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dct_topk_selection_is_chunking_and_thread_invariant() {
+    // Each block's DCT + top-k selection depends only on that block's
+    // inputs, and ties in |coefficient| break by ascending index via
+    // total_cmp — so the span-parallel forward must match a per-block
+    // serial reference bit for bit under any PIER_THREADS chunking, and
+    // a fresh OS thread must reproduce it exactly.
+    check("dct-topk-deterministic", |g: &mut Gen| {
+        let n = g.usize(1, 3000);
+        let block = g.usize(2, 256);
+        let k = g.usize(1, block);
+        let src = g.vec_signed(n, 2.0);
+        let mut whole = DctTopKBuf::default();
+        dct_topk_forward_into(&src, block, k, &mut whole);
+        let kmin = k.min(block);
+        let mut one = DctTopKBuf::default();
+        for (b, chunk) in src.chunks(block).enumerate() {
+            dct_topk_forward_into(chunk, block, k, &mut one);
+            let kept = kmin.min(chunk.len());
+            let off = b * kmin;
+            ensure(
+                whole.idx[off..off + kept] == one.idx[..kept],
+                format!("block {b}: indices differ from serial reference"),
+            )?;
+            ensure(
+                whole.q[off..off + kept] == one.q[..kept],
+                format!("block {b}: int8 payload differs from serial reference"),
+            )?;
+            ensure(
+                whole.scales[b].to_bits() == one.scales[0].to_bits(),
+                format!("block {b}: scale differs from serial reference"),
+            )?;
+        }
+        let src2 = src.clone();
+        let theirs = std::thread::spawn(move || {
+            let mut b = DctTopKBuf::default();
+            dct_topk_forward_into(&src2, block, k, &mut b);
+            (b.idx, b.q, b.scales)
+        })
+        .join()
+        .map_err(|_| "dct forward thread panicked".to_string())?;
+        ensure(whole.idx == theirs.0, "indices differ across threads")?;
+        ensure(whole.q == theirs.1, "payload differs across threads")?;
+        ensure(
+            whole
+                .scales
+                .iter()
+                .zip(&theirs.2)
+                .all(|(a, b)| a.to_bits() == b.to_bits()),
+            "scales differ bitwise across threads",
+        )?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dct_topk_wire_formula_matches_serialized_size() {
+    check("dct-topk-wire", |g: &mut Gen| {
+        let n = g.usize(0, 6000);
+        let block = g.usize(1, 300);
+        let k = g.usize(1, 2 * block);
+        let src = g.vec_signed(n, 1.0);
+        let mut buf = DctTopKBuf::default();
+        dct_topk_forward_into(&src, block, k, &mut buf);
+        let wire = buf.to_wire();
+        ensure(
+            wire.len() == buf.wire_len(),
+            format!("serialized {} != wire_len {}", wire.len(), buf.wire_len()),
+        )?;
+        if n == 0 {
+            ensure(wire.is_empty(), "empty span must serialize to zero bytes")?;
+            return Ok(());
+        }
+        ensure(
+            buf.wire_len() == wire_bytes_topk(n, block, k),
+            format!(
+                "wire_len {} != wire_bytes_topk {}",
+                buf.wire_len(),
+                wire_bytes_topk(n, block, k)
+            ),
+        )?;
+        // the sub-1-bit-per-coefficient regime of the acceptance bar:
+        // k ≤ block/8 on amortizing spans keeps the wire ≤ 0.15× fp32
+        if block >= 64 && n >= 4 * block && k <= block / 8 {
+            let w = wire_bytes_topk(n, block, k) as f64;
+            ensure(
+                w <= 0.15 * (4 * n) as f64,
+                format!("top-k wire ratio {} above 0.15", w / (4 * n) as f64),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dct_topk_k_at_block_degenerates_to_dense_int8_wire() {
+    check("dct-topk-dense-wire", |g: &mut Gen| {
+        let n = g.usize(1, 6000);
+        let block = g.usize(1, 300);
+        let k = g.usize(block, 4 * block);
+        ensure(
+            wire_bytes_topk(n, block, k) == wire_bytes(n, block),
+            format!(
+                "k={k} ≥ block={block}: topk wire {} != dense int8 wire {}",
+                wire_bytes_topk(n, block, k),
+                wire_bytes(n, block)
+            ),
+        )?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dct_error_feedback_drift_equals_final_residual() {
+    // Same EF identity as the int8 path, but the residual now also
+    // absorbs whole dropped DCT coefficients, so the residual itself is
+    // large — the identity Σ sent − Σ true = −final residual still holds
+    // exactly modulo per-round f32 rounding.
+    check("dct-ef-unbiased", |g: &mut Gen| {
+        let n = g.usize(1, 300);
+        let block = g.usize(4, 64);
+        let k = g.usize(1, block);
+        let rounds = g.usize(3, 20);
+        let amp = 0.5;
+        let mut residual = vec![0.0f32; n];
+        let mut sum_true = vec![0.0f64; n];
+        let mut sum_sent = vec![0.0f64; n];
+        let mut buf = DctTopKBuf::default();
+        let mut e = vec![0.0f32; n];
+        for _ in 0..rounds {
+            let delta = g.vec_signed(n, amp);
+            for i in 0..n {
+                sum_true[i] += delta[i] as f64;
+                e[i] = delta[i] + residual[i];
+            }
+            dct_topk_forward_into(&e, block, k, &mut buf);
+            dct_topk_decode_with_residual_into(&buf, &mut e, &mut residual);
+            for i in 0..n {
+                sum_sent[i] += e[i] as f64;
+            }
+        }
+        for i in 0..n {
+            let drift = (sum_sent[i] - sum_true[i]).abs();
+            let resid = residual[i].abs() as f64;
+            ensure(
+                (drift - resid).abs() <= 1e-3 * (1.0 + resid),
+                format!(
+                    "elem {i}: cumulative drift {drift} must equal the final residual {resid}"
+                ),
             )?;
         }
         Ok(())
@@ -610,8 +804,12 @@ fn prop_simulator_total_monotone_in_iterations_and_interval() {
             pp: 1,
             sync_fraction: 1.0,
             stream_fragments: *g.choose(&[0usize, 2, 4]),
-            outer_compress: *g.choose(&[OuterCompress::None, OuterCompress::Int8]),
-            outer_quant_block: 4096,
+            outer_compress: *g.choose(&[
+                OuterCompress::None,
+                OuterCompress::Int8 { block: 4096 },
+                OuterCompress::DctTopK { block: 4096, k: 512 },
+            ]),
+            outer_broadcast_quant: g.bool(),
             groups: world,
             global_batch: 512,
             sync_interval: g.usize(10, 400),
@@ -650,7 +848,7 @@ fn prop_pier_never_slower_than_adamw_beyond_a_node_at_h500() {
             sync_fraction: 1.0,
             stream_fragments: 0,
             outer_compress: OuterCompress::None,
-            outer_quant_block: 4096,
+            outer_broadcast_quant: false,
             groups: world,
             global_batch: 512,
             sync_interval: 500,

@@ -5,7 +5,8 @@
 //! constructed state continues **bit-identically** to the uninterrupted
 //! run — losses, parameters, and the `CommStats` counters — across
 //! every relaxation axis (blocking, streaming, rotating partial sync,
-//! int8 compression) and `(groups, tp) ∈ {1, 2, 4} × {1, 2}`.
+//! int8 compression, dct-topk compression, and the quantized restart
+//! broadcast) and `(groups, tp) ∈ {1, 2, 4} × {1, 2}`.
 //!
 //! The loop re-drives the trainer's Phase-B shape with the shared
 //! `pier::testing::oracle` substrate (as the other parity suites do),
@@ -49,9 +50,12 @@ enum Relax {
     Streaming,
     Partial,
     Int8,
+    DctTopK,
+    BcastQuant,
 }
 
-const AXES: [Relax; 4] = [Relax::Blocking, Relax::Streaming, Relax::Partial, Relax::Int8];
+const AXES: [Relax; 6] = [Relax::Blocking, Relax::Streaming, Relax::Partial, Relax::Int8,
+                          Relax::DctTopK, Relax::BcastQuant];
 
 fn cfg_for(r: Relax, k: usize, tp: usize, seed: u64) -> TrainConfig {
     let mut cfg = TrainConfig::default_for(1000);
@@ -59,15 +63,21 @@ fn cfg_for(r: Relax, k: usize, tp: usize, seed: u64) -> TrainConfig {
     cfg.sync_interval = H;
     cfg.groups = k;
     cfg.tp = tp;
-    cfg.gpus_per_node = 1; // one replica per node: int8 gets an inter-node hop at k > 1
+    cfg.gpus_per_node = 1; // one replica per node: compression gets an inter-node hop at k > 1
     cfg.seed = seed;
     match r {
         Relax::Blocking => {}
         Relax::Streaming => cfg.stream_fragments = 2,
         Relax::Partial => cfg.sync_fraction = 0.5,
-        Relax::Int8 => {
-            cfg.outer_compress = OuterCompress::Int8;
-            cfg.outer_quant_block = 16;
+        Relax::Int8 => cfg.outer_compress = OuterCompress::Int8 { block: 16 },
+        // dct-topk keeps cross-round error-feedback residuals absorbing
+        // dropped coefficients *and* rounding; the quantized restart
+        // broadcast adds its own residual store on top — both must
+        // round-trip through the v2 format for the resume to replay.
+        Relax::DctTopK => cfg.outer_compress = OuterCompress::DctTopK { block: 16, k: 4 },
+        Relax::BcastQuant => {
+            cfg.outer_compress = OuterCompress::DctTopK { block: 16, k: 4 };
+            cfg.outer_broadcast_quant = true;
         }
     }
     cfg
@@ -235,11 +245,13 @@ fn resume_is_bit_identical_across_relaxation_and_layout_grid() {
 
 #[test]
 fn resume_is_exact_at_sync_boundaries_and_mid_round() {
-    // The partial axis keeps cross-round state in the fragment cursor and
-    // the int8 axis in the error-feedback residuals — cut right on a sync
-    // boundary (8, 16), mid-round (13), and one step before the end (39).
+    // The partial axis keeps cross-round state in the fragment cursor,
+    // the compressing axes in the error-feedback residuals (dct-topk's
+    // also absorb dropped coefficients; the quantized broadcast keeps a
+    // second residual store) — cut right on a sync boundary (8, 16),
+    // mid-round (13), and one step before the end (39).
     let dir = tmp("cuts");
-    for r in [Relax::Partial, Relax::Int8] {
+    for r in [Relax::Partial, Relax::Int8, Relax::DctTopK, Relax::BcastQuant] {
         let cfg = cfg_for(r, 4, 1, 77);
         let mut full = fresh(&cfg);
         let mut full_losses = Vec::new();

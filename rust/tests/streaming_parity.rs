@@ -165,25 +165,25 @@ fn zero_sharded_outer_matches_replicated_bitwise_across_owner_counts() {
     // collective — the sharded outer step executes the same element-wise
     // math over a refined partition, so toggling `outer_shard` must be
     // bit-identical at every owner count, composed with the blocking,
-    // streaming, and int8 schedules. 4 single-GPU groups on nodes of
-    // {4, 2, 1} GPUs give k ∈ {1, 2, 4} owners; N = 53 is prime, so every
-    // owner partition is unbalanced.
+    // streaming, int8, and dct-topk schedules (the compressing codecs
+    // quantize per *fragment* span, never per owner sub-span — §14's
+    // interaction matrix). 4 single-GPU groups on nodes of {4, 2, 1}
+    // GPUs give k ∈ {1, 2, 4} owners; N = 53 is prime, so every owner
+    // partition is unbalanced.
     for gpn in [4usize, 2, 1] {
         for frags in [0usize, 2] {
-            for int8 in [false, true] {
+            for codec in [OuterCompress::None, OuterCompress::Int8 { block: 8 },
+                          OuterCompress::DctTopK { block: 8, k: 2 }] {
                 let arm = |shard: bool| {
                     run_with(ParallelExecutor::new(0), 4, 1234, |c| {
                         c.stream_fragments = frags;
                         c.gpus_per_node = gpn;
                         c.outer_shard = shard;
-                        if int8 {
-                            c.outer_compress = OuterCompress::Int8;
-                            c.outer_quant_block = 8;
-                        }
+                        c.outer_compress = codec;
                     })
                 };
                 let (rep, sh) = (arm(false), arm(true));
-                let tag = format!("gpn={gpn} frags={frags} int8={int8}");
+                let tag = format!("gpn={gpn} frags={frags} codec={}", codec.name());
                 assert_eq!(rep.losses, sh.losses, "{tag}: loss trajectories diverged");
                 assert_eq!(rep.final_params, sh.final_params, "{tag}: final params diverged");
                 // The delta reduction moves the same logical fp32 volume;
@@ -271,4 +271,13 @@ fn trainer_streaming_matches_blocking_end_to_end() {
         blocking.stats.outer_allreduce_bytes
     );
     assert_eq!(blocking.stats.outer_overlapped_bytes, 0.0);
+    // Broadcast scope (ka − 1 restart receivers per sync; the leader's
+    // own replica installs locally for free): the streaming schedule
+    // re-times but never re-sizes the fan-out, and an uncompressed run
+    // moves exactly its logical bytes on the wire.
+    assert!(blocking.stats.broadcast_bytes > 0.0, "restart fan-out must be booked");
+    assert_eq!(streaming.stats.broadcast_bytes, blocking.stats.broadcast_bytes);
+    assert_eq!(blocking.stats.broadcast_wire_bytes, blocking.stats.broadcast_bytes,
+               "fp32 run: broadcast wire == logical");
+    assert_eq!(streaming.stats.broadcast_wire_bytes, streaming.stats.broadcast_bytes);
 }
